@@ -1,0 +1,17 @@
+//! Scaling study (Fig. 10/12-style): sweep GPU counts for Allreduce
+//! and Scatter across all variants, on the full 646 MB dataset.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study [max_gpus]
+//! ```
+
+use gzccl::experiments::{fig10_scale, fig12_scatter_scale};
+
+fn main() -> gzccl::Result<()> {
+    println!("Sweeping GPU counts on the 646 MB dataset (virtual payloads,");
+    println!("compression sizes from a profile measured on real RTM-like data).\n");
+    fig10_scale()?.print();
+    println!();
+    fig12_scatter_scale()?.print();
+    Ok(())
+}

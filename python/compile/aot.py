@@ -1,0 +1,109 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts``). Python never runs on the request path: the Rust
+binary is self-contained once these files exist.
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+#: name → (fn, example-arg specs). Every entry becomes
+#: ``artifacts/<name>.hlo.txt``.
+ARTIFACTS = {
+    "reduce_pair": (model.reduce_pair, (f32(model.IMG_ELEMS), f32(model.IMG_ELEMS))),
+    "stack_update": (model.stack_update, (f32(model.IMG_ELEMS), f32(model.IMG_ELEMS))),
+    "quantize": (model.quantize, (f32(model.CPR_ELEMS),)),
+    "dequantize": (model.dequantize, (i32(model.CPR_ELEMS),)),
+    "mlp_grads": (
+        model.mlp_grads,
+        (
+            f32(model.MLP_PARAMS),
+            f32(model.MLP_BATCH, model.MLP_IN),
+            f32(model.MLP_BATCH, model.MLP_OUT),
+        ),
+    ),
+    "mlp_apply": (model.mlp_apply, (f32(model.MLP_PARAMS), f32(model.MLP_PARAMS))),
+}
+
+
+def lower_one(name: str) -> str:
+    fn, args = ARTIFACTS[name]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) path for model.hlo.txt")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name in sorted(ARTIFACTS):
+        text = lower_one(name)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest.append(f"{name} sha256:{digest} bytes:{len(text)}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Makefile contract: artifacts/model.hlo.txt is the collective
+    # computation hot-spot (the reduction).
+    model_path = os.path.join(out_dir, "model.hlo.txt")
+    with open(os.path.join(out_dir, "reduce_pair.hlo.txt")) as f:
+        text = f.read()
+    with open(model_path, "w") as f:
+        f.write(text)
+    print(f"wrote {model_path}")
+
+    shapes = [
+        f"img_elems {model.IMG_ELEMS}",
+        f"cpr_elems {model.CPR_ELEMS}",
+        f"default_eb {model.DEFAULT_EB}",
+        f"mlp_params {model.MLP_PARAMS}",
+        f"mlp_in {model.MLP_IN}",
+        f"mlp_out {model.MLP_OUT}",
+        f"mlp_batch {model.MLP_BATCH}",
+    ]
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(shapes + manifest) + "\n")
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""L1 Pallas kernels: reduction and parameter-update primitives.
+
+``reduce_pair`` is the GPU reduction kernel of gZCCL §3.3.1 (the paper
+moves reduction from host to device); the Rust coordinator executes its
+AOT artifact on the hot path of Allreduce-backed applications (image
+stacking, DDP gradient averaging). ``axpy`` is the SGD parameter update
+used by the DDP training example.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _axpy_kernel(p_ref, g_ref, o_ref, *, lr):
+    o_ref[...] = p_ref[...] - lr * g_ref[...]
+
+
+def reduce_pair(a, b):
+    """Elementwise sum — the Allreduce reduction operator, on device."""
+    n = a.shape[0]
+    assert a.shape == b.shape and n % BLOCK == 0
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def axpy(params, grads, lr):
+    """SGD step ``params - lr * grads`` as a Pallas kernel."""
+    n = params.shape[0]
+    assert params.shape == grads.shape and n % BLOCK == 0
+    kernel = functools.partial(_axpy_kernel, lr=lr)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(params, grads)

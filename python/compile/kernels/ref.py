@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: pytest asserts the Pallas
+kernels match these (and hypothesis sweeps shapes/values). No pallas
+imports here — nothing to get subtly wrong twice the same way.
+"""
+
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def lorenzo_encode_ref(x, eb):
+    """Blockwise prequant + delta, block-independent (first delta absolute).
+
+    Uses ``x * (1/(2eb))`` — multiplication, not division — matching the
+    kernel's arithmetic bit-for-bit in f32.
+    """
+    q = jnp.round(x * (1.0 / (2.0 * eb))).astype(jnp.int32)
+    qb = q.reshape(-1, BLOCK)
+    prev = jnp.concatenate([jnp.zeros((qb.shape[0], 1), jnp.int32), qb[:, :-1]], axis=1)
+    return (qb - prev).reshape(-1)
+
+
+def lorenzo_decode_ref(deltas, eb):
+    """Blockwise prefix sum and rescale."""
+    db = deltas.reshape(-1, BLOCK)
+    q = jnp.cumsum(db, axis=1)
+    return (q.astype(jnp.float32) * (2.0 * eb)).reshape(-1)
+
+
+def compress_roundtrip_ref(x, eb):
+    """Values snapped to their eb bins."""
+    return lorenzo_decode_ref(lorenzo_encode_ref(x, eb), eb)
+
+
+def reduce_pair_ref(a, b):
+    return a + b
+
+
+def axpy_ref(p, g, lr):
+    return p - lr * g

@@ -1,0 +1,110 @@
+"""L2: JAX compute graphs AOT-lowered for the Rust coordinator.
+
+Three graph families, all calling the L1 Pallas kernels so they lower
+into the same HLO the Rust runtime executes:
+
+* ``reduce_pair`` / ``stack_update`` — the device reduction of gZCCL
+  §3.3.1, used by the image-stacking application (paper §4.5).
+* ``quantize`` / ``dequantize`` — the compression round-trip stage
+  (cuSZp core) at the paper's default eb = 1e-4.
+* ``mlp_grads`` / ``mlp_apply`` — fwd+bwd and SGD apply of a small MLP
+  regressor, the per-rank compute of the DDP training example whose
+  gradients are averaged with gZ-Allreduce.
+
+Shapes are fixed at AOT time and mirrored in
+``rust/src/runtime/artifacts.rs``; ``aot.py`` also emits a manifest the
+Rust side validates against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lorenzo, reduce
+
+# ---- Fixed AOT shapes (mirrored in rust/src/runtime/artifacts.rs) ----
+
+#: Image stacking: one 128×128 partial image, flattened.
+IMG_ELEMS = 128 * 128
+#: Compression round-trip vector length.
+CPR_ELEMS = 64 * 1024
+#: Paper-default absolute error bound.
+DEFAULT_EB = 1e-4
+
+#: MLP dims: x[batch, IN] → h[HID] → y[batch, OUT].
+MLP_IN = 64
+MLP_HID = 256
+MLP_OUT = 16
+MLP_BATCH = 256
+#: Total flat parameter count (padded to the kernel BLOCK).
+MLP_PARAMS_RAW = MLP_IN * MLP_HID + MLP_HID + MLP_HID * MLP_OUT + MLP_OUT
+MLP_PARAMS = ((MLP_PARAMS_RAW + reduce.BLOCK - 1) // reduce.BLOCK) * reduce.BLOCK
+
+
+def reduce_pair(a, b):
+    """Elementwise sum of two flat f32 vectors (Pallas kernel)."""
+    return (reduce.reduce_pair(a, b),)
+
+
+def stack_update(acc, img):
+    """One image-stacking accumulation step: ``acc + img``."""
+    return (reduce.reduce_pair(acc, img),)
+
+
+def quantize(x):
+    """cuSZp-core quantization deltas at the default error bound."""
+    return (lorenzo.lorenzo_encode(x, DEFAULT_EB),)
+
+
+def dequantize(d):
+    """Inverse of :func:`quantize`."""
+    return (lorenzo.lorenzo_decode(d, DEFAULT_EB),)
+
+
+def _unpack(params):
+    """Flat parameter vector → (W1, b1, W2, b2)."""
+    i = 0
+    w1 = params[i : i + MLP_IN * MLP_HID].reshape(MLP_IN, MLP_HID)
+    i += MLP_IN * MLP_HID
+    b1 = params[i : i + MLP_HID]
+    i += MLP_HID
+    w2 = params[i : i + MLP_HID * MLP_OUT].reshape(MLP_HID, MLP_OUT)
+    i += MLP_HID * MLP_OUT
+    b2 = params[i : i + MLP_OUT]
+    return w1, b1, w2, b2
+
+
+def mlp_loss(params, x, y):
+    """MSE of the 2-layer tanh MLP on (x, y)."""
+    w1, b1, w2, b2 = _unpack(params)
+    h = jnp.tanh(x @ w1 + b1)
+    pred = h @ w2 + b2
+    return jnp.mean((pred - y) ** 2)
+
+
+def mlp_grads(params, x, y):
+    """Per-rank training compute: (loss, flat gradient vector)."""
+    loss, g = jax.value_and_grad(mlp_loss)(params, x, y)
+    return loss.reshape(1), g
+
+
+def mlp_apply(params, grads):
+    """SGD apply at lr=0.05 through the Pallas axpy kernel."""
+    return (reduce.axpy(params, grads, 0.05),)
+
+
+def mlp_init(seed: int = 0):
+    """Deterministic flat parameter init (matches the Rust driver)."""
+    key = jax.random.PRNGKey(seed)
+    p = jax.random.normal(key, (MLP_PARAMS,), jnp.float32) * 0.1
+    return p
+
+
+def mlp_batch(seed: int):
+    """Synthetic regression batch: y = sines of a fixed random projection."""
+    key = jax.random.PRNGKey(1000 + seed)
+    kx, kw = jax.random.split(jax.random.PRNGKey(555))
+    del kx
+    x = jax.random.normal(jax.random.fold_in(key, 1), (MLP_BATCH, MLP_IN), jnp.float32)
+    w = jax.random.normal(kw, (MLP_IN, MLP_OUT), jnp.float32) / jnp.sqrt(MLP_IN)
+    y = jnp.sin(x @ w)
+    return x, y

@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the core correctness signal for the compiled artifacts:
+hypothesis sweeps shapes/values/error bounds and asserts allclose
+against the reference implementations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import lorenzo, reduce, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+BLOCK = lorenzo.BLOCK
+
+
+def vec(rng, n, scale=1.0):
+    return jnp.asarray(rng.standard_normal(n).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------
+# Deterministic unit tests
+# ---------------------------------------------------------------------
+
+
+class TestLorenzoEncode:
+    def test_matches_ref_smoke(self):
+        rng = np.random.default_rng(0)
+        x = vec(rng, 4 * BLOCK)
+        got = lorenzo.lorenzo_encode(x, 1e-3)
+        want = ref.lorenzo_encode_ref(x, 1e-3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_first_delta_of_each_block_is_absolute(self):
+        # Constant input: within a block all deltas but the first are 0.
+        x = jnp.full((2 * BLOCK,), 0.5, jnp.float32)
+        d = np.asarray(lorenzo.lorenzo_encode(x, 1e-3))
+        q = round(0.5 / 2e-3)
+        assert d[0] == q and d[BLOCK] == q
+        assert (d[1:BLOCK] == 0).all() and (d[BLOCK + 1 :] == 0).all()
+
+    def test_zero_input_all_zero(self):
+        x = jnp.zeros((BLOCK,), jnp.float32)
+        assert (np.asarray(lorenzo.lorenzo_encode(x, 1e-4)) == 0).all()
+
+    def test_rejects_misaligned_length(self):
+        with pytest.raises(AssertionError):
+            lorenzo.lorenzo_encode(jnp.zeros((BLOCK + 1,), jnp.float32), 1e-4)
+
+
+class TestLorenzoDecode:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(1)
+        x = vec(rng, 8 * BLOCK, scale=3.0)
+        for eb in (1e-2, 1e-3, 1e-4):
+            back = lorenzo.compress_roundtrip(x, eb)
+            err = np.abs(np.asarray(back) - np.asarray(x)).max()
+            assert err <= eb * (1 + 1e-3), f"eb={eb}: {err}"
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(2)
+        x = vec(rng, 4 * BLOCK)
+        d = lorenzo.lorenzo_encode(x, 1e-3)
+        got = lorenzo.lorenzo_decode(d, 1e-3)
+        want = ref.lorenzo_decode_ref(d, 1e-3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+    def test_blocks_decode_independently(self):
+        rng = np.random.default_rng(3)
+        x = vec(rng, 4 * BLOCK)
+        d = np.asarray(lorenzo.lorenzo_encode(x, 1e-3))
+        # Decoding a single block in isolation equals that block's slice
+        # of the full decode.
+        blk = jnp.asarray(d[BLOCK : 2 * BLOCK])
+        solo = np.asarray(lorenzo.lorenzo_decode(blk, 1e-3))
+        full = np.asarray(lorenzo.lorenzo_decode(jnp.asarray(d), 1e-3))
+        np.testing.assert_allclose(solo, full[BLOCK : 2 * BLOCK], atol=0)
+
+
+class TestReduce:
+    def test_add_matches_ref(self):
+        rng = np.random.default_rng(4)
+        a, b = vec(rng, 2 * BLOCK), vec(rng, 2 * BLOCK)
+        np.testing.assert_allclose(
+            np.asarray(reduce.reduce_pair(a, b)),
+            np.asarray(ref.reduce_pair_ref(a, b)),
+            atol=0,
+        )
+
+    def test_axpy_matches_ref(self):
+        rng = np.random.default_rng(5)
+        p, g = vec(rng, BLOCK), vec(rng, BLOCK)
+        np.testing.assert_allclose(
+            np.asarray(reduce.axpy(p, g, 0.05)),
+            np.asarray(ref.axpy_ref(p, g, 0.05)),
+            rtol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------
+
+sizes = st.integers(min_value=1, max_value=6).map(lambda k: k * BLOCK)
+ebs = st.sampled_from([1e-2, 1e-3, 1e-4])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=sizes, eb=ebs, seed=seeds)
+def test_encode_matches_ref_swept(n, eb, seed):
+    rng = np.random.default_rng(seed)
+    x = vec(rng, n, scale=10.0)
+    got = np.asarray(lorenzo.lorenzo_encode(x, eb))
+    want = np.asarray(ref.lorenzo_encode_ref(x, eb))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=sizes, eb=ebs, seed=seeds)
+def test_roundtrip_error_bound_swept(n, eb, seed):
+    rng = np.random.default_rng(seed)
+    scale = float(rng.uniform(0.1, 50.0))
+    x = vec(rng, n, scale=scale)
+    back = np.asarray(lorenzo.compress_roundtrip(x, eb))
+    # eb plus float32 representation slack at the data's magnitude.
+    tol = eb + np.abs(np.asarray(x)).max() * 1e-6
+    assert np.abs(back - np.asarray(x)).max() <= tol
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, seed=seeds)
+def test_reduce_pair_swept(n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = vec(rng, n), vec(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(reduce.reduce_pair(a, b)), np.asarray(a) + np.asarray(b), atol=0
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=sizes, seed=seeds, lr=st.sampled_from([0.01, 0.05, 0.5]))
+def test_axpy_swept(n, seed, lr):
+    rng = np.random.default_rng(seed)
+    p, g = vec(rng, n), vec(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(reduce.axpy(p, g, lr)),
+        np.asarray(ref.axpy_ref(p, g, lr)),
+        rtol=1e-5,
+        atol=1e-6,
+    )

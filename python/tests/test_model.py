@@ -1,0 +1,73 @@
+"""L2 correctness: model graphs, shapes, and training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestReduceGraphs:
+    def test_reduce_pair_shape_and_value(self):
+        a = jnp.arange(model.IMG_ELEMS, dtype=jnp.float32)
+        b = jnp.ones((model.IMG_ELEMS,), jnp.float32)
+        (out,) = model.reduce_pair(a, b)
+        assert out.shape == (model.IMG_ELEMS,)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a) + 1.0, atol=0)
+
+    def test_stack_update_accumulates(self):
+        acc = jnp.zeros((model.IMG_ELEMS,), jnp.float32)
+        img = jnp.full((model.IMG_ELEMS,), 0.25, jnp.float32)
+        for _ in range(4):
+            (acc,) = model.stack_update(acc, img)
+        np.testing.assert_allclose(np.asarray(acc), 1.0, rtol=1e-6)
+
+
+class TestQuantizeGraphs:
+    def test_quantize_dequantize_round_trip(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal(model.CPR_ELEMS).astype(np.float32))
+        (d,) = model.quantize(x)
+        assert d.dtype == jnp.int32
+        (back,) = model.dequantize(d)
+        err = np.abs(np.asarray(back) - np.asarray(x)).max()
+        # eb plus f32 representation slack at the data magnitude.
+        tol = model.DEFAULT_EB + float(np.abs(np.asarray(x)).max()) * 1e-6
+        assert err <= tol
+
+
+class TestMlp:
+    def test_param_vector_padded_to_block(self):
+        from compile.kernels.reduce import BLOCK
+
+        assert model.MLP_PARAMS % BLOCK == 0
+        assert model.MLP_PARAMS >= model.MLP_PARAMS_RAW
+
+    def test_grads_shapes(self):
+        p = model.mlp_init(0)
+        x, y = model.mlp_batch(0)
+        loss, g = model.mlp_grads(p, x, y)
+        assert loss.shape == (1,)
+        assert g.shape == (model.MLP_PARAMS,)
+        # Padding tail has zero gradient (unused parameters).
+        tail = np.asarray(g[model.MLP_PARAMS_RAW :])
+        assert np.all(tail == 0.0)
+
+    def test_sgd_decreases_loss(self):
+        p = model.mlp_init(0)
+        x, y = model.mlp_batch(0)
+        first, g = model.mlp_grads(p, x, y)
+        for step in range(30):
+            _, g = model.mlp_grads(p, x, y)
+            (p,) = model.mlp_apply(p, g)
+        last, _ = model.mlp_grads(p, x, y)
+        assert float(last[0]) < 0.5 * float(first[0]), (first, last)
+
+    def test_batches_are_deterministic_per_seed(self):
+        x1, y1 = model.mlp_batch(3)
+        x2, y2 = model.mlp_batch(3)
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+        x3, _ = model.mlp_batch(4)
+        assert not np.array_equal(np.asarray(x1), np.asarray(x3))

@@ -1,0 +1,30 @@
+//! §Perf hot-path bench: real compressor encode/decode throughput on
+//! RTM-like data (the L3 hot loop of every real-payload collective).
+use gzccl::bench_support::{bench, throughput_gbps};
+use gzccl::compress::{ratio, Compressor, CuszpLike, FixedRate};
+use gzccl::data::RtmDataset;
+
+fn main() {
+    let data = RtmDataset::setting1().sample(8 << 20); // 32 MB
+    let bytes = data.len() * 4;
+    for eb in [1e-3, 1e-4, 1e-5] {
+        let c = CuszpLike::new(eb);
+        let (stream, enc) = bench(3, || c.compress(&data));
+        let (_, dec) = bench(3, || c.decompress(&stream).unwrap());
+        println!(
+            "cuszp-like eb={eb:.0e}: encode {:6.2} GB/s  decode {:6.2} GB/s  ratio {:6.2}",
+            throughput_gbps(bytes, enc.min),
+            throughput_gbps(bytes, dec.min),
+            ratio(bytes, stream.len()),
+        );
+    }
+    let c = FixedRate::new(8);
+    let (stream, enc) = bench(3, || c.compress(&data));
+    let (_, dec) = bench(3, || c.decompress(&stream).unwrap());
+    println!(
+        "fixed-rate(8b):   encode {:6.2} GB/s  decode {:6.2} GB/s  ratio {:6.2}",
+        throughput_gbps(bytes, enc.min),
+        throughput_gbps(bytes, dec.min),
+        ratio(bytes, stream.len()),
+    );
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 2: ring-Allreduce breakdown under CPRP2P vs C-Coll.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig02_breakdown;
+
+fn main() {
+    let (table, stats) = bench(3, || fig02_breakdown(64, 646 << 20).unwrap());
+    table.print();
+    println!("[bench fig02] {stats}");
+}

@@ -1,0 +1,26 @@
+//! Regenerates Fig. 3: compressor execution time vs data size, plus the
+//! real Rust compressor's measured throughput on this host.
+use gzccl::bench_support::{bench, throughput_gbps};
+use gzccl::compress::{Compressor, CuszpLike};
+use gzccl::experiments::fig03_characterization;
+use gzccl::testkit::Pcg32;
+
+fn main() {
+    let (table, stats) = bench(3, || fig03_characterization().unwrap());
+    table.print();
+    println!("[bench fig03] {stats}");
+
+    // Measured: the real compressor on uniform data (the paper's Fig. 3
+    // workload), host CPU.
+    let mut rng = Pcg32::seeded(1);
+    let data = rng.uniform_vec(16 << 20, 0.0, 1.0); // 64 MB
+    let c = CuszpLike::new(1e-4);
+    let (stream, enc) = bench(3, || c.compress(&data));
+    let (_, dec) = bench(3, || c.decompress(&stream).unwrap());
+    println!(
+        "[bench fig03] rust cuszp-like on 64 MB uniform: encode {:.2} GB/s, decode {:.2} GB/s, ratio {:.2}",
+        throughput_gbps(data.len() * 4, enc.min),
+        throughput_gbps(data.len() * 4, dec.min),
+        (data.len() * 4) as f64 / stream.len() as f64,
+    );
+}

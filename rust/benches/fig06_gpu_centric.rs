@@ -1,0 +1,11 @@
+//! Regenerates Fig. 6: GPU-centric vs CPU-centric Allreduce (both datasets).
+use gzccl::bench_support::bench;
+use gzccl::experiments::{fig06_gpu_centric, Dataset};
+
+fn main() {
+    for ds in [Dataset::Rtm1, Dataset::Rtm2] {
+        let (table, stats) = bench(1, move || fig06_gpu_centric(64, ds).unwrap());
+        table.print();
+        println!("[bench fig06 {}] {stats}", ds.name());
+    }
+}

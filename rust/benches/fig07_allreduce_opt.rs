@@ -1,0 +1,10 @@
+//! Regenerates Fig. 7: gZ-Allreduce optimization gains vs the
+//! unoptimized GPU-centric baseline.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig07_allreduce_opt;
+
+fn main() {
+    let (table, stats) = bench(1, || fig07_allreduce_opt(64).unwrap());
+    table.print();
+    println!("[bench fig07] {stats}");
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 8: gZ-Scatter optimization gains.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig08_scatter_opt;
+
+fn main() {
+    let (table, stats) = bench(1, || fig08_scatter_opt(64).unwrap());
+    table.print();
+    println!("[bench fig08] {stats}");
+}

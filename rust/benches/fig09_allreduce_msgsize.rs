@@ -1,0 +1,9 @@
+//! Regenerates Fig. 9: Allreduce vs Cray MPI / NCCL across sizes.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig09_msgsize;
+
+fn main() {
+    let (table, stats) = bench(1, || fig09_msgsize(64).unwrap());
+    table.print();
+    println!("[bench fig09] {stats}");
+}

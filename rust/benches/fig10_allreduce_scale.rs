@@ -1,0 +1,9 @@
+//! Regenerates Fig. 10: Allreduce scalability to 512 GPUs.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig10_scale;
+
+fn main() {
+    let (table, stats) = bench(1, || fig10_scale().unwrap());
+    table.print();
+    println!("[bench fig10] {stats}");
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 11: Scatter vs Cray MPI across sizes.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig11_scatter_msgsize;
+
+fn main() {
+    let (table, stats) = bench(1, || fig11_scatter_msgsize(64).unwrap());
+    table.print();
+    println!("[bench fig11] {stats}");
+}

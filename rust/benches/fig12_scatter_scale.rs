@@ -1,0 +1,9 @@
+//! Regenerates Fig. 12: Scatter scalability to 512 GPUs.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig12_scatter_scale;
+
+fn main() {
+    let (table, stats) = bench(1, || fig12_scatter_scale().unwrap());
+    table.print();
+    println!("[bench fig12] {stats}");
+}

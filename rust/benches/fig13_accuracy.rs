@@ -1,0 +1,15 @@
+//! Regenerates Fig. 13: stacking accuracy (real data, real compression)
+//! + PGM visualizations under artifacts/fig13/.
+use gzccl::bench_support::bench;
+use gzccl::experiments::fig13_accuracy;
+use gzccl::runtime::Engine;
+
+fn main() {
+    let engine = Engine::discover().ok();
+    let dir = std::path::PathBuf::from("artifacts/fig13");
+    let (table, stats) = bench(1, || {
+        fig13_accuracy(16, engine.as_ref(), Some(&dir)).unwrap()
+    });
+    table.print();
+    println!("[bench fig13] {stats} (PGMs in {})", dir.display());
+}

@@ -1,0 +1,10 @@
+//! Regenerates Table 1: compression ratio + PSNR on both RTM datasets.
+use gzccl::bench_support::bench;
+use gzccl::experiments::table1_compression;
+
+fn main() {
+    // 8M values/dataset: representative sample, minutes-not-hours.
+    let (table, stats) = bench(1, || table1_compression(1 << 23).unwrap());
+    table.print();
+    println!("[bench table1] {stats}");
+}

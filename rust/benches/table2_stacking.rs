@@ -1,0 +1,9 @@
+//! Regenerates Table 2: image-stacking speedups + phase breakdown.
+use gzccl::bench_support::bench;
+use gzccl::experiments::table2_stacking;
+
+fn main() {
+    let (table, stats) = bench(1, || table2_stacking(64, 256 << 20).unwrap());
+    table.print();
+    println!("[bench table2] {stats}");
+}

@@ -1,0 +1,14 @@
+//! Applications built on the gZCCL collectives.
+//!
+//! * [`stacking`] — the paper's §4.5 image-stacking analysis (an
+//!   Allreduce over per-process partial images), with accuracy
+//!   reporting (PSNR/NRMSE, Fig. 13) and the Table-2 breakdown.
+//! * [`ddp`] — the end-to-end data-parallel training driver: per-rank
+//!   MLP fwd/bwd through the PJRT artifacts, gradient averaging through
+//!   gZ-Allreduce.
+
+pub mod ddp;
+pub mod stacking;
+
+pub use ddp::{train_ddp, DdpConfig, DdpResult};
+pub use stacking::{run_stacking, StackingConfig, StackingOutcome, StackingVariant};

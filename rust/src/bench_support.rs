@@ -1,0 +1,78 @@
+//! Minimal benchmark harness (criterion is not in the vendored set).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that
+//! regenerates one of the paper's tables/figures and reports wall-clock
+//! statistics for the regeneration itself.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    /// Number of measured runs.
+    pub runs: usize,
+    /// Mean seconds.
+    pub mean: f64,
+    /// Standard deviation (seconds).
+    pub stddev: f64,
+    /// Fastest run (seconds).
+    pub min: f64,
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} runs: mean {:.3}s ± {:.3}s (min {:.3}s)",
+            self.runs, self.mean, self.stddev, self.min
+        )
+    }
+}
+
+/// Run `f` once as warmup, then `runs` measured times.
+pub fn bench<R>(runs: usize, mut f: impl FnMut() -> R) -> (R, Stats) {
+    let warm = f();
+    let mut samples = Vec::with_capacity(runs);
+    let mut last = warm;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        last = f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    (
+        last,
+        Stats {
+            runs,
+            mean,
+            stddev: var.sqrt(),
+            min,
+        },
+    )
+}
+
+/// Throughput helper: bytes processed per wall second.
+pub fn throughput_gbps(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_result_and_stats() {
+        let (r, s) = bench(3, || 41 + 1);
+        assert_eq!(r, 42);
+        assert_eq!(s.runs, 3);
+        assert!(s.mean >= 0.0 && s.min <= s.mean + 1e-12);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput_gbps(2_000_000_000, 2.0) - 1.0).abs() < 1e-12);
+    }
+}

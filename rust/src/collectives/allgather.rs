@@ -1,0 +1,341 @@
+//! Allgather: ring, Bruck, and recursive-doubling algorithms.
+//!
+//! The paper's data-movement analysis (§3.3.3) concludes the **ring** is
+//! the right choice under GPU compression: one compression of the local
+//! block, N−1 forwarded (never recompressed) transfers, and N−1
+//! decompressions that multi-stream/overlap away. Bruck and recursive
+//! doubling are implemented as the comparison points: fewer steps but
+//! more transferred volume (blocks double every round, all compressed
+//! payloads still decompressed once per origin block).
+
+use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
+use crate::error::Result;
+use crate::gpu::StreamId;
+use crate::sim::VirtTime;
+
+use super::chunking::Chunks;
+
+const TAG_AG: u64 = 0x4147_0000;
+
+/// Ring Allgather. Rank r contributes `input` as block r; returns the
+/// concatenation of all blocks (order 0..N). `ready` is when `input`
+/// is device-ready (lets Allreduce chain RS→AG without a barrier).
+pub fn allgather_ring_at(
+    ctx: &mut RankCtx,
+    input: DeviceBuf,
+    ready: VirtTime,
+) -> Result<(DeviceBuf, VirtTime)> {
+    let n = ctx.nranks();
+    let r = ctx.rank();
+    if n == 1 {
+        return Ok((input, ready));
+    }
+    let next = (r + 1) % n;
+    let prev = (r + n - 1) % n;
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(1)
+    } else {
+        StreamId::Default
+    };
+
+    let mut blocks: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
+    let mut blocks_ready: Vec<VirtTime> = vec![ready; n];
+
+    if ctx.compression_enabled() && ctx.policy().compression == CompressionMode::FixedRate {
+        // CPRP2P: compression lives in the p2p layer, so every hop
+        // decompresses the incoming block and re-compresses it before
+        // forwarding — N−1 compressions AND N−1 decompressions, plus
+        // per-hop error stacking. This is the baseline the paper's
+        // Fig. 2 characterizes.
+        let mut outgoing: DeviceBuf = input.clone();
+        let mut outgoing_t = ready;
+        blocks[r] = Some(input);
+        blocks_ready[r] = ready;
+        for s in 1..n {
+            let recv_idx = (r + n - s) % n;
+            let (c, t_c) = ctx.compress(stream, &outgoing, outgoing_t);
+            ctx.send(next, TAG_AG + s as u64, Payload::Comp(c), t_c);
+            let (cin, t_in) = ctx.recv_comp(prev, TAG_AG + s as u64);
+            let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+            blocks[recv_idx] = Some(dec.clone());
+            blocks_ready[recv_idx] = t_dec;
+            outgoing = dec;
+            outgoing_t = t_dec;
+        }
+    } else if ctx.compression_enabled() {
+        // ONE compression of the local block (the gZCCL invariant).
+        let (cmine, t0) = ctx.compress(stream, &input, ready);
+        blocks[r] = Some(input);
+        blocks_ready[r] = ready;
+        // Compressed blocks are forwarded verbatim around the ring.
+        let mut outgoing: CompBuf = cmine;
+        let mut outgoing_t = t0;
+        for s in 1..n {
+            let send_idx = (r + n - s + 1) % n;
+            let _ = send_idx; // the outgoing buffer IS block send_idx
+            let recv_idx = (r + n - s) % n;
+            ctx.send(next, TAG_AG + s as u64, Payload::Comp(outgoing.clone()), outgoing_t);
+            let (cin, t_in) = ctx.recv_comp(prev, TAG_AG + s as u64);
+            // Decompress on the side stream; forwarding does not wait
+            // for decompression (overlap of §3.3.4).
+            let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+            blocks[recv_idx] = Some(dec);
+            blocks_ready[recv_idx] = t_dec;
+            outgoing = cin;
+            outgoing_t = t_in;
+        }
+    } else {
+        blocks[r] = Some(input.clone());
+        let mut outgoing = input;
+        let mut outgoing_t = ready;
+        for s in 1..n {
+            let recv_idx = (r + n - s) % n;
+            ctx.send(next, TAG_AG + s as u64, Payload::Raw(outgoing.clone()), outgoing_t);
+            let (bin, t_in) = ctx.recv_raw(prev, TAG_AG + s as u64);
+            blocks[recv_idx] = Some(bin.clone());
+            blocks_ready[recv_idx] = t_in;
+            outgoing = bin;
+            outgoing_t = t_in;
+        }
+    }
+
+    let parts: Vec<DeviceBuf> = blocks.into_iter().map(|b| b.unwrap()).collect();
+    let out = DeviceBuf::concat(&parts);
+    let t = blocks_ready
+        .into_iter()
+        .fold(VirtTime::ZERO, |a, b| a.join(b));
+    Ok((out, t))
+}
+
+/// Standalone ring Allgather from time zero.
+pub fn allgather_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let now = ctx.now();
+    let (out, _t) = allgather_ring_at(ctx, input, now)?;
+    if ctx.policy().overlap {
+        ctx.sync_device();
+    }
+    Ok(out)
+}
+
+/// Recursive-doubling Allgather: log N rounds, exchanged volume doubles
+/// each round. Requires a power-of-two communicator (callers fall back
+/// to ring otherwise, as MPICH does).
+pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let r = ctx.rank();
+    if n == 1 {
+        return Ok(input);
+    }
+    assert!(
+        n.is_power_of_two(),
+        "recursive-doubling allgather requires power-of-two ranks"
+    );
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(1)
+    } else {
+        StreamId::Default
+    };
+    // Accumulated gathered region, kept in rank order within the
+    // doubling group: after round k the rank holds 2^k blocks.
+    let mut have: Vec<(usize, DeviceBuf)> = vec![(r, input)];
+    let mut have_t = ctx.now();
+    let mut mask = 1usize;
+    let mut round = 0u64;
+    while mask < n {
+        let peer = r ^ mask;
+        let mine = DeviceBuf::concat(&have.iter().map(|(_, b)| b.clone()).collect::<Vec<_>>());
+        let (theirs, t_in) = if ctx.compression_enabled() {
+            let (c, t_c) = ctx.compress(stream, &mine, have_t);
+            ctx.send(peer, TAG_AG + 0x100 + round, Payload::Comp(c), t_c);
+            let (cin, t_in) = ctx.recv_comp(peer, TAG_AG + 0x100 + round);
+            let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+            (dec, t_dec)
+        } else {
+            ctx.send(peer, TAG_AG + 0x100 + round, Payload::Raw(mine.clone()), have_t);
+            ctx.recv_raw(peer, TAG_AG + 0x100 + round)
+        };
+        // The peer's region covers its own group of blocks.
+        let peer_base = peer & !(mask - 1);
+        let counts = Chunks::new(theirs.elems(), mask);
+        let mut theirs_blocks: Vec<(usize, DeviceBuf)> = (0..mask)
+            .map(|i| (peer_base + i, theirs.slice(counts.range(i))))
+            .collect();
+        have.append(&mut theirs_blocks);
+        have.sort_by_key(|(idx, _)| *idx);
+        have_t = have_t.join(t_in);
+        mask <<= 1;
+        round += 1;
+    }
+    if ctx.policy().overlap {
+        ctx.sync_device();
+    }
+    let parts: Vec<DeviceBuf> = have.into_iter().map(|(_, b)| b).collect();
+    Ok(DeviceBuf::concat(&parts))
+}
+
+/// Bruck Allgather: log N rounds of shifted block exchanges; works for
+/// any N. Output is rotated back into rank order at the end.
+pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let r = ctx.rank();
+    if n == 1 {
+        return Ok(input);
+    }
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(1)
+    } else {
+        StreamId::Default
+    };
+    // Bruck keeps blocks in "local order": position p holds block
+    // (r + p) mod n.
+    let mut have: Vec<DeviceBuf> = vec![input];
+    let mut have_t = ctx.now();
+    let mut pofk = 1usize;
+    let mut round = 0u64;
+    while pofk < n {
+        let send_to = (r + n - pofk) % n;
+        let recv_from = (r + pofk) % n;
+        let count = pofk.min(n - pofk);
+        let mine = DeviceBuf::concat(&have[..count].to_vec());
+        let (theirs, t_in) = if ctx.compression_enabled() {
+            let (c, t_c) = ctx.compress(stream, &mine, have_t);
+            ctx.send(send_to, TAG_AG + 0x200 + round, Payload::Comp(c), t_c);
+            let (cin, t_in) = ctx.recv_comp(recv_from, TAG_AG + 0x200 + round);
+            let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+            (dec, t_dec)
+        } else {
+            ctx.send(send_to, TAG_AG + 0x200 + round, Payload::Raw(mine.clone()), have_t);
+            ctx.recv_raw(recv_from, TAG_AG + 0x200 + round)
+        };
+        let counts = Chunks::new(theirs.elems(), count);
+        for i in 0..count {
+            have.push(theirs.slice(counts.range(i)));
+        }
+        have_t = have_t.join(t_in);
+        pofk <<= 1;
+        round += 1;
+    }
+    if ctx.policy().overlap {
+        ctx.sync_device();
+    }
+    // Rotate local order back to rank order: block (r+p)%n is at p.
+    let mut parts: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
+    for (p, b) in have.into_iter().enumerate().take(n) {
+        parts[(r + p) % n] = Some(b);
+    }
+    Ok(DeviceBuf::concat(
+        &parts.into_iter().map(|b| b.unwrap()).collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::testkit::Pcg32;
+
+    fn block(r: usize, d: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(99, r as u64);
+        rng.uniform_vec(d, -1.0, 1.0)
+    }
+
+    fn check_gathered(outputs: &[DeviceBuf], n: usize, d: usize, tol: f32) {
+        let expect: Vec<f32> = (0..n).flat_map(|r| block(r, d)).collect();
+        for (r, out) in outputs.iter().enumerate() {
+            assert_eq!(out.elems(), n * d, "rank {r} size");
+            for (i, (a, b)) in out.as_real().iter().zip(expect.iter()).enumerate() {
+                assert!((a - b).abs() <= tol, "rank {r} elem {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    fn run_ag(
+        n: usize,
+        d: usize,
+        policy: ExecPolicy,
+        f: impl Fn(&mut RankCtx, DeviceBuf) -> Result<DeviceBuf> + Sync + 'static,
+    ) -> Vec<DeviceBuf> {
+        let inputs: Vec<DeviceBuf> = (0..n).map(|r| DeviceBuf::Real(block(r, d))).collect();
+        run_collective(&ClusterSpec::new(n, policy), inputs, &f)
+            .unwrap()
+            .outputs
+    }
+
+    #[test]
+    fn ring_uncompressed_exact() {
+        let out = run_ag(8, 32, ExecPolicy::nccl(), allgather_ring);
+        check_gathered(&out, 8, 32, 0.0);
+    }
+
+    #[test]
+    fn ring_compressed_within_single_eb() {
+        // Allgather compresses each origin block exactly once: the
+        // error is one compression deep regardless of N.
+        let out = run_ag(8, 64, ExecPolicy::gzccl(), allgather_ring);
+        check_gathered(&out, 8, 64, 1.1e-4);
+    }
+
+    #[test]
+    fn ring_compressed_one_compress_per_rank() {
+        let n = 8;
+        let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(4096)).collect();
+        let report = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            inputs,
+            &allgather_ring,
+        )
+        .unwrap();
+        for c in &report.counters {
+            assert_eq!(c.compress_calls, 1, "gZ-Allgather compresses once");
+            assert_eq!(c.decompress_calls, n - 1);
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_exact_and_compressed() {
+        let out = run_ag(8, 32, ExecPolicy::nccl(), allgather_recursive_doubling);
+        check_gathered(&out, 8, 32, 0.0);
+        // ReDoub recompresses aggregates each round: error stacks with
+        // log N compressions.
+        let out = run_ag(8, 32, ExecPolicy::gzccl(), allgather_recursive_doubling);
+        check_gathered(&out, 8, 32, 4.0 * 1.1e-4);
+    }
+
+    #[test]
+    fn bruck_exact_any_n() {
+        for n in [3usize, 5, 8] {
+            let out = run_ag(n, 16, ExecPolicy::nccl(), allgather_bruck);
+            check_gathered(&out, n, 16, 0.0);
+        }
+    }
+
+    #[test]
+    fn bruck_compressed() {
+        let out = run_ag(6, 32, ExecPolicy::gzccl(), allgather_bruck);
+        check_gathered(&out, 6, 32, 4.0 * 1.1e-4);
+    }
+
+    #[test]
+    fn ring_moves_less_volume_than_redoub_with_compression() {
+        // §3.3.3: ring transfers each block once (compressed);
+        // recursive doubling ships doubling aggregates: same order of
+        // volume, but ring wins on compression count. Check compress
+        // counters: ring = 1, redoub = log N.
+        let n = 8;
+        let mk = || -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(1 << 16)).collect() };
+        let ring = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(),
+            &allgather_ring,
+        )
+        .unwrap();
+        let redoub = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(),
+            &allgather_recursive_doubling,
+        )
+        .unwrap();
+        assert_eq!(ring.counters[0].compress_calls, 1);
+        assert_eq!(redoub.counters[0].compress_calls, 3);
+    }
+}

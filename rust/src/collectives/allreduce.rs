@@ -1,0 +1,380 @@
+//! Allreduce: ring and recursive-doubling (gZ-Allreduce) algorithms.
+//!
+//! * [`allreduce_ring`] — Reduce_scatter + Allgather, the NCCL/MPICH
+//!   large-message algorithm. With compression: N compressions and
+//!   2(N−1) decompressions per rank over D/N chunks — poor GPU
+//!   utilization at scale (§3.2.3).
+//! * [`allreduce_recursive_doubling`] — the paper's gZ-Allreduce
+//!   (ReDoub), Fig. 4: ⌈log₂N⌉ whole-vector exchanges, each step
+//!   memsets the reused temp buffers, compresses on a non-default
+//!   stream, exchanges non-blocking, decompresses and reduces on
+//!   device. High utilization (whole-vector kernels), log N
+//!   compression stages, remainder ranks folded in/out at the edges.
+
+use crate::coordinator::{DeviceBuf, Payload, RankCtx};
+use crate::error::Result;
+use crate::gpu::StreamId;
+
+use super::allgather::allgather_ring_at;
+use super::reduce_scatter::reduce_scatter_ring_at;
+
+const TAG_AR: u64 = 0x4152_0000;
+
+/// Ring Allreduce (Reduce_scatter stage then Allgather stage). The two
+/// stages are chained on device-ready timestamps, so with the overlap
+/// policy the Allgather's first compression overlaps the tail of the
+/// Reduce_scatter.
+pub fn allreduce_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let now = ctx.now();
+    let (chunk, t_rs) = reduce_scatter_ring_at(ctx, input, now)?;
+    let (out, _t_ag) = allgather_ring_at(ctx, chunk, t_rs)?;
+    ctx.sync_device();
+    Ok(out)
+}
+
+/// Recursive-doubling Allreduce (gZ-Allreduce ReDoub, Fig. 4).
+///
+/// Handles non-power-of-two communicators with the MPICH remainder
+/// scheme: the first 2r ranks pair up (even → odd), odd ranks carry the
+/// pair's sum through the power-of-two phase, and the result is pushed
+/// back to the parked even ranks at the end. Every payload is the
+/// *whole* vector — compressed once per step when compression is on.
+pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    if n == 1 {
+        return Ok(input);
+    }
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(0)
+    } else {
+        StreamId::Default
+    };
+    let pof2 = 1usize << (usize::BITS - 1 - n.leading_zeros() as u32) as usize;
+    let rem = n - pof2;
+
+    let mut data = input;
+    let mut data_t = ctx.now();
+    let elems = data.elems();
+
+    // ---- Stage 1: fold remainder ranks in (Fig. 4 left). -----------
+    // newrank = -1 parks the rank until the final restore.
+    let newrank: isize;
+    if me < 2 * rem {
+        if me % 2 == 0 {
+            // Even: memset temps, compress whole vector on the side
+            // stream, ship to the odd partner, park.
+            if ctx.compression_enabled() {
+                ctx.memset(stream, data.bytes(), data_t);
+                let (c, t_c) = ctx.compress(stream, &data, data_t);
+                ctx.send(me + 1, TAG_AR, Payload::Comp(c), t_c);
+            } else {
+                ctx.send(me + 1, TAG_AR, Payload::Raw(data.clone()), data_t);
+            }
+            newrank = -1;
+        } else {
+            let (theirs, t_in) = if ctx.compression_enabled() {
+                let (c, t_in) = ctx.recv_comp(me - 1, TAG_AR);
+                ctx.memset(stream, c.bytes(), ctx.now());
+                ctx.decompress(stream, &c, t_in)
+            } else {
+                ctx.recv_raw(me - 1, TAG_AR)
+            };
+            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t));
+            data = sum;
+            data_t = t_sum;
+            newrank = (me / 2) as isize;
+        }
+    } else {
+        newrank = (me - rem) as isize;
+    }
+
+    // ---- Stage 2: recursive doubling over pof2 ranks (Fig. 4). -----
+    if newrank >= 0 {
+        let nr = newrank as usize;
+        let mut mask = 1usize;
+        let mut round: u64 = 1;
+        while mask < pof2 {
+            let peer_nr = nr ^ mask;
+            // Map back to the real rank space.
+            let peer = if peer_nr < rem {
+                peer_nr * 2 + 1
+            } else {
+                peer_nr + rem
+            };
+            if ctx.compression_enabled() {
+                // Fig. 4: async memset of the reused temp buffers, then
+                // compress on the non-default stream.
+                ctx.memset(stream, data.bytes(), data_t);
+                let (c, t_c) = ctx.compress(stream, &data, data_t);
+                ctx.send(peer, TAG_AR + round, Payload::Comp(c), t_c);
+                let (cin, t_in) = ctx.recv_comp(peer, TAG_AR + round);
+                let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                let (sum, t_sum) = ctx.reduce(stream, &data, &dec, t_dec.join(data_t));
+                data = sum;
+                data_t = t_sum;
+            } else {
+                ctx.send(peer, TAG_AR + round, Payload::Raw(data.clone()), data_t);
+                let (bin, t_in) = ctx.recv_raw(peer, TAG_AR + round);
+                let (sum, t_sum) = ctx.reduce(stream, &data, &bin, t_in.join(data_t));
+                data = sum;
+                data_t = t_sum;
+            }
+            mask <<= 1;
+            round += 1;
+        }
+    }
+
+    // ---- Stage 3: restore remainder ranks (Fig. 4 right). ----------
+    if me < 2 * rem {
+        if me % 2 == 1 {
+            if ctx.compression_enabled() {
+                let (c, t_c) = ctx.compress(stream, &data, data_t);
+                ctx.send(me - 1, TAG_AR + 0x1000, Payload::Comp(c), t_c);
+            } else {
+                ctx.send(me - 1, TAG_AR + 0x1000, Payload::Raw(data.clone()), data_t);
+            }
+        } else {
+            let (result, _t) = if ctx.compression_enabled() {
+                let (c, t_in) = ctx.recv_comp(me + 1, TAG_AR + 0x1000);
+                ctx.decompress(stream, &c, t_in)
+            } else {
+                ctx.recv_raw(me + 1, TAG_AR + 0x1000)
+            };
+            data = result;
+        }
+    }
+    debug_assert_eq!(data.elems(), elems);
+    ctx.sync_device();
+    Ok(data)
+}
+
+/// Reduce-to-root + broadcast Allreduce — the Cray-MPI-class baseline
+/// observed in the paper's measurements (large-message CUDA-aware MPI
+/// on the testbed behaved far off the ring bandwidth bound; a
+/// staged binomial reduce+bcast with host buffers reproduces that
+/// behaviour). Used only by the uncompressed CPU-centric baseline.
+pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    if n == 1 {
+        return Ok(input);
+    }
+    let stream = StreamId::Default;
+    // --- Binomial reduce to rank 0 (children push up the tree). -----
+    let mut data = input;
+    let mut data_t = ctx.now();
+    let mut mask = 1usize;
+    let mut round = 0u64;
+    while mask < n {
+        if me & mask != 0 {
+            let dst = me - mask;
+            ctx.send(dst, TAG_AR + 0x2000 + round, Payload::Raw(data.clone()), data_t);
+            break;
+        } else if me + mask < n {
+            let src = me + mask;
+            let (theirs, t_in) = ctx.recv_raw(src, TAG_AR + 0x2000 + round);
+            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t));
+            data = sum;
+            data_t = t_sum;
+        }
+        mask <<= 1;
+        round += 1;
+    }
+    // --- Binomial broadcast of the result from rank 0. --------------
+    let out = super::bcast::bcast_binomial(ctx, if me == 0 { data } else { DeviceBuf::Virtual(0) });
+    // Non-roots receive the broadcast payload; rank 0 returns its sum.
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::testkit::Pcg32;
+
+    fn inputs_real(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::new(seed, r as u64);
+                DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+            })
+            .collect()
+    }
+
+    fn expected_sums(inputs: &[DeviceBuf]) -> Vec<f32> {
+        let d = inputs[0].elems();
+        let mut out = vec![0.0f32; d];
+        for b in inputs {
+            for (o, v) in out.iter_mut().zip(b.as_real()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    fn check_allreduce(
+        n: usize,
+        d: usize,
+        policy: ExecPolicy,
+        tol: f32,
+        algo: impl Fn(&mut RankCtx, DeviceBuf) -> Result<DeviceBuf> + Sync + 'static,
+    ) {
+        let inputs = inputs_real(n, d, 1234);
+        let expect = expected_sums(&inputs);
+        let report = run_collective(&ClusterSpec::new(n, policy), inputs, &algo).unwrap();
+        for (r, out) in report.outputs.iter().enumerate() {
+            assert_eq!(out.elems(), d);
+            for (i, (a, b)) in out.as_real().iter().zip(expect.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "rank {r} elem {i}: got {a} want {b} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_uncompressed_exact() {
+        check_allreduce(8, 64, ExecPolicy::nccl(), 1e-4, allreduce_ring);
+    }
+
+    #[test]
+    fn ring_uncompressed_nondivisible_sizes() {
+        check_allreduce(8, 61, ExecPolicy::nccl(), 1e-4, allreduce_ring);
+        check_allreduce(5, 13, ExecPolicy::nccl(), 1e-4, allreduce_ring);
+    }
+
+    #[test]
+    fn redoub_uncompressed_exact_pow2_and_not() {
+        for n in [2usize, 4, 8, 3, 6, 7] {
+            check_allreduce(n, 40, ExecPolicy::cray_mpi(), 1e-4, allreduce_recursive_doubling);
+        }
+    }
+
+    #[test]
+    fn ring_compressed_error_stacks_linearly() {
+        let eb = 1e-3f32;
+        // RS stage: ≤ 2eb per hop over N−1 hops; AG adds one more.
+        check_allreduce(
+            8,
+            128,
+            ExecPolicy::gzccl().clone(),
+            2.0 * 9.0 * eb,
+            allreduce_ring,
+        );
+    }
+
+    #[test]
+    fn redoub_compressed_error_stacks_logarithmically() {
+        // log2(8)=3 exchange steps; each adds ≤ 2eb (tight: eb of my
+        // compress seen by peer + eb of peer's compress) — use 3 eb per
+        // step as a safe envelope.
+        check_allreduce(
+            8,
+            128,
+            ExecPolicy::gzccl(),
+            3.0 * 3.0 * 1e-4,
+            allreduce_recursive_doubling,
+        );
+        // Non-power-of-two adds the fold/unfold steps.
+        check_allreduce(
+            6,
+            96,
+            ExecPolicy::gzccl(),
+            5.0 * 3.0 * 1e-4,
+            allreduce_recursive_doubling,
+        );
+    }
+
+    #[test]
+    fn cpr_counts_ring_vs_redoub() {
+        let n = 8;
+        let mk = || -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(1 << 16)).collect() };
+        let ring = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(),
+            &allreduce_ring,
+        )
+        .unwrap();
+        // Ring: N−1 compress (RS) + 1 compress (AG) = N; 2(N−1) decompress.
+        for c in &ring.counters {
+            assert_eq!(c.compress_calls, n, "ring compress");
+            assert_eq!(c.decompress_calls, 2 * (n - 1), "ring decompress");
+        }
+        let redoub = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(),
+            &allreduce_recursive_doubling,
+        )
+        .unwrap();
+        // Pow2: log N compress + log N decompress per rank.
+        for c in &redoub.counters {
+            assert_eq!(c.compress_calls, 3, "redoub compress");
+            assert_eq!(c.decompress_calls, 3, "redoub decompress");
+        }
+    }
+
+    #[test]
+    fn redoub_beats_ring_at_scale_small_chunks() {
+        // The paper's headline (Figs. 7/10): at large N with D/N below
+        // the utilization knee, ReDoub's log N whole-vector exchanges
+        // beat ring's 2(N−1) tiny-chunk stages.
+        let n = 64;
+        let d = (64 << 20) / 4; // 64 MB vector → 1 MB chunks: below knee
+        let mk = || -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(d)).collect() };
+        let ring = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(),
+            &allreduce_ring,
+        )
+        .unwrap();
+        let redoub = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(),
+            &allreduce_recursive_doubling,
+        )
+        .unwrap();
+        assert!(
+            redoub.makespan.as_secs() < ring.makespan.as_secs(),
+            "redoub {} vs ring {}",
+            redoub.makespan,
+            ring.makespan
+        );
+    }
+
+    #[test]
+    fn reduce_bcast_exact_various_n() {
+        for n in [2usize, 4, 6, 8] {
+            check_allreduce(n, 48, ExecPolicy::cray_mpi(), 1e-4, allreduce_reduce_bcast);
+        }
+    }
+
+    #[test]
+    fn reduce_bcast_slower_than_ring_uncompressed() {
+        // The Cray-MPI baseline ships the whole vector up and down the
+        // tree with PCIe staging: far off the ring bandwidth bound.
+        let n = 16;
+        let d = (64 << 20) / 4;
+        let mk = || -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(d)).collect() };
+        let cray = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::cray_mpi()),
+            mk(),
+            &allreduce_reduce_bcast,
+        )
+        .unwrap();
+        let nccl = run_collective(&ClusterSpec::new(n, ExecPolicy::nccl()), mk(), &allreduce_ring)
+            .unwrap();
+        assert!(
+            cray.makespan.as_secs() > 2.0 * nccl.makespan.as_secs(),
+            "cray {} vs nccl {}",
+            cray.makespan,
+            nccl.makespan
+        );
+    }
+
+    #[test]
+    fn single_rank_identity() {
+        check_allreduce(1, 16, ExecPolicy::gzccl(), 0.0, allreduce_recursive_doubling);
+    }
+}

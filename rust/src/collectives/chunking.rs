@@ -1,0 +1,106 @@
+//! Chunk-boundary bookkeeping for chunked collectives.
+//!
+//! Ring algorithms split a D-element vector into N near-equal chunks;
+//! sizes may differ by one when N ∤ D. This mirrors MPI's convention
+//! (`floor(i·D/N)` boundaries).
+
+/// Chunk layout of `total` elements over `n` chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunks {
+    total: usize,
+    n: usize,
+}
+
+impl Chunks {
+    /// Layout `total` elements into `n` chunks.
+    pub fn new(total: usize, n: usize) -> Self {
+        assert!(n > 0);
+        Chunks { total, n }
+    }
+
+    /// Number of chunks.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Start offset of chunk `i`.
+    pub fn start(&self, i: usize) -> usize {
+        debug_assert!(i <= self.n);
+        (i as u128 * self.total as u128 / self.n as u128) as usize
+    }
+
+    /// Element range of chunk `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.start(i)..self.start(i + 1)
+    }
+
+    /// Length of chunk `i`.
+    pub fn len(&self, i: usize) -> usize {
+        self.range(i).len()
+    }
+
+    /// Whether the layout is empty.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Cases};
+
+    #[test]
+    fn even_split() {
+        let c = Chunks::new(100, 4);
+        for i in 0..4 {
+            assert_eq!(c.len(i), 25);
+        }
+        assert_eq!(c.range(2), 50..75);
+    }
+
+    #[test]
+    fn uneven_split_covers_everything() {
+        let c = Chunks::new(10, 3);
+        let total: usize = (0..3).map(|i| c.len(i)).sum();
+        assert_eq!(total, 10);
+        assert_eq!(c.range(0).start, 0);
+        assert_eq!(c.range(2).end, 10);
+    }
+
+    #[test]
+    fn more_chunks_than_elements() {
+        let c = Chunks::new(2, 5);
+        let total: usize = (0..5).map(|i| c.len(i)).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn prop_chunks_partition_exactly() {
+        forall(
+            Cases::n(60),
+            |rng| (rng.range_usize(0, 10_000), rng.range_usize(1, 600)),
+            |(total, n)| {
+                let c = Chunks::new(*total, *n);
+                let mut cursor = 0;
+                for i in 0..*n {
+                    let r = c.range(i);
+                    if r.start != cursor {
+                        return Err(format!("gap at chunk {i}"));
+                    }
+                    cursor = r.end;
+                }
+                if cursor != *total {
+                    return Err("doesn't cover total".into());
+                }
+                // Sizes differ by at most 1.
+                let min = (0..*n).map(|i| c.len(i)).min().unwrap();
+                let max = (0..*n).map(|i| c.len(i)).max().unwrap();
+                if max - min > 1 {
+                    return Err(format!("imbalance {min}..{max}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

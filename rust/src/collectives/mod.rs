@@ -1,0 +1,101 @@
+//! Collective algorithms.
+//!
+//! Each collective is a plain function over a [`RankCtx`]: the same code
+//! runs baseline (uncompressed) and compression-enabled variants — the
+//! [`crate::coordinator::ExecPolicy`] decides whether `compress`/
+//! `decompress` are inserted and how they are scheduled.
+//!
+//! Algorithm inventory (paper §3.3.3):
+//!
+//! | Op             | Algorithms                                   |
+//! |----------------|----------------------------------------------|
+//! | Reduce_scatter | ring                                         |
+//! | Allgather      | ring, Bruck, recursive doubling              |
+//! | Allreduce      | ring (RS+AG), recursive doubling (gZ-ReDoub) |
+//! | Scatter        | binomial tree (gZ-Scatter multi-stream)      |
+//! | Bcast          | binomial tree                                |
+
+pub mod allgather;
+pub mod allreduce;
+pub mod bcast;
+pub mod chunking;
+pub mod reduce_scatter;
+pub mod scatter;
+
+pub use allgather::{allgather_bruck, allgather_recursive_doubling, allgather_ring};
+pub use allreduce::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
+pub use bcast::bcast_binomial;
+pub use chunking::Chunks;
+pub use reduce_scatter::reduce_scatter_ring;
+pub use scatter::scatter_binomial;
+
+/// Which collective operation (for dispatch and reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Elementwise-sum Allreduce.
+    Allreduce,
+    /// Allgather.
+    Allgather,
+    /// Reduce_scatter.
+    ReduceScatter,
+    /// One-to-all Scatter.
+    Scatter,
+    /// One-to-all Broadcast.
+    Bcast,
+}
+
+/// Which algorithm family realizes the operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Ring (bandwidth-optimal, N−1 steps).
+    Ring,
+    /// Recursive doubling (log N steps, whole-vector exchanges).
+    RecursiveDoubling,
+    /// Bruck (log N steps, shifting blocks).
+    Bruck,
+    /// Binomial tree (Scatter/Bcast).
+    Binomial,
+}
+
+/// Predicted compression-kernel invocations per rank — the complexity
+/// table of §3.3.3, which the integration tests assert against actual
+/// counter values.
+pub fn expected_cpr_stages(op: Op, algo: Algo, n: usize) -> Option<(usize, usize)> {
+    if n <= 1 {
+        return Some((0, 0));
+    }
+    let logn = usize::BITS as usize - (n - 1).leading_zeros() as usize;
+    match (op, algo) {
+        // (compressions, decompressions) per rank.
+        (Op::ReduceScatter, Algo::Ring) => Some((n - 1, n - 1)),
+        (Op::Allgather, Algo::Ring) => Some((1, n - 1)),
+        // Ring Allreduce = RS + AG.
+        (Op::Allreduce, Algo::Ring) => Some((n, 2 * (n - 1))),
+        // Power-of-two ReDoub: log N compress + log N decompress.
+        (Op::Allreduce, Algo::RecursiveDoubling) if n.is_power_of_two() => Some((logn, logn)),
+        (Op::Scatter, Algo::Binomial) => None, // root-dependent; see tests
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpr_stage_table_matches_paper() {
+        // §3.3.3: ring Allreduce needs N compressions and 2(N−1)
+        // decompressions; ReDoub needs log N of each.
+        assert_eq!(expected_cpr_stages(Op::Allreduce, Algo::Ring, 8), Some((8, 14)));
+        assert_eq!(
+            expected_cpr_stages(Op::Allreduce, Algo::RecursiveDoubling, 8),
+            Some((3, 3))
+        );
+        assert_eq!(expected_cpr_stages(Op::Allgather, Algo::Ring, 64), Some((1, 63)));
+        assert_eq!(
+            expected_cpr_stages(Op::ReduceScatter, Algo::Ring, 64),
+            Some((63, 63))
+        );
+        assert_eq!(expected_cpr_stages(Op::Allreduce, Algo::Ring, 1), Some((0, 0)));
+    }
+}

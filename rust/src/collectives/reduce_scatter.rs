@@ -1,0 +1,224 @@
+//! Ring Reduce_scatter.
+//!
+//! The bandwidth-optimal large-message algorithm (§3.2.3): the input is
+//! split into N chunks; each chunk travels the ring for N−1 steps,
+//! accumulating every rank's contribution, and finishes at its owner.
+//!
+//! With compression enabled this is the expensive case the paper
+//! characterizes: **N−1 compressions and N−1 decompressions per rank**,
+//! each over a D/N-sized chunk — small chunks at scale ⇒ the GPU
+//! utilization floor dominates (Fig. 3 / §3.2.3).
+
+use crate::coordinator::{DeviceBuf, Payload, RankCtx};
+use crate::error::Result;
+use crate::gpu::StreamId;
+use crate::sim::VirtTime;
+
+use super::chunking::Chunks;
+
+/// Tag base for reduce-scatter rounds.
+const TAG_RS: u64 = 0x5253_0000;
+
+/// Ring Reduce_scatter of `input`; rank `r` returns the fully-reduced
+/// chunk `r`. The returned [`VirtTime`] is when the chunk is ready on
+/// device (callers composing Allreduce chain it into the Allgather).
+pub fn reduce_scatter_ring_at(
+    ctx: &mut RankCtx,
+    input: DeviceBuf,
+    ready: VirtTime,
+) -> Result<(DeviceBuf, VirtTime)> {
+    let n = ctx.nranks();
+    let r = ctx.rank();
+    if n == 1 {
+        return Ok((input, ready));
+    }
+    let chunks = Chunks::new(input.elems(), n);
+    // Current accumulated value of each chunk this rank has touched.
+    let mut acc: Vec<DeviceBuf> = (0..n).map(|i| input.slice(chunks.range(i))).collect();
+    // Per-chunk device-ready timestamps.
+    let mut acc_ready: Vec<VirtTime> = vec![ready; n];
+
+    let next = (r + 1) % n;
+    let prev = (r + n - 1) % n;
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(0)
+    } else {
+        StreamId::Default
+    };
+
+    for s in 1..n {
+        let send_idx = (r + n - s) % n;
+        let recv_idx = (r + n - s - 1) % n;
+        // Send the current value of chunk send_idx to the next rank.
+        if ctx.compression_enabled() {
+            let (c, t) = ctx.compress(stream, &acc[send_idx], acc_ready[send_idx]);
+            ctx.send(next, TAG_RS + s as u64, Payload::Comp(c), t);
+            let (cin, t_in) = ctx.recv_comp(prev, TAG_RS + s as u64);
+            let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+            let dep = t_dec.join(acc_ready[recv_idx]);
+            let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &dec, dep);
+            acc[recv_idx] = sum;
+            acc_ready[recv_idx] = t_sum;
+        } else {
+            ctx.send(
+                next,
+                TAG_RS + s as u64,
+                Payload::Raw(acc[send_idx].clone()),
+                acc_ready[send_idx],
+            );
+            let (bin, t_in) = ctx.recv_raw(prev, TAG_RS + s as u64);
+            let dep = t_in.join(acc_ready[recv_idx]);
+            let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &bin, dep);
+            acc[recv_idx] = sum;
+            acc_ready[recv_idx] = t_sum;
+        }
+    }
+    let out_ready = acc_ready[r];
+    Ok((acc.swap_remove(r), out_ready))
+}
+
+/// [`reduce_scatter_ring_at`] from time zero (standalone collective).
+pub fn reduce_scatter_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let now = ctx.now();
+    let (out, t) = reduce_scatter_ring_at(ctx, input, now)?;
+    // Materialize: the op completes when the chunk is device-ready.
+    if ctx.policy().overlap {
+        let _ = t;
+        ctx.sync_device();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::testkit::Pcg32;
+
+    fn inputs_real(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::new(seed, r as u64);
+                DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+            })
+            .collect()
+    }
+
+    fn expected_sums(inputs: &[DeviceBuf]) -> Vec<f32> {
+        let d = inputs[0].elems();
+        let mut out = vec![0.0f32; d];
+        for b in inputs {
+            for (o, v) in out.iter_mut().zip(b.as_real()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn uncompressed_ring_rs_computes_exact_sums() {
+        let n = 8;
+        let d = 64;
+        let inputs = inputs_real(n, d, 42);
+        let expect = expected_sums(&inputs);
+        let spec = ClusterSpec::new(n, ExecPolicy::nccl());
+        let report = run_collective(&spec, inputs, &|ctx, input| {
+            reduce_scatter_ring(ctx, input)
+        })
+        .unwrap();
+        let chunks = Chunks::new(d, n);
+        for r in 0..n {
+            let got = report.outputs[r].as_real();
+            let want = &expect[chunks.range(r)];
+            for (a, b) in got.iter().zip(want) {
+                assert!((a - b).abs() < 1e-4, "rank {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_ring_rs_within_stacked_error_bound() {
+        let n = 8;
+        let d = 256;
+        let eb = 1e-3;
+        let inputs = inputs_real(n, d, 7);
+        let expect = expected_sums(&inputs);
+        let spec = ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(eb);
+        let report = run_collective(&spec, inputs, &|ctx, input| {
+            reduce_scatter_ring(ctx, input)
+        })
+        .unwrap();
+        // Error stacking: each of the N−1 hops adds ≤ 2eb (compress +
+        // reduce of decompressed values) — linear bound, loose.
+        let bound = (2 * n) as f32 * eb as f32;
+        let chunks = Chunks::new(d, n);
+        for r in 0..n {
+            let got = report.outputs[r].as_real();
+            let want = &expect[chunks.range(r)];
+            for (a, b) in got.iter().zip(want) {
+                assert!((a - b).abs() < bound, "rank {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rs_ring_cpr_counts_match_paper() {
+        let n = 8;
+        let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(1 << 16)).collect();
+        let spec = ClusterSpec::new(n, ExecPolicy::gzccl());
+        let report = run_collective(&spec, inputs, &|ctx, input| {
+            reduce_scatter_ring(ctx, input)
+        })
+        .unwrap();
+        for c in &report.counters {
+            assert_eq!(c.compress_calls, n - 1);
+            assert_eq!(c.decompress_calls, n - 1);
+            assert_eq!(c.reduce_calls, n - 1);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let spec = ClusterSpec::new(1, ExecPolicy::gzccl());
+        let report = run_collective(
+            &spec,
+            vec![DeviceBuf::Real(vec![1.0, 2.0])],
+            &|ctx, input| reduce_scatter_ring(ctx, input),
+        )
+        .unwrap();
+        assert_eq!(report.outputs[0].as_real(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn compression_reduces_wire_bytes() {
+        let n = 4;
+        let d = 1 << 20;
+        let smooth: Vec<DeviceBuf> = (0..n)
+            .map(|r| {
+                DeviceBuf::Real(
+                    (0..d)
+                        .map(|i| ((i + r * 17) as f32 * 1e-5).sin())
+                        .collect(),
+                )
+            })
+            .collect();
+        let base = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::nccl()),
+            smooth.clone(),
+            &|ctx, input| reduce_scatter_ring(ctx, input),
+        )
+        .unwrap();
+        let gz = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(1e-4),
+            smooth,
+            &|ctx, input| reduce_scatter_ring(ctx, input),
+        )
+        .unwrap();
+        assert!(
+            gz.total_wire_bytes() < base.total_wire_bytes() / 4,
+            "gz {} vs base {}",
+            gz.total_wire_bytes(),
+            base.total_wire_bytes()
+        );
+    }
+}

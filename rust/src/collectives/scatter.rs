@@ -1,0 +1,407 @@
+//! Binomial-tree Scatter — including gZ-Scatter (Fig. 5).
+//!
+//! The root holds N blocks; a binomial tree distributes them in log N
+//! rounds (the subtree rooted at relative rank v with receive-mask m
+//! covers blocks [v, v+m)).
+//!
+//! gZ-Scatter (§3.3.4): the root compresses every block *individually*
+//! (a whole-data compression could not be split: compressed streams
+//! are not block-addressable and block sizes are data-dependent) with
+//! the **multi-stream** kernel batch, synchronizes once to learn the
+//! compressed sizes/offsets, packs the streams contiguously with async
+//! device copies, and distributes. Intermediate ranks forward
+//! compressed sub-ranges verbatim; each rank decompresses only its own
+//! block on a non-default stream. Compression thus happens exactly once
+//! per block, and every kernel is batched for utilization.
+//!
+//! The CPRP2P comparison path instead re-compresses on every tree hop
+//! (fixed-rate), which is what makes it slow and error-stacking.
+
+use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
+use crate::error::Result;
+use crate::gpu::StreamId;
+use crate::sim::VirtTime;
+
+use super::chunking::Chunks;
+
+const TAG_SC: u64 = 0x5343_0000;
+const TAG_SC_META: u64 = 0x5343_4D00;
+
+/// Does this policy re-compress on every hop (CPRP2P) rather than
+/// compress-once-at-root (gZCCL / C-Coll data-movement framework)?
+fn per_hop_recompress(ctx: &RankCtx) -> bool {
+    ctx.policy().compression == CompressionMode::FixedRate
+}
+
+/// Binomial-tree Scatter from root 0. `input` is the full vector on the
+/// root (ignored elsewhere); every rank returns its own block of the
+/// `Chunks::new(total_elems, n)` layout.
+pub fn scatter_binomial(
+    ctx: &mut RankCtx,
+    input: DeviceBuf,
+    total_elems: usize,
+) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let _me = ctx.rank();
+    let chunks = Chunks::new(total_elems, n);
+    if n == 1 {
+        return Ok(input);
+    }
+
+    if ctx.compression_enabled() && !per_hop_recompress(ctx) {
+        scatter_gz(ctx, input, chunks)
+    } else if ctx.compression_enabled() {
+        scatter_cprp2p(ctx, input, chunks)
+    } else {
+        scatter_raw(ctx, input, chunks)
+    }
+}
+
+/// Public re-export of the tree layout for sibling modules (bcast).
+pub fn tree_position_pub(me: usize, n: usize) -> (usize, Option<usize>) {
+    tree_position(me, n)
+}
+
+/// Receive-phase bookkeeping: (receive mask, parent) for `me`; the root
+/// gets (pof2 ≥ n, None).
+fn tree_position(me: usize, n: usize) -> (usize, Option<usize>) {
+    if me == 0 {
+        let mut m = 1;
+        while m < n {
+            m <<= 1;
+        }
+        (m, None)
+    } else {
+        let mask = 1usize << me.trailing_zeros();
+        (mask, Some(me - mask))
+    }
+}
+
+/// The subtree block range [me, me+mask) clipped to n.
+fn subtree(me: usize, mask: usize, n: usize) -> std::ops::Range<usize> {
+    me..(me + mask).min(n)
+}
+
+// ---------------------------------------------------------------------
+// Uncompressed baseline (NCCL-class raw tree / Cray MPI CPU-centric).
+// ---------------------------------------------------------------------
+fn scatter_raw(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    let (mask, parent) = tree_position(me, n);
+
+    // Blocks this rank holds (index range within [0, n)).
+    let (mut held, mut held_t): (Vec<Option<DeviceBuf>>, VirtTime) = if me == 0 {
+        (
+            (0..n).map(|i| Some(input.slice(chunks.range(i)))).collect(),
+            ctx.now(),
+        )
+    } else {
+        let (batch, t) = ctx.recv_raw(parent.unwrap(), TAG_SC + me as u64);
+        let mut held: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
+        let range = subtree(me, mask, n);
+        let layout = Chunks::new(batch.elems(), range.len());
+        for (slot, i) in range.clone().enumerate() {
+            held[i] = Some(batch.slice(layout.range(slot)));
+        }
+        (held, t)
+    };
+
+    // Send phase: halve the subtree.
+    let mut m = mask >> 1;
+    while m > 0 {
+        let dst = me + m;
+        if dst < n {
+            let range = subtree(dst, m, n);
+            let parts: Vec<DeviceBuf> = range
+                .clone()
+                .map(|i| held[i].take().expect("missing block to forward"))
+                .collect();
+            let batch = DeviceBuf::concat(&parts);
+            ctx.send(dst, TAG_SC + dst as u64, Payload::Raw(batch), held_t);
+        }
+        m >>= 1;
+    }
+    held_t = held_t.join(ctx.now());
+    let _ = held_t;
+    Ok(held[me].take().expect("own block missing"))
+}
+
+// ---------------------------------------------------------------------
+// gZ-Scatter (Fig. 5): multi-stream compress at root, pack, forward
+// compressed, decompress own block only.
+// ---------------------------------------------------------------------
+fn scatter_gz(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    let (mask, parent) = tree_position(me, n);
+    let dstream = StreamId::NonDefault(0);
+
+    let mut held: Vec<Option<CompBuf>> = (0..n).map(|_| None).collect();
+    let held_t;
+
+    if me == 0 {
+        // Multi-stream compression of all blocks (one batch).
+        let blocks: Vec<DeviceBuf> = (0..n).map(|i| input.slice(chunks.range(i))).collect();
+        let now = ctx.now();
+        let (comp, t_c) = ctx.compress_multistream(&blocks, now);
+        // Host-synchronize to learn the compressed sizes/offsets.
+        ctx.sync_device();
+        // Share the size table with the tree (small Meta message ahead
+        // of each data send).
+        let sizes: Vec<u64> = comp.iter().map(|c| c.bytes() as u64).collect();
+        // Pack the per-stream outputs contiguously (async memcpys).
+        let (_total, t_pack) = ctx.pack_d2d(&comp, t_c);
+        for (i, c) in comp.into_iter().enumerate() {
+            held[i] = Some(c);
+        }
+        held_t = t_pack;
+        // Kick off metadata sends to direct children.
+        let mut m = mask >> 1;
+        while m > 0 {
+            let dst = m; // root's children are at relative ranks m
+            if dst < n {
+                ctx.send(
+                    dst,
+                    TAG_SC_META + dst as u64,
+                    Payload::Meta(sizes.clone()),
+                    ctx.now(),
+                );
+            }
+            m >>= 1;
+        }
+    } else {
+        // Sizes first (needed to address the packed batch), then data.
+        let (_sizes, _tm) = ctx.recv_meta(parent.unwrap(), TAG_SC_META + me as u64);
+        let (batch, t) = ctx.recv_batch(parent.unwrap(), TAG_SC + me as u64);
+        let range = subtree(me, mask, n);
+        for (slot, i) in range.clone().enumerate() {
+            held[i] = Some(batch[slot].clone());
+        }
+        held_t = t;
+        // Forward the size table to children.
+        let sizes = _sizes;
+        let mut m = mask >> 1;
+        while m > 0 {
+            let dst = me + m;
+            if dst < n {
+                ctx.send(
+                    dst,
+                    TAG_SC_META + dst as u64,
+                    Payload::Meta(sizes.clone()),
+                    ctx.now(),
+                );
+            }
+            m >>= 1;
+        }
+    }
+
+    // Send compressed sub-ranges down the tree (forward verbatim).
+    let mut m = mask >> 1;
+    while m > 0 {
+        let dst = me + m;
+        if dst < n {
+            let range = subtree(dst, m, n);
+            let parts: Vec<CompBuf> = range
+                .clone()
+                .map(|i| held[i].take().expect("missing compressed block"))
+                .collect();
+            ctx.send(dst, TAG_SC + dst as u64, Payload::Batch(parts), held_t);
+        }
+        m >>= 1;
+    }
+
+    // Decompress only our own block, on the non-default stream.
+    let mine = held[me].take().expect("own compressed block missing");
+    let (out, _t) = ctx.decompress(dstream, &mine, held_t);
+    ctx.sync_device();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// CPRP2P: fixed-rate compression bolted onto every hop — decompress the
+// whole received range, re-compress every forwarded range.
+// ---------------------------------------------------------------------
+fn scatter_cprp2p(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    let (mask, parent) = tree_position(me, n);
+    let stream = StreamId::Default;
+
+    let mut held: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
+    let mut held_t = ctx.now();
+
+    if me == 0 {
+        for i in 0..n {
+            held[i] = Some(input.slice(chunks.range(i)));
+        }
+    } else {
+        let (cin, t_in) = ctx.recv_comp(parent.unwrap(), TAG_SC + me as u64);
+        // Decompress the whole range before anything can be forwarded.
+        let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+        let range = subtree(me, mask, n);
+        let layout = Chunks::new(dec.elems(), range.len());
+        for (slot, i) in range.clone().enumerate() {
+            held[i] = Some(dec.slice(layout.range(slot)));
+        }
+        held_t = t_dec;
+    }
+
+    let mut m = mask >> 1;
+    while m > 0 {
+        let dst = me + m;
+        if dst < n {
+            let range = subtree(dst, m, n);
+            let parts: Vec<DeviceBuf> = range
+                .clone()
+                .map(|i| held[i].take().expect("missing block"))
+                .collect();
+            let batch = DeviceBuf::concat(&parts);
+            // Re-compress this hop's payload (the CPRP2P tax).
+            let (c, t_c) = ctx.compress(stream, &batch, held_t);
+            ctx.send(dst, TAG_SC + dst as u64, Payload::Comp(c), t_c);
+        }
+        m >>= 1;
+    }
+    Ok(held[me].take().expect("own block missing"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::testkit::Pcg32;
+
+    fn scatter_inputs(n: usize, d: usize) -> (Vec<DeviceBuf>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(31);
+        let full = rng.uniform_vec(d, -1.0, 1.0);
+        let mut inputs = vec![DeviceBuf::Real(full.clone())];
+        for _ in 1..n {
+            inputs.push(DeviceBuf::Real(vec![]));
+        }
+        (inputs, full)
+    }
+
+    fn check_scatter(n: usize, d: usize, policy: ExecPolicy, tol: f32) {
+        let (inputs, full) = scatter_inputs(n, d);
+        let report = run_collective(&ClusterSpec::new(n, policy), inputs, &move |ctx, input| {
+            scatter_binomial(ctx, input, d)
+        })
+        .unwrap();
+        let chunks = Chunks::new(d, n);
+        for r in 0..n {
+            let got = report.outputs[r].as_real();
+            let want = &full[chunks.range(r)];
+            assert_eq!(got.len(), want.len(), "rank {r} block size");
+            for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                assert!((a - b).abs() <= tol, "rank {r} elem {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn raw_scatter_exact_various_n() {
+        for n in [2usize, 3, 4, 7, 8, 16] {
+            check_scatter(n, 256, ExecPolicy::nccl(), 0.0);
+        }
+    }
+
+    #[test]
+    fn cray_cpu_centric_scatter_exact() {
+        check_scatter(8, 128, ExecPolicy::cray_mpi(), 0.0);
+    }
+
+    #[test]
+    fn gz_scatter_single_eb_error() {
+        // Compress-once-at-root: each block sees exactly one
+        // compression regardless of tree depth.
+        for n in [4usize, 8, 13] {
+            check_scatter(n, 512, ExecPolicy::gzccl(), 1.1e-4);
+        }
+    }
+
+    #[test]
+    fn cprp2p_scatter_error_grows_with_depth() {
+        // Values in [-1,1]: fixed-rate with 8 bits gives per-hop error
+        // ~1/127 · blockmax; depth log2(8)=3 hops stack.
+        check_scatter(8, 256, ExecPolicy::cprp2p(), 0.1);
+    }
+
+    #[test]
+    fn gz_scatter_compress_counts() {
+        let n = 8;
+        let d = 1 << 16;
+        let mut inputs = vec![DeviceBuf::Virtual(d)];
+        for _ in 1..n {
+            inputs.push(DeviceBuf::Virtual(0));
+        }
+        let report = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            inputs,
+            &move |ctx, input| scatter_binomial(ctx, input, d),
+        )
+        .unwrap();
+        // Root compresses each block exactly once (as one multi-stream
+        // batch of N kernels); everyone decompresses exactly one block.
+        assert_eq!(report.counters[0].compress_calls, n);
+        for (r, c) in report.counters.iter().enumerate() {
+            if r > 0 {
+                assert_eq!(c.compress_calls, 0, "non-root must not compress");
+            }
+            assert_eq!(c.decompress_calls, 1, "rank {r} decompresses own block");
+        }
+    }
+
+    #[test]
+    fn cprp2p_recompresses_along_the_tree() {
+        let n = 8;
+        let d = 1 << 16;
+        let mut inputs = vec![DeviceBuf::Virtual(d)];
+        for _ in 1..n {
+            inputs.push(DeviceBuf::Virtual(0));
+        }
+        let report = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::cprp2p()),
+            inputs,
+            &move |ctx, input| scatter_binomial(ctx, input, d),
+        )
+        .unwrap();
+        let total_cpr: usize = report.counters.iter().map(|c| c.compress_calls).sum();
+        // Every edge of the binomial tree compresses: n−1 edges.
+        assert_eq!(total_cpr, n - 1);
+        // Intermediate ranks decompress ranges they merely forward.
+        let total_dec: usize = report.counters.iter().map(|c| c.decompress_calls).sum();
+        assert_eq!(total_dec, n - 1);
+    }
+
+    #[test]
+    fn gz_scatter_faster_than_cprp2p() {
+        let n = 16;
+        let d = (64 << 20) / 4;
+        let mk = |_n: usize| -> Vec<DeviceBuf> {
+            let mut v = vec![DeviceBuf::Virtual(d)];
+            for _ in 1..n {
+                v.push(DeviceBuf::Virtual(0));
+            }
+            v
+        };
+        let gz = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::gzccl()),
+            mk(n),
+            &move |ctx, input| scatter_binomial(ctx, input, d),
+        )
+        .unwrap();
+        let cpr = run_collective(
+            &ClusterSpec::new(n, ExecPolicy::cprp2p()),
+            mk(n),
+            &move |ctx, input| scatter_binomial(ctx, input, d),
+        )
+        .unwrap();
+        assert!(
+            gz.makespan.as_secs() < cpr.makespan.as_secs(),
+            "gz {} vs cprp2p {}",
+            gz.makespan,
+            cpr.makespan
+        );
+    }
+}

@@ -1,0 +1,333 @@
+//! Bit-packing utilities: fixed-width integer packing and zigzag coding.
+//!
+//! cuSZp's encode stage stores, per block, the maximum significant bit
+//! width of the (zigzagged) quantization deltas and then packs every
+//! delta at exactly that width. These helpers implement that layout.
+
+/// Zigzag-encode a signed 32-bit integer into an unsigned one
+/// (0, -1, 1, -2, 2 → 0, 1, 2, 3, 4) so small-magnitude values have
+/// small unsigned representations.
+#[inline]
+pub fn zigzag(v: i32) -> u32 {
+    ((v << 1) ^ (v >> 31)) as u32
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u32) -> i32 {
+    ((v >> 1) as i32) ^ -((v & 1) as i32)
+}
+
+/// Number of bits needed to represent `v` (0 needs 0 bits).
+#[inline]
+pub fn bit_width(v: u32) -> u32 {
+    32 - v.leading_zeros()
+}
+
+/// A little-endian bit writer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already used in the last byte (0..8).
+    used: u32,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `width` bits of `v`.
+    pub fn put(&mut self, v: u32, width: u32) {
+        debug_assert!(width <= 32);
+        debug_assert!(width == 32 || v < (1u64 << width) as u32);
+        let mut remaining = width;
+        let mut val = v as u64;
+        while remaining > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let space = 8 - self.used;
+            let take = remaining.min(space);
+            let last = self.buf.last_mut().unwrap();
+            *last |= ((val & ((1u64 << take) - 1)) as u8) << self.used;
+            val >>= take;
+            self.used = (self.used + take) % 8;
+            remaining -= take;
+        }
+    }
+
+    /// Finish, returning the packed bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far (including the partial last byte).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// A little-endian bit reader over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Absolute bit cursor.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `width` bits (little-endian), or `None` past the end.
+    pub fn get(&mut self, width: u32) -> Option<u32> {
+        debug_assert!(width <= 32);
+        if width == 0 {
+            return Some(0);
+        }
+        if self.pos + width as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut out: u64 = 0;
+        let mut got = 0u32;
+        while got < width {
+            let byte = self.buf[self.pos / 8] as u64;
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = (width - got).min(avail);
+            let bits = (byte >> off) & ((1u64 << take) - 1);
+            out |= bits << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Some(out as u32)
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Advance the cursor to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        self.pos = self.pos.div_ceil(8) * 8;
+    }
+}
+
+/// Pack `values` at fixed `width` bits each. `width == 0` packs nothing.
+pub fn pack_fixed(values: &[u32], width: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity((values.len() * width as usize).div_ceil(8));
+    pack_fixed_into(values, width, &mut out);
+    out
+}
+
+/// Append `values` packed at fixed `width` bits (≤ 32) to `out`,
+/// starting at a byte boundary. Hot path of the cuSZp-like encoder: a
+/// u64 shift-accumulator instead of per-bit bookkeeping.
+pub fn pack_fixed_into(values: &[u32], width: u32, out: &mut Vec<u8>) {
+    debug_assert!(width <= 32);
+    if width == 0 {
+        return;
+    }
+    out.reserve((values.len() * width as usize).div_ceil(8));
+    let mut acc: u64 = 0;
+    let mut bits: u32 = 0;
+    for &v in values {
+        debug_assert!(width == 32 || (v as u64) < (1u64 << width));
+        acc |= (v as u64) << bits;
+        bits += width;
+        while bits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            bits -= 8;
+        }
+    }
+    if bits > 0 {
+        out.push(acc as u8);
+    }
+}
+
+/// Unpack `count` values of `width` bits from `buf` into `out`,
+/// returning the number of bytes consumed, or `None` on underrun.
+/// Accumulator-based hot path of the decoder.
+pub fn unpack_fixed_into(
+    buf: &[u8],
+    count: usize,
+    width: u32,
+    out: &mut Vec<u32>,
+) -> Option<usize> {
+    debug_assert!(width <= 32);
+    if width == 0 {
+        out.extend(std::iter::repeat(0).take(count));
+        return Some(0);
+    }
+    let nbytes = (count * width as usize).div_ceil(8);
+    if buf.len() < nbytes {
+        return None;
+    }
+    out.reserve(count);
+    let mask: u64 = if width == 32 { u64::MAX >> 32 } else { (1u64 << width) - 1 };
+    let mut acc: u64 = 0;
+    let mut bits: u32 = 0;
+    let mut pos = 0usize;
+    for _ in 0..count {
+        while bits < width {
+            acc |= (buf[pos] as u64) << bits;
+            pos += 1;
+            bits += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= width;
+        bits -= width;
+    }
+    Some(nbytes)
+}
+
+/// Unpack `count` values of `width` bits each from `buf`.
+pub fn unpack_fixed(buf: &[u8], count: usize, width: u32) -> Option<Vec<u32>> {
+    let mut r = BitReader::new(buf);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(r.get(width)?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Cases};
+
+    #[test]
+    fn zigzag_round_trips() {
+        for v in [-1000, -2, -1, 0, 1, 2, 1000, i32::MIN / 2, i32::MAX / 2] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_orders_by_magnitude() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+    }
+
+    #[test]
+    fn bit_width_basics() {
+        assert_eq!(bit_width(0), 0);
+        assert_eq!(bit_width(1), 1);
+        assert_eq!(bit_width(2), 2);
+        assert_eq!(bit_width(255), 8);
+        assert_eq!(bit_width(256), 9);
+        assert_eq!(bit_width(u32::MAX), 32);
+    }
+
+    #[test]
+    fn writer_reader_round_trip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xFFFF, 16);
+        w.put(0, 0);
+        w.put(1, 1);
+        w.put(0xDEADBEEF, 32);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3), Some(0b101));
+        assert_eq!(r.get(16), Some(0xFFFF));
+        assert_eq!(r.get(0), Some(0));
+        assert_eq!(r.get(1), Some(1));
+        assert_eq!(r.get(32), Some(0xDEADBEEF));
+    }
+
+    #[test]
+    fn reader_detects_overrun() {
+        let bytes = vec![0xAB];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.get(8).is_some());
+        assert!(r.get(1).is_none());
+    }
+
+    #[test]
+    fn pack_unpack_fixed_round_trip() {
+        let vals: Vec<u32> = (0..100).map(|i| i % 13).collect();
+        let packed = pack_fixed(&vals, 4);
+        assert_eq!(packed.len(), 50);
+        let back = unpack_fixed(&packed, 100, 4).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn pack_width_zero_is_empty() {
+        let vals = vec![0u32; 64];
+        assert!(pack_fixed(&vals, 0).is_empty());
+        assert_eq!(unpack_fixed(&[], 64, 0).unwrap(), vals);
+    }
+
+    #[test]
+    fn align_byte_skips_to_boundary() {
+        let bytes = vec![0xFF, 0x01];
+        let mut r = BitReader::new(&bytes);
+        r.get(3);
+        r.align_byte();
+        assert_eq!(r.bit_pos(), 8);
+        assert_eq!(r.get(8), Some(0x01));
+    }
+
+    #[test]
+    fn prop_pack_round_trip_random() {
+        forall(
+            Cases::n(50),
+            |rng| {
+                let width = rng.range_u64(0, 32) as u32;
+                let n = rng.range_usize(0, 200);
+                let vals: Vec<u32> = (0..n)
+                    .map(|_| {
+                        if width == 0 {
+                            0
+                        } else if width == 32 {
+                            rng.next_u32()
+                        } else {
+                            rng.next_u32() & ((1u32 << width) - 1)
+                        }
+                    })
+                    .collect();
+                (width, vals)
+            },
+            |(width, vals)| {
+                let packed = pack_fixed(vals, *width);
+                let back = unpack_fixed(&packed, vals.len(), *width)
+                    .ok_or("unpack failed".to_string())?;
+                if &back == vals {
+                    Ok(())
+                } else {
+                    Err("round trip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_zigzag_round_trip_random() {
+        forall(
+            Cases::n(100),
+            |rng| rng.next_u32() as i32,
+            |v| {
+                if unzigzag(zigzag(*v)) == *v {
+                    Ok(())
+                } else {
+                    Err(format!("zigzag broke {v}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,253 @@
+//! Fixed-rate (1D-ZFP-class) compressor — the CPRP2P baseline.
+//!
+//! Per 32-value block: store the block's max-magnitude as an f32 scale,
+//! then every value as a signed fixed-point fraction of that scale at a
+//! fixed `rate` bits. The output size is *exactly known* from the input
+//! length (the property prior work [30, 31] exploits to pre-post
+//! receives), but the pointwise error is `≈ blockmax / 2^(rate−1)` —
+//! proportional to local magnitude, i.e. **unbounded** in absolute
+//! terms. The paper's accuracy-aware design rejects exactly this
+//! trade-off; we implement it to reproduce the CPRP2P comparisons.
+
+use crate::error::{Error, Result};
+
+use super::bitpack::{pack_fixed, unpack_fixed, unzigzag, zigzag};
+use super::Compressor;
+
+/// Values per block.
+pub const BLOCK: usize = 32;
+
+/// Stream magic: "GZFR".
+const MAGIC: [u8; 4] = *b"GZFR";
+/// Header: magic(4) + rate(1) + count(8).
+const HEADER: usize = 13;
+
+/// Fixed-rate compressor at `rate` bits per value (2..=28).
+#[derive(Debug, Clone, Copy)]
+pub struct FixedRate {
+    rate: u32,
+}
+
+impl FixedRate {
+    /// Construct with `rate` bits per value.
+    pub fn new(rate: u32) -> Self {
+        assert!((2..=28).contains(&rate), "rate must be in 2..=28");
+        FixedRate { rate }
+    }
+
+    /// Bits per value.
+    pub fn rate(&self) -> u32 {
+        self.rate
+    }
+
+    fn block_bytes(&self, count: usize) -> usize {
+        4 + (count * self.rate as usize).div_ceil(8)
+    }
+}
+
+impl Compressor for FixedRate {
+    fn name(&self) -> &'static str {
+        "fixed-rate(zfp1d-like)"
+    }
+
+    fn compress(&self, data: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.fixed_output_size(data.len()).unwrap());
+        out.extend_from_slice(&MAGIC);
+        out.push(self.rate as u8);
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        // Max representable quantized magnitude.
+        let qmax = ((1u64 << (self.rate - 1)) - 1) as f64;
+        for block in data.chunks(BLOCK) {
+            let scale = block
+                .iter()
+                .map(|x| if x.is_finite() { x.abs() } else { 0.0 })
+                .fold(0.0f32, f32::max);
+            out.extend_from_slice(&scale.to_le_bytes());
+            let codes: Vec<u32> = block
+                .iter()
+                .map(|&x| {
+                    let v = if scale > 0.0 && x.is_finite() {
+                        ((x as f64 / scale as f64) * qmax).round() as i32
+                    } else {
+                        0
+                    };
+                    zigzag(v.clamp(-(qmax as i32), qmax as i32))
+                })
+                .collect();
+            out.extend_from_slice(&pack_fixed(&codes, self.rate));
+        }
+        out
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Vec<f32>> {
+        if stream.len() < HEADER || stream[0..4] != MAGIC {
+            return Err(Error::compress("fixed-rate: bad magic"));
+        }
+        let rate = stream[4] as u32;
+        if !(2..=28).contains(&rate) {
+            return Err(Error::compress("fixed-rate: bad rate"));
+        }
+        let n = u64::from_le_bytes(stream[5..13].try_into().unwrap()) as usize;
+        let qmax = ((1u64 << (rate - 1)) - 1) as f64;
+        let mut out = Vec::with_capacity(n);
+        let mut cursor = HEADER;
+        let mut remaining = n;
+        while remaining > 0 {
+            let count = remaining.min(BLOCK);
+            let scale_bytes = stream
+                .get(cursor..cursor + 4)
+                .ok_or_else(|| Error::compress("fixed-rate: truncated scale"))?;
+            let scale = f32::from_le_bytes(scale_bytes.try_into().unwrap());
+            cursor += 4;
+            let nbytes = (count * rate as usize).div_ceil(8);
+            let packed = stream
+                .get(cursor..cursor + nbytes)
+                .ok_or_else(|| Error::compress("fixed-rate: truncated block"))?;
+            cursor += nbytes;
+            let codes = unpack_fixed(packed, count, rate)
+                .ok_or_else(|| Error::compress("fixed-rate: bit underrun"))?;
+            for z in codes {
+                let v = unzigzag(z) as f64 / qmax;
+                out.push((v * scale as f64) as f32);
+            }
+            remaining -= count;
+        }
+        Ok(out)
+    }
+
+    fn is_error_bounded(&self) -> bool {
+        false
+    }
+
+    fn error_bound(&self) -> Option<f64> {
+        None
+    }
+
+    fn fixed_output_size(&self, n: usize) -> Option<usize> {
+        let full = n / BLOCK;
+        let rem = n % BLOCK;
+        let mut size = HEADER + full * self.block_bytes(BLOCK);
+        if rem > 0 {
+            size += self.block_bytes(rem);
+        }
+        Some(size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, max_abs_diff, Cases, Pcg32};
+
+    #[test]
+    fn output_size_is_exactly_predicted() {
+        let c = FixedRate::new(8);
+        for n in [0usize, 1, 31, 32, 33, 1000, 4096] {
+            let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let stream = c.compress(&data);
+            assert_eq!(stream.len(), c.fixed_output_size(n).unwrap(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn round_trip_relative_error() {
+        let mut rng = Pcg32::seeded(5);
+        let data = rng.uniform_vec(2048, -1.0, 1.0);
+        let c = FixedRate::new(12);
+        let back = c.decompress(&c.compress(&data)).unwrap();
+        // Error ≤ blockmax / 2^(rate-1); blockmax ≤ 1 here.
+        assert!(max_abs_diff(&back, &data) <= 1.0 / 2048.0 + 1e-6);
+    }
+
+    #[test]
+    fn error_scales_with_magnitude_unbounded() {
+        // The accuracy hazard: same rate, 1e6× the magnitude → ~1e6×
+        // the absolute error. An error-bounded compressor would keep
+        // absolute error fixed.
+        let mut rng = Pcg32::seeded(6);
+        let small = rng.uniform_vec(1024, -1.0, 1.0);
+        let big: Vec<f32> = small.iter().map(|x| x * 1e6).collect();
+        let c = FixedRate::new(8);
+        let e_small = max_abs_diff(&c.decompress(&c.compress(&small)).unwrap(), &small);
+        let e_big = max_abs_diff(&c.decompress(&c.compress(&big)).unwrap(), &big);
+        assert!(e_big > 1e4 * e_small, "e_small={e_small} e_big={e_big}");
+    }
+
+    #[test]
+    fn compression_ratio_is_fixed() {
+        let c = FixedRate::new(8);
+        let n = 32 * 1000;
+        let size = c.fixed_output_size(n).unwrap();
+        // 32 f32 (128 B) → 4 + 32 B = 36 B per block ⇒ ratio ≈ 3.56.
+        let r = super::super::ratio(n * 4, size);
+        assert!((3.0..4.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn zero_and_constant_blocks() {
+        let c = FixedRate::new(8);
+        let zeros = vec![0.0f32; 100];
+        assert_eq!(c.decompress(&c.compress(&zeros)).unwrap(), zeros);
+        let konst = vec![7.5f32; 64];
+        let back = c.decompress(&c.compress(&konst)).unwrap();
+        assert!(max_abs_diff(&back, &konst) <= 7.5 / 127.0 + 1e-6);
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let c = FixedRate::new(8);
+        assert!(c.decompress(b"xx").is_err());
+        let mut s = c.compress(&[1.0f32; 40]);
+        s.truncate(s.len() - 2);
+        assert!(c.decompress(&s).is_err());
+    }
+
+    #[test]
+    fn not_error_bounded_reported() {
+        let c = FixedRate::new(8);
+        assert!(!c.is_error_bounded());
+        assert!(c.error_bound().is_none());
+        assert!(c.fixed_output_size(100).is_some());
+    }
+
+    #[test]
+    fn prop_round_trip_and_size() {
+        forall(
+            Cases::n(40),
+            |rng| {
+                let n = rng.range_usize(0, 500);
+                let rate = *rng.choose(&[4u32, 8, 12, 16]);
+                let scale = rng.range_f32(0.01, 1000.0);
+                let data: Vec<f32> =
+                    (0..n).map(|_| rng.next_gaussian() * scale).collect();
+                (rate, data)
+            },
+            |(rate, data)| {
+                let c = FixedRate::new(*rate);
+                let stream = c.compress(data);
+                if stream.len() != c.fixed_output_size(data.len()).unwrap() {
+                    return Err("size prediction wrong".into());
+                }
+                let back = c.decompress(&stream).map_err(|e| e.to_string())?;
+                if back.len() != data.len() {
+                    return Err("length mismatch".into());
+                }
+                // Per-block relative bound.
+                for (blk, (orig, rec)) in data
+                    .chunks(BLOCK)
+                    .zip(back.chunks(BLOCK))
+                    .enumerate()
+                {
+                    let bmax = orig.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+                    let tol = bmax / ((1u64 << (rate - 1)) - 1) as f32 + 1e-6;
+                    for (a, b) in orig.iter().zip(rec.iter()) {
+                        if (a - b).abs() > tol {
+                            return Err(format!("block {blk}: |{a}-{b}| > {tol}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

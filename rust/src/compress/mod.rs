@@ -1,0 +1,71 @@
+//! Lossy compressors.
+//!
+//! Two real compressors, matching the two families the paper contrasts:
+//!
+//! * [`cuszp::CuszpLike`] — **error-bounded** (cuSZp-class): prequant +
+//!   integer 1D Lorenzo + per-block fixed-length bit packing. Output
+//!   size is data-dependent (unknown ahead of time); pointwise error is
+//!   guaranteed ≤ the absolute bound. This is what gZCCL uses.
+//! * [`fixed_rate::FixedRate`] — **fixed-rate** (1D-ZFP-class, the
+//!   CPRP2P baseline): per-block scaled truncation to a fixed bit
+//!   budget. Output size is known ahead of time; error is *unbounded*
+//!   (scales with block magnitude), which is exactly the accuracy
+//!   hazard the paper attributes to prior work.
+//!
+//! Both compress real bytes — compression ratios and accuracy results in
+//! the experiments are genuine, not modeled. Only GPU *timing* comes
+//! from the cost model ([`crate::gpu::KernelModel`]).
+
+pub mod bitpack;
+pub mod cuszp;
+pub mod fixed_rate;
+pub mod profile;
+
+pub use cuszp::CuszpLike;
+pub use fixed_rate::FixedRate;
+pub use profile::CompressionProfile;
+
+use crate::error::Result;
+
+/// A lossy floating-point compressor.
+pub trait Compressor: Send + Sync {
+    /// Human-readable name (used in reports).
+    fn name(&self) -> &'static str;
+
+    /// Compress `data` into a self-describing byte stream.
+    fn compress(&self, data: &[f32]) -> Vec<u8>;
+
+    /// Decompress a stream produced by [`Compressor::compress`].
+    fn decompress(&self, stream: &[u8]) -> Result<Vec<f32>>;
+
+    /// Whether the pointwise absolute error is guaranteed bounded.
+    fn is_error_bounded(&self) -> bool;
+
+    /// The absolute error bound, if [`Compressor::is_error_bounded`].
+    fn error_bound(&self) -> Option<f64>;
+
+    /// Exact output size for `n` input values, if pre-known (fixed-rate
+    /// compressors only — this property is what lets CPRP2P pre-post
+    /// receives, and what costs it bounded accuracy).
+    fn fixed_output_size(&self, n: usize) -> Option<usize>;
+}
+
+/// Compression ratio of a (raw, compressed) pair in bytes.
+pub fn ratio(raw_bytes: usize, compressed_bytes: usize) -> f64 {
+    if compressed_bytes == 0 {
+        f64::INFINITY
+    } else {
+        raw_bytes as f64 / compressed_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_basics() {
+        assert_eq!(ratio(100, 10), 10.0);
+        assert_eq!(ratio(100, 0), f64::INFINITY);
+    }
+}

@@ -1,0 +1,176 @@
+//! Typed cluster configuration → [`ClusterSpec`].
+
+use crate::coordinator::{ClusterSpec, ExecPolicy};
+use crate::error::{Error, Result};
+use crate::gpu::{GpuModel, KernelModel};
+use crate::net::{LinkModel, Topology};
+
+use super::toml::TomlDoc;
+
+/// Everything a run needs, with paper-testbed defaults. All fields can
+/// come from a TOML file and/or `key=value` overrides.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Total ranks (GPUs).
+    pub ranks: usize,
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// Variant name: gzccl | gpu-centric | ccoll | cprp2p | nccl | cray.
+    pub variant: String,
+    /// Absolute error bound.
+    pub error_bound: f64,
+    /// Internode bandwidth (Gbit/s, Slingshot-10 = 100).
+    pub internode_gbps: f64,
+    /// Internode latency (µs).
+    pub internode_lat_us: f64,
+    /// Intranode bandwidth (GB/s).
+    pub intranode_gbs: f64,
+    /// GPU compressor saturated throughput (GB/s).
+    pub compress_gbs: f64,
+    /// GPU decompressor saturated throughput (GB/s).
+    pub decompress_gbs: f64,
+    /// Compressor fixed-work floor (MB).
+    pub kernel_floor_mb: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            ranks: 64,
+            gpus_per_node: 4,
+            variant: "gzccl".into(),
+            error_bound: 1e-4,
+            internode_gbps: 100.0,
+            internode_lat_us: 15.0,
+            intranode_gbs: 200.0,
+            compress_gbs: 350.0,
+            decompress_gbs: 450.0,
+            kernel_floor_mb: 200.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Build from a parsed TOML document (missing keys → defaults).
+    pub fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ClusterConfig::default();
+        ClusterConfig {
+            ranks: doc.usize_or("cluster.ranks", d.ranks),
+            gpus_per_node: doc.usize_or("cluster.gpus_per_node", d.gpus_per_node),
+            variant: doc.str_or("cluster.variant", &d.variant).to_string(),
+            error_bound: doc.f64_or("compression.error_bound", d.error_bound),
+            internode_gbps: doc.f64_or("network.internode_gbps", d.internode_gbps),
+            internode_lat_us: doc.f64_or("network.internode_lat_us", d.internode_lat_us),
+            intranode_gbs: doc.f64_or("network.intranode_gbs", d.intranode_gbs),
+            compress_gbs: doc.f64_or("gpu.compress_gbs", d.compress_gbs),
+            decompress_gbs: doc.f64_or("gpu.decompress_gbs", d.decompress_gbs),
+            kernel_floor_mb: doc.f64_or("gpu.kernel_floor_mb", d.kernel_floor_mb),
+        }
+    }
+
+    /// Load from an optional file plus `key=value` overrides.
+    pub fn load(path: Option<&str>, overrides: &[String]) -> Result<Self> {
+        let mut doc = match path {
+            Some(p) => TomlDoc::parse(&std::fs::read_to_string(p)?)?,
+            None => TomlDoc::default(),
+        };
+        for o in overrides {
+            doc.set_override(o)?;
+        }
+        Ok(Self::from_doc(&doc))
+    }
+
+    /// Resolve the variant name to a policy.
+    pub fn policy(&self) -> Result<ExecPolicy> {
+        Ok(match self.variant.as_str() {
+            "gzccl" => ExecPolicy::gzccl(),
+            "gpu-centric" => ExecPolicy::gpu_centric_unoptimized(),
+            "ccoll" => ExecPolicy::ccoll(),
+            "cprp2p" => ExecPolicy::cprp2p(),
+            "nccl" => ExecPolicy::nccl(),
+            "cray" => ExecPolicy::cray_mpi(),
+            other => {
+                return Err(Error::config(format!(
+                    "unknown variant `{other}` (gzccl|gpu-centric|ccoll|cprp2p|nccl|cray)"
+                )))
+            }
+        })
+    }
+
+    /// Materialize a [`ClusterSpec`].
+    pub fn to_spec(&self) -> Result<ClusterSpec> {
+        let policy = self.policy()?;
+        let mut gpu = GpuModel::a100();
+        gpu.compress = KernelModel::new(
+            gpu.compress.launch,
+            self.kernel_floor_mb * 1e6,
+            self.compress_gbs * 1e9,
+        );
+        gpu.decompress = KernelModel::new(
+            gpu.decompress.launch,
+            self.kernel_floor_mb * 0.8 * 1e6,
+            self.decompress_gbs * 1e9,
+        );
+        let mut spec = ClusterSpec::new(self.ranks, policy).with_error_bound(self.error_bound);
+        spec.topo = Topology::new(self.ranks, self.gpus_per_node)?;
+        spec.gpu = gpu;
+        spec.internode = LinkModel::new(
+            self.internode_lat_us * 1e-6,
+            self.internode_gbps * 1e9 / 8.0,
+        );
+        spec.intranode = LinkModel::new(5e-6, self.intranode_gbs * 1e9);
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_a_valid_spec() {
+        let cfg = ClusterConfig::default();
+        let spec = cfg.to_spec().unwrap();
+        assert_eq!(spec.topo.ranks(), 64);
+        assert!((spec.internode.beta - 12.5e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn file_and_overrides_compose() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nranks = 8\nvariant = \"nccl\"\n[network]\ninternode_gbps = 200\n",
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_doc(&doc);
+        assert_eq!(cfg.ranks, 8);
+        assert_eq!(cfg.variant, "nccl");
+        let spec = cfg.to_spec().unwrap();
+        assert!((spec.internode.beta - 25e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn all_variants_resolve() {
+        for v in ["gzccl", "gpu-centric", "ccoll", "cprp2p", "nccl", "cray"] {
+            let cfg = ClusterConfig {
+                variant: v.into(),
+                ..Default::default()
+            };
+            assert!(cfg.policy().is_ok(), "{v}");
+        }
+        let bad = ClusterConfig {
+            variant: "mystery".into(),
+            ..Default::default()
+        };
+        assert!(bad.policy().is_err());
+    }
+
+    #[test]
+    fn kernel_knobs_propagate() {
+        let mut cfg = ClusterConfig::default();
+        cfg.compress_gbs = 100.0;
+        cfg.kernel_floor_mb = 10.0;
+        let spec = cfg.to_spec().unwrap();
+        assert!((spec.gpu.compress.beta - 100e9).abs() < 1.0);
+        assert!((spec.gpu.compress.n0 - 10e6).abs() < 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system.
+//!
+//! A TOML-subset parser (`toml.rs` — the vendored dependency set has no
+//! serde) plus typed cluster configuration that maps onto
+//! [`crate::coordinator::ClusterSpec`]. Supports the testbed presets
+//! the paper evaluates on and full per-parameter overrides from file or
+//! `key=value` CLI pairs.
+
+pub mod cluster;
+pub mod toml;
+
+pub use cluster::ClusterConfig;
+pub use toml::TomlDoc;

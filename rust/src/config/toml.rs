@@ -1,0 +1,229 @@
+//! A small TOML-subset parser: `[section]` headers, `key = value` with
+//! string / float / integer / boolean values, `#` comments. Flattened
+//! into dotted keys (`section.key`). Enough for cluster config files;
+//! intentionally not a full TOML implementation.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Any numeric literal (stored as f64).
+    Num(f64),
+    /// true/false.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// As f64, if numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As usize, if numeric and integral.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as usize),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened TOML document: dotted keys → values.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(Error::config(format!("line {line_no}: empty value")));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| Error::config(format!("line {line_no}: unterminated string")))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    raw.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| Error::config(format!("line {line_no}: bad value `{raw}`")))
+}
+
+impl TomlDoc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (i, line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match line.find('#') {
+                // Keep '#' inside quoted strings.
+                Some(pos) if !line[..pos].contains('"') => &line[..pos],
+                _ => line,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {line_no}: bad section")))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("line {line_no}: expected key = value")))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{}.{}", section, key.trim())
+            };
+            doc.values.insert(full_key, parse_value(value, line_no)?);
+        }
+        Ok(doc)
+    }
+
+    /// Set a dotted key from a `key=value` override string.
+    pub fn set_override(&mut self, pair: &str) -> Result<()> {
+        let (key, value) = pair
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("override `{pair}`: expected key=value")))?;
+        self.values
+            .insert(key.trim().to_string(), parse_value(value, 0)?);
+        Ok(())
+    }
+
+    /// Get a value by dotted key.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    /// f64 with a default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    /// usize with a default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    /// bool with a default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// string with a default.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Whether the document is empty.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# cluster layout
+ranks = 64
+[network]
+internode_gbps = 100.0
+name = "slingshot"
+shared_nic = false
+[gpu]
+compress_beta = 350e9
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.usize_or("ranks", 0), 64);
+        assert_eq!(doc.f64_or("network.internode_gbps", 0.0), 100.0);
+        assert_eq!(doc.str_or("network.name", ""), "slingshot");
+        assert!(!doc.bool_or("network.shared_nic", true));
+        assert_eq!(doc.f64_or("gpu.compress_beta", 0.0), 350e9);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(doc.is_empty());
+        assert_eq!(doc.usize_or("nope", 7), 7);
+        assert_eq!(doc.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut doc = TomlDoc::parse("a = 1\n").unwrap();
+        doc.set_override("a=2").unwrap();
+        doc.set_override("b.c=3.5").unwrap();
+        assert_eq!(doc.usize_or("a", 0), 2);
+        assert_eq!(doc.f64_or("b.c", 0.0), 3.5);
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.usize_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue =\n").is_err());
+        assert!(TomlDoc::parse("bad value\n").is_err());
+        let e = TomlDoc::parse("x = @@\n").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn comments_stripped_outside_strings() {
+        let doc = TomlDoc::parse("a = 5 # five\ns = \"has # inside\"\n").unwrap();
+        assert_eq!(doc.usize_or("a", 0), 5);
+        assert_eq!(doc.str_or("s", ""), "has # inside");
+    }
+}

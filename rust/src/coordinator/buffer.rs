@@ -1,0 +1,194 @@
+//! Device buffers: real or virtual payloads.
+//!
+//! Collective algorithms are written once and run in two modes:
+//!
+//! * **Real** — the buffer holds actual f32s; compression, reduction and
+//!   transfers move real bytes. Used for correctness/accuracy runs.
+//! * **Virtual** — only the element count is tracked. Used for the
+//!   paper-scale sweeps (512 ranks × 646 MB) where real payloads would
+//!   need hundreds of GB. Compressed sizes then come from a measured
+//!   [`crate::compress::CompressionProfile`].
+//!
+//! Mixing modes in one collective is a bug and panics loudly.
+
+/// A buffer resident on the (simulated) GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceBuf {
+    /// Real payload.
+    Real(Vec<f32>),
+    /// Size-only payload (element count).
+    Virtual(usize),
+}
+
+impl DeviceBuf {
+    /// Number of f32 elements.
+    pub fn elems(&self) -> usize {
+        match self {
+            DeviceBuf::Real(v) => v.len(),
+            DeviceBuf::Virtual(n) => *n,
+        }
+    }
+
+    /// Size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+
+    /// Whether this is a virtual (size-only) buffer.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, DeviceBuf::Virtual(_))
+    }
+
+    /// A zero-filled buffer in the same mode as `self`.
+    pub fn zeros_like(&self, elems: usize) -> DeviceBuf {
+        match self {
+            DeviceBuf::Real(_) => DeviceBuf::Real(vec![0.0; elems]),
+            DeviceBuf::Virtual(_) => DeviceBuf::Virtual(elems),
+        }
+    }
+
+    /// Copy out a sub-range (device-to-device slice).
+    pub fn slice(&self, range: std::ops::Range<usize>) -> DeviceBuf {
+        match self {
+            DeviceBuf::Real(v) => DeviceBuf::Real(v[range].to_vec()),
+            DeviceBuf::Virtual(n) => {
+                assert!(range.end <= *n, "virtual slice out of range");
+                DeviceBuf::Virtual(range.len())
+            }
+        }
+    }
+
+    /// Concatenate `parts` (all in the same mode).
+    pub fn concat(parts: &[DeviceBuf]) -> DeviceBuf {
+        assert!(!parts.is_empty());
+        if parts[0].is_virtual() {
+            DeviceBuf::Virtual(parts.iter().map(|p| p.elems()).sum())
+        } else {
+            let mut out = Vec::with_capacity(parts.iter().map(|p| p.elems()).sum());
+            for p in parts {
+                match p {
+                    DeviceBuf::Real(v) => out.extend_from_slice(v),
+                    DeviceBuf::Virtual(_) => panic!("mixed real/virtual concat"),
+                }
+            }
+            DeviceBuf::Real(out)
+        }
+    }
+
+    /// Elementwise sum: `self + other` (the Allreduce reduction op).
+    pub fn add(&self, other: &DeviceBuf) -> DeviceBuf {
+        assert_eq!(self.elems(), other.elems(), "reduce length mismatch");
+        match (self, other) {
+            (DeviceBuf::Real(a), DeviceBuf::Real(b)) => {
+                DeviceBuf::Real(a.iter().zip(b.iter()).map(|(x, y)| x + y).collect())
+            }
+            (DeviceBuf::Virtual(n), DeviceBuf::Virtual(_)) => DeviceBuf::Virtual(*n),
+            _ => panic!("mixed real/virtual reduce"),
+        }
+    }
+
+    /// Access the real payload (panics on virtual buffers).
+    pub fn as_real(&self) -> &[f32] {
+        match self {
+            DeviceBuf::Real(v) => v,
+            DeviceBuf::Virtual(_) => panic!("as_real on a virtual buffer"),
+        }
+    }
+
+    /// Consume into the real payload (panics on virtual buffers).
+    pub fn into_real(self) -> Vec<f32> {
+        match self {
+            DeviceBuf::Real(v) => v,
+            DeviceBuf::Virtual(_) => panic!("into_real on a virtual buffer"),
+        }
+    }
+}
+
+/// A compressed byte stream on the (simulated) GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompBuf {
+    /// Real compressed stream.
+    Real(Vec<u8>),
+    /// Size-only stream: (compressed bytes, original element count).
+    Virtual {
+        /// Compressed size in bytes.
+        bytes: usize,
+        /// Original (uncompressed) element count.
+        elems: usize,
+    },
+}
+
+impl CompBuf {
+    /// Compressed size in bytes (what travels on the wire).
+    pub fn bytes(&self) -> usize {
+        match self {
+            CompBuf::Real(v) => v.len(),
+            CompBuf::Virtual { bytes, .. } => *bytes,
+        }
+    }
+
+    /// Whether this is a virtual stream.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, CompBuf::Virtual { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_buffer_ops() {
+        let b = DeviceBuf::Real(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.elems(), 4);
+        assert_eq!(b.bytes(), 16);
+        assert_eq!(b.slice(1..3), DeviceBuf::Real(vec![2.0, 3.0]));
+        let sum = b.add(&DeviceBuf::Real(vec![10.0, 10.0, 10.0, 10.0]));
+        assert_eq!(sum.as_real(), &[11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn virtual_buffer_ops() {
+        let b = DeviceBuf::Virtual(100);
+        assert_eq!(b.elems(), 100);
+        assert_eq!(b.slice(10..30).elems(), 20);
+        assert_eq!(b.add(&DeviceBuf::Virtual(100)).elems(), 100);
+        assert!(b.zeros_like(5).is_virtual());
+    }
+
+    #[test]
+    fn concat_both_modes() {
+        let r = DeviceBuf::concat(&[
+            DeviceBuf::Real(vec![1.0]),
+            DeviceBuf::Real(vec![2.0, 3.0]),
+        ]);
+        assert_eq!(r.as_real(), &[1.0, 2.0, 3.0]);
+        let v = DeviceBuf::concat(&[DeviceBuf::Virtual(3), DeviceBuf::Virtual(4)]);
+        assert_eq!(v.elems(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed real/virtual")]
+    fn mixed_mode_reduce_panics() {
+        DeviceBuf::Real(vec![1.0]).add(&DeviceBuf::Virtual(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        DeviceBuf::Real(vec![1.0]).add(&DeviceBuf::Real(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn compbuf_sizes() {
+        assert_eq!(CompBuf::Real(vec![0u8; 7]).bytes(), 7);
+        assert_eq!(
+            CompBuf::Virtual {
+                bytes: 9,
+                elems: 100
+            }
+            .bytes(),
+            9
+        );
+    }
+}

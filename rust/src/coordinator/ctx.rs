@@ -1,0 +1,692 @@
+//! Per-rank execution context.
+//!
+//! [`RankCtx`] is what a collective algorithm programs against: device
+//! operations (compress / decompress / reduce / memset / pack), p2p
+//! communication, and synchronization — all with virtual-time
+//! accounting. The [`ExecPolicy`] knobs select the *variant* under
+//! study (CPRP2P, C-Coll CPU-centric, unoptimized GPU-centric, full
+//! gZCCL), by toggling exactly the design decisions the paper's
+//! sections 3.3.1–3.3.4 introduce.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::compress::{CompressionProfile, Compressor};
+use crate::gpu::{GpuDevice, StreamId};
+use crate::net::Fabric;
+use crate::sim::{Breakdown, Phase, RankClock, VirtTime};
+
+use super::buffer::{CompBuf, DeviceBuf};
+use super::mailbox::{Mailbox, Msg, Payload};
+
+/// Which compressor (if any) a variant runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionMode {
+    /// No compression (NCCL / Cray MPI baselines).
+    None,
+    /// Error-bounded cuSZp-class (gZCCL, C-Coll).
+    ErrorBounded,
+    /// Fixed-rate ZFP-class (CPRP2P baseline).
+    FixedRate,
+}
+
+/// Variant knobs — each maps to a design decision in the paper.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecPolicy {
+    /// What compressor runs.
+    pub compression: CompressionMode,
+    /// §3.3.1 GPU-centric buffers: device-direct sends (no PCIe
+    /// staging). `false` = CPU-centric (C-Coll / Cray MPI).
+    pub gpu_centric: bool,
+    /// §3.3.1 GPU reduction kernel. `false` = host reduction.
+    pub gpu_reduce: bool,
+    /// §3.3.4 overlap: async kernels on a non-default stream, host
+    /// does not eagerly synchronize after each launch.
+    pub overlap: bool,
+    /// §3.3.4 multi-stream compression for chunked operations.
+    pub multi_stream: bool,
+    /// §3.3.1 pre-allocated device buffer pool (no per-call cudaMalloc).
+    pub prealloc_pool: bool,
+    /// §3.3.2 adapted compressor (no unified-memory offset buffer, no
+    /// per-call temp allocation). `false` models stock cuSZp.
+    pub adapted_compressor: bool,
+}
+
+impl ExecPolicy {
+    /// Full gZCCL policy: everything on.
+    pub fn gzccl() -> Self {
+        ExecPolicy {
+            compression: CompressionMode::ErrorBounded,
+            gpu_centric: true,
+            gpu_reduce: true,
+            overlap: true,
+            multi_stream: true,
+            prealloc_pool: true,
+            adapted_compressor: true,
+        }
+    }
+
+    /// The paper's "original GPU-centric approach" (Fig. 7 baseline):
+    /// device buffers and GPU reduction, but stock compressor, no
+    /// overlap, no multi-stream.
+    pub fn gpu_centric_unoptimized() -> Self {
+        ExecPolicy {
+            compression: CompressionMode::ErrorBounded,
+            gpu_centric: true,
+            gpu_reduce: true,
+            overlap: false,
+            multi_stream: false,
+            prealloc_pool: true,
+            adapted_compressor: false,
+        }
+    }
+
+    /// C-Coll-style CPU-centric compression-enabled collectives.
+    pub fn ccoll() -> Self {
+        ExecPolicy {
+            compression: CompressionMode::ErrorBounded,
+            gpu_centric: false,
+            gpu_reduce: false,
+            overlap: false,
+            multi_stream: false,
+            prealloc_pool: false,
+            adapted_compressor: false,
+        }
+    }
+
+    /// CPRP2P: fixed-rate compression bolted onto every p2p op.
+    pub fn cprp2p() -> Self {
+        ExecPolicy {
+            compression: CompressionMode::FixedRate,
+            gpu_centric: false,
+            gpu_reduce: false,
+            overlap: false,
+            multi_stream: false,
+            prealloc_pool: false,
+            adapted_compressor: false,
+        }
+    }
+
+    /// NCCL-class baseline: no compression, device-direct, pipelined.
+    pub fn nccl() -> Self {
+        ExecPolicy {
+            compression: CompressionMode::None,
+            gpu_centric: true,
+            gpu_reduce: true,
+            overlap: true,
+            multi_stream: false,
+            prealloc_pool: true,
+            adapted_compressor: true,
+        }
+    }
+
+    /// Cray-MPI-class baseline: no compression, CPU-centric staging,
+    /// host reduction.
+    pub fn cray_mpi() -> Self {
+        ExecPolicy {
+            compression: CompressionMode::None,
+            gpu_centric: false,
+            gpu_reduce: false,
+            overlap: false,
+            multi_stream: false,
+            prealloc_pool: true,
+            adapted_compressor: true,
+        }
+    }
+}
+
+/// Operation counters (used by tests asserting the paper's complexity
+/// claims: ring = N−1 compressions, ReDoub = log N, ...).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpCounters {
+    /// Compression kernel invocations (a multi-stream batch counts its
+    /// chunk count).
+    pub compress_calls: usize,
+    /// Decompression kernel invocations.
+    pub decompress_calls: usize,
+    /// Reduction invocations.
+    pub reduce_calls: usize,
+    /// Messages sent.
+    pub msgs_sent: usize,
+    /// Bytes put on the wire.
+    pub wire_bytes: usize,
+    /// Bytes moved over PCIe (both directions).
+    pub pcie_bytes: usize,
+}
+
+/// Per-rank execution context handed to a collective algorithm.
+pub struct RankCtx {
+    rank: usize,
+    nranks: usize,
+    policy: ExecPolicy,
+    clock: RankClock,
+    gpu: GpuDevice,
+    fabric: Fabric,
+    senders: Vec<Sender<Msg>>,
+    mailbox: Mailbox,
+    compressor: Option<Arc<dyn Compressor>>,
+    profile: CompressionProfile,
+    counters: OpCounters,
+}
+
+impl RankCtx {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        rank: usize,
+        nranks: usize,
+        policy: ExecPolicy,
+        gpu: GpuDevice,
+        fabric: Fabric,
+        senders: Vec<Sender<Msg>>,
+        mailbox: Mailbox,
+        compressor: Option<Arc<dyn Compressor>>,
+        profile: CompressionProfile,
+    ) -> Self {
+        RankCtx {
+            rank,
+            nranks,
+            policy,
+            clock: RankClock::new(),
+            gpu,
+            fabric,
+            senders,
+            mailbox,
+            compressor,
+            profile,
+            counters: OpCounters::default(),
+        }
+    }
+
+    /// This rank's id.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Communicator size.
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    /// The active variant policy.
+    pub fn policy(&self) -> ExecPolicy {
+        self.policy
+    }
+
+    /// Current host virtual time.
+    pub fn now(&self) -> VirtTime {
+        self.clock.now()
+    }
+
+    /// Whether this variant compresses at all.
+    pub fn compression_enabled(&self) -> bool {
+        self.policy.compression != CompressionMode::None
+    }
+
+    /// Operation counters so far.
+    pub fn counters(&self) -> OpCounters {
+        self.counters
+    }
+
+    /// Phase breakdown so far.
+    pub fn breakdown(&self) -> Breakdown {
+        self.clock.breakdown()
+    }
+
+    /// Final per-rank completion time: host joined with device drain.
+    pub fn finish(&mut self) -> VirtTime {
+        let t = self.gpu.device_free();
+        self.clock.wait_until(t);
+        self.clock.now()
+    }
+
+    // ---- internal cost helpers -------------------------------------
+
+    /// Host-side cost of issuing a kernel; returns the stream-ready
+    /// dependency time.
+    fn issue_cost(&mut self, s: StreamId) -> VirtTime {
+        let m = *self.gpu.model();
+        let mut cost = m.host_api;
+        if matches!(s, StreamId::NonDefault(_)) {
+            cost += m.stream_issue;
+        }
+        self.clock.advance(Phase::Other, cost)
+    }
+
+    /// Stock-compressor penalties (§3.3.2): per-call temp allocation
+    /// (unless pooled) and the unified-memory offset buffer, which
+    /// forces an implicit host-device round trip and host block.
+    fn stock_compressor_penalty(&mut self) {
+        let m = *self.gpu.model();
+        if !self.policy.prealloc_pool {
+            self.clock.advance(Phase::Other, m.alloc);
+        }
+        if !self.policy.adapted_compressor {
+            // Implicit unified-memory traffic: a small offsets buffer
+            // migrates both ways and the host blocks on it.
+            let penalty = 2.0 * m.pcie.transfer_time(4096) + m.sync;
+            self.clock.advance(Phase::DataMove, penalty);
+            self.counters.pcie_bytes += 2 * 4096;
+        }
+    }
+
+    /// Apply the overlap policy after enqueueing device work: eager
+    /// host sync unless overlapping.
+    fn maybe_sync(&mut self, end: VirtTime) {
+        if !self.policy.overlap {
+            let m = *self.gpu.model();
+            self.clock.wait_until(end);
+            self.clock.advance(Phase::Other, m.sync);
+        }
+    }
+
+    // ---- device operations ------------------------------------------
+
+    /// Compressed size of `buf` without running the compressor (virtual
+    /// mode or planning).
+    pub fn predicted_compressed_size(&self, buf: &DeviceBuf) -> usize {
+        if let Some(c) = &self.compressor {
+            if let Some(fix) = c.fixed_output_size(buf.elems()) {
+                return fix;
+            }
+        }
+        self.profile.compressed_size(buf.bytes())
+    }
+
+    /// Launch a compression kernel on stream `s` over `buf`, with the
+    /// input ready at `ready`. Returns the stream and its completion.
+    pub fn compress(&mut self, s: StreamId, buf: &DeviceBuf, ready: VirtTime) -> (CompBuf, VirtTime) {
+        assert!(
+            self.compression_enabled(),
+            "compress called under CompressionMode::None"
+        );
+        self.stock_compressor_penalty();
+        let issue = self.issue_cost(s);
+        let m = *self.gpu.model();
+        let dur = m.compress.time(buf.bytes());
+        let end = self.gpu.enqueue(s, ready.join(issue), dur);
+        self.clock.charge_only(Phase::Cpr, dur);
+        self.counters.compress_calls += 1;
+        let out = match buf {
+            DeviceBuf::Real(v) => {
+                let c = self.compressor.as_ref().expect("no compressor configured");
+                CompBuf::Real(c.compress(v))
+            }
+            DeviceBuf::Virtual(n) => CompBuf::Virtual {
+                bytes: self.predicted_compressed_size(buf),
+                elems: *n,
+            },
+        };
+        self.maybe_sync(end);
+        (out, end)
+    }
+
+    /// §3.3.4 multi-stream compression of `chunks` as one overlapped
+    /// batch (gZ-Scatter's per-destination blocks). Returns per-chunk
+    /// streams and the batch completion time.
+    pub fn compress_multistream(
+        &mut self,
+        chunks: &[DeviceBuf],
+        ready: VirtTime,
+    ) -> (Vec<CompBuf>, VirtTime) {
+        assert!(self.compression_enabled());
+        if chunks.is_empty() {
+            return (vec![], ready);
+        }
+        let m = *self.gpu.model();
+        self.stock_compressor_penalty();
+        let k = chunks.len();
+        let issue = if self.policy.multi_stream {
+            // One issue per stream, paid by the host.
+            let cost = m.host_api + m.stream_issue * k as f64;
+            self.clock.advance(Phase::Other, cost)
+        } else {
+            self.issue_cost(StreamId::Default)
+        };
+        let total: usize = chunks.iter().map(|c| c.bytes()).sum();
+        let dur = if self.policy.multi_stream {
+            m.compress.time_multistream(total, k, m.stream_issue)
+        } else {
+            // Sequential kernels, each paying the utilization floor.
+            chunks.iter().map(|c| m.compress.time(c.bytes())).sum()
+        };
+        let end = self.gpu.enqueue(StreamId::Default, ready.join(issue), dur);
+        self.clock.charge_only(Phase::Cpr, dur);
+        self.counters.compress_calls += k;
+        let outs = chunks
+            .iter()
+            .map(|buf| match buf {
+                DeviceBuf::Real(v) => {
+                    let c = self.compressor.as_ref().expect("no compressor");
+                    CompBuf::Real(c.compress(v))
+                }
+                DeviceBuf::Virtual(n) => CompBuf::Virtual {
+                    bytes: self.predicted_compressed_size(buf),
+                    elems: *n,
+                },
+            })
+            .collect();
+        self.maybe_sync(end);
+        (outs, end)
+    }
+
+    /// Launch a decompression kernel on stream `s`.
+    pub fn decompress(&mut self, s: StreamId, c: &CompBuf, ready: VirtTime) -> (DeviceBuf, VirtTime) {
+        assert!(self.compression_enabled());
+        self.stock_compressor_penalty();
+        let issue = self.issue_cost(s);
+        let m = *self.gpu.model();
+        let out = match c {
+            CompBuf::Real(stream) => {
+                let comp = self.compressor.as_ref().expect("no compressor");
+                DeviceBuf::Real(
+                    comp.decompress(stream)
+                        .expect("decompress failed on a stream we produced"),
+                )
+            }
+            CompBuf::Virtual { elems, .. } => DeviceBuf::Virtual(*elems),
+        };
+        // Decompression cost scales with the *reconstructed* size.
+        let dur = m.decompress.time(out.bytes());
+        let end = self.gpu.enqueue(s, ready.join(issue), dur);
+        self.clock.charge_only(Phase::Cpr, dur);
+        self.counters.decompress_calls += 1;
+        self.maybe_sync(end);
+        (out, end)
+    }
+
+    /// Elementwise-sum reduction of `a + b`. Uses the GPU kernel or the
+    /// host loop depending on policy (§3.3.1).
+    pub fn reduce(
+        &mut self,
+        s: StreamId,
+        a: &DeviceBuf,
+        b: &DeviceBuf,
+        ready: VirtTime,
+    ) -> (DeviceBuf, VirtTime) {
+        let m = *self.gpu.model();
+        self.counters.reduce_calls += 1;
+        let out = a.add(b);
+        if self.policy.gpu_reduce {
+            let issue = self.issue_cost(s);
+            let dur = m.reduce.time(out.bytes());
+            let end = self.gpu.enqueue(s, ready.join(issue), dur);
+            self.clock.charge_only(Phase::Redu, dur);
+            self.maybe_sync(end);
+            (out, end)
+        } else {
+            // Host reduction (§3.3.1's motivation): stage the device-
+            // resident operand down over PCIe, reduce on the host, and
+            // stage the result back. This is the DATAMOVE the paper's
+            // Fig. 2 shows dominating CPU-centric designs.
+            let bytes = out.bytes();
+            let staged = self.gpu.copy_d2h(ready, bytes);
+            self.clock.charge_only(Phase::DataMove, staged.since(ready));
+            self.counters.pcie_bytes += bytes;
+            self.clock.wait_until(staged);
+            let dur = bytes as f64 / m.host_reduce_beta;
+            self.clock.advance(Phase::Redu, dur);
+            let back = self.gpu.copy_h2d(self.clock.now(), bytes);
+            self.clock.charge_only(Phase::DataMove, back.since(self.clock.now()));
+            self.counters.pcie_bytes += bytes;
+            self.clock.wait_until(back);
+            (out, back)
+        }
+    }
+
+    /// Async device memset (clearing compressor temp buffers).
+    pub fn memset(&mut self, s: StreamId, bytes: usize, ready: VirtTime) -> VirtTime {
+        let issue = self.issue_cost(s);
+        let m = *self.gpu.model();
+        let dur = m.memset.time(bytes);
+        let end = self.gpu.enqueue(s, ready.join(issue), dur);
+        self.clock.charge_only(Phase::Other, dur);
+        self.maybe_sync(end);
+        end
+    }
+
+    /// Device-to-device pack of compressed chunks into one contiguous
+    /// buffer (gZ-Scatter §3.3.4). Returns the packed total size.
+    pub fn pack_d2d(&mut self, parts: &[CompBuf], ready: VirtTime) -> (usize, VirtTime) {
+        let total: usize = parts.iter().map(|p| p.bytes()).sum();
+        let issue = self.issue_cost(StreamId::Default);
+        let m = *self.gpu.model();
+        let dur = if self.policy.multi_stream {
+            m.d2d_copy.time_multistream(total, parts.len().max(1), m.stream_issue)
+        } else {
+            parts.iter().map(|p| m.d2d_copy.time(p.bytes())).sum()
+        };
+        let end = self.gpu.enqueue(StreamId::Default, ready.join(issue), dur);
+        self.clock.charge_only(Phase::Other, dur);
+        self.maybe_sync(end);
+        (total, end)
+    }
+
+    // ---- communication ----------------------------------------------
+
+    /// Non-blocking send of `payload` to `to`, with the data ready on
+    /// this rank at `ready`. CPU-centric variants stage through PCIe.
+    pub fn send(&mut self, to: usize, tag: u64, payload: Payload, ready: VirtTime) {
+        let bytes = payload.wire_bytes();
+        self.clock
+            .advance(Phase::Other, self.gpu.model().host_api);
+        let depart = if self.policy.gpu_centric {
+            ready
+        } else {
+            // Stage device → host before the wire.
+            let end = self.gpu.copy_d2h(ready, bytes);
+            self.clock.charge_only(Phase::DataMove, end.since(ready));
+            self.counters.pcie_bytes += bytes;
+            end
+        };
+        let arrival = self.fabric.deliver(self.rank, to, bytes, depart);
+        self.counters.msgs_sent += 1;
+        self.counters.wire_bytes += bytes;
+        let msg = Msg {
+            src: self.rank,
+            tag,
+            payload,
+            arrival,
+        };
+        self.senders[to]
+            .send(msg)
+            .expect("send failed: receiver thread gone");
+    }
+
+    /// Blocking receive from `from` with `tag`. Returns the payload and
+    /// the time at which the data is usable **on the device** (after
+    /// H2D staging for CPU-centric variants). The host blocks until
+    /// arrival; the wait is charged to COMM.
+    pub fn recv(&mut self, from: usize, tag: u64) -> (Payload, VirtTime) {
+        let msg = self.mailbox.recv(from, tag);
+        self.clock.wait_charged(Phase::Comm, msg.arrival);
+        let mut usable = msg.arrival;
+        if !self.policy.gpu_centric {
+            let bytes = msg.payload.wire_bytes();
+            let end = self.gpu.copy_h2d(usable, bytes);
+            self.clock.charge_only(Phase::DataMove, end.since(usable));
+            self.counters.pcie_bytes += bytes;
+            usable = end;
+        }
+        (msg.payload, usable)
+    }
+
+    /// Receive, asserting a raw (uncompressed) payload.
+    pub fn recv_raw(&mut self, from: usize, tag: u64) -> (DeviceBuf, VirtTime) {
+        match self.recv(from, tag) {
+            (Payload::Raw(b), t) => (b, t),
+            (p, _) => panic!("expected Raw payload, got {p:?}"),
+        }
+    }
+
+    /// Receive, asserting a compressed payload.
+    pub fn recv_comp(&mut self, from: usize, tag: u64) -> (CompBuf, VirtTime) {
+        match self.recv(from, tag) {
+            (Payload::Comp(c), t) => (c, t),
+            (p, _) => panic!("expected Comp payload, got {p:?}"),
+        }
+    }
+
+    /// Receive, asserting a metadata payload.
+    pub fn recv_meta(&mut self, from: usize, tag: u64) -> (Vec<u64>, VirtTime) {
+        match self.recv(from, tag) {
+            (Payload::Meta(v), t) => (v, t),
+            (p, _) => panic!("expected Meta payload, got {p:?}"),
+        }
+    }
+
+    /// Receive, asserting a compressed-batch payload.
+    pub fn recv_batch(&mut self, from: usize, tag: u64) -> (Vec<CompBuf>, VirtTime) {
+        match self.recv(from, tag) {
+            (Payload::Batch(v), t) => (v, t),
+            (p, _) => panic!("expected Batch payload, got {p:?}"),
+        }
+    }
+
+    // ---- synchronization ---------------------------------------------
+
+    /// Host-synchronize with stream `s`.
+    pub fn sync_stream(&mut self, s: StreamId) {
+        let m = *self.gpu.model();
+        let t = self.gpu.stream_free(s);
+        self.clock.wait_until(t);
+        self.clock.advance(Phase::Other, m.sync);
+    }
+
+    /// Host-synchronize with the whole device.
+    pub fn sync_device(&mut self) {
+        let m = *self.gpu.model();
+        let t = self.gpu.device_free();
+        self.clock.wait_until(t);
+        self.clock.advance(Phase::Other, m.sync);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CuszpLike;
+    use crate::gpu::GpuModel;
+    use crate::net::Topology;
+
+    fn mk_ctx(policy: ExecPolicy) -> RankCtx {
+        let topo = Topology::new(2, 2).unwrap();
+        let fabric = Fabric::default_cluster(topo);
+        let (senders, mut boxes) = super::super::mailbox::build_mesh(2);
+        let mb = boxes.remove(0);
+        RankCtx::new(
+            0,
+            2,
+            policy,
+            GpuDevice::new(GpuModel::a100(), 2),
+            fabric,
+            senders[0].clone(),
+            mb,
+            Some(Arc::new(CuszpLike::new(1e-4))),
+            CompressionProfile::fixed(20.0),
+        )
+    }
+
+    #[test]
+    fn real_compress_round_trip_through_ctx() {
+        let mut ctx = mk_ctx(ExecPolicy::gzccl());
+        let data: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.01).sin()).collect();
+        let buf = DeviceBuf::Real(data.clone());
+        let (c, t1) = ctx.compress(StreamId::Default, &buf, VirtTime::ZERO);
+        assert!(t1 > VirtTime::ZERO);
+        let (back, t2) = ctx.decompress(StreamId::Default, &c, t1);
+        assert!(t2 > t1);
+        for (a, b) in back.as_real().iter().zip(data.iter()) {
+            assert!((a - b).abs() <= 1e-4 + 1e-7);
+        }
+        assert_eq!(ctx.counters().compress_calls, 1);
+        assert_eq!(ctx.counters().decompress_calls, 1);
+        assert!(ctx.breakdown().cpr > 0.0);
+    }
+
+    #[test]
+    fn virtual_compress_uses_profile() {
+        let mut ctx = mk_ctx(ExecPolicy::gzccl());
+        let buf = DeviceBuf::Virtual(1_000_000);
+        let (c, _) = ctx.compress(StreamId::Default, &buf, VirtTime::ZERO);
+        // profile ratio 20 → ~200 KB + overhead.
+        let sz = c.bytes();
+        assert!((200_000..210_000).contains(&sz), "size {sz}");
+        let (back, _) = ctx.decompress(StreamId::Default, &c, VirtTime::ZERO);
+        assert_eq!(back.elems(), 1_000_000);
+    }
+
+    #[test]
+    fn no_overlap_blocks_host() {
+        let mut a = mk_ctx(ExecPolicy::gpu_centric_unoptimized());
+        let buf = DeviceBuf::Virtual(50 << 20);
+        a.compress(StreamId::Default, &buf, VirtTime::ZERO);
+        // Host advanced past the kernel duration.
+        let kernel = a.gpu.model().compress.time(buf.bytes());
+        assert!(a.now().as_secs() >= kernel);
+
+        let mut b = mk_ctx(ExecPolicy::gzccl());
+        b.compress(StreamId::NonDefault(0), &buf, VirtTime::ZERO);
+        // Overlapping host returns immediately after issue.
+        assert!(b.now().as_secs() < kernel);
+    }
+
+    #[test]
+    fn cpu_centric_reduce_on_host_charges_redu() {
+        let mut ctx = mk_ctx(ExecPolicy::cray_mpi());
+        let a = DeviceBuf::Virtual(10 << 20);
+        let b = DeviceBuf::Virtual(10 << 20);
+        let t0 = ctx.now();
+        let (_, end) = ctx.reduce(StreamId::Default, &a, &b, t0);
+        // Host-blocking: the clock advanced to the end.
+        assert_eq!(ctx.now(), end);
+        assert!(ctx.breakdown().redu > 0.0);
+    }
+
+    #[test]
+    fn stock_compressor_pays_datamove_penalty() {
+        let mut stock = mk_ctx(ExecPolicy::gpu_centric_unoptimized());
+        let buf = DeviceBuf::Virtual(1 << 20);
+        stock.compress(StreamId::Default, &buf, VirtTime::ZERO);
+        assert!(stock.breakdown().datamove > 0.0, "unified-mem penalty");
+
+        let mut adapted = mk_ctx(ExecPolicy::gzccl());
+        adapted.compress(StreamId::Default, &buf, VirtTime::ZERO);
+        assert_eq!(adapted.breakdown().datamove, 0.0);
+    }
+
+    #[test]
+    fn multistream_batch_faster_than_sequential() {
+        let chunks: Vec<DeviceBuf> = (0..8).map(|_| DeviceBuf::Virtual(1 << 18)).collect();
+        let mut multi = mk_ctx(ExecPolicy::gzccl());
+        let (_, t_multi) = multi.compress_multistream(&chunks, VirtTime::ZERO);
+        let mut seq = mk_ctx(ExecPolicy::gpu_centric_unoptimized());
+        let (_, t_seq) = seq.compress_multistream(&chunks, VirtTime::ZERO);
+        assert!(
+            t_multi.as_secs() < 0.6 * t_seq.as_secs(),
+            "multi {t_multi} vs seq {t_seq}"
+        );
+        assert_eq!(multi.counters().compress_calls, 8);
+    }
+
+    #[test]
+    fn fixed_rate_predicted_size_is_exact() {
+        let topo = Topology::new(2, 2).unwrap();
+        let fabric = Fabric::default_cluster(topo);
+        let (senders, mut boxes) = super::super::mailbox::build_mesh(2);
+        let mut ctx = RankCtx::new(
+            0,
+            2,
+            ExecPolicy::cprp2p(),
+            GpuDevice::new(GpuModel::a100(), 2),
+            fabric,
+            senders[0].clone(),
+            boxes.remove(0),
+            Some(Arc::new(crate::compress::FixedRate::new(8))),
+            CompressionProfile::fixed(4.0),
+        );
+        let real = DeviceBuf::Real(vec![1.0f32; 320]);
+        let predicted = ctx.predicted_compressed_size(&real);
+        let (c, _) = ctx.compress(StreamId::Default, &real, VirtTime::ZERO);
+        assert_eq!(c.bytes(), predicted);
+    }
+}

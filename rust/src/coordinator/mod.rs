@@ -1,0 +1,19 @@
+//! The coordinator: rank runtime, execution policies, and the runner.
+//!
+//! This is the L3 home of the paper's system contribution. A collective
+//! run spawns one thread per simulated GPU rank; ranks exchange *real*
+//! payloads through [`mailbox`] channels while all *timing* is virtual,
+//! charged against calibrated GPU/network cost models. Variant policies
+//! ([`ctx::ExecPolicy`]) toggle exactly the design decisions the paper
+//! studies: GPU-centric buffering (§3.3.1), the adapted compressor
+//! (§3.3.2), overlap and multi-stream compression (§3.3.4).
+
+pub mod buffer;
+pub mod ctx;
+pub mod mailbox;
+pub mod runner;
+
+pub use buffer::{CompBuf, DeviceBuf};
+pub use ctx::{CompressionMode, ExecPolicy, OpCounters, RankCtx};
+pub use mailbox::{Msg, Payload};
+pub use runner::{run_collective, ClusterSpec, RankProgram, RunReport};

@@ -1,0 +1,281 @@
+//! The cluster runner: spawns one thread per rank, wires the mesh,
+//! executes a collective program, and aggregates the run report.
+
+use std::sync::Arc;
+
+use crate::compress::{CompressionProfile, Compressor, CuszpLike, FixedRate};
+use crate::error::{Error, Result};
+use crate::gpu::{GpuDevice, GpuModel};
+use crate::net::{Fabric, LinkModel, Topology};
+use crate::sim::{Breakdown, VirtTime};
+
+use super::buffer::DeviceBuf;
+use super::ctx::{CompressionMode, ExecPolicy, OpCounters, RankCtx};
+use super::mailbox::build_mesh;
+
+/// Everything needed to instantiate a simulated cluster.
+#[derive(Clone)]
+pub struct ClusterSpec {
+    /// Rank layout.
+    pub topo: Topology,
+    /// Device model (A100-calibrated by default).
+    pub gpu: GpuModel,
+    /// Intranode link.
+    pub intranode: LinkModel,
+    /// Internode link.
+    pub internode: LinkModel,
+    /// Variant policy.
+    pub policy: ExecPolicy,
+    /// Absolute error bound for the error-bounded compressor.
+    pub error_bound: f64,
+    /// Bits/value for the fixed-rate compressor (CPRP2P).
+    pub fixed_rate_bits: u32,
+    /// Size profile for virtual-payload runs.
+    pub profile: CompressionProfile,
+    /// Non-default streams created per rank.
+    pub streams_per_rank: usize,
+}
+
+impl ClusterSpec {
+    /// A spec over `ranks` GPUs (4/node) with the given policy and
+    /// paper-testbed defaults everywhere else.
+    pub fn new(ranks: usize, policy: ExecPolicy) -> Self {
+        ClusterSpec {
+            topo: Topology::new(ranks, 4).expect("ranks > 0"),
+            gpu: GpuModel::a100(),
+            intranode: LinkModel::nvlink_default(),
+            internode: LinkModel::slingshot10_default(),
+            policy,
+            error_bound: 1e-4,
+            fixed_rate_bits: 8,
+            profile: CompressionProfile::fixed(25.0),
+            streams_per_rank: 4,
+        }
+    }
+
+    /// Override the error bound.
+    pub fn with_error_bound(mut self, eb: f64) -> Self {
+        self.error_bound = eb;
+        self
+    }
+
+    /// Override the size profile (virtual runs).
+    pub fn with_profile(mut self, p: CompressionProfile) -> Self {
+        self.profile = p;
+        self
+    }
+
+    fn make_compressor(&self) -> Option<Arc<dyn Compressor>> {
+        match self.policy.compression {
+            CompressionMode::None => None,
+            CompressionMode::ErrorBounded => Some(Arc::new(CuszpLike::new(self.error_bound))),
+            CompressionMode::FixedRate => Some(Arc::new(FixedRate::new(self.fixed_rate_bits))),
+        }
+    }
+}
+
+/// Result of one collective run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Per-rank output buffers.
+    pub outputs: Vec<DeviceBuf>,
+    /// Virtual makespan: the latest rank completion (host + device).
+    pub makespan: VirtTime,
+    /// Per-rank phase breakdowns.
+    pub breakdowns: Vec<Breakdown>,
+    /// Per-rank op counters.
+    pub counters: Vec<OpCounters>,
+}
+
+impl RunReport {
+    /// Sum of all per-rank breakdowns.
+    pub fn total_breakdown(&self) -> Breakdown {
+        self.breakdowns
+            .iter()
+            .fold(Breakdown::new(), |acc, b| acc + *b)
+    }
+
+    /// Total bytes placed on the wire by all ranks.
+    pub fn total_wire_bytes(&self) -> usize {
+        self.counters.iter().map(|c| c.wire_bytes).sum()
+    }
+
+    /// Total compression + decompression kernel invocations.
+    pub fn total_cpr_calls(&self) -> usize {
+        self.counters
+            .iter()
+            .map(|c| c.compress_calls + c.decompress_calls)
+            .sum()
+    }
+}
+
+/// A collective program: what each rank executes. Receives the rank's
+/// context and its input buffer; returns the rank's output buffer.
+pub type RankProgram = dyn Fn(&mut RankCtx, DeviceBuf) -> Result<DeviceBuf> + Sync;
+
+/// Run `program` on every rank of the cluster described by `spec`, with
+/// `inputs[r]` as rank r's input. Threads execute the *real* data flow;
+/// time is virtual.
+pub fn run_collective(
+    spec: &ClusterSpec,
+    inputs: Vec<DeviceBuf>,
+    program: &RankProgram,
+) -> Result<RunReport> {
+    let n = spec.topo.ranks();
+    if inputs.len() != n {
+        return Err(Error::coordinator(format!(
+            "inputs.len()={} != ranks={}",
+            inputs.len(),
+            n
+        )));
+    }
+    let fabric = Fabric::new(spec.topo.clone(), spec.intranode, spec.internode);
+    let (senders, boxes) = build_mesh(n);
+    let compressor = spec.make_compressor();
+
+    let mut results: Vec<Option<Result<(DeviceBuf, VirtTime, Breakdown, OpCounters)>>> =
+        (0..n).map(|_| None).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        let mut boxes = boxes;
+        let mut inputs = inputs;
+        // Drain in reverse to pop from the back cheaply.
+        for rank in (0..n).rev() {
+            let mailbox = boxes.pop().unwrap();
+            let input = inputs.pop().unwrap();
+            let senders = senders[rank].clone();
+            let fabric = fabric.clone();
+            let compressor = compressor.clone();
+            let spec = &*spec;
+            handles.push((
+                rank,
+                scope.spawn(move || {
+                    let gpu = GpuDevice::new(spec.gpu, spec.streams_per_rank);
+                    let mut ctx = RankCtx::new(
+                        rank,
+                        n,
+                        spec.policy,
+                        gpu,
+                        fabric,
+                        senders,
+                        mailbox,
+                        compressor,
+                        spec.profile.clone(),
+                    );
+                    let out = program(&mut ctx, input)?;
+                    let finish = ctx.finish();
+                    Ok((out, finish, ctx.breakdown(), ctx.counters()))
+                }),
+            ));
+        }
+        for (rank, h) in handles {
+            let res = h
+                .join()
+                .unwrap_or_else(|_| Err(Error::coordinator(format!("rank {rank} panicked"))));
+            results[rank] = Some(res);
+        }
+    });
+
+    let mut outputs = Vec::with_capacity(n);
+    let mut breakdowns = Vec::with_capacity(n);
+    let mut counters = Vec::with_capacity(n);
+    let mut makespan = VirtTime::ZERO;
+    for r in results.into_iter() {
+        let (out, finish, bd, ct) = r.expect("missing rank result")?;
+        outputs.push(out);
+        makespan = makespan.join(finish);
+        breakdowns.push(bd);
+        counters.push(ct);
+    }
+    Ok(RunReport {
+        outputs,
+        makespan,
+        breakdowns,
+        counters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mailbox::Payload;
+    use crate::sim::VirtTime;
+
+    #[test]
+    fn identity_program_runs_all_ranks() {
+        let spec = ClusterSpec::new(8, ExecPolicy::nccl());
+        let inputs: Vec<DeviceBuf> = (0..8).map(|_| DeviceBuf::Virtual(1024)).collect();
+        let report = run_collective(&spec, inputs, &|_ctx, input| Ok(input)).unwrap();
+        assert_eq!(report.outputs.len(), 8);
+        assert_eq!(report.makespan, VirtTime::ZERO);
+    }
+
+    #[test]
+    fn neighbor_exchange_makespan_and_bytes() {
+        // Every even rank sends 1 MB to rank+1 (intranode pairs).
+        let spec = ClusterSpec::new(4, ExecPolicy::nccl());
+        let inputs: Vec<DeviceBuf> = (0..4).map(|_| DeviceBuf::Virtual(1 << 18)).collect();
+        let report = run_collective(&spec, inputs, &|ctx, input| {
+            let r = ctx.rank();
+            if r % 2 == 0 {
+                ctx.send(r + 1, 0, Payload::Raw(input.clone()), ctx.now());
+            } else {
+                let (_buf, _t) = ctx.recv_raw(r - 1, 0);
+            }
+            Ok(input)
+        })
+        .unwrap();
+        assert!(report.makespan > VirtTime::ZERO);
+        assert_eq!(report.total_wire_bytes(), 2 << 20);
+        // Receivers charged comm.
+        assert!(report.breakdowns[1].comm > 0.0);
+        assert_eq!(report.breakdowns[0].comm, 0.0);
+    }
+
+    #[test]
+    fn rank_error_propagates() {
+        let spec = ClusterSpec::new(2, ExecPolicy::nccl());
+        let inputs: Vec<DeviceBuf> = (0..2).map(|_| DeviceBuf::Virtual(8)).collect();
+        let res = run_collective(&spec, inputs, &|ctx, input| {
+            if ctx.rank() == 1 {
+                Err(Error::collective("boom"))
+            } else {
+                Ok(input)
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn mismatched_inputs_rejected() {
+        let spec = ClusterSpec::new(4, ExecPolicy::nccl());
+        let res = run_collective(&spec, vec![DeviceBuf::Virtual(8)], &|_c, i| Ok(i));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn internode_exchange_slower_than_intranode() {
+        let bytes = 8 << 20;
+        let time_between = |a: usize, b: usize| {
+            let spec = ClusterSpec::new(8, ExecPolicy::nccl());
+            let inputs: Vec<DeviceBuf> = (0..8).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
+            run_collective(&spec, inputs, &move |ctx, input| {
+                if ctx.rank() == a {
+                    ctx.send(b, 0, Payload::Raw(input.clone()), ctx.now());
+                } else if ctx.rank() == b {
+                    ctx.recv_raw(a, 0);
+                }
+                Ok(input)
+            })
+            .unwrap()
+            .makespan
+        };
+        let intra = time_between(0, 1);
+        let inter = time_between(0, 4);
+        assert!(
+            inter.as_secs() > 5.0 * intra.as_secs(),
+            "inter {inter} intra {intra}"
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Synthetic image-stacking inputs (paper §4.5).
+//!
+//! Image stacking sums many per-process partial images into one final
+//! image — "essentially an Allreduce" (the paper, citing Gurhem 2021's
+//! Kirchhoff migration). We synthesize a ground-truth scene and split it
+//! into per-rank partials whose exact sum reproduces the scene plus
+//! small incoherent noise, mirroring how migration partial images carry
+//! coherent signal plus shot noise.
+
+use crate::testkit::Pcg32;
+
+/// An image-stacking scenario: `ranks` partial images of `width×height`.
+#[derive(Debug, Clone)]
+pub struct StackingScenario {
+    /// Image width.
+    pub width: usize,
+    /// Image height.
+    pub height: usize,
+    /// Number of partial images (= ranks in the Allreduce).
+    pub ranks: usize,
+    seed: u64,
+}
+
+impl StackingScenario {
+    /// Construct a scenario.
+    pub fn new(width: usize, height: usize, ranks: usize, seed: u64) -> Self {
+        assert!(ranks > 0 && width > 0 && height > 0);
+        StackingScenario {
+            width,
+            height,
+            ranks,
+            seed,
+        }
+    }
+
+    /// Pixels per image.
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// The ground-truth scene: a handful of Gaussian reflectors plus a
+    /// dipping-layer texture (seismic-section flavored).
+    pub fn truth(&self) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(self.seed);
+        let nblobs = 8;
+        let blobs: Vec<(f64, f64, f64, f64)> = (0..nblobs)
+            .map(|_| {
+                (
+                    rng.range_f32(0.1, 0.9) as f64 * self.width as f64,
+                    rng.range_f32(0.1, 0.9) as f64 * self.height as f64,
+                    rng.range_f32(3.0, 20.0) as f64,
+                    rng.range_f32(-1.0, 1.0) as f64,
+                )
+            })
+            .collect();
+        let mut img = Vec::with_capacity(self.pixels());
+        for y in 0..self.height {
+            for x in 0..self.width {
+                let (xf, yf) = (x as f64, y as f64);
+                let mut v = 0.0;
+                for &(cx, cy, s, a) in &blobs {
+                    let d2 = (xf - cx).powi(2) + (yf - cy).powi(2);
+                    v += a * (-d2 / (2.0 * s * s)).exp();
+                }
+                // Dipping layers.
+                v += 0.2 * ((xf * 0.05 + yf * 0.11).sin());
+                img.push(v as f32);
+            }
+        }
+        img
+    }
+
+    /// Partial image for `rank`: `truth/ranks` plus per-rank noise of
+    /// amplitude `noise`. Summing all partials reproduces the truth up
+    /// to the (incoherent, mean-zero) noise.
+    pub fn partial(&self, rank: usize, noise: f32) -> Vec<f32> {
+        assert!(rank < self.ranks);
+        let truth = self.truth();
+        let mut rng = Pcg32::new(self.seed ^ 0xABCD, rank as u64 + 1);
+        truth
+            .iter()
+            .map(|v| v / self.ranks as f32 + rng.next_gaussian() * noise)
+            .collect()
+    }
+
+    /// The exact (lossless) stack: elementwise sum of all partials.
+    pub fn exact_stack(&self, noise: f32) -> Vec<f32> {
+        let mut acc = vec![0.0f32; self.pixels()];
+        for r in 0..self.ranks {
+            for (a, v) in acc.iter_mut().zip(self.partial(r, noise)) {
+                *a += v;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::metrics::psnr;
+
+    #[test]
+    fn truth_is_deterministic_nontrivial() {
+        let s = StackingScenario::new(64, 48, 4, 9);
+        let a = s.truth();
+        assert_eq!(a.len(), 64 * 48);
+        assert_eq!(a, s.truth());
+        let range: f32 = a.iter().fold(f32::MIN, |m, &x| m.max(x))
+            - a.iter().fold(f32::MAX, |m, &x| m.min(x));
+        assert!(range > 0.1);
+    }
+
+    #[test]
+    fn noiseless_partials_sum_to_truth() {
+        let s = StackingScenario::new(32, 32, 8, 11);
+        let stack = s.exact_stack(0.0);
+        let truth = s.truth();
+        for (a, b) in stack.iter().zip(truth.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn noisy_stack_close_to_truth() {
+        let s = StackingScenario::new(64, 64, 16, 13);
+        let stack = s.exact_stack(0.01);
+        let p = psnr(&s.truth(), &stack);
+        // Incoherent noise averages down: the stack should still be a
+        // high-quality image.
+        assert!(p > 25.0, "psnr {p}");
+    }
+
+    #[test]
+    fn partials_differ_across_ranks() {
+        let s = StackingScenario::new(16, 16, 4, 17);
+        assert_ne!(s.partial(0, 0.01), s.partial(1, 0.01));
+    }
+
+    #[test]
+    #[should_panic]
+    fn partial_rank_out_of_range_panics() {
+        let s = StackingScenario::new(8, 8, 2, 1);
+        s.partial(2, 0.0);
+    }
+}

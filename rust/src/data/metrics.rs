@@ -1,0 +1,118 @@
+//! Accuracy metrics: PSNR and NRMSE, as reported in Table 1 / Fig. 13.
+
+/// Root-mean-square error between two equal-length slices.
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rmse: length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    (sum / a.len() as f64).sqrt()
+}
+
+/// Value range (max − min) of a slice.
+pub fn value_range(a: &[f32]) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in a {
+        let x = x as f64;
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    if lo > hi {
+        0.0
+    } else {
+        hi - lo
+    }
+}
+
+/// Peak signal-to-noise ratio in dB, with the peak taken as the value
+/// range of the reference data (the convention used by SZ/cuSZp and the
+/// paper's Table 1).
+pub fn psnr(reference: &[f32], reconstructed: &[f32]) -> f64 {
+    let e = rmse(reference, reconstructed);
+    let range = value_range(reference);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    if range == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    20.0 * (range / e).log10()
+}
+
+/// Normalized root-mean-square error: RMSE / value range.
+pub fn nrmse(reference: &[f32], reconstructed: &[f32]) -> f64 {
+    let range = value_range(reference);
+    if range == 0.0 {
+        return 0.0;
+    }
+    rmse(reference, reconstructed) / range
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_data_is_perfect() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert!(psnr(&a, &a).is_infinite());
+        assert_eq!(nrmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![3.0f32, 4.0];
+        // sqrt((9+16)/2) = sqrt(12.5)
+        assert!((rmse(&a, &b) - 12.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psnr_nrmse_consistent() {
+        // PSNR = -20 log10(NRMSE).
+        let a: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.01).sin()).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 0.001).collect();
+        let p = psnr(&a, &b);
+        let n = nrmse(&a, &b);
+        assert!((p + 20.0 * n.log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_quantization_psnr_formula() {
+        // Quantizing with max error eb over range R gives
+        // NRMSE ≈ eb/(sqrt(3)·R) for uniform error — PSNR ≈
+        // 20·log10(R·sqrt(3)/eb). Sanity check the order of magnitude,
+        // mirroring Table 1's eb → PSNR relationship.
+        let n = 100_000;
+        let range = 2.0f32;
+        let eb = 1e-3f32;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32 / n as f32) * range - 1.0).collect();
+        let b: Vec<f32> = a
+            .iter()
+            .map(|x| ((x / (2.0 * eb)).round()) * 2.0 * eb)
+            .collect();
+        let p = psnr(&a, &b);
+        assert!((60.0..80.0).contains(&p), "psnr {p}");
+    }
+
+    #[test]
+    fn value_range_handles_empty_and_constant() {
+        assert_eq!(value_range(&[]), 0.0);
+        assert_eq!(value_range(&[5.0; 10]), 0.0);
+        assert_eq!(value_range(&[-1.0, 4.0]), 5.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Datasets and accuracy metrics.
+//!
+//! The paper evaluates on two RTM (reverse-time-migration) wavefield
+//! datasets from the 3D SEG/EAGE Overthrust model (449×449×235 and
+//! 849×849×235) plus an image-stacking workload. We do not have the
+//! proprietary data, so [`rtm`] synthesizes wavefields of the same
+//! dimensions and smoothness class (superposed Ricker wavefronts over a
+//! smooth background), which puts the cuSZp-class compressor in the same
+//! compression-ratio regime (Table 1). [`images`] synthesizes stacking
+//! inputs; [`metrics`] implements PSNR and NRMSE exactly as the paper
+//! reports them.
+
+pub mod images;
+pub mod metrics;
+pub mod rtm;
+
+pub use metrics::{nrmse, psnr};
+pub use rtm::RtmDataset;

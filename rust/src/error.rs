@@ -1,0 +1,77 @@
+//! Error types for the gZCCL framework.
+
+use thiserror::Error;
+
+/// Unified error type for all gZCCL subsystems.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file / value errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Compressor failures (corrupt stream, bound violation, ...).
+    #[error("compression error: {0}")]
+    Compress(String),
+
+    /// Collective algorithm errors (bad rank layout, mismatched sizes, ...).
+    #[error("collective error: {0}")]
+    Collective(String),
+
+    /// Coordinator / rank-runtime errors (channel breakage, panics).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// PJRT runtime errors (artifact missing, compile/execute failures).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// I/O errors (artifact files, dataset dumps).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Shorthand constructor for compression errors.
+    pub fn compress(msg: impl Into<String>) -> Self {
+        Error::Compress(msg.into())
+    }
+    /// Shorthand constructor for collective errors.
+    pub fn collective(msg: impl Into<String>) -> Self {
+        Error::Collective(msg.into())
+    }
+    /// Shorthand constructor for coordinator errors.
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+    /// Shorthand constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category() {
+        let e = Error::config("missing key");
+        assert_eq!(e.to_string(), "config error: missing key");
+        let e = Error::compress("bad magic");
+        assert!(e.to_string().contains("compression"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,265 @@
+//! Allreduce experiments: Figs. 2, 6, 7, 9, 10.
+
+use crate::collectives::{
+    allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
+};
+use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy, RankProgram};
+use crate::error::Result;
+use crate::metrics::table::{fmt_time, fmt_x};
+use crate::metrics::Table;
+use crate::sim::Breakdown;
+
+use super::{rtm_profile, virtual_inputs, Dataset, FULL_DATASET_BYTES, GPU_COUNTS, MSG_SIZES_MB};
+
+fn run_ar(
+    ranks: usize,
+    bytes: usize,
+    policy: ExecPolicy,
+    eb: f64,
+    program: &RankProgram,
+) -> Result<(f64, Breakdown)> {
+    let spec = ClusterSpec::new(ranks, policy)
+        .with_error_bound(eb)
+        .with_profile(rtm_profile(Dataset::Rtm2, eb));
+    let report = run_collective(&spec, virtual_inputs(ranks, bytes), program)?;
+    Ok((report.makespan.as_secs(), report.total_breakdown()))
+}
+
+/// **Fig. 2** — phase breakdown of the ring Allreduce under CPRP2P and
+/// C-Coll (64 GPUs, full dataset). Returns the rendered table.
+pub fn fig02_breakdown(ranks: usize, bytes: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Fig 2: Allreduce breakdown, {} GPUs", ranks),
+        &["variant", "runtime", "CPR", "COMM", "DATAMOVE", "REDU", "OTHERS"],
+    );
+    for (name, policy) in [
+        ("CPRP2P", ExecPolicy::cprp2p()),
+        ("C-Coll", ExecPolicy::ccoll()),
+    ] {
+        let (mk, bd) = run_ar(ranks, bytes, policy, 1e-4, &allreduce_ring)?;
+        t.row(&[
+            name.to_string(),
+            fmt_time(mk),
+            format!("{:.1}%", 100.0 * bd.fraction(crate::sim::Phase::Cpr)),
+            format!("{:.1}%", 100.0 * bd.fraction(crate::sim::Phase::Comm)),
+            format!("{:.1}%", 100.0 * bd.fraction(crate::sim::Phase::DataMove)),
+            format!("{:.1}%", 100.0 * bd.fraction(crate::sim::Phase::Redu)),
+            format!("{:.1}%", 100.0 * bd.fraction(crate::sim::Phase::Other)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Fig. 6** — GPU-centric vs CPU-centric design, speedup vs size.
+pub fn fig06_gpu_centric(ranks: usize, ds: Dataset) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Fig 6: GPU-centric vs CPU-centric ({}, {} GPUs)", ds.name(), ranks),
+        &["size", "cpu-centric", "gpu-centric", "speedup"],
+    );
+    let max_mb = match ds {
+        Dataset::Rtm1 => 180,
+        Dataset::Rtm2 => 600,
+    };
+    for mb in MSG_SIZES_MB.iter().map(|&m| m * max_mb / 600).filter(|&m| m > 0) {
+        let bytes = mb << 20;
+        let (cpu, _) = run_ar(ranks, bytes, ExecPolicy::ccoll(), 1e-4, &allreduce_ring)?;
+        let (gpu, _) = run_ar(
+            ranks,
+            bytes,
+            ExecPolicy::gpu_centric_unoptimized(),
+            1e-4,
+            &allreduce_ring,
+        )?;
+        t.row(&[
+            format!("{mb} MB"),
+            fmt_time(cpu),
+            fmt_time(gpu),
+            fmt_x(cpu / gpu),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Fig. 7** — optimized gZ-Allreduce (Ring / ReDoub) speedups over
+/// the unoptimized GPU-centric baseline, vs message size.
+pub fn fig07_allreduce_opt(ranks: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Fig 7: gZ-Allreduce optimization gains ({} GPUs)", ranks),
+        &["size", "gpu-centric", "gZ-Ring", "gZ-ReDoub", "ring gain", "redoub gain"],
+    );
+    for &mb in &MSG_SIZES_MB {
+        let bytes = mb << 20;
+        let (base, _) = run_ar(
+            ranks,
+            bytes,
+            ExecPolicy::gpu_centric_unoptimized(),
+            1e-4,
+            &allreduce_ring,
+        )?;
+        let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, &allreduce_ring)?;
+        let (redoub, _) = run_ar(
+            ranks,
+            bytes,
+            ExecPolicy::gzccl(),
+            1e-4,
+            &allreduce_recursive_doubling,
+        )?;
+        t.row(&[
+            format!("{mb} MB"),
+            fmt_time(base),
+            fmt_time(ring),
+            fmt_time(redoub),
+            fmt_x(base / ring),
+            fmt_x(base / redoub),
+        ]);
+    }
+    Ok(t)
+}
+
+fn four_way(ranks: usize, bytes: usize) -> Result<(f64, f64, f64, f64)> {
+    let (cray, _) = run_ar(
+        ranks,
+        bytes,
+        ExecPolicy::cray_mpi(),
+        1e-4,
+        &allreduce_reduce_bcast,
+    )?;
+    let (nccl, _) = run_ar(ranks, bytes, ExecPolicy::nccl(), 1e-4, &allreduce_ring)?;
+    let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, &allreduce_ring)?;
+    let (redoub, _) = run_ar(
+        ranks,
+        bytes,
+        ExecPolicy::gzccl(),
+        1e-4,
+        &allreduce_recursive_doubling,
+    )?;
+    Ok((cray, nccl, ring, redoub))
+}
+
+/// **Fig. 9** — gZ-Allreduce vs Cray MPI and NCCL across message sizes.
+pub fn fig09_msgsize(ranks: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Fig 9: Allreduce vs baselines ({} GPUs)", ranks),
+        &["size", "Cray MPI", "NCCL", "gZ-Ring", "gZ-ReDoub", "vs Cray", "vs NCCL"],
+    );
+    for &mb in &MSG_SIZES_MB {
+        let (cray, nccl, ring, redoub) = four_way(ranks, mb << 20)?;
+        t.row(&[
+            format!("{mb} MB"),
+            fmt_time(cray),
+            fmt_time(nccl),
+            fmt_time(ring),
+            fmt_time(redoub),
+            fmt_x(cray / redoub),
+            fmt_x(nccl / redoub),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Fig. 10** — scalability on the full dataset across GPU counts.
+pub fn fig10_scale() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 10: Allreduce scalability (646 MB)",
+        &["GPUs", "Cray MPI", "NCCL", "gZ-Ring", "gZ-ReDoub", "vs Cray", "vs NCCL"],
+    );
+    for &n in &GPU_COUNTS {
+        let (cray, nccl, ring, redoub) = four_way(n, FULL_DATASET_BYTES)?;
+        t.row(&[
+            n.to_string(),
+            fmt_time(cray),
+            fmt_time(nccl),
+            fmt_time(ring),
+            fmt_time(redoub),
+            fmt_x(cray / redoub),
+            fmt_x(nccl / redoub),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig02_ccoll_shifts_cost_to_datamove() {
+        let t = fig02_breakdown(16, 64 << 20).unwrap();
+        let s = t.render();
+        assert!(s.contains("CPRP2P") && s.contains("C-Coll"));
+        // Structured check: rerun and inspect directly.
+        let (mk_p2p, cpr) =
+            run_ar(16, 64 << 20, ExecPolicy::cprp2p(), 1e-4, &allreduce_ring).unwrap();
+        let (mk_ccoll, ccoll) =
+            run_ar(16, 64 << 20, ExecPolicy::ccoll(), 1e-4, &allreduce_ring).unwrap();
+        // Fig. 2: C-Coll is faster overall than CPRP2P...
+        assert!(mk_ccoll < mk_p2p, "ccoll {mk_ccoll} vs cprp2p {mk_p2p}");
+        // ...spends fewer absolute seconds compressing (the AG stage
+        // compresses once instead of per hop)...
+        assert!(
+            ccoll.cpr < cpr.cpr,
+            "ccoll cpr {}s vs cprp2p cpr {}s",
+            ccoll.cpr,
+            cpr.cpr
+        );
+        // ...and a large share of its runtime is host-device staging.
+        assert!(
+            ccoll.fraction(crate::sim::Phase::DataMove) > 0.2,
+            "ccoll datamove {}",
+            ccoll.fraction(crate::sim::Phase::DataMove)
+        );
+    }
+
+    #[test]
+    fn fig06_gpu_centric_wins_and_grows_with_size() {
+        // Small sweep for test speed.
+        let bytes_small = 50 << 20;
+        let bytes_big = 300 << 20;
+        let (cpu_s, _) = run_ar(16, bytes_small, ExecPolicy::ccoll(), 1e-4, &allreduce_ring).unwrap();
+        let (gpu_s, _) = run_ar(
+            16,
+            bytes_small,
+            ExecPolicy::gpu_centric_unoptimized(),
+            1e-4,
+            &allreduce_ring,
+        )
+        .unwrap();
+        let (cpu_b, _) = run_ar(16, bytes_big, ExecPolicy::ccoll(), 1e-4, &allreduce_ring).unwrap();
+        let (gpu_b, _) = run_ar(
+            16,
+            bytes_big,
+            ExecPolicy::gpu_centric_unoptimized(),
+            1e-4,
+            &allreduce_ring,
+        )
+        .unwrap();
+        assert!(gpu_s < cpu_s);
+        // Paper Fig. 6: speedup increases with data size.
+        assert!(cpu_b / gpu_b > cpu_s / gpu_s);
+    }
+
+    #[test]
+    fn fig07_redoub_gains_shrink_with_size() {
+        // Paper: "the speedup of both gZ-Allreduce methods generally
+        // decreases as the data size increases".
+        let (b1, _) = run_ar(32, 50 << 20, ExecPolicy::gpu_centric_unoptimized(), 1e-4, &allreduce_ring).unwrap();
+        let (r1, _) = run_ar(32, 50 << 20, ExecPolicy::gzccl(), 1e-4, &allreduce_recursive_doubling).unwrap();
+        let (b2, _) = run_ar(32, 600 << 20, ExecPolicy::gpu_centric_unoptimized(), 1e-4, &allreduce_ring).unwrap();
+        let (r2, _) = run_ar(32, 600 << 20, ExecPolicy::gzccl(), 1e-4, &allreduce_recursive_doubling).unwrap();
+        assert!(b1 / r1 > b2 / r2, "{} vs {}", b1 / r1, b2 / r2);
+        assert!(r1 < b1 && r2 < b2);
+    }
+
+    #[test]
+    fn fig10_shape_matches_paper() {
+        // ReDoub best at scale; Ring beats NCCL only at small counts.
+        let (cray8, nccl8, ring8, redoub8) = four_way(8, FULL_DATASET_BYTES).unwrap();
+        let (cray256, nccl256, ring256, redoub256) = four_way(256, FULL_DATASET_BYTES).unwrap();
+        assert!(redoub8 < nccl8 && redoub8 < cray8);
+        assert!(redoub256 < nccl256 && redoub256 < cray256);
+        assert!(ring8 < nccl8, "ring wins at 8 GPUs");
+        assert!(ring256 > nccl256, "ring loses at 256 GPUs");
+        // Cray degrades fastest with GPU count.
+        assert!(cray256 / cray8 > nccl256 / nccl8);
+    }
+}

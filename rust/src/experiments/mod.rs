@@ -1,0 +1,129 @@
+//! Experiment drivers: one function per table/figure of the paper's
+//! evaluation (§4), shared by `cargo bench` targets and the CLI.
+//!
+//! Performance sweeps use virtual payloads (sizes from a compression
+//! profile measured on the real synthetic-RTM data with the real
+//! compressor); accuracy experiments run real data end-to-end. See
+//! DESIGN.md §4 for the experiment index.
+
+pub mod allreduce_exp;
+pub mod compression_exp;
+pub mod scatter_exp;
+pub mod stacking_exp;
+
+pub use allreduce_exp::{fig02_breakdown, fig06_gpu_centric, fig07_allreduce_opt, fig09_msgsize, fig10_scale};
+pub use compression_exp::{fig03_characterization, table1_compression};
+pub use scatter_exp::{fig08_scatter_opt, fig11_scatter_msgsize, fig12_scatter_scale};
+pub use stacking_exp::{fig13_accuracy, table2_stacking};
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::compress::{CompressionProfile, CuszpLike};
+use crate::coordinator::DeviceBuf;
+use crate::data::RtmDataset;
+
+/// Which synthetic RTM dataset an experiment sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// 449×449×235 (~180 MB).
+    Rtm1,
+    /// 849×849×235 (~646 MB).
+    Rtm2,
+}
+
+impl Dataset {
+    /// Materialize the generator.
+    pub fn dataset(self) -> RtmDataset {
+        match self {
+            Dataset::Rtm1 => RtmDataset::setting1(),
+            Dataset::Rtm2 => RtmDataset::setting2(),
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::Rtm1 => "RTM-1",
+            Dataset::Rtm2 => "RTM-2",
+        }
+    }
+}
+
+/// Values sampled per dataset when measuring a compression profile.
+/// Large enough to be representative, small enough to generate quickly.
+const PROFILE_SAMPLE: usize = 1 << 21;
+
+static PROFILES: Lazy<Mutex<HashMap<(Dataset, u64), CompressionProfile>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Measured compression profile for `(dataset, eb)` — the real
+/// compressor over a real data sample, cached for the process.
+pub fn rtm_profile(ds: Dataset, eb: f64) -> CompressionProfile {
+    let key = (ds, eb.to_bits());
+    if let Some(p) = PROFILES.lock().unwrap().get(&key) {
+        return p.clone();
+    }
+    let sample = ds.dataset().sample(PROFILE_SAMPLE);
+    let profile = CompressionProfile::measure(&CuszpLike::new(eb), &sample);
+    PROFILES
+        .lock()
+        .unwrap()
+        .insert(key, profile.clone());
+    profile
+}
+
+/// Virtual per-rank inputs of `bytes` each.
+pub fn virtual_inputs(ranks: usize, bytes: usize) -> Vec<DeviceBuf> {
+    (0..ranks).map(|_| DeviceBuf::Virtual(bytes / 4)).collect()
+}
+
+/// Virtual scatter inputs: the root holds `bytes`, others empty.
+pub fn virtual_root_inputs(ranks: usize, bytes: usize) -> Vec<DeviceBuf> {
+    let mut v = vec![DeviceBuf::Virtual(bytes / 4)];
+    for _ in 1..ranks {
+        v.push(DeviceBuf::Virtual(0));
+    }
+    v
+}
+
+/// The message-size sweep of Figs. 6/7/8/9/11 (MB).
+pub const MSG_SIZES_MB: [usize; 6] = [50, 100, 200, 300, 450, 600];
+
+/// The GPU-count sweep of Figs. 10/12.
+pub const GPU_COUNTS: [usize; 7] = [8, 16, 32, 64, 128, 256, 512];
+
+/// Full-dataset size used by the scalability studies (bytes).
+pub const FULL_DATASET_BYTES: usize = 646 << 20;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_cache_returns_consistent_ratio() {
+        let a = rtm_profile(Dataset::Rtm1, 1e-4);
+        let b = rtm_profile(Dataset::Rtm1, 1e-4);
+        assert_eq!(a.ratio, b.ratio);
+        assert!(a.ratio > 5.0, "ratio {}", a.ratio);
+    }
+
+    #[test]
+    fn looser_bound_higher_ratio() {
+        let loose = rtm_profile(Dataset::Rtm1, 1e-3);
+        let tight = rtm_profile(Dataset::Rtm1, 1e-5);
+        assert!(loose.ratio > tight.ratio);
+    }
+
+    #[test]
+    fn input_helpers_shapes() {
+        let v = virtual_inputs(4, 1024);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].elems(), 256);
+        let r = virtual_root_inputs(4, 1024);
+        assert_eq!(r[0].elems(), 256);
+        assert_eq!(r[3].elems(), 0);
+    }
+}

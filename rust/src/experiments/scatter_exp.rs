@@ -1,0 +1,119 @@
+//! Scatter experiments: Figs. 8, 11, 12.
+
+use crate::collectives::scatter_binomial;
+use crate::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy, RankCtx};
+use crate::error::Result;
+use crate::metrics::table::{fmt_time, fmt_x};
+use crate::metrics::Table;
+
+use super::{rtm_profile, virtual_root_inputs, Dataset, FULL_DATASET_BYTES, GPU_COUNTS, MSG_SIZES_MB};
+
+fn run_scatter(ranks: usize, bytes: usize, policy: ExecPolicy, eb: f64) -> Result<f64> {
+    let spec = ClusterSpec::new(ranks, policy)
+        .with_error_bound(eb)
+        .with_profile(rtm_profile(Dataset::Rtm2, eb));
+    let elems = bytes / 4;
+    let program = move |ctx: &mut RankCtx, input: DeviceBuf| scatter_binomial(ctx, input, elems);
+    let report = run_collective(&spec, virtual_root_inputs(ranks, bytes), &program)?;
+    Ok(report.makespan.as_secs())
+}
+
+/// **Fig. 8** — gZ-Scatter vs the unoptimized GPU-centric scatter
+/// (sequential root compression, no multi-stream/overlap/packing).
+pub fn fig08_scatter_opt(ranks: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Fig 8: gZ-Scatter optimization gains ({} GPUs)", ranks),
+        &["size", "gpu-centric", "gZ-Scatter", "speedup"],
+    );
+    for &mb in &MSG_SIZES_MB {
+        let bytes = mb << 20;
+        let base = run_scatter(ranks, bytes, ExecPolicy::gpu_centric_unoptimized(), 1e-4)?;
+        let gz = run_scatter(ranks, bytes, ExecPolicy::gzccl(), 1e-4)?;
+        t.row(&[
+            format!("{mb} MB"),
+            fmt_time(base),
+            fmt_time(gz),
+            fmt_x(base / gz),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Fig. 11** — gZ-Scatter vs Cray MPI across message sizes (NCCL has
+/// no Scatter).
+pub fn fig11_scatter_msgsize(ranks: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Fig 11: Scatter vs Cray MPI ({} GPUs)", ranks),
+        &["size", "Cray MPI", "gZ-Scatter", "speedup"],
+    );
+    for &mb in &MSG_SIZES_MB {
+        let bytes = mb << 20;
+        let cray = run_scatter(ranks, bytes, ExecPolicy::cray_mpi(), 1e-4)?;
+        let gz = run_scatter(ranks, bytes, ExecPolicy::gzccl(), 1e-4)?;
+        t.row(&[
+            format!("{mb} MB"),
+            fmt_time(cray),
+            fmt_time(gz),
+            fmt_x(cray / gz),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Fig. 12** — Scatter scalability on the full dataset.
+pub fn fig12_scatter_scale() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 12: Scatter scalability (646 MB)",
+        &["GPUs", "Cray MPI", "gZ-Scatter", "speedup"],
+    );
+    for &n in &GPU_COUNTS {
+        let cray = run_scatter(n, FULL_DATASET_BYTES, ExecPolicy::cray_mpi(), 1e-4)?;
+        let gz = run_scatter(n, FULL_DATASET_BYTES, ExecPolicy::gzccl(), 1e-4)?;
+        t.row(&[n.to_string(), fmt_time(cray), fmt_time(gz), fmt_x(cray / gz)]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gz_scatter_beats_unoptimized_and_cray() {
+        let n = 16;
+        let bytes = 300 << 20;
+        let base = run_scatter(n, bytes, ExecPolicy::gpu_centric_unoptimized(), 1e-4).unwrap();
+        let gz = run_scatter(n, bytes, ExecPolicy::gzccl(), 1e-4).unwrap();
+        let cray = run_scatter(n, bytes, ExecPolicy::cray_mpi(), 1e-4).unwrap();
+        assert!(gz < base, "gz {gz} base {base}");
+        assert!(gz < cray, "gz {gz} cray {cray}");
+    }
+
+    #[test]
+    fn fig11_speedup_grows_with_size() {
+        // Paper: "The speedup of gZ-Scatter enhances as the data size
+        // increases".
+        let n = 16;
+        let s_small = {
+            let cray = run_scatter(n, 50 << 20, ExecPolicy::cray_mpi(), 1e-4).unwrap();
+            let gz = run_scatter(n, 50 << 20, ExecPolicy::gzccl(), 1e-4).unwrap();
+            cray / gz
+        };
+        let s_big = {
+            let cray = run_scatter(n, 600 << 20, ExecPolicy::cray_mpi(), 1e-4).unwrap();
+            let gz = run_scatter(n, 600 << 20, ExecPolicy::gzccl(), 1e-4).unwrap();
+            cray / gz
+        };
+        assert!(s_big > s_small, "{s_big} vs {s_small}");
+        assert!(s_big > 3.0, "expect a large-factor win, got {s_big}");
+    }
+
+    #[test]
+    fn fig12_speedup_positive_across_scale() {
+        for n in [8usize, 64, 256] {
+            let cray = run_scatter(n, FULL_DATASET_BYTES, ExecPolicy::cray_mpi(), 1e-4).unwrap();
+            let gz = run_scatter(n, FULL_DATASET_BYTES, ExecPolicy::gzccl(), 1e-4).unwrap();
+            assert!(gz < cray, "n={n}: gz {gz} cray {cray}");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Image-stacking experiments: Table 2 (performance + breakdown) and
+//! Fig. 13 (reconstruction accuracy).
+
+use crate::apps::stacking::{run_stacking, write_pgm, StackingConfig, StackingVariant};
+use crate::collectives::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
+use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy, RankProgram};
+use crate::error::Result;
+use crate::metrics::table::fmt_x;
+use crate::metrics::Table;
+use crate::runtime::Engine;
+use crate::sim::Phase;
+
+use super::{rtm_profile, virtual_inputs, Dataset};
+
+/// **Table 2** — stacking performance vs Cray MPI plus phase
+/// breakdowns. Performance runs at paper scale with virtual payloads
+/// (`ranks` × `image_bytes`); the breakdown percentages come from the
+/// same runs.
+pub fn table2_stacking(ranks: usize, image_bytes: usize) -> Result<Table> {
+    let eb = 1e-4;
+    let profile = rtm_profile(Dataset::Rtm1, eb);
+    let run = |policy: ExecPolicy, prog: &RankProgram| -> Result<_> {
+        let spec = ClusterSpec::new(ranks, policy)
+            .with_error_bound(eb)
+            .with_profile(profile.clone());
+        let report = run_collective(&spec, virtual_inputs(ranks, image_bytes), prog)?;
+        Ok((report.makespan.as_secs(), report.total_breakdown()))
+    };
+    let (cray, _) = run(ExecPolicy::cray_mpi(), &allreduce_reduce_bcast)?;
+    let (nccl, _) = run(ExecPolicy::nccl(), &allreduce_ring)?;
+    let (ring, bd_ring) = run(ExecPolicy::gzccl(), &allreduce_ring)?;
+    let (redoub, bd_redoub) = run(ExecPolicy::gzccl(), &allreduce_recursive_doubling)?;
+
+    let mut t = Table::new(
+        format!("Table 2: image stacking ({} ranks, {} MB images)", ranks, image_bytes >> 20),
+        &["variant", "speedup vs Cray", "Cmpr.", "Comm.", "Redu.", "Others"],
+    );
+    let pct = |b: crate::sim::Breakdown, p: Phase| format!("{:.2}%", 100.0 * b.fraction(p));
+    // Fold DATAMOVE into Others for the paper's 4-column layout (gZCCL
+    // variants have zero DATAMOVE anyway).
+    let oth = |b: crate::sim::Breakdown| {
+        format!(
+            "{:.2}%",
+            100.0 * (b.fraction(Phase::Other) + b.fraction(Phase::DataMove))
+        )
+    };
+    t.row(&[
+        "gZCCL (Ring)".into(),
+        fmt_x(cray / ring),
+        pct(bd_ring, Phase::Cpr),
+        pct(bd_ring, Phase::Comm),
+        pct(bd_ring, Phase::Redu),
+        oth(bd_ring),
+    ]);
+    t.row(&[
+        "gZCCL (ReDoub)".into(),
+        fmt_x(cray / redoub),
+        pct(bd_redoub, Phase::Cpr),
+        pct(bd_redoub, Phase::Comm),
+        pct(bd_redoub, Phase::Redu),
+        oth(bd_redoub),
+    ]);
+    t.row(&[
+        "NCCL".into(),
+        fmt_x(cray / nccl),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    Ok(t)
+}
+
+/// **Fig. 13** — reconstructed stack quality at eb 2e-4 and 1e-4 for
+/// both gZCCL algorithms; real data end-to-end. Optionally writes PGM
+/// visualizations next to `pgm_dir`.
+pub fn fig13_accuracy(
+    ranks: usize,
+    engine: Option<&Engine>,
+    pgm_dir: Option<&std::path::Path>,
+) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 13: stacking accuracy",
+        &["variant", "ABS", "PSNR (dB)", "NRMSE"],
+    );
+    for eb in [2e-4, 1e-4] {
+        for variant in [StackingVariant::GzcclRing, StackingVariant::GzcclReDoub] {
+            let cfg = StackingConfig {
+                ranks,
+                error_bound: eb,
+                ..Default::default()
+            };
+            let out = run_stacking(&cfg, variant, engine)?;
+            t.row(&[
+                variant.name().to_string(),
+                format!("{eb:.0e}"),
+                format!("{:.2}", out.psnr),
+                format!("{:.2e}", out.nrmse),
+            ]);
+            if let Some(dir) = pgm_dir {
+                std::fs::create_dir_all(dir)?;
+                let name = format!(
+                    "stack_{}_{eb:.0e}.pgm",
+                    variant.name().replace([' ', '(', ')'], "")
+                );
+                write_pgm(&dir.join(name), &out.image, cfg.width, cfg.height)?;
+            }
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_gz_variants_beat_cray_at_paper_scale() {
+        let t = table2_stacking(16, 256 << 20).unwrap();
+        let s = t.render();
+        assert!(s.contains("gZCCL (Ring)") && s.contains("NCCL"));
+        // Parse the ReDoub speedup cell loosely: must be > 1x.
+        let line = s.lines().find(|l| l.contains("ReDoub")).unwrap();
+        let speedup: f64 = line
+            .split('|')
+            .nth(2)
+            .unwrap()
+            .trim()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(speedup > 1.0, "ReDoub speedup {speedup}");
+    }
+
+    #[test]
+    fn fig13_quality_in_paper_regime() {
+        let t = fig13_accuracy(8, None, None).unwrap();
+        assert_eq!(t.len(), 4);
+        let s = t.render();
+        // Paper: PSNR ≈ 56.8–57.8 dB at 1e-4; anything ≥ ~45 dB on our
+        // synthetic scene matches the "high quality" claim.
+        for line in s.lines().skip(3) {
+            let psnr: f64 = line.split('|').nth(3).unwrap().trim().parse().unwrap();
+            assert!(psnr > 40.0, "low psnr in {line}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Per-rank GPU device state: stream timelines + PCIe engines.
+
+use crate::sim::{Timeline, VirtTime};
+
+use super::model::GpuModel;
+
+/// Identifies a stream on a device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StreamId {
+    /// The default (NULL) stream.
+    Default,
+    /// A numbered non-default stream (gZCCL creates one per chunk in
+    /// the multi-stream Scatter path, and one "compression stream" in
+    /// the Allreduce path).
+    NonDefault(usize),
+}
+
+/// One simulated GPU: the model parameters plus the resource timelines
+/// that give overlap/pipelining semantics.
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    model: GpuModel,
+    default_stream: Timeline,
+    streams: Vec<Timeline>,
+    /// Host→device copy engine.
+    h2d: Timeline,
+    /// Device→host copy engine.
+    d2h: Timeline,
+}
+
+impl GpuDevice {
+    /// A device with `n_streams` non-default streams.
+    pub fn new(model: GpuModel, n_streams: usize) -> Self {
+        GpuDevice {
+            model,
+            default_stream: Timeline::new(),
+            streams: (0..n_streams).map(|_| Timeline::new()).collect(),
+            h2d: Timeline::new(),
+            d2h: Timeline::new(),
+        }
+    }
+
+    /// The device's cost-model parameters.
+    pub fn model(&self) -> &GpuModel {
+        &self.model
+    }
+
+    /// Number of non-default streams.
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Ensure at least `n` non-default streams exist (gZ-Scatter sizes
+    /// its stream array to the communicator size at runtime).
+    pub fn ensure_streams(&mut self, n: usize) {
+        while self.streams.len() < n {
+            self.streams.push(Timeline::new());
+        }
+    }
+
+    fn stream_mut(&mut self, s: StreamId) -> &mut Timeline {
+        match s {
+            StreamId::Default => &mut self.default_stream,
+            StreamId::NonDefault(i) => {
+                self.ensure_streams(i + 1);
+                &mut self.streams[i]
+            }
+        }
+    }
+
+    /// Enqueue `dur` seconds of kernel work on stream `s`, ready at
+    /// `ready`. Returns the kernel's completion timestamp.
+    pub fn enqueue(&mut self, s: StreamId, ready: VirtTime, dur: f64) -> VirtTime {
+        let (_, end) = self.stream_mut(s).reserve(ready, dur);
+        end
+    }
+
+    /// Timestamp at which stream `s` drains.
+    pub fn stream_free(&mut self, s: StreamId) -> VirtTime {
+        self.stream_mut(s).busy_until()
+    }
+
+    /// Timestamp at which *all* streams drain (device synchronize).
+    pub fn device_free(&self) -> VirtTime {
+        let mut t = self.default_stream.busy_until();
+        for s in &self.streams {
+            t = t.join(s.busy_until());
+        }
+        t.join(self.h2d.busy_until()).join(self.d2h.busy_until())
+    }
+
+    /// Reserve the device→host copy engine for `bytes`.
+    pub fn copy_d2h(&mut self, ready: VirtTime, bytes: usize) -> VirtTime {
+        let dur = self.model.pcie.transfer_time(bytes);
+        let (_, end) = self.d2h.reserve(ready, dur);
+        end
+    }
+
+    /// Reserve the host→device copy engine for `bytes`.
+    pub fn copy_h2d(&mut self, ready: VirtTime, bytes: usize) -> VirtTime {
+        let dur = self.model.pcie.transfer_time(bytes);
+        let (_, end) = self.h2d.reserve(ready, dur);
+        end
+    }
+
+    /// Total busy seconds over all streams (utilization diagnostics).
+    pub fn streams_busy_total(&self) -> f64 {
+        self.default_stream.busy_total() + self.streams.iter().map(|s| s.busy_total()).sum::<f64>()
+    }
+
+    /// Reset all timelines (between runs).
+    pub fn reset(&mut self) {
+        self.default_stream.reset();
+        for s in &mut self.streams {
+            s.reset();
+        }
+        self.h2d.reset();
+        self.d2h.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> GpuDevice {
+        GpuDevice::new(GpuModel::a100(), 2)
+    }
+
+    #[test]
+    fn same_stream_serializes() {
+        let mut d = dev();
+        let e1 = d.enqueue(StreamId::Default, VirtTime::ZERO, 1.0);
+        let e2 = d.enqueue(StreamId::Default, VirtTime::ZERO, 1.0);
+        assert_eq!(e1, VirtTime::secs(1.0));
+        assert_eq!(e2, VirtTime::secs(2.0));
+    }
+
+    #[test]
+    fn different_streams_overlap() {
+        let mut d = dev();
+        let e1 = d.enqueue(StreamId::NonDefault(0), VirtTime::ZERO, 1.0);
+        let e2 = d.enqueue(StreamId::NonDefault(1), VirtTime::ZERO, 1.0);
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn device_free_joins_everything() {
+        let mut d = dev();
+        d.enqueue(StreamId::Default, VirtTime::ZERO, 1.0);
+        d.enqueue(StreamId::NonDefault(1), VirtTime::ZERO, 3.0);
+        d.copy_d2h(VirtTime::ZERO, 0);
+        assert_eq!(d.device_free(), VirtTime::secs(3.0));
+    }
+
+    #[test]
+    fn streams_grow_on_demand() {
+        let mut d = dev();
+        assert_eq!(d.n_streams(), 2);
+        d.enqueue(StreamId::NonDefault(7), VirtTime::ZERO, 0.5);
+        assert_eq!(d.n_streams(), 8);
+    }
+
+    #[test]
+    fn copy_engines_are_independent_directions() {
+        let mut d = dev();
+        let n = 100 << 20;
+        let t1 = d.copy_d2h(VirtTime::ZERO, n);
+        let t2 = d.copy_h2d(VirtTime::ZERO, n);
+        // Full duplex: both finish at the same time.
+        assert_eq!(t1, t2);
+        // Same direction serializes.
+        let t3 = d.copy_d2h(VirtTime::ZERO, n);
+        assert!(t3 > t1);
+    }
+
+    #[test]
+    fn reset_restores_fresh_device() {
+        let mut d = dev();
+        d.enqueue(StreamId::Default, VirtTime::ZERO, 5.0);
+        d.reset();
+        assert_eq!(d.device_free(), VirtTime::ZERO);
+        assert_eq!(d.streams_busy_total(), 0.0);
+    }
+}

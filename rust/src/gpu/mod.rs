@@ -1,0 +1,20 @@
+//! GPU device model.
+//!
+//! The paper's central observation (§3.2.2, Fig. 3) is that GPU
+//! compression kernels have a *utilization floor*: execution time
+//! decreases with input size only down to ~5 MB and then stagnates,
+//! because launch overhead and fixed kernel cost dominate. Collective
+//! algorithms that issue many small compressions (ring: N−1 chunks of
+//! D/N) therefore lose to algorithms that issue few large ones
+//! (recursive doubling: log N full-size ops) once D/N falls below the
+//! saturation knee.
+//!
+//! * [`KernelModel`] — affine-with-floor kernel cost `t(n) = L + (n + n0)/β`,
+//! * [`GpuModel`] — the full device parameter set (A100-calibrated),
+//! * [`GpuDevice`] — per-rank stream timelines + PCIe engines.
+
+pub mod device;
+pub mod model;
+
+pub use device::{GpuDevice, StreamId};
+pub use model::{GpuModel, KernelModel};

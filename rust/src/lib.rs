@@ -1,0 +1,33 @@
+//! # gZCCL — Compression-Accelerated Collective Communication
+//!
+//! A full reimplementation of *gZCCL: Compression-Accelerated Collective
+//! Communication Framework for GPU Clusters* (Huang et al., ICS '24) as
+//! a three-layer Rust + JAX + Pallas stack.
+//!
+//! The Rust layer (this crate) is the coordinator: collective algorithms
+//! (ring / recursive doubling / binomial / Bruck), compression-enabled
+//! variants (CPRP2P, C-Coll, gZCCL), a real error-bounded lossy
+//! compressor, a virtual-time cluster simulator calibrated to the
+//! paper's testbed (512×A100, Slingshot-10), and a PJRT runtime that
+//! executes JAX/Pallas-authored artifacts on the hot path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod apps;
+pub mod bench_support;
+pub mod collectives;
+pub mod config;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod gpu;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+
+pub use error::{Error, Result};

@@ -1,0 +1,288 @@
+//! gZCCL CLI: launch collectives, regenerate the paper's experiments,
+//! run the applications.
+//!
+//! ```text
+//! gzccl run        [--config F] [--set k=v ...] [--op allreduce|scatter|...] [--size-mb N]
+//! gzccl experiment <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2|fig13|all>
+//! gzccl stack      [--ranks N] [--eb X]
+//! gzccl train      [--ranks N] [--steps N] [--no-compress]
+//! gzccl characterize
+//! ```
+
+use gzccl::apps::ddp::{train_ddp, DdpConfig};
+use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingVariant};
+use gzccl::collectives::{
+    allgather_ring, allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
+    bcast_binomial, reduce_scatter_ring, scatter_binomial,
+};
+use gzccl::config::ClusterConfig;
+use gzccl::coordinator::{run_collective, DeviceBuf, RankCtx, RankProgram};
+use gzccl::error::{Error, Result};
+use gzccl::experiments as exp;
+use gzccl::runtime::Engine;
+
+/// Tiny argument cursor: flags with values, collected overrides.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args {
+            rest: std::env::args().skip(1).collect(),
+        }
+    }
+
+    fn subcommand(&mut self) -> Option<String> {
+        if self.rest.is_empty() {
+            None
+        } else {
+            Some(self.rest.remove(0))
+        }
+    }
+
+    /// Take `--flag value`, if present.
+    fn take(&mut self, flag: &str) -> Option<String> {
+        let pos = self.rest.iter().position(|a| a == flag)?;
+        if pos + 1 >= self.rest.len() {
+            return None;
+        }
+        self.rest.remove(pos);
+        Some(self.rest.remove(pos))
+    }
+
+    /// Take all occurrences of `--flag value`.
+    fn take_all(&mut self, flag: &str) -> Vec<String> {
+        let mut out = vec![];
+        while let Some(v) = self.take(flag) {
+            out.push(v);
+        }
+        out
+    }
+
+    /// Take a boolean `--flag`.
+    fn take_bool(&mut self, flag: &str) -> bool {
+        if let Some(pos) = self.rest.iter().position(|a| a == flag) {
+            self.rest.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+const USAGE: &str = "\
+gZCCL — compression-accelerated collective communication (paper reproduction)
+
+USAGE:
+  gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
+                    OP: allreduce | allreduce-ring | allreduce-tree |
+                        reduce_scatter | allgather | scatter | bcast
+  gzccl experiment  <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|
+                     table1|table2|fig13|all> [--fast]
+  gzccl stack       [--ranks N] [--eb X]
+  gzccl train       [--ranks N] [--steps N] [--no-compress]
+  gzccl characterize
+  gzccl help
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args = Args::new();
+    match args.subcommand().as_deref() {
+        Some("run") => cmd_run(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("stack") => cmd_stack(args),
+        Some("train") => cmd_train(args),
+        Some("characterize") => {
+            exp::fig03_characterization()?.print();
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::config(format!("unknown subcommand `{other}`\n{USAGE}"))),
+    }
+}
+
+fn cmd_run(mut args: Args) -> Result<()> {
+    let config = args.take("--config");
+    let overrides = args.take_all("--set");
+    let op = args.take("--op").unwrap_or_else(|| "allreduce".into());
+    let size_mb: usize = args
+        .take("--size-mb")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --size-mb")))
+        .transpose()?
+        .unwrap_or(64);
+    let cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
+    let spec = cfg.to_spec()?;
+    let n = spec.topo.ranks();
+    let elems = (size_mb << 20) / 4;
+
+    let (inputs, program): (Vec<DeviceBuf>, Box<RankProgram>) = match op.as_str() {
+        "allreduce" => (
+            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
+            Box::new(allreduce_recursive_doubling),
+        ),
+        "allreduce-ring" => (
+            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
+            Box::new(allreduce_ring),
+        ),
+        "allreduce-tree" => (
+            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
+            Box::new(allreduce_reduce_bcast),
+        ),
+        "reduce_scatter" => (
+            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
+            Box::new(reduce_scatter_ring),
+        ),
+        "allgather" => (
+            (0..n).map(|_| DeviceBuf::Virtual(elems / n)).collect(),
+            Box::new(allgather_ring),
+        ),
+        "scatter" => (
+            exp::virtual_root_inputs(n, size_mb << 20),
+            Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
+                scatter_binomial(ctx, input, elems)
+            }),
+        ),
+        "bcast" => (
+            exp::virtual_root_inputs(n, size_mb << 20),
+            Box::new(bcast_binomial),
+        ),
+        other => return Err(Error::config(format!("unknown --op `{other}`"))),
+    };
+
+    let report = run_collective(&spec, inputs, &*program)?;
+    println!(
+        "{op} | variant {} | {} ranks | {} MB",
+        cfg.variant, n, size_mb
+    );
+    println!("  virtual makespan : {}", report.makespan);
+    println!("  wire bytes       : {}", report.total_wire_bytes());
+    println!("  cpr kernel calls : {}", report.total_cpr_calls());
+    println!("  breakdown        : {}", report.total_breakdown().percent_string());
+    Ok(())
+}
+
+fn cmd_experiment(mut args: Args) -> Result<()> {
+    let fast = args.take_bool("--fast");
+    let which = args
+        .subcommand()
+        .ok_or_else(|| Error::config("experiment: which one? (fig2..fig13, table1, table2, all)"))?;
+    let ranks = if fast { 16 } else { 64 };
+    let t1_sample = if fast { 1 << 20 } else { 1 << 23 };
+    let run = |name: &str| -> Result<()> {
+        match name {
+            "fig2" => exp::fig02_breakdown(ranks, 646 << 20)?.print(),
+            "fig3" => exp::fig03_characterization()?.print(),
+            "fig6" => {
+                exp::fig06_gpu_centric(ranks, exp::Dataset::Rtm1)?.print();
+                exp::fig06_gpu_centric(ranks, exp::Dataset::Rtm2)?.print();
+            }
+            "fig7" => exp::fig07_allreduce_opt(ranks)?.print(),
+            "fig8" => exp::fig08_scatter_opt(ranks)?.print(),
+            "fig9" => exp::fig09_msgsize(ranks)?.print(),
+            "fig10" => exp::fig10_scale()?.print(),
+            "fig11" => exp::fig11_scatter_msgsize(ranks)?.print(),
+            "fig12" => exp::fig12_scatter_scale()?.print(),
+            "table1" => exp::table1_compression(t1_sample)?.print(),
+            "table2" => exp::table2_stacking(ranks, 256 << 20)?.print(),
+            "fig13" => {
+                let engine = Engine::discover().ok();
+                exp::fig13_accuracy(16, engine.as_ref(), Some(std::path::Path::new("artifacts/fig13")))?
+                    .print()
+            }
+            other => return Err(Error::config(format!("unknown experiment `{other}`"))),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig2", "fig3", "table1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+            "table2", "fig13",
+        ] {
+            run(name)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run(&which)
+    }
+}
+
+fn cmd_stack(mut args: Args) -> Result<()> {
+    let ranks = args
+        .take("--ranks")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --ranks")))
+        .transpose()?
+        .unwrap_or(16);
+    let eb = args
+        .take("--eb")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --eb")))
+        .transpose()?
+        .unwrap_or(1e-4);
+    let engine = Engine::discover().ok();
+    let cfg = StackingConfig {
+        ranks,
+        error_bound: eb,
+        ..Default::default()
+    };
+    for v in [
+        StackingVariant::CrayMpi,
+        StackingVariant::Nccl,
+        StackingVariant::GzcclRing,
+        StackingVariant::GzcclReDoub,
+    ] {
+        let out = run_stacking(&cfg, v, engine.as_ref())?;
+        println!(
+            "{:16} time {:>10} psnr {:6.2} dB nrmse {:.2e} | {}",
+            v.name(),
+            gzccl::metrics::table::fmt_time(out.makespan),
+            out.psnr,
+            out.nrmse,
+            out.breakdown.percent_string()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let ranks = args
+        .take("--ranks")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --ranks")))
+        .transpose()?
+        .unwrap_or(8);
+    let steps = args
+        .take("--steps")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --steps")))
+        .transpose()?
+        .unwrap_or(100);
+    let compress = !args.take_bool("--no-compress");
+    let engine = Engine::discover()?;
+    let cfg = DdpConfig {
+        ranks,
+        steps,
+        compress,
+        ..Default::default()
+    };
+    let out = train_ddp(&cfg, &engine)?;
+    for (i, loss) in out.loss_curve.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == out.loss_curve.len() {
+            println!("step {i:5}  loss {loss:.5}");
+        }
+    }
+    println!(
+        "allreduce virtual time {:.3} ms | wire {:.2} MB",
+        out.allreduce_time * 1e3,
+        out.wire_bytes as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Reporting: aligned ASCII tables and series, matching the paper's
+//! figure/table layouts.
+
+pub mod table;
+
+pub use table::Table;

@@ -1,0 +1,229 @@
+//! The fabric: routes virtual-time messages through link models and
+//! per-node NIC contention.
+
+use std::sync::Arc;
+
+use crate::sim::{SharedTimeline, VirtTime};
+
+use super::link::{LinkClass, LinkModel};
+use super::topology::Topology;
+
+/// Network fabric for one simulated cluster.
+///
+/// Internode messages serialize on the sender's egress NIC and the
+/// receiver's ingress NIC; intranode messages ride NVLink/NVSwitch and
+/// see no NIC contention. The number of NICs per node is configurable:
+/// the paper's testbed is Perlmutter-like (4 A100 + 4 Slingshot-10
+/// NICs per node → one NIC per GPU, the default); setting
+/// `nics_per_node = 1` reproduces a shared-NIC cluster.
+///
+/// Delivery is cut-through: the ingress NIC starts receiving `alpha`
+/// after the egress starts transmitting, so an uncontended transfer
+/// costs `alpha + bytes/beta`, not twice the serialization.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    topo: Topology,
+    intranode: LinkModel,
+    internode: LinkModel,
+    nics_per_node: usize,
+    /// Egress NIC timelines, `nodes × nics_per_node`.
+    nic_tx: Arc<Vec<SharedTimeline>>,
+    /// Ingress NIC timelines, `nodes × nics_per_node`.
+    nic_rx: Arc<Vec<SharedTimeline>>,
+}
+
+impl Fabric {
+    /// Build a fabric over `topo` with the given link models and one
+    /// NIC per GPU (Perlmutter-like).
+    pub fn new(topo: Topology, intranode: LinkModel, internode: LinkModel) -> Self {
+        let nics = topo.gpus_per_node();
+        Self::with_nics(topo, intranode, internode, nics)
+    }
+
+    /// Build a fabric with an explicit NIC count per node.
+    pub fn with_nics(
+        topo: Topology,
+        intranode: LinkModel,
+        internode: LinkModel,
+        nics_per_node: usize,
+    ) -> Self {
+        assert!(nics_per_node > 0);
+        let n = topo.nodes() * nics_per_node;
+        Fabric {
+            topo,
+            intranode,
+            internode,
+            nics_per_node,
+            nic_tx: Arc::new((0..n).map(|_| SharedTimeline::new()).collect()),
+            nic_rx: Arc::new((0..n).map(|_| SharedTimeline::new()).collect()),
+        }
+    }
+
+    /// NIC index serving `rank`.
+    fn nic_of(&self, rank: usize) -> usize {
+        self.topo.node_of(rank) * self.nics_per_node
+            + self.topo.local_of(rank) % self.nics_per_node
+    }
+
+    /// Fabric with paper-testbed defaults (NVLink intranode,
+    /// Slingshot-10 internode).
+    pub fn default_cluster(topo: Topology) -> Self {
+        Self::new(
+            topo,
+            LinkModel::nvlink_default(),
+            LinkModel::slingshot10_default(),
+        )
+    }
+
+    /// The topology this fabric spans.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Link class used between two ranks.
+    pub fn link_class(&self, from: usize, to: usize) -> LinkClass {
+        if self.topo.same_node(from, to) {
+            LinkClass::IntraNode
+        } else {
+            LinkClass::InterNode
+        }
+    }
+
+    /// Model parameters of a link class.
+    pub fn link_model(&self, class: LinkClass) -> LinkModel {
+        match class {
+            LinkClass::IntraNode => self.intranode,
+            LinkClass::InterNode => self.internode,
+            LinkClass::Pcie => LinkModel::pcie_default(),
+        }
+    }
+
+    /// Compute the arrival time of `bytes` sent from `from` to `to`,
+    /// departing (earliest) at `depart`. Reserves NIC slots as a side
+    /// effect, so concurrent senders on a node contend.
+    pub fn deliver(&self, from: usize, to: usize, bytes: usize, depart: VirtTime) -> VirtTime {
+        match self.link_class(from, to) {
+            LinkClass::IntraNode => depart + self.intranode.transfer_time(bytes),
+            LinkClass::InterNode => {
+                let ser = self.internode.serialization_time(bytes);
+                let tx = &self.nic_tx[self.nic_of(from)];
+                let (tx_start, _) = tx.reserve(depart, ser);
+                // Cut-through: ingress follows egress by the wire
+                // latency, overlapping the serialization.
+                let rx = &self.nic_rx[self.nic_of(to)];
+                let (_, rx_end) = rx.reserve(tx_start + self.internode.alpha, ser);
+                rx_end
+            }
+            LinkClass::Pcie => unreachable!("PCIe handled by the GPU model"),
+        }
+    }
+
+    /// Total busy seconds across all egress NICs (diagnostic).
+    pub fn nic_tx_busy_total(&self) -> f64 {
+        self.nic_tx.iter().map(|t| t.busy_total()).sum()
+    }
+
+    /// Reset all NIC timelines (between runs).
+    pub fn reset(&self) {
+        for t in self.nic_tx.iter().chain(self.nic_rx.iter()) {
+            t.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric_8x4() -> Fabric {
+        Fabric::new(
+            Topology::new(8, 4).unwrap(),
+            LinkModel::new(1e-6, 100e9),
+            LinkModel::new(10e-6, 10e9),
+        )
+    }
+
+    #[test]
+    fn intranode_has_no_contention() {
+        let f = fabric_8x4();
+        let n = 10_000_000;
+        let t1 = f.deliver(0, 1, n, VirtTime::ZERO);
+        let t2 = f.deliver(2, 3, n, VirtTime::ZERO);
+        // Both pairs get full bandwidth simultaneously.
+        assert_eq!(t1, t2);
+        let expect = 1e-6 + n as f64 / 100e9;
+        assert!((t1.as_secs() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_gpu_nics_do_not_contend_across_ranks() {
+        // Perlmutter-like default: each GPU has its own NIC.
+        let f = fabric_8x4();
+        let n = 10_000_000;
+        let a1 = f.deliver(0, 4, n, VirtTime::ZERO);
+        let a2 = f.deliver(1, 5, n, VirtTime::ZERO);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn shared_nic_mode_contends() {
+        let f = Fabric::with_nics(
+            Topology::new(8, 4).unwrap(),
+            LinkModel::new(1e-6, 100e9),
+            LinkModel::new(10e-6, 10e9),
+            1,
+        );
+        let n = 10_000_000; // 1 ms serialization at 10 GB/s
+        let a1 = f.deliver(0, 4, n, VirtTime::ZERO);
+        let a2 = f.deliver(1, 5, n, VirtTime::ZERO);
+        // Second message queues behind the first on the node NIC.
+        assert!(a2.as_secs() > a1.as_secs() + 0.9e-3, "a1={a1} a2={a2}");
+    }
+
+    #[test]
+    fn same_rank_messages_serialize_on_its_nic() {
+        let f = fabric_8x4();
+        let n = 10_000_000;
+        let a1 = f.deliver(0, 4, n, VirtTime::ZERO);
+        let a2 = f.deliver(0, 5, n, VirtTime::ZERO);
+        assert!(a2 > a1);
+    }
+
+    #[test]
+    fn internode_arrival_is_cut_through() {
+        let f = fabric_8x4();
+        let n = 10_000_000;
+        let ser = n as f64 / 10e9;
+        let t = f.deliver(0, 4, n, VirtTime::ZERO);
+        // Cut-through: one serialization + wire latency.
+        assert!((t.as_secs() - (ser + 10e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_contention() {
+        let f = fabric_8x4();
+        let n = 10_000_000;
+        let t1 = f.deliver(0, 4, n, VirtTime::ZERO);
+        f.reset();
+        let t2 = f.deliver(0, 4, n, VirtTime::ZERO);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn clones_share_nic_state() {
+        let f = fabric_8x4();
+        let g = f.clone();
+        let n = 10_000_000;
+        let t1 = f.deliver(0, 4, n, VirtTime::ZERO);
+        // Same source rank through a clone: shares the NIC timeline.
+        let t2 = g.deliver(0, 5, n, VirtTime::ZERO);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn depart_time_is_respected() {
+        let f = fabric_8x4();
+        let t = f.deliver(0, 1, 0, VirtTime::secs(1.0));
+        assert!(t.as_secs() >= 1.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! α–β link cost model.
+
+/// Which physical path a message takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// GPU↔GPU on the same node (NVLink/NVSwitch class).
+    IntraNode,
+    /// Across nodes via the node NICs (Slingshot class).
+    InterNode,
+    /// Host↔device over PCIe (used by CPU-centric baselines).
+    Pcie,
+}
+
+/// α–β parameters of one link class: `t(n) = alpha + n / beta`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Per-message latency in seconds (α).
+    pub alpha: f64,
+    /// Bandwidth in bytes/second (β).
+    pub beta: f64,
+}
+
+impl LinkModel {
+    /// Construct from latency (seconds) and bandwidth (bytes/sec).
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        assert!(alpha >= 0.0 && beta > 0.0, "bad link model");
+        LinkModel { alpha, beta }
+    }
+
+    /// Transfer time for `bytes` on this link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.alpha + bytes as f64 / self.beta
+    }
+
+    /// Serialization-only time (no latency term) — the component that
+    /// occupies the shared NIC for internode messages.
+    pub fn serialization_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.beta
+    }
+
+    /// NVLink-class intranode defaults (A100 NVLink3, per-pair
+    /// effective): ~5 µs latency, 200 GB/s.
+    pub fn nvlink_default() -> Self {
+        LinkModel::new(5e-6, 200e9)
+    }
+
+    /// Slingshot-10-class internode defaults: 100 Gbps = 12.5 GB/s per
+    /// node NIC, ~15 µs end-to-end latency.
+    pub fn slingshot10_default() -> Self {
+        LinkModel::new(15e-6, 12.5e9)
+    }
+
+    /// PCIe gen4 x16 defaults: ~25 GB/s, 10 µs.
+    pub fn pcie_default() -> Self {
+        LinkModel::new(10e-6, 25e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_affine() {
+        let l = LinkModel::new(1e-6, 1e9);
+        let t1 = l.transfer_time(1_000_000);
+        assert!((t1 - (1e-6 + 1e-3)).abs() < 1e-12);
+        // Zero bytes = pure latency.
+        assert!((l.transfer_time(0) - 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn serialization_excludes_latency() {
+        let l = LinkModel::new(1e-3, 1e9);
+        assert!((l.serialization_time(1_000_000) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn internode_slower_than_intranode_for_large_msgs() {
+        let nv = LinkModel::nvlink_default();
+        let ss = LinkModel::slingshot10_default();
+        let n = 100 << 20;
+        assert!(ss.transfer_time(n) > 10.0 * nv.transfer_time(n));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad link model")]
+    fn zero_bandwidth_rejected() {
+        LinkModel::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Cluster network model.
+//!
+//! The paper's testbed is 128 nodes × 4 A100s, HPE Slingshot-10 (100
+//! Gbps per node NIC) internode, NVLink intranode. We model:
+//!
+//! * [`Topology`] — rank ↔ (node, local GPU) layout,
+//! * [`LinkModel`] — α–β cost per message class (latency + serialization),
+//! * [`Fabric`] — per-node NIC contention via shared timelines, and the
+//!   arrival-time computation used by the coordinator's send path.
+//!
+//! Intranode transfers (GPU↔GPU over NVLink/NVSwitch) do not touch the
+//! NIC; internode transfers serialize on both the sender's and the
+//! receiver's node NIC, which is exactly the effect that makes 4
+//! GPUs/node contend for 12.5 GB/s and makes message-volume reduction
+//! (compression) so profitable in the paper.
+
+pub mod fabric;
+pub mod link;
+pub mod topology;
+
+pub use fabric::Fabric;
+pub use link::{LinkClass, LinkModel};
+pub use topology::Topology;

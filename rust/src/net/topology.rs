@@ -1,0 +1,115 @@
+//! Rank ↔ node layout.
+
+use crate::error::{Error, Result};
+
+/// Physical layout of ranks onto nodes.
+///
+/// Ranks are laid out block-wise (ranks `[k*g, (k+1)*g)` live on node
+/// `k`, `g` = GPUs per node), matching how MPI launchers place ranks on
+/// GPU clusters and how the paper counts "8 GPUs = minimum for both
+/// internode and intranode communication".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    ranks: usize,
+    gpus_per_node: usize,
+}
+
+impl Topology {
+    /// Build a topology of `ranks` total GPUs with `gpus_per_node` each.
+    ///
+    /// `ranks` need not be a multiple of `gpus_per_node` (the last node
+    /// may be partially filled), but both must be non-zero.
+    pub fn new(ranks: usize, gpus_per_node: usize) -> Result<Self> {
+        if ranks == 0 {
+            return Err(Error::config("topology: ranks must be > 0"));
+        }
+        if gpus_per_node == 0 {
+            return Err(Error::config("topology: gpus_per_node must be > 0"));
+        }
+        Ok(Topology {
+            ranks,
+            gpus_per_node,
+        })
+    }
+
+    /// Total number of ranks (= GPUs).
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// GPUs per node.
+    pub fn gpus_per_node(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    /// Number of nodes (ceiling division).
+    pub fn nodes(&self) -> usize {
+        self.ranks.div_ceil(self.gpus_per_node)
+    }
+
+    /// Node that hosts `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.ranks);
+        rank / self.gpus_per_node
+    }
+
+    /// Local GPU index of `rank` on its node.
+    pub fn local_of(&self, rank: usize) -> usize {
+        rank % self.gpus_per_node
+    }
+
+    /// Whether two ranks share a node (→ NVLink path, no NIC involved).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_blockwise() {
+        let t = Topology::new(8, 4).unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.local_of(5), 1);
+        assert!(t.same_node(0, 3));
+        assert!(!t.same_node(3, 4));
+    }
+
+    #[test]
+    fn partial_last_node() {
+        let t = Topology::new(10, 4).unwrap();
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.node_of(9), 2);
+    }
+
+    #[test]
+    fn paper_testbed_shape() {
+        // 512 GPUs over 128 nodes, 4 GPUs each.
+        let t = Topology::new(512, 4).unwrap();
+        assert_eq!(t.nodes(), 128);
+        assert!(t.same_node(508, 511));
+        assert!(!t.same_node(3, 4));
+    }
+
+    #[test]
+    fn zero_args_rejected() {
+        assert!(Topology::new(0, 4).is_err());
+        assert!(Topology::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn single_node_cluster() {
+        let t = Topology::new(4, 4).unwrap();
+        assert_eq!(t.nodes(), 1);
+        for a in 0..4 {
+            for b in 0..4 {
+                assert!(t.same_node(a, b));
+            }
+        }
+    }
+}

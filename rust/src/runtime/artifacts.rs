@@ -1,0 +1,183 @@
+//! Artifact names and the shape contract with `python/compile/model.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Shape constants mirrored from `python/compile/model.py`; validated
+/// against `artifacts/manifest.txt` at engine startup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Shapes {
+    /// Flattened image-stacking image length (128×128).
+    pub img_elems: usize,
+    /// Compression round-trip vector length.
+    pub cpr_elems: usize,
+    /// AOT-baked absolute error bound.
+    pub default_eb: f64,
+    /// Flat MLP parameter count (padded).
+    pub mlp_params: usize,
+    /// MLP input features.
+    pub mlp_in: usize,
+    /// MLP output features.
+    pub mlp_out: usize,
+    /// MLP batch size.
+    pub mlp_batch: usize,
+}
+
+impl Shapes {
+    /// The compiled-in contract.
+    pub const fn expected() -> Shapes {
+        Shapes {
+            img_elems: 128 * 128,
+            cpr_elems: 64 * 1024,
+            default_eb: 1e-4,
+            mlp_params: 20_992,
+            mlp_in: 64,
+            mlp_out: 16,
+            mlp_batch: 256,
+        }
+    }
+
+    /// Parse `manifest.txt` produced by `python -m compile.aot`.
+    pub fn from_manifest(text: &str) -> Result<Shapes> {
+        let mut s = Shapes::expected();
+        let mut seen = 0;
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let (Some(key), Some(val)) = (it.next(), it.next()) else {
+                continue;
+            };
+            seen += 1;
+            match key {
+                "img_elems" => s.img_elems = val.parse().map_err(bad(line))?,
+                "cpr_elems" => s.cpr_elems = val.parse().map_err(bad(line))?,
+                "default_eb" => {
+                    s.default_eb = val
+                        .parse()
+                        .map_err(|_| Error::runtime(format!("bad manifest line: {line}")))?
+                }
+                "mlp_params" => s.mlp_params = val.parse().map_err(bad(line))?,
+                "mlp_in" => s.mlp_in = val.parse().map_err(bad(line))?,
+                "mlp_out" => s.mlp_out = val.parse().map_err(bad(line))?,
+                "mlp_batch" => s.mlp_batch = val.parse().map_err(bad(line))?,
+                _ => {
+                    seen -= 1;
+                }
+            }
+        }
+        if seen < 7 {
+            return Err(Error::runtime("manifest.txt missing shape entries"));
+        }
+        Ok(s)
+    }
+}
+
+fn bad(line: &str) -> impl Fn(std::num::ParseIntError) -> Error + '_ {
+    move |_| Error::runtime(format!("bad manifest line: {line}"))
+}
+
+/// The artifact directory and its expected contents.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    dir: PathBuf,
+}
+
+/// Every artifact the AOT step must produce.
+pub const ARTIFACT_NAMES: [&str; 6] = [
+    "reduce_pair",
+    "stack_update",
+    "quantize",
+    "dequantize",
+    "mlp_grads",
+    "mlp_apply",
+];
+
+impl ArtifactSet {
+    /// Point at an artifact directory (typically `artifacts/`).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        ArtifactSet { dir: dir.into() }
+    }
+
+    /// Locate the artifact dir relative to the repo root, walking up
+    /// from the current directory (tests run from nested dirs).
+    pub fn discover() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.txt").is_file() {
+                return Ok(ArtifactSet::new(cand));
+            }
+            if !dir.pop() {
+                return Err(Error::runtime(
+                    "artifacts/ not found — run `make artifacts` first",
+                ));
+            }
+        }
+    }
+
+    /// Path of one artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Check presence of every artifact + parse and validate shapes.
+    pub fn validate(&self) -> Result<Shapes> {
+        for name in ARTIFACT_NAMES {
+            let p = self.hlo_path(name);
+            if !p.is_file() {
+                return Err(Error::runtime(format!("missing artifact {}", p.display())));
+            }
+        }
+        let manifest = std::fs::read_to_string(self.dir.join("manifest.txt"))?;
+        let shapes = Shapes::from_manifest(&manifest)?;
+        let exp = Shapes::expected();
+        if shapes != exp {
+            return Err(Error::runtime(format!(
+                "artifact shapes {shapes:?} do not match the compiled-in contract {exp:?}; \
+                 re-run `make artifacts` after syncing model.py and artifacts.rs"
+            )));
+        }
+        Ok(shapes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = "img_elems 16384\ncpr_elems 65536\ndefault_eb 0.0001\n\
+                    mlp_params 20992\nmlp_in 64\nmlp_out 16\nmlp_batch 256\n\
+                    reduce_pair sha256:aa bytes:100\n";
+        let s = Shapes::from_manifest(text).unwrap();
+        assert_eq!(s, Shapes::expected());
+    }
+
+    #[test]
+    fn manifest_missing_entries_rejected() {
+        assert!(Shapes::from_manifest("img_elems 16384\n").is_err());
+    }
+
+    #[test]
+    fn mlp_params_matches_python_formula() {
+        // ceil((64*256 + 256 + 256*16 + 16) / 256) * 256
+        let raw: usize = 64 * 256 + 256 + 256 * 16 + 16;
+        let padded = raw.div_ceil(256) * 256;
+        assert_eq!(Shapes::expected().mlp_params, padded);
+    }
+
+    #[test]
+    fn discover_finds_repo_artifacts() {
+        // `make artifacts` ran in this workspace; discovery must work
+        // from the test cwd.
+        let set = ArtifactSet::discover().expect("run `make artifacts` first");
+        let shapes = set.validate().unwrap();
+        assert_eq!(shapes, Shapes::expected());
+    }
+}

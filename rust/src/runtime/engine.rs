@@ -1,0 +1,306 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate: parse HLO text → compile once per artifact on
+//! the PJRT CPU client → execute with concrete inputs. Executables are
+//! cached; compilation happens at most once per artifact per engine.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+use super::artifacts::{ArtifactSet, Shapes};
+
+/// A runtime value crossing the Rust↔PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// f32 tensor with explicit dims.
+    F32(Vec<f32>, Vec<i64>),
+    /// i32 tensor with explicit dims.
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Value {
+    /// Flat f32 vector (1-D).
+    pub fn f32v(data: Vec<f32>) -> Value {
+        let n = data.len() as i64;
+        Value::F32(data, vec![n])
+    }
+
+    /// Flat i32 vector (1-D).
+    pub fn i32v(data: Vec<i32>) -> Value {
+        let n = data.len() as i64;
+        Value::I32(data, vec![n])
+    }
+
+    /// 2-D f32 tensor.
+    pub fn f32m(data: Vec<f32>, rows: usize, cols: usize) -> Value {
+        assert_eq!(data.len(), rows * cols);
+        Value::F32(data, vec![rows as i64, cols as i64])
+    }
+
+    /// Unwrap as f32 data (panics otherwise).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Value::F32(v, _) => v,
+            Value::I32(..) => panic!("expected f32 value"),
+        }
+    }
+
+    /// Unwrap as i32 data (panics otherwise).
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            Value::I32(v, _) => v,
+            Value::F32(..) => panic!("expected i32 value"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(v, dims) => xla::Literal::vec1(v).reshape(dims),
+            Value::I32(v, dims) => xla::Literal::vec1(v).reshape(dims),
+        };
+        lit.map_err(|e| Error::runtime(format!("literal build failed: {e}")))
+    }
+}
+
+fn literal_to_value(lit: &xla::Literal) -> Result<Value> {
+    let ty = lit
+        .element_type()
+        .map_err(|e| Error::runtime(format!("element_type: {e}")))?;
+    match ty {
+        xla::ElementType::F32 => Ok(Value::f32v(
+            lit.to_vec::<f32>()
+                .map_err(|e| Error::runtime(format!("to_vec<f32>: {e}")))?,
+        )),
+        xla::ElementType::S32 => Ok(Value::i32v(
+            lit.to_vec::<i32>()
+                .map_err(|e| Error::runtime(format!("to_vec<i32>: {e}")))?,
+        )),
+        other => Err(Error::runtime(format!("unsupported output type {other:?}"))),
+    }
+}
+
+/// Compiled-artifact cache + PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: ArtifactSet,
+    shapes: Shapes,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact set (validates it).
+    pub fn new(artifacts: ArtifactSet) -> Result<Self> {
+        let shapes = artifacts.validate()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Engine {
+            client,
+            artifacts,
+            shapes,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Create an engine by discovering `artifacts/` from the cwd.
+    pub fn discover() -> Result<Self> {
+        Self::new(ArtifactSet::discover()?)
+    }
+
+    /// The validated shape contract.
+    pub fn shapes(&self) -> Shapes {
+        self.shapes
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {name}: {e}")))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the flattened
+    /// tuple outputs (aot.py lowers everything with `return_tuple`).
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("readback {name}: {e}")))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| Error::runtime(format!("untuple {name}: {e}")))?;
+        parts.iter().map(literal_to_value).collect()
+    }
+
+    // ---- typed convenience wrappers used by the apps ----------------
+
+    /// `reduce_pair(a, b) = a + b` on the device graph.
+    pub fn reduce_pair(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let out = self.run(
+            "reduce_pair",
+            &[Value::f32v(a.to_vec()), Value::f32v(b.to_vec())],
+        )?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+
+    /// Quantize at the AOT-baked error bound.
+    pub fn quantize(&self, x: &[f32]) -> Result<Vec<i32>> {
+        let out = self.run("quantize", &[Value::f32v(x.to_vec())])?;
+        Ok(out.into_iter().next().unwrap().into_i32())
+    }
+
+    /// Dequantize (inverse of [`Engine::quantize`]).
+    pub fn dequantize(&self, d: &[i32]) -> Result<Vec<f32>> {
+        let out = self.run("dequantize", &[Value::i32v(d.to_vec())])?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+
+    /// MLP loss + flat gradients for one batch.
+    pub fn mlp_grads(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let s = self.shapes;
+        let out = self.run(
+            "mlp_grads",
+            &[
+                Value::f32v(params.to_vec()),
+                Value::f32m(x.to_vec(), s.mlp_batch, s.mlp_in),
+                Value::f32m(y.to_vec(), s.mlp_batch, s.mlp_out),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().into_f32()[0];
+        let grads = it.next().unwrap().into_f32();
+        Ok((loss, grads))
+    }
+
+    /// SGD apply step (AOT-baked learning rate).
+    pub fn mlp_apply(&self, params: &[f32], grads: &[f32]) -> Result<Vec<f32>> {
+        let out = self.run(
+            "mlp_apply",
+            &[Value::f32v(params.to_vec()), Value::f32v(grads.to_vec())],
+        )?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Pcg32;
+
+    thread_local! {
+        // The PJRT client is not Send/Sync: one engine per test thread.
+        static ENGINE: Engine =
+            Engine::discover().expect("run `make artifacts` before cargo test");
+    }
+
+    fn with_engine<R>(f: impl FnOnce(&Engine) -> R) -> R {
+        ENGINE.with(|e| f(e))
+    }
+
+    #[test]
+    fn reduce_pair_adds() {
+        with_engine(|e| {
+        let n = e.shapes().img_elems;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b = vec![2.0f32; n];
+        let out = e.reduce_pair(&a, &b).unwrap();
+        assert_eq!(out.len(), n);
+        assert_eq!(out[0], 2.0);
+        assert_eq!(out[100], 102.0);
+        });
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded() {
+        with_engine(|e| {
+        let n = e.shapes().cpr_elems;
+        let eb = e.shapes().default_eb as f32;
+        let mut rng = Pcg32::seeded(42);
+        let x = rng.uniform_vec(n, -2.0, 2.0);
+        let codes = e.quantize(&x).unwrap();
+        let back = e.dequantize(&codes).unwrap();
+        for (a, b) in back.iter().zip(x.iter()) {
+            assert!((a - b).abs() <= eb * 1.01 + 2.0 * 1e-6);
+        }
+        });
+    }
+
+    #[test]
+    fn quantize_agrees_with_rust_compressor_semantics() {
+        // The PJRT quantize and the Rust cuSZp-like prequant use the
+        // same bins: reconstructions must agree to f32 slack.
+        with_engine(|e| {
+        let n = e.shapes().cpr_elems;
+        let eb = e.shapes().default_eb;
+        let mut rng = Pcg32::seeded(3);
+        let x = rng.uniform_vec(n, -1.0, 1.0);
+        let via_pjrt = e.dequantize(&e.quantize(&x).unwrap()).unwrap();
+        use crate::compress::{Compressor, CuszpLike};
+        let c = CuszpLike::new(eb);
+        let via_rust = c.decompress(&c.compress(&x)).unwrap();
+        for (a, b) in via_pjrt.iter().zip(via_rust.iter()) {
+            // Each path reconstructs within eb of x (f64 vs f32
+            // rounding may pick adjacent bins near boundaries).
+            assert!((a - b).abs() <= 2.0 * eb as f32 * 1.05 + 1e-6);
+        }
+        });
+    }
+
+    #[test]
+    fn mlp_grads_and_apply_learn() {
+        with_engine(|e| {
+        let s = e.shapes();
+        let mut rng = Pcg32::seeded(7);
+        let mut params: Vec<f32> = (0..s.mlp_params).map(|_| rng.next_gaussian() * 0.1).collect();
+        // Synthetic batch: y = first OUT features of tanh(x).
+        let x: Vec<f32> = (0..s.mlp_batch * s.mlp_in)
+            .map(|_| rng.next_gaussian())
+            .collect();
+        let y: Vec<f32> = (0..s.mlp_batch)
+            .flat_map(|r| {
+                (0..s.mlp_out)
+                    .map(|c| (x[r * s.mlp_in + c]).tanh() * 0.5)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let (first, _) = e.mlp_grads(&params, &x, &y).unwrap();
+        for _ in 0..20 {
+            let (_, g) = e.mlp_grads(&params, &x, &y).unwrap();
+            params = e.mlp_apply(&params, &g).unwrap();
+        }
+        let (last, _) = e.mlp_grads(&params, &x, &y).unwrap();
+        assert!(
+            last < 0.7 * first,
+            "loss did not decrease: {first} -> {last}"
+        );
+        });
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        with_engine(|e| {
+            assert!(e.run("nonexistent", &[]).is_err());
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the JAX/Pallas-authored artifacts.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the Rust binary self-contained afterwards: it parses the HLO *text*
+//! artifacts (the id-safe interchange format — see `python/compile/
+//! aot.py`), compiles them once on the PJRT CPU client, and executes
+//! them from the coordinator's hot paths (image-stacking reduction, DDP
+//! gradient/apply steps, quantization round-trips).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSet, Shapes};
+pub use engine::{Engine, Value};

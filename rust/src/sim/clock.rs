@@ -1,0 +1,115 @@
+//! Per-rank host clock.
+//!
+//! Each rank owns a [`RankClock`]: the virtual timestamp its *host*
+//! thread has reached, plus the phase accumulator. Device-side work
+//! (kernels on streams, NIC transfers) advances *timelines*, not the
+//! host clock; the host clock only advances when the host blocks (API
+//! call cost, synchronization, blocking recv).
+
+use super::phase::{Breakdown, Phase};
+use super::time::VirtTime;
+
+/// A rank's host clock + phase accounting.
+#[derive(Debug, Clone, Default)]
+pub struct RankClock {
+    now: VirtTime,
+    breakdown: Breakdown,
+}
+
+impl RankClock {
+    /// A clock at time zero with an empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current host time.
+    pub fn now(&self) -> VirtTime {
+        self.now
+    }
+
+    /// Advance the host clock by `dur`, charging `phase`.
+    pub fn advance(&mut self, phase: Phase, dur: f64) -> VirtTime {
+        debug_assert!(dur >= 0.0);
+        self.now += dur;
+        self.breakdown.charge(phase, dur);
+        self.now
+    }
+
+    /// Block the host until `t` (no-op if already past); the waiting gap
+    /// is *not* charged to any phase — use [`RankClock::wait_charged`]
+    /// when the wait itself is attributable (e.g. blocking on comm).
+    pub fn wait_until(&mut self, t: VirtTime) -> VirtTime {
+        self.now = self.now.join(t);
+        self.now
+    }
+
+    /// Block until `t`, charging the waited gap to `phase`.
+    pub fn wait_charged(&mut self, phase: Phase, t: VirtTime) -> VirtTime {
+        let gap = t.since(self.now);
+        if gap > 0.0 {
+            self.breakdown.charge(phase, gap);
+        }
+        self.now = self.now.join(t);
+        self.now
+    }
+
+    /// Charge `dur` to `phase` without advancing the host clock (device-
+    /// side busy time that overlaps host progress).
+    pub fn charge_only(&mut self, phase: Phase, dur: f64) {
+        self.breakdown.charge(phase, dur);
+    }
+
+    /// The accumulated phase breakdown.
+    pub fn breakdown(&self) -> Breakdown {
+        self.breakdown
+    }
+
+    /// Reset to time zero and clear the breakdown.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_moves_clock_and_charges() {
+        let mut c = RankClock::new();
+        c.advance(Phase::Other, 1.0);
+        c.advance(Phase::Cpr, 2.0);
+        assert_eq!(c.now(), VirtTime::secs(3.0));
+        assert_eq!(c.breakdown().cpr, 2.0);
+        assert_eq!(c.breakdown().other, 1.0);
+    }
+
+    #[test]
+    fn wait_until_never_goes_backwards() {
+        let mut c = RankClock::new();
+        c.advance(Phase::Other, 5.0);
+        c.wait_until(VirtTime::secs(2.0));
+        assert_eq!(c.now(), VirtTime::secs(5.0));
+        c.wait_until(VirtTime::secs(7.0));
+        assert_eq!(c.now(), VirtTime::secs(7.0));
+    }
+
+    #[test]
+    fn wait_charged_charges_only_the_gap() {
+        let mut c = RankClock::new();
+        c.advance(Phase::Other, 1.0);
+        c.wait_charged(Phase::Comm, VirtTime::secs(3.0));
+        assert_eq!(c.breakdown().comm, 2.0);
+        // Already past: nothing charged.
+        c.wait_charged(Phase::Comm, VirtTime::secs(2.0));
+        assert_eq!(c.breakdown().comm, 2.0);
+    }
+
+    #[test]
+    fn charge_only_leaves_clock() {
+        let mut c = RankClock::new();
+        c.charge_only(Phase::Redu, 4.0);
+        assert_eq!(c.now(), VirtTime::ZERO);
+        assert_eq!(c.breakdown().redu, 4.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Virtual-time simulation core.
+//!
+//! gZCCL's collectives run as *real* code (real bytes move between rank
+//! threads, real compressors run) while *time* is virtual: every
+//! operation charges a modeled duration to a resource timeline (a GPU
+//! stream, a PCIe engine, a NIC). This module provides the primitives:
+//!
+//! * [`VirtTime`] — an `f64` seconds wrapper with explicit semantics,
+//! * [`Timeline`] — a busy-until scalar resource (stream / NIC / engine),
+//! * [`Phase`] / [`Breakdown`] — per-phase accounting matching the
+//!   paper's CPR / COMM / DATAMOVE / REDU / OTHERS breakdown (Fig. 2,
+//!   Table 2),
+//! * [`RankClock`] — a rank's host clock plus its phase accumulator.
+//!
+//! The semantics are those of a conservative parallel discrete-event
+//! simulation: ranks only ever *join* on timestamps they have received
+//! (`max`), so causality cannot be violated.
+
+pub mod clock;
+pub mod phase;
+pub mod time;
+pub mod timeline;
+
+pub use clock::RankClock;
+pub use phase::{Breakdown, Phase};
+pub use time::VirtTime;
+pub use timeline::{SharedTimeline, Timeline};

@@ -1,0 +1,187 @@
+//! Per-phase time accounting.
+//!
+//! The paper breaks collective runtime into compression (CPR),
+//! communication (COMM), host-device transfer (DATAMOVE), reduction
+//! (REDU) and everything else (OTHERS) — Fig. 2 and Table 2. Every
+//! modeled operation in the coordinator is tagged with a [`Phase`], and
+//! a [`Breakdown`] accumulates busy seconds per phase.
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// Phase tag for a modeled operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Compression + decompression kernels.
+    Cpr,
+    /// Network communication (intra- or internode).
+    Comm,
+    /// Host<->device data movement (PCIe staging).
+    DataMove,
+    /// Reduction kernels (GPU) or host reduction loops.
+    Redu,
+    /// Kernel launches, memsets, synchronization, packing, misc.
+    Other,
+}
+
+impl Phase {
+    /// All phases, in the paper's reporting order.
+    pub const ALL: [Phase; 5] = [
+        Phase::Cpr,
+        Phase::Comm,
+        Phase::DataMove,
+        Phase::Redu,
+        Phase::Other,
+    ];
+
+    /// Short label used in tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Cpr => "CPR",
+            Phase::Comm => "COMM",
+            Phase::DataMove => "DATAMOVE",
+            Phase::Redu => "REDU",
+            Phase::Other => "OTHERS",
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Accumulated busy seconds per phase for one rank (or aggregated).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// Compression/decompression seconds.
+    pub cpr: f64,
+    /// Communication seconds.
+    pub comm: f64,
+    /// Host-device transfer seconds.
+    pub datamove: f64,
+    /// Reduction seconds.
+    pub redu: f64,
+    /// Everything else.
+    pub other: f64,
+}
+
+impl Breakdown {
+    /// Zeroed breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `dur` seconds to `phase`.
+    pub fn charge(&mut self, phase: Phase, dur: f64) {
+        debug_assert!(dur >= 0.0);
+        match phase {
+            Phase::Cpr => self.cpr += dur,
+            Phase::Comm => self.comm += dur,
+            Phase::DataMove => self.datamove += dur,
+            Phase::Redu => self.redu += dur,
+            Phase::Other => self.other += dur,
+        }
+    }
+
+    /// Seconds charged to `phase`.
+    pub fn get(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Cpr => self.cpr,
+            Phase::Comm => self.comm,
+            Phase::DataMove => self.datamove,
+            Phase::Redu => self.redu,
+            Phase::Other => self.other,
+        }
+    }
+
+    /// Sum over all phases.
+    pub fn total(&self) -> f64 {
+        self.cpr + self.comm + self.datamove + self.redu + self.other
+    }
+
+    /// Fraction of the total charged to `phase` (0 if empty).
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.get(phase) / t
+        }
+    }
+
+    /// Render as `CPR 42.6% | COMM 46.3% | ...` percentages.
+    pub fn percent_string(&self) -> String {
+        Phase::ALL
+            .iter()
+            .map(|p| format!("{} {:5.2}%", p.label(), 100.0 * self.fraction(*p)))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+impl Add for Breakdown {
+    type Output = Breakdown;
+    fn add(self, o: Breakdown) -> Breakdown {
+        Breakdown {
+            cpr: self.cpr + o.cpr,
+            comm: self.comm + o.comm,
+            datamove: self.datamove + o.datamove,
+            redu: self.redu + o.redu,
+            other: self.other + o.other,
+        }
+    }
+}
+
+impl AddAssign for Breakdown {
+    fn add_assign(&mut self, o: Breakdown) {
+        *self = *self + o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_total() {
+        let mut b = Breakdown::new();
+        b.charge(Phase::Cpr, 1.0);
+        b.charge(Phase::Comm, 2.0);
+        b.charge(Phase::Other, 1.0);
+        assert_eq!(b.total(), 4.0);
+        assert_eq!(b.get(Phase::Comm), 2.0);
+        assert!((b.fraction(Phase::Cpr) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fraction_is_zero() {
+        let b = Breakdown::new();
+        assert_eq!(b.fraction(Phase::Redu), 0.0);
+    }
+
+    #[test]
+    fn add_accumulates_fieldwise() {
+        let mut a = Breakdown::new();
+        a.charge(Phase::Redu, 1.5);
+        let mut b = Breakdown::new();
+        b.charge(Phase::Redu, 0.5);
+        b.charge(Phase::DataMove, 2.0);
+        let c = a + b;
+        assert_eq!(c.redu, 2.0);
+        assert_eq!(c.datamove, 2.0);
+        a += b;
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn percent_string_mentions_all_phases() {
+        let mut b = Breakdown::new();
+        b.charge(Phase::Cpr, 1.0);
+        let s = b.percent_string();
+        for p in Phase::ALL {
+            assert!(s.contains(p.label()), "{s} missing {p}");
+        }
+    }
+}

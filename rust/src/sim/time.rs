@@ -1,0 +1,123 @@
+//! Virtual timestamps.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time, in seconds since the start of a collective.
+///
+/// Plain `f64` underneath; the wrapper exists so that timestamps and
+/// durations cannot be silently mixed with unrelated floats, and so that
+/// `max`-join semantics read naturally at call sites.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct VirtTime(pub f64);
+
+impl VirtTime {
+    /// Time zero (start of the operation under simulation).
+    pub const ZERO: VirtTime = VirtTime(0.0);
+
+    /// Construct from seconds.
+    pub fn secs(s: f64) -> Self {
+        VirtTime(s)
+    }
+
+    /// Construct from microseconds.
+    pub fn micros(us: f64) -> Self {
+        VirtTime(us * 1e-6)
+    }
+
+    /// Seconds as f64.
+    pub fn as_secs(self) -> f64 {
+        self.0
+    }
+
+    /// Microseconds as f64.
+    pub fn as_micros(self) -> f64 {
+        self.0 * 1e6
+    }
+
+    /// Milliseconds as f64.
+    pub fn as_millis(self) -> f64 {
+        self.0 * 1e3
+    }
+
+    /// Join: the later of two timestamps (dependency merge).
+    pub fn join(self, other: VirtTime) -> VirtTime {
+        VirtTime(self.0.max(other.0))
+    }
+
+    /// Saturating difference (returns zero if `other` is later).
+    pub fn since(self, other: VirtTime) -> f64 {
+        (self.0 - other.0).max(0.0)
+    }
+}
+
+impl Add<f64> for VirtTime {
+    type Output = VirtTime;
+    fn add(self, d: f64) -> VirtTime {
+        VirtTime(self.0 + d)
+    }
+}
+
+impl AddAssign<f64> for VirtTime {
+    fn add_assign(&mut self, d: f64) {
+        self.0 += d;
+    }
+}
+
+impl Sub<VirtTime> for VirtTime {
+    type Output = f64;
+    fn sub(self, other: VirtTime) -> f64 {
+        self.0 - other.0
+    }
+}
+
+impl fmt::Display for VirtTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1.0 {
+            write!(f, "{:.4}s", self.0)
+        } else if self.0 >= 1e-3 {
+            write!(f, "{:.3}ms", self.0 * 1e3)
+        } else {
+            write!(f, "{:.2}us", self.0 * 1e6)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_takes_max() {
+        let a = VirtTime::secs(1.0);
+        let b = VirtTime::secs(2.0);
+        assert_eq!(a.join(b), b);
+        assert_eq!(b.join(a), b);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = VirtTime::secs(1.0) + 0.5;
+        assert!((t.as_secs() - 1.5).abs() < 1e-12);
+        assert!((t - VirtTime::secs(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn since_saturates() {
+        assert_eq!(VirtTime::secs(1.0).since(VirtTime::secs(2.0)), 0.0);
+        assert_eq!(VirtTime::secs(2.0).since(VirtTime::secs(0.5)), 1.5);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", VirtTime::secs(2.5)), "2.5000s");
+        assert_eq!(format!("{}", VirtTime::secs(0.002)), "2.000ms");
+        assert_eq!(format!("{}", VirtTime::micros(12.0)), "12.00us");
+    }
+
+    #[test]
+    fn micros_round_trip() {
+        let t = VirtTime::micros(123.0);
+        assert!((t.as_micros() - 123.0).abs() < 1e-9);
+    }
+}

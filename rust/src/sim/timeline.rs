@@ -1,0 +1,252 @@
+//! Resource timelines.
+//!
+//! A [`Timeline`] models a serially-reusable resource (a GPU stream, a
+//! PCIe copy engine, a node NIC): it is busy until some timestamp, and a
+//! new operation that becomes *ready* at `ready` actually *starts* at
+//! `max(ready, busy_until)`. This single primitive gives us overlap,
+//! pipelining, and contention for free.
+
+use std::sync::{Arc, Mutex};
+
+use super::time::VirtTime;
+
+/// A single serially-reusable virtual resource.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    busy_until: VirtTime,
+    /// Total busy time accumulated on this resource.
+    busy_total: f64,
+}
+
+impl Timeline {
+    /// A timeline that is free from time zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve the resource for `dur` seconds, not starting before
+    /// `ready`. Returns `(start, end)` of the granted slot.
+    pub fn reserve(&mut self, ready: VirtTime, dur: f64) -> (VirtTime, VirtTime) {
+        debug_assert!(dur >= 0.0, "negative duration {dur}");
+        let start = ready.join(self.busy_until);
+        let end = start + dur;
+        self.busy_until = end;
+        self.busy_total += dur;
+        (start, end)
+    }
+
+    /// Timestamp at which the resource becomes free.
+    pub fn busy_until(&self) -> VirtTime {
+        self.busy_until
+    }
+
+    /// Total busy seconds accumulated.
+    pub fn busy_total(&self) -> f64 {
+        self.busy_total
+    }
+
+    /// Reset to free-at-zero (reused between runs).
+    pub fn reset(&mut self) {
+        self.busy_until = VirtTime::ZERO;
+        self.busy_total = 0.0;
+    }
+}
+
+/// An interval-allocating timeline with gap filling.
+///
+/// Rank threads progress through *virtual* time at different *wall*
+/// speeds, so reservation requests arrive out of virtual-time order. A
+/// high-water-mark timeline would queue an early-virtual-time message
+/// behind a future round reserved by a faster thread — wildly inflating
+/// latencies. This timeline instead allocates the earliest free
+/// interval at-or-after `ready`, which makes the schedule insensitive
+/// to wall-clock arrival order (up to ties). Used for NICs, where
+/// packet interleaving is physical; per-rank GPU streams keep the FIFO
+/// [`Timeline`] since their issue order *is* causal order.
+#[derive(Debug, Clone, Default)]
+pub struct IntervalTimeline {
+    /// Sorted, non-overlapping (start, end) allocations.
+    intervals: Vec<(f64, f64)>,
+    busy_total: f64,
+}
+
+impl IntervalTimeline {
+    /// An empty timeline.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve `dur` seconds at the earliest free slot ≥ `ready`.
+    pub fn reserve(&mut self, ready: VirtTime, dur: f64) -> (VirtTime, VirtTime) {
+        debug_assert!(dur >= 0.0);
+        let mut t = ready.as_secs();
+        let mut pos = self.intervals.len();
+        for (i, &(s, e)) in self.intervals.iter().enumerate() {
+            if t + dur <= s {
+                // Fits entirely in the gap before interval i.
+                pos = i;
+                break;
+            }
+            if e > t {
+                t = e;
+            }
+        }
+        self.intervals.insert(pos, (t, t + dur));
+        self.busy_total += dur;
+        (VirtTime::secs(t), VirtTime::secs(t + dur))
+    }
+
+    /// Latest allocated end (0 if empty).
+    pub fn busy_until(&self) -> VirtTime {
+        VirtTime::secs(self.intervals.last().map(|&(_, e)| e).unwrap_or(0.0))
+    }
+
+    /// Total busy seconds accumulated.
+    pub fn busy_total(&self) -> f64 {
+        self.busy_total
+    }
+
+    /// Reset to empty.
+    pub fn reset(&mut self) {
+        self.intervals.clear();
+        self.busy_total = 0.0;
+    }
+}
+
+/// A timeline shared between rank threads (e.g. the per-node NIC that
+/// all four GPUs of a node contend on). Interior mutability + lock.
+/// Uses interval allocation — see [`IntervalTimeline`].
+#[derive(Debug, Clone, Default)]
+pub struct SharedTimeline {
+    inner: Arc<Mutex<IntervalTimeline>>,
+}
+
+impl SharedTimeline {
+    /// A shared timeline that is free from time zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve a slot; see [`Timeline::reserve`].
+    pub fn reserve(&self, ready: VirtTime, dur: f64) -> (VirtTime, VirtTime) {
+        self.inner.lock().unwrap().reserve(ready, dur)
+    }
+
+    /// Timestamp at which the resource becomes free.
+    pub fn busy_until(&self) -> VirtTime {
+        self.inner.lock().unwrap().busy_until()
+    }
+
+    /// Total busy seconds accumulated.
+    pub fn busy_total(&self) -> f64 {
+        self.inner.lock().unwrap().busy_total()
+    }
+
+    /// Reset to free-at-zero.
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().reset()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn back_to_back_reservations_serialize() {
+        let mut t = Timeline::new();
+        let (s1, e1) = t.reserve(VirtTime::ZERO, 1.0);
+        assert_eq!(s1, VirtTime::ZERO);
+        assert_eq!(e1, VirtTime::secs(1.0));
+        // Ready at 0.5 but the resource is busy until 1.0.
+        let (s2, e2) = t.reserve(VirtTime::secs(0.5), 1.0);
+        assert_eq!(s2, VirtTime::secs(1.0));
+        assert_eq!(e2, VirtTime::secs(2.0));
+    }
+
+    #[test]
+    fn idle_gap_is_respected() {
+        let mut t = Timeline::new();
+        t.reserve(VirtTime::ZERO, 1.0);
+        // Ready long after the resource frees: starts at ready.
+        let (s, e) = t.reserve(VirtTime::secs(5.0), 0.25);
+        assert_eq!(s, VirtTime::secs(5.0));
+        assert_eq!(e, VirtTime::secs(5.25));
+        assert!((t.busy_total() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_timeline_contends_across_clones() {
+        let t = SharedTimeline::new();
+        let t2 = t.clone();
+        t.reserve(VirtTime::ZERO, 2.0);
+        let (s, _) = t2.reserve(VirtTime::ZERO, 1.0);
+        assert_eq!(s, VirtTime::secs(2.0));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut t = Timeline::new();
+        t.reserve(VirtTime::ZERO, 3.0);
+        t.reset();
+        assert_eq!(t.busy_until(), VirtTime::ZERO);
+        assert_eq!(t.busy_total(), 0.0);
+    }
+
+    #[test]
+    fn interval_timeline_gap_fills_out_of_order() {
+        let mut t = IntervalTimeline::new();
+        // A fast thread reserves a future slot first.
+        let (s1, _) = t.reserve(VirtTime::secs(10.0), 1.0);
+        assert_eq!(s1, VirtTime::secs(10.0));
+        // A slower thread then asks for an earlier slot: must NOT queue
+        // behind the future reservation.
+        let (s2, e2) = t.reserve(VirtTime::secs(0.0), 1.0);
+        assert_eq!(s2, VirtTime::ZERO);
+        assert_eq!(e2, VirtTime::secs(1.0));
+        // A request overlapping an allocation is pushed after it.
+        let (s3, _) = t.reserve(VirtTime::secs(0.5), 1.0);
+        assert_eq!(s3, VirtTime::secs(1.0));
+        assert!((t.busy_total() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interval_timeline_exact_gap_fit() {
+        let mut t = IntervalTimeline::new();
+        t.reserve(VirtTime::secs(0.0), 1.0);
+        t.reserve(VirtTime::secs(3.0), 1.0);
+        // A 2-second job fits exactly in [1, 3).
+        let (s, e) = t.reserve(VirtTime::secs(0.0), 2.0);
+        assert_eq!(s, VirtTime::secs(1.0));
+        assert_eq!(e, VirtTime::secs(3.0));
+        // Nothing fits in a 0-gap; goes to the end.
+        let (s, _) = t.reserve(VirtTime::secs(0.0), 0.5);
+        assert_eq!(s, VirtTime::secs(4.0));
+    }
+
+    #[test]
+    fn shared_timeline_threads_serialize() {
+        use std::thread;
+        let t = SharedTimeline::new();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let t = t.clone();
+                thread::spawn(move || t.reserve(VirtTime::ZERO, 1.0))
+            })
+            .collect();
+        let mut slots: Vec<(f64, f64)> = handles
+            .into_iter()
+            .map(|h| {
+                let (s, e) = h.join().unwrap();
+                (s.as_secs(), e.as_secs())
+            })
+            .collect();
+        slots.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // Slots must tile [0, 8] without overlap.
+        for (i, (s, e)) in slots.iter().enumerate() {
+            assert!((s - i as f64).abs() < 1e-12);
+            assert!((e - (i + 1) as f64).abs() < 1e-12);
+        }
+        assert!((t.busy_total() - 8.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,64 @@
+//! Test utilities: a deterministic PRNG and a miniature property-test
+//! harness.
+//!
+//! The vendored dependency set has neither `rand` nor `proptest`, so the
+//! crate ships its own seeded PCG32 generator and a small "run this
+//! property over N random cases, report the failing seed" runner. All
+//! randomized tests in the crate are reproducible from a fixed seed.
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{forall, Cases};
+pub use rng::Pcg32;
+
+/// Assert two f32 slices are elementwise close (absolute tolerance).
+///
+/// Panics with the first offending index, which is far more useful than
+/// a bare boolean assert when debugging kernels.
+pub fn assert_close(actual: &[f32], expected: &[f32], atol: f32) {
+    assert_eq!(
+        actual.len(),
+        expected.len(),
+        "length mismatch: {} vs {}",
+        actual.len(),
+        expected.len()
+    );
+    for (i, (a, e)) in actual.iter().zip(expected.iter()).enumerate() {
+        let diff = (a - e).abs();
+        assert!(
+            diff <= atol,
+            "index {i}: |{a} - {e}| = {diff} > atol {atol}"
+        );
+    }
+}
+
+/// Maximum absolute elementwise difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assert_close_passes_on_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "index 1")]
+    fn assert_close_reports_index() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 0.5);
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+}

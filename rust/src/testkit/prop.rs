@@ -1,0 +1,124 @@
+//! Miniature property-test harness.
+//!
+//! `proptest` is not in the vendored dependency set, so this module
+//! provides the 10% of it we need: run a property over `n` randomly
+//! generated cases, and on failure report the case index and seed so the
+//! exact case can be replayed. No shrinking — cases are kept small by
+//! construction instead.
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Cases {
+    /// Number of random cases to run.
+    pub n: usize,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Cases {
+            n: 64,
+            base_seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl Cases {
+    /// A run with `n` cases and the default base seed.
+    pub fn n(n: usize) -> Self {
+        Cases {
+            n,
+            ..Self::default()
+        }
+    }
+
+    /// Override the base seed (useful to replay a failure).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `cases.n` generated inputs.
+///
+/// `gen` receives a fresh deterministic RNG per case. `prop` returns
+/// `Err(reason)` (or panics) to signal failure; the harness re-panics
+/// with the case index and seed embedded for replay.
+pub fn forall<T, G, P>(cases: Cases, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for i in 0..cases.n {
+        let seed = cases.base_seed.wrapping_add(i as u64);
+        let mut rng = Pcg32::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property failed on case {i} (seed {seed:#x}): {reason}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            Cases::n(32),
+            |r| r.range_usize(0, 100),
+            |_x| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Cases::n(16),
+            |r| r.range_usize(0, 100),
+            |x| {
+                if *x < 1000 {
+                    Err(format!("{x} too small"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = vec![];
+        forall(
+            Cases::n(8).seed(5),
+            |r| r.range_usize(0, 1_000_000),
+            |x| {
+                first.push(*x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<usize> = vec![];
+        forall(
+            Cases::n(8).seed(5),
+            |r| r.range_usize(0, 1_000_000),
+            |x| {
+                second.push(*x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,236 @@
+//! Integration tests: whole-stack flows through the public API.
+
+use gzccl::collectives::{
+    allgather_ring, allreduce_recursive_doubling, allreduce_ring, bcast_binomial,
+    reduce_scatter_ring, scatter_binomial, Chunks,
+};
+use gzccl::config::{ClusterConfig, TomlDoc};
+use gzccl::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
+use gzccl::testkit::{forall, Cases, Pcg32};
+
+fn real_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Pcg32::new(seed, r as u64);
+            DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+        })
+        .collect()
+}
+
+fn exact_sum(inputs: &[DeviceBuf]) -> Vec<f32> {
+    let d = inputs[0].elems();
+    let mut out = vec![0.0f32; d];
+    for b in inputs {
+        for (o, v) in out.iter_mut().zip(b.as_real()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn config_file_to_collective_run() {
+    let doc = TomlDoc::parse(
+        "[cluster]\nranks = 8\nvariant = \"gzccl\"\n[compression]\nerror_bound = 1e-3\n",
+    )
+    .unwrap();
+    let cfg = ClusterConfig::from_doc(&doc);
+    let spec = cfg.to_spec().unwrap();
+    let inputs = real_inputs(8, 256, 1);
+    let expect = exact_sum(&inputs);
+    let report = run_collective(&spec, inputs, &allreduce_recursive_doubling).unwrap();
+    for out in &report.outputs {
+        for (a, b) in out.as_real().iter().zip(&expect) {
+            assert!((a - b).abs() < 9.0 * 1e-3);
+        }
+    }
+    assert!(report.makespan.as_secs() > 0.0);
+}
+
+#[test]
+fn every_variant_completes_every_collective() {
+    // Smoke matrix: all policies × all ops on a small real cluster.
+    let policies = [
+        ("gzccl", ExecPolicy::gzccl()),
+        ("gpu-centric", ExecPolicy::gpu_centric_unoptimized()),
+        ("ccoll", ExecPolicy::ccoll()),
+        ("cprp2p", ExecPolicy::cprp2p()),
+        ("nccl", ExecPolicy::nccl()),
+        ("cray", ExecPolicy::cray_mpi()),
+    ];
+    let n = 4;
+    let d = 128;
+    for (name, policy) in policies {
+        let spec = ClusterSpec::new(n, policy).with_error_bound(1e-3);
+        // Allreduce (both algorithms).
+        for algo in [true, false] {
+            let inputs = real_inputs(n, d, 7);
+            let report = if algo {
+                run_collective(&spec, inputs, &allreduce_recursive_doubling)
+            } else {
+                run_collective(&spec, inputs, &allreduce_ring)
+            }
+            .unwrap_or_else(|e| panic!("{name} allreduce({algo}): {e}"));
+            assert_eq!(report.outputs[0].elems(), d, "{name}");
+        }
+        // Reduce_scatter + Allgather.
+        let report =
+            run_collective(&spec, real_inputs(n, d, 8), &reduce_scatter_ring).unwrap();
+        assert_eq!(report.outputs[1].elems(), Chunks::new(d, n).len(1));
+        let report = run_collective(&spec, real_inputs(n, d, 9), &allgather_ring).unwrap();
+        assert_eq!(report.outputs[2].elems(), d * n);
+        // Scatter + Bcast (root-fed).
+        let mut inputs = real_inputs(1, d, 10);
+        for _ in 1..n {
+            inputs.push(DeviceBuf::Real(vec![]));
+        }
+        let report = run_collective(&spec, inputs, &move |ctx, input| {
+            scatter_binomial(ctx, input, d)
+        })
+        .unwrap_or_else(|e| panic!("{name} scatter: {e}"));
+        assert_eq!(report.outputs[3].elems(), Chunks::new(d, n).len(3));
+        let mut inputs = real_inputs(1, d, 11);
+        for _ in 1..n {
+            inputs.push(DeviceBuf::Real(vec![]));
+        }
+        let report = run_collective(&spec, inputs, &bcast_binomial).unwrap();
+        assert_eq!(report.outputs[3].elems(), d, "{name} bcast");
+    }
+}
+
+#[test]
+fn prop_allreduce_agrees_across_algorithms_and_sizes() {
+    forall(
+        Cases::n(12),
+        |rng| {
+            let n = *rng.choose(&[2usize, 3, 4, 5, 8]);
+            let d = rng.range_usize(n, 300);
+            let seed = rng.next_u64();
+            (n, d, seed)
+        },
+        |&(n, d, seed)| {
+            let inputs = real_inputs(n, d, seed);
+            let expect = exact_sum(&inputs);
+            let spec = ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(1e-4);
+            let ring = run_collective(&spec, inputs.clone(), &allreduce_ring)
+                .map_err(|e| e.to_string())?;
+            let redoub = run_collective(&spec, inputs, &allreduce_recursive_doubling)
+                .map_err(|e| e.to_string())?;
+            let tol = (3 * n) as f32 * 1e-4;
+            for r in 0..n {
+                for i in 0..d {
+                    let a = ring.outputs[r].as_real()[i];
+                    let b = redoub.outputs[r].as_real()[i];
+                    if (a - expect[i]).abs() > tol {
+                        return Err(format!("ring off at rank {r} elem {i}"));
+                    }
+                    if (b - expect[i]).abs() > tol {
+                        return Err(format!("redoub off at rank {r} elem {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_ranks_get_identical_allreduce_output() {
+    forall(
+        Cases::n(10),
+        |rng| {
+            let n = *rng.choose(&[2usize, 4, 6, 8]);
+            let d = rng.range_usize(1, 200);
+            (n, d, rng.next_u64())
+        },
+        |&(n, d, seed)| {
+            // Uncompressed: every rank's result is bitwise identical
+            // (commutative f32 pairwise sums in the same tree order).
+            let spec = ClusterSpec::new(n, ExecPolicy::nccl());
+            let report =
+                run_collective(&spec, real_inputs(n, d, seed), &allreduce_recursive_doubling)
+                    .map_err(|e| e.to_string())?;
+            let first = report.outputs[0].as_real();
+            for r in 1..n {
+                if report.outputs[r].as_real() != first {
+                    return Err(format!("rank {r} output differs from rank 0"));
+                }
+            }
+            // Compressed: each side decompresses the peer's stream, so
+            // results differ across ranks — but only within the
+            // stage-scaled error bound (the paper's accuracy property).
+            let spec = ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(1e-4);
+            let report =
+                run_collective(&spec, real_inputs(n, d, seed), &allreduce_recursive_doubling)
+                    .map_err(|e| e.to_string())?;
+            let first = report.outputs[0].as_real();
+            let tol = (3 * n) as f32 * 1e-4;
+            for r in 1..n {
+                for (a, b) in report.outputs[r].as_real().iter().zip(first) {
+                    if (a - b).abs() > tol {
+                        return Err(format!("rank {r} disagrees beyond {tol}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_virtual_and_real_runs_have_identical_timing() {
+    // The cost model must not depend on payload contents: a virtual run
+    // with the same sizes gives the same makespan as a real run when the
+    // profile predicts the real compressed sizes exactly. Use the
+    // uncompressed baseline where sizes are trivially equal.
+    forall(
+        Cases::n(8),
+        |rng| {
+            let n = *rng.choose(&[2usize, 4, 8]);
+            let d = rng.range_usize(n, 5000);
+            (n, d, rng.next_u64())
+        },
+        |&(n, d, seed)| {
+            let spec = ClusterSpec::new(n, ExecPolicy::nccl());
+            let real = run_collective(&spec, real_inputs(n, d, seed), &allreduce_ring)
+                .map_err(|e| e.to_string())?;
+            let virt_inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(d)).collect();
+            let virt = run_collective(&spec, virt_inputs, &allreduce_ring)
+                .map_err(|e| e.to_string())?;
+            let (a, b) = (real.makespan.as_secs(), virt.makespan.as_secs());
+            if (a - b).abs() > 1e-12 * a.max(1.0) {
+                return Err(format!("real {a} vs virtual {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn error_bound_stacking_scales_with_stages() {
+    // Accuracy-aware design (§3.3.3): ReDoub's log N stages stack less
+    // error than Ring's N−1 stages. Verify with a tight statistical
+    // check over many elements.
+    let n = 16;
+    let d = 4096;
+    let inputs = real_inputs(n, d, 99);
+    let expect = exact_sum(&inputs);
+    let spec = ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(1e-3);
+    let ring = run_collective(&spec, inputs.clone(), &allreduce_ring).unwrap();
+    let redoub = run_collective(&spec, inputs, &allreduce_recursive_doubling).unwrap();
+    let rms = |outs: &[DeviceBuf]| {
+        let o = outs[0].as_real();
+        (o.iter()
+            .zip(&expect)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / d as f64)
+            .sqrt()
+    };
+    let e_ring = rms(&ring.outputs);
+    let e_redoub = rms(&redoub.outputs);
+    assert!(
+        e_redoub <= e_ring * 1.5,
+        "redoub rms {e_redoub} should not exceed ring rms {e_ring}"
+    );
+}
