@@ -1,18 +1,21 @@
-//! Quickstart: run one compression-accelerated Allreduce and inspect
-//! the report.
+//! Quickstart: run one compression-accelerated Allreduce through the
+//! unified [`Communicator`] API and inspect the report.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use gzccl::collectives::allreduce_recursive_doubling;
-use gzccl::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
+use gzccl::comm::{CollectiveSpec, Communicator};
+use gzccl::coordinator::{DeviceBuf, ExecPolicy};
 use gzccl::testkit::Pcg32;
 
 fn main() -> gzccl::Result<()> {
     // 8 simulated A100s (2 nodes x 4 GPUs), gZCCL policy, eb = 1e-4.
     let ranks = 8;
-    let spec = ClusterSpec::new(ranks, ExecPolicy::gzccl()).with_error_bound(1e-4);
+    let comm = Communicator::builder(ranks)
+        .policy(ExecPolicy::gzccl())
+        .error_bound(1e-4)
+        .build()?;
 
     // Real per-rank payloads: 1M floats of smooth data each.
     let inputs: Vec<DeviceBuf> = (0..ranks)
@@ -39,8 +42,11 @@ fn main() -> gzccl::Result<()> {
         sum
     };
 
-    // gZ-Allreduce (ReDoub): real compression, virtual time.
-    let report = run_collective(&spec, inputs, &allreduce_recursive_doubling)?;
+    // `CollectiveSpec::auto()` lets the tuner pick the algorithm from
+    // the message size (4 MB), rank count and policy — here that lands
+    // on gZ-ReDoub (whole-vector kernels, log N compression stages).
+    // `CollectiveSpec::forced(Algo::Ring)` would pin the ring instead.
+    let report = comm.allreduce(inputs, &CollectiveSpec::auto())?;
 
     let out = report.outputs[0].as_real();
     let max_err = out
@@ -49,7 +55,8 @@ fn main() -> gzccl::Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
 
-    println!("gZ-Allreduce (ReDoub) over {ranks} simulated GPUs");
+    println!("gZ-Allreduce over {ranks} simulated GPUs");
+    println!("  algorithm chosen : {:?} (auto-tuned: {})", report.algo, report.auto_tuned);
     println!("  virtual makespan : {}", report.makespan);
     println!("  wire bytes       : {} (vs {} raw)", report.total_wire_bytes(), ranks * (1 << 22) * (ranks - 1) / ranks);
     println!("  cpr kernel calls : {}", report.total_cpr_calls());

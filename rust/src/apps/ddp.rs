@@ -10,8 +10,9 @@
 //! thread — the *collective* still runs on real rank threads with
 //! virtual-time accounting, which is the part under study.
 
-use crate::collectives::{allreduce_recursive_doubling, allreduce_ring};
-use crate::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
+use crate::collectives::Algo;
+use crate::comm::{AlgoHint, CollectiveSpec, Communicator};
+use crate::coordinator::{DeviceBuf, ExecPolicy};
 use crate::error::Result;
 use crate::runtime::Engine;
 use crate::testkit::Pcg32;
@@ -103,7 +104,18 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
     } else {
         ExecPolicy::nccl()
     };
-    let spec = ClusterSpec::new(cfg.ranks, policy).with_error_bound(cfg.error_bound);
+    let comm = Communicator::builder(cfg.ranks)
+        .policy(policy)
+        .error_bound(cfg.error_bound)
+        .build()?;
+    // The config pins the algorithm (the experiment compares them);
+    // `AlgoHint::Auto` would let the tuner decide from the gradient
+    // size and rank count instead.
+    let spec = CollectiveSpec::hinted(AlgoHint::Force(if cfg.redoub {
+        Algo::RecursiveDoubling
+    } else {
+        Algo::Ring
+    }));
 
     let mut loss_curve = Vec::with_capacity(cfg.steps);
     let mut allreduce_time = 0.0;
@@ -124,11 +136,7 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
         loss_curve.push(loss_sum / cfg.ranks as f32);
 
         // ---- gradient Allreduce (L3, real bytes + virtual time) -----
-        let report = if cfg.redoub {
-            run_collective(&spec, grads, &allreduce_recursive_doubling)?
-        } else {
-            run_collective(&spec, grads, &allreduce_ring)?
-        };
+        let report = comm.allreduce(grads, &spec)?;
         allreduce_time += report.makespan.as_secs();
         wire_bytes += report.total_wire_bytes();
 
@@ -152,7 +160,7 @@ mod tests {
 
     thread_local! {
         static ENGINE: Engine =
-            Engine::discover().expect("run `make artifacts` before cargo test");
+            Engine::discover().expect("artifacts/ exists but failed shape validation");
     }
 
     #[test]

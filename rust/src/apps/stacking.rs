@@ -9,8 +9,9 @@
 //! through the `stack_update` artifact — the L2/L1 reduction graph —
 //! proving the three layers compose.
 
-use crate::collectives::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
-use crate::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
+use crate::collectives::Algo;
+use crate::comm::{CollectiveSpec, Communicator};
+use crate::coordinator::{DeviceBuf, ExecPolicy};
 use crate::data::images::StackingScenario;
 use crate::data::metrics::{nrmse, psnr};
 use crate::error::Result;
@@ -46,6 +47,17 @@ impl StackingVariant {
             StackingVariant::GzcclRing | StackingVariant::GzcclReDoub => ExecPolicy::gzccl(),
             StackingVariant::Nccl => ExecPolicy::nccl(),
             StackingVariant::CrayMpi => ExecPolicy::cray_mpi(),
+        }
+    }
+
+    /// Allreduce algorithm this variant pins (Table 2 compares specific
+    /// algorithms, so the tuner is bypassed).
+    fn algo(self) -> Algo {
+        match self {
+            StackingVariant::GzcclRing | StackingVariant::Nccl => Algo::Ring,
+            StackingVariant::GzcclReDoub => Algo::RecursiveDoubling,
+            // Staged binomial reduce+bcast (the Cray MPI baseline).
+            StackingVariant::CrayMpi => Algo::Binomial,
         }
     }
 }
@@ -133,16 +145,11 @@ pub fn run_stacking(
     };
 
     let inputs: Vec<DeviceBuf> = partials.into_iter().map(DeviceBuf::Real).collect();
-    let spec = ClusterSpec::new(cfg.ranks, variant.policy()).with_error_bound(cfg.error_bound);
-    let report = match variant {
-        StackingVariant::GzcclRing | StackingVariant::Nccl => {
-            run_collective(&spec, inputs, &allreduce_ring)?
-        }
-        StackingVariant::GzcclReDoub => {
-            run_collective(&spec, inputs, &allreduce_recursive_doubling)?
-        }
-        StackingVariant::CrayMpi => run_collective(&spec, inputs, &allreduce_reduce_bcast)?,
-    };
+    let comm = Communicator::builder(cfg.ranks)
+        .policy(variant.policy())
+        .error_bound(cfg.error_bound)
+        .build()?;
+    let report = comm.allreduce(inputs, &CollectiveSpec::forced(variant.algo()))?;
 
     let image = report.outputs[0].clone().into_real();
     Ok(StackingOutcome {

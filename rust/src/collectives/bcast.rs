@@ -10,7 +10,7 @@ use crate::coordinator::{CompBuf, DeviceBuf, Payload, RankCtx};
 use crate::error::Result;
 use crate::gpu::StreamId;
 
-use super::scatter::{self};
+use super::scatter::tree_position;
 
 const TAG_BC: u64 = 0x4243_0000;
 
@@ -22,7 +22,7 @@ pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> 
     if n == 1 {
         return Ok(input);
     }
-    let (mask, parent) = scatter::tree_position_pub(me, n);
+    let (mask, parent) = tree_position(me, n);
     let stream = if ctx.policy().overlap {
         StreamId::NonDefault(0)
     } else {

@@ -30,7 +30,7 @@ pub use reduce_scatter::reduce_scatter_ring;
 pub use scatter::scatter_binomial;
 
 /// Which collective operation (for dispatch and reporting).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Op {
     /// Elementwise-sum Allreduce.
     Allreduce,
@@ -45,7 +45,7 @@ pub enum Op {
 }
 
 /// Which algorithm family realizes the operation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// Ring (bandwidth-optimal, N−1 steps).
     Ring,
@@ -73,8 +73,34 @@ pub fn expected_cpr_stages(op: Op, algo: Algo, n: usize) -> Option<(usize, usize
         (Op::Allreduce, Algo::Ring) => Some((n, 2 * (n - 1))),
         // Power-of-two ReDoub: log N compress + log N decompress.
         (Op::Allreduce, Algo::RecursiveDoubling) if n.is_power_of_two() => Some((logn, logn)),
-        (Op::Scatter, Algo::Binomial) => None, // root-dependent; see tests
+        // Root-dependent: see expected_cpr_stages_at.
+        (Op::Scatter, Algo::Binomial) | (Op::Bcast, Algo::Binomial) => None,
         _ => None,
+    }
+}
+
+/// Rank-resolved variant of [`expected_cpr_stages`], covering the
+/// root-dependent binomial-tree collectives of the gZCCL data-movement
+/// framework (compress once at the root, forward compressed streams
+/// verbatim, decompress once per consumer — §3.3.4):
+///
+/// * **Scatter**: the root compresses all N blocks (one multi-stream
+///   batch of N kernels) and, like every rank, decompresses exactly its
+///   own block; non-roots never compress.
+/// * **Bcast**: the root compresses the whole vector once and keeps its
+///   lossless copy (no decompression); every non-root decompresses the
+///   forwarded stream once.
+///
+/// Rank-symmetric `(op, algo)` pairs fall through to
+/// [`expected_cpr_stages`].
+pub fn expected_cpr_stages_at(op: Op, algo: Algo, n: usize, rank: usize) -> Option<(usize, usize)> {
+    if n <= 1 {
+        return Some((0, 0));
+    }
+    match (op, algo) {
+        (Op::Scatter, Algo::Binomial) => Some(if rank == 0 { (n, 1) } else { (0, 1) }),
+        (Op::Bcast, Algo::Binomial) => Some(if rank == 0 { (1, 0) } else { (0, 1) }),
+        _ => expected_cpr_stages(op, algo, n),
     }
 }
 
@@ -97,5 +123,25 @@ mod tests {
             Some((63, 63))
         );
         assert_eq!(expected_cpr_stages(Op::Allreduce, Algo::Ring, 1), Some((0, 0)));
+    }
+
+    #[test]
+    fn root_dependent_stages_resolved_per_rank() {
+        // Scatter: root compresses each of the N blocks once and
+        // decompresses its own; non-roots only decompress their block.
+        assert_eq!(expected_cpr_stages(Op::Scatter, Algo::Binomial, 8), None);
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 0), Some((8, 1)));
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 5), Some((0, 1)));
+        // Bcast: one compression total (root), one decompression per
+        // non-root; the root keeps its lossless copy.
+        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 0), Some((1, 0)));
+        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 3), Some((0, 1)));
+        // Degenerate single-rank communicator never compresses.
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 1, 0), Some((0, 0)));
+        // Rank-symmetric ops fall through to the table.
+        assert_eq!(
+            expected_cpr_stages_at(Op::Allreduce, Algo::Ring, 8, 3),
+            expected_cpr_stages(Op::Allreduce, Algo::Ring, 8)
+        );
     }
 }

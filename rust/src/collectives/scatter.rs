@@ -57,14 +57,10 @@ pub fn scatter_binomial(
     }
 }
 
-/// Public re-export of the tree layout for sibling modules (bcast).
-pub fn tree_position_pub(me: usize, n: usize) -> (usize, Option<usize>) {
-    tree_position(me, n)
-}
-
 /// Receive-phase bookkeeping: (receive mask, parent) for `me`; the root
-/// gets (pof2 ≥ n, None).
-fn tree_position(me: usize, n: usize) -> (usize, Option<usize>) {
+/// gets (pof2 ≥ n, None). Shared with sibling modules (bcast) and
+/// exported as `collectives::scatter::tree_position`.
+pub fn tree_position(me: usize, n: usize) -> (usize, Option<usize>) {
     if me == 0 {
         let mut m = 1;
         while m < n {

@@ -1,0 +1,369 @@
+//! The [`Communicator`]: NCCL/MPI-style entry point for collectives.
+
+use crate::collectives::{Algo, Op};
+use crate::compress::CompressionProfile;
+use crate::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy, RunReport};
+use crate::error::{Error, Result};
+use crate::net::Topology;
+
+use super::registry::AlgoRegistry;
+use super::tuner::{AlgoHint, CollectiveSpec, Tuner};
+
+/// Builder for a [`Communicator`].
+///
+/// Assembles a [`ClusterSpec`] from primitives (rank count, policy,
+/// error bound, compression profile, node layout) with paper-testbed
+/// defaults; use [`Communicator::from_spec`] when a fully-formed spec
+/// already exists (e.g. from [`crate::config::ClusterConfig`]).
+#[derive(Debug, Clone)]
+pub struct CommBuilder {
+    ranks: usize,
+    gpus_per_node: usize,
+    policy: ExecPolicy,
+    error_bound: Option<f64>,
+    profile: Option<CompressionProfile>,
+    tuner: Option<Tuner>,
+}
+
+impl CommBuilder {
+    /// A builder over `ranks` simulated GPUs (4 per node, full gZCCL
+    /// policy, testbed defaults).
+    pub fn new(ranks: usize) -> Self {
+        CommBuilder {
+            ranks,
+            gpus_per_node: 4,
+            policy: ExecPolicy::gzccl(),
+            error_bound: None,
+            profile: None,
+            tuner: None,
+        }
+    }
+
+    /// Select the execution-policy variant.
+    pub fn policy(mut self, policy: ExecPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Absolute error bound for the error-bounded compressor.
+    pub fn error_bound(mut self, eb: f64) -> Self {
+        self.error_bound = Some(eb);
+        self
+    }
+
+    /// Compressed-size profile for virtual-payload runs.
+    pub fn compression_profile(mut self, profile: CompressionProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// GPUs per node (topology layout).
+    pub fn gpus_per_node(mut self, g: usize) -> Self {
+        self.gpus_per_node = g;
+        self
+    }
+
+    /// Override the tuner (custom crossover knees).
+    pub fn tuner(mut self, tuner: Tuner) -> Self {
+        self.tuner = Some(tuner);
+        self
+    }
+
+    /// Build the communicator.
+    pub fn build(self) -> Result<Communicator> {
+        let topo = Topology::new(self.ranks, self.gpus_per_node)?;
+        let mut spec = ClusterSpec::with_topology(topo, self.policy);
+        if let Some(eb) = self.error_bound {
+            spec.error_bound = eb;
+        }
+        if let Some(p) = self.profile {
+            spec.profile = p;
+        }
+        Ok(Communicator {
+            spec,
+            tuner: self.tuner.unwrap_or_default(),
+        })
+    }
+}
+
+/// Result of one communicator-dispatched collective: the underlying
+/// [`RunReport`] plus what was dispatched and why.
+#[derive(Debug, Clone)]
+pub struct CollectiveReport {
+    /// The operation that ran.
+    pub op: Op,
+    /// The algorithm that realized it.
+    pub algo: Algo,
+    /// Whether the [`Tuner`] chose the algorithm (`AlgoHint::Auto`) as
+    /// opposed to a forced hint.
+    pub auto_tuned: bool,
+    /// The underlying run report.
+    pub report: RunReport,
+}
+
+impl std::ops::Deref for CollectiveReport {
+    type Target = RunReport;
+    fn deref(&self) -> &RunReport {
+        &self.report
+    }
+}
+
+/// A communicator over a simulated cluster: owns the
+/// [`ClusterSpec`] + [`Tuner`] and dispatches collectives through the
+/// [`AlgoRegistry`].
+#[derive(Clone)]
+pub struct Communicator {
+    spec: ClusterSpec,
+    tuner: Tuner,
+}
+
+impl Communicator {
+    /// Start a [`CommBuilder`] over `ranks` GPUs.
+    pub fn builder(ranks: usize) -> CommBuilder {
+        CommBuilder::new(ranks)
+    }
+
+    /// Wrap an existing [`ClusterSpec`] (default tuner).
+    pub fn from_spec(spec: ClusterSpec) -> Self {
+        Communicator {
+            spec,
+            tuner: Tuner::default(),
+        }
+    }
+
+    /// Communicator size.
+    pub fn nranks(&self) -> usize {
+        self.spec.topo.ranks()
+    }
+
+    /// The active variant policy.
+    pub fn policy(&self) -> ExecPolicy {
+        self.spec.policy
+    }
+
+    /// The underlying cluster spec.
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// The tuner in use.
+    pub fn tuner(&self) -> &Tuner {
+        &self.tuner
+    }
+
+    /// Elementwise-sum Allreduce of `inputs[r]` on every rank.
+    pub fn allreduce(
+        &self,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        let bytes = inputs.first().map(|b| b.bytes()).unwrap_or(0);
+        self.dispatch(Op::Allreduce, inputs, bytes, 0, spec)
+    }
+
+    /// Allgather: rank r contributes `inputs[r]` as block r; every rank
+    /// returns the concatenation of all blocks.
+    pub fn allgather(
+        &self,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        // Tune on the gathered volume, the quantity that crosses wires.
+        let bytes = inputs.first().map(|b| b.bytes()).unwrap_or(0) * self.nranks().max(1);
+        self.dispatch(Op::Allgather, inputs, bytes, 0, spec)
+    }
+
+    /// Ring Reduce_scatter: rank r returns the fully-reduced chunk r.
+    pub fn reduce_scatter(
+        &self,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        let bytes = inputs.first().map(|b| b.bytes()).unwrap_or(0);
+        self.dispatch(Op::ReduceScatter, inputs, bytes, 0, spec)
+    }
+
+    /// One-to-all Scatter from the root: `inputs[root]` holds the full
+    /// vector (ignored elsewhere); rank r returns block r of the
+    /// `Chunks::new(total, n)` layout.
+    pub fn scatter(
+        &self,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        let total_elems = inputs.first().map(|b| b.elems()).unwrap_or(0);
+        self.dispatch(Op::Scatter, inputs, total_elems * 4, total_elems, spec)
+    }
+
+    /// One-to-all Broadcast from the root: every rank returns the
+    /// root's vector.
+    pub fn bcast(
+        &self,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        let bytes = inputs.first().map(|b| b.bytes()).unwrap_or(0);
+        self.dispatch(Op::Bcast, inputs, bytes, 0, spec)
+    }
+
+    fn dispatch(
+        &self,
+        op: Op,
+        inputs: Vec<DeviceBuf>,
+        msg_bytes: usize,
+        total_elems: usize,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        if matches!(op, Op::Scatter | Op::Bcast) && spec.root != 0 {
+            return Err(Error::collective(format!(
+                "{op:?}: only root 0 is supported by the binomial-tree implementations"
+            )));
+        }
+        let (algo, auto_tuned) = match spec.hint {
+            AlgoHint::Force(algo) => {
+                if !AlgoRegistry::is_supported(op, algo) {
+                    return Err(Error::collective(format!(
+                        "forced {algo:?} is not implemented for {op:?} (supported: {:?})",
+                        AlgoRegistry::supported(op)
+                    )));
+                }
+                (algo, false)
+            }
+            AlgoHint::Auto => (
+                self.tuner.select(op, self.spec.policy, self.nranks(), msg_bytes),
+                true,
+            ),
+        };
+        let program = AlgoRegistry::resolve(op, algo, total_elems)?;
+        let mut report = run_collective(&self.spec, inputs, &*program)?;
+        // Record the dispatch decision in the per-rank counters so
+        // tests (and reports) can assert on it.
+        for c in report.counters.iter_mut() {
+            c.algo_selected = Some(algo);
+            if auto_tuned {
+                c.tuner_decisions += 1;
+            }
+        }
+        Ok(CollectiveReport {
+            op,
+            algo,
+            auto_tuned,
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Pcg32;
+
+    fn real_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::new(seed, r as u64);
+                DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let comm = Communicator::builder(8)
+            .policy(ExecPolicy::nccl())
+            .error_bound(1e-3)
+            .gpus_per_node(2)
+            .build()
+            .unwrap();
+        assert_eq!(comm.nranks(), 8);
+        assert_eq!(comm.cluster().topo.nodes(), 4);
+        assert!((comm.cluster().error_bound - 1e-3).abs() < 1e-18);
+        assert!(Communicator::builder(0).build().is_err());
+    }
+
+    #[test]
+    fn allreduce_dispatch_records_decision() {
+        let comm = Communicator::builder(4).build().unwrap();
+        let inputs = real_inputs(4, 64, 5);
+        let out = comm.allreduce(inputs, &CollectiveSpec::auto()).unwrap();
+        assert_eq!(out.op, Op::Allreduce);
+        assert!(out.auto_tuned);
+        for c in &out.counters {
+            assert_eq!(c.algo_selected, Some(out.algo));
+            assert_eq!(c.tuner_decisions, 1);
+        }
+        // Small message → the tuner picks recursive doubling.
+        assert_eq!(out.algo, Algo::RecursiveDoubling);
+    }
+
+    #[test]
+    fn forced_hint_bypasses_tuner() {
+        let comm = Communicator::builder(4).build().unwrap();
+        let out = comm
+            .allreduce(real_inputs(4, 64, 6), &CollectiveSpec::forced(Algo::Ring))
+            .unwrap();
+        assert_eq!(out.algo, Algo::Ring);
+        assert!(!out.auto_tuned);
+        for c in &out.counters {
+            assert_eq!(c.algo_selected, Some(Algo::Ring));
+            assert_eq!(c.tuner_decisions, 0);
+        }
+    }
+
+    #[test]
+    fn unsupported_force_and_root_rejected() {
+        let comm = Communicator::builder(4).build().unwrap();
+        assert!(comm
+            .allreduce(real_inputs(4, 8, 7), &CollectiveSpec::forced(Algo::Bruck))
+            .is_err());
+        let mut inputs = real_inputs(1, 8, 8);
+        for _ in 1..4 {
+            inputs.push(DeviceBuf::Real(vec![]));
+        }
+        assert!(comm
+            .bcast(inputs, &CollectiveSpec::auto().with_root(1))
+            .is_err());
+    }
+
+    #[test]
+    fn scatter_derives_layout_from_root_input() {
+        let n = 4;
+        let d = 64;
+        let mut rng = Pcg32::seeded(31);
+        let full = rng.uniform_vec(d, -1.0, 1.0);
+        let mut inputs = vec![DeviceBuf::Real(full.clone())];
+        for _ in 1..n {
+            inputs.push(DeviceBuf::Real(vec![]));
+        }
+        let comm = Communicator::builder(n).policy(ExecPolicy::nccl()).build().unwrap();
+        let out = comm.scatter(inputs, &CollectiveSpec::auto()).unwrap();
+        assert_eq!(out.algo, Algo::Binomial);
+        let chunks = crate::collectives::Chunks::new(d, n);
+        for r in 0..n {
+            assert_eq!(out.outputs[r].as_real(), &full[chunks.range(r)]);
+        }
+    }
+
+    #[test]
+    fn all_ops_run_through_the_communicator() {
+        let n = 4;
+        let d = 128;
+        let comm = Communicator::builder(n)
+            .error_bound(1e-3)
+            .build()
+            .unwrap();
+        let spec = CollectiveSpec::auto();
+        assert!(comm.allreduce(real_inputs(n, d, 1), &spec).is_ok());
+        assert!(comm.allgather(real_inputs(n, d, 2), &spec).is_ok());
+        assert!(comm.reduce_scatter(real_inputs(n, d, 3), &spec).is_ok());
+        let rooted = |seed| {
+            let mut v = real_inputs(1, d, seed);
+            for _ in 1..n {
+                v.push(DeviceBuf::Real(vec![]));
+            }
+            v
+        };
+        assert!(comm.scatter(rooted(4), &spec).is_ok());
+        assert!(comm.bcast(rooted(5), &spec).is_ok());
+    }
+}

@@ -1,0 +1,39 @@
+//! The unified communicator API.
+//!
+//! The paper's central performance claim (§3.3.3, Figs. 7–12) is that
+//! the *right* algorithm for a compression-enabled collective depends
+//! on message size, rank count, and compression policy: the ring
+//! Allreduce is bandwidth-optimal but pays `2(N−1)` compression-kernel
+//! floors on `D/N` chunks, while gZ-ReDoub pays only `⌈log₂N⌉`
+//! whole-vector kernels — so ring wins large messages and recursive
+//! doubling wins small messages and large scales. That selection logic
+//! belongs to the framework, not to every call site; NCCL and MPI both
+//! expose communicator objects for exactly this reason.
+//!
+//! This module is the single seam between applications and the
+//! collective algorithms:
+//!
+//! * [`Communicator`] (built via [`CommBuilder`]) owns the simulated
+//!   cluster ([`crate::coordinator::ClusterSpec`]) and exposes
+//!   `allreduce / allgather / reduce_scatter / scatter / bcast`
+//!   methods, each taking a [`CollectiveSpec`] (root + algorithm hint).
+//! * [`Tuner`] implements the crossover model: given the op, the
+//!   [`crate::coordinator::ExecPolicy`], the rank count and the message
+//!   size, it picks the [`crate::collectives::Algo`]. Callers can
+//!   bypass it with [`AlgoHint::Force`].
+//! * [`AlgoRegistry`] maps `(Op, Algo)` to the concrete collective free
+//!   functions in [`crate::collectives`], which remain the registry's
+//!   internals — no call site outside this module and `collectives`
+//!   invokes them directly.
+//!
+//! Every dispatch is recorded in the per-rank
+//! [`crate::coordinator::OpCounters`] (`algo_selected`,
+//! `tuner_decisions`) so tests can assert the tuner's decisions.
+
+pub mod communicator;
+pub mod registry;
+pub mod tuner;
+
+pub use communicator::{CollectiveReport, CommBuilder, Communicator};
+pub use registry::AlgoRegistry;
+pub use tuner::{AlgoHint, CollectiveSpec, Tuner};

@@ -1,0 +1,91 @@
+//! The `(Op, Algo)` → collective-function registry.
+//!
+//! The concrete free functions in [`crate::collectives`] stay exactly
+//! as they are — plain functions over a [`crate::coordinator::RankCtx`]
+//! — and this registry is the only place outside their own module that
+//! names them. Everything above (communicator, experiments, apps, CLI)
+//! dispatches through [`AlgoRegistry::resolve`].
+
+use crate::collectives::{
+    allgather_bruck, allgather_recursive_doubling, allgather_ring, allreduce_recursive_doubling,
+    allreduce_reduce_bcast, allreduce_ring, bcast_binomial, reduce_scatter_ring, scatter_binomial,
+    Algo, Op,
+};
+use crate::coordinator::{DeviceBuf, RankCtx, RankProgram};
+use crate::error::{Error, Result};
+
+/// Static registry of implemented `(Op, Algo)` pairs.
+pub struct AlgoRegistry;
+
+impl AlgoRegistry {
+    /// The algorithms implemented for `op`, in preference order.
+    pub fn supported(op: Op) -> &'static [Algo] {
+        match op {
+            // `Binomial` realizes the staged reduce+bcast Allreduce
+            // (the Cray-MPI-class baseline).
+            Op::Allreduce => &[Algo::Ring, Algo::RecursiveDoubling, Algo::Binomial],
+            Op::Allgather => &[Algo::Ring, Algo::RecursiveDoubling, Algo::Bruck],
+            Op::ReduceScatter => &[Algo::Ring],
+            Op::Scatter => &[Algo::Binomial],
+            Op::Bcast => &[Algo::Binomial],
+        }
+    }
+
+    /// Whether `(op, algo)` has an implementation.
+    pub fn is_supported(op: Op, algo: Algo) -> bool {
+        Self::supported(op).contains(&algo)
+    }
+
+    /// Resolve `(op, algo)` to a rank program. `total_elems` is the
+    /// full-vector element count for Scatter (ignored elsewhere).
+    pub fn resolve(op: Op, algo: Algo, total_elems: usize) -> Result<Box<RankProgram>> {
+        let program: Box<RankProgram> = match (op, algo) {
+            (Op::Allreduce, Algo::Ring) => Box::new(allreduce_ring),
+            (Op::Allreduce, Algo::RecursiveDoubling) => Box::new(allreduce_recursive_doubling),
+            (Op::Allreduce, Algo::Binomial) => Box::new(allreduce_reduce_bcast),
+            (Op::Allgather, Algo::Ring) => Box::new(allgather_ring),
+            (Op::Allgather, Algo::RecursiveDoubling) => Box::new(allgather_recursive_doubling),
+            (Op::Allgather, Algo::Bruck) => Box::new(allgather_bruck),
+            (Op::ReduceScatter, Algo::Ring) => Box::new(reduce_scatter_ring),
+            (Op::Scatter, Algo::Binomial) => Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
+                scatter_binomial(ctx, input, total_elems)
+            }),
+            (Op::Bcast, Algo::Binomial) => Box::new(bcast_binomial),
+            (op, algo) => {
+                return Err(Error::collective(format!(
+                    "no {algo:?} implementation for {op:?} (supported: {:?})",
+                    Self::supported(op)
+                )))
+            }
+        };
+        Ok(program)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_supported_pair_resolves() {
+        for op in [
+            Op::Allreduce,
+            Op::Allgather,
+            Op::ReduceScatter,
+            Op::Scatter,
+            Op::Bcast,
+        ] {
+            for &algo in AlgoRegistry::supported(op) {
+                assert!(AlgoRegistry::is_supported(op, algo));
+                assert!(AlgoRegistry::resolve(op, algo, 128).is_ok(), "{op:?}/{algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_pairs_rejected() {
+        assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Ring));
+        assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Ring, 128).is_err());
+        assert!(AlgoRegistry::resolve(Op::ReduceScatter, Algo::Bruck, 0).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Policy-aware algorithm selection.
+//!
+//! The [`Tuner`] encodes the paper's §3.3.3 crossover model. Two knobs,
+//! both calibrated against the shapes of Figs. 9–12:
+//!
+//! * **Compressed collectives** (`CompressionMode::{ErrorBounded,
+//!   FixedRate}`): the ring Allreduce issues `2(N−1)` compression
+//!   kernels over `D/N` chunks; once the chunk falls below the GPU
+//!   utilization knee those kernels stagnate at their fixed-work floor
+//!   (Fig. 3) and gZ-ReDoub's `⌈log₂N⌉` whole-vector kernels win. Ring
+//!   is selected when `D/N ≥ chunk_knee_bytes`, i.e. the crossover
+//!   message size grows **linearly with the rank count**.
+//! * **Uncompressed baselines** (`CompressionMode::None`): the classic
+//!   MPI latency-vs-bandwidth switch. Ring costs `2(N−1)` message
+//!   latencies, recursive doubling `⌈log₂N⌉`; ring is selected when
+//!   `D ≥ latency_knee_bytes · ⌈log₂N⌉`.
+//!
+//! Scatter and Bcast have a single binomial-tree algorithm; Allgather
+//! under compression is always the ring (the gZCCL one-compression
+//! invariant), and falls back to Bruck for latency-bound uncompressed
+//! messages.
+
+use crate::collectives::{Algo, Op};
+use crate::coordinator::{CompressionMode, ExecPolicy};
+
+/// How a [`super::Communicator`] should choose the algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoHint {
+    /// Let the [`Tuner`] decide from op, policy, size and scale.
+    Auto,
+    /// Bypass the tuner and run exactly this algorithm.
+    Force(Algo),
+}
+
+/// Per-call options of a collective: the root rank (Scatter/Bcast) and
+/// the algorithm hint.
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveSpec {
+    /// Root rank for one-to-all collectives (must currently be 0, the
+    /// only root the binomial-tree implementations support).
+    pub root: usize,
+    /// Algorithm selection hint.
+    pub hint: AlgoHint,
+}
+
+impl CollectiveSpec {
+    /// Tuner-selected algorithm, root 0.
+    pub fn auto() -> Self {
+        CollectiveSpec {
+            root: 0,
+            hint: AlgoHint::Auto,
+        }
+    }
+
+    /// Forced algorithm, root 0.
+    pub fn forced(algo: Algo) -> Self {
+        CollectiveSpec {
+            root: 0,
+            hint: AlgoHint::Force(algo),
+        }
+    }
+
+    /// From an explicit hint, root 0.
+    pub fn hinted(hint: AlgoHint) -> Self {
+        CollectiveSpec { root: 0, hint }
+    }
+
+    /// Override the root rank.
+    pub fn with_root(mut self, root: usize) -> Self {
+        self.root = root;
+        self
+    }
+}
+
+impl Default for CollectiveSpec {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+/// The size/scale/policy crossover model (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct Tuner {
+    /// Minimum ring chunk (`D/N`) under compression for the ring to
+    /// stay above the GPU utilization floor.
+    pub chunk_knee_bytes: usize,
+    /// Per-`log₂N`-step message-size knee for the uncompressed
+    /// latency-vs-bandwidth switch.
+    pub latency_knee_bytes: usize,
+}
+
+impl Default for Tuner {
+    fn default() -> Self {
+        Tuner {
+            chunk_knee_bytes: 1 << 20,   // 1 MiB ring chunks
+            latency_knee_bytes: 256 << 10, // 256 KiB per log-step
+        }
+    }
+}
+
+fn ceil_log2(n: usize) -> usize {
+    (usize::BITS - (n.max(1) - 1).leading_zeros()) as usize
+}
+
+impl Tuner {
+    /// A tuner with explicit knees (what-if studies and tests).
+    pub fn new(chunk_knee_bytes: usize, latency_knee_bytes: usize) -> Self {
+        Tuner {
+            chunk_knee_bytes,
+            latency_knee_bytes,
+        }
+    }
+
+    /// Total Allreduce message size (bytes) at and above which the ring
+    /// is selected for `(policy, nranks)`. Grows linearly with `nranks`
+    /// under compression, logarithmically without.
+    pub fn allreduce_crossover_bytes(&self, policy: ExecPolicy, nranks: usize) -> usize {
+        if nranks <= 1 {
+            return 0;
+        }
+        if policy.compression == CompressionMode::None {
+            self.latency_knee_bytes * ceil_log2(nranks)
+        } else {
+            self.chunk_knee_bytes * nranks
+        }
+    }
+
+    /// Pick the algorithm for `op` over a `msg_bytes` payload on
+    /// `nranks` ranks under `policy`.
+    pub fn select(&self, op: Op, policy: ExecPolicy, nranks: usize, msg_bytes: usize) -> Algo {
+        match op {
+            Op::Allreduce => {
+                if msg_bytes >= self.allreduce_crossover_bytes(policy, nranks) {
+                    Algo::Ring
+                } else {
+                    Algo::RecursiveDoubling
+                }
+            }
+            Op::Allgather => {
+                if policy.compression != CompressionMode::None {
+                    // gZCCL invariant: ring compresses each origin
+                    // block exactly once; log-step algorithms
+                    // recompress doubling aggregates.
+                    Algo::Ring
+                } else if msg_bytes < self.latency_knee_bytes * ceil_log2(nranks) {
+                    Algo::Bruck
+                } else {
+                    Algo::Ring
+                }
+            }
+            Op::ReduceScatter => Algo::Ring,
+            Op::Scatter | Op::Bcast => Algo::Binomial,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIB: usize = 1 << 20;
+
+    #[test]
+    fn crossover_moves_with_message_size() {
+        let t = Tuner::default();
+        let p = ExecPolicy::gzccl();
+        // 32 ranks: crossover at 32 MiB total (1 MiB chunks).
+        assert_eq!(t.select(Op::Allreduce, p, 32, MIB), Algo::RecursiveDoubling);
+        assert_eq!(t.select(Op::Allreduce, p, 32, 64 * MIB), Algo::Ring);
+        assert_eq!(t.select(Op::Allreduce, p, 32, 256 * MIB), Algo::Ring);
+    }
+
+    #[test]
+    fn crossover_moves_with_nranks() {
+        let t = Tuner::default();
+        let p = ExecPolicy::gzccl();
+        // The same 64 MiB message: ring chunks shrink with scale.
+        assert_eq!(t.select(Op::Allreduce, p, 8, 64 * MIB), Algo::Ring);
+        assert_eq!(t.select(Op::Allreduce, p, 32, 64 * MIB), Algo::Ring);
+        assert_eq!(t.select(Op::Allreduce, p, 128, 64 * MIB), Algo::RecursiveDoubling);
+        assert_eq!(t.select(Op::Allreduce, p, 512, 64 * MIB), Algo::RecursiveDoubling);
+        assert!(
+            t.allreduce_crossover_bytes(p, 128) > t.allreduce_crossover_bytes(p, 32),
+            "compressed crossover must grow with rank count"
+        );
+    }
+
+    #[test]
+    fn crossover_moves_with_policy() {
+        let t = Tuner::default();
+        // 4 MiB on 32 ranks: 128 KiB chunks sit under the compression
+        // knee (→ ReDoub for gZCCL), but an uncompressed NCCL-class
+        // policy is bandwidth-bound there (→ ring).
+        assert_eq!(
+            t.select(Op::Allreduce, ExecPolicy::gzccl(), 32, 4 * MIB),
+            Algo::RecursiveDoubling
+        );
+        assert_eq!(
+            t.select(Op::Allreduce, ExecPolicy::nccl(), 32, 4 * MIB),
+            Algo::Ring
+        );
+        // The nccl baseline never compresses, so its crossover is the
+        // latency rule, independent of the compression knee.
+        assert_eq!(
+            t.allreduce_crossover_bytes(ExecPolicy::nccl(), 32),
+            (256 << 10) * 5
+        );
+    }
+
+    #[test]
+    fn allgather_compressed_always_ring() {
+        let t = Tuner::default();
+        for bytes in [1usize << 10, MIB, 600 * MIB] {
+            assert_eq!(t.select(Op::Allgather, ExecPolicy::gzccl(), 64, bytes), Algo::Ring);
+        }
+        // Uncompressed + tiny → Bruck.
+        assert_eq!(
+            t.select(Op::Allgather, ExecPolicy::nccl(), 64, 1 << 10),
+            Algo::Bruck
+        );
+        assert_eq!(
+            t.select(Op::Allgather, ExecPolicy::nccl(), 64, 600 * MIB),
+            Algo::Ring
+        );
+    }
+
+    #[test]
+    fn rooted_ops_are_binomial() {
+        let t = Tuner::default();
+        assert_eq!(t.select(Op::Scatter, ExecPolicy::gzccl(), 64, MIB), Algo::Binomial);
+        assert_eq!(t.select(Op::Bcast, ExecPolicy::cray_mpi(), 64, MIB), Algo::Binomial);
+        assert_eq!(t.select(Op::ReduceScatter, ExecPolicy::gzccl(), 64, MIB), Algo::Ring);
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_ring() {
+        let t = Tuner::default();
+        assert_eq!(t.select(Op::Allreduce, ExecPolicy::gzccl(), 1, 0), Algo::Ring);
+    }
+}

@@ -152,6 +152,13 @@ pub struct OpCounters {
     pub wire_bytes: usize,
     /// Bytes moved over PCIe (both directions).
     pub pcie_bytes: usize,
+    /// Algorithm the [`crate::comm::Communicator`] dispatched for the
+    /// collective that produced these counters (`None` when the
+    /// collective free function was invoked directly).
+    pub algo_selected: Option<crate::collectives::Algo>,
+    /// Number of those dispatches decided by the
+    /// [`crate::comm::Tuner`] (`AlgoHint::Auto`) rather than forced.
+    pub tuner_decisions: usize,
 }
 
 /// Per-rank execution context handed to a collective algorithm.

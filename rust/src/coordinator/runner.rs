@@ -40,8 +40,15 @@ impl ClusterSpec {
     /// A spec over `ranks` GPUs (4/node) with the given policy and
     /// paper-testbed defaults everywhere else.
     pub fn new(ranks: usize, policy: ExecPolicy) -> Self {
+        Self::with_topology(Topology::new(ranks, 4).expect("ranks > 0"), policy)
+    }
+
+    /// A spec over an already-validated topology with paper-testbed
+    /// defaults everywhere else (the panic-free constructor the
+    /// [`crate::comm::CommBuilder`] uses).
+    pub fn with_topology(topo: Topology, policy: ExecPolicy) -> Self {
         ClusterSpec {
-            topo: Topology::new(ranks, 4).expect("ranks > 0"),
+            topo,
             gpu: GpuModel::a100(),
             intranode: LinkModel::nvlink_default(),
             internode: LinkModel::slingshot10_default(),

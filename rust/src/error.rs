@@ -1,33 +1,59 @@
 //! Error types for the gZCCL framework.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline build has no
+//! `thiserror`); the formatting contract matches what the rest of the
+//! crate and its tests expect: `"<category> error: <message>"`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for all gZCCL subsystems.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / value errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Compressor failures (corrupt stream, bound violation, ...).
-    #[error("compression error: {0}")]
     Compress(String),
 
     /// Collective algorithm errors (bad rank layout, mismatched sizes, ...).
-    #[error("collective error: {0}")]
     Collective(String),
 
     /// Coordinator / rank-runtime errors (channel breakage, panics).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    /// PJRT runtime errors (artifact missing, compile/execute failures).
-    #[error("runtime error: {0}")]
+    /// Runtime errors (artifact missing, execution failures).
     Runtime(String),
 
     /// I/O errors (artifact files, dataset dumps).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Compress(m) => write!(f, "compression error: {m}"),
+            Error::Collective(m) => write!(f, "collective error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Convenience alias used across the crate.
@@ -73,5 +99,6 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().starts_with("io error:"));
     }
 }

@@ -1,9 +1,12 @@
 //! Allreduce experiments: Figs. 2, 6, 7, 9, 10.
+//!
+//! All runs dispatch through the [`Communicator`] with explicit
+//! algorithm hints — each figure compares *specific* algorithms, so the
+//! tuner is bypassed with `AlgoHint::Force`.
 
-use crate::collectives::{
-    allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
-};
-use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy, RankProgram};
+use crate::collectives::Algo;
+use crate::comm::{CollectiveSpec, Communicator};
+use crate::coordinator::ExecPolicy;
 use crate::error::Result;
 use crate::metrics::table::{fmt_time, fmt_x};
 use crate::metrics::Table;
@@ -16,12 +19,14 @@ fn run_ar(
     bytes: usize,
     policy: ExecPolicy,
     eb: f64,
-    program: &RankProgram,
+    algo: Algo,
 ) -> Result<(f64, Breakdown)> {
-    let spec = ClusterSpec::new(ranks, policy)
-        .with_error_bound(eb)
-        .with_profile(rtm_profile(Dataset::Rtm2, eb));
-    let report = run_collective(&spec, virtual_inputs(ranks, bytes), program)?;
+    let comm = Communicator::builder(ranks)
+        .policy(policy)
+        .error_bound(eb)
+        .compression_profile(rtm_profile(Dataset::Rtm2, eb))
+        .build()?;
+    let report = comm.allreduce(virtual_inputs(ranks, bytes), &CollectiveSpec::forced(algo))?;
     Ok((report.makespan.as_secs(), report.total_breakdown()))
 }
 
@@ -36,7 +41,7 @@ pub fn fig02_breakdown(ranks: usize, bytes: usize) -> Result<Table> {
         ("CPRP2P", ExecPolicy::cprp2p()),
         ("C-Coll", ExecPolicy::ccoll()),
     ] {
-        let (mk, bd) = run_ar(ranks, bytes, policy, 1e-4, &allreduce_ring)?;
+        let (mk, bd) = run_ar(ranks, bytes, policy, 1e-4, Algo::Ring)?;
         t.row(&[
             name.to_string(),
             fmt_time(mk),
@@ -62,13 +67,13 @@ pub fn fig06_gpu_centric(ranks: usize, ds: Dataset) -> Result<Table> {
     };
     for mb in MSG_SIZES_MB.iter().map(|&m| m * max_mb / 600).filter(|&m| m > 0) {
         let bytes = mb << 20;
-        let (cpu, _) = run_ar(ranks, bytes, ExecPolicy::ccoll(), 1e-4, &allreduce_ring)?;
+        let (cpu, _) = run_ar(ranks, bytes, ExecPolicy::ccoll(), 1e-4, Algo::Ring)?;
         let (gpu, _) = run_ar(
             ranks,
             bytes,
             ExecPolicy::gpu_centric_unoptimized(),
             1e-4,
-            &allreduce_ring,
+            Algo::Ring,
         )?;
         t.row(&[
             format!("{mb} MB"),
@@ -94,15 +99,15 @@ pub fn fig07_allreduce_opt(ranks: usize) -> Result<Table> {
             bytes,
             ExecPolicy::gpu_centric_unoptimized(),
             1e-4,
-            &allreduce_ring,
+            Algo::Ring,
         )?;
-        let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, &allreduce_ring)?;
+        let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, Algo::Ring)?;
         let (redoub, _) = run_ar(
             ranks,
             bytes,
             ExecPolicy::gzccl(),
             1e-4,
-            &allreduce_recursive_doubling,
+            Algo::RecursiveDoubling,
         )?;
         t.row(&[
             format!("{mb} MB"),
@@ -117,21 +122,16 @@ pub fn fig07_allreduce_opt(ranks: usize) -> Result<Table> {
 }
 
 fn four_way(ranks: usize, bytes: usize) -> Result<(f64, f64, f64, f64)> {
-    let (cray, _) = run_ar(
-        ranks,
-        bytes,
-        ExecPolicy::cray_mpi(),
-        1e-4,
-        &allreduce_reduce_bcast,
-    )?;
-    let (nccl, _) = run_ar(ranks, bytes, ExecPolicy::nccl(), 1e-4, &allreduce_ring)?;
-    let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, &allreduce_ring)?;
+    // Binomial = the staged reduce+bcast Allreduce (Cray MPI baseline).
+    let (cray, _) = run_ar(ranks, bytes, ExecPolicy::cray_mpi(), 1e-4, Algo::Binomial)?;
+    let (nccl, _) = run_ar(ranks, bytes, ExecPolicy::nccl(), 1e-4, Algo::Ring)?;
+    let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, Algo::Ring)?;
     let (redoub, _) = run_ar(
         ranks,
         bytes,
         ExecPolicy::gzccl(),
         1e-4,
-        &allreduce_recursive_doubling,
+        Algo::RecursiveDoubling,
     )?;
     Ok((cray, nccl, ring, redoub))
 }
@@ -189,9 +189,9 @@ mod tests {
         assert!(s.contains("CPRP2P") && s.contains("C-Coll"));
         // Structured check: rerun and inspect directly.
         let (mk_p2p, cpr) =
-            run_ar(16, 64 << 20, ExecPolicy::cprp2p(), 1e-4, &allreduce_ring).unwrap();
+            run_ar(16, 64 << 20, ExecPolicy::cprp2p(), 1e-4, Algo::Ring).unwrap();
         let (mk_ccoll, ccoll) =
-            run_ar(16, 64 << 20, ExecPolicy::ccoll(), 1e-4, &allreduce_ring).unwrap();
+            run_ar(16, 64 << 20, ExecPolicy::ccoll(), 1e-4, Algo::Ring).unwrap();
         // Fig. 2: C-Coll is faster overall than CPRP2P...
         assert!(mk_ccoll < mk_p2p, "ccoll {mk_ccoll} vs cprp2p {mk_p2p}");
         // ...spends fewer absolute seconds compressing (the AG stage
@@ -215,22 +215,23 @@ mod tests {
         // Small sweep for test speed.
         let bytes_small = 50 << 20;
         let bytes_big = 300 << 20;
-        let (cpu_s, _) = run_ar(16, bytes_small, ExecPolicy::ccoll(), 1e-4, &allreduce_ring).unwrap();
+        let (cpu_s, _) =
+            run_ar(16, bytes_small, ExecPolicy::ccoll(), 1e-4, Algo::Ring).unwrap();
         let (gpu_s, _) = run_ar(
             16,
             bytes_small,
             ExecPolicy::gpu_centric_unoptimized(),
             1e-4,
-            &allreduce_ring,
+            Algo::Ring,
         )
         .unwrap();
-        let (cpu_b, _) = run_ar(16, bytes_big, ExecPolicy::ccoll(), 1e-4, &allreduce_ring).unwrap();
+        let (cpu_b, _) = run_ar(16, bytes_big, ExecPolicy::ccoll(), 1e-4, Algo::Ring).unwrap();
         let (gpu_b, _) = run_ar(
             16,
             bytes_big,
             ExecPolicy::gpu_centric_unoptimized(),
             1e-4,
-            &allreduce_ring,
+            Algo::Ring,
         )
         .unwrap();
         assert!(gpu_s < cpu_s);
@@ -242,10 +243,14 @@ mod tests {
     fn fig07_redoub_gains_shrink_with_size() {
         // Paper: "the speedup of both gZ-Allreduce methods generally
         // decreases as the data size increases".
-        let (b1, _) = run_ar(32, 50 << 20, ExecPolicy::gpu_centric_unoptimized(), 1e-4, &allreduce_ring).unwrap();
-        let (r1, _) = run_ar(32, 50 << 20, ExecPolicy::gzccl(), 1e-4, &allreduce_recursive_doubling).unwrap();
-        let (b2, _) = run_ar(32, 600 << 20, ExecPolicy::gpu_centric_unoptimized(), 1e-4, &allreduce_ring).unwrap();
-        let (r2, _) = run_ar(32, 600 << 20, ExecPolicy::gzccl(), 1e-4, &allreduce_recursive_doubling).unwrap();
+        let (b1, _) = run_ar(32, 50 << 20, ExecPolicy::gpu_centric_unoptimized(), 1e-4, Algo::Ring)
+            .unwrap();
+        let (r1, _) =
+            run_ar(32, 50 << 20, ExecPolicy::gzccl(), 1e-4, Algo::RecursiveDoubling).unwrap();
+        let (b2, _) = run_ar(32, 600 << 20, ExecPolicy::gpu_centric_unoptimized(), 1e-4, Algo::Ring)
+            .unwrap();
+        let (r2, _) =
+            run_ar(32, 600 << 20, ExecPolicy::gzccl(), 1e-4, Algo::RecursiveDoubling).unwrap();
         assert!(b1 / r1 > b2 / r2, "{} vs {}", b1 / r1, b2 / r2);
         assert!(r1 < b1 && r2 < b2);
     }

@@ -17,9 +17,7 @@ pub use scatter_exp::{fig08_scatter_opt, fig11_scatter_msgsize, fig12_scatter_sc
 pub use stacking_exp::{fig13_accuracy, table2_stacking};
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use crate::compress::{CompressionProfile, CuszpLike};
 use crate::coordinator::DeviceBuf;
@@ -56,22 +54,22 @@ impl Dataset {
 /// Large enough to be representative, small enough to generate quickly.
 const PROFILE_SAMPLE: usize = 1 << 21;
 
-static PROFILES: Lazy<Mutex<HashMap<(Dataset, u64), CompressionProfile>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static PROFILES: OnceLock<Mutex<HashMap<(Dataset, u64), CompressionProfile>>> = OnceLock::new();
+
+fn profiles() -> &'static Mutex<HashMap<(Dataset, u64), CompressionProfile>> {
+    PROFILES.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// Measured compression profile for `(dataset, eb)` — the real
 /// compressor over a real data sample, cached for the process.
 pub fn rtm_profile(ds: Dataset, eb: f64) -> CompressionProfile {
     let key = (ds, eb.to_bits());
-    if let Some(p) = PROFILES.lock().unwrap().get(&key) {
+    if let Some(p) = profiles().lock().unwrap().get(&key) {
         return p.clone();
     }
     let sample = ds.dataset().sample(PROFILE_SAMPLE);
     let profile = CompressionProfile::measure(&CuszpLike::new(eb), &sample);
-    PROFILES
-        .lock()
-        .unwrap()
-        .insert(key, profile.clone());
+    profiles().lock().unwrap().insert(key, profile.clone());
     profile
 }
 

@@ -1,7 +1,10 @@
 //! Scatter experiments: Figs. 8, 11, 12.
+//!
+//! Dispatched through the [`Communicator`]; Scatter has a single
+//! binomial-tree algorithm, so `CollectiveSpec::auto()` is exact.
 
-use crate::collectives::scatter_binomial;
-use crate::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy, RankCtx};
+use crate::comm::{CollectiveSpec, Communicator};
+use crate::coordinator::ExecPolicy;
 use crate::error::Result;
 use crate::metrics::table::{fmt_time, fmt_x};
 use crate::metrics::Table;
@@ -9,12 +12,12 @@ use crate::metrics::Table;
 use super::{rtm_profile, virtual_root_inputs, Dataset, FULL_DATASET_BYTES, GPU_COUNTS, MSG_SIZES_MB};
 
 fn run_scatter(ranks: usize, bytes: usize, policy: ExecPolicy, eb: f64) -> Result<f64> {
-    let spec = ClusterSpec::new(ranks, policy)
-        .with_error_bound(eb)
-        .with_profile(rtm_profile(Dataset::Rtm2, eb));
-    let elems = bytes / 4;
-    let program = move |ctx: &mut RankCtx, input: DeviceBuf| scatter_binomial(ctx, input, elems);
-    let report = run_collective(&spec, virtual_root_inputs(ranks, bytes), &program)?;
+    let comm = Communicator::builder(ranks)
+        .policy(policy)
+        .error_bound(eb)
+        .compression_profile(rtm_profile(Dataset::Rtm2, eb))
+        .build()?;
+    let report = comm.scatter(virtual_root_inputs(ranks, bytes), &CollectiveSpec::auto())?;
     Ok(report.makespan.as_secs())
 }
 

@@ -2,8 +2,9 @@
 //! Fig. 13 (reconstruction accuracy).
 
 use crate::apps::stacking::{run_stacking, write_pgm, StackingConfig, StackingVariant};
-use crate::collectives::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
-use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy, RankProgram};
+use crate::collectives::Algo;
+use crate::comm::{CollectiveSpec, Communicator};
+use crate::coordinator::ExecPolicy;
 use crate::error::Result;
 use crate::metrics::table::fmt_x;
 use crate::metrics::Table;
@@ -19,17 +20,20 @@ use super::{rtm_profile, virtual_inputs, Dataset};
 pub fn table2_stacking(ranks: usize, image_bytes: usize) -> Result<Table> {
     let eb = 1e-4;
     let profile = rtm_profile(Dataset::Rtm1, eb);
-    let run = |policy: ExecPolicy, prog: &RankProgram| -> Result<_> {
-        let spec = ClusterSpec::new(ranks, policy)
-            .with_error_bound(eb)
-            .with_profile(profile.clone());
-        let report = run_collective(&spec, virtual_inputs(ranks, image_bytes), prog)?;
+    let run = |policy: ExecPolicy, algo: Algo| -> Result<(f64, crate::sim::Breakdown)> {
+        let comm = Communicator::builder(ranks)
+            .policy(policy)
+            .error_bound(eb)
+            .compression_profile(profile.clone())
+            .build()?;
+        let report =
+            comm.allreduce(virtual_inputs(ranks, image_bytes), &CollectiveSpec::forced(algo))?;
         Ok((report.makespan.as_secs(), report.total_breakdown()))
     };
-    let (cray, _) = run(ExecPolicy::cray_mpi(), &allreduce_reduce_bcast)?;
-    let (nccl, _) = run(ExecPolicy::nccl(), &allreduce_ring)?;
-    let (ring, bd_ring) = run(ExecPolicy::gzccl(), &allreduce_ring)?;
-    let (redoub, bd_redoub) = run(ExecPolicy::gzccl(), &allreduce_recursive_doubling)?;
+    let (cray, _) = run(ExecPolicy::cray_mpi(), Algo::Binomial)?;
+    let (nccl, _) = run(ExecPolicy::nccl(), Algo::Ring)?;
+    let (ring, bd_ring) = run(ExecPolicy::gzccl(), Algo::Ring)?;
+    let (redoub, bd_redoub) = run(ExecPolicy::gzccl(), Algo::RecursiveDoubling)?;
 
     let mut t = Table::new(
         format!("Table 2: image stacking ({} ranks, {} MB images)", ranks, image_bytes >> 20),

@@ -8,15 +8,23 @@
 //! (ring / recursive doubling / binomial / Bruck), compression-enabled
 //! variants (CPRP2P, C-Coll, gZCCL), a real error-bounded lossy
 //! compressor, a virtual-time cluster simulator calibrated to the
-//! paper's testbed (512×A100, Slingshot-10), and a PJRT runtime that
-//! executes JAX/Pallas-authored artifacts on the hot path.
+//! paper's testbed (512×A100, Slingshot-10), and a runtime that
+//! executes the JAX/Pallas-authored artifact contract on the hot path.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! Applications enter through the [`comm::Communicator`]: a
+//! communicator object (built via [`comm::CommBuilder`]) that owns the
+//! simulated cluster and dispatches each collective through a
+//! policy-aware [`comm::Tuner`] — the paper's message-size/rank-count
+//! crossover model — unless the caller forces an algorithm with
+//! [`comm::AlgoHint::Force`].
+//!
+//! See `DESIGN.md` for the system inventory, the three-layer stack and
+//! the communicator API.
 
 pub mod apps;
 pub mod bench_support;
 pub mod collectives;
+pub mod comm;
 pub mod config;
 pub mod compress;
 pub mod coordinator;

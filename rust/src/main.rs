@@ -11,12 +11,10 @@
 
 use gzccl::apps::ddp::{train_ddp, DdpConfig};
 use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingVariant};
-use gzccl::collectives::{
-    allgather_ring, allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
-    bcast_binomial, reduce_scatter_ring, scatter_binomial,
-};
+use gzccl::collectives::Algo;
+use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator};
 use gzccl::config::ClusterConfig;
-use gzccl::coordinator::{run_collective, DeviceBuf, RankCtx, RankProgram};
+use gzccl::coordinator::DeviceBuf;
 use gzccl::error::{Error, Result};
 use gzccl::experiments as exp;
 use gzccl::runtime::Engine;
@@ -76,7 +74,8 @@ gZCCL — compression-accelerated collective communication (paper reproduction)
 
 USAGE:
   gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
-                    OP: allreduce | allreduce-ring | allreduce-tree |
+                    OP: allreduce (tuner-selected) | allreduce-ring |
+                        allreduce-redoub | allreduce-tree |
                         reduce_scatter | allgather | scatter | bcast
   gzccl experiment  <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|
                      table1|table2|fig13|all> [--fast]
@@ -122,48 +121,39 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .transpose()?
         .unwrap_or(64);
     let cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
-    let spec = cfg.to_spec()?;
-    let n = spec.topo.ranks();
+    let comm = Communicator::from_spec(cfg.to_spec()?);
+    let n = comm.nranks();
     let elems = (size_mb << 20) / 4;
+    let all_ranks = |e: usize| -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(e)).collect() };
 
-    let (inputs, program): (Vec<DeviceBuf>, Box<RankProgram>) = match op.as_str() {
-        "allreduce" => (
-            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
-            Box::new(allreduce_recursive_doubling),
-        ),
-        "allreduce-ring" => (
-            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
-            Box::new(allreduce_ring),
-        ),
-        "allreduce-tree" => (
-            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
-            Box::new(allreduce_reduce_bcast),
-        ),
-        "reduce_scatter" => (
-            (0..n).map(|_| DeviceBuf::Virtual(elems)).collect(),
-            Box::new(reduce_scatter_ring),
-        ),
-        "allgather" => (
-            (0..n).map(|_| DeviceBuf::Virtual(elems / n)).collect(),
-            Box::new(allgather_ring),
-        ),
-        "scatter" => (
-            exp::virtual_root_inputs(n, size_mb << 20),
-            Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-                scatter_binomial(ctx, input, elems)
-            }),
-        ),
-        "bcast" => (
-            exp::virtual_root_inputs(n, size_mb << 20),
-            Box::new(bcast_binomial),
-        ),
+    let spec = CollectiveSpec::auto();
+    let report = match op.as_str() {
+        "allreduce" => comm.allreduce(all_ranks(elems), &spec)?,
+        "allreduce-ring" => {
+            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Ring))?
+        }
+        "allreduce-redoub" => comm.allreduce(
+            all_ranks(elems),
+            &CollectiveSpec::hinted(AlgoHint::Force(Algo::RecursiveDoubling)),
+        )?,
+        "allreduce-tree" => {
+            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial))?
+        }
+        "reduce_scatter" => comm.reduce_scatter(all_ranks(elems), &spec)?,
+        "allgather" => comm.allgather(all_ranks(elems / n), &spec)?,
+        "scatter" => comm.scatter(exp::virtual_root_inputs(n, size_mb << 20), &spec)?,
+        "bcast" => comm.bcast(exp::virtual_root_inputs(n, size_mb << 20), &spec)?,
         other => return Err(Error::config(format!("unknown --op `{other}`"))),
     };
 
-    let report = run_collective(&spec, inputs, &*program)?;
     println!(
         "{op} | variant {} | {} ranks | {} MB",
         cfg.variant, n, size_mb
+    );
+    println!(
+        "  algorithm        : {:?}{}",
+        report.algo,
+        if report.auto_tuned { " (tuner)" } else { " (forced)" }
     );
     println!("  virtual makespan : {}", report.makespan);
     println!("  wire bytes       : {}", report.total_wire_bytes());

@@ -173,11 +173,38 @@ mod tests {
     }
 
     #[test]
-    fn discover_finds_repo_artifacts() {
-        // `make artifacts` ran in this workspace; discovery must work
-        // from the test cwd.
-        let set = ArtifactSet::discover().expect("run `make artifacts` first");
+    fn validate_accepts_a_complete_artifact_dir() {
+        // Build a synthetic artifact dir (offline CI has no JAX to run
+        // `make artifacts`); validation must accept it end-to-end.
+        let dir = std::env::temp_dir().join(format!(
+            "gzccl_artifact_validate_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ARTIFACT_NAMES {
+            std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule stub\n").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "img_elems 16384\ncpr_elems 65536\ndefault_eb 0.0001\n\
+             mlp_params 20992\nmlp_in 64\nmlp_out 16\nmlp_batch 256\n",
+        )
+        .unwrap();
+        let set = ArtifactSet::new(&dir);
         let shapes = set.validate().unwrap();
         assert_eq!(shapes, Shapes::expected());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_missing_artifacts() {
+        let dir = std::env::temp_dir().join(format!(
+            "gzccl_artifact_missing_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let set = ArtifactSet::new(&dir);
+        assert!(set.validate().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

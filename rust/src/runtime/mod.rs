@@ -1,11 +1,15 @@
-//! PJRT runtime: load and execute the JAX/Pallas-authored artifacts.
+//! Artifact runtime: execute the JAX/Pallas-authored artifact contract.
 //!
-//! Python runs only at build time (`make artifacts`); this module makes
-//! the Rust binary self-contained afterwards: it parses the HLO *text*
-//! artifacts (the id-safe interchange format — see `python/compile/
-//! aot.py`), compiles them once on the PJRT CPU client, and executes
-//! them from the coordinator's hot paths (image-stacking reduction, DDP
-//! gradient/apply steps, quantization round-trips).
+//! Python runs only at build time (`python -m compile.aot`); this
+//! module makes the Rust binary self-contained afterwards. The engine
+//! interprets the artifact contract natively (the `xla`/PJRT client of
+//! the original design is not in the offline dependency set — see
+//! `engine.rs`), while `artifacts.rs` still discovers and
+//! shape-validates an `artifacts/` directory when one exists, keeping
+//! the Python AOT pipeline and the Rust side in lockstep. The
+//! coordinator's hot paths (image-stacking reduction, DDP
+//! gradient/apply steps, quantization round-trips) all route through
+//! [`Engine::run`].
 
 pub mod artifacts;
 pub mod engine;

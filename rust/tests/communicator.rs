@@ -1,0 +1,163 @@
+//! Integration tests for the unified `Communicator` API: policy-aware
+//! tuning, forced hints, decision recording, and the root-dependent
+//! compression-stage predictions.
+
+use gzccl::collectives::{expected_cpr_stages, expected_cpr_stages_at, Algo, Op};
+use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator, Tuner};
+use gzccl::coordinator::{DeviceBuf, ExecPolicy};
+
+const MIB: usize = 1 << 20;
+
+fn virt(n: usize, bytes: usize) -> Vec<DeviceBuf> {
+    (0..n).map(|_| DeviceBuf::Virtual(bytes / 4)).collect()
+}
+
+fn virt_root(n: usize, bytes: usize) -> Vec<DeviceBuf> {
+    let mut v = vec![DeviceBuf::Virtual(bytes / 4)];
+    for _ in 1..n {
+        v.push(DeviceBuf::Virtual(0));
+    }
+    v
+}
+
+#[test]
+fn auto_allreduce_crossover_32_ranks_gzccl() {
+    // The ISSUE's acceptance criterion: with `AlgoHint::Auto` on 32
+    // ranks under the full gZCCL policy, the tuner selects the ring at
+    // ≥ 64 MiB and recursive doubling at ≤ 1 MiB.
+    let comm = Communicator::builder(32)
+        .policy(ExecPolicy::gzccl())
+        .build()
+        .unwrap();
+    for mb in [64usize, 256] {
+        let r = comm
+            .allreduce(virt(32, mb * MIB), &CollectiveSpec::auto())
+            .unwrap();
+        assert_eq!(r.algo, Algo::Ring, "{mb} MiB should pick the ring");
+        assert!(r.auto_tuned);
+        for c in &r.counters {
+            assert_eq!(c.algo_selected, Some(Algo::Ring));
+            assert_eq!(c.tuner_decisions, 1);
+        }
+    }
+    for kib in [256usize, 1024] {
+        let r = comm
+            .allreduce(virt(32, kib << 10), &CollectiveSpec::auto())
+            .unwrap();
+        assert_eq!(
+            r.algo,
+            Algo::RecursiveDoubling,
+            "{kib} KiB should pick recursive doubling"
+        );
+        for c in &r.counters {
+            assert_eq!(c.algo_selected, Some(Algo::RecursiveDoubling));
+        }
+    }
+}
+
+#[test]
+fn force_hint_bypasses_tuner_at_any_size() {
+    let comm = Communicator::builder(32).build().unwrap();
+    // 256 MiB would auto-select the ring; the hint pins ReDoub.
+    let r = comm
+        .allreduce(
+            virt(32, 256 * MIB),
+            &CollectiveSpec::hinted(AlgoHint::Force(Algo::RecursiveDoubling)),
+        )
+        .unwrap();
+    assert_eq!(r.algo, Algo::RecursiveDoubling);
+    assert!(!r.auto_tuned);
+    for c in &r.counters {
+        assert_eq!(c.algo_selected, Some(Algo::RecursiveDoubling));
+        assert_eq!(c.tuner_decisions, 0);
+    }
+}
+
+#[test]
+fn auto_choice_depends_on_policy() {
+    // 4 MiB on 32 ranks: 128 KiB ring chunks are under the compression
+    // utilization knee → ReDoub for gZCCL; the uncompressed NCCL-class
+    // baseline is bandwidth-bound there → ring.
+    let gz = Communicator::builder(32).policy(ExecPolicy::gzccl()).build().unwrap();
+    let nccl = Communicator::builder(32).policy(ExecPolicy::nccl()).build().unwrap();
+    let a = gz.allreduce(virt(32, 4 * MIB), &CollectiveSpec::auto()).unwrap();
+    let b = nccl.allreduce(virt(32, 4 * MIB), &CollectiveSpec::auto()).unwrap();
+    assert_eq!(a.algo, Algo::RecursiveDoubling);
+    assert_eq!(b.algo, Algo::Ring);
+}
+
+#[test]
+fn crossover_moves_with_nranks() {
+    // Same 64 MiB message; ring chunks shrink with scale, so the
+    // crossover message size grows with the rank count.
+    let t = Tuner::default();
+    let p = ExecPolicy::gzccl();
+    assert_eq!(t.select(Op::Allreduce, p, 8, 64 * MIB), Algo::Ring);
+    assert_eq!(t.select(Op::Allreduce, p, 128, 64 * MIB), Algo::RecursiveDoubling);
+    assert!(t.allreduce_crossover_bytes(p, 128) > t.allreduce_crossover_bytes(p, 8));
+}
+
+#[test]
+fn scatter_and_bcast_match_root_dependent_stage_table() {
+    // The §3.3.3 complexity table, root-resolved: actual per-rank
+    // kernel counters must equal expected_cpr_stages_at for the gZCCL
+    // compress-once binomial-tree collectives.
+    let n = 8;
+    let comm = Communicator::builder(n).policy(ExecPolicy::gzccl()).build().unwrap();
+
+    let scatter = comm
+        .scatter(virt_root(n, 4 * MIB), &CollectiveSpec::auto())
+        .unwrap();
+    assert_eq!(scatter.algo, Algo::Binomial);
+    for (rank, c) in scatter.counters.iter().enumerate() {
+        let (cpr, dec) =
+            expected_cpr_stages_at(Op::Scatter, Algo::Binomial, n, rank).expect("predicted");
+        assert_eq!(c.compress_calls, cpr, "scatter rank {rank} compressions");
+        assert_eq!(c.decompress_calls, dec, "scatter rank {rank} decompressions");
+    }
+
+    let bcast = comm
+        .bcast(virt_root(n, 4 * MIB), &CollectiveSpec::auto())
+        .unwrap();
+    assert_eq!(bcast.algo, Algo::Binomial);
+    for (rank, c) in bcast.counters.iter().enumerate() {
+        let (cpr, dec) =
+            expected_cpr_stages_at(Op::Bcast, Algo::Binomial, n, rank).expect("predicted");
+        assert_eq!(c.compress_calls, cpr, "bcast rank {rank} compressions");
+        assert_eq!(c.decompress_calls, dec, "bcast rank {rank} decompressions");
+    }
+}
+
+#[test]
+fn rank_symmetric_ops_match_stage_table_through_communicator() {
+    let n = 8;
+    let comm = Communicator::builder(n).policy(ExecPolicy::gzccl()).build().unwrap();
+    for (algo, op_bytes) in [(Algo::Ring, 4 * MIB), (Algo::RecursiveDoubling, MIB)] {
+        let r = comm
+            .allreduce(virt(n, op_bytes), &CollectiveSpec::forced(algo))
+            .unwrap();
+        let (cpr, dec) = expected_cpr_stages(Op::Allreduce, algo, n).expect("predicted");
+        for c in &r.counters {
+            assert_eq!(c.compress_calls, cpr, "{algo:?} compressions");
+            assert_eq!(c.decompress_calls, dec, "{algo:?} decompressions");
+        }
+    }
+}
+
+#[test]
+fn tuned_ring_and_redoub_actually_run_their_schedules() {
+    // The dispatch is not just a label: kernel counters must match the
+    // algorithm the tuner reports.
+    let n = 32;
+    let comm = Communicator::builder(n).build().unwrap();
+    let big = comm.allreduce(virt(n, 64 * MIB), &CollectiveSpec::auto()).unwrap();
+    assert_eq!(big.algo, Algo::Ring);
+    // Ring: N compressions, 2(N−1) decompressions per rank.
+    assert_eq!(big.counters[0].compress_calls, n);
+    assert_eq!(big.counters[0].decompress_calls, 2 * (n - 1));
+    let small = comm.allreduce(virt(n, MIB), &CollectiveSpec::auto()).unwrap();
+    assert_eq!(small.algo, Algo::RecursiveDoubling);
+    // Pow2 ReDoub: log N of each.
+    assert_eq!(small.counters[0].compress_calls, 5);
+    assert_eq!(small.counters[0].decompress_calls, 5);
+}

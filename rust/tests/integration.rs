@@ -2,8 +2,9 @@
 
 use gzccl::collectives::{
     allgather_ring, allreduce_recursive_doubling, allreduce_ring, bcast_binomial,
-    reduce_scatter_ring, scatter_binomial, Chunks,
+    reduce_scatter_ring, scatter_binomial, Algo, Chunks,
 };
+use gzccl::comm::{CollectiveSpec, Communicator};
 use gzccl::config::{ClusterConfig, TomlDoc};
 use gzccl::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
 use gzccl::testkit::{forall, Cases, Pcg32};
@@ -30,15 +31,19 @@ fn exact_sum(inputs: &[DeviceBuf]) -> Vec<f32> {
 
 #[test]
 fn config_file_to_collective_run() {
+    // Config file → ClusterSpec → Communicator → tuned collective.
     let doc = TomlDoc::parse(
         "[cluster]\nranks = 8\nvariant = \"gzccl\"\n[compression]\nerror_bound = 1e-3\n",
     )
     .unwrap();
     let cfg = ClusterConfig::from_doc(&doc);
-    let spec = cfg.to_spec().unwrap();
+    let comm = Communicator::from_spec(cfg.to_spec().unwrap());
     let inputs = real_inputs(8, 256, 1);
     let expect = exact_sum(&inputs);
-    let report = run_collective(&spec, inputs, &allreduce_recursive_doubling).unwrap();
+    let report = comm.allreduce(inputs, &CollectiveSpec::auto()).unwrap();
+    // 1 KiB message on 8 ranks is far below the compressed crossover.
+    assert_eq!(report.algo, Algo::RecursiveDoubling);
+    assert!(report.auto_tuned);
     for out in &report.outputs {
         for (a, b) in out.as_real().iter().zip(&expect) {
             assert!((a - b).abs() < 9.0 * 1e-3);
