@@ -43,8 +43,10 @@ fn main() -> gzccl::Result<()> {
     };
 
     // `CollectiveSpec::auto()` lets the tuner pick the algorithm from
-    // the message size (4 MB), rank count and policy — here that lands
-    // on gZ-ReDoub (whole-vector kernels, log N compression stages).
+    // the message size (4 MB), policy and topology — here (2 nodes of
+    // 4 GPUs, compressed, below the ring crossover) that lands on the
+    // hierarchical two-level schedule: NVLink-only intranode legs and
+    // one compressed internode exchange between the node leaders.
     // `CollectiveSpec::forced(Algo::Ring)` would pin the ring instead.
     let report = comm.allreduce(inputs, &CollectiveSpec::auto())?;
 

@@ -10,7 +10,7 @@ use gzccl::experiments::{fig10_scale, fig12_scatter_scale};
 fn main() -> gzccl::Result<()> {
     println!("Sweeping GPU counts on the 646 MB dataset (virtual payloads,");
     println!("compression sizes from a profile measured on real RTM-like data).\n");
-    fig10_scale()?.print();
+    fig10_scale(4)?.print();
     println!();
     fig12_scatter_scale()?.print();
     Ok(())

@@ -1,0 +1,78 @@
+//! Flat vs hierarchical Allreduce sweep.
+//!
+//! Sweeps rank counts and message sizes under the full gZCCL policy,
+//! comparing the flat ring, flat gZ-ReDoub and the two-level
+//! hierarchical schedule (4 GPUs per node), and emits the virtual
+//! makespans plus wall-clock regeneration stats as
+//! `BENCH_allreduce.json` in the working directory — the perf
+//! trajectory artifact CI archives per commit.
+
+use gzccl::bench_support::bench;
+use gzccl::collectives::Algo;
+use gzccl::comm::{CollectiveSpec, Communicator};
+use gzccl::coordinator::{DeviceBuf, ExecPolicy};
+
+const GPUS_PER_NODE: usize = 4;
+
+fn makespan(ranks: usize, bytes: usize, algo: Algo) -> f64 {
+    let comm = Communicator::builder(ranks)
+        .gpus_per_node(GPUS_PER_NODE)
+        .policy(ExecPolicy::gzccl())
+        .error_bound(1e-4)
+        .build()
+        .expect("communicator");
+    let inputs: Vec<DeviceBuf> = (0..ranks).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
+    comm.allreduce(inputs, &CollectiveSpec::forced(algo))
+        .expect("allreduce")
+        .makespan
+        .as_secs()
+}
+
+fn main() {
+    let ranks_sweep = [32usize, 128];
+    let sizes_mb = [16usize, 64, 256];
+    let algos = [
+        ("ring", Algo::Ring),
+        ("redoub", Algo::RecursiveDoubling),
+        ("hier", Algo::Hierarchical),
+    ];
+
+    let mut rows = Vec::new();
+    for &ranks in &ranks_sweep {
+        for &mb in &sizes_mb {
+            for &(name, algo) in &algos {
+                let (virt_s, stats) = bench(2, || makespan(ranks, mb << 20, algo));
+                println!(
+                    "{name:>7} | {ranks:>4} ranks | {mb:>4} MiB | virtual {:.3} ms | wall {stats}",
+                    virt_s * 1e3
+                );
+                rows.push(format!(
+                    concat!(
+                        "    {{\"algo\": \"{}\", \"ranks\": {}, \"gpus_per_node\": {}, ",
+                        "\"size_mib\": {}, \"virtual_makespan_s\": {:.9}, ",
+                        "\"wall_mean_s\": {:.6}, \"wall_min_s\": {:.6}, \"wall_runs\": {}}}"
+                    ),
+                    name, ranks, GPUS_PER_NODE, mb, virt_s, stats.mean, stats.min, stats.runs
+                ));
+            }
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"allreduce_flat_vs_hier\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    // `cargo bench` runs the harness with CWD set to the *package*
+    // root (rust/); anchor the artifact at the workspace root where CI
+    // expects it.
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::PathBuf::from(dir).join("..").join("BENCH_allreduce.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_allreduce.json"),
+    };
+    std::fs::write(&path, &json).expect("write BENCH_allreduce.json");
+    println!(
+        "wrote {} ({} rows)",
+        path.display(),
+        ranks_sweep.len() * sizes_mb.len() * algos.len()
+    );
+}

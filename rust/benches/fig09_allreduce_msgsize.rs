@@ -3,7 +3,7 @@ use gzccl::bench_support::bench;
 use gzccl::experiments::fig09_msgsize;
 
 fn main() {
-    let (table, stats) = bench(1, || fig09_msgsize(64).unwrap());
+    let (table, stats) = bench(1, || fig09_msgsize(64, 4).unwrap());
     table.print();
     println!("[bench fig09] {stats}");
 }

@@ -3,7 +3,7 @@ use gzccl::bench_support::bench;
 use gzccl::experiments::fig10_scale;
 
 fn main() {
-    let (table, stats) = bench(1, || fig10_scale().unwrap());
+    let (table, stats) = bench(1, || fig10_scale(4).unwrap());
     table.print();
     println!("[bench fig10] {stats}");
 }

@@ -100,7 +100,7 @@ pub fn allgather_ring_at(
     }
 
     let parts: Vec<DeviceBuf> = blocks.into_iter().map(|b| b.unwrap()).collect();
-    let out = DeviceBuf::concat(&parts);
+    let out = DeviceBuf::concat(&parts)?;
     let t = blocks_ready
         .into_iter()
         .fold(VirtTime::ZERO, |a, b| a.join(b));
@@ -143,7 +143,7 @@ pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
     let mut round = 0u64;
     while mask < n {
         let peer = r ^ mask;
-        let mine = DeviceBuf::concat(&have.iter().map(|(_, b)| b.clone()).collect::<Vec<_>>());
+        let mine = DeviceBuf::concat(&have.iter().map(|(_, b)| b.clone()).collect::<Vec<_>>())?;
         let (theirs, t_in) = if ctx.compression_enabled() {
             let (c, t_c) = ctx.compress(stream, &mine, have_t);
             ctx.send(peer, TAG_AG + 0x100 + round, Payload::Comp(c), t_c);
@@ -170,7 +170,7 @@ pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
         ctx.sync_device();
     }
     let parts: Vec<DeviceBuf> = have.into_iter().map(|(_, b)| b).collect();
-    Ok(DeviceBuf::concat(&parts))
+    DeviceBuf::concat(&parts)
 }
 
 /// Bruck Allgather: log N rounds of shifted block exchanges; works for
@@ -196,7 +196,7 @@ pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf>
         let send_to = (r + n - pofk) % n;
         let recv_from = (r + pofk) % n;
         let count = pofk.min(n - pofk);
-        let mine = DeviceBuf::concat(&have[..count].to_vec());
+        let mine = DeviceBuf::concat(&have[..count].to_vec())?;
         let (theirs, t_in) = if ctx.compression_enabled() {
             let (c, t_c) = ctx.compress(stream, &mine, have_t);
             ctx.send(send_to, TAG_AG + 0x200 + round, Payload::Comp(c), t_c);
@@ -223,9 +223,7 @@ pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf>
     for (p, b) in have.into_iter().enumerate().take(n) {
         parts[(r + p) % n] = Some(b);
     }
-    Ok(DeviceBuf::concat(
-        &parts.into_iter().map(|b| b.unwrap()).collect::<Vec<_>>(),
-    ))
+    DeviceBuf::concat(&parts.into_iter().map(|b| b.unwrap()).collect::<Vec<_>>())
 }
 
 #[cfg(test)]

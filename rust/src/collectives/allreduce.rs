@@ -80,7 +80,7 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
             } else {
                 ctx.recv_raw(me - 1, TAG_AR)
             };
-            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t));
+            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
             data = sum;
             data_t = t_sum;
             newrank = (me / 2) as isize;
@@ -110,13 +110,13 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
                 ctx.send(peer, TAG_AR + round, Payload::Comp(c), t_c);
                 let (cin, t_in) = ctx.recv_comp(peer, TAG_AR + round);
                 let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
-                let (sum, t_sum) = ctx.reduce(stream, &data, &dec, t_dec.join(data_t));
+                let (sum, t_sum) = ctx.reduce(stream, &data, &dec, t_dec.join(data_t))?;
                 data = sum;
                 data_t = t_sum;
             } else {
                 ctx.send(peer, TAG_AR + round, Payload::Raw(data.clone()), data_t);
                 let (bin, t_in) = ctx.recv_raw(peer, TAG_AR + round);
-                let (sum, t_sum) = ctx.reduce(stream, &data, &bin, t_in.join(data_t));
+                let (sum, t_sum) = ctx.reduce(stream, &data, &bin, t_in.join(data_t))?;
                 data = sum;
                 data_t = t_sum;
             }
@@ -174,7 +174,7 @@ pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> Result<Dev
         } else if me + mask < n {
             let src = me + mask;
             let (theirs, t_in) = ctx.recv_raw(src, TAG_AR + 0x2000 + round);
-            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t));
+            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
             data = sum;
             data_t = t_sum;
         }
@@ -182,9 +182,8 @@ pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> Result<Dev
         round += 1;
     }
     // --- Binomial broadcast of the result from rank 0. --------------
-    let out = super::bcast::bcast_binomial(ctx, if me == 0 { data } else { DeviceBuf::Virtual(0) });
     // Non-roots receive the broadcast payload; rank 0 returns its sum.
-    out
+    super::bcast::bcast_binomial(ctx, if me == 0 { data } else { DeviceBuf::Virtual(0) }, 0)
 }
 
 #[cfg(test)]

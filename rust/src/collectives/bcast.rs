@@ -1,28 +1,42 @@
-//! Binomial-tree Broadcast.
+//! Binomial-tree Broadcast from any root.
 //!
 //! The whole vector travels every tree edge. With compression enabled
 //! (gZCCL data-movement framework), the root compresses **once** and
 //! the compressed stream is forwarded verbatim; every rank decompresses
 //! once — so the error is one compression deep regardless of depth,
 //! and the compression kernel runs at full size (high utilization).
+//!
+//! Arbitrary roots use relative-rank rotation: the binomial tree is
+//! built over virtual ranks `v = (rank − root) mod N`, so the root is
+//! always virtual rank 0 and edges map back through
+//! `rank = (v + root) mod N`.
 
 use crate::coordinator::{CompBuf, DeviceBuf, Payload, RankCtx};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 
 use super::scatter::tree_position;
 
 const TAG_BC: u64 = 0x4243_0000;
 
-/// Binomial broadcast from root 0. The root passes the vector as
+/// Binomial broadcast from `root`. The root passes the vector as
 /// `input`; other ranks receive it as the return value.
-pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf, root: usize) -> Result<DeviceBuf> {
     let n = ctx.nranks();
     let me = ctx.rank();
     if n == 1 {
         return Ok(input);
     }
-    let (mask, parent) = tree_position(me, n);
+    if root >= n {
+        // A real guard (not debug-only): `me + n - root` would wrap in
+        // release builds and hang or panic the rank mesh.
+        return Err(Error::collective(format!(
+            "bcast root {root} out of range 0..{n}"
+        )));
+    }
+    let vr = (me + n - root) % n;
+    let actual = |v: usize| (v + root) % n;
+    let (mask, vparent) = tree_position(vr, n);
     let stream = if ctx.policy().overlap {
         StreamId::NonDefault(0)
     } else {
@@ -30,45 +44,43 @@ pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> 
     };
 
     if ctx.compression_enabled() {
-        let (cstream, mut have_t, data): (CompBuf, _, Option<DeviceBuf>) = if me == 0 {
+        let (cstream, have_t, data): (CompBuf, _, Option<DeviceBuf>) = if vr == 0 {
             let now = ctx.now();
             let (c, t) = ctx.compress(stream, &input, now);
             (c, t, Some(input))
         } else {
-            let (c, t) = ctx.recv_comp(parent.unwrap(), TAG_BC);
+            let (c, t) = ctx.recv_comp(actual(vparent.unwrap()), TAG_BC);
             (c, t, None)
         };
         // Forward the compressed stream down the tree.
         let mut m = mask >> 1;
         while m > 0 {
-            let dst = me + m;
-            if dst < n {
-                ctx.send(dst, TAG_BC, Payload::Comp(cstream.clone()), have_t);
+            let dst_v = vr + m;
+            if dst_v < n {
+                ctx.send(actual(dst_v), TAG_BC, Payload::Comp(cstream.clone()), have_t);
             }
             m >>= 1;
         }
         let out = if let Some(d) = data {
             d // root keeps its lossless copy
         } else {
-            let (dec, t_dec) = ctx.decompress(stream, &cstream, have_t);
-            have_t = t_dec;
-            let _ = have_t;
+            let (dec, _t_dec) = ctx.decompress(stream, &cstream, have_t);
             dec
         };
         ctx.sync_device();
         Ok(out)
     } else {
-        let (data, have_t) = if me == 0 {
+        let (data, have_t) = if vr == 0 {
             let t = ctx.now();
             (input, t)
         } else {
-            ctx.recv_raw(parent.unwrap(), TAG_BC)
+            ctx.recv_raw(actual(vparent.unwrap()), TAG_BC)
         };
         let mut m = mask >> 1;
         while m > 0 {
-            let dst = me + m;
-            if dst < n {
-                ctx.send(dst, TAG_BC, Payload::Raw(data.clone()), have_t);
+            let dst_v = vr + m;
+            if dst_v < n {
+                ctx.send(actual(dst_v), TAG_BC, Payload::Raw(data.clone()), have_t);
             }
             m >>= 1;
         }
@@ -82,24 +94,29 @@ mod tests {
     use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
     use crate::testkit::Pcg32;
 
-    fn bcast_inputs(n: usize, d: usize) -> (Vec<DeviceBuf>, Vec<f32>) {
+    fn bcast_inputs(n: usize, d: usize, root: usize) -> (Vec<DeviceBuf>, Vec<f32>) {
         let mut rng = Pcg32::seeded(77);
         let full = rng.uniform_vec(d, -1.0, 1.0);
-        let mut inputs = vec![DeviceBuf::Real(full.clone())];
-        for _ in 1..n {
-            inputs.push(DeviceBuf::Real(vec![]));
-        }
+        let inputs = (0..n)
+            .map(|r| {
+                if r == root {
+                    DeviceBuf::Real(full.clone())
+                } else {
+                    DeviceBuf::Real(vec![])
+                }
+            })
+            .collect();
         (inputs, full)
     }
 
     #[test]
     fn raw_bcast_exact() {
         for n in [2usize, 5, 8] {
-            let (inputs, full) = bcast_inputs(n, 128);
+            let (inputs, full) = bcast_inputs(n, 128, 0);
             let report = run_collective(
                 &ClusterSpec::new(n, ExecPolicy::nccl()),
                 inputs,
-                &bcast_binomial,
+                &|ctx, input| bcast_binomial(ctx, input, 0),
             )
             .unwrap();
             for out in &report.outputs {
@@ -109,26 +126,60 @@ mod tests {
     }
 
     #[test]
-    fn compressed_bcast_single_eb() {
-        let n = 8;
-        let (inputs, full) = bcast_inputs(n, 256);
-        let report = run_collective(
-            &ClusterSpec::new(n, ExecPolicy::gzccl()),
-            inputs,
-            &bcast_binomial,
-        )
-        .unwrap();
-        for (r, out) in report.outputs.iter().enumerate() {
-            for (a, b) in out.as_real().iter().zip(full.iter()) {
-                let tol = if r == 0 { 0.0 } else { 1.1e-4 };
-                assert!((a - b).abs() <= tol, "rank {r}: {a} vs {b}");
+    fn raw_bcast_exact_every_root() {
+        for n in [3usize, 6, 8] {
+            for root in 0..n {
+                let (inputs, full) = bcast_inputs(n, 64, root);
+                let report = run_collective(
+                    &ClusterSpec::new(n, ExecPolicy::nccl()),
+                    inputs,
+                    &move |ctx, input| bcast_binomial(ctx, input, root),
+                )
+                .unwrap();
+                for (r, out) in report.outputs.iter().enumerate() {
+                    assert_eq!(out.as_real(), &full[..], "n={n} root={root} rank {r}");
+                }
             }
         }
-        // One compression total; one decompression per non-root.
-        let total_cpr: usize = report.counters.iter().map(|c| c.compress_calls).sum();
-        assert_eq!(total_cpr, 1);
-        let total_dec: usize = report.counters.iter().map(|c| c.decompress_calls).sum();
-        assert_eq!(total_dec, n - 1);
+    }
+
+    #[test]
+    fn compressed_bcast_single_eb_any_root() {
+        let n = 8;
+        for root in [0usize, 3, 7] {
+            let (inputs, full) = bcast_inputs(n, 256, root);
+            let report = run_collective(
+                &ClusterSpec::new(n, ExecPolicy::gzccl()),
+                inputs,
+                &move |ctx, input| bcast_binomial(ctx, input, root),
+            )
+            .unwrap();
+            for (r, out) in report.outputs.iter().enumerate() {
+                for (a, b) in out.as_real().iter().zip(full.iter()) {
+                    let tol = if r == root { 0.0 } else { 1.1e-4 };
+                    assert!((a - b).abs() <= tol, "root {root} rank {r}: {a} vs {b}");
+                }
+            }
+            // One compression total (at the root); one decompression
+            // per non-root.
+            let total_cpr: usize = report.counters.iter().map(|c| c.compress_calls).sum();
+            assert_eq!(total_cpr, 1);
+            assert_eq!(report.counters[root].compress_calls, 1);
+            let total_dec: usize = report.counters.iter().map(|c| c.decompress_calls).sum();
+            assert_eq!(total_dec, n - 1);
+            assert_eq!(report.counters[root].decompress_calls, 0);
+        }
+    }
+
+    #[test]
+    fn out_of_range_root_is_error() {
+        let (inputs, _) = bcast_inputs(4, 8, 0);
+        let res = run_collective(
+            &ClusterSpec::new(4, ExecPolicy::nccl()),
+            inputs,
+            &|ctx, input| bcast_binomial(ctx, input, 9),
+        );
+        assert!(res.is_err());
     }
 
     #[test]
@@ -146,13 +197,13 @@ mod tests {
         let raw = run_collective(
             &ClusterSpec::new(n, ExecPolicy::nccl()),
             mk(&smooth),
-            &bcast_binomial,
+            &|ctx, input| bcast_binomial(ctx, input, 0),
         )
         .unwrap();
         let gz = run_collective(
             &ClusterSpec::new(n, ExecPolicy::gzccl()),
             mk(&smooth),
-            &bcast_binomial,
+            &|ctx, input| bcast_binomial(ctx, input, 0),
         )
         .unwrap();
         assert!(gz.total_wire_bytes() * 4 < raw.total_wire_bytes());

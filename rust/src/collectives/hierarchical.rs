@@ -1,0 +1,409 @@
+//! Topology-aware two-level (hierarchical) Allreduce.
+//!
+//! The paper's testbed — and every GPU cluster it models — is two
+//! networks glued together: NVLink-class links inside a node and a
+//! shared Slingshot NIC between nodes. A flat schedule pays NIC latency
+//! on hops that could ride NVLink; the hierarchical schedule never
+//! does. Three phases:
+//!
+//! 1. **Intranode reduce** — every non-leader ships its vector to the
+//!    node leader (lowest rank on the node) over NVLink, *raw*: at
+//!    NVLink bandwidth, compression kernels cost more than they save,
+//!    and keeping this leg lossless means the end-to-end error
+//!    accounting is exactly that of the internode leg.
+//! 2. **Internode Allreduce over leaders** — recursive doubling
+//!    (gZ-ReDoub style) across one leader per node: `⌈log₂ nodes⌉`
+//!    whole-vector exchanges, compressed once per step when the policy
+//!    compresses. Non-power-of-two node counts use the MPICH remainder
+//!    fold. This is the **only** leg that compresses, so the
+//!    one-compression-per-hop error model holds with `nodes` in place
+//!    of `ranks` — strictly fewer stages than flat gZ-ReDoub.
+//! 3. **Intranode broadcast** — the leader forwards the finished vector
+//!    to its node's members, raw over NVLink.
+//!
+//! Compared with the flat algorithms on an `N = M·g` cluster
+//! (`M` nodes × `g` GPUs):
+//!
+//! * vs flat ring: `2⌈log₂M⌉` compression kernels instead of `2(N−1)`,
+//!   `⌈log₂M⌉` internode rounds instead of `2(N−1)`.
+//! * vs flat gZ-ReDoub: `log₂ g` fewer compression stages and internode
+//!   exchanges, paid for with µs-scale NVLink traffic.
+//!
+//! Uncompressed, the schedule is exact: every rank of a node returns
+//! the leader's bits, and leaders exchange symmetric pairwise sums, so
+//! all N outputs are bitwise identical (like flat recursive doubling).
+
+use crate::coordinator::{DeviceBuf, Payload, RankCtx};
+use crate::error::Result;
+use crate::gpu::StreamId;
+use crate::sim::VirtTime;
+
+/// Tag bases; offsets keep the three phases (and redoub rounds) from
+/// colliding for any plausible rank count.
+const TAG_HIER_UP: u64 = 0x4852_0000_0000; // + member rank
+const TAG_HIER_X: u64 = 0x4852_1000_0000; // + redoub round
+const TAG_HIER_FOLD: u64 = 0x4852_2000_0000;
+const TAG_HIER_UNFOLD: u64 = 0x4852_3000_0000;
+const TAG_HIER_DOWN: u64 = 0x4852_4000_0000; // + member rank
+
+/// Two-level Allreduce. See the module docs for the schedule.
+///
+/// Works for any topology: a single-node communicator degenerates to
+/// reduce-to-leader + broadcast, `gpus_per_node == 1` degenerates to
+/// recursive doubling over all ranks, and partially-filled last nodes
+/// are handled by the block-wise rank layout.
+pub fn allreduce_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    if n == 1 {
+        return Ok(input);
+    }
+    let topo = ctx.topology().clone();
+    let node = topo.node_of(me);
+    let leader = topo.leader_of(me);
+    let members = topo.node_ranks(node);
+
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(0)
+    } else {
+        StreamId::Default
+    };
+
+    if me != leader {
+        // Phase 1: ship the local vector to the node leader — raw, the
+        // hop is NVLink. Then park until the leader's broadcast.
+        let now = ctx.now();
+        ctx.send(leader, TAG_HIER_UP + me as u64, Payload::Raw(input), now);
+        let (out, _t) = ctx.recv_raw(leader, TAG_HIER_DOWN + me as u64);
+        ctx.sync_device();
+        return Ok(out);
+    }
+
+    // Phase 1 (leader): fold in every member's vector.
+    let mut data = input;
+    let mut data_t = ctx.now();
+    for m in members.clone().skip(1) {
+        let (theirs, t_in) = ctx.recv_raw(m, TAG_HIER_UP + m as u64);
+        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
+        data = sum;
+        data_t = t_sum;
+    }
+
+    // Phase 2: Allreduce across node leaders (the only compressed leg).
+    if topo.nodes() > 1 {
+        let (d, t) = leaders_recursive_doubling(ctx, stream, data, data_t, &topo)?;
+        data = d;
+        data_t = t;
+    }
+
+    // Phase 3: broadcast the finished vector to the node's members.
+    for m in members.skip(1) {
+        ctx.send(m, TAG_HIER_DOWN + m as u64, Payload::Raw(data.clone()), data_t);
+    }
+    ctx.sync_device();
+    Ok(data)
+}
+
+/// Send the whole vector to `to`, compressed when the policy
+/// compresses (one compression per internode exchange — Fig. 4).
+fn send_whole(
+    ctx: &mut RankCtx,
+    stream: StreamId,
+    to: usize,
+    tag: u64,
+    data: &DeviceBuf,
+    data_t: VirtTime,
+) {
+    if ctx.compression_enabled() {
+        // Async memset of the reused temp buffers, then compress on the
+        // side stream (§3.3.4), exactly as flat gZ-ReDoub does.
+        ctx.memset(stream, data.bytes(), data_t);
+        let (c, t_c) = ctx.compress(stream, data, data_t);
+        ctx.send(to, tag, Payload::Comp(c), t_c);
+    } else {
+        ctx.send(to, tag, Payload::Raw(data.clone()), data_t);
+    }
+}
+
+/// Receive a whole vector from `from`, decompressing when compressed.
+fn recv_whole(
+    ctx: &mut RankCtx,
+    stream: StreamId,
+    from: usize,
+    tag: u64,
+) -> (DeviceBuf, VirtTime) {
+    if ctx.compression_enabled() {
+        let (c, t_in) = ctx.recv_comp(from, tag);
+        ctx.decompress(stream, &c, t_in)
+    } else {
+        ctx.recv_raw(from, tag)
+    }
+}
+
+/// Recursive-doubling Allreduce over the leader group (one rank per
+/// node), MPICH remainder scheme for non-power-of-two node counts.
+/// Only node leaders may call this.
+fn leaders_recursive_doubling(
+    ctx: &mut RankCtx,
+    stream: StreamId,
+    input: DeviceBuf,
+    input_t: VirtTime,
+    topo: &crate::net::Topology,
+) -> Result<(DeviceBuf, VirtTime)> {
+    let nodes = topo.nodes();
+    let my_idx = topo.node_of(ctx.rank());
+    debug_assert!(topo.is_leader(ctx.rank()));
+
+    let pof2 = 1usize << (usize::BITS - 1 - nodes.leading_zeros()) as usize;
+    let rem = nodes - pof2;
+
+    let mut data = input;
+    let mut data_t = input_t;
+
+    // ---- Fold the remainder leaders in (even → odd pairs park). -----
+    let newidx: isize;
+    if my_idx < 2 * rem {
+        if my_idx % 2 == 0 {
+            let peer = topo.leader_of_node(my_idx + 1);
+            send_whole(ctx, stream, peer, TAG_HIER_FOLD, &data, data_t);
+            newidx = -1;
+        } else {
+            let peer = topo.leader_of_node(my_idx - 1);
+            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_FOLD);
+            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
+            data = sum;
+            data_t = t_sum;
+            newidx = (my_idx / 2) as isize;
+        }
+    } else {
+        newidx = (my_idx - rem) as isize;
+    }
+
+    // ---- Recursive doubling over pof2 leaders. ----------------------
+    if newidx >= 0 {
+        let nr = newidx as usize;
+        let mut mask = 1usize;
+        let mut round: u64 = 0;
+        while mask < pof2 {
+            let peer_nr = nr ^ mask;
+            let peer_idx = if peer_nr < rem {
+                peer_nr * 2 + 1
+            } else {
+                peer_nr + rem
+            };
+            let peer = topo.leader_of_node(peer_idx);
+            send_whole(ctx, stream, peer, TAG_HIER_X + round, &data, data_t);
+            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_X + round);
+            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
+            data = sum;
+            data_t = t_sum;
+            mask <<= 1;
+            round += 1;
+        }
+    }
+
+    // ---- Restore the parked remainder leaders. ----------------------
+    if my_idx < 2 * rem {
+        if my_idx % 2 == 1 {
+            let peer = topo.leader_of_node(my_idx - 1);
+            send_whole(ctx, stream, peer, TAG_HIER_UNFOLD, &data, data_t);
+        } else {
+            let peer = topo.leader_of_node(my_idx + 1);
+            let (result, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_UNFOLD);
+            data = result;
+            data_t = t_in;
+        }
+    }
+    Ok((data, data_t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::allreduce_ring;
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::net::Topology;
+    use crate::testkit::Pcg32;
+
+    fn spec(n: usize, g: usize, policy: ExecPolicy) -> ClusterSpec {
+        ClusterSpec::with_topology(Topology::new(n, g).unwrap(), policy)
+    }
+
+    /// Integer-valued inputs: f32 sums of small integers are exact, so
+    /// schedules with different reduction orders agree bit-for-bit.
+    fn int_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::new(seed, r as u64);
+                DeviceBuf::Real(
+                    (0..d)
+                        .map(|_| rng.range_usize(0, 17) as f32 - 8.0)
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn real_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::new(seed, r as u64);
+                DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+            })
+            .collect()
+    }
+
+    fn exact_sum(inputs: &[DeviceBuf]) -> Vec<f32> {
+        let d = inputs[0].elems();
+        let mut out = vec![0.0f32; d];
+        for b in inputs {
+            for (o, v) in out.iter_mut().zip(b.as_real()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn uncompressed_matches_flat_ring_bitwise() {
+        // Integer data → exact sums → the two schedules must agree to
+        // the bit, including partial last nodes (n=10, g=4).
+        for (n, g) in [(8usize, 4usize), (10, 4), (6, 2), (7, 3), (4, 4), (5, 1)] {
+            let inputs = int_inputs(n, 33, 42);
+            let ring = run_collective(&spec(n, g, ExecPolicy::nccl()), inputs.clone(), &allreduce_ring)
+                .unwrap();
+            let hier =
+                run_collective(&spec(n, g, ExecPolicy::nccl()), inputs, &allreduce_hierarchical)
+                    .unwrap();
+            for r in 0..n {
+                assert_eq!(
+                    hier.outputs[r].as_real(),
+                    ring.outputs[r].as_real(),
+                    "n={n} g={g} rank {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_ranks_identical_even_with_float_data() {
+        // Leaders exchange symmetric pairwise sums and members take the
+        // leader's bits: every output is bitwise identical, like flat
+        // recursive doubling.
+        let (n, g) = (12, 4);
+        let report = run_collective(
+            &spec(n, g, ExecPolicy::nccl()),
+            real_inputs(n, 57, 9),
+            &allreduce_hierarchical,
+        )
+        .unwrap();
+        let first = report.outputs[0].as_real();
+        for r in 1..n {
+            assert_eq!(report.outputs[r].as_real(), first, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn compressed_error_bounded_by_internode_stages() {
+        // Only the internode leg compresses: the stacked error scales
+        // with ⌈log₂ nodes⌉ (+2 for the non-pow2 fold/unfold), not with
+        // the rank count.
+        let eb = 1e-3f32;
+        for (n, g, stages) in [(8usize, 4usize, 1usize), (12, 2, 5), (13, 4, 2)] {
+            let inputs = real_inputs(n, 96, 5);
+            let expect = exact_sum(&inputs);
+            let report = run_collective(
+                &spec(n, g, ExecPolicy::gzccl()).with_error_bound(eb as f64),
+                inputs,
+                &allreduce_hierarchical,
+            )
+            .unwrap();
+            let tol = 3.0 * (stages as f32 + 1.0) * eb;
+            for (r, out) in report.outputs.iter().enumerate() {
+                for (i, (a, b)) in out.as_real().iter().zip(&expect).enumerate() {
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "n={n} g={g} rank {r} elem {i}: {a} vs {b} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compression_stays_on_the_internode_leg() {
+        // 16 ranks on 4 nodes: leaders run ⌈log₂4⌉ = 2 compressed
+        // exchanges; members never touch the compressor.
+        let n = 16;
+        let g = 4;
+        let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(1 << 16)).collect();
+        let report = run_collective(&spec(n, g, ExecPolicy::gzccl()), inputs, &allreduce_hierarchical)
+            .unwrap();
+        for r in 0..n {
+            let c = &report.counters[r];
+            if r % g == 0 {
+                assert_eq!(c.compress_calls, 2, "leader {r}");
+                assert_eq!(c.decompress_calls, 2, "leader {r}");
+            } else {
+                assert_eq!(c.compress_calls, 0, "member {r}");
+                assert_eq!(c.decompress_calls, 0, "member {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_and_single_gpu_degenerate() {
+        // One node: reduce-to-leader + broadcast, no internode leg.
+        let inputs = int_inputs(4, 16, 3);
+        let expect = exact_sum(&inputs);
+        let report =
+            run_collective(&spec(4, 4, ExecPolicy::nccl()), inputs, &allreduce_hierarchical)
+                .unwrap();
+        for out in &report.outputs {
+            assert_eq!(out.as_real(), &expect[..]);
+        }
+        // One GPU per node: pure recursive doubling over all ranks.
+        let inputs = int_inputs(8, 16, 4);
+        let expect = exact_sum(&inputs);
+        let report =
+            run_collective(&spec(8, 1, ExecPolicy::gzccl()), inputs, &allreduce_hierarchical)
+                .unwrap();
+        for out in &report.outputs {
+            for (a, b) in out.as_real().iter().zip(&expect) {
+                assert!((a - b).abs() <= 3.0 * 4.0 * 1e-4, "{a} vs {b}");
+            }
+        }
+        // Single rank is the identity.
+        let report = run_collective(
+            &spec(1, 4, ExecPolicy::gzccl()),
+            vec![DeviceBuf::Real(vec![1.0, 2.0])],
+            &allreduce_hierarchical,
+        )
+        .unwrap();
+        assert_eq!(report.outputs[0].as_real(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn beats_flat_redoub_at_multinode_scale_compressed() {
+        // 32 ranks × 4 GPUs/node: flat gZ-ReDoub pays ⌈log₂32⌉ = 5
+        // compressed internode exchanges; hierarchical pays ⌈log₂8⌉ = 3
+        // plus µs-scale NVLink traffic.
+        let n = 32;
+        let d = (64 << 20) / 4;
+        let mk = || -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(d)).collect() };
+        let redoub = run_collective(
+            &spec(n, 4, ExecPolicy::gzccl()),
+            mk(),
+            &crate::collectives::allreduce_recursive_doubling,
+        )
+        .unwrap();
+        let hier =
+            run_collective(&spec(n, 4, ExecPolicy::gzccl()), mk(), &allreduce_hierarchical).unwrap();
+        assert!(
+            hier.makespan.as_secs() < redoub.makespan.as_secs(),
+            "hier {} vs flat redoub {}",
+            hier.makespan,
+            redoub.makespan
+        );
+    }
+}

@@ -7,18 +7,20 @@
 //!
 //! Algorithm inventory (paper §3.3.3):
 //!
-//! | Op             | Algorithms                                   |
-//! |----------------|----------------------------------------------|
-//! | Reduce_scatter | ring                                         |
-//! | Allgather      | ring, Bruck, recursive doubling              |
-//! | Allreduce      | ring (RS+AG), recursive doubling (gZ-ReDoub) |
-//! | Scatter        | binomial tree (gZ-Scatter multi-stream)      |
-//! | Bcast          | binomial tree                                |
+//! | Op             | Algorithms                                            |
+//! |----------------|-------------------------------------------------------|
+//! | Reduce_scatter | ring                                                  |
+//! | Allgather      | ring, Bruck, recursive doubling                       |
+//! | Allreduce      | ring (RS+AG), recursive doubling (gZ-ReDoub),         |
+//! |                | hierarchical (two-level, topology-aware)              |
+//! | Scatter        | binomial tree (gZ-Scatter multi-stream), any root     |
+//! | Bcast          | binomial tree, any root                               |
 
 pub mod allgather;
 pub mod allreduce;
 pub mod bcast;
 pub mod chunking;
+pub mod hierarchical;
 pub mod reduce_scatter;
 pub mod scatter;
 
@@ -26,6 +28,7 @@ pub use allgather::{allgather_bruck, allgather_recursive_doubling, allgather_rin
 pub use allreduce::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
 pub use bcast::bcast_binomial;
 pub use chunking::Chunks;
+pub use hierarchical::allreduce_hierarchical;
 pub use reduce_scatter::reduce_scatter_ring;
 pub use scatter::scatter_binomial;
 
@@ -55,6 +58,13 @@ pub enum Algo {
     Bruck,
     /// Binomial tree (Scatter/Bcast).
     Binomial,
+    /// Two-level topology-aware schedule: intranode NVLink legs around
+    /// an internode collective over one leader per node, compression
+    /// confined to the internode leg.
+    Hierarchical,
+    /// Degenerate no-op: what the tuner reports for single-rank
+    /// communicators, where every collective is the identity.
+    Identity,
 }
 
 /// Predicted compression-kernel invocations per rank — the complexity
@@ -75,6 +85,10 @@ pub fn expected_cpr_stages(op: Op, algo: Algo, n: usize) -> Option<(usize, usize
         (Op::Allreduce, Algo::RecursiveDoubling) if n.is_power_of_two() => Some((logn, logn)),
         // Root-dependent: see expected_cpr_stages_at.
         (Op::Scatter, Algo::Binomial) | (Op::Bcast, Algo::Binomial) => None,
+        // Topology-dependent: leaders compress ⌈log₂ nodes⌉ times,
+        // members never — see expected_cpr_stages_hier.
+        (Op::Allreduce, Algo::Hierarchical) => None,
+        (_, Algo::Identity) => Some((0, 0)),
         _ => None,
     }
 }
@@ -93,14 +107,56 @@ pub fn expected_cpr_stages(op: Op, algo: Algo, n: usize) -> Option<(usize, usize
 ///
 /// Rank-symmetric `(op, algo)` pairs fall through to
 /// [`expected_cpr_stages`].
-pub fn expected_cpr_stages_at(op: Op, algo: Algo, n: usize, rank: usize) -> Option<(usize, usize)> {
+pub fn expected_cpr_stages_at(
+    op: Op,
+    algo: Algo,
+    n: usize,
+    rank: usize,
+    root: usize,
+) -> Option<(usize, usize)> {
     if n <= 1 {
         return Some((0, 0));
     }
     match (op, algo) {
-        (Op::Scatter, Algo::Binomial) => Some(if rank == 0 { (n, 1) } else { (0, 1) }),
-        (Op::Bcast, Algo::Binomial) => Some(if rank == 0 { (1, 0) } else { (0, 1) }),
+        (Op::Scatter, Algo::Binomial) => Some(if rank == root { (n, 1) } else { (0, 1) }),
+        (Op::Bcast, Algo::Binomial) => Some(if rank == root { (1, 0) } else { (0, 1) }),
         _ => expected_cpr_stages(op, algo, n),
+    }
+}
+
+/// Per-rank compression-stage prediction for the two-level hierarchical
+/// Allreduce over `nodes` nodes of `gpus_per_node` GPUs: only node
+/// leaders compress, once per internode recursive-doubling exchange
+/// (including the remainder fold/unfold for non-power-of-two node
+/// counts); members ride raw NVLink legs.
+pub fn expected_cpr_stages_hier(
+    n: usize,
+    gpus_per_node: usize,
+    rank: usize,
+) -> (usize, usize) {
+    if n <= 1 || gpus_per_node == 0 {
+        return (0, 0);
+    }
+    let nodes = n.div_ceil(gpus_per_node);
+    if nodes <= 1 || rank % gpus_per_node != 0 {
+        return (0, 0);
+    }
+    let pof2 = 1usize << (usize::BITS - 1 - nodes.leading_zeros()) as usize;
+    let rem = nodes - pof2;
+    let logp = pof2.trailing_zeros() as usize;
+    let idx = rank / gpus_per_node;
+    if idx < 2 * rem {
+        if idx % 2 == 0 {
+            // Parked remainder leader: one fold compress, one unfold
+            // decompress.
+            (1, 1)
+        } else {
+            // Carrying remainder leader: the fold adds a decompress,
+            // the unfold adds a compress, around log₂(pof2) exchanges.
+            (logp + 1, logp + 1)
+        }
+    } else {
+        (logp, logp)
     }
 }
 
@@ -130,18 +186,42 @@ mod tests {
         // Scatter: root compresses each of the N blocks once and
         // decompresses its own; non-roots only decompress their block.
         assert_eq!(expected_cpr_stages(Op::Scatter, Algo::Binomial, 8), None);
-        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 0), Some((8, 1)));
-        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 5), Some((0, 1)));
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 0, 0), Some((8, 1)));
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 5, 0), Some((0, 1)));
         // Bcast: one compression total (root), one decompression per
         // non-root; the root keeps its lossless copy.
-        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 0), Some((1, 0)));
-        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 3), Some((0, 1)));
+        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 0, 0), Some((1, 0)));
+        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 3, 0), Some((0, 1)));
+        // Arbitrary roots shift the table with them.
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 8, 5, 5), Some((8, 1)));
+        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 3, 3), Some((1, 0)));
+        assert_eq!(expected_cpr_stages_at(Op::Bcast, Algo::Binomial, 8, 0, 3), Some((0, 1)));
         // Degenerate single-rank communicator never compresses.
-        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 1, 0), Some((0, 0)));
+        assert_eq!(expected_cpr_stages_at(Op::Scatter, Algo::Binomial, 1, 0, 0), Some((0, 0)));
         // Rank-symmetric ops fall through to the table.
         assert_eq!(
-            expected_cpr_stages_at(Op::Allreduce, Algo::Ring, 8, 3),
+            expected_cpr_stages_at(Op::Allreduce, Algo::Ring, 8, 3, 0),
             expected_cpr_stages(Op::Allreduce, Algo::Ring, 8)
         );
+    }
+
+    #[test]
+    fn hierarchical_stage_table() {
+        // 16 ranks / 4 per node → 4 nodes: leaders run log₂4 = 2
+        // compressed exchanges, members none.
+        assert_eq!(expected_cpr_stages(Op::Allreduce, Algo::Hierarchical, 16), None);
+        assert_eq!(expected_cpr_stages_hier(16, 4, 0), (2, 2));
+        assert_eq!(expected_cpr_stages_hier(16, 4, 4), (2, 2));
+        assert_eq!(expected_cpr_stages_hier(16, 4, 5), (0, 0));
+        // Non-power-of-two node count (6 nodes): pof2 = 4, rem = 2.
+        // Parked evens fold once; carrying odds pay one extra pair.
+        assert_eq!(expected_cpr_stages_hier(12, 2, 0), (1, 1));
+        assert_eq!(expected_cpr_stages_hier(12, 2, 2), (3, 3));
+        assert_eq!(expected_cpr_stages_hier(12, 2, 8), (2, 2));
+        // Single node or single rank: nothing compresses.
+        assert_eq!(expected_cpr_stages_hier(4, 4, 0), (0, 0));
+        assert_eq!(expected_cpr_stages_hier(1, 4, 0), (0, 0));
+        // Identity is always a no-op.
+        assert_eq!(expected_cpr_stages(Op::Allreduce, Algo::Identity, 8), Some((0, 0)));
     }
 }

@@ -56,7 +56,7 @@ pub fn reduce_scatter_ring_at(
             let (cin, t_in) = ctx.recv_comp(prev, TAG_RS + s as u64);
             let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
             let dep = t_dec.join(acc_ready[recv_idx]);
-            let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &dec, dep);
+            let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &dec, dep)?;
             acc[recv_idx] = sum;
             acc_ready[recv_idx] = t_sum;
         } else {
@@ -68,7 +68,7 @@ pub fn reduce_scatter_ring_at(
             );
             let (bin, t_in) = ctx.recv_raw(prev, TAG_RS + s as u64);
             let dep = t_in.join(acc_ready[recv_idx]);
-            let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &bin, dep);
+            let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &bin, dep)?;
             acc[recv_idx] = sum;
             acc_ready[recv_idx] = t_sum;
         }

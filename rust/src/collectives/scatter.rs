@@ -1,8 +1,16 @@
-//! Binomial-tree Scatter — including gZ-Scatter (Fig. 5).
+//! Binomial-tree Scatter — including gZ-Scatter (Fig. 5) — from any
+//! root.
 //!
 //! The root holds N blocks; a binomial tree distributes them in log N
 //! rounds (the subtree rooted at relative rank v with receive-mask m
-//! covers blocks [v, v+m)).
+//! covers blocks [v, v+m)). Arbitrary roots are handled by
+//! **relative-rank rotation**: the tree is built over virtual ranks
+//! `v = (rank − root) mod N`, with virtual block index v mapping to the
+//! *actual* chunk `(v + root) mod N` — so rank r always ends up with
+//! chunk r of the `Chunks::new(total, N)` layout, whatever the root.
+//! Because a rotated block range wraps around the chunk layout, batch
+//! offsets are derived from the actual chunk sizes (an even re-split of
+//! the batch would misalign blocks whenever N ∤ total).
 //!
 //! gZ-Scatter (§3.3.4): the root compresses every block *individually*
 //! (a whole-data compression could not be split: compressed streams
@@ -18,7 +26,7 @@
 //! (fixed-rate), which is what makes it slow and error-stacking.
 
 use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
 
@@ -33,33 +41,41 @@ fn per_hop_recompress(ctx: &RankCtx) -> bool {
     ctx.policy().compression == CompressionMode::FixedRate
 }
 
-/// Binomial-tree Scatter from root 0. `input` is the full vector on the
+/// Binomial-tree Scatter from `root`. `input` is the full vector on the
 /// root (ignored elsewhere); every rank returns its own block of the
 /// `Chunks::new(total_elems, n)` layout.
 pub fn scatter_binomial(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     total_elems: usize,
+    root: usize,
 ) -> Result<DeviceBuf> {
     let n = ctx.nranks();
-    let _me = ctx.rank();
     let chunks = Chunks::new(total_elems, n);
     if n == 1 {
         return Ok(input);
     }
+    if root >= n {
+        // A real guard (not debug-only): the virtual-rank rotation
+        // `rank + n - root` would wrap in release builds and hang or
+        // panic the rank mesh.
+        return Err(Error::collective(format!(
+            "scatter root {root} out of range 0..{n}"
+        )));
+    }
 
     if ctx.compression_enabled() && !per_hop_recompress(ctx) {
-        scatter_gz(ctx, input, chunks)
+        scatter_gz(ctx, input, chunks, root)
     } else if ctx.compression_enabled() {
-        scatter_cprp2p(ctx, input, chunks)
+        scatter_cprp2p(ctx, input, chunks, root)
     } else {
-        scatter_raw(ctx, input, chunks)
+        scatter_raw(ctx, input, chunks, root)
     }
 }
 
-/// Receive-phase bookkeeping: (receive mask, parent) for `me`; the root
-/// gets (pof2 ≥ n, None). Shared with sibling modules (bcast) and
-/// exported as `collectives::scatter::tree_position`.
+/// Receive-phase bookkeeping: (receive mask, parent) for virtual rank
+/// `me`; the (virtual) root gets (pof2 ≥ n, None). Shared with sibling
+/// modules (bcast) and exported as `collectives::scatter::tree_position`.
 pub fn tree_position(me: usize, n: usize) -> (usize, Option<usize>) {
     if me == 0 {
         let mut m = 1;
@@ -73,7 +89,7 @@ pub fn tree_position(me: usize, n: usize) -> (usize, Option<usize>) {
     }
 }
 
-/// The subtree block range [me, me+mask) clipped to n.
+/// The subtree block range [me, me+mask) clipped to n (virtual space).
 fn subtree(me: usize, mask: usize, n: usize) -> std::ops::Range<usize> {
     me..(me + mask).min(n)
 }
@@ -81,64 +97,87 @@ fn subtree(me: usize, mask: usize, n: usize) -> std::ops::Range<usize> {
 // ---------------------------------------------------------------------
 // Uncompressed baseline (NCCL-class raw tree / Cray MPI CPU-centric).
 // ---------------------------------------------------------------------
-fn scatter_raw(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<DeviceBuf> {
+fn scatter_raw(
+    ctx: &mut RankCtx,
+    input: DeviceBuf,
+    chunks: Chunks,
+    root: usize,
+) -> Result<DeviceBuf> {
     let n = ctx.nranks();
     let me = ctx.rank();
-    let (mask, parent) = tree_position(me, n);
+    let vr = (me + n - root) % n;
+    let actual = |v: usize| (v + root) % n;
+    let (mask, vparent) = tree_position(vr, n);
 
-    // Blocks this rank holds (index range within [0, n)).
-    let (mut held, mut held_t): (Vec<Option<DeviceBuf>>, VirtTime) = if me == 0 {
+    // Blocks this rank holds, indexed by VIRTUAL block index; virtual
+    // block v is the actual chunk `actual(v)`.
+    let (mut held, held_t): (Vec<Option<DeviceBuf>>, VirtTime) = if vr == 0 {
         (
-            (0..n).map(|i| Some(input.slice(chunks.range(i)))).collect(),
+            (0..n)
+                .map(|v| Some(input.slice(chunks.range(actual(v)))))
+                .collect(),
             ctx.now(),
         )
     } else {
-        let (batch, t) = ctx.recv_raw(parent.unwrap(), TAG_SC + me as u64);
+        let parent = actual(vparent.unwrap());
+        let (batch, t) = ctx.recv_raw(parent, TAG_SC + vr as u64);
         let mut held: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
-        let range = subtree(me, mask, n);
-        let layout = Chunks::new(batch.elems(), range.len());
-        for (slot, i) in range.clone().enumerate() {
-            held[i] = Some(batch.slice(layout.range(slot)));
+        let range = subtree(vr, mask, n);
+        // The batch packs the subtree's blocks in virtual order with
+        // their ACTUAL chunk sizes (a rotated range wraps the layout,
+        // so an even re-split would misalign).
+        let mut off = 0;
+        for v in range {
+            let len = chunks.len(actual(v));
+            held[v] = Some(batch.slice(off..off + len));
+            off += len;
         }
         (held, t)
     };
 
-    // Send phase: halve the subtree.
+    // Send phase: halve the subtree (virtual space).
     let mut m = mask >> 1;
     while m > 0 {
-        let dst = me + m;
-        if dst < n {
-            let range = subtree(dst, m, n);
+        let dst_v = vr + m;
+        if dst_v < n {
+            let range = subtree(dst_v, m, n);
             let parts: Vec<DeviceBuf> = range
-                .clone()
-                .map(|i| held[i].take().expect("missing block to forward"))
+                .map(|v| held[v].take().expect("missing block to forward"))
                 .collect();
-            let batch = DeviceBuf::concat(&parts);
-            ctx.send(dst, TAG_SC + dst as u64, Payload::Raw(batch), held_t);
+            let batch = DeviceBuf::concat(&parts)?;
+            ctx.send(actual(dst_v), TAG_SC + dst_v as u64, Payload::Raw(batch), held_t);
         }
         m >>= 1;
     }
-    held_t = held_t.join(ctx.now());
-    let _ = held_t;
-    Ok(held[me].take().expect("own block missing"))
+    Ok(held[vr].take().expect("own block missing"))
 }
 
 // ---------------------------------------------------------------------
 // gZ-Scatter (Fig. 5): multi-stream compress at root, pack, forward
 // compressed, decompress own block only.
 // ---------------------------------------------------------------------
-fn scatter_gz(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<DeviceBuf> {
+fn scatter_gz(
+    ctx: &mut RankCtx,
+    input: DeviceBuf,
+    chunks: Chunks,
+    root: usize,
+) -> Result<DeviceBuf> {
     let n = ctx.nranks();
     let me = ctx.rank();
-    let (mask, parent) = tree_position(me, n);
+    let vr = (me + n - root) % n;
+    let actual = |v: usize| (v + root) % n;
+    let (mask, vparent) = tree_position(vr, n);
     let dstream = StreamId::NonDefault(0);
 
     let mut held: Vec<Option<CompBuf>> = (0..n).map(|_| None).collect();
     let held_t;
 
-    if me == 0 {
-        // Multi-stream compression of all blocks (one batch).
-        let blocks: Vec<DeviceBuf> = (0..n).map(|i| input.slice(chunks.range(i))).collect();
+    if vr == 0 {
+        // Multi-stream compression of all blocks (one batch), packed in
+        // virtual order.
+        let blocks: Vec<DeviceBuf> = (0..n)
+            .map(|v| input.slice(chunks.range(actual(v))))
+            .collect();
         let now = ctx.now();
         let (comp, t_c) = ctx.compress_multistream(&blocks, now);
         // Host-synchronize to learn the compressed sizes/offsets.
@@ -148,18 +187,18 @@ fn scatter_gz(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<Dev
         let sizes: Vec<u64> = comp.iter().map(|c| c.bytes() as u64).collect();
         // Pack the per-stream outputs contiguously (async memcpys).
         let (_total, t_pack) = ctx.pack_d2d(&comp, t_c);
-        for (i, c) in comp.into_iter().enumerate() {
-            held[i] = Some(c);
+        for (v, c) in comp.into_iter().enumerate() {
+            held[v] = Some(c);
         }
         held_t = t_pack;
         // Kick off metadata sends to direct children.
         let mut m = mask >> 1;
         while m > 0 {
-            let dst = m; // root's children are at relative ranks m
-            if dst < n {
+            let dst_v = m; // the root's children sit at virtual ranks m
+            if dst_v < n {
                 ctx.send(
-                    dst,
-                    TAG_SC_META + dst as u64,
+                    actual(dst_v),
+                    TAG_SC_META + dst_v as u64,
                     Payload::Meta(sizes.clone()),
                     ctx.now(),
                 );
@@ -168,22 +207,22 @@ fn scatter_gz(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<Dev
         }
     } else {
         // Sizes first (needed to address the packed batch), then data.
-        let (_sizes, _tm) = ctx.recv_meta(parent.unwrap(), TAG_SC_META + me as u64);
-        let (batch, t) = ctx.recv_batch(parent.unwrap(), TAG_SC + me as u64);
-        let range = subtree(me, mask, n);
-        for (slot, i) in range.clone().enumerate() {
-            held[i] = Some(batch[slot].clone());
+        let parent = actual(vparent.unwrap());
+        let (sizes, _tm) = ctx.recv_meta(parent, TAG_SC_META + vr as u64);
+        let (batch, t) = ctx.recv_batch(parent, TAG_SC + vr as u64);
+        let range = subtree(vr, mask, n);
+        for (slot, v) in range.enumerate() {
+            held[v] = Some(batch[slot].clone());
         }
         held_t = t;
         // Forward the size table to children.
-        let sizes = _sizes;
         let mut m = mask >> 1;
         while m > 0 {
-            let dst = me + m;
-            if dst < n {
+            let dst_v = vr + m;
+            if dst_v < n {
                 ctx.send(
-                    dst,
-                    TAG_SC_META + dst as u64,
+                    actual(dst_v),
+                    TAG_SC_META + dst_v as u64,
                     Payload::Meta(sizes.clone()),
                     ctx.now(),
                 );
@@ -195,20 +234,19 @@ fn scatter_gz(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<Dev
     // Send compressed sub-ranges down the tree (forward verbatim).
     let mut m = mask >> 1;
     while m > 0 {
-        let dst = me + m;
-        if dst < n {
-            let range = subtree(dst, m, n);
+        let dst_v = vr + m;
+        if dst_v < n {
+            let range = subtree(dst_v, m, n);
             let parts: Vec<CompBuf> = range
-                .clone()
-                .map(|i| held[i].take().expect("missing compressed block"))
+                .map(|v| held[v].take().expect("missing compressed block"))
                 .collect();
-            ctx.send(dst, TAG_SC + dst as u64, Payload::Batch(parts), held_t);
+            ctx.send(actual(dst_v), TAG_SC + dst_v as u64, Payload::Batch(parts), held_t);
         }
         m >>= 1;
     }
 
     // Decompress only our own block, on the non-default stream.
-    let mine = held[me].take().expect("own compressed block missing");
+    let mine = held[vr].take().expect("own compressed block missing");
     let (out, _t) = ctx.decompress(dstream, &mine, held_t);
     ctx.sync_device();
     Ok(out)
@@ -218,48 +256,58 @@ fn scatter_gz(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<Dev
 // CPRP2P: fixed-rate compression bolted onto every hop — decompress the
 // whole received range, re-compress every forwarded range.
 // ---------------------------------------------------------------------
-fn scatter_cprp2p(ctx: &mut RankCtx, input: DeviceBuf, chunks: Chunks) -> Result<DeviceBuf> {
+fn scatter_cprp2p(
+    ctx: &mut RankCtx,
+    input: DeviceBuf,
+    chunks: Chunks,
+    root: usize,
+) -> Result<DeviceBuf> {
     let n = ctx.nranks();
     let me = ctx.rank();
-    let (mask, parent) = tree_position(me, n);
+    let vr = (me + n - root) % n;
+    let actual = |v: usize| (v + root) % n;
+    let (mask, vparent) = tree_position(vr, n);
     let stream = StreamId::Default;
 
     let mut held: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
     let mut held_t = ctx.now();
 
-    if me == 0 {
-        for i in 0..n {
-            held[i] = Some(input.slice(chunks.range(i)));
+    if vr == 0 {
+        for v in 0..n {
+            held[v] = Some(input.slice(chunks.range(actual(v))));
         }
     } else {
-        let (cin, t_in) = ctx.recv_comp(parent.unwrap(), TAG_SC + me as u64);
+        let parent = actual(vparent.unwrap());
+        let (cin, t_in) = ctx.recv_comp(parent, TAG_SC + vr as u64);
         // Decompress the whole range before anything can be forwarded.
         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
-        let range = subtree(me, mask, n);
-        let layout = Chunks::new(dec.elems(), range.len());
-        for (slot, i) in range.clone().enumerate() {
-            held[i] = Some(dec.slice(layout.range(slot)));
+        let range = subtree(vr, mask, n);
+        // Actual chunk sizes, in virtual order — see scatter_raw.
+        let mut off = 0;
+        for v in range {
+            let len = chunks.len(actual(v));
+            held[v] = Some(dec.slice(off..off + len));
+            off += len;
         }
         held_t = t_dec;
     }
 
     let mut m = mask >> 1;
     while m > 0 {
-        let dst = me + m;
-        if dst < n {
-            let range = subtree(dst, m, n);
+        let dst_v = vr + m;
+        if dst_v < n {
+            let range = subtree(dst_v, m, n);
             let parts: Vec<DeviceBuf> = range
-                .clone()
-                .map(|i| held[i].take().expect("missing block"))
+                .map(|v| held[v].take().expect("missing block"))
                 .collect();
-            let batch = DeviceBuf::concat(&parts);
+            let batch = DeviceBuf::concat(&parts)?;
             // Re-compress this hop's payload (the CPRP2P tax).
             let (c, t_c) = ctx.compress(stream, &batch, held_t);
-            ctx.send(dst, TAG_SC + dst as u64, Payload::Comp(c), t_c);
+            ctx.send(actual(dst_v), TAG_SC + dst_v as u64, Payload::Comp(c), t_c);
         }
         m >>= 1;
     }
-    Ok(held[me].take().expect("own block missing"))
+    Ok(held[vr].take().expect("own block missing"))
 }
 
 #[cfg(test)]
@@ -268,37 +316,74 @@ mod tests {
     use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
     use crate::testkit::Pcg32;
 
-    fn scatter_inputs(n: usize, d: usize) -> (Vec<DeviceBuf>, Vec<f32>) {
+    fn scatter_inputs(n: usize, d: usize, root: usize) -> (Vec<DeviceBuf>, Vec<f32>) {
         let mut rng = Pcg32::seeded(31);
         let full = rng.uniform_vec(d, -1.0, 1.0);
-        let mut inputs = vec![DeviceBuf::Real(full.clone())];
-        for _ in 1..n {
-            inputs.push(DeviceBuf::Real(vec![]));
-        }
+        let inputs = (0..n)
+            .map(|r| {
+                if r == root {
+                    DeviceBuf::Real(full.clone())
+                } else {
+                    DeviceBuf::Real(vec![])
+                }
+            })
+            .collect();
         (inputs, full)
     }
 
-    fn check_scatter(n: usize, d: usize, policy: ExecPolicy, tol: f32) {
-        let (inputs, full) = scatter_inputs(n, d);
+    fn check_scatter_rooted(n: usize, d: usize, policy: ExecPolicy, tol: f32, root: usize) {
+        let (inputs, full) = scatter_inputs(n, d, root);
         let report = run_collective(&ClusterSpec::new(n, policy), inputs, &move |ctx, input| {
-            scatter_binomial(ctx, input, d)
+            scatter_binomial(ctx, input, d, root)
         })
         .unwrap();
         let chunks = Chunks::new(d, n);
         for r in 0..n {
             let got = report.outputs[r].as_real();
             let want = &full[chunks.range(r)];
-            assert_eq!(got.len(), want.len(), "rank {r} block size");
+            assert_eq!(got.len(), want.len(), "root {root} rank {r} block size");
             for (i, (a, b)) in got.iter().zip(want).enumerate() {
-                assert!((a - b).abs() <= tol, "rank {r} elem {i}: {a} vs {b}");
+                assert!(
+                    (a - b).abs() <= tol,
+                    "root {root} rank {r} elem {i}: {a} vs {b}"
+                );
             }
         }
+    }
+
+    fn check_scatter(n: usize, d: usize, policy: ExecPolicy, tol: f32) {
+        check_scatter_rooted(n, d, policy, tol, 0);
     }
 
     #[test]
     fn raw_scatter_exact_various_n() {
         for n in [2usize, 3, 4, 7, 8, 16] {
             check_scatter(n, 256, ExecPolicy::nccl(), 0.0);
+        }
+    }
+
+    #[test]
+    fn raw_scatter_exact_every_root() {
+        // Every root of a non-power-of-two communicator with N ∤ D:
+        // rotated block ranges wrap the layout and sizes differ by one.
+        for n in [5usize, 8] {
+            for root in 0..n {
+                check_scatter_rooted(n, 253, ExecPolicy::nccl(), 0.0, root);
+            }
+        }
+    }
+
+    #[test]
+    fn gz_scatter_exact_every_root() {
+        for root in [0usize, 1, 4, 6] {
+            check_scatter_rooted(7, 311, ExecPolicy::gzccl(), 1.1e-4, root);
+        }
+    }
+
+    #[test]
+    fn cprp2p_scatter_every_root() {
+        for root in [0usize, 3, 7] {
+            check_scatter_rooted(8, 256, ExecPolicy::cprp2p(), 0.1, root);
         }
     }
 
@@ -324,28 +409,41 @@ mod tests {
     }
 
     #[test]
-    fn gz_scatter_compress_counts() {
+    fn gz_scatter_compress_counts_any_root() {
         let n = 8;
         let d = 1 << 16;
-        let mut inputs = vec![DeviceBuf::Virtual(d)];
-        for _ in 1..n {
-            inputs.push(DeviceBuf::Virtual(0));
-        }
-        let report = run_collective(
-            &ClusterSpec::new(n, ExecPolicy::gzccl()),
-            inputs,
-            &move |ctx, input| scatter_binomial(ctx, input, d),
-        )
-        .unwrap();
-        // Root compresses each block exactly once (as one multi-stream
-        // batch of N kernels); everyone decompresses exactly one block.
-        assert_eq!(report.counters[0].compress_calls, n);
-        for (r, c) in report.counters.iter().enumerate() {
-            if r > 0 {
-                assert_eq!(c.compress_calls, 0, "non-root must not compress");
+        for root in [0usize, 5] {
+            let inputs: Vec<DeviceBuf> = (0..n)
+                .map(|r| DeviceBuf::Virtual(if r == root { d } else { 0 }))
+                .collect();
+            let report = run_collective(
+                &ClusterSpec::new(n, ExecPolicy::gzccl()),
+                inputs,
+                &move |ctx, input| scatter_binomial(ctx, input, d, root),
+            )
+            .unwrap();
+            // The root compresses each block exactly once (as one
+            // multi-stream batch of N kernels); everyone decompresses
+            // exactly one block.
+            assert_eq!(report.counters[root].compress_calls, n);
+            for (r, c) in report.counters.iter().enumerate() {
+                if r != root {
+                    assert_eq!(c.compress_calls, 0, "non-root must not compress");
+                }
+                assert_eq!(c.decompress_calls, 1, "rank {r} decompresses own block");
             }
-            assert_eq!(c.decompress_calls, 1, "rank {r} decompresses own block");
         }
+    }
+
+    #[test]
+    fn out_of_range_root_is_error() {
+        let (inputs, _) = scatter_inputs(4, 64, 0);
+        let res = run_collective(
+            &ClusterSpec::new(4, ExecPolicy::nccl()),
+            inputs,
+            &|ctx, input| scatter_binomial(ctx, input, 64, 7),
+        );
+        assert!(res.is_err());
     }
 
     #[test]
@@ -359,7 +457,7 @@ mod tests {
         let report = run_collective(
             &ClusterSpec::new(n, ExecPolicy::cprp2p()),
             inputs,
-            &move |ctx, input| scatter_binomial(ctx, input, d),
+            &move |ctx, input| scatter_binomial(ctx, input, d, 0),
         )
         .unwrap();
         let total_cpr: usize = report.counters.iter().map(|c| c.compress_calls).sum();
@@ -384,13 +482,13 @@ mod tests {
         let gz = run_collective(
             &ClusterSpec::new(n, ExecPolicy::gzccl()),
             mk(n),
-            &move |ctx, input| scatter_binomial(ctx, input, d),
+            &move |ctx, input| scatter_binomial(ctx, input, d, 0),
         )
         .unwrap();
         let cpr = run_collective(
             &ClusterSpec::new(n, ExecPolicy::cprp2p()),
             mk(n),
-            &move |ctx, input| scatter_binomial(ctx, input, d),
+            &move |ctx, input| scatter_binomial(ctx, input, d, 0),
         )
         .unwrap();
         assert!(

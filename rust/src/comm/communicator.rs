@@ -183,26 +183,26 @@ impl Communicator {
         self.dispatch(Op::ReduceScatter, inputs, bytes, 0, spec)
     }
 
-    /// One-to-all Scatter from the root: `inputs[root]` holds the full
-    /// vector (ignored elsewhere); rank r returns block r of the
-    /// `Chunks::new(total, n)` layout.
+    /// One-to-all Scatter from `spec.root` (any rank):
+    /// `inputs[spec.root]` holds the full vector (ignored elsewhere);
+    /// rank r returns block r of the `Chunks::new(total, n)` layout.
     pub fn scatter(
         &self,
         inputs: Vec<DeviceBuf>,
         spec: &CollectiveSpec,
     ) -> Result<CollectiveReport> {
-        let total_elems = inputs.first().map(|b| b.elems()).unwrap_or(0);
+        let total_elems = inputs.get(spec.root).map(|b| b.elems()).unwrap_or(0);
         self.dispatch(Op::Scatter, inputs, total_elems * 4, total_elems, spec)
     }
 
-    /// One-to-all Broadcast from the root: every rank returns the
-    /// root's vector.
+    /// One-to-all Broadcast from `spec.root` (any rank): every rank
+    /// returns the root's vector.
     pub fn bcast(
         &self,
         inputs: Vec<DeviceBuf>,
         spec: &CollectiveSpec,
     ) -> Result<CollectiveReport> {
-        let bytes = inputs.first().map(|b| b.bytes()).unwrap_or(0);
+        let bytes = inputs.get(spec.root).map(|b| b.bytes()).unwrap_or(0);
         self.dispatch(Op::Bcast, inputs, bytes, 0, spec)
     }
 
@@ -214,9 +214,11 @@ impl Communicator {
         total_elems: usize,
         spec: &CollectiveSpec,
     ) -> Result<CollectiveReport> {
-        if matches!(op, Op::Scatter | Op::Bcast) && spec.root != 0 {
+        if spec.root >= self.nranks() {
             return Err(Error::collective(format!(
-                "{op:?}: only root 0 is supported by the binomial-tree implementations"
+                "{op:?}: root {} out of range for a {}-rank communicator",
+                spec.root,
+                self.nranks()
             )));
         }
         let (algo, auto_tuned) = match spec.hint {
@@ -230,11 +232,12 @@ impl Communicator {
                 (algo, false)
             }
             AlgoHint::Auto => (
-                self.tuner.select(op, self.spec.policy, self.nranks(), msg_bytes),
+                self.tuner
+                    .select_with_topology(op, self.spec.policy, &self.spec.topo, msg_bytes),
                 true,
             ),
         };
-        let program = AlgoRegistry::resolve(op, algo, total_elems)?;
+        let program = AlgoRegistry::resolve(op, algo, total_elems, spec.root)?;
         let mut report = run_collective(&self.spec, inputs, &*program)?;
         // Record the dispatch decision in the per-rank counters so
         // tests (and reports) can assert on it.
@@ -311,18 +314,71 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_force_and_root_rejected() {
+    fn unsupported_force_and_bad_root_rejected() {
         let comm = Communicator::builder(4).build().unwrap();
         assert!(comm
             .allreduce(real_inputs(4, 8, 7), &CollectiveSpec::forced(Algo::Bruck))
             .is_err());
-        let mut inputs = real_inputs(1, 8, 8);
-        for _ in 1..4 {
-            inputs.push(DeviceBuf::Real(vec![]));
-        }
+        // Identity is the tuner's internal no-op decision, not forceable.
         assert!(comm
-            .bcast(inputs, &CollectiveSpec::auto().with_root(1))
+            .allreduce(real_inputs(4, 8, 7), &CollectiveSpec::forced(Algo::Identity))
             .is_err());
+        // Roots outside the communicator are rejected...
+        let inputs: Vec<DeviceBuf> = (0..4).map(|_| DeviceBuf::Real(vec![1.0])).collect();
+        assert!(comm
+            .bcast(inputs, &CollectiveSpec::auto().with_root(4))
+            .is_err());
+    }
+
+    #[test]
+    fn bcast_and_scatter_work_from_every_root() {
+        let n = 4;
+        let d = 64;
+        let comm = Communicator::builder(n).build().unwrap();
+        let mut rng = Pcg32::seeded(91);
+        let full = rng.uniform_vec(d, -1.0, 1.0);
+        let chunks = crate::collectives::Chunks::new(d, n);
+        for root in 0..n {
+            let rooted = || -> Vec<DeviceBuf> {
+                (0..n)
+                    .map(|r| {
+                        if r == root {
+                            DeviceBuf::Real(full.clone())
+                        } else {
+                            DeviceBuf::Real(vec![])
+                        }
+                    })
+                    .collect()
+            };
+            let spec = CollectiveSpec::auto().with_root(root);
+            let bc = comm.bcast(rooted(), &spec).unwrap();
+            for (r, out) in bc.outputs.iter().enumerate() {
+                let tol = if r == root { 0.0 } else { 1.1e-4 };
+                for (a, b) in out.as_real().iter().zip(&full) {
+                    assert!((a - b).abs() <= tol, "bcast root {root} rank {r}");
+                }
+            }
+            let sc = comm.scatter(rooted(), &spec).unwrap();
+            for r in 0..n {
+                let want = &full[chunks.range(r)];
+                let got = sc.outputs[r].as_real();
+                assert_eq!(got.len(), want.len(), "scatter root {root} rank {r}");
+                for (a, b) in got.iter().zip(want) {
+                    assert!((a - b).abs() <= 1.1e-4, "scatter root {root} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_communicator_reports_identity() {
+        let comm = Communicator::builder(1).build().unwrap();
+        let out = comm
+            .allreduce(vec![DeviceBuf::Real(vec![1.0, 2.0])], &CollectiveSpec::auto())
+            .unwrap();
+        assert_eq!(out.algo, Algo::Identity);
+        assert_eq!(out.outputs[0].as_real(), &[1.0, 2.0]);
+        assert_eq!(out.counters[0].algo_selected, Some(Algo::Identity));
     }
 
     #[test]

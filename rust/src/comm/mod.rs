@@ -17,10 +17,16 @@
 //!   cluster ([`crate::coordinator::ClusterSpec`]) and exposes
 //!   `allreduce / allgather / reduce_scatter / scatter / bcast`
 //!   methods, each taking a [`CollectiveSpec`] (root + algorithm hint).
+//!   Scatter/Bcast accept any root; the binomial trees rotate the rank
+//!   space around it.
 //! * [`Tuner`] implements the crossover model: given the op, the
-//!   [`crate::coordinator::ExecPolicy`], the rank count and the message
-//!   size, it picks the [`crate::collectives::Algo`]. Callers can
-//!   bypass it with [`AlgoHint::Force`].
+//!   [`crate::coordinator::ExecPolicy`], the message size and the
+//!   [`crate::net::Topology`], it picks the
+//!   [`crate::collectives::Algo`] — a three-way flat-ring /
+//!   hierarchical / gZ-ReDoub decision on compressed multi-node
+//!   layouts, the classic two-way switch elsewhere, and an explicit
+//!   [`crate::collectives::Algo::Identity`] no-op for single-rank
+//!   communicators. Callers can bypass it with [`AlgoHint::Force`].
 //! * [`AlgoRegistry`] maps `(Op, Algo)` to the concrete collective free
 //!   functions in [`crate::collectives`], which remain the registry's
 //!   internals — no call site outside this module and `collectives`

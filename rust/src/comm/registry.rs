@@ -7,9 +7,9 @@
 //! dispatches through [`AlgoRegistry::resolve`].
 
 use crate::collectives::{
-    allgather_bruck, allgather_recursive_doubling, allgather_ring, allreduce_recursive_doubling,
-    allreduce_reduce_bcast, allreduce_ring, bcast_binomial, reduce_scatter_ring, scatter_binomial,
-    Algo, Op,
+    allgather_bruck, allgather_recursive_doubling, allgather_ring, allreduce_hierarchical,
+    allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring, bcast_binomial,
+    reduce_scatter_ring, scatter_binomial, Algo, Op,
 };
 use crate::coordinator::{DeviceBuf, RankCtx, RankProgram};
 use crate::error::{Error, Result};
@@ -19,11 +19,21 @@ pub struct AlgoRegistry;
 
 impl AlgoRegistry {
     /// The algorithms implemented for `op`, in preference order.
+    ///
+    /// [`Algo::Identity`] is deliberately absent: it is the tuner's
+    /// internal decision for single-rank communicators, not an
+    /// algorithm callers may force (forcing it on a real communicator
+    /// would silently skip the collective).
     pub fn supported(op: Op) -> &'static [Algo] {
         match op {
             // `Binomial` realizes the staged reduce+bcast Allreduce
             // (the Cray-MPI-class baseline).
-            Op::Allreduce => &[Algo::Ring, Algo::RecursiveDoubling, Algo::Binomial],
+            Op::Allreduce => &[
+                Algo::Ring,
+                Algo::RecursiveDoubling,
+                Algo::Hierarchical,
+                Algo::Binomial,
+            ],
             Op::Allgather => &[Algo::Ring, Algo::RecursiveDoubling, Algo::Bruck],
             Op::ReduceScatter => &[Algo::Ring],
             Op::Scatter => &[Algo::Binomial],
@@ -37,20 +47,28 @@ impl AlgoRegistry {
     }
 
     /// Resolve `(op, algo)` to a rank program. `total_elems` is the
-    /// full-vector element count for Scatter (ignored elsewhere).
-    pub fn resolve(op: Op, algo: Algo, total_elems: usize) -> Result<Box<RankProgram>> {
+    /// full-vector element count for Scatter (ignored elsewhere);
+    /// `root` is the root rank for the one-to-all collectives.
+    pub fn resolve(op: Op, algo: Algo, total_elems: usize, root: usize) -> Result<Box<RankProgram>> {
         let program: Box<RankProgram> = match (op, algo) {
+            // Single-rank communicators: every collective is a no-op.
+            (_, Algo::Identity) => {
+                Box::new(|_ctx: &mut RankCtx, input: DeviceBuf| Ok(input))
+            }
             (Op::Allreduce, Algo::Ring) => Box::new(allreduce_ring),
             (Op::Allreduce, Algo::RecursiveDoubling) => Box::new(allreduce_recursive_doubling),
+            (Op::Allreduce, Algo::Hierarchical) => Box::new(allreduce_hierarchical),
             (Op::Allreduce, Algo::Binomial) => Box::new(allreduce_reduce_bcast),
             (Op::Allgather, Algo::Ring) => Box::new(allgather_ring),
             (Op::Allgather, Algo::RecursiveDoubling) => Box::new(allgather_recursive_doubling),
             (Op::Allgather, Algo::Bruck) => Box::new(allgather_bruck),
             (Op::ReduceScatter, Algo::Ring) => Box::new(reduce_scatter_ring),
             (Op::Scatter, Algo::Binomial) => Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-                scatter_binomial(ctx, input, total_elems)
+                scatter_binomial(ctx, input, total_elems, root)
             }),
-            (Op::Bcast, Algo::Binomial) => Box::new(bcast_binomial),
+            (Op::Bcast, Algo::Binomial) => Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
+                bcast_binomial(ctx, input, root)
+            }),
             (op, algo) => {
                 return Err(Error::collective(format!(
                     "no {algo:?} implementation for {op:?} (supported: {:?})",
@@ -66,26 +84,44 @@ impl AlgoRegistry {
 mod tests {
     use super::*;
 
+    const ALL_OPS: [Op; 5] = [
+        Op::Allreduce,
+        Op::Allgather,
+        Op::ReduceScatter,
+        Op::Scatter,
+        Op::Bcast,
+    ];
+
     #[test]
     fn every_supported_pair_resolves() {
-        for op in [
-            Op::Allreduce,
-            Op::Allgather,
-            Op::ReduceScatter,
-            Op::Scatter,
-            Op::Bcast,
-        ] {
+        for op in ALL_OPS {
             for &algo in AlgoRegistry::supported(op) {
                 assert!(AlgoRegistry::is_supported(op, algo));
-                assert!(AlgoRegistry::resolve(op, algo, 128).is_ok(), "{op:?}/{algo:?}");
+                assert!(
+                    AlgoRegistry::resolve(op, algo, 128, 0).is_ok(),
+                    "{op:?}/{algo:?}"
+                );
             }
+        }
+    }
+
+    #[test]
+    fn identity_resolves_everywhere_but_cannot_be_forced() {
+        for op in ALL_OPS {
+            assert!(AlgoRegistry::resolve(op, Algo::Identity, 128, 0).is_ok(), "{op:?}");
+            assert!(
+                !AlgoRegistry::is_supported(op, Algo::Identity),
+                "{op:?} must not advertise Identity"
+            );
         }
     }
 
     #[test]
     fn unsupported_pairs_rejected() {
         assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Ring));
-        assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Ring, 128).is_err());
-        assert!(AlgoRegistry::resolve(Op::ReduceScatter, Algo::Bruck, 0).is_err());
+        assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Ring, 128, 0).is_err());
+        assert!(AlgoRegistry::resolve(Op::ReduceScatter, Algo::Bruck, 0, 0).is_err());
+        assert!(!AlgoRegistry::is_supported(Op::Allgather, Algo::Hierarchical));
+        assert!(AlgoRegistry::resolve(Op::Allgather, Algo::Hierarchical, 0, 0).is_err());
     }
 }

@@ -1,19 +1,41 @@
 //! Policy-aware algorithm selection.
 //!
-//! The [`Tuner`] encodes the paper's §3.3.3 crossover model. Two knobs,
-//! both calibrated against the shapes of Figs. 9–12:
+//! The [`Tuner`] encodes the paper's §3.3.3 crossover model, extended
+//! with a topology axis. Two knobs, both calibrated against the shapes
+//! of Figs. 9–12:
 //!
 //! * **Compressed collectives** (`CompressionMode::{ErrorBounded,
 //!   FixedRate}`): the ring Allreduce issues `2(N−1)` compression
 //!   kernels over `D/N` chunks; once the chunk falls below the GPU
 //!   utilization knee those kernels stagnate at their fixed-work floor
-//!   (Fig. 3) and gZ-ReDoub's `⌈log₂N⌉` whole-vector kernels win. Ring
-//!   is selected when `D/N ≥ chunk_knee_bytes`, i.e. the crossover
+//!   (Fig. 3) and the whole-vector log-step schedules win. Ring is
+//!   selected when `D/N ≥ chunk_knee_bytes`, i.e. the crossover
 //!   message size grows **linearly with the rank count**.
 //! * **Uncompressed baselines** (`CompressionMode::None`): the classic
 //!   MPI latency-vs-bandwidth switch. Ring costs `2(N−1)` message
 //!   latencies, recursive doubling `⌈log₂N⌉`; ring is selected when
 //!   `D ≥ latency_knee_bytes · ⌈log₂N⌉`.
+//!
+//! **Topology-aware three-way model**
+//! ([`Tuner::select_with_topology`]): on a multi-node cluster with
+//! multi-GPU nodes (`nodes ≥ 2`, `gpus_per_node ≥ 2`) under a
+//! compressed policy, the selection is flat ring / hierarchical rather
+//! than flat ring / flat ReDoub. Below the ring crossover, the
+//! two-level schedule dominates flat gZ-ReDoub outright: its internode
+//! leg runs `⌈log₂ nodes⌉` whole-vector compressed exchanges (per-leg
+//! payload `D`, always above the utilization knee) instead of
+//! `⌈log₂ ranks⌉`, and its intranode legs are raw NVLink traffic with
+//! no kernel cost at all. Above the crossover the flat ring keeps the
+//! win: its `D/N` chunk kernels are saturated anyway and its wire
+//! volume (`≈2D` per NIC) beats the hierarchical leg's
+//! `⌈log₂ nodes⌉·D`. Uncompressed policies keep the two-way
+//! latency/bandwidth switch — without kernel floors to amortize, the
+//! hierarchical leader funnel saves too little to beat the flat
+//! schedules in the bandwidth-bound regime.
+//!
+//! Degenerate single-rank communicators short-circuit to
+//! [`Algo::Identity`] — an explicit no-op decision — so `OpCounters`
+//! records are not polluted with a phantom ring dispatch.
 //!
 //! Scatter and Bcast have a single binomial-tree algorithm; Allgather
 //! under compression is always the ring (the gZCCL one-compression
@@ -22,11 +44,13 @@
 
 use crate::collectives::{Algo, Op};
 use crate::coordinator::{CompressionMode, ExecPolicy};
+use crate::net::Topology;
 
 /// How a [`super::Communicator`] should choose the algorithm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AlgoHint {
-    /// Let the [`Tuner`] decide from op, policy, size and scale.
+    /// Let the [`Tuner`] decide from op, policy, size, scale and
+    /// topology.
     Auto,
     /// Bypass the tuner and run exactly this algorithm.
     Force(Algo),
@@ -36,8 +60,8 @@ pub enum AlgoHint {
 /// the algorithm hint.
 #[derive(Debug, Clone, Copy)]
 pub struct CollectiveSpec {
-    /// Root rank for one-to-all collectives (must currently be 0, the
-    /// only root the binomial-tree implementations support).
+    /// Root rank for one-to-all collectives — any rank in `0..nranks`
+    /// (the binomial trees rotate the rank space around it).
     pub root: usize,
     /// Algorithm selection hint.
     pub hint: AlgoHint,
@@ -78,7 +102,7 @@ impl Default for CollectiveSpec {
     }
 }
 
-/// The size/scale/policy crossover model (see module docs).
+/// The size/scale/policy/topology crossover model (see module docs).
 #[derive(Debug, Clone, Copy)]
 pub struct Tuner {
     /// Minimum ring chunk (`D/N`) under compression for the ring to
@@ -113,7 +137,9 @@ impl Tuner {
 
     /// Total Allreduce message size (bytes) at and above which the ring
     /// is selected for `(policy, nranks)`. Grows linearly with `nranks`
-    /// under compression, logarithmically without.
+    /// under compression, logarithmically without. (For `nranks ≤ 1`
+    /// the crossover is vacuous — [`Tuner::select`] short-circuits to
+    /// [`Algo::Identity`] before consulting it.)
     pub fn allreduce_crossover_bytes(&self, policy: ExecPolicy, nranks: usize) -> usize {
         if nranks <= 1 {
             return 0;
@@ -126,8 +152,15 @@ impl Tuner {
     }
 
     /// Pick the algorithm for `op` over a `msg_bytes` payload on
-    /// `nranks` ranks under `policy`.
+    /// `nranks` ranks under `policy`, **topology-oblivious** (flat
+    /// schedules only). Prefer [`Tuner::select_with_topology`], which
+    /// adds the hierarchical candidate when the layout supports it.
     pub fn select(&self, op: Op, policy: ExecPolicy, nranks: usize, msg_bytes: usize) -> Algo {
+        if nranks <= 1 {
+            // Explicit no-op decision: every collective on a one-rank
+            // communicator is the identity.
+            return Algo::Identity;
+        }
         match op {
             Op::Allreduce => {
                 if msg_bytes >= self.allreduce_crossover_bytes(policy, nranks) {
@@ -152,6 +185,39 @@ impl Tuner {
             Op::Scatter | Op::Bcast => Algo::Binomial,
         }
     }
+
+    /// Topology-aware selection: the three-way flat-ring /
+    /// hierarchical / gZ-ReDoub model for Allreduce (see module docs),
+    /// falling back to [`Tuner::select`] for every other op and for
+    /// layouts with a single node or single-GPU nodes.
+    pub fn select_with_topology(
+        &self,
+        op: Op,
+        policy: ExecPolicy,
+        topo: &Topology,
+        msg_bytes: usize,
+    ) -> Algo {
+        let n = topo.ranks();
+        if n <= 1 {
+            return Algo::Identity;
+        }
+        if op == Op::Allreduce
+            && policy.compression != CompressionMode::None
+            && topo.nodes() >= 2
+            && topo.gpus_per_node() >= 2
+        {
+            // Three-way model, compressed multi-node multi-GPU layout:
+            // ring above its chunk knee (saturated kernels, minimal
+            // wire volume); hierarchical below it (⌈log₂ nodes⌉
+            // whole-vector kernel stages, NVLink-only intranode hops).
+            return if msg_bytes / n >= self.chunk_knee_bytes {
+                Algo::Ring
+            } else {
+                Algo::Hierarchical
+            };
+        }
+        self.select(op, policy, n, msg_bytes)
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +225,10 @@ mod tests {
     use super::*;
 
     const MIB: usize = 1 << 20;
+
+    fn topo(ranks: usize, g: usize) -> Topology {
+        Topology::new(ranks, g).unwrap()
+    }
 
     #[test]
     fn crossover_moves_with_message_size() {
@@ -208,6 +278,55 @@ mod tests {
     }
 
     #[test]
+    fn topology_enables_hierarchical_below_ring_crossover() {
+        let t = Tuner::default();
+        let p = ExecPolicy::gzccl();
+        // 128 ranks / 4 per node: 64 MiB rings would run 512 KiB chunk
+        // kernels (below the knee) → hierarchical.
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, p, &topo(128, 4), 64 * MIB),
+            Algo::Hierarchical
+        );
+        // 256 MiB: 2 MiB ring chunks are saturated → flat ring.
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, p, &topo(128, 4), 256 * MIB),
+            Algo::Ring
+        );
+        // Small messages on multi-node layouts also go hierarchical:
+        // fewer kernel floors AND fewer internode latencies.
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, p, &topo(128, 4), MIB),
+            Algo::Hierarchical
+        );
+    }
+
+    #[test]
+    fn degenerate_layouts_fall_back_to_flat_model() {
+        let t = Tuner::default();
+        let p = ExecPolicy::gzccl();
+        // Single node: no internode leg to save on.
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, p, &topo(4, 4), MIB),
+            Algo::RecursiveDoubling
+        );
+        // One GPU per node: hierarchical degenerates to flat ReDoub.
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, p, &topo(32, 1), MIB),
+            Algo::RecursiveDoubling
+        );
+        // Uncompressed policies keep the two-way switch.
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, ExecPolicy::nccl(), &topo(128, 4), 64 * MIB),
+            Algo::Ring
+        );
+        // Non-Allreduce ops are unaffected by topology.
+        assert_eq!(
+            t.select_with_topology(Op::Allgather, p, &topo(128, 4), 64 * MIB),
+            Algo::Ring
+        );
+    }
+
+    #[test]
     fn allgather_compressed_always_ring() {
         let t = Tuner::default();
         for bytes in [1usize << 10, MIB, 600 * MIB] {
@@ -233,8 +352,18 @@ mod tests {
     }
 
     #[test]
-    fn single_rank_degenerates_to_ring() {
+    fn single_rank_short_circuits_to_identity() {
+        // Regression: `nranks <= 1` used to report `Algo::Ring` (the
+        // crossover degenerates to 0), polluting OpCounters decision
+        // records for degenerate communicators.
         let t = Tuner::default();
-        assert_eq!(t.select(Op::Allreduce, ExecPolicy::gzccl(), 1, 0), Algo::Ring);
+        for op in [Op::Allreduce, Op::Allgather, Op::ReduceScatter, Op::Scatter, Op::Bcast] {
+            assert_eq!(t.select(op, ExecPolicy::gzccl(), 1, 0), Algo::Identity);
+            assert_eq!(t.select(op, ExecPolicy::nccl(), 0, MIB), Algo::Identity);
+        }
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, ExecPolicy::gzccl(), &topo(1, 4), MIB),
+            Algo::Identity
+        );
     }
 }

@@ -9,7 +9,12 @@
 //!   need hundreds of GB. Compressed sizes then come from a measured
 //!   [`crate::compress::CompressionProfile`].
 //!
-//! Mixing modes in one collective is a bug and panics loudly.
+//! Mixing modes in one collective is a configuration bug; the mixing
+//! operations ([`DeviceBuf::add`], [`DeviceBuf::concat`]) return a
+//! typed [`Error`] so a misconfigured experiment fails with a report
+//! instead of aborting a rank thread.
+
+use crate::error::{Error, Result};
 
 /// A buffer resident on the (simulated) GPU.
 #[derive(Debug, Clone, PartialEq)]
@@ -58,32 +63,53 @@ impl DeviceBuf {
         }
     }
 
-    /// Concatenate `parts` (all in the same mode).
-    pub fn concat(parts: &[DeviceBuf]) -> DeviceBuf {
-        assert!(!parts.is_empty());
+    /// Concatenate `parts` (all in the same mode). Mixing real and
+    /// virtual buffers is a misconfiguration and yields a typed error.
+    pub fn concat(parts: &[DeviceBuf]) -> Result<DeviceBuf> {
+        if parts.is_empty() {
+            return Err(Error::collective("concat of zero device buffers"));
+        }
         if parts[0].is_virtual() {
-            DeviceBuf::Virtual(parts.iter().map(|p| p.elems()).sum())
+            if parts.iter().any(|p| !p.is_virtual()) {
+                return Err(Error::collective(
+                    "mixed real/virtual concat: virtual lead buffer with real parts",
+                ));
+            }
+            Ok(DeviceBuf::Virtual(parts.iter().map(|p| p.elems()).sum()))
         } else {
             let mut out = Vec::with_capacity(parts.iter().map(|p| p.elems()).sum());
             for p in parts {
                 match p {
                     DeviceBuf::Real(v) => out.extend_from_slice(v),
-                    DeviceBuf::Virtual(_) => panic!("mixed real/virtual concat"),
+                    DeviceBuf::Virtual(_) => {
+                        return Err(Error::collective(
+                            "mixed real/virtual concat: real lead buffer with virtual parts",
+                        ))
+                    }
                 }
             }
-            DeviceBuf::Real(out)
+            Ok(DeviceBuf::Real(out))
         }
     }
 
     /// Elementwise sum: `self + other` (the Allreduce reduction op).
-    pub fn add(&self, other: &DeviceBuf) -> DeviceBuf {
-        assert_eq!(self.elems(), other.elems(), "reduce length mismatch");
+    /// Mixed-mode or mismatched-length operands yield a typed error.
+    pub fn add(&self, other: &DeviceBuf) -> Result<DeviceBuf> {
+        if self.elems() != other.elems() {
+            return Err(Error::collective(format!(
+                "reduce length mismatch: {} vs {} elems",
+                self.elems(),
+                other.elems()
+            )));
+        }
         match (self, other) {
-            (DeviceBuf::Real(a), DeviceBuf::Real(b)) => {
-                DeviceBuf::Real(a.iter().zip(b.iter()).map(|(x, y)| x + y).collect())
-            }
-            (DeviceBuf::Virtual(n), DeviceBuf::Virtual(_)) => DeviceBuf::Virtual(*n),
-            _ => panic!("mixed real/virtual reduce"),
+            (DeviceBuf::Real(a), DeviceBuf::Real(b)) => Ok(DeviceBuf::Real(
+                a.iter().zip(b.iter()).map(|(x, y)| x + y).collect(),
+            )),
+            (DeviceBuf::Virtual(n), DeviceBuf::Virtual(_)) => Ok(DeviceBuf::Virtual(*n)),
+            _ => Err(Error::collective(
+                "mixed real/virtual reduce: one operand is a size-only buffer",
+            )),
         }
     }
 
@@ -143,7 +169,7 @@ mod tests {
         assert_eq!(b.elems(), 4);
         assert_eq!(b.bytes(), 16);
         assert_eq!(b.slice(1..3), DeviceBuf::Real(vec![2.0, 3.0]));
-        let sum = b.add(&DeviceBuf::Real(vec![10.0, 10.0, 10.0, 10.0]));
+        let sum = b.add(&DeviceBuf::Real(vec![10.0, 10.0, 10.0, 10.0])).unwrap();
         assert_eq!(sum.as_real(), &[11.0, 12.0, 13.0, 14.0]);
     }
 
@@ -152,7 +178,7 @@ mod tests {
         let b = DeviceBuf::Virtual(100);
         assert_eq!(b.elems(), 100);
         assert_eq!(b.slice(10..30).elems(), 20);
-        assert_eq!(b.add(&DeviceBuf::Virtual(100)).elems(), 100);
+        assert_eq!(b.add(&DeviceBuf::Virtual(100)).unwrap().elems(), 100);
         assert!(b.zeros_like(5).is_virtual());
     }
 
@@ -161,22 +187,38 @@ mod tests {
         let r = DeviceBuf::concat(&[
             DeviceBuf::Real(vec![1.0]),
             DeviceBuf::Real(vec![2.0, 3.0]),
-        ]);
+        ])
+        .unwrap();
         assert_eq!(r.as_real(), &[1.0, 2.0, 3.0]);
-        let v = DeviceBuf::concat(&[DeviceBuf::Virtual(3), DeviceBuf::Virtual(4)]);
+        let v = DeviceBuf::concat(&[DeviceBuf::Virtual(3), DeviceBuf::Virtual(4)]).unwrap();
         assert_eq!(v.elems(), 7);
     }
 
     #[test]
-    #[should_panic(expected = "mixed real/virtual")]
-    fn mixed_mode_reduce_panics() {
-        DeviceBuf::Real(vec![1.0]).add(&DeviceBuf::Virtual(1));
+    fn mixed_mode_reduce_is_typed_error() {
+        let err = DeviceBuf::Real(vec![1.0]).add(&DeviceBuf::Virtual(1)).unwrap_err();
+        assert!(matches!(err, Error::Collective(_)), "{err}");
+        assert!(err.to_string().contains("mixed real/virtual"));
     }
 
     #[test]
-    #[should_panic(expected = "length mismatch")]
-    fn length_mismatch_panics() {
-        DeviceBuf::Real(vec![1.0]).add(&DeviceBuf::Real(vec![1.0, 2.0]));
+    fn length_mismatch_is_typed_error() {
+        let err = DeviceBuf::Real(vec![1.0])
+            .add(&DeviceBuf::Real(vec![1.0, 2.0]))
+            .unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn mixed_mode_concat_is_typed_error() {
+        for parts in [
+            vec![DeviceBuf::Real(vec![1.0]), DeviceBuf::Virtual(1)],
+            vec![DeviceBuf::Virtual(1), DeviceBuf::Real(vec![1.0])],
+        ] {
+            let err = DeviceBuf::concat(&parts).unwrap_err();
+            assert!(matches!(err, Error::Collective(_)), "{err}");
+        }
+        assert!(DeviceBuf::concat(&[]).is_err());
     }
 
     #[test]

@@ -12,8 +12,9 @@ use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::compress::{CompressionProfile, Compressor};
+use crate::error::Result;
 use crate::gpu::{GpuDevice, StreamId};
-use crate::net::Fabric;
+use crate::net::{Fabric, Topology};
 use crate::sim::{Breakdown, Phase, RankClock, VirtTime};
 
 use super::buffer::{CompBuf, DeviceBuf};
@@ -219,6 +220,13 @@ impl RankCtx {
         self.policy
     }
 
+    /// The physical rank↔node layout this rank runs on. Topology-aware
+    /// collectives (e.g. the two-level hierarchical Allreduce) use it
+    /// to keep intranode hops on NVLink and elect node leaders.
+    pub fn topology(&self) -> &Topology {
+        self.fabric.topology()
+    }
+
     /// Current host virtual time.
     pub fn now(&self) -> VirtTime {
         self.clock.now()
@@ -402,24 +410,26 @@ impl RankCtx {
     }
 
     /// Elementwise-sum reduction of `a + b`. Uses the GPU kernel or the
-    /// host loop depending on policy (§3.3.1).
+    /// host loop depending on policy (§3.3.1). Mixed real/virtual or
+    /// mismatched-length operands surface as a typed error (a
+    /// misconfigured experiment) rather than a rank-thread panic.
     pub fn reduce(
         &mut self,
         s: StreamId,
         a: &DeviceBuf,
         b: &DeviceBuf,
         ready: VirtTime,
-    ) -> (DeviceBuf, VirtTime) {
+    ) -> Result<(DeviceBuf, VirtTime)> {
         let m = *self.gpu.model();
         self.counters.reduce_calls += 1;
-        let out = a.add(b);
+        let out = a.add(b)?;
         if self.policy.gpu_reduce {
             let issue = self.issue_cost(s);
             let dur = m.reduce.time(out.bytes());
             let end = self.gpu.enqueue(s, ready.join(issue), dur);
             self.clock.charge_only(Phase::Redu, dur);
             self.maybe_sync(end);
-            (out, end)
+            Ok((out, end))
         } else {
             // Host reduction (§3.3.1's motivation): stage the device-
             // resident operand down over PCIe, reduce on the host, and
@@ -436,7 +446,7 @@ impl RankCtx {
             self.clock.charge_only(Phase::DataMove, back.since(self.clock.now()));
             self.counters.pcie_bytes += bytes;
             self.clock.wait_until(back);
-            (out, back)
+            Ok((out, back))
         }
     }
 
@@ -643,7 +653,7 @@ mod tests {
         let a = DeviceBuf::Virtual(10 << 20);
         let b = DeviceBuf::Virtual(10 << 20);
         let t0 = ctx.now();
-        let (_, end) = ctx.reduce(StreamId::Default, &a, &b, t0);
+        let (_, end) = ctx.reduce(StreamId::Default, &a, &b, t0).unwrap();
         // Host-blocking: the clock advanced to the end.
         assert_eq!(ctx.now(), end);
         assert!(ctx.breakdown().redu > 0.0);
@@ -673,6 +683,21 @@ mod tests {
             "multi {t_multi} vs seq {t_seq}"
         );
         assert_eq!(multi.counters().compress_calls, 8);
+    }
+
+    #[test]
+    fn mixed_mode_reduce_is_error_not_panic() {
+        let mut ctx = mk_ctx(ExecPolicy::gzccl());
+        let a = DeviceBuf::Real(vec![1.0]);
+        let b = DeviceBuf::Virtual(1);
+        assert!(ctx.reduce(StreamId::Default, &a, &b, VirtTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn topology_is_exposed() {
+        let ctx = mk_ctx(ExecPolicy::gzccl());
+        assert_eq!(ctx.topology().ranks(), 2);
+        assert_eq!(ctx.topology().gpus_per_node(), 2);
     }
 
     #[test]

@@ -14,6 +14,25 @@ use crate::sim::Breakdown;
 
 use super::{rtm_profile, virtual_inputs, Dataset, FULL_DATASET_BYTES, GPU_COUNTS, MSG_SIZES_MB};
 
+fn run_ar_topo(
+    ranks: usize,
+    gpus_per_node: usize,
+    bytes: usize,
+    policy: ExecPolicy,
+    eb: f64,
+    algo: Algo,
+) -> Result<(f64, Breakdown)> {
+    let comm = Communicator::builder(ranks)
+        .gpus_per_node(gpus_per_node)
+        .policy(policy)
+        .error_bound(eb)
+        .compression_profile(rtm_profile(Dataset::Rtm2, eb))
+        .build()?;
+    let report = comm.allreduce(virtual_inputs(ranks, bytes), &CollectiveSpec::forced(algo))?;
+    Ok((report.makespan.as_secs(), report.total_breakdown()))
+}
+
+/// [`run_ar_topo`] on the paper-testbed layout (4 GPUs per node).
 fn run_ar(
     ranks: usize,
     bytes: usize,
@@ -21,13 +40,7 @@ fn run_ar(
     eb: f64,
     algo: Algo,
 ) -> Result<(f64, Breakdown)> {
-    let comm = Communicator::builder(ranks)
-        .policy(policy)
-        .error_bound(eb)
-        .compression_profile(rtm_profile(Dataset::Rtm2, eb))
-        .build()?;
-    let report = comm.allreduce(virtual_inputs(ranks, bytes), &CollectiveSpec::forced(algo))?;
-    Ok((report.makespan.as_secs(), report.total_breakdown()))
+    run_ar_topo(ranks, 4, bytes, policy, eb, algo)
 }
 
 /// **Fig. 2** — phase breakdown of the ring Allreduce under CPRP2P and
@@ -121,58 +134,78 @@ pub fn fig07_allreduce_opt(ranks: usize) -> Result<Table> {
     Ok(t)
 }
 
-fn four_way(ranks: usize, bytes: usize) -> Result<(f64, f64, f64, f64)> {
+fn five_way(
+    ranks: usize,
+    gpus_per_node: usize,
+    bytes: usize,
+) -> Result<(f64, f64, f64, f64, f64)> {
     // Binomial = the staged reduce+bcast Allreduce (Cray MPI baseline).
-    let (cray, _) = run_ar(ranks, bytes, ExecPolicy::cray_mpi(), 1e-4, Algo::Binomial)?;
-    let (nccl, _) = run_ar(ranks, bytes, ExecPolicy::nccl(), 1e-4, Algo::Ring)?;
-    let (ring, _) = run_ar(ranks, bytes, ExecPolicy::gzccl(), 1e-4, Algo::Ring)?;
-    let (redoub, _) = run_ar(
+    let (cray, _) = run_ar_topo(ranks, gpus_per_node, bytes, ExecPolicy::cray_mpi(), 1e-4, Algo::Binomial)?;
+    let (nccl, _) = run_ar_topo(ranks, gpus_per_node, bytes, ExecPolicy::nccl(), 1e-4, Algo::Ring)?;
+    let (ring, _) = run_ar_topo(ranks, gpus_per_node, bytes, ExecPolicy::gzccl(), 1e-4, Algo::Ring)?;
+    let (redoub, _) = run_ar_topo(
         ranks,
+        gpus_per_node,
         bytes,
         ExecPolicy::gzccl(),
         1e-4,
         Algo::RecursiveDoubling,
     )?;
-    Ok((cray, nccl, ring, redoub))
+    let (hier, _) = run_ar_topo(
+        ranks,
+        gpus_per_node,
+        bytes,
+        ExecPolicy::gzccl(),
+        1e-4,
+        Algo::Hierarchical,
+    )?;
+    Ok((cray, nccl, ring, redoub, hier))
 }
 
-/// **Fig. 9** — gZ-Allreduce vs Cray MPI and NCCL across message sizes.
-pub fn fig09_msgsize(ranks: usize) -> Result<Table> {
+/// **Fig. 9** — gZ-Allreduce vs Cray MPI and NCCL across message
+/// sizes, on a `gpus_per_node`-wide node layout (the paper testbed is
+/// 4; the hierarchical column exploits it).
+pub fn fig09_msgsize(ranks: usize, gpus_per_node: usize) -> Result<Table> {
     let mut t = Table::new(
-        format!("Fig 9: Allreduce vs baselines ({} GPUs)", ranks),
-        &["size", "Cray MPI", "NCCL", "gZ-Ring", "gZ-ReDoub", "vs Cray", "vs NCCL"],
+        format!("Fig 9: Allreduce vs baselines ({ranks} GPUs, {gpus_per_node}/node)"),
+        &["size", "Cray MPI", "NCCL", "gZ-Ring", "gZ-ReDoub", "gZ-Hier", "best gZ vs Cray", "best gZ vs NCCL"],
     );
     for &mb in &MSG_SIZES_MB {
-        let (cray, nccl, ring, redoub) = four_way(ranks, mb << 20)?;
+        let (cray, nccl, ring, redoub, hier) = five_way(ranks, gpus_per_node, mb << 20)?;
+        let best = redoub.min(hier);
         t.row(&[
             format!("{mb} MB"),
             fmt_time(cray),
             fmt_time(nccl),
             fmt_time(ring),
             fmt_time(redoub),
-            fmt_x(cray / redoub),
-            fmt_x(nccl / redoub),
+            fmt_time(hier),
+            fmt_x(cray / best),
+            fmt_x(nccl / best),
         ]);
     }
     Ok(t)
 }
 
-/// **Fig. 10** — scalability on the full dataset across GPU counts.
-pub fn fig10_scale() -> Result<Table> {
+/// **Fig. 10** — scalability on the full dataset across GPU counts,
+/// on a `gpus_per_node`-wide node layout.
+pub fn fig10_scale(gpus_per_node: usize) -> Result<Table> {
     let mut t = Table::new(
-        "Fig 10: Allreduce scalability (646 MB)",
-        &["GPUs", "Cray MPI", "NCCL", "gZ-Ring", "gZ-ReDoub", "vs Cray", "vs NCCL"],
+        format!("Fig 10: Allreduce scalability (646 MB, {gpus_per_node} GPUs/node)"),
+        &["GPUs", "Cray MPI", "NCCL", "gZ-Ring", "gZ-ReDoub", "gZ-Hier", "best gZ vs Cray", "best gZ vs NCCL"],
     );
     for &n in &GPU_COUNTS {
-        let (cray, nccl, ring, redoub) = four_way(n, FULL_DATASET_BYTES)?;
+        let (cray, nccl, ring, redoub, hier) = five_way(n, gpus_per_node, FULL_DATASET_BYTES)?;
+        let best = redoub.min(hier);
         t.row(&[
             n.to_string(),
             fmt_time(cray),
             fmt_time(nccl),
             fmt_time(ring),
             fmt_time(redoub),
-            fmt_x(cray / redoub),
-            fmt_x(nccl / redoub),
+            fmt_time(hier),
+            fmt_x(cray / best),
+            fmt_x(nccl / best),
         ]);
     }
     Ok(t)
@@ -257,13 +290,18 @@ mod tests {
 
     #[test]
     fn fig10_shape_matches_paper() {
-        // ReDoub best at scale; Ring beats NCCL only at small counts.
-        let (cray8, nccl8, ring8, redoub8) = four_way(8, FULL_DATASET_BYTES).unwrap();
-        let (cray256, nccl256, ring256, redoub256) = four_way(256, FULL_DATASET_BYTES).unwrap();
+        // ReDoub best among the flat schedules at scale; Ring beats
+        // NCCL only at small counts.
+        let (cray8, nccl8, ring8, redoub8, hier8) = five_way(8, 4, FULL_DATASET_BYTES).unwrap();
+        let (cray256, nccl256, ring256, redoub256, hier256) =
+            five_way(256, 4, FULL_DATASET_BYTES).unwrap();
         assert!(redoub8 < nccl8 && redoub8 < cray8);
         assert!(redoub256 < nccl256 && redoub256 < cray256);
         assert!(ring8 < nccl8, "ring wins at 8 GPUs");
         assert!(ring256 > nccl256, "ring loses at 256 GPUs");
+        // The topology-aware schedule also beats both baselines.
+        assert!(hier8 < nccl8 && hier8 < cray8);
+        assert!(hier256 < nccl256 && hier256 < cray256);
         // Cray degrades fastest with GPU count.
         assert!(cray256 / cray8 > nccl256 / nccl8);
     }

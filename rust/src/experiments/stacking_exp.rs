@@ -15,13 +15,14 @@ use super::{rtm_profile, virtual_inputs, Dataset};
 
 /// **Table 2** — stacking performance vs Cray MPI plus phase
 /// breakdowns. Performance runs at paper scale with virtual payloads
-/// (`ranks` × `image_bytes`); the breakdown percentages come from the
-/// same runs.
+/// (`ranks` × `image_bytes`, 4 GPUs per node); the breakdown
+/// percentages come from the same runs.
 pub fn table2_stacking(ranks: usize, image_bytes: usize) -> Result<Table> {
     let eb = 1e-4;
     let profile = rtm_profile(Dataset::Rtm1, eb);
     let run = |policy: ExecPolicy, algo: Algo| -> Result<(f64, crate::sim::Breakdown)> {
         let comm = Communicator::builder(ranks)
+            .gpus_per_node(4)
             .policy(policy)
             .error_bound(eb)
             .compression_profile(profile.clone())
@@ -34,6 +35,7 @@ pub fn table2_stacking(ranks: usize, image_bytes: usize) -> Result<Table> {
     let (nccl, _) = run(ExecPolicy::nccl(), Algo::Ring)?;
     let (ring, bd_ring) = run(ExecPolicy::gzccl(), Algo::Ring)?;
     let (redoub, bd_redoub) = run(ExecPolicy::gzccl(), Algo::RecursiveDoubling)?;
+    let (hier, bd_hier) = run(ExecPolicy::gzccl(), Algo::Hierarchical)?;
 
     let mut t = Table::new(
         format!("Table 2: image stacking ({} ranks, {} MB images)", ranks, image_bytes >> 20),
@@ -63,6 +65,14 @@ pub fn table2_stacking(ranks: usize, image_bytes: usize) -> Result<Table> {
         pct(bd_redoub, Phase::Comm),
         pct(bd_redoub, Phase::Redu),
         oth(bd_redoub),
+    ]);
+    t.row(&[
+        "gZCCL (Hier)".into(),
+        fmt_x(cray / hier),
+        pct(bd_hier, Phase::Cpr),
+        pct(bd_hier, Phase::Comm),
+        pct(bd_hier, Phase::Redu),
+        oth(bd_hier),
     ]);
     t.row(&[
         "NCCL".into(),

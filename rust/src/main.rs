@@ -74,12 +74,13 @@ gZCCL — compression-accelerated collective communication (paper reproduction)
 
 USAGE:
   gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
+                    [--gpus-per-node G]
                     OP: allreduce (tuner-selected) | allreduce-ring |
-                        allreduce-redoub | allreduce-tree |
+                        allreduce-redoub | allreduce-hier | allreduce-tree |
                         reduce_scatter | allgather | scatter | bcast
   gzccl experiment  <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|
-                     table1|table2|fig13|all> [--fast]
-  gzccl stack       [--ranks N] [--eb X]
+                     table1|table2|fig13|all> [--fast] [--gpus-per-node G]
+  gzccl stack       [--ranks N] [--eb X] [--gpus-per-node G]
   gzccl train       [--ranks N] [--steps N] [--no-compress]
   gzccl characterize
   gzccl help
@@ -120,7 +121,14 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::config("bad --size-mb")))
         .transpose()?
         .unwrap_or(64);
-    let cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
+    let gpus_per_node: Option<usize> = args
+        .take("--gpus-per-node")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
+        .transpose()?;
+    let mut cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
+    if let Some(g) = gpus_per_node {
+        cfg.gpus_per_node = g;
+    }
     let comm = Communicator::from_spec(cfg.to_spec()?);
     let n = comm.nranks();
     let elems = (size_mb << 20) / 4;
@@ -136,6 +144,9 @@ fn cmd_run(mut args: Args) -> Result<()> {
             all_ranks(elems),
             &CollectiveSpec::hinted(AlgoHint::Force(Algo::RecursiveDoubling)),
         )?,
+        "allreduce-hier" => {
+            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))?
+        }
         "allreduce-tree" => {
             comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial))?
         }
@@ -164,6 +175,11 @@ fn cmd_run(mut args: Args) -> Result<()> {
 
 fn cmd_experiment(mut args: Args) -> Result<()> {
     let fast = args.take_bool("--fast");
+    let gpn: usize = args
+        .take("--gpus-per-node")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
+        .transpose()?
+        .unwrap_or(4);
     let which = args
         .subcommand()
         .ok_or_else(|| Error::config("experiment: which one? (fig2..fig13, table1, table2, all)"))?;
@@ -179,8 +195,8 @@ fn cmd_experiment(mut args: Args) -> Result<()> {
             }
             "fig7" => exp::fig07_allreduce_opt(ranks)?.print(),
             "fig8" => exp::fig08_scatter_opt(ranks)?.print(),
-            "fig9" => exp::fig09_msgsize(ranks)?.print(),
-            "fig10" => exp::fig10_scale()?.print(),
+            "fig9" => exp::fig09_msgsize(ranks, gpn)?.print(),
+            "fig10" => exp::fig10_scale(gpn)?.print(),
             "fig11" => exp::fig11_scatter_msgsize(ranks)?.print(),
             "fig12" => exp::fig12_scatter_scale()?.print(),
             "table1" => exp::table1_compression(t1_sample)?.print(),
@@ -219,9 +235,15 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::config("bad --eb")))
         .transpose()?
         .unwrap_or(1e-4);
+    let gpus_per_node = args
+        .take("--gpus-per-node")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
+        .transpose()?
+        .unwrap_or(4);
     let engine = Engine::discover().ok();
     let cfg = StackingConfig {
         ranks,
+        gpus_per_node,
         error_bound: eb,
         ..Default::default()
     };
@@ -230,6 +252,7 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         StackingVariant::Nccl,
         StackingVariant::GzcclRing,
         StackingVariant::GzcclReDoub,
+        StackingVariant::GzcclHier,
     ] {
         let out = run_stacking(&cfg, v, engine.as_ref())?;
         println!(

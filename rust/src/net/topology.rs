@@ -62,6 +62,30 @@ impl Topology {
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         self.node_of(a) == self.node_of(b)
     }
+
+    /// The leader (lowest rank) of the node hosting `rank`. Hierarchical
+    /// collectives elect this rank to run the internode leg.
+    pub fn leader_of(&self, rank: usize) -> usize {
+        self.node_of(rank) * self.gpus_per_node
+    }
+
+    /// Whether `rank` is its node's leader.
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.local_of(rank) == 0
+    }
+
+    /// The leader rank of node `node` (node indices are `0..nodes()`).
+    pub fn leader_of_node(&self, node: usize) -> usize {
+        debug_assert!(node < self.nodes());
+        node * self.gpus_per_node
+    }
+
+    /// The rank range hosted on node `node` (the last node may be
+    /// partially filled).
+    pub fn node_ranks(&self, node: usize) -> std::ops::Range<usize> {
+        let start = node * self.gpus_per_node;
+        start..((node + 1) * self.gpus_per_node).min(self.ranks)
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +124,24 @@ mod tests {
     fn zero_args_rejected() {
         assert!(Topology::new(0, 4).is_err());
         assert!(Topology::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn leaders_and_node_ranges() {
+        let t = Topology::new(10, 4).unwrap();
+        assert!(t.is_leader(0) && t.is_leader(4) && t.is_leader(8));
+        assert!(!t.is_leader(3) && !t.is_leader(9));
+        assert_eq!(t.leader_of(6), 4);
+        assert_eq!(t.leader_of_node(2), 8);
+        assert_eq!(t.node_ranks(1), 4..8);
+        // Partial last node: only ranks 8 and 9.
+        assert_eq!(t.node_ranks(2), 8..10);
+        // Every node has a valid leader even when partially filled.
+        for node in 0..t.nodes() {
+            let l = t.leader_of_node(node);
+            assert!(l < t.ranks());
+            assert_eq!(t.node_of(l), node);
+        }
     }
 
     #[test]

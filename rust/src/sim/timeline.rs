@@ -26,8 +26,12 @@ impl Timeline {
 
     /// Reserve the resource for `dur` seconds, not starting before
     /// `ready`. Returns `(start, end)` of the granted slot.
+    ///
+    /// A non-positive (or NaN) `dur` is clamped to zero in **all**
+    /// build profiles: a negative duration would silently rewind
+    /// `busy_until` and corrupt `busy_total` in release builds.
     pub fn reserve(&mut self, ready: VirtTime, dur: f64) -> (VirtTime, VirtTime) {
-        debug_assert!(dur >= 0.0, "negative duration {dur}");
+        let dur = dur.max(0.0);
         let start = ready.join(self.busy_until);
         let end = start + dur;
         self.busy_until = end;
@@ -77,8 +81,10 @@ impl IntervalTimeline {
     }
 
     /// Reserve `dur` seconds at the earliest free slot ≥ `ready`.
+    /// Non-positive (or NaN) durations are clamped to zero in all build
+    /// profiles — see [`Timeline::reserve`].
     pub fn reserve(&mut self, ready: VirtTime, dur: f64) -> (VirtTime, VirtTime) {
-        debug_assert!(dur >= 0.0);
+        let dur = dur.max(0.0);
         let mut t = ready.as_secs();
         let mut pos = self.intervals.len();
         for (i, &(s, e)) in self.intervals.iter().enumerate() {
@@ -191,6 +197,29 @@ mod tests {
         t.reset();
         assert_eq!(t.busy_until(), VirtTime::ZERO);
         assert_eq!(t.busy_total(), 0.0);
+    }
+
+    #[test]
+    fn negative_duration_is_clamped_not_rewound() {
+        // Regression: a negative `dur` must not rewind `busy_until` or
+        // corrupt `busy_total` — in any build profile.
+        let mut t = Timeline::new();
+        t.reserve(VirtTime::ZERO, 2.0);
+        let (s, e) = t.reserve(VirtTime::ZERO, -5.0);
+        assert_eq!(s, VirtTime::secs(2.0));
+        assert_eq!(e, VirtTime::secs(2.0));
+        assert_eq!(t.busy_until(), VirtTime::secs(2.0));
+        assert!((t.busy_total() - 2.0).abs() < 1e-12);
+        // NaN is treated as zero too.
+        let (s, e) = t.reserve(VirtTime::secs(3.0), f64::NAN);
+        assert_eq!(s, e);
+
+        let mut it = IntervalTimeline::new();
+        it.reserve(VirtTime::ZERO, 1.0);
+        let (s, e) = it.reserve(VirtTime::ZERO, -1.0);
+        assert_eq!(s, e);
+        assert!((it.busy_total() - 1.0).abs() < 1e-12);
+        assert_eq!(it.busy_until(), VirtTime::secs(1.0));
     }
 
     #[test]

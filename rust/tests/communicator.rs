@@ -1,8 +1,10 @@
-//! Integration tests for the unified `Communicator` API: policy-aware
-//! tuning, forced hints, decision recording, and the root-dependent
-//! compression-stage predictions.
+//! Integration tests for the unified `Communicator` API: policy- and
+//! topology-aware tuning, forced hints, decision recording, and the
+//! root-dependent compression-stage predictions.
 
-use gzccl::collectives::{expected_cpr_stages, expected_cpr_stages_at, Algo, Op};
+use gzccl::collectives::{
+    expected_cpr_stages, expected_cpr_stages_at, expected_cpr_stages_hier, Algo, Op,
+};
 use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator, Tuner};
 use gzccl::coordinator::{DeviceBuf, ExecPolicy};
 
@@ -22,9 +24,10 @@ fn virt_root(n: usize, bytes: usize) -> Vec<DeviceBuf> {
 
 #[test]
 fn auto_allreduce_crossover_32_ranks_gzccl() {
-    // The ISSUE's acceptance criterion: with `AlgoHint::Auto` on 32
-    // ranks under the full gZCCL policy, the tuner selects the ring at
-    // ≥ 64 MiB and recursive doubling at ≤ 1 MiB.
+    // With `AlgoHint::Auto` on 32 ranks (8 nodes × 4 GPUs) under the
+    // full gZCCL policy, the tuner selects the ring at ≥ 64 MiB (its
+    // D/N chunks stay above the utilization knee) and the two-level
+    // hierarchical schedule below it.
     let comm = Communicator::builder(32)
         .policy(ExecPolicy::gzccl())
         .build()
@@ -46,13 +49,24 @@ fn auto_allreduce_crossover_32_ranks_gzccl() {
             .unwrap();
         assert_eq!(
             r.algo,
-            Algo::RecursiveDoubling,
-            "{kib} KiB should pick recursive doubling"
+            Algo::Hierarchical,
+            "{kib} KiB on a multi-node layout should pick hierarchical"
         );
         for c in &r.counters {
-            assert_eq!(c.algo_selected, Some(Algo::RecursiveDoubling));
+            assert_eq!(c.algo_selected, Some(Algo::Hierarchical));
         }
     }
+    // On a single fat node the flat model is back: small messages go
+    // to recursive doubling.
+    let single = Communicator::builder(32)
+        .gpus_per_node(32)
+        .policy(ExecPolicy::gzccl())
+        .build()
+        .unwrap();
+    let r = single
+        .allreduce(virt(32, MIB), &CollectiveSpec::auto())
+        .unwrap();
+    assert_eq!(r.algo, Algo::RecursiveDoubling);
 }
 
 #[test]
@@ -75,14 +89,15 @@ fn force_hint_bypasses_tuner_at_any_size() {
 
 #[test]
 fn auto_choice_depends_on_policy() {
-    // 4 MiB on 32 ranks: 128 KiB ring chunks are under the compression
-    // utilization knee → ReDoub for gZCCL; the uncompressed NCCL-class
-    // baseline is bandwidth-bound there → ring.
+    // 4 MiB on 32 ranks (8 nodes): 128 KiB ring chunks are under the
+    // compression utilization knee → the hierarchical schedule for
+    // gZCCL; the uncompressed NCCL-class baseline is bandwidth-bound
+    // there → flat ring.
     let gz = Communicator::builder(32).policy(ExecPolicy::gzccl()).build().unwrap();
     let nccl = Communicator::builder(32).policy(ExecPolicy::nccl()).build().unwrap();
     let a = gz.allreduce(virt(32, 4 * MIB), &CollectiveSpec::auto()).unwrap();
     let b = nccl.allreduce(virt(32, 4 * MIB), &CollectiveSpec::auto()).unwrap();
-    assert_eq!(a.algo, Algo::RecursiveDoubling);
+    assert_eq!(a.algo, Algo::Hierarchical);
     assert_eq!(b.algo, Algo::Ring);
 }
 
@@ -111,7 +126,7 @@ fn scatter_and_bcast_match_root_dependent_stage_table() {
     assert_eq!(scatter.algo, Algo::Binomial);
     for (rank, c) in scatter.counters.iter().enumerate() {
         let (cpr, dec) =
-            expected_cpr_stages_at(Op::Scatter, Algo::Binomial, n, rank).expect("predicted");
+            expected_cpr_stages_at(Op::Scatter, Algo::Binomial, n, rank, 0).expect("predicted");
         assert_eq!(c.compress_calls, cpr, "scatter rank {rank} compressions");
         assert_eq!(c.decompress_calls, dec, "scatter rank {rank} decompressions");
     }
@@ -122,9 +137,43 @@ fn scatter_and_bcast_match_root_dependent_stage_table() {
     assert_eq!(bcast.algo, Algo::Binomial);
     for (rank, c) in bcast.counters.iter().enumerate() {
         let (cpr, dec) =
-            expected_cpr_stages_at(Op::Bcast, Algo::Binomial, n, rank).expect("predicted");
+            expected_cpr_stages_at(Op::Bcast, Algo::Binomial, n, rank, 0).expect("predicted");
         assert_eq!(c.compress_calls, cpr, "bcast rank {rank} compressions");
         assert_eq!(c.decompress_calls, dec, "bcast rank {rank} decompressions");
+    }
+}
+
+#[test]
+fn nonzero_roots_match_stage_table_and_outputs() {
+    // Arbitrary-root Scatter/Bcast: the kernel-stage table rotates with
+    // the root, and every root in 0..n succeeds.
+    let n = 8;
+    let comm = Communicator::builder(n).policy(ExecPolicy::gzccl()).build().unwrap();
+    for root in 0..n {
+        let mk = || -> Vec<DeviceBuf> {
+            (0..n)
+                .map(|r| DeviceBuf::Virtual(if r == root { MIB } else { 0 }))
+                .collect()
+        };
+        let spec = CollectiveSpec::auto().with_root(root);
+        let scatter = comm.scatter(mk(), &spec).unwrap();
+        for (rank, c) in scatter.counters.iter().enumerate() {
+            let (cpr, dec) = expected_cpr_stages_at(Op::Scatter, Algo::Binomial, n, rank, root)
+                .expect("predicted");
+            assert_eq!(c.compress_calls, cpr, "scatter root {root} rank {rank}");
+            assert_eq!(c.decompress_calls, dec, "scatter root {root} rank {rank}");
+        }
+        let bcast = comm.bcast(mk(), &spec).unwrap();
+        for (rank, c) in bcast.counters.iter().enumerate() {
+            let (cpr, dec) = expected_cpr_stages_at(Op::Bcast, Algo::Binomial, n, rank, root)
+                .expect("predicted");
+            assert_eq!(c.compress_calls, cpr, "bcast root {root} rank {rank}");
+            assert_eq!(c.decompress_calls, dec, "bcast root {root} rank {rank}");
+        }
+        // Every rank gets the root's element count back.
+        for out in &bcast.outputs {
+            assert_eq!(out.elems(), MIB, "bcast root {root}");
+        }
     }
 }
 
@@ -145,10 +194,11 @@ fn rank_symmetric_ops_match_stage_table_through_communicator() {
 }
 
 #[test]
-fn tuned_ring_and_redoub_actually_run_their_schedules() {
+fn tuned_ring_and_hier_actually_run_their_schedules() {
     // The dispatch is not just a label: kernel counters must match the
     // algorithm the tuner reports.
     let n = 32;
+    let g = 4;
     let comm = Communicator::builder(n).build().unwrap();
     let big = comm.allreduce(virt(n, 64 * MIB), &CollectiveSpec::auto()).unwrap();
     assert_eq!(big.algo, Algo::Ring);
@@ -156,8 +206,20 @@ fn tuned_ring_and_redoub_actually_run_their_schedules() {
     assert_eq!(big.counters[0].compress_calls, n);
     assert_eq!(big.counters[0].decompress_calls, 2 * (n - 1));
     let small = comm.allreduce(virt(n, MIB), &CollectiveSpec::auto()).unwrap();
-    assert_eq!(small.algo, Algo::RecursiveDoubling);
-    // Pow2 ReDoub: log N of each.
-    assert_eq!(small.counters[0].compress_calls, 5);
-    assert_eq!(small.counters[0].decompress_calls, 5);
+    assert_eq!(small.algo, Algo::Hierarchical);
+    // Hierarchical: only node leaders compress, ⌈log₂ nodes⌉ = 3 times
+    // (8 nodes); members never touch the compressor.
+    for (rank, c) in small.counters.iter().enumerate() {
+        let (cpr, dec) = expected_cpr_stages_hier(n, g, rank);
+        assert_eq!(c.compress_calls, cpr, "rank {rank} compressions");
+        assert_eq!(c.decompress_calls, dec, "rank {rank} decompressions");
+    }
+    assert_eq!(small.counters[0].compress_calls, 3);
+    assert_eq!(small.counters[1].compress_calls, 0);
+    // A forced flat ReDoub still runs its own schedule.
+    let forced = comm
+        .allreduce(virt(n, MIB), &CollectiveSpec::forced(Algo::RecursiveDoubling))
+        .unwrap();
+    assert_eq!(forced.counters[0].compress_calls, 5);
+    assert_eq!(forced.counters[0].decompress_calls, 5);
 }

@@ -1,0 +1,202 @@
+//! Topology-aware hierarchical Allreduce: equivalence properties,
+//! error accounting, and the 128-rank acceptance criterion.
+
+use gzccl::collectives::{allreduce_hierarchical, allreduce_ring, Algo};
+use gzccl::comm::{CollectiveSpec, Communicator};
+use gzccl::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
+use gzccl::net::Topology;
+use gzccl::testkit::{forall, Cases, Pcg32};
+
+const MIB: usize = 1 << 20;
+
+fn spec(n: usize, g: usize, policy: ExecPolicy) -> ClusterSpec {
+    ClusterSpec::with_topology(Topology::new(n, g).unwrap(), policy)
+}
+
+/// Integer-valued inputs: sums of small integers are exact in f32, so
+/// schedules with different reduction orders must agree bit-for-bit.
+fn int_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Pcg32::new(seed, r as u64);
+            DeviceBuf::Real((0..d).map(|_| rng.range_usize(0, 33) as f32 - 16.0).collect())
+        })
+        .collect()
+}
+
+fn real_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Pcg32::new(seed, r as u64);
+            DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+        })
+        .collect()
+}
+
+fn exact_sum(inputs: &[DeviceBuf]) -> Vec<f32> {
+    let d = inputs[0].elems();
+    let mut out = vec![0.0f32; d];
+    for b in inputs {
+        for (o, v) in out.iter_mut().zip(b.as_real()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_hier_matches_flat_ring_bitwise_uncompressed() {
+    // Random shapes including non-power-of-two rank counts, partial
+    // last nodes and degenerate layouts: uncompressed hierarchical
+    // must equal the flat ring bit-for-bit on integer-exact data.
+    forall(
+        Cases::n(16),
+        |rng| {
+            let g = rng.range_usize(1, 4); // GPUs per node (inclusive)
+            let n = rng.range_usize(2, 13); // ranks (inclusive)
+            let d = rng.range_usize(1, 120);
+            (n, g, d, rng.next_u64())
+        },
+        |&(n, g, d, seed)| {
+            let inputs = int_inputs(n, d, seed);
+            let ring = run_collective(&spec(n, g, ExecPolicy::nccl()), inputs.clone(), &allreduce_ring)
+                .map_err(|e| e.to_string())?;
+            let hier = run_collective(
+                &spec(n, g, ExecPolicy::nccl()),
+                inputs,
+                &allreduce_hierarchical,
+            )
+            .map_err(|e| e.to_string())?;
+            for r in 0..n {
+                if hier.outputs[r].as_real() != ring.outputs[r].as_real() {
+                    return Err(format!("rank {r} differs from flat ring"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hier_compressed_within_stacked_error_bound() {
+    // Compression is confined to the internode leg: the stacked error
+    // scales with the internode exchange count (⌈log₂ nodes⌉ plus the
+    // non-pow2 fold/unfold), never with the rank count.
+    let eb = 1e-3f32;
+    forall(
+        Cases::n(10),
+        |rng| {
+            let g = rng.range_usize(2, 4);
+            let n = rng.range_usize(2, 13);
+            let d = rng.range_usize(8, 160);
+            (n, g, d, rng.next_u64())
+        },
+        |&(n, g, d, seed)| {
+            let inputs = real_inputs(n, d, seed);
+            let expect = exact_sum(&inputs);
+            let report = run_collective(
+                &spec(n, g, ExecPolicy::gzccl()).with_error_bound(eb as f64),
+                inputs,
+                &allreduce_hierarchical,
+            )
+            .map_err(|e| e.to_string())?;
+            let nodes = n.div_ceil(g);
+            let stages = (usize::BITS - nodes.leading_zeros()) as usize + 2;
+            // Worst-case exchange-error recurrence e' = 2e + eb over
+            // `stages` steps is (2^stages − 1)·eb.
+            let tol = ((1usize << stages) as f32) * eb;
+            for (r, out) in report.outputs.iter().enumerate() {
+                for (i, (a, b)) in out.as_real().iter().zip(&expect).enumerate() {
+                    if (a - b).abs() > tol {
+                        return Err(format!(
+                            "n={n} g={g} rank {r} elem {i}: {a} vs {b} beyond {tol}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The ISSUE acceptance criterion: on a simulated 128-rank,
+/// 4-GPUs-per-node cluster at 64 MiB, the tuner selects the
+/// hierarchical schedule and it strictly beats the flat ring.
+#[test]
+fn acceptance_128_ranks_tuner_picks_hier_and_beats_flat_ring() {
+    let n = 128;
+    let comm = Communicator::builder(n)
+        .gpus_per_node(4)
+        .policy(ExecPolicy::gzccl())
+        .build()
+        .unwrap();
+    let virt = || -> Vec<DeviceBuf> {
+        (0..n).map(|_| DeviceBuf::Virtual(64 * MIB / 4)).collect()
+    };
+    let auto = comm.allreduce(virt(), &CollectiveSpec::auto()).unwrap();
+    assert_eq!(auto.algo, Algo::Hierarchical, "tuner must select hierarchical");
+    assert!(auto.auto_tuned);
+    let ring = comm
+        .allreduce(virt(), &CollectiveSpec::forced(Algo::Ring))
+        .unwrap();
+    assert!(
+        auto.makespan.as_secs() < ring.makespan.as_secs(),
+        "hierarchical {} must strictly beat the flat ring {}",
+        auto.makespan,
+        ring.makespan
+    );
+    // It also beats the flat whole-vector schedule it generalizes.
+    let redoub = comm
+        .allreduce(virt(), &CollectiveSpec::forced(Algo::RecursiveDoubling))
+        .unwrap();
+    assert!(
+        auto.makespan.as_secs() < redoub.makespan.as_secs(),
+        "hierarchical {} vs flat redoub {}",
+        auto.makespan,
+        redoub.makespan
+    );
+}
+
+/// Companion to the acceptance criterion: at the same 128-rank shape,
+/// the hierarchical schedule produces results identical to the flat
+/// ring when uncompressed.
+#[test]
+fn acceptance_128_ranks_identical_results_uncompressed() {
+    let n = 128;
+    let d = 96;
+    let sp = spec(n, 4, ExecPolicy::nccl());
+    let inputs = int_inputs(n, d, 4242);
+    let ring = run_collective(&sp, inputs.clone(), &allreduce_ring).unwrap();
+    let hier = run_collective(&sp, inputs, &allreduce_hierarchical).unwrap();
+    for r in 0..n {
+        assert_eq!(
+            hier.outputs[r].as_real(),
+            ring.outputs[r].as_real(),
+            "rank {r}"
+        );
+    }
+}
+
+#[test]
+fn hier_keeps_internode_wire_volume_on_leaders() {
+    // Only leaders talk across nodes; members' wire traffic is exactly
+    // their two NVLink legs (one raw vector up, one down — the down leg
+    // is charged to the leader's counters as the sender).
+    let n = 16;
+    let g = 4;
+    let d = 1 << 14;
+    let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(d)).collect();
+    let report = run_collective(&spec(n, g, ExecPolicy::nccl()), inputs, &allreduce_hierarchical)
+        .unwrap();
+    for r in 0..n {
+        let c = &report.counters[r];
+        if r % g == 0 {
+            // Leader: 3 intranode down-sends + log2(4 nodes) = 2
+            // internode exchanges.
+            assert_eq!(c.msgs_sent, 3 + 2, "leader {r}");
+        } else {
+            assert_eq!(c.msgs_sent, 1, "member {r} sends only its up-leg");
+            assert_eq!(c.wire_bytes, d * 4, "member {r} wire volume");
+        }
+    }
+}

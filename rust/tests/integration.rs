@@ -1,8 +1,8 @@
 //! Integration tests: whole-stack flows through the public API.
 
 use gzccl::collectives::{
-    allgather_ring, allreduce_recursive_doubling, allreduce_ring, bcast_binomial,
-    reduce_scatter_ring, scatter_binomial, Algo, Chunks,
+    allgather_ring, allreduce_hierarchical, allreduce_recursive_doubling, allreduce_ring,
+    bcast_binomial, reduce_scatter_ring, scatter_binomial, Algo, Chunks,
 };
 use gzccl::comm::{CollectiveSpec, Communicator};
 use gzccl::config::{ClusterConfig, TomlDoc};
@@ -41,8 +41,9 @@ fn config_file_to_collective_run() {
     let inputs = real_inputs(8, 256, 1);
     let expect = exact_sum(&inputs);
     let report = comm.allreduce(inputs, &CollectiveSpec::auto()).unwrap();
-    // 1 KiB message on 8 ranks is far below the compressed crossover.
-    assert_eq!(report.algo, Algo::RecursiveDoubling);
+    // 1 KiB on 8 ranks (2 nodes × 4 GPUs) is far below the compressed
+    // ring crossover → the topology-aware hierarchical schedule.
+    assert_eq!(report.algo, Algo::Hierarchical);
     assert!(report.auto_tuned);
     for out in &report.outputs {
         for (a, b) in out.as_real().iter().zip(&expect) {
@@ -67,13 +68,13 @@ fn every_variant_completes_every_collective() {
     let d = 128;
     for (name, policy) in policies {
         let spec = ClusterSpec::new(n, policy).with_error_bound(1e-3);
-        // Allreduce (both algorithms).
-        for algo in [true, false] {
+        // Allreduce (all three algorithms).
+        for algo in 0..3 {
             let inputs = real_inputs(n, d, 7);
-            let report = if algo {
-                run_collective(&spec, inputs, &allreduce_recursive_doubling)
-            } else {
-                run_collective(&spec, inputs, &allreduce_ring)
+            let report = match algo {
+                0 => run_collective(&spec, inputs, &allreduce_recursive_doubling),
+                1 => run_collective(&spec, inputs, &allreduce_ring),
+                _ => run_collective(&spec, inputs, &allreduce_hierarchical),
             }
             .unwrap_or_else(|e| panic!("{name} allreduce({algo}): {e}"));
             assert_eq!(report.outputs[0].elems(), d, "{name}");
@@ -84,22 +85,31 @@ fn every_variant_completes_every_collective() {
         assert_eq!(report.outputs[1].elems(), Chunks::new(d, n).len(1));
         let report = run_collective(&spec, real_inputs(n, d, 9), &allgather_ring).unwrap();
         assert_eq!(report.outputs[2].elems(), d * n);
-        // Scatter + Bcast (root-fed).
-        let mut inputs = real_inputs(1, d, 10);
-        for _ in 1..n {
-            inputs.push(DeviceBuf::Real(vec![]));
+        // Scatter + Bcast (root-fed, from a non-zero root too).
+        for root in [0usize, n - 1] {
+            let rooted = |seed: u64| -> Vec<DeviceBuf> {
+                let full = real_inputs(1, d, seed).remove(0);
+                (0..n)
+                    .map(|r| {
+                        if r == root {
+                            full.clone()
+                        } else {
+                            DeviceBuf::Real(vec![])
+                        }
+                    })
+                    .collect()
+            };
+            let report = run_collective(&spec, rooted(10), &move |ctx, input| {
+                scatter_binomial(ctx, input, d, root)
+            })
+            .unwrap_or_else(|e| panic!("{name} scatter root {root}: {e}"));
+            assert_eq!(report.outputs[3].elems(), Chunks::new(d, n).len(3));
+            let report = run_collective(&spec, rooted(11), &move |ctx, input| {
+                bcast_binomial(ctx, input, root)
+            })
+            .unwrap_or_else(|e| panic!("{name} bcast root {root}: {e}"));
+            assert_eq!(report.outputs[3].elems(), d, "{name} bcast root {root}");
         }
-        let report = run_collective(&spec, inputs, &move |ctx, input| {
-            scatter_binomial(ctx, input, d)
-        })
-        .unwrap_or_else(|e| panic!("{name} scatter: {e}"));
-        assert_eq!(report.outputs[3].elems(), Chunks::new(d, n).len(3));
-        let mut inputs = real_inputs(1, d, 11);
-        for _ in 1..n {
-            inputs.push(DeviceBuf::Real(vec![]));
-        }
-        let report = run_collective(&spec, inputs, &bcast_binomial).unwrap();
-        assert_eq!(report.outputs[3].elems(), d, "{name} bcast");
     }
 }
 
