@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Non-blocking benchmark trend check.
+
+Compares the current BENCH_allreduce.json sweep against the previous
+run's artifact and emits a GitHub Actions ::warning:: annotation for
+every sweep point whose virtual makespan regressed by more than the
+threshold. Always exits 0 — this is a trend report, not a gate (the
+surrounding job is continue-on-error as well).
+
+Usage: bench_trend.py PREV.json CURR.json [--threshold 0.15]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    rows = {}
+    for row in data.get("rows", []):
+        key = (row["algo"], row["ranks"], row["gpus_per_node"], row["size_mib"])
+        rows[key] = row
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("curr")
+    ap.add_argument("--threshold", type=float, default=0.15)
+    args = ap.parse_args()
+
+    try:
+        prev = load_rows(args.prev)
+        curr = load_rows(args.curr)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"trend check skipped: could not parse artifacts ({e})")
+        return 0
+
+    regressions = []
+    improvements = 0
+    for key, row in sorted(curr.items()):
+        base = prev.get(key)
+        if base is None:
+            continue
+        old = base.get("virtual_makespan_s", 0.0)
+        new = row.get("virtual_makespan_s", 0.0)
+        if old <= 0.0:
+            continue
+        delta = (new - old) / old
+        label = "algo={} ranks={} gpn={} size={}MiB".format(*key)
+        if delta > args.threshold:
+            regressions.append((label, old, new, delta))
+            print(
+                f"::warning title=Allreduce makespan regression::{label}: "
+                f"{old:.6f}s -> {new:.6f}s (+{delta * 100:.1f}%)"
+            )
+        elif delta < -args.threshold:
+            improvements += 1
+            print(f"improved  {label}: {old:.6f}s -> {new:.6f}s ({delta * 100:.1f}%)")
+        else:
+            print(f"unchanged {label}: {old:.6f}s -> {new:.6f}s ({delta * 100:+.1f}%)")
+
+    compared = len([k for k in curr if k in prev])
+    print(
+        f"\ntrend: {compared} points compared, {len(regressions)} regressed "
+        f"(> {args.threshold * 100:.0f}%), {improvements} improved"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ fn main() -> gzccl::Result<()> {
         ranks: 8,
         steps: 200,
         error_bound: 1e-4,
+        accuracy_target: None,
         redoub: true,
         compress: true,
         seed: 42,

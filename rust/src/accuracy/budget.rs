@@ -1,0 +1,317 @@
+//! The error-budget planner: invert the propagation model.
+//!
+//! Given an end-to-end accuracy target — an absolute L∞ ceiling or a
+//! PSNR floor against a known value range — the planner derives the
+//! per-call compressor error bound that *guarantees* the target:
+//!
+//! ```text
+//! eb = target_abs / (iterations × amplification(op, algo, topology))
+//! ```
+//!
+//! A PSNR floor converts soundly to an absolute target because
+//! `PSNR = 20·log₁₀(range / RMSE)` and `RMSE ≤ L∞`: holding
+//! `L∞ ≤ range · 10^(−dB/20)` implies the floor.
+//!
+//! The planner **rejects** the fixed-rate compressor outright — its
+//! pointwise error scales with data magnitude (the CPRP2P hazard,
+//! [`crate::accuracy::propagation::ErrorPrediction::Unbounded`]), so no
+//! per-call bound can certify any finite target.
+//!
+//! [`complies`] is the check the [`crate::comm::Tuner`] accuracy veto
+//! and the forced-algorithm validation use: an algorithm complies with
+//! a plan iff its worst-case amplification times the planned `eb` fits
+//! inside the per-call budget.
+
+use crate::collectives::{Algo, Op};
+use crate::coordinator::CompressionMode;
+use crate::error::{Error, Result};
+use crate::net::Topology;
+
+use super::propagation::worst_amplification;
+
+/// End-to-end accuracy target for a budgeted run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AccuracyTarget {
+    /// Absolute pointwise ceiling: `|out − exact| ≤ value` everywhere.
+    AbsError(f64),
+    /// PSNR floor in dB against data spanning `value_range`
+    /// (the SZ/cuSZp convention: peak = max − min of the reference).
+    PsnrFloor {
+        /// Minimum acceptable PSNR in dB.
+        db: f64,
+        /// Value range of the reference data the PSNR is taken against.
+        value_range: f64,
+    },
+}
+
+impl AccuracyTarget {
+    /// The absolute L∞ ceiling this target reduces to.
+    pub fn abs_bound(&self) -> f64 {
+        match *self {
+            AccuracyTarget::AbsError(t) => t,
+            AccuracyTarget::PsnrFloor { db, value_range } => {
+                value_range * 10f64.powf(-db / 20.0)
+            }
+        }
+    }
+}
+
+/// A planned error budget: the inverted model plus everything needed to
+/// check other algorithms against it.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetPlan {
+    /// The end-to-end target the plan certifies.
+    pub target: AccuracyTarget,
+    /// Dependent iterations the target is split across (DDP steps,
+    /// stacking batches); 1 for one-shot collectives.
+    pub iterations: usize,
+    /// Per-call absolute budget: `target.abs_bound() / iterations`.
+    pub per_call_abs: f64,
+    /// The derived per-call compressor error bound.
+    pub eb: f64,
+    /// Algorithm the inversion was anchored on.
+    pub planned_algo: Algo,
+    /// That algorithm's worst-case amplification.
+    pub amplification: f64,
+}
+
+fn validated_abs(target: AccuracyTarget, iterations: usize) -> Result<f64> {
+    let abs = target.abs_bound();
+    if !(abs.is_finite() && abs > 0.0) {
+        return Err(Error::budget(format!(
+            "accuracy target reduces to a non-positive / non-finite bound ({abs:e})"
+        )));
+    }
+    if iterations == 0 {
+        return Err(Error::budget("accuracy plan needs iterations >= 1"));
+    }
+    Ok(abs)
+}
+
+/// Plan the per-call error bound for a **specific** `(op, algo)` on
+/// `topo`, splitting the target across `iterations` dependent calls.
+///
+/// Rejections (typed errors): the fixed-rate compressor (unbounded
+/// hazard), an uncompressed policy (nothing to plan), a non-positive
+/// target, and `(op, algo)` pairs the propagation model cannot certify.
+pub fn plan_for_algo(
+    target: AccuracyTarget,
+    iterations: usize,
+    op: Op,
+    algo: Algo,
+    topo: &Topology,
+    mode: CompressionMode,
+) -> Result<BudgetPlan> {
+    match mode {
+        CompressionMode::FixedRate => {
+            return Err(Error::budget(
+                "accuracy target rejected: the fixed-rate compressor's pointwise error scales \
+                 with data magnitude and cannot be bounded a priori; use the error-bounded policy",
+            ));
+        }
+        CompressionMode::None => {
+            return Err(Error::budget(
+                "accuracy plan is moot: the policy never compresses (results are exact)",
+            ));
+        }
+        CompressionMode::ErrorBounded => {}
+    }
+    let abs = validated_abs(target, iterations)?;
+    let per_call_abs = abs / iterations as f64;
+    let m = worst_amplification(op, algo, topo, 0).ok_or_else(|| {
+        Error::budget(format!(
+            "accuracy plan rejected: no propagation model for {algo:?} {op:?}"
+        ))
+    })?;
+    // m == 0 (single-rank, or hierarchical on one node) means the call
+    // introduces no compression error at all: any eb meets the target,
+    // so hand the compressor the whole per-call budget.
+    let eb = if m == 0.0 { per_call_abs } else { per_call_abs / m };
+    Ok(BudgetPlan {
+        target,
+        iterations,
+        per_call_abs,
+        eb,
+        planned_algo: algo,
+        amplification: m,
+    })
+}
+
+/// Plan a communicator-level budget: anchor the inversion on the
+/// best-accuracy Allreduce schedule the topology supports — the
+/// hierarchical two-level schedule on multi-node multi-GPU layouts
+/// (compression confined to `⌈log₂ nodes⌉` internode exchanges), flat
+/// recursive doubling otherwise. The [`crate::comm::Tuner`] accuracy
+/// veto then restricts auto-selection to algorithms that
+/// [`complies`]-check against the resulting plan.
+pub fn plan_auto(
+    target: AccuracyTarget,
+    iterations: usize,
+    topo: &Topology,
+    mode: CompressionMode,
+) -> Result<BudgetPlan> {
+    let anchor = if topo.nodes() >= 2 && topo.gpus_per_node() >= 2 {
+        Algo::Hierarchical
+    } else {
+        Algo::RecursiveDoubling
+    };
+    plan_for_algo(target, iterations, Op::Allreduce, anchor, topo, mode)
+}
+
+/// Whether `(op, algo)` fits inside `plan`'s per-call budget: its
+/// worst-case predicted error `m · eb` must not exceed `per_call_abs`
+/// (with a 1e-9 relative slack for the division round-trip). Pairs the
+/// model cannot certify never comply.
+pub fn complies(plan: &BudgetPlan, op: Op, algo: Algo, topo: &Topology, root: usize) -> bool {
+    match worst_amplification(op, algo, topo, root) {
+        None => false,
+        Some(m) => m * plan.eb <= plan.per_call_abs * (1.0 + 1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(ranks: usize, g: usize) -> Topology {
+        Topology::new(ranks, g).unwrap()
+    }
+
+    #[test]
+    fn psnr_floor_converts_to_abs_bound() {
+        let t = AccuracyTarget::PsnrFloor {
+            db: 60.0,
+            value_range: 2.0,
+        };
+        // 2 · 10^(−3) = 2e-3.
+        assert!((t.abs_bound() - 2e-3).abs() < 1e-12);
+        assert_eq!(AccuracyTarget::AbsError(5e-4).abs_bound(), 5e-4);
+    }
+
+    #[test]
+    fn plan_inverts_the_model() {
+        let t = topo(8, 4);
+        let plan = plan_for_algo(
+            AccuracyTarget::AbsError(8e-3),
+            1,
+            Op::Allreduce,
+            Algo::Ring,
+            &t,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        // Ring amplification on 8 ranks is 8 → eb = 1e-3.
+        assert!((plan.eb - 1e-3).abs() < 1e-15);
+        assert_eq!(plan.amplification, 8.0);
+        assert!(complies(&plan, Op::Allreduce, Algo::Ring, &t, 0));
+        // Iterations split the budget linearly.
+        let it = plan_for_algo(
+            AccuracyTarget::AbsError(8e-3),
+            10,
+            Op::Allreduce,
+            Algo::Ring,
+            &t,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        assert!((it.eb - 1e-4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn planner_rejects_the_fixed_rate_hazard() {
+        let t = topo(8, 4);
+        let err = plan_for_algo(
+            AccuracyTarget::AbsError(1e-3),
+            1,
+            Op::Allreduce,
+            Algo::Ring,
+            &t,
+            CompressionMode::FixedRate,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fixed-rate"), "{err}");
+        assert!(plan_for_algo(
+            AccuracyTarget::AbsError(1e-3),
+            1,
+            Op::Allreduce,
+            Algo::Ring,
+            &t,
+            CompressionMode::None,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn planner_rejects_degenerate_targets() {
+        let t = topo(8, 4);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(plan_for_algo(
+                AccuracyTarget::AbsError(bad),
+                1,
+                Op::Allreduce,
+                Algo::Ring,
+                &t,
+                CompressionMode::ErrorBounded,
+            )
+            .is_err());
+        }
+        assert!(plan_for_algo(
+            AccuracyTarget::AbsError(1e-3),
+            0,
+            Op::Allreduce,
+            Algo::Ring,
+            &t,
+            CompressionMode::ErrorBounded,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn auto_plan_anchors_on_best_accuracy_schedule() {
+        // Multi-node multi-GPU → hierarchical anchor (smallest m).
+        let plan = plan_auto(
+            AccuracyTarget::AbsError(1e-3),
+            1,
+            &topo(32, 4),
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        assert_eq!(plan.planned_algo, Algo::Hierarchical);
+        assert_eq!(plan.amplification, 7.0); // 8 nodes → 2^3 − 1
+        // The flat schedules blow the same budget...
+        assert!(!complies(&plan, Op::Allreduce, Algo::Ring, &topo(32, 4), 0));
+        assert!(!complies(
+            &plan,
+            Op::Allreduce,
+            Algo::RecursiveDoubling,
+            &topo(32, 4),
+            0
+        ));
+        // ...while the anchor and the compress-once ops fit.
+        assert!(complies(&plan, Op::Allreduce, Algo::Hierarchical, &topo(32, 4), 0));
+        assert!(complies(&plan, Op::Bcast, Algo::Binomial, &topo(32, 4), 0));
+        assert!(complies(&plan, Op::Allgather, Algo::Ring, &topo(32, 4), 0));
+        // Single node → flat ReDoub anchor.
+        let flat = plan_auto(
+            AccuracyTarget::AbsError(1e-3),
+            1,
+            &topo(4, 4),
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        assert_eq!(flat.planned_algo, Algo::RecursiveDoubling);
+    }
+
+    #[test]
+    fn uncertifiable_pairs_never_comply() {
+        let t = topo(8, 4);
+        let plan = plan_auto(
+            AccuracyTarget::AbsError(1.0),
+            1,
+            &t,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        assert!(!complies(&plan, Op::Scatter, Algo::Ring, &t, 0));
+    }
+}

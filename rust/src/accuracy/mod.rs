@@ -1,0 +1,38 @@
+//! Accuracy-aware error control (paper §3.4, §4.5; C-Coll's error
+//! propagation analysis).
+//!
+//! gZCCL's second headline contribution — beyond pipelined/hierarchical
+//! performance — is *controlling* the error that lossy compression
+//! injects into collectives. This subsystem makes that a first-class
+//! layer with three parts:
+//!
+//! * [`propagation`] — the forward model: worst-case pointwise error
+//!   per `(Op, Algo, rank, root, Topology)`, built on and subsuming the
+//!   `expected_cpr_stages*` stage-count family. Linear `stages × eb`
+//!   accumulation for chained hops, `(2^S − 1)·eb` for doubling trees,
+//!   one `eb` for forwarded streams, explicit
+//!   [`propagation::ErrorPrediction::Unbounded`] for the fixed-rate
+//!   hazard, and linear compounding across dependent iterations.
+//! * [`budget`] — the inverse model: given an end-to-end target
+//!   (absolute L∞ or a PSNR floor vs a value range), rank count,
+//!   topology, algorithm and iteration count, derive the per-call
+//!   compressor error bound. Exposed as
+//!   [`crate::comm::CommBuilder::accuracy_target`]; the
+//!   [`crate::comm::Tuner`] gains an accuracy veto
+//!   ([`crate::comm::Tuner::select_within_budget`]) so auto-selection
+//!   never picks an algorithm whose stage count blows the budget.
+//! * [`telemetry`] — the runtime check: each compressed collective on
+//!   real payloads records predicted bound vs observed max deviation
+//!   against an exact reference on a deterministic element sample,
+//!   surfaced through [`crate::comm::CollectiveReport::accuracy`] and
+//!   the per-rank [`crate::coordinator::OpCounters`].
+
+pub mod budget;
+pub mod propagation;
+pub mod telemetry;
+
+pub use budget::{complies, plan_auto, plan_for_algo, AccuracyTarget, BudgetPlan};
+pub use propagation::{
+    amplification, cpr_stages, predict, predict_worst, worst_amplification, ErrorPrediction,
+};
+pub use telemetry::{AccuracyObservation, AccuracyReport, ErrorProbe, MAX_SAMPLE};

@@ -1,0 +1,383 @@
+//! Worst-case pointwise error propagation across collective stages.
+//!
+//! The model formalizes how per-stage compression error compounds
+//! (C-Coll §"error propagation", gZCCL §3.4): every decompression of an
+//! error-bounded stream reconstructs each value to within `eb` of what
+//! the sender held. Whether those `eb`s *add* or *double* depends on
+//! the dataflow of the algorithm:
+//!
+//! * **Linear chains** — when each hop reduces a once-compressed
+//!   partial into *exact local* data (the ring Reduce_scatter), the
+//!   recurrence is `e' = e + eb`: error grows linearly with the hop
+//!   count (`stages × eb`).
+//! * **Doubling trees** — when both reduction operands are themselves
+//!   accumulated partials (recursive doubling), the recurrence is
+//!   `e' = 2e + eb`: after `S` exchanges the worst case is
+//!   `(2^S − 1)·eb`. The MPICH remainder fold/unfold adds two more
+//!   effective stages for non-power-of-two participant counts.
+//! * **Forwarded streams** — compress-once algorithms (binomial
+//!   Scatter/Bcast, the ring Allgather) forward the compressed bytes
+//!   verbatim, so every consumer pays exactly one `eb`.
+//!
+//! The **fixed-rate** compressor (CPRP2P baseline) has *no* absolute
+//! bound — its error scales with block magnitude — so every prediction
+//! under [`CompressionMode::FixedRate`] is
+//! [`ErrorPrediction::Unbounded`]: the hazard the paper's
+//! accuracy-aware design exists to reject, and the one the
+//! [`crate::accuracy::budget`] planner refuses to plan around.
+//!
+//! The per-rank stage counts come from the
+//! `crate::collectives::expected_cpr_stages*` family, which
+//! [`cpr_stages`] unifies behind one rank/root/topology-resolved entry
+//! point.
+
+use crate::collectives::{expected_cpr_stages_at, expected_cpr_stages_hier, Algo, Op};
+use crate::coordinator::CompressionMode;
+use crate::net::Topology;
+
+/// Predicted worst-case pointwise deviation of a collective's output
+/// from the exact (lossless) result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorPrediction {
+    /// No lossy stage touches the data: the output is exact up to f32
+    /// reduction rounding.
+    Exact,
+    /// Error-bounded path: `|out − exact| ≤ bound` pointwise.
+    Bounded(f64),
+    /// Fixed-rate path: the pointwise error scales with data magnitude
+    /// and admits **no** a-priori absolute bound.
+    Unbounded,
+}
+
+impl ErrorPrediction {
+    /// The absolute bound, if one exists (`Exact` ⇒ 0).
+    pub fn bound(&self) -> Option<f64> {
+        match *self {
+            ErrorPrediction::Exact => Some(0.0),
+            ErrorPrediction::Bounded(b) => Some(b),
+            ErrorPrediction::Unbounded => None,
+        }
+    }
+
+    /// Whether the prediction carries an absolute bound.
+    pub fn is_bounded(&self) -> bool {
+        !matches!(self, ErrorPrediction::Unbounded)
+    }
+
+    /// The prediction after `iters` dependent repetitions (iterative
+    /// apps: stacking batches, DDP steps). Per-call errors add linearly
+    /// across iterations because each iteration's output feeds the next
+    /// through exact local computation.
+    pub fn iterated(&self, iters: usize) -> ErrorPrediction {
+        match *self {
+            ErrorPrediction::Bounded(b) => ErrorPrediction::Bounded(b * iters as f64),
+            other => other,
+        }
+    }
+}
+
+fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (n - 1).ilog2() as usize + 1
+    }
+}
+
+/// Effective `e' = 2e + eb` stages of a recursive-doubling exchange
+/// over `groups` participants, including the two extra stages (fold
+/// compress-in, unfold compress-out) the MPICH remainder scheme adds
+/// for non-power-of-two counts.
+fn doubling_error_stages(groups: usize) -> usize {
+    if groups <= 1 {
+        return 0;
+    }
+    let logp = groups.ilog2() as usize;
+    logp + if groups.is_power_of_two() { 0 } else { 2 }
+}
+
+/// `2^s − 1` in f64 without overflowing for degenerate huge `s`.
+fn pow2_minus_1(s: usize) -> f64 {
+    if s < 53 {
+        ((1u64 << s) - 1) as f64
+    } else {
+        2f64.powi(s.min(1000) as i32)
+    }
+}
+
+/// Worst-case error **amplification** `m` for `(op, algo)` at `rank`:
+/// under an error-bounded compressor with bound `eb`, the output at
+/// `rank` deviates from the exact result by at most `m · eb`.
+///
+/// Returns `None` for `(op, algo)` pairs the model does not cover —
+/// callers must treat that as "cannot certify", never as zero.
+pub fn amplification(
+    op: Op,
+    algo: Algo,
+    topo: &Topology,
+    rank: usize,
+    root: usize,
+) -> Option<f64> {
+    let n = topo.ranks();
+    if n <= 1 {
+        return Some(0.0);
+    }
+    match (op, algo) {
+        (_, Algo::Identity) => Some(0.0),
+        // Ring Allreduce: N−1 linear reduce-scatter hops (`e' = e + eb`
+        // — each hop folds a once-compressed partial into exact local
+        // data) plus one compress-once allgather forward.
+        (Op::Allreduce, Algo::Ring) => Some(n as f64),
+        // Recursive doubling: S doubling exchanges (`e' = 2e + eb`)
+        // including the non-pow2 fold/unfold → (2^S − 1)·eb. For pow2
+        // N this is exactly (N−1)·eb.
+        (Op::Allreduce, Algo::RecursiveDoubling) => {
+            Some(pow2_minus_1(doubling_error_stages(n)))
+        }
+        // Hierarchical: intranode legs are raw NVLink (exact); only the
+        // internode recursive doubling over `nodes` leaders compresses,
+        // and members inherit their leader's error verbatim.
+        (Op::Allreduce, Algo::Hierarchical) => {
+            Some(pow2_minus_1(doubling_error_stages(topo.nodes())))
+        }
+        // Staged reduce+bcast (Cray-MPI baseline shape): the binomial
+        // reduce sends raw; only the broadcast compresses, once.
+        (Op::Allreduce, Algo::Binomial) => Some(1.0),
+        // Ring Allgather: gZCCL one-compression invariant — every
+        // origin block is compressed exactly once and forwarded
+        // verbatim.
+        (Op::Allgather, Algo::Ring) => Some(1.0),
+        // Log-step allgathers recompress doubling aggregates: the
+        // farthest block crosses ⌈log₂N⌉ compress hops (no reduction,
+        // so hops add linearly).
+        (Op::Allgather, Algo::RecursiveDoubling) | (Op::Allgather, Algo::Bruck) => {
+            Some(ceil_log2(n) as f64)
+        }
+        // Ring Reduce_scatter: N−1 linear hops.
+        (Op::ReduceScatter, Algo::Ring) => Some((n - 1) as f64),
+        // Binomial Scatter: each block compressed once at the root,
+        // forwarded verbatim, decompressed once per consumer (the root
+        // included — it decodes its own block).
+        (Op::Scatter, Algo::Binomial) => Some(1.0),
+        // Binomial Bcast: the root keeps its lossless copy.
+        (Op::Bcast, Algo::Binomial) => Some(if rank == root { 0.0 } else { 1.0 }),
+        _ => None,
+    }
+}
+
+/// [`amplification`] maximized over ranks — the number the planner and
+/// the tuner veto compare against a per-call budget.
+pub fn worst_amplification(op: Op, algo: Algo, topo: &Topology, root: usize) -> Option<f64> {
+    let n = topo.ranks();
+    if n <= 1 {
+        return Some(0.0);
+    }
+    // Amplification is rank-uniform except for rooted ops, where the
+    // root is the *smaller* case; any non-root rank is the worst.
+    let probe_rank = if root == 0 { n - 1 } else { 0 };
+    amplification(op, algo, topo, probe_rank, root)
+}
+
+/// Predicted worst-case pointwise error of one `(op, algo)` call at
+/// `rank` under `(mode, eb)`. `None` when the model does not cover the
+/// pair (cannot certify).
+pub fn predict(
+    op: Op,
+    algo: Algo,
+    topo: &Topology,
+    rank: usize,
+    root: usize,
+    mode: CompressionMode,
+    eb: f64,
+) -> Option<ErrorPrediction> {
+    match mode {
+        CompressionMode::None => Some(ErrorPrediction::Exact),
+        CompressionMode::FixedRate => Some(ErrorPrediction::Unbounded),
+        CompressionMode::ErrorBounded => amplification(op, algo, topo, rank, root).map(|m| {
+            if m == 0.0 {
+                ErrorPrediction::Exact
+            } else {
+                ErrorPrediction::Bounded(m * eb)
+            }
+        }),
+    }
+}
+
+/// [`predict`] maximized over ranks.
+pub fn predict_worst(
+    op: Op,
+    algo: Algo,
+    topo: &Topology,
+    root: usize,
+    mode: CompressionMode,
+    eb: f64,
+) -> Option<ErrorPrediction> {
+    match mode {
+        CompressionMode::None => Some(ErrorPrediction::Exact),
+        CompressionMode::FixedRate => Some(ErrorPrediction::Unbounded),
+        CompressionMode::ErrorBounded => worst_amplification(op, algo, topo, root).map(|m| {
+            if m == 0.0 {
+                ErrorPrediction::Exact
+            } else {
+                ErrorPrediction::Bounded(m * eb)
+            }
+        }),
+    }
+}
+
+/// Rank/root/topology-resolved predicted `(compress, decompress)`
+/// kernel counts for any implemented `(op, algo)` — the single entry
+/// point over the `expected_cpr_stages*` family in
+/// [`crate::collectives`]:
+///
+/// * topology-dependent pairs (hierarchical Allreduce) dispatch to
+///   `expected_cpr_stages_hier`,
+/// * root-dependent binomial trees and everything rank-symmetric
+///   dispatch through `expected_cpr_stages_at`.
+pub fn cpr_stages(
+    op: Op,
+    algo: Algo,
+    topo: &Topology,
+    rank: usize,
+    root: usize,
+) -> Option<(usize, usize)> {
+    match (op, algo) {
+        (Op::Allreduce, Algo::Hierarchical) => Some(expected_cpr_stages_hier(
+            topo.ranks(),
+            topo.gpus_per_node(),
+            rank,
+        )),
+        _ => expected_cpr_stages_at(op, algo, topo.ranks(), rank, root),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(ranks: usize, g: usize) -> Topology {
+        Topology::new(ranks, g).unwrap()
+    }
+
+    #[test]
+    fn flat_allreduce_amplifications() {
+        let t = topo(8, 4);
+        assert_eq!(amplification(Op::Allreduce, Algo::Ring, &t, 0, 0), Some(8.0));
+        // pow2 ReDoub: 2^3 − 1 = 7.
+        assert_eq!(
+            amplification(Op::Allreduce, Algo::RecursiveDoubling, &t, 0, 0),
+            Some(7.0)
+        );
+        // Non-pow2 (6 ranks): pof2 = 4 → log 2, +2 fold stages → 2^4−1.
+        assert_eq!(
+            amplification(Op::Allreduce, Algo::RecursiveDoubling, &topo(6, 2), 0, 0),
+            Some(15.0)
+        );
+        assert_eq!(amplification(Op::Allreduce, Algo::Binomial, &t, 3, 0), Some(1.0));
+    }
+
+    #[test]
+    fn hierarchical_amplification_counts_nodes_not_ranks() {
+        // 128 ranks / 4 per node → 32 nodes: 2^5 − 1 = 31 ≪ ring's 128.
+        let t = topo(128, 4);
+        assert_eq!(
+            amplification(Op::Allreduce, Algo::Hierarchical, &t, 0, 0),
+            Some(31.0)
+        );
+        assert_eq!(amplification(Op::Allreduce, Algo::Ring, &t, 0, 0), Some(128.0));
+        // Single node: the hierarchical schedule never compresses.
+        assert_eq!(
+            amplification(Op::Allreduce, Algo::Hierarchical, &topo(4, 4), 0, 0),
+            Some(0.0)
+        );
+        // Non-pow2 node count (6 nodes): fold/unfold stages included.
+        assert_eq!(
+            amplification(Op::Allreduce, Algo::Hierarchical, &topo(12, 2), 0, 0),
+            Some(15.0)
+        );
+    }
+
+    #[test]
+    fn forwarded_stream_ops_pay_one_eb() {
+        let t = topo(16, 4);
+        assert_eq!(amplification(Op::Allgather, Algo::Ring, &t, 0, 0), Some(1.0));
+        assert_eq!(amplification(Op::Scatter, Algo::Binomial, &t, 5, 2), Some(1.0));
+        assert_eq!(amplification(Op::Bcast, Algo::Binomial, &t, 2, 2), Some(0.0));
+        assert_eq!(amplification(Op::Bcast, Algo::Binomial, &t, 3, 2), Some(1.0));
+        assert_eq!(worst_amplification(Op::Bcast, Algo::Binomial, &t, 2), Some(1.0));
+        assert_eq!(
+            amplification(Op::ReduceScatter, Algo::Ring, &t, 0, 0),
+            Some(15.0)
+        );
+        // Log-step allgathers recompress aggregates.
+        assert_eq!(amplification(Op::Allgather, Algo::Bruck, &t, 0, 0), Some(4.0));
+    }
+
+    #[test]
+    fn uncovered_pairs_are_none_not_zero() {
+        let t = topo(8, 4);
+        assert_eq!(amplification(Op::Scatter, Algo::Ring, &t, 0, 0), None);
+        assert_eq!(
+            predict(Op::Scatter, Algo::Ring, &t, 0, 0, CompressionMode::ErrorBounded, 1e-4),
+            None
+        );
+    }
+
+    #[test]
+    fn predictions_by_mode() {
+        let t = topo(8, 4);
+        assert_eq!(
+            predict_worst(Op::Allreduce, Algo::Ring, &t, 0, CompressionMode::None, 1e-4),
+            Some(ErrorPrediction::Exact)
+        );
+        assert_eq!(
+            predict_worst(Op::Allreduce, Algo::Ring, &t, 0, CompressionMode::FixedRate, 1e-4),
+            Some(ErrorPrediction::Unbounded)
+        );
+        let p = predict_worst(
+            Op::Allreduce,
+            Algo::Ring,
+            &t,
+            0,
+            CompressionMode::ErrorBounded,
+            1e-4,
+        )
+        .unwrap();
+        assert_eq!(p.bound(), Some(8.0 * 1e-4));
+        assert!(p.is_bounded());
+        assert_eq!(ErrorPrediction::Unbounded.bound(), None);
+        // Identity on a one-rank communicator is exact.
+        assert_eq!(
+            predict_worst(
+                Op::Allreduce,
+                Algo::Identity,
+                &topo(1, 4),
+                0,
+                CompressionMode::ErrorBounded,
+                1e-4
+            ),
+            Some(ErrorPrediction::Exact)
+        );
+    }
+
+    #[test]
+    fn iteration_compounding_is_linear() {
+        let p = ErrorPrediction::Bounded(1e-4);
+        assert_eq!(p.iterated(10), ErrorPrediction::Bounded(1e-3));
+        assert_eq!(ErrorPrediction::Unbounded.iterated(10), ErrorPrediction::Unbounded);
+        assert_eq!(ErrorPrediction::Exact.iterated(10), ErrorPrediction::Exact);
+    }
+
+    #[test]
+    fn cpr_stages_unifies_the_family() {
+        let t = topo(16, 4);
+        // Rank-symmetric pair → flat table.
+        assert_eq!(cpr_stages(Op::Allreduce, Algo::Ring, &t, 3, 0), Some((16, 30)));
+        // Root-dependent pair.
+        assert_eq!(cpr_stages(Op::Scatter, Algo::Binomial, &t, 5, 5), Some((16, 1)));
+        assert_eq!(cpr_stages(Op::Scatter, Algo::Binomial, &t, 0, 5), Some((0, 1)));
+        // Topology-dependent pair: leaders compress log₂(nodes) times.
+        assert_eq!(cpr_stages(Op::Allreduce, Algo::Hierarchical, &t, 0, 0), Some((2, 2)));
+        assert_eq!(cpr_stages(Op::Allreduce, Algo::Hierarchical, &t, 5, 0), Some((0, 0)));
+    }
+}

@@ -1,0 +1,319 @@
+//! Runtime error telemetry: predicted bound vs observed deviation.
+//!
+//! Every compressed collective dispatched on **real** payloads gets an
+//! [`ErrorProbe`]: before the run, a deterministic element sample
+//! (evenly-strided global indices, capped at [`MAX_SAMPLE`]) is
+//! evaluated against an exact f64 reference computed from the inputs;
+//! after the run, every rank's output is compared at the same indices
+//! and the maximum deviation recorded. The
+//! [`crate::comm::Communicator`] pairs the observation with the
+//! propagation model's prediction into an [`AccuracyReport`], surfaced
+//! through [`crate::comm::CollectiveReport`] and mirrored into each
+//! rank's [`crate::coordinator::OpCounters`].
+//!
+//! The observed deviation includes f32 reduction-reassociation noise
+//! and per-stage reconstruction rounding (the collective sums in f32,
+//! the reference in f64), so [`AccuracyReport::within_bound`] allows a
+//! floating-point slack of `O(nranks) · ε_f32 · max Σ|inputs|` on top
+//! of the predicted compression bound. Virtual (size-only) payloads
+//! produce no probe.
+
+use crate::collectives::{Chunks, Op};
+use crate::coordinator::DeviceBuf;
+
+use super::propagation::ErrorPrediction;
+
+/// Maximum sampled elements per collective.
+pub const MAX_SAMPLE: usize = 4096;
+
+/// The outcome of one probe: observed deviation on the sample.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyObservation {
+    /// Maximum `|output − exact|` over all ranks and sampled elements.
+    pub observed_max_err: f64,
+    /// Number of sampled elements.
+    pub samples: usize,
+    /// f32 reassociation slack the comparison must tolerate.
+    pub fp_slack: f64,
+}
+
+/// Predicted-vs-observed accuracy record for one dispatched collective.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyReport {
+    /// The propagation model's worst-case prediction.
+    pub prediction: ErrorPrediction,
+    /// Maximum observed deviation on the sample.
+    pub observed_max_err: f64,
+    /// Number of sampled elements.
+    pub samples: usize,
+    /// f32 reassociation slack.
+    pub fp_slack: f64,
+}
+
+impl AccuracyReport {
+    /// Whether the observation respects the predicted bound (plus the
+    /// f32 slack). `None` when the prediction is unbounded (fixed-rate
+    /// hazard): there is no bound to hold.
+    pub fn within_bound(&self) -> Option<bool> {
+        match self.prediction {
+            ErrorPrediction::Exact => Some(self.observed_max_err <= self.fp_slack),
+            ErrorPrediction::Bounded(b) => {
+                Some(self.observed_max_err <= b * (1.0 + 1e-9) + self.fp_slack)
+            }
+            ErrorPrediction::Unbounded => None,
+        }
+    }
+}
+
+/// Evenly-strided deterministic sample of `len` indices (all of them
+/// when `len ≤ MAX_SAMPLE`). Strictly increasing, so every index is
+/// distinct.
+fn sample_indices(len: usize) -> Vec<usize> {
+    let k = len.min(MAX_SAMPLE);
+    (0..k).map(|j| j * len / k).collect()
+}
+
+/// A pre-run probe: sampled indices plus their exact f64 reference.
+#[derive(Debug, Clone)]
+pub struct ErrorProbe {
+    op: Op,
+    nranks: usize,
+    /// Global element index space of the op's output (see `observe`).
+    domain_len: usize,
+    indices: Vec<usize>,
+    reference: Vec<f64>,
+    /// max over samples of Σ_r |input_r| — the magnitude that bounds
+    /// f32 reassociation error even under heavy cancellation.
+    abs_sum_max: f64,
+}
+
+impl ErrorProbe {
+    /// Build a probe from the collective's inputs, or `None` when the
+    /// payloads are virtual / empty / shape-inconsistent (no telemetry).
+    pub fn prepare(op: Op, inputs: &[DeviceBuf], root: usize) -> Option<ErrorProbe> {
+        let n = inputs.len();
+        if n == 0 || root >= n {
+            return None;
+        }
+        let mut abs_sum_max = 0f64;
+        let (domain_len, indices, reference) = match op {
+            Op::Allreduce | Op::ReduceScatter => {
+                if inputs.iter().any(|b| b.is_virtual()) {
+                    return None;
+                }
+                let d = inputs[0].elems();
+                if d == 0 || inputs.iter().any(|b| b.elems() != d) {
+                    return None;
+                }
+                let indices = sample_indices(d);
+                let mut reference = Vec::with_capacity(indices.len());
+                for &i in &indices {
+                    let mut sum = 0f64;
+                    let mut abs = 0f64;
+                    for b in inputs {
+                        let v = b.as_real()[i] as f64;
+                        sum += v;
+                        abs += v.abs();
+                    }
+                    abs_sum_max = abs_sum_max.max(abs);
+                    reference.push(sum);
+                }
+                (d, indices, reference)
+            }
+            Op::Allgather => {
+                if inputs.iter().any(|b| b.is_virtual()) {
+                    return None;
+                }
+                let total: usize = inputs.iter().map(|b| b.elems()).sum();
+                if total == 0 {
+                    return None;
+                }
+                let mut offsets = Vec::with_capacity(n + 1);
+                let mut acc = 0usize;
+                offsets.push(0);
+                for b in inputs {
+                    acc += b.elems();
+                    offsets.push(acc);
+                }
+                let indices = sample_indices(total);
+                let mut reference = Vec::with_capacity(indices.len());
+                let mut owner = 0usize;
+                for &i in &indices {
+                    while offsets[owner + 1] <= i {
+                        owner += 1;
+                    }
+                    let v = inputs[owner].as_real()[i - offsets[owner]] as f64;
+                    abs_sum_max = abs_sum_max.max(v.abs());
+                    reference.push(v);
+                }
+                (total, indices, reference)
+            }
+            Op::Scatter | Op::Bcast => {
+                let rootbuf = &inputs[root];
+                if rootbuf.is_virtual() {
+                    return None;
+                }
+                let d = rootbuf.elems();
+                if d == 0 {
+                    return None;
+                }
+                let indices = sample_indices(d);
+                let mut reference = Vec::with_capacity(indices.len());
+                for &i in &indices {
+                    let v = rootbuf.as_real()[i] as f64;
+                    abs_sum_max = abs_sum_max.max(v.abs());
+                    reference.push(v);
+                }
+                (d, indices, reference)
+            }
+        };
+        Some(ErrorProbe {
+            op,
+            nranks: n,
+            domain_len,
+            indices,
+            reference,
+            abs_sum_max,
+        })
+    }
+
+    /// Compare the run's outputs against the pre-computed reference.
+    /// `None` when any relevant output is virtual or shaped
+    /// unexpectedly (telemetry silently stands down rather than
+    /// mis-reporting).
+    pub fn observe(&self, outputs: &[DeviceBuf]) -> Option<AccuracyObservation> {
+        if outputs.len() != self.nranks {
+            return None;
+        }
+        let mut max_dev = 0f64;
+        match self.op {
+            // Every rank holds the full vector at global indexing.
+            Op::Allreduce | Op::Allgather | Op::Bcast => {
+                for out in outputs {
+                    let v = match out {
+                        DeviceBuf::Real(v) => v,
+                        DeviceBuf::Virtual(_) => return None,
+                    };
+                    for (j, &i) in self.indices.iter().enumerate() {
+                        let got = *v.get(i)? as f64;
+                        max_dev = max_dev.max((got - self.reference[j]).abs());
+                    }
+                }
+            }
+            // Rank r holds chunk r of the global vector.
+            Op::ReduceScatter | Op::Scatter => {
+                let chunks = Chunks::new(self.domain_len, self.nranks);
+                for (j, &i) in self.indices.iter().enumerate() {
+                    let r = chunks.owner_of(i);
+                    let local = i - chunks.start(r);
+                    let v = match &outputs[r] {
+                        DeviceBuf::Real(v) => v,
+                        DeviceBuf::Virtual(_) => return None,
+                    };
+                    let got = *v.get(local)? as f64;
+                    max_dev = max_dev.max((got - self.reference[j]).abs());
+                }
+            }
+        }
+        // Slack: f32 reassociation of the up-to-n-term sums plus the
+        // compressor's per-stage reconstruction rounding (≈4·ε·|value|
+        // per hop, up to ~2n hops on the ring) — everything the f64
+        // reference sees that is *not* quantization error.
+        Some(AccuracyObservation {
+            observed_max_err: max_dev,
+            samples: self.indices.len(),
+            fp_slack: self.abs_sum_max * (8.0 * self.nranks as f64 + 8.0) * f32::EPSILON as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DeviceBuf;
+
+    #[test]
+    fn sample_is_deterministic_distinct_and_capped() {
+        let s = sample_indices(10);
+        assert_eq!(s, vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let big = sample_indices(1_000_000);
+        assert_eq!(big.len(), MAX_SAMPLE);
+        assert!(big.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(big, sample_indices(1_000_000));
+    }
+
+    #[test]
+    fn allreduce_probe_detects_deviation() {
+        let inputs = vec![
+            DeviceBuf::Real(vec![1.0, 2.0, 3.0]),
+            DeviceBuf::Real(vec![1.0, 1.0, 1.0]),
+        ];
+        let probe = ErrorProbe::prepare(Op::Allreduce, &inputs, 0).unwrap();
+        // Exact outputs → zero deviation.
+        let exact = vec![
+            DeviceBuf::Real(vec![2.0, 3.0, 4.0]),
+            DeviceBuf::Real(vec![2.0, 3.0, 4.0]),
+        ];
+        let obs = probe.observe(&exact).unwrap();
+        assert_eq!(obs.observed_max_err, 0.0);
+        assert_eq!(obs.samples, 3);
+        // Perturbed output → the max deviation across ranks/samples.
+        let off = vec![
+            DeviceBuf::Real(vec![2.0, 3.0, 4.5]),
+            DeviceBuf::Real(vec![2.0, 3.25, 4.0]),
+        ];
+        let obs = probe.observe(&off).unwrap();
+        assert!((obs.observed_max_err - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rooted_and_chunked_probes_map_indices() {
+        // Scatter from root 1: outputs are chunks of the root vector.
+        let full: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let inputs = vec![DeviceBuf::Real(vec![]), DeviceBuf::Real(full.clone())];
+        let probe = ErrorProbe::prepare(Op::Scatter, &inputs, 1).unwrap();
+        let outputs = vec![
+            DeviceBuf::Real(full[0..5].to_vec()),
+            DeviceBuf::Real(full[5..10].to_vec()),
+        ];
+        let obs = probe.observe(&outputs).unwrap();
+        assert_eq!(obs.observed_max_err, 0.0);
+        // Allgather: concatenation order is rank order.
+        let ag_in = vec![
+            DeviceBuf::Real(vec![1.0, 2.0]),
+            DeviceBuf::Real(vec![3.0]),
+        ];
+        let ag_probe = ErrorProbe::prepare(Op::Allgather, &ag_in, 0).unwrap();
+        let cat = DeviceBuf::Real(vec![1.0, 2.0, 3.0]);
+        let obs = ag_probe.observe(&[cat.clone(), cat]).unwrap();
+        assert_eq!(obs.observed_max_err, 0.0);
+    }
+
+    #[test]
+    fn virtual_or_empty_payloads_stand_down() {
+        assert!(ErrorProbe::prepare(Op::Allreduce, &[DeviceBuf::Virtual(8)], 0).is_none());
+        assert!(ErrorProbe::prepare(Op::Allreduce, &[], 0).is_none());
+        assert!(ErrorProbe::prepare(Op::Allreduce, &[DeviceBuf::Real(vec![])], 0).is_none());
+        let probe = ErrorProbe::prepare(
+            Op::Allreduce,
+            &[DeviceBuf::Real(vec![1.0]), DeviceBuf::Real(vec![2.0])],
+            0,
+        )
+        .unwrap();
+        assert!(probe.observe(&[DeviceBuf::Virtual(1), DeviceBuf::Virtual(1)]).is_none());
+    }
+
+    #[test]
+    fn within_bound_semantics() {
+        let mk = |prediction, observed| AccuracyReport {
+            prediction,
+            observed_max_err: observed,
+            samples: 10,
+            fp_slack: 1e-9,
+        };
+        assert_eq!(mk(ErrorPrediction::Bounded(1e-3), 5e-4).within_bound(), Some(true));
+        assert_eq!(mk(ErrorPrediction::Bounded(1e-3), 2e-3).within_bound(), Some(false));
+        assert_eq!(mk(ErrorPrediction::Exact, 0.0).within_bound(), Some(true));
+        assert_eq!(mk(ErrorPrediction::Unbounded, 42.0).within_bound(), None);
+    }
+}

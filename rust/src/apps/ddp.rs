@@ -10,10 +10,12 @@
 //! thread — the *collective* still runs on real rank threads with
 //! virtual-time accounting, which is the part under study.
 
-use crate::collectives::Algo;
+use crate::accuracy::{plan_for_algo, AccuracyTarget, BudgetPlan};
+use crate::collectives::{Algo, Op};
 use crate::comm::{AlgoHint, CollectiveSpec, Communicator};
-use crate::coordinator::{DeviceBuf, ExecPolicy};
+use crate::coordinator::{CompressionMode, DeviceBuf, ExecPolicy};
 use crate::error::Result;
+use crate::net::Topology;
 use crate::runtime::Engine;
 use crate::testkit::Pcg32;
 
@@ -24,8 +26,15 @@ pub struct DdpConfig {
     pub ranks: usize,
     /// Optimization steps.
     pub steps: usize,
-    /// Absolute error bound for gradient compression.
+    /// Absolute error bound for gradient compression. Superseded by the
+    /// planner's derived bound when `accuracy_target` is set.
     pub error_bound: f64,
+    /// End-to-end accuracy target: absolute L∞ ceiling on the total
+    /// compression error injected into the summed gradients across
+    /// **all** steps. The budget planner splits it over `steps`
+    /// iterations and inverts the propagation model for the chosen
+    /// algorithm to derive the per-call compressor bound.
+    pub accuracy_target: Option<f64>,
     /// Use recursive doubling (true) or ring (false) for the Allreduce.
     pub redoub: bool,
     /// Compress gradients at all (false = NCCL-style baseline).
@@ -40,6 +49,7 @@ impl Default for DdpConfig {
             ranks: 8,
             steps: 60,
             error_bound: 1e-4,
+            accuracy_target: None,
             redoub: true,
             compress: true,
             seed: 42,
@@ -56,6 +66,16 @@ pub struct DdpResult {
     pub allreduce_time: f64,
     /// Total wire bytes across all steps and ranks.
     pub wire_bytes: usize,
+    /// Per-call compressor bound the budget planner derived (`None`
+    /// without an accuracy target or when not compressing).
+    pub planned_eb: Option<f64>,
+    /// Predicted per-step worst-case gradient error (`m · eb`).
+    pub predicted_step_err: Option<f64>,
+    /// Max observed per-step gradient deviation from the telemetry.
+    pub observed_step_err: Option<f64>,
+    /// Steps whose telemetry observation exceeded the predicted bound
+    /// (should stay 0 on error-bounded runs).
+    pub budget_violations: usize,
     /// Final parameters.
     pub params: Vec<f32>,
 }
@@ -104,22 +124,50 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
     } else {
         ExecPolicy::nccl()
     };
+    let algo = if cfg.redoub {
+        Algo::RecursiveDoubling
+    } else {
+        Algo::Ring
+    };
+    // Accuracy-aware path: split the end-to-end target across all
+    // training steps (compression error compounds linearly into the
+    // parameters) and invert the model for the pinned algorithm. The
+    // node shape is set once here so the plan and the communicator are
+    // guaranteed to share one layout.
+    let gpus_per_node = 4;
+    let mut eb = cfg.error_bound;
+    let mut plan: Option<BudgetPlan> = None;
+    if let Some(target) = cfg.accuracy_target {
+        if policy.compression == CompressionMode::ErrorBounded {
+            let topo = Topology::new(cfg.ranks, gpus_per_node)?;
+            let p = plan_for_algo(
+                AccuracyTarget::AbsError(target),
+                cfg.steps.max(1),
+                Op::Allreduce,
+                algo,
+                &topo,
+                policy.compression,
+            )?;
+            eb = p.eb;
+            plan = Some(p);
+        }
+    }
     let comm = Communicator::builder(cfg.ranks)
+        .gpus_per_node(gpus_per_node)
         .policy(policy)
-        .error_bound(cfg.error_bound)
+        .error_bound(eb)
         .build()?;
     // The config pins the algorithm (the experiment compares them);
     // `AlgoHint::Auto` would let the tuner decide from the gradient
     // size and rank count instead.
-    let spec = CollectiveSpec::hinted(AlgoHint::Force(if cfg.redoub {
-        Algo::RecursiveDoubling
-    } else {
-        Algo::Ring
-    }));
+    let spec = CollectiveSpec::hinted(AlgoHint::Force(algo));
 
     let mut loss_curve = Vec::with_capacity(cfg.steps);
     let mut allreduce_time = 0.0;
     let mut wire_bytes = 0usize;
+    let mut observed_step_err: Option<f64> = None;
+    let mut predicted_step_err: Option<f64> = None;
+    let mut budget_violations = 0usize;
 
     for step in 0..cfg.steps {
         // ---- per-rank local compute (L2/L1 via PJRT) ----------------
@@ -139,6 +187,16 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
         let report = comm.allreduce(grads, &spec)?;
         allreduce_time += report.makespan.as_secs();
         wire_bytes += report.total_wire_bytes();
+        if let Some(acc) = report.accuracy {
+            observed_step_err =
+                Some(observed_step_err.unwrap_or(0.0).max(acc.observed_max_err));
+            if let Some(b) = acc.prediction.bound() {
+                predicted_step_err = Some(predicted_step_err.unwrap_or(0.0).max(b));
+            }
+            if acc.within_bound() == Some(false) {
+                budget_violations += 1;
+            }
+        }
 
         // ---- average + apply (PJRT axpy artifact) -------------------
         let summed = report.outputs[0].as_real();
@@ -150,6 +208,10 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
         loss_curve,
         allreduce_time,
         wire_bytes,
+        planned_eb: plan.map(|p| p.eb),
+        predicted_step_err,
+        observed_step_err,
+        budget_violations,
         params,
     })
 }
@@ -180,6 +242,35 @@ mod tests {
             );
             assert!(out.allreduce_time > 0.0);
             assert!(out.wire_bytes > 0);
+        });
+    }
+
+    #[test]
+    fn accuracy_target_plans_and_holds_per_step() {
+        ENGINE.with(|e| {
+            let cfg = DdpConfig {
+                ranks: 4,
+                steps: 4,
+                accuracy_target: Some(1e-3),
+                ..Default::default()
+            };
+            let out = train_ddp(&cfg, e).unwrap();
+            // ReDoub on 4 ranks: m = 3; per-step budget 2.5e-4 →
+            // eb = 2.5e-4 / 3.
+            let eb = out.planned_eb.expect("target must produce a plan");
+            assert!((eb - 1e-3 / 4.0 / 3.0).abs() < 1e-12, "eb {eb}");
+            // Telemetry ran every step and never exceeded the bound.
+            assert!(out.observed_step_err.is_some());
+            assert_eq!(out.budget_violations, 0);
+            assert!(
+                out.observed_step_err.unwrap()
+                    <= out.predicted_step_err.unwrap() * 1.01,
+                "obs {:?} vs pred {:?}",
+                out.observed_step_err,
+                out.predicted_step_err
+            );
+            // Still trains.
+            assert!(out.loss_curve.iter().all(|l| l.is_finite()));
         });
     }
 

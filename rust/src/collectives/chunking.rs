@@ -39,6 +39,23 @@ impl Chunks {
         self.range(i).len()
     }
 
+    /// The chunk containing global element index `idx` — the inverse of
+    /// [`Chunks::range`], kept next to the boundary convention it
+    /// inverts. Requires `idx < total`.
+    pub fn owner_of(&self, idx: usize) -> usize {
+        debug_assert!(idx < self.total);
+        // floor(idx·n/total) is within one chunk of the owner; fix up
+        // against the exact floor(i·total/n) boundaries.
+        let mut i = (idx * self.n / self.total.max(1)).min(self.n - 1);
+        while i + 1 < self.n && self.start(i + 1) <= idx {
+            i += 1;
+        }
+        while i > 0 && self.start(i) > idx {
+            i -= 1;
+        }
+        i
+    }
+
     /// Whether the layout is empty.
     pub fn is_empty(&self) -> bool {
         self.total == 0
@@ -73,6 +90,17 @@ mod tests {
         let c = Chunks::new(2, 5);
         let total: usize = (0..5).map(|i| c.len(i)).sum();
         assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn owner_of_inverts_range() {
+        for (total, n) in [(100usize, 4usize), (10, 3), (7, 7), (5, 3), (64, 5), (2, 5)] {
+            let c = Chunks::new(total, n);
+            for idx in 0..total {
+                let r = c.owner_of(idx);
+                assert!(c.range(r).contains(&idx), "total {total} n {n} idx {idx} → {r}");
+            }
+        }
     }
 
     #[test]

@@ -69,7 +69,10 @@ pub enum Algo {
 
 /// Predicted compression-kernel invocations per rank — the complexity
 /// table of §3.3.3, which the integration tests assert against actual
-/// counter values.
+/// counter values. ([`crate::accuracy::cpr_stages`] unifies this
+/// family behind one topology-resolved entry point, and
+/// [`crate::accuracy::propagation`] builds the worst-case error model
+/// on top of it.)
 pub fn expected_cpr_stages(op: Op, algo: Algo, n: usize) -> Option<(usize, usize)> {
     if n <= 1 {
         return Some((0, 0));

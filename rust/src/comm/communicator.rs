@@ -1,8 +1,13 @@
 //! The [`Communicator`]: NCCL/MPI-style entry point for collectives.
 
+use crate::accuracy::{
+    complies, plan_auto, predict_worst, AccuracyReport, AccuracyTarget, BudgetPlan, ErrorProbe,
+};
 use crate::collectives::{Algo, Op};
 use crate::compress::CompressionProfile;
-use crate::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy, RunReport};
+use crate::coordinator::{
+    run_collective, ClusterSpec, CompressionMode, DeviceBuf, ExecPolicy, RunReport,
+};
 use crate::error::{Error, Result};
 use crate::net::Topology;
 
@@ -21,6 +26,8 @@ pub struct CommBuilder {
     gpus_per_node: usize,
     policy: ExecPolicy,
     error_bound: Option<f64>,
+    accuracy_target: Option<AccuracyTarget>,
+    iterations: usize,
     profile: Option<CompressionProfile>,
     tuner: Option<Tuner>,
 }
@@ -34,6 +41,8 @@ impl CommBuilder {
             gpus_per_node: 4,
             policy: ExecPolicy::gzccl(),
             error_bound: None,
+            accuracy_target: None,
+            iterations: 1,
             profile: None,
             tuner: None,
         }
@@ -45,9 +54,31 @@ impl CommBuilder {
         self
     }
 
-    /// Absolute error bound for the error-bounded compressor.
+    /// Absolute error bound for the error-bounded compressor. Mutually
+    /// exclusive with [`CommBuilder::accuracy_target`], which *derives*
+    /// the bound instead.
     pub fn error_bound(mut self, eb: f64) -> Self {
         self.error_bound = Some(eb);
+        self
+    }
+
+    /// End-to-end accuracy target — the alternative to a raw
+    /// [`CommBuilder::error_bound`]. At [`CommBuilder::build`] the
+    /// [`crate::accuracy::budget`] planner inverts the propagation
+    /// model (anchored on the best-accuracy Allreduce schedule the
+    /// topology supports, split across [`CommBuilder::iterations`]) to
+    /// derive the per-call compressor bound, and every subsequent
+    /// dispatch enforces the budget: the tuner vetoes non-compliant
+    /// algorithms and forced hints are validated against the plan.
+    pub fn accuracy_target(mut self, target: AccuracyTarget) -> Self {
+        self.accuracy_target = Some(target);
+        self
+    }
+
+    /// Number of dependent collective calls the accuracy target is
+    /// split across (DDP steps, stacking batches). Default 1.
+    pub fn iterations(mut self, iters: usize) -> Self {
+        self.iterations = iters;
         self
     }
 
@@ -69,12 +100,39 @@ impl CommBuilder {
         self
     }
 
-    /// Build the communicator.
+    /// Build the communicator. With an accuracy target set, this is
+    /// where the budget planner runs: a fixed-rate policy is rejected
+    /// outright (its error is unbounded — the hazard the planner
+    /// exists to refuse), an uncompressed policy trivially satisfies
+    /// any target, and the error-bounded policy gets its per-call `eb`
+    /// derived from the target.
     pub fn build(self) -> Result<Communicator> {
         let topo = Topology::new(self.ranks, self.gpus_per_node)?;
+        let mut plan: Option<BudgetPlan> = None;
+        if let Some(target) = self.accuracy_target {
+            match self.policy.compression {
+                CompressionMode::None => {} // lossless: target trivially met
+                CompressionMode::FixedRate | CompressionMode::ErrorBounded => {
+                    if self.error_bound.is_some() {
+                        return Err(Error::config(
+                            "set either .error_bound() or .accuracy_target(), not both",
+                        ));
+                    }
+                    plan = Some(plan_auto(
+                        target,
+                        self.iterations,
+                        &topo,
+                        self.policy.compression,
+                    )?);
+                }
+            }
+        }
         let mut spec = ClusterSpec::with_topology(topo, self.policy);
         if let Some(eb) = self.error_bound {
             spec.error_bound = eb;
+        }
+        if let Some(p) = &plan {
+            spec.error_bound = p.eb;
         }
         if let Some(p) = self.profile {
             spec.profile = p;
@@ -82,6 +140,7 @@ impl CommBuilder {
         Ok(Communicator {
             spec,
             tuner: self.tuner.unwrap_or_default(),
+            plan,
         })
     }
 }
@@ -97,6 +156,11 @@ pub struct CollectiveReport {
     /// Whether the [`Tuner`] chose the algorithm (`AlgoHint::Auto`) as
     /// opposed to a forced hint.
     pub auto_tuned: bool,
+    /// Accuracy telemetry: predicted worst-case bound vs observed max
+    /// deviation on a deterministic element sample. `Some` only for
+    /// compressed collectives over real payloads (see
+    /// [`crate::accuracy::telemetry`]).
+    pub accuracy: Option<AccuracyReport>,
     /// The underlying run report.
     pub report: RunReport,
 }
@@ -115,6 +179,7 @@ impl std::ops::Deref for CollectiveReport {
 pub struct Communicator {
     spec: ClusterSpec,
     tuner: Tuner,
+    plan: Option<BudgetPlan>,
 }
 
 impl Communicator {
@@ -123,12 +188,19 @@ impl Communicator {
         CommBuilder::new(ranks)
     }
 
-    /// Wrap an existing [`ClusterSpec`] (default tuner).
+    /// Wrap an existing [`ClusterSpec`] (default tuner, no budget).
     pub fn from_spec(spec: ClusterSpec) -> Self {
         Communicator {
             spec,
             tuner: Tuner::default(),
+            plan: None,
         }
+    }
+
+    /// The active error-budget plan, if the communicator was built with
+    /// [`CommBuilder::accuracy_target`] under a compressed policy.
+    pub fn budget_plan(&self) -> Option<&BudgetPlan> {
+        self.plan.as_ref()
     }
 
     /// Communicator size.
@@ -229,28 +301,84 @@ impl Communicator {
                         AlgoRegistry::supported(op)
                     )));
                 }
+                // A forced hint bypasses the tuner, not the budget: an
+                // algorithm whose stage count blows the planned bound
+                // is rejected instead of silently missing the target.
+                if let Some(plan) = &self.plan {
+                    if !complies(plan, op, algo, &self.spec.topo, spec.root) {
+                        return Err(Error::budget(format!(
+                            "forced {algo:?} rejected by the accuracy budget: its worst-case \
+                             error exceeds the per-call bound {:.3e} (planned eb {:.3e})",
+                            plan.per_call_abs, plan.eb
+                        )));
+                    }
+                }
                 (algo, false)
             }
-            AlgoHint::Auto => (
-                self.tuner
-                    .select_with_topology(op, self.spec.policy, &self.spec.topo, msg_bytes),
-                true,
-            ),
+            AlgoHint::Auto => {
+                let algo = match &self.plan {
+                    Some(plan) => self.tuner.select_within_budget(
+                        op,
+                        self.spec.policy,
+                        &self.spec.topo,
+                        msg_bytes,
+                        spec.root,
+                        plan,
+                    )?,
+                    None => self.tuner.select_with_topology(
+                        op,
+                        self.spec.policy,
+                        &self.spec.topo,
+                        msg_bytes,
+                    ),
+                };
+                (algo, true)
+            }
+        };
+        // Telemetry probe: sample the exact reference before the inputs
+        // are consumed (compressed collectives on real payloads only).
+        let probe = if self.spec.policy.compression != CompressionMode::None {
+            ErrorProbe::prepare(op, &inputs, spec.root)
+        } else {
+            None
         };
         let program = AlgoRegistry::resolve(op, algo, total_elems, spec.root)?;
         let mut report = run_collective(&self.spec, inputs, &*program)?;
-        // Record the dispatch decision in the per-rank counters so
-        // tests (and reports) can assert on it.
+        let accuracy = probe
+            .and_then(|p| p.observe(&report.outputs))
+            .and_then(|obs| {
+                predict_worst(
+                    op,
+                    algo,
+                    &self.spec.topo,
+                    spec.root,
+                    self.spec.policy.compression,
+                    self.spec.error_bound,
+                )
+                .map(|prediction| AccuracyReport {
+                    prediction,
+                    observed_max_err: obs.observed_max_err,
+                    samples: obs.samples,
+                    fp_slack: obs.fp_slack,
+                })
+            });
+        // Record the dispatch decision (and the telemetry record) in
+        // the per-rank counters so tests (and reports) can assert on it.
         for c in report.counters.iter_mut() {
             c.algo_selected = Some(algo);
             if auto_tuned {
                 c.tuner_decisions += 1;
+            }
+            if let Some(a) = &accuracy {
+                c.predicted_err_bound = a.prediction.bound();
+                c.observed_max_err = Some(a.observed_max_err);
             }
         }
         Ok(CollectiveReport {
             op,
             algo,
             auto_tuned,
+            accuracy,
             report,
         })
     }
@@ -398,6 +526,67 @@ mod tests {
         for r in 0..n {
             assert_eq!(out.outputs[r].as_real(), &full[chunks.range(r)]);
         }
+    }
+
+    #[test]
+    fn accuracy_target_plans_the_error_bound() {
+        use crate::accuracy::AccuracyTarget;
+        let comm = Communicator::builder(8)
+            .accuracy_target(AccuracyTarget::AbsError(1e-3))
+            .build()
+            .unwrap();
+        let plan = comm.budget_plan().expect("compressed policy must plan");
+        // 2 nodes → hierarchical anchor, one internode exchange: m = 1.
+        assert_eq!(plan.amplification, 1.0);
+        assert!((comm.cluster().error_bound - 1e-3).abs() < 1e-15);
+        // Both knobs at once is a config error.
+        assert!(Communicator::builder(8)
+            .error_bound(1e-4)
+            .accuracy_target(AccuracyTarget::AbsError(1e-3))
+            .build()
+            .is_err());
+        // Fixed-rate policy: the planner rejects the unbounded hazard.
+        assert!(Communicator::builder(8)
+            .policy(ExecPolicy::cprp2p())
+            .accuracy_target(AccuracyTarget::AbsError(1e-3))
+            .build()
+            .is_err());
+        // Uncompressed policy: trivially met, no plan, no veto.
+        let nc = Communicator::builder(8)
+            .policy(ExecPolicy::nccl())
+            .accuracy_target(AccuracyTarget::AbsError(1e-3))
+            .build()
+            .unwrap();
+        assert!(nc.budget_plan().is_none());
+    }
+
+    #[test]
+    fn telemetry_attached_for_compressed_real_runs() {
+        let comm = Communicator::builder(4).error_bound(1e-3).build().unwrap();
+        let out = comm
+            .allreduce(real_inputs(4, 256, 9), &CollectiveSpec::auto())
+            .unwrap();
+        let acc = out
+            .accuracy
+            .expect("telemetry must run on real compressed payloads");
+        assert_eq!(acc.within_bound(), Some(true), "observed {acc:?}");
+        assert!(acc.samples > 0);
+        for c in &out.counters {
+            assert_eq!(c.observed_max_err, Some(acc.observed_max_err));
+            assert!(c.predicted_err_bound.is_some());
+        }
+        // Virtual payloads: no telemetry (nothing real to compare).
+        let virt: Vec<DeviceBuf> = (0..4).map(|_| DeviceBuf::Virtual(256)).collect();
+        let vr = comm.allreduce(virt, &CollectiveSpec::auto()).unwrap();
+        assert!(vr.accuracy.is_none());
+        assert!(vr.counters[0].observed_max_err.is_none());
+        // Uncompressed policies: no telemetry either.
+        let nc = Communicator::builder(4).policy(ExecPolicy::nccl()).build().unwrap();
+        assert!(nc
+            .allreduce(real_inputs(4, 64, 9), &CollectiveSpec::auto())
+            .unwrap()
+            .accuracy
+            .is_none());
     }
 
     #[test]

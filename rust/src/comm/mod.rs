@@ -32,9 +32,20 @@
 //!   internals — no call site outside this module and `collectives`
 //!   invokes them directly.
 //!
+//! **Accuracy as a selection axis.** A communicator built with
+//! [`CommBuilder::accuracy_target`] carries a
+//! [`crate::accuracy::BudgetPlan`]: the planner inverts the
+//! error-propagation model to derive the per-call compressor bound,
+//! [`Tuner::select_within_budget`] vetoes any algorithm whose stage
+//! count would blow the budget (falling back to a compliant one), and
+//! forced hints are validated against the plan. Each compressed
+//! dispatch over real payloads additionally records predicted-vs-
+//! observed error telemetry ([`CollectiveReport`]`::accuracy`).
+//!
 //! Every dispatch is recorded in the per-rank
 //! [`crate::coordinator::OpCounters`] (`algo_selected`,
-//! `tuner_decisions`) so tests can assert the tuner's decisions.
+//! `tuner_decisions`, `predicted_err_bound`, `observed_max_err`) so
+//! tests can assert the tuner's decisions and the error telemetry.
 
 pub mod communicator;
 pub mod registry;

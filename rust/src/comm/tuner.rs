@@ -42,9 +42,14 @@
 //! invariant), and falls back to Bruck for latency-bound uncompressed
 //! messages.
 
+use crate::accuracy::budget::{complies, BudgetPlan};
 use crate::collectives::{Algo, Op};
 use crate::coordinator::{CompressionMode, ExecPolicy};
+use crate::error::{Error, Result};
+use crate::gpu::GpuModel;
 use crate::net::Topology;
+
+use super::registry::AlgoRegistry;
 
 /// How a [`super::Communicator`] should choose the algorithm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,12 +118,18 @@ pub struct Tuner {
     pub latency_knee_bytes: usize,
 }
 
+/// Compress-kernel utilization fraction that defines the ring chunk
+/// knee: below it, a `D/N` chunk kernel is so dominated by its fixed
+/// work that the whole-vector log-step schedules win. Calibrated once
+/// against the shapes of Figs. 9–12 (≈1 MiB chunks on the A100 model);
+/// the byte value itself is now *derived* from the
+/// [`GpuModel`] cost curve via [`Tuner::for_gpu`], so recalibrating the
+/// kernel model moves the crossover with it.
+pub const RING_CHUNK_UTILIZATION: f64 = 0.005;
+
 impl Default for Tuner {
     fn default() -> Self {
-        Tuner {
-            chunk_knee_bytes: 1 << 20,   // 1 MiB ring chunks
-            latency_knee_bytes: 256 << 10, // 256 KiB per log-step
-        }
+        Self::for_gpu(&GpuModel::a100())
     }
 }
 
@@ -127,11 +138,26 @@ fn ceil_log2(n: usize) -> usize {
 }
 
 impl Tuner {
-    /// A tuner with explicit knees (what-if studies and tests).
+    /// A tuner with explicit knees (what-if studies and tests). This is
+    /// the override constructor; [`Tuner::for_gpu`] derives the chunk
+    /// knee from a device cost model instead.
     pub fn new(chunk_knee_bytes: usize, latency_knee_bytes: usize) -> Self {
         Tuner {
             chunk_knee_bytes,
             latency_knee_bytes,
+        }
+    }
+
+    /// A tuner calibrated from a [`GpuModel`]: the compressed-ring
+    /// chunk knee is the size at which the compression kernel reaches
+    /// [`RING_CHUNK_UTILIZATION`] of streaming throughput — the point
+    /// (on the same curve as
+    /// [`GpuModel::saturation_knee_bytes`]) where ring chunk kernels
+    /// stop being pure fixed-work floors.
+    pub fn for_gpu(gpu: &GpuModel) -> Self {
+        Tuner {
+            chunk_knee_bytes: gpu.compress.bytes_at_utilization(RING_CHUNK_UTILIZATION) as usize,
+            latency_knee_bytes: 256 << 10, // 256 KiB per log-step
         }
     }
 
@@ -218,6 +244,51 @@ impl Tuner {
         }
         self.select(op, policy, n, msg_bytes)
     }
+
+    /// Topology-aware selection under an accuracy budget (the
+    /// **accuracy veto**): the performance-preferred algorithm is taken
+    /// only if its worst-case predicted error fits the plan's per-call
+    /// budget; otherwise fall back through the remaining candidates in
+    /// descending performance preference and pick the first compliant
+    /// one. Accuracy is a selection axis alongside makespan — an
+    /// algorithm whose stage count blows the budget is never returned.
+    ///
+    /// Errors when *no* implemented algorithm can certify the budget
+    /// (e.g. Reduce_scatter's only algorithm pays `N−1` linear stages).
+    pub fn select_within_budget(
+        &self,
+        op: Op,
+        policy: ExecPolicy,
+        topo: &Topology,
+        msg_bytes: usize,
+        root: usize,
+        plan: &BudgetPlan,
+    ) -> Result<Algo> {
+        let preferred = self.select_with_topology(op, policy, topo, msg_bytes);
+        if complies(plan, op, preferred, topo, root) {
+            return Ok(preferred);
+        }
+        // Fallback order: fewest compression stages first (the veto
+        // exists precisely because fewer stages mean less error).
+        let candidates: &[Algo] = if op == Op::Allreduce {
+            &[Algo::Hierarchical, Algo::RecursiveDoubling, Algo::Ring]
+        } else {
+            AlgoRegistry::supported(op)
+        };
+        for &algo in candidates {
+            if algo != preferred
+                && AlgoRegistry::is_supported(op, algo)
+                && complies(plan, op, algo, topo, root)
+            {
+                return Ok(algo);
+            }
+        }
+        Err(Error::budget(format!(
+            "no {op:?} algorithm satisfies the accuracy budget \
+             (per-call |err| ≤ {:.3e} with planned eb {:.3e})",
+            plan.per_call_abs, plan.eb
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -231,10 +302,35 @@ mod tests {
     }
 
     #[test]
+    fn default_knee_is_derived_from_the_gpu_model() {
+        // ROADMAP item closed: the chunk knee comes from the cost
+        // model's utilization curve, not a hard-coded 1 MiB.
+        let t = Tuner::default();
+        let g = GpuModel::a100();
+        assert_eq!(
+            t.chunk_knee_bytes,
+            g.compress.bytes_at_utilization(RING_CHUNK_UTILIZATION) as usize
+        );
+        // Paper-calibrated ballpark: ~1 MiB ring chunks on the A100.
+        assert!(
+            ((1 << 20)..(2 << 20)).contains(&t.chunk_knee_bytes),
+            "knee {} out of the calibrated band",
+            t.chunk_knee_bytes
+        );
+        // A slower-launch GPU pushes the knee up; the explicit-override
+        // constructor still pins it exactly.
+        let mut slow = g;
+        slow.compress.launch *= 4.0;
+        assert!(Tuner::for_gpu(&slow).chunk_knee_bytes > t.chunk_knee_bytes);
+        assert_eq!(Tuner::new(123, 456).chunk_knee_bytes, 123);
+    }
+
+    #[test]
     fn crossover_moves_with_message_size() {
         let t = Tuner::default();
         let p = ExecPolicy::gzccl();
-        // 32 ranks: crossover at 32 MiB total (1 MiB chunks).
+        // 32 ranks: crossover at ≈32 MiB total (~1 MiB model-derived
+        // chunks).
         assert_eq!(t.select(Op::Allreduce, p, 32, MIB), Algo::RecursiveDoubling);
         assert_eq!(t.select(Op::Allreduce, p, 32, 64 * MIB), Algo::Ring);
         assert_eq!(t.select(Op::Allreduce, p, 32, 256 * MIB), Algo::Ring);
@@ -349,6 +445,44 @@ mod tests {
         assert_eq!(t.select(Op::Scatter, ExecPolicy::gzccl(), 64, MIB), Algo::Binomial);
         assert_eq!(t.select(Op::Bcast, ExecPolicy::cray_mpi(), 64, MIB), Algo::Binomial);
         assert_eq!(t.select(Op::ReduceScatter, ExecPolicy::gzccl(), 64, MIB), Algo::Ring);
+    }
+
+    #[test]
+    fn accuracy_veto_overrides_performance_preference() {
+        use crate::accuracy::{plan_auto, AccuracyTarget};
+        let t = Tuner::default();
+        let p = ExecPolicy::gzccl();
+        let layout = topo(32, 4);
+        // Budget anchored on the hierarchical schedule (8 nodes → m=7).
+        let plan = plan_auto(
+            AccuracyTarget::AbsError(1e-3),
+            1,
+            &layout,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        // 256 MiB: performance alone says flat ring (8 MiB saturated
+        // chunks)...
+        assert_eq!(
+            t.select_with_topology(Op::Allreduce, p, &layout, 256 * MIB),
+            Algo::Ring
+        );
+        // ...but ring's 32 linear error stages blow the budget; the
+        // veto rejects it and lands on the compliant hierarchical.
+        assert_eq!(
+            t.select_within_budget(Op::Allreduce, p, &layout, 256 * MIB, 0, &plan)
+                .unwrap(),
+            Algo::Hierarchical
+        );
+        // An op whose only algorithm cannot certify the budget errors.
+        assert!(t
+            .select_within_budget(Op::ReduceScatter, p, &layout, MIB, 0, &plan)
+            .is_err());
+        // Compress-once ops sail through.
+        assert_eq!(
+            t.select_within_budget(Op::Bcast, p, &layout, MIB, 0, &plan).unwrap(),
+            Algo::Binomial
+        );
     }
 
     #[test]

@@ -160,6 +160,15 @@ pub struct OpCounters {
     /// Number of those dispatches decided by the
     /// [`crate::comm::Tuner`] (`AlgoHint::Auto`) rather than forced.
     pub tuner_decisions: usize,
+    /// Predicted worst-case pointwise error bound of the dispatched
+    /// collective (`None` when no accuracy telemetry ran — virtual
+    /// payloads, uncompressed policy, direct free-function invocation —
+    /// or when the compressor is not error-bounded).
+    pub predicted_err_bound: Option<f64>,
+    /// Collective-wide observed max deviation against the exact
+    /// reference sample (see [`crate::accuracy::telemetry`]); recorded
+    /// on every rank of the dispatch that produced it.
+    pub observed_max_err: Option<f64>,
 }
 
 /// Per-rank execution context handed to a collective algorithm.

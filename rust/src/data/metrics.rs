@@ -1,10 +1,31 @@
-//! Accuracy metrics: PSNR and NRMSE, as reported in Table 1 / Fig. 13.
+//! Accuracy metrics: PSNR, NRMSE and L∞, as reported in Table 1 /
+//! Fig. 13.
+//!
+//! **NaN policy.** A single NaN used to poison comparisons *silently*
+//! (`value_range` skipped NaNs, `rmse` propagated them through
+//! arithmetic). The plain functions now follow one documented rule:
+//! **any NaN anywhere in the inputs makes the result NaN** — loudly
+//! wrong instead of quietly wrong. The `try_*` variants return a typed
+//! [`Error::Metrics`] instead, for callers (telemetry, planners) that
+//! must distinguish "bad data" from "bad score".
+
+use crate::error::{Error, Result};
+
+fn has_nan(a: &[f32]) -> bool {
+    a.iter().any(|x| x.is_nan())
+}
 
 /// Root-mean-square error between two equal-length slices.
+///
+/// NaN in either input (or a matching ∞ pair, whose difference is
+/// undefined) yields NaN. Empty inputs yield 0.
 pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len(), "rmse: length mismatch");
     if a.is_empty() {
         return 0.0;
+    }
+    if has_nan(a) || has_nan(b) {
+        return f64::NAN;
     }
     let sum: f64 = a
         .iter()
@@ -17,8 +38,25 @@ pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
     (sum / a.len() as f64).sqrt()
 }
 
-/// Value range (max − min) of a slice.
+/// Maximum absolute pointwise deviation (L∞) between two equal-length
+/// slices. NaN in either input yields NaN; empty inputs yield 0.
+pub fn linf(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "linf: length mismatch");
+    if has_nan(a) || has_nan(b) {
+        return f64::NAN;
+    }
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| ((*x - *y) as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Value range (max − min) of a slice. Any NaN yields NaN (the old
+/// behaviour silently skipped NaNs); an empty slice yields 0.
 pub fn value_range(a: &[f32]) -> f64 {
+    if has_nan(a) {
+        return f64::NAN;
+    }
     let mut lo = f64::INFINITY;
     let mut hi = f64::NEG_INFINITY;
     for &x in a {
@@ -39,10 +77,14 @@ pub fn value_range(a: &[f32]) -> f64 {
 
 /// Peak signal-to-noise ratio in dB, with the peak taken as the value
 /// range of the reference data (the convention used by SZ/cuSZp and the
-/// paper's Table 1).
+/// paper's Table 1). NaN inputs yield NaN; an exact match yields +∞; a
+/// zero-range reference with nonzero error yields −∞.
 pub fn psnr(reference: &[f32], reconstructed: &[f32]) -> f64 {
     let e = rmse(reference, reconstructed);
     let range = value_range(reference);
+    if e.is_nan() || range.is_nan() {
+        return f64::NAN;
+    }
     if e == 0.0 {
         return f64::INFINITY;
     }
@@ -52,13 +94,55 @@ pub fn psnr(reference: &[f32], reconstructed: &[f32]) -> f64 {
     20.0 * (range / e).log10()
 }
 
-/// Normalized root-mean-square error: RMSE / value range.
+/// Normalized root-mean-square error: RMSE / value range. NaN inputs
+/// yield NaN; a zero-range reference yields 0 (the historical
+/// convention).
 pub fn nrmse(reference: &[f32], reconstructed: &[f32]) -> f64 {
     let range = value_range(reference);
+    if range.is_nan() {
+        return f64::NAN;
+    }
     if range == 0.0 {
         return 0.0;
     }
     rmse(reference, reconstructed) / range
+}
+
+fn check_pair(a: &[f32], b: &[f32], what: &str) -> Result<()> {
+    if a.len() != b.len() {
+        return Err(Error::metrics(format!(
+            "{what}: length mismatch ({} vs {})",
+            a.len(),
+            b.len()
+        )));
+    }
+    if has_nan(a) || has_nan(b) {
+        return Err(Error::metrics(format!("{what}: NaN in input")));
+    }
+    Ok(())
+}
+
+/// Checked [`rmse`]: typed error on length mismatch or NaN input.
+pub fn try_rmse(a: &[f32], b: &[f32]) -> Result<f64> {
+    check_pair(a, b, "rmse")?;
+    Ok(rmse(a, b))
+}
+
+/// Checked [`linf`]: typed error on length mismatch or NaN input.
+pub fn try_linf(a: &[f32], b: &[f32]) -> Result<f64> {
+    check_pair(a, b, "linf")?;
+    Ok(linf(a, b))
+}
+
+/// Checked [`psnr`]: typed error on length mismatch, NaN input, or a
+/// zero-range reference (for which PSNR is meaningless). An exact match
+/// still yields +∞.
+pub fn try_psnr(reference: &[f32], reconstructed: &[f32]) -> Result<f64> {
+    check_pair(reference, reconstructed, "psnr")?;
+    if value_range(reference) == 0.0 {
+        return Err(Error::metrics("psnr: zero-range reference"));
+    }
+    Ok(psnr(reference, reconstructed))
 }
 
 #[cfg(test)]
@@ -69,6 +153,7 @@ mod tests {
     fn identical_data_is_perfect() {
         let a = vec![1.0f32, 2.0, 3.0];
         assert_eq!(rmse(&a, &a), 0.0);
+        assert_eq!(linf(&a, &a), 0.0);
         assert!(psnr(&a, &a).is_infinite());
         assert_eq!(nrmse(&a, &a), 0.0);
     }
@@ -79,6 +164,7 @@ mod tests {
         let b = vec![3.0f32, 4.0];
         // sqrt((9+16)/2) = sqrt(12.5)
         assert!((rmse(&a, &b) - 12.5f64.sqrt()).abs() < 1e-12);
+        assert_eq!(linf(&a, &b), 4.0);
     }
 
     #[test]
@@ -114,5 +200,48 @@ mod tests {
         assert_eq!(value_range(&[]), 0.0);
         assert_eq!(value_range(&[5.0; 10]), 0.0);
         assert_eq!(value_range(&[-1.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn nan_makes_every_metric_nan_not_silent() {
+        let clean = vec![1.0f32, 2.0, 3.0];
+        let dirty = vec![1.0f32, f32::NAN, 3.0];
+        // Regression: value_range used to skip the NaN and report 2.0.
+        assert!(value_range(&dirty).is_nan());
+        assert!(rmse(&clean, &dirty).is_nan());
+        assert!(rmse(&dirty, &clean).is_nan());
+        assert!(linf(&clean, &dirty).is_nan());
+        assert!(psnr(&dirty, &clean).is_nan());
+        assert!(psnr(&clean, &dirty).is_nan());
+        assert!(nrmse(&dirty, &clean).is_nan());
+    }
+
+    #[test]
+    fn empty_and_zero_range_edges() {
+        assert_eq!(rmse(&[], &[]), 0.0);
+        assert_eq!(linf(&[], &[]), 0.0);
+        // Zero-range reference: -inf PSNR for nonzero error, 0 NRMSE.
+        let flat = vec![2.0f32; 8];
+        let off: Vec<f32> = flat.iter().map(|x| x + 0.5).collect();
+        assert_eq!(psnr(&flat, &off), f64::NEG_INFINITY);
+        assert_eq!(nrmse(&flat, &off), 0.0);
+    }
+
+    #[test]
+    fn try_variants_return_typed_errors() {
+        let clean = vec![1.0f32, 2.0];
+        let dirty = vec![1.0f32, f32::NAN];
+        let short = vec![1.0f32];
+        for err in [
+            try_rmse(&clean, &dirty).unwrap_err(),
+            try_linf(&dirty, &clean).unwrap_err(),
+            try_psnr(&clean, &dirty).unwrap_err(),
+            try_rmse(&clean, &short).unwrap_err(),
+        ] {
+            assert!(matches!(err, crate::error::Error::Metrics(_)), "{err}");
+        }
+        assert!(try_psnr(&[3.0, 3.0], &[3.0, 3.1]).is_err(), "zero range");
+        assert!((try_rmse(&clean, &clean).unwrap()).abs() < 1e-12);
+        assert!(try_psnr(&clean, &clean).unwrap().is_infinite());
     }
 }

@@ -24,6 +24,17 @@ pub enum Error {
     /// Runtime errors (artifact missing, execution failures).
     Runtime(String),
 
+    /// Metric computation errors (NaN inputs, length mismatch,
+    /// zero-range reference).
+    Metrics(String),
+
+    /// Accuracy-budget rejections: the planner or the dispatch-time
+    /// budget check refused an algorithm/compressor whose worst-case
+    /// error cannot certify the requested target. Distinct from
+    /// [`Error::Collective`] so callers can tell an *intentional*
+    /// rejection from a genuine failure.
+    Budget(String),
+
     /// I/O errors (artifact files, dataset dumps).
     Io(std::io::Error),
 }
@@ -36,6 +47,8 @@ impl fmt::Display for Error {
             Error::Collective(m) => write!(f, "collective error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Metrics(m) => write!(f, "metrics error: {m}"),
+            Error::Budget(m) => write!(f, "accuracy-budget error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -80,6 +93,14 @@ impl Error {
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
     }
+    /// Shorthand constructor for metrics errors.
+    pub fn metrics(msg: impl Into<String>) -> Self {
+        Error::Metrics(msg.into())
+    }
+    /// Shorthand constructor for accuracy-budget rejections.
+    pub fn budget(msg: impl Into<String>) -> Self {
+        Error::Budget(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +113,8 @@ mod tests {
         assert_eq!(e.to_string(), "config error: missing key");
         let e = Error::compress("bad magic");
         assert!(e.to_string().contains("compression"));
+        let e = Error::budget("ring over budget");
+        assert!(e.to_string().starts_with("accuracy-budget error:"));
     }
 
     #[test]

@@ -52,6 +52,17 @@ impl KernelModel {
             + (total_bytes as f64 + self.n0) / self.beta
     }
 
+    /// Input size (bytes) at which the kernel reaches utilization `u`
+    /// (`0 < u < 1`) — the inverse of [`KernelModel::utilization`]:
+    /// `n = u/(1−u) · (launch·β + n0)`. `u = 0.5` reproduces
+    /// [`GpuModel::saturation_knee_bytes`]; the
+    /// [`crate::comm::Tuner`] derives its compressed-ring chunk knee
+    /// from this curve instead of a hard-coded constant.
+    pub fn bytes_at_utilization(&self, u: f64) -> f64 {
+        assert!(u > 0.0 && u < 1.0, "utilization must be in (0,1)");
+        u / (1.0 - u) * (self.launch * self.beta + self.n0)
+    }
+
     /// Effective utilization of a kernel at size `bytes`: ratio of
     /// streaming-rate time to actual time. 1.0 = fully saturated.
     pub fn utilization(&self, bytes: usize) -> f64 {
@@ -126,7 +137,7 @@ impl GpuModel {
     /// this regime.
     pub fn saturation_knee_bytes(&self) -> f64 {
         // Utilization 0.5 ⇒ n = launch·β + n0.
-        self.compress.launch * self.compress.beta + self.compress.n0
+        self.compress.bytes_at_utilization(0.5)
     }
 }
 
@@ -204,6 +215,18 @@ mod tests {
     fn multistream_zero_kernels_is_free() {
         let m = GpuModel::a100().compress;
         assert_eq!(m.time_multistream(0, 0, 2e-6), 0.0);
+    }
+
+    #[test]
+    fn bytes_at_utilization_inverts_utilization() {
+        let m = GpuModel::a100().compress;
+        for u in [0.005, 0.1, 0.5, 0.9] {
+            let n = m.bytes_at_utilization(u);
+            assert!((m.utilization(n as usize) - u).abs() < 1e-3, "u {u}");
+        }
+        // The 50% point is exactly the saturation knee.
+        let g = GpuModel::a100();
+        assert!((g.compress.bytes_at_utilization(0.5) - g.saturation_knee_bytes()).abs() < 1e-6);
     }
 
     #[test]

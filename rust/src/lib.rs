@@ -21,6 +21,7 @@
 //! See `DESIGN.md` for the system inventory, the three-layer stack and
 //! the communicator API.
 
+pub mod accuracy;
 pub mod apps;
 pub mod bench_support;
 pub mod collectives;

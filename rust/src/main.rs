@@ -10,7 +10,7 @@
 //! ```
 
 use gzccl::apps::ddp::{train_ddp, DdpConfig};
-use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingVariant};
+use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingTarget, StackingVariant};
 use gzccl::collectives::Algo;
 use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator};
 use gzccl::config::ClusterConfig;
@@ -81,10 +81,33 @@ USAGE:
   gzccl experiment  <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|
                      table1|table2|fig13|all> [--fast] [--gpus-per-node G]
   gzccl stack       [--ranks N] [--eb X] [--gpus-per-node G]
+                    [--accuracy-target T]   T: absolute L-inf (e.g. 1e-3)
+                                            or a PSNR floor (e.g. 55db);
+                                            the planner derives each
+                                            variant's eb and rejects
+                                            variants it cannot certify
   gzccl train       [--ranks N] [--steps N] [--no-compress]
+                    [--accuracy-target X]   X: absolute L-inf budget on
+                                            the summed gradients across
+                                            all steps
   gzccl characterize
   gzccl help
 ";
+
+/// Parse a stacking accuracy target: `"55db"` → PSNR floor, plain
+/// float → absolute L∞ bound.
+fn parse_accuracy_target(s: &str) -> Result<StackingTarget> {
+    let lower = s.to_ascii_lowercase();
+    if let Some(db) = lower.strip_suffix("db") {
+        Ok(StackingTarget::PsnrDb(db.parse().map_err(|_| {
+            Error::config(format!("bad --accuracy-target `{s}`"))
+        })?))
+    } else {
+        Ok(StackingTarget::Abs(s.parse().map_err(|_| {
+            Error::config(format!("bad --accuracy-target `{s}`"))
+        })?))
+    }
+}
 
 fn main() {
     if let Err(e) = real_main() {
@@ -240,11 +263,16 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
         .transpose()?
         .unwrap_or(4);
+    let accuracy_target = args
+        .take("--accuracy-target")
+        .map(|s| parse_accuracy_target(&s))
+        .transpose()?;
     let engine = Engine::discover().ok();
     let cfg = StackingConfig {
         ranks,
         gpus_per_node,
         error_bound: eb,
+        accuracy_target,
         ..Default::default()
     };
     for v in [
@@ -253,16 +281,41 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         StackingVariant::GzcclRing,
         StackingVariant::GzcclReDoub,
         StackingVariant::GzcclHier,
+        StackingVariant::Cprp2p,
     ] {
-        let out = run_stacking(&cfg, v, engine.as_ref())?;
-        println!(
-            "{:16} time {:>10} psnr {:6.2} dB nrmse {:.2e} | {}",
-            v.name(),
-            gzccl::metrics::table::fmt_time(out.makespan),
-            out.psnr,
-            out.nrmse,
-            out.breakdown.percent_string()
-        );
+        match run_stacking(&cfg, v, engine.as_ref()) {
+            Ok(out) => {
+                let planned = match out.planned_eb {
+                    Some(eb) => format!(" planned-eb {eb:.2e}"),
+                    None => String::new(),
+                };
+                let telemetry = match out.accuracy {
+                    Some(a) => format!(
+                        " | err obs {:.2e} pred {}",
+                        a.observed_max_err,
+                        match a.prediction.bound() {
+                            Some(b) => format!("<={b:.2e}"),
+                            None => "unbounded".into(),
+                        }
+                    ),
+                    None => String::new(),
+                };
+                println!(
+                    "{:16} time {:>10} psnr {:6.2} dB nrmse {:.2e}{planned} | {}{telemetry}",
+                    v.name(),
+                    gzccl::metrics::table::fmt_time(out.makespan),
+                    out.psnr,
+                    out.nrmse,
+                    out.breakdown.percent_string()
+                );
+            }
+            // Only genuine planner rejections are reported-and-skipped;
+            // any other failure still aborts the command.
+            Err(Error::Budget(reason)) => {
+                println!("{:16} rejected by the accuracy planner: {reason}", v.name());
+            }
+            Err(e) => return Err(e),
+        }
     }
     Ok(())
 }
@@ -279,14 +332,27 @@ fn cmd_train(mut args: Args) -> Result<()> {
         .transpose()?
         .unwrap_or(100);
     let compress = !args.take_bool("--no-compress");
+    let accuracy_target = args
+        .take("--accuracy-target")
+        .map(|s| s.parse().map_err(|_| Error::config("bad --accuracy-target")))
+        .transpose()?;
     let engine = Engine::discover()?;
     let cfg = DdpConfig {
         ranks,
         steps,
         compress,
+        accuracy_target,
         ..Default::default()
     };
     let out = train_ddp(&cfg, &engine)?;
+    if let Some(eb) = out.planned_eb {
+        println!(
+            "accuracy budget: planned eb {eb:.3e} | per-step bound {:.3e} | observed max {:.3e} | violations {}",
+            out.predicted_step_err.unwrap_or(f64::NAN),
+            out.observed_step_err.unwrap_or(f64::NAN),
+            out.budget_violations
+        );
+    }
     for (i, loss) in out.loss_curve.iter().enumerate() {
         if i % 10 == 0 || i + 1 == out.loss_curve.len() {
             println!("step {i:5}  loss {loss:.5}");

@@ -1,0 +1,198 @@
+//! Accuracy subsystem end-to-end: the propagation model's predictions
+//! hold on real runs across algorithms / rank counts / error bounds,
+//! the fixed-rate hazard is demonstrated and rejected, and the tuner's
+//! accuracy veto changes real dispatch decisions.
+
+use gzccl::accuracy::{plan_auto, AccuracyTarget, ErrorPrediction};
+use gzccl::collectives::Algo;
+use gzccl::comm::{CollectiveSpec, Communicator};
+use gzccl::coordinator::{DeviceBuf, ExecPolicy};
+use gzccl::testkit::{forall, Cases, Pcg32};
+
+const MIB: usize = 1 << 20;
+
+fn real_inputs(n: usize, d: usize, seed: u64, scale: f32) -> Vec<DeviceBuf> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Pcg32::new(seed, r as u64);
+            DeviceBuf::Real(rng.uniform_vec(d, -scale, scale))
+        })
+        .collect()
+}
+
+/// The satellite property: observed stacking error stays within the
+/// predicted budget across algorithms (ring, gZ-ReDoub, hierarchical),
+/// non-power-of-two rank counts, node shapes, and several error bounds.
+#[test]
+fn prop_observed_error_within_predicted_bound() {
+    let algos = [Algo::Ring, Algo::RecursiveDoubling, Algo::Hierarchical];
+    forall(
+        Cases::n(18),
+        |rng| {
+            let n = rng.range_usize(2, 13); // includes non-pow2
+            let g = rng.range_usize(1, 4);
+            let d = rng.range_usize(32, 200);
+            let eb = *rng.choose(&[1e-2f64, 1e-3, 1e-4]);
+            let algo = *rng.choose(&algos);
+            (n, g, d, eb, algo, rng.next_u64())
+        },
+        |&(n, g, d, eb, algo, seed)| {
+            let comm = Communicator::builder(n)
+                .gpus_per_node(g)
+                .policy(ExecPolicy::gzccl())
+                .error_bound(eb)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let report = comm
+                .allreduce(real_inputs(n, d, seed, 1.0), &CollectiveSpec::forced(algo))
+                .map_err(|e| e.to_string())?;
+            let acc = report
+                .accuracy
+                .ok_or("telemetry missing on a real compressed run")?;
+            match acc.prediction {
+                ErrorPrediction::Bounded(b) => {
+                    if acc.within_bound() != Some(true) {
+                        return Err(format!(
+                            "observed {:.3e} exceeds predicted {b:.3e} (n={n} g={g} {algo:?} eb={eb:e})",
+                            acc.observed_max_err
+                        ));
+                    }
+                }
+                ErrorPrediction::Exact => {
+                    // Hierarchical on a single node never compresses.
+                    if acc.observed_max_err > acc.fp_slack {
+                        return Err(format!(
+                            "exact path deviated by {:.3e}",
+                            acc.observed_max_err
+                        ));
+                    }
+                }
+                ErrorPrediction::Unbounded => {
+                    return Err("error-bounded policy predicted unbounded".into())
+                }
+            }
+            // The record is mirrored into every rank's counters.
+            for c in report.counters.iter() {
+                if c.observed_max_err != Some(acc.observed_max_err) {
+                    return Err("counters out of sync with telemetry".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fixed-rate counterexample: on large-magnitude data the CPRP2P
+/// compressor's observed error dwarfs every bound the error-bounded
+/// path certifies — the unbounded hazard the planner must reject.
+#[test]
+fn fixed_rate_counterexample_shows_the_unbounded_hazard() {
+    let n = 8;
+    let comm = Communicator::builder(n)
+        .policy(ExecPolicy::cprp2p())
+        .build()
+        .unwrap();
+    // Magnitudes ~1000: fixed-rate error scales along (≈ blockmax/2^7
+    // at 8 bits/value), unlike the absolute error-bounded guarantee.
+    let report = comm
+        .allreduce(real_inputs(n, 256, 77, 1000.0), &CollectiveSpec::forced(Algo::Ring))
+        .unwrap();
+    let acc = report.accuracy.expect("telemetry observes fixed-rate runs too");
+    assert_eq!(acc.prediction, ErrorPrediction::Unbounded);
+    assert_eq!(acc.within_bound(), None, "no bound exists to hold");
+    assert!(
+        acc.observed_max_err > 0.1,
+        "observed {:.3e} should dwarf any error-bounded budget",
+        acc.observed_max_err
+    );
+    // And the planner refuses to plan around it.
+    let topo = gzccl::net::Topology::new(n, 4).unwrap();
+    assert!(plan_auto(
+        AccuracyTarget::AbsError(1e-3),
+        1,
+        &topo,
+        gzccl::coordinator::CompressionMode::FixedRate,
+    )
+    .is_err());
+    assert!(Communicator::builder(n)
+        .policy(ExecPolicy::cprp2p())
+        .accuracy_target(AccuracyTarget::AbsError(1e-3))
+        .build()
+        .is_err());
+}
+
+/// The ISSUE acceptance criterion: under an accuracy budget the tuner
+/// demonstrably rejects the algorithm whose stage count would exceed
+/// the budget (the flat ring it would otherwise prefer at this message
+/// size) and selects a compliant one (hierarchical).
+#[test]
+fn acceptance_tuner_vetoes_over_budget_algorithm() {
+    let n = 32;
+    let msg = 256 * MIB; // 8 MiB saturated ring chunks → ring preferred
+    let virt = || -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(msg / 4)).collect() };
+
+    // Without a budget: performance alone picks the flat ring.
+    let free = Communicator::builder(n)
+        .gpus_per_node(4)
+        .policy(ExecPolicy::gzccl())
+        .build()
+        .unwrap();
+    let unbudgeted = free.allreduce(virt(), &CollectiveSpec::auto()).unwrap();
+    assert_eq!(unbudgeted.algo, Algo::Ring);
+
+    // With a budget: ring's 32 linear error stages blow the plan
+    // (anchored on hierarchical, 8 nodes → amplification 7), flat
+    // ReDoub's 31 doubling stages blow it too — the veto lands on the
+    // compliant hierarchical schedule.
+    let budgeted = Communicator::builder(n)
+        .gpus_per_node(4)
+        .policy(ExecPolicy::gzccl())
+        .accuracy_target(AccuracyTarget::AbsError(1e-3))
+        .build()
+        .unwrap();
+    let plan = *budgeted.budget_plan().unwrap();
+    assert_eq!(plan.amplification, 7.0);
+    let picked = budgeted.allreduce(virt(), &CollectiveSpec::auto()).unwrap();
+    assert_eq!(picked.algo, Algo::Hierarchical, "veto must reroute the dispatch");
+    assert!(picked.auto_tuned);
+
+    // Forcing the over-budget algorithm is rejected, the compliant one
+    // is allowed.
+    let err = budgeted
+        .allreduce(virt(), &CollectiveSpec::forced(Algo::Ring))
+        .unwrap_err();
+    assert!(
+        matches!(err, gzccl::error::Error::Budget(_)),
+        "rejection must be the typed budget error, got {err}"
+    );
+    assert!(err.to_string().contains("accuracy budget"), "{err}");
+    assert!(budgeted
+        .allreduce(virt(), &CollectiveSpec::forced(Algo::Hierarchical))
+        .is_ok());
+}
+
+/// End-to-end budget on real payloads: auto dispatch under a planned
+/// budget keeps the observed error inside the per-call bound.
+#[test]
+fn budgeted_dispatch_holds_on_real_payloads() {
+    let n = 12; // non-pow2, 3 nodes of 4
+    let target = 2e-3;
+    let comm = Communicator::builder(n)
+        .gpus_per_node(4)
+        .policy(ExecPolicy::gzccl())
+        .accuracy_target(AccuracyTarget::AbsError(target))
+        .build()
+        .unwrap();
+    let plan = *comm.budget_plan().unwrap();
+    let report = comm
+        .allreduce(real_inputs(n, 512, 5150, 1.0), &CollectiveSpec::auto())
+        .unwrap();
+    let acc = report.accuracy.unwrap();
+    assert_eq!(acc.within_bound(), Some(true), "{acc:?}");
+    assert!(
+        acc.observed_max_err <= plan.per_call_abs * 1.01,
+        "observed {:.3e} vs per-call budget {:.3e}",
+        acc.observed_max_err,
+        plan.per_call_abs
+    );
+}
