@@ -20,7 +20,16 @@ def load_rows(path):
         data = json.load(f)
     rows = {}
     for row in data.get("rows", []):
-        key = (row["algo"], row["ranks"], row["gpus_per_node"], row["size_mib"])
+        # `tiers` distinguishes the 3-tier node/rack sweep columns;
+        # pre-tiers artifacts default to the flat 2-tier label so a
+        # schema bump only orphans keys once.
+        key = (
+            row["algo"],
+            row["ranks"],
+            row["gpus_per_node"],
+            row.get("tiers", ""),
+            row["size_mib"],
+        )
         rows[key] = row
     return rows
 
@@ -50,7 +59,7 @@ def main():
         if old <= 0.0:
             continue
         delta = (new - old) / old
-        label = "algo={} ranks={} gpn={} size={}MiB".format(*key)
+        label = "algo={} ranks={} gpn={} tiers={} size={}MiB".format(*key)
         if delta > args.threshold:
             regressions.append((label, old, new, delta))
             print(

@@ -1,22 +1,31 @@
 //! Flat vs hierarchical Allreduce sweep.
 //!
 //! Sweeps rank counts and message sizes under the full gZCCL policy,
-//! comparing the flat ring, flat gZ-ReDoub and the two-level
-//! hierarchical schedule (4 GPUs per node), and emits the virtual
-//! makespans plus wall-clock regeneration stats as
-//! `BENCH_allreduce.json` in the working directory — the perf
-//! trajectory artifact CI archives per commit.
+//! comparing the flat ring, flat gZ-ReDoub and the hierarchical
+//! schedule — on the classic 2-tier layout (4 GPUs per node) *and* on
+//! a 3-tier node/rack layout whose oversubscribed rack uplinks the
+//! tier-aware fabric models. Emits the virtual makespans plus
+//! wall-clock regeneration stats as `BENCH_allreduce.json` in the
+//! working directory — the perf trajectory artifact CI archives per
+//! commit, with a `tiers` column so tier-depth regressions show up in
+//! the trend job.
 
 use gzccl::bench_support::bench;
 use gzccl::collectives::Algo;
 use gzccl::comm::{CollectiveSpec, Communicator};
 use gzccl::coordinator::{DeviceBuf, ExecPolicy};
 
-const GPUS_PER_NODE: usize = 4;
+fn tiers_label(widths: &[usize]) -> String {
+    widths
+        .iter()
+        .map(|w| w.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
 
-fn makespan(ranks: usize, bytes: usize, algo: Algo) -> f64 {
+fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> f64 {
     let comm = Communicator::builder(ranks)
-        .gpus_per_node(GPUS_PER_NODE)
+        .tiers(widths)
         .policy(ExecPolicy::gzccl())
         .error_bound(1e-4)
         .build()
@@ -29,7 +38,13 @@ fn makespan(ranks: usize, bytes: usize, algo: Algo) -> f64 {
 }
 
 fn main() {
-    let ranks_sweep = [32usize, 128];
+    // 2-tier sweeps (the PR 2 baseline shape) plus a 3-tier node/rack
+    // sweep: 128 ranks as 4 GPUs/node × 8 nodes/rack × 4 racks.
+    let layouts: [(usize, &[usize]); 3] = [
+        (32, &[4, 8]),
+        (128, &[4, 32]),
+        (128, &[4, 8, 4]),
+    ];
     let sizes_mb = [16usize, 64, 256];
     let algos = [
         ("ring", Algo::Ring),
@@ -38,21 +53,23 @@ fn main() {
     ];
 
     let mut rows = Vec::new();
-    for &ranks in &ranks_sweep {
+    for &(ranks, widths) in &layouts {
+        let label = tiers_label(widths);
         for &mb in &sizes_mb {
             for &(name, algo) in &algos {
-                let (virt_s, stats) = bench(2, || makespan(ranks, mb << 20, algo));
+                let (virt_s, stats) = bench(2, || makespan(ranks, widths, mb << 20, algo));
                 println!(
-                    "{name:>7} | {ranks:>4} ranks | {mb:>4} MiB | virtual {:.3} ms | wall {stats}",
+                    "{name:>7} | {ranks:>4} ranks | tiers {label:>8} | {mb:>4} MiB | \
+                     virtual {:.3} ms | wall {stats}",
                     virt_s * 1e3
                 );
                 rows.push(format!(
                     concat!(
                         "    {{\"algo\": \"{}\", \"ranks\": {}, \"gpus_per_node\": {}, ",
-                        "\"size_mib\": {}, \"virtual_makespan_s\": {:.9}, ",
+                        "\"tiers\": \"{}\", \"size_mib\": {}, \"virtual_makespan_s\": {:.9}, ",
                         "\"wall_mean_s\": {:.6}, \"wall_min_s\": {:.6}, \"wall_runs\": {}}}"
                     ),
-                    name, ranks, GPUS_PER_NODE, mb, virt_s, stats.mean, stats.min, stats.runs
+                    name, ranks, widths[0], label, mb, virt_s, stats.mean, stats.min, stats.runs
                 ));
             }
         }
@@ -73,6 +90,6 @@ fn main() {
     println!(
         "wrote {} ({} rows)",
         path.display(),
-        ranks_sweep.len() * sizes_mb.len() * algos.len()
+        layouts.len() * sizes_mb.len() * algos.len()
     );
 }

@@ -1,33 +1,49 @@
 //! The error-budget planner: invert the propagation model.
 //!
-//! Given an end-to-end accuracy target — an absolute L∞ ceiling or a
-//! PSNR floor against a known value range — the planner derives the
-//! per-call compressor error bound that *guarantees* the target:
+//! Given an end-to-end accuracy target — an absolute L∞ ceiling, a
+//! PSNR floor against a known value range, or a value-range-relative
+//! bound resolved at plan time — the planner derives the per-call
+//! compressor error bound that *guarantees* the target:
 //!
 //! ```text
-//! eb = target_abs / (iterations × amplification(op, algo, topology))
+//! eb = target_abs / (iterations × amplification(op, algo, tree))
 //! ```
 //!
 //! A PSNR floor converts soundly to an absolute target because
 //! `PSNR = 20·log₁₀(range / RMSE)` and `RMSE ≤ L∞`: holding
-//! `L∞ ≤ range · 10^(−dB/20)` implies the floor.
+//! `L∞ ≤ range · 10^(−dB/20)` implies the floor. A relative target
+//! `RelError(r)` resolves to `r · range` against the payload's value
+//! range supplied at plan time — the planner rejects it when no range
+//! is known (it cannot certify a relative bound a priori).
 //!
 //! The planner **rejects** the fixed-rate compressor outright — its
 //! pointwise error scales with data magnitude (the CPRP2P hazard,
 //! [`crate::accuracy::propagation::ErrorPrediction::Unbounded`]), so no
 //! per-call bound can certify any finite target.
 //!
-//! [`complies`] is the check the [`crate::comm::Tuner`] accuracy veto
-//! and the forced-algorithm validation use: an algorithm complies with
-//! a plan iff its worst-case amplification times the planned `eb` fits
-//! inside the per-call budget.
+//! [`complies`] / [`complies_tiers`] is the check the
+//! [`crate::comm::Tuner`] accuracy veto and the forced-algorithm
+//! validation use: an algorithm complies with a plan iff its
+//! worst-case amplification times the planned `eb` fits inside the
+//! per-call budget.
+//!
+//! **Per-tier budgets.** On a multi-tier [`TierTree`] the hierarchical
+//! schedule compresses on several tiers, and the end-to-end error is
+//! `Σ_t A[t] · eb_t` with the sensitivities `A` from
+//! [`crate::topo::Schedule::tier_sensitivities`].
+//! [`split_across_tiers`] divides the per-call budget across tiers
+//! proportionally to caller-supplied *compressibility weights* (a tier
+//! whose data compresses well can afford a larger share): the
+//! resulting per-tier bounds always satisfy
+//! `Σ_t A[t] · eb_t ≤ per_call_abs`.
 
 use crate::collectives::{Algo, Op};
 use crate::coordinator::CompressionMode;
 use crate::error::{Error, Result};
 use crate::net::Topology;
+use crate::topo::{compile_min_error, TierTree};
 
-use super::propagation::worst_amplification;
+use super::propagation::worst_amplification_tiers;
 
 /// End-to-end accuracy target for a budgeted run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,16 +58,47 @@ pub enum AccuracyTarget {
         /// Value range of the reference data the PSNR is taken against.
         value_range: f64,
     },
+    /// Value-range-relative ceiling: `|out − exact| ≤ value · range`,
+    /// resolved against the payload's value range **at plan time**
+    /// (the SZ "REL" convention). Planning without a known range is a
+    /// typed rejection.
+    RelError(f64),
 }
 
 impl AccuracyTarget {
-    /// The absolute L∞ ceiling this target reduces to.
-    pub fn abs_bound(&self) -> f64 {
+    /// The absolute L∞ ceiling this target reduces to, when it is
+    /// self-contained (`None` for [`AccuracyTarget::RelError`], which
+    /// needs a value range — see [`AccuracyTarget::resolve_abs`]).
+    pub fn abs_bound(&self) -> Option<f64> {
         match *self {
-            AccuracyTarget::AbsError(t) => t,
+            AccuracyTarget::AbsError(t) => Some(t),
             AccuracyTarget::PsnrFloor { db, value_range } => {
-                value_range * 10f64.powf(-db / 20.0)
+                Some(value_range * 10f64.powf(-db / 20.0))
             }
+            AccuracyTarget::RelError(_) => None,
+        }
+    }
+
+    /// Resolve to an absolute L∞ ceiling, using `value_range` for the
+    /// relative form. Typed rejection when a relative target has no
+    /// range to resolve against.
+    pub fn resolve_abs(&self, value_range: Option<f64>) -> Result<f64> {
+        match *self {
+            AccuracyTarget::RelError(r) => {
+                let range = value_range.ok_or_else(|| {
+                    Error::budget(
+                        "relative accuracy target needs the payload's value range at plan \
+                         time (set it via CommBuilder::value_range)",
+                    )
+                })?;
+                if !(range.is_finite() && range > 0.0) {
+                    return Err(Error::budget(format!(
+                        "relative accuracy target cannot resolve against value range {range:e}"
+                    )));
+                }
+                Ok(r * range)
+            }
+            _ => Ok(self.abs_bound().expect("non-relative targets are self-contained")),
         }
     }
 }
@@ -65,7 +112,7 @@ pub struct BudgetPlan {
     /// Dependent iterations the target is split across (DDP steps,
     /// stacking batches); 1 for one-shot collectives.
     pub iterations: usize,
-    /// Per-call absolute budget: `target.abs_bound() / iterations`.
+    /// Per-call absolute budget: resolved target bound / iterations.
     pub per_call_abs: f64,
     /// The derived per-call compressor error bound.
     pub eb: f64,
@@ -75,8 +122,12 @@ pub struct BudgetPlan {
     pub amplification: f64,
 }
 
-fn validated_abs(target: AccuracyTarget, iterations: usize) -> Result<f64> {
-    let abs = target.abs_bound();
+fn validated_abs(
+    target: AccuracyTarget,
+    value_range: Option<f64>,
+    iterations: usize,
+) -> Result<f64> {
+    let abs = target.resolve_abs(value_range)?;
     if !(abs.is_finite() && abs > 0.0) {
         return Err(Error::budget(format!(
             "accuracy target reduces to a non-positive / non-finite bound ({abs:e})"
@@ -88,12 +139,26 @@ fn validated_abs(target: AccuracyTarget, iterations: usize) -> Result<f64> {
     Ok(abs)
 }
 
+fn reject_uncompressable(mode: CompressionMode) -> Result<()> {
+    match mode {
+        CompressionMode::FixedRate => Err(Error::budget(
+            "accuracy target rejected: the fixed-rate compressor's pointwise error scales \
+             with data magnitude and cannot be bounded a priori; use the error-bounded policy",
+        )),
+        CompressionMode::None => Err(Error::budget(
+            "accuracy plan is moot: the policy never compresses (results are exact)",
+        )),
+        CompressionMode::ErrorBounded => Ok(()),
+    }
+}
+
 /// Plan the per-call error bound for a **specific** `(op, algo)` on
 /// `topo`, splitting the target across `iterations` dependent calls.
 ///
 /// Rejections (typed errors): the fixed-rate compressor (unbounded
 /// hazard), an uncompressed policy (nothing to plan), a non-positive
-/// target, and `(op, algo)` pairs the propagation model cannot certify.
+/// target, a relative target with no value range, and `(op, algo)`
+/// pairs the propagation model cannot certify.
 pub fn plan_for_algo(
     target: AccuracyTarget,
     iterations: usize,
@@ -102,23 +167,24 @@ pub fn plan_for_algo(
     topo: &Topology,
     mode: CompressionMode,
 ) -> Result<BudgetPlan> {
-    match mode {
-        CompressionMode::FixedRate => {
-            return Err(Error::budget(
-                "accuracy target rejected: the fixed-rate compressor's pointwise error scales \
-                 with data magnitude and cannot be bounded a priori; use the error-bounded policy",
-            ));
-        }
-        CompressionMode::None => {
-            return Err(Error::budget(
-                "accuracy plan is moot: the policy never compresses (results are exact)",
-            ));
-        }
-        CompressionMode::ErrorBounded => {}
-    }
-    let abs = validated_abs(target, iterations)?;
+    plan_for_algo_tiers(target, None, iterations, op, algo, &TierTree::from(topo), mode)
+}
+
+/// [`plan_for_algo`] over an N-level [`TierTree`], with an optional
+/// payload value range for resolving relative targets.
+pub fn plan_for_algo_tiers(
+    target: AccuracyTarget,
+    value_range: Option<f64>,
+    iterations: usize,
+    op: Op,
+    algo: Algo,
+    tree: &TierTree,
+    mode: CompressionMode,
+) -> Result<BudgetPlan> {
+    reject_uncompressable(mode)?;
+    let abs = validated_abs(target, value_range, iterations)?;
     let per_call_abs = abs / iterations as f64;
-    let m = worst_amplification(op, algo, topo, 0).ok_or_else(|| {
+    let m = worst_amplification_tiers(op, algo, tree, 0).ok_or_else(|| {
         Error::budget(format!(
             "accuracy plan rejected: no propagation model for {algo:?} {op:?}"
         ))
@@ -137,25 +203,48 @@ pub fn plan_for_algo(
     })
 }
 
+fn auto_anchor(tree: &TierTree) -> Algo {
+    if tree.groups(0) >= 2 && tree.width(0) >= 2 {
+        Algo::Hierarchical
+    } else {
+        Algo::RecursiveDoubling
+    }
+}
+
 /// Plan a communicator-level budget: anchor the inversion on the
 /// best-accuracy Allreduce schedule the topology supports — the
-/// hierarchical two-level schedule on multi-node multi-GPU layouts
-/// (compression confined to `⌈log₂ nodes⌉` internode exchanges), flat
-/// recursive doubling otherwise. The [`crate::comm::Tuner`] accuracy
-/// veto then restricts auto-selection to algorithms that
-/// [`complies`]-check against the resulting plan.
+/// hierarchical schedule on multi-node multi-GPU layouts (compression
+/// confined to the tier-≥1 legs), flat recursive doubling otherwise.
+/// The [`crate::comm::Tuner`] accuracy veto then restricts
+/// auto-selection to algorithms that [`complies`]-check against the
+/// resulting plan.
 pub fn plan_auto(
     target: AccuracyTarget,
     iterations: usize,
     topo: &Topology,
     mode: CompressionMode,
 ) -> Result<BudgetPlan> {
-    let anchor = if topo.nodes() >= 2 && topo.gpus_per_node() >= 2 {
-        Algo::Hierarchical
-    } else {
-        Algo::RecursiveDoubling
-    };
-    plan_for_algo(target, iterations, Op::Allreduce, anchor, topo, mode)
+    plan_auto_tiers(target, None, iterations, &TierTree::from(topo), mode)
+}
+
+/// [`plan_auto`] over an N-level [`TierTree`], with an optional payload
+/// value range for resolving relative targets.
+pub fn plan_auto_tiers(
+    target: AccuracyTarget,
+    value_range: Option<f64>,
+    iterations: usize,
+    tree: &TierTree,
+    mode: CompressionMode,
+) -> Result<BudgetPlan> {
+    plan_for_algo_tiers(
+        target,
+        value_range,
+        iterations,
+        Op::Allreduce,
+        auto_anchor(tree),
+        tree,
+        mode,
+    )
 }
 
 /// Whether `(op, algo)` fits inside `plan`'s per-call budget: its
@@ -163,10 +252,105 @@ pub fn plan_auto(
 /// (with a 1e-9 relative slack for the division round-trip). Pairs the
 /// model cannot certify never comply.
 pub fn complies(plan: &BudgetPlan, op: Op, algo: Algo, topo: &Topology, root: usize) -> bool {
-    match worst_amplification(op, algo, topo, root) {
+    complies_tiers(plan, op, algo, &TierTree::from(topo), root)
+}
+
+/// [`complies`] over an N-level [`TierTree`].
+pub fn complies_tiers(
+    plan: &BudgetPlan,
+    op: Op,
+    algo: Algo,
+    tree: &TierTree,
+    root: usize,
+) -> bool {
+    match worst_amplification_tiers(op, algo, tree, root) {
         None => false,
         Some(m) => m * plan.eb <= plan.per_call_abs * (1.0 + 1e-9),
     }
+}
+
+/// One tier's share of a per-call budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierBudget {
+    /// The tier the bound applies to.
+    pub tier: usize,
+    /// Compressibility weight the split used.
+    pub weight: f64,
+    /// Error sensitivity `A[t]` of the schedule to this tier's bound.
+    pub sensitivity: f64,
+    /// The tier's compressor error bound.
+    pub eb: f64,
+}
+
+/// A per-call budget split across the tiers of a hierarchical
+/// schedule: `Σ_t sensitivity · eb ≤ per_call_abs` by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TieredPlan {
+    /// The per-call budget being split.
+    pub per_call_abs: f64,
+    /// Per-tier shares (only tiers whose legs compress appear).
+    pub tiers: Vec<TierBudget>,
+}
+
+impl TieredPlan {
+    /// Worst-case end-to-end error if each tier runs at its own bound:
+    /// `Σ_t A[t] · eb_t` — never exceeds `per_call_abs`.
+    pub fn predicted_total(&self) -> f64 {
+        self.tiers.iter().map(|t| t.sensitivity * t.eb).sum()
+    }
+
+    /// The tier budget for `tier`, if that tier compresses.
+    pub fn tier(&self, tier: usize) -> Option<&TierBudget> {
+        self.tiers.iter().find(|t| t.tier == tier)
+    }
+}
+
+/// Split `plan`'s per-call budget across the tiers of `op`'s min-error
+/// hierarchical schedule on `tree`, proportionally to `weights`
+/// (predicted per-tier compressibility; missing entries default to 1 —
+/// an equal split). A tier with weight `w` gets
+/// `eb_t = per_call · w / (A[t] · Σw)`, so the shares always satisfy
+/// `Σ_t A[t] · eb_t = per_call · (Σ_{used} w) / Σw ≤ per_call`.
+///
+/// Tiers whose legs never compress (tier 0, single-group tiers) get no
+/// share; a schedule that compresses nowhere yields an empty split.
+pub fn split_across_tiers(
+    plan: &BudgetPlan,
+    op: Op,
+    tree: &TierTree,
+    weights: Option<&[f64]>,
+) -> Result<TieredPlan> {
+    let sched = compile_min_error(op, tree, true)?;
+    let sens = sched.tier_sensitivities();
+    let weight_of = |t: usize| -> f64 {
+        weights
+            .and_then(|w| w.get(t).copied())
+            .unwrap_or(1.0)
+            .max(0.0)
+    };
+    let total_w: f64 = (0..sens.len())
+        .filter(|&t| sens[t] > 0.0)
+        .map(weight_of)
+        .sum();
+    let mut tiers = Vec::new();
+    if total_w > 0.0 {
+        for (t, &a) in sens.iter().enumerate() {
+            if a <= 0.0 {
+                continue;
+            }
+            let w = weight_of(t);
+            tiers.push(TierBudget {
+                tier: t,
+                weight: w,
+                sensitivity: a,
+                eb: plan.per_call_abs * w / (a * total_w),
+            });
+        }
+    }
+    Ok(TieredPlan {
+        per_call_abs: plan.per_call_abs,
+        tiers,
+    })
 }
 
 #[cfg(test)]
@@ -184,8 +368,45 @@ mod tests {
             value_range: 2.0,
         };
         // 2 · 10^(−3) = 2e-3.
-        assert!((t.abs_bound() - 2e-3).abs() < 1e-12);
-        assert_eq!(AccuracyTarget::AbsError(5e-4).abs_bound(), 5e-4);
+        assert!((t.abs_bound().unwrap() - 2e-3).abs() < 1e-12);
+        assert_eq!(AccuracyTarget::AbsError(5e-4).abs_bound(), Some(5e-4));
+    }
+
+    #[test]
+    fn relative_target_resolves_against_the_value_range() {
+        let t = AccuracyTarget::RelError(1e-3);
+        // No standalone bound…
+        assert_eq!(t.abs_bound(), None);
+        // …but resolves at plan time against the payload's range.
+        assert!((t.resolve_abs(Some(4.0)).unwrap() - 4e-3).abs() < 1e-15);
+        assert!(t.resolve_abs(None).is_err());
+        assert!(t.resolve_abs(Some(0.0)).is_err());
+        assert!(t.resolve_abs(Some(f64::NAN)).is_err());
+        // The planner derives eb from the resolved bound: 8 ranks ring
+        // → amplification 8, range 4 → eb = 4e-3/8.
+        let plan = plan_for_algo_tiers(
+            t,
+            Some(4.0),
+            1,
+            Op::Allreduce,
+            Algo::Ring,
+            &TierTree::from(&topo(8, 4)),
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        assert!((plan.eb - 5e-4).abs() < 1e-15);
+        // Without a range the plan is a typed budget rejection.
+        let err = plan_for_algo(
+            t,
+            1,
+            Op::Allreduce,
+            Algo::Ring,
+            &topo(8, 4),
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Budget(_)), "{err}");
+        assert!(err.to_string().contains("value range"), "{err}");
     }
 
     #[test]
@@ -291,6 +512,11 @@ mod tests {
         assert!(complies(&plan, Op::Allreduce, Algo::Hierarchical, &topo(32, 4), 0));
         assert!(complies(&plan, Op::Bcast, Algo::Binomial, &topo(32, 4), 0));
         assert!(complies(&plan, Op::Allgather, Algo::Ring, &topo(32, 4), 0));
+        // The hierarchical Reduce_scatter shares the anchor's stage
+        // structure: it complies where the ring cannot — the compliant
+        // fallback the veto needed.
+        assert!(complies(&plan, Op::ReduceScatter, Algo::Hierarchical, &topo(32, 4), 0));
+        assert!(!complies(&plan, Op::ReduceScatter, Algo::Ring, &topo(32, 4), 0));
         // Single node → flat ReDoub anchor.
         let flat = plan_auto(
             AccuracyTarget::AbsError(1e-3),
@@ -313,5 +539,53 @@ mod tests {
         )
         .unwrap();
         assert!(!complies(&plan, Op::Scatter, Algo::Ring, &t, 0));
+    }
+
+    #[test]
+    fn tiered_split_respects_the_per_call_budget() {
+        // Non-power-of-two everything: 300 ranks as 3 GPUs/node, 10
+        // nodes/rack, 10 racks.
+        let tree = TierTree::new(300, &[3, 10, 10]).unwrap();
+        let plan = plan_auto_tiers(
+            AccuracyTarget::AbsError(1e-2),
+            None,
+            1,
+            &tree,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        // Equal weights.
+        let split = split_across_tiers(&plan, Op::Allreduce, &tree, None).unwrap();
+        assert!(!split.tiers.is_empty());
+        assert!(split.tier(0).is_none(), "tier 0 never compresses");
+        assert!(
+            split.predicted_total() <= plan.per_call_abs * (1.0 + 1e-9),
+            "Σ A·eb = {} vs per-call {}",
+            split.predicted_total(),
+            plan.per_call_abs
+        );
+        // Skewed compressibility weights trade eb between tiers but
+        // never blow the budget.
+        let skew = split_across_tiers(&plan, Op::Allreduce, &tree, Some(&[1.0, 5.0, 0.5]))
+            .unwrap();
+        assert!(skew.predicted_total() <= plan.per_call_abs * (1.0 + 1e-9));
+        assert!(
+            skew.tier(1).unwrap().eb > split.tier(1).unwrap().eb,
+            "a heavier weight buys tier 1 a looser bound"
+        );
+        assert!(skew.tier(2).unwrap().eb < split.tier(2).unwrap().eb);
+        // Single-node tree: nothing compresses, empty split.
+        let solo = TierTree::new(4, &[4, 1]).unwrap();
+        let plan = plan_auto_tiers(
+            AccuracyTarget::AbsError(1e-2),
+            None,
+            1,
+            &solo,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        let empty = split_across_tiers(&plan, Op::Allreduce, &solo, None).unwrap();
+        assert!(empty.tiers.is_empty());
+        assert_eq!(empty.predicted_total(), 0.0);
     }
 }

@@ -26,13 +26,29 @@
 //!   against an exact reference on a deterministic element sample,
 //!   surfaced through [`crate::comm::CollectiveReport::accuracy`] and
 //!   the per-rank [`crate::coordinator::OpCounters`].
+//!   [`AccuracyReport::suggested_eb`] turns the observed headroom into
+//!   a conservative bound-relaxation proposal.
+//!
+//! All three walk the same [`crate::topo::TierTree`] the scheduler
+//! compiles against (`*_tiers` entry points): hierarchical algorithms'
+//! amplification is the compiled schedule's leg walk, and
+//! [`split_across_tiers`] divides a per-call budget across tiers by
+//! predicted compressibility. Targets come in absolute, PSNR-floor,
+//! and value-range-relative ([`AccuracyTarget::RelError`], resolved at
+//! plan time) forms.
 
 pub mod budget;
 pub mod propagation;
 pub mod telemetry;
 
-pub use budget::{complies, plan_auto, plan_for_algo, AccuracyTarget, BudgetPlan};
-pub use propagation::{
-    amplification, cpr_stages, predict, predict_worst, worst_amplification, ErrorPrediction,
+pub use budget::{
+    complies, complies_tiers, plan_auto, plan_auto_tiers, plan_for_algo, plan_for_algo_tiers,
+    split_across_tiers, AccuracyTarget, BudgetPlan, TierBudget, TieredPlan,
 };
-pub use telemetry::{AccuracyObservation, AccuracyReport, ErrorProbe, MAX_SAMPLE};
+pub use propagation::{
+    amplification, amplification_tiers, cpr_stages, predict, predict_worst, predict_worst_tiers,
+    worst_amplification, worst_amplification_tiers, ErrorPrediction,
+};
+pub use telemetry::{
+    AccuracyObservation, AccuracyReport, ErrorProbe, MAX_EB_RELAXATION, MAX_SAMPLE,
+};

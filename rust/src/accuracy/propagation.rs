@@ -34,6 +34,10 @@
 use crate::collectives::{expected_cpr_stages_at, expected_cpr_stages_hier, Algo, Op};
 use crate::coordinator::CompressionMode;
 use crate::net::Topology;
+// The doubling-stage recurrence is defined once, next to the schedule
+// walk that shares it — the two error models cannot drift apart.
+use crate::topo::schedule::{doubling_error_stages, pow2_minus_1};
+use crate::topo::{compile_min_error, TierTree};
 
 /// Predicted worst-case pointwise deviation of a collective's output
 /// from the exact (lossless) result.
@@ -84,25 +88,12 @@ fn ceil_log2(n: usize) -> usize {
     }
 }
 
-/// Effective `e' = 2e + eb` stages of a recursive-doubling exchange
-/// over `groups` participants, including the two extra stages (fold
-/// compress-in, unfold compress-out) the MPICH remainder scheme adds
-/// for non-power-of-two counts.
-fn doubling_error_stages(groups: usize) -> usize {
-    if groups <= 1 {
-        return 0;
-    }
-    let logp = groups.ilog2() as usize;
-    logp + if groups.is_power_of_two() { 0 } else { 2 }
-}
-
-/// `2^s − 1` in f64 without overflowing for degenerate huge `s`.
-fn pow2_minus_1(s: usize) -> f64 {
-    if s < 53 {
-        ((1u64 << s) - 1) as f64
-    } else {
-        2f64.powi(s.min(1000) as i32)
-    }
+/// Worst-case amplification of a hierarchical schedule on `tree`: the
+/// min-error compile's leg walk (what budgeted dispatch runs). On a
+/// 2-tier tree this is exactly the PR 2 internode model,
+/// `(2^S − 1)·eb` over the node count.
+fn hier_amplification(op: Op, tree: &TierTree) -> Option<f64> {
+    compile_min_error(op, tree, true).ok().map(|s| s.amplification())
 }
 
 /// Worst-case error **amplification** `m` for `(op, algo)` at `rank`:
@@ -118,7 +109,20 @@ pub fn amplification(
     rank: usize,
     root: usize,
 ) -> Option<f64> {
-    let n = topo.ranks();
+    amplification_tiers(op, algo, &TierTree::from(topo), rank, root)
+}
+
+/// [`amplification`] over an N-level [`TierTree`]: hierarchical
+/// schedules walk the tree's legs; flat algorithms depend only on the
+/// rank count.
+pub fn amplification_tiers(
+    op: Op,
+    algo: Algo,
+    tree: &TierTree,
+    rank: usize,
+    root: usize,
+) -> Option<f64> {
+    let n = tree.ranks();
     if n <= 1 {
         return Some(0.0);
     }
@@ -134,12 +138,12 @@ pub fn amplification(
         (Op::Allreduce, Algo::RecursiveDoubling) => {
             Some(pow2_minus_1(doubling_error_stages(n)))
         }
-        // Hierarchical: intranode legs are raw NVLink (exact); only the
-        // internode recursive doubling over `nodes` leaders compresses,
-        // and members inherit their leader's error verbatim.
-        (Op::Allreduce, Algo::Hierarchical) => {
-            Some(pow2_minus_1(doubling_error_stages(topo.nodes())))
-        }
+        // Hierarchical schedules: tier-0 legs are raw NVLink (exact);
+        // compression error follows the tree's compiled legs, and
+        // members inherit their leader's error verbatim (rank-uniform).
+        (Op::Allreduce, Algo::Hierarchical)
+        | (Op::ReduceScatter, Algo::Hierarchical)
+        | (Op::Allgather, Algo::Hierarchical) => hier_amplification(op, tree),
         // Staged reduce+bcast (Cray-MPI baseline shape): the binomial
         // reduce sends raw; only the broadcast compresses, once.
         (Op::Allreduce, Algo::Binomial) => Some(1.0),
@@ -168,14 +172,24 @@ pub fn amplification(
 /// [`amplification`] maximized over ranks — the number the planner and
 /// the tuner veto compare against a per-call budget.
 pub fn worst_amplification(op: Op, algo: Algo, topo: &Topology, root: usize) -> Option<f64> {
-    let n = topo.ranks();
+    worst_amplification_tiers(op, algo, &TierTree::from(topo), root)
+}
+
+/// [`worst_amplification`] over an N-level [`TierTree`].
+pub fn worst_amplification_tiers(
+    op: Op,
+    algo: Algo,
+    tree: &TierTree,
+    root: usize,
+) -> Option<f64> {
+    let n = tree.ranks();
     if n <= 1 {
         return Some(0.0);
     }
     // Amplification is rank-uniform except for rooted ops, where the
     // root is the *smaller* case; any non-root rank is the worst.
     let probe_rank = if root == 0 { n - 1 } else { 0 };
-    amplification(op, algo, topo, probe_rank, root)
+    amplification_tiers(op, algo, tree, probe_rank, root)
 }
 
 /// Predicted worst-case pointwise error of one `(op, algo)` call at
@@ -212,16 +226,30 @@ pub fn predict_worst(
     mode: CompressionMode,
     eb: f64,
 ) -> Option<ErrorPrediction> {
+    predict_worst_tiers(op, algo, &TierTree::from(topo), root, mode, eb)
+}
+
+/// [`predict_worst`] over an N-level [`TierTree`].
+pub fn predict_worst_tiers(
+    op: Op,
+    algo: Algo,
+    tree: &TierTree,
+    root: usize,
+    mode: CompressionMode,
+    eb: f64,
+) -> Option<ErrorPrediction> {
     match mode {
         CompressionMode::None => Some(ErrorPrediction::Exact),
         CompressionMode::FixedRate => Some(ErrorPrediction::Unbounded),
-        CompressionMode::ErrorBounded => worst_amplification(op, algo, topo, root).map(|m| {
-            if m == 0.0 {
-                ErrorPrediction::Exact
-            } else {
-                ErrorPrediction::Bounded(m * eb)
-            }
-        }),
+        CompressionMode::ErrorBounded => {
+            worst_amplification_tiers(op, algo, tree, root).map(|m| {
+                if m == 0.0 {
+                    ErrorPrediction::Exact
+                } else {
+                    ErrorPrediction::Bounded(m * eb)
+                }
+            })
+        }
     }
 }
 
@@ -247,6 +275,13 @@ pub fn cpr_stages(
             topo.gpus_per_node(),
             rank,
         )),
+        // The multi-tier hierarchical variants count stages by walking
+        // their compiled schedule.
+        (Op::ReduceScatter, Algo::Hierarchical) | (Op::Allgather, Algo::Hierarchical) => {
+            compile_min_error(op, &TierTree::from(topo), true)
+                .ok()
+                .map(|s| s.cpr_stages_at(rank))
+        }
         _ => expected_cpr_stages_at(op, algo, topo.ranks(), rank, root),
     }
 }
@@ -366,6 +401,43 @@ mod tests {
         assert_eq!(p.iterated(10), ErrorPrediction::Bounded(1e-3));
         assert_eq!(ErrorPrediction::Unbounded.iterated(10), ErrorPrediction::Unbounded);
         assert_eq!(ErrorPrediction::Exact.iterated(10), ErrorPrediction::Exact);
+    }
+
+    #[test]
+    fn hierarchical_rs_and_ag_are_certifiable() {
+        // 32 ranks / 4 per node → 8 nodes: the hierarchical
+        // Reduce_scatter pays the top doubling (2^3 − 1), not the ring's
+        // N−1 linear stages; the Allgather forwards compress-once
+        // streams (one crossing on a 2-tier tree).
+        let t = topo(32, 4);
+        assert_eq!(
+            amplification(Op::ReduceScatter, Algo::Hierarchical, &t, 0, 0),
+            Some(7.0)
+        );
+        assert_eq!(
+            amplification(Op::Allgather, Algo::Hierarchical, &t, 0, 0),
+            Some(1.0)
+        );
+        assert_eq!(amplification(Op::ReduceScatter, Algo::Ring, &t, 0, 0), Some(31.0));
+        // Deep trees through the tiers entry points.
+        let tree = crate::topo::TierTree::new(512, &[4, 16, 8]).unwrap();
+        assert_eq!(
+            worst_amplification_tiers(Op::Allreduce, Algo::Hierarchical, &tree, 0),
+            Some(128.0)
+        );
+        assert_eq!(
+            worst_amplification_tiers(Op::ReduceScatter, Algo::Hierarchical, &tree, 0),
+            Some(128.0)
+        );
+        assert_eq!(
+            worst_amplification_tiers(Op::Allgather, Algo::Hierarchical, &tree, 0),
+            Some(3.0)
+        );
+        // Flat algorithms agree between the two entry points.
+        assert_eq!(
+            worst_amplification_tiers(Op::Allreduce, Algo::Ring, &tree, 0),
+            Some(512.0)
+        );
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub struct AccuracyReport {
     pub fp_slack: f64,
 }
 
+/// Cap on how much [`AccuracyReport::suggested_eb`] may relax the
+/// bound in one step: large single-step jumps would outrun the sampled
+/// evidence the suggestion is based on.
+pub const MAX_EB_RELAXATION: f64 = 8.0;
+
 impl AccuracyReport {
     /// Whether the observation respects the predicted bound (plus the
     /// f32 slack). `None` when the prediction is unbounded (fixed-rate
@@ -62,6 +67,39 @@ impl AccuracyReport {
             }
             ErrorPrediction::Unbounded => None,
         }
+    }
+
+    /// Telemetry-driven bound relaxation: when the observed deviation
+    /// sits far inside the worst-case prediction, propose a larger
+    /// compressor `eb` that would still have met the bound — the first
+    /// step of feeding `observed_max_err` back into the planner.
+    ///
+    /// Pure and conservative: the proposal keeps half the measured
+    /// headroom in reserve and never grows `eb` by more than
+    /// [`MAX_EB_RELAXATION`]× per step. `None` when there is nothing
+    /// sound to propose — an unbounded or exact prediction, a
+    /// non-positive current bound, or headroom under 2× (the model is
+    /// already close to tight). Not yet wired into dispatch.
+    pub fn suggested_eb(&self, current_eb: f64) -> Option<f64> {
+        let bound = match self.prediction {
+            ErrorPrediction::Bounded(b) if b > 0.0 => b,
+            _ => return None,
+        };
+        if !(current_eb.is_finite() && current_eb > 0.0) {
+            return None;
+        }
+        // Quantization headroom: how far the observation sits inside
+        // the bound once f32 reassociation noise is discounted.
+        let observed = (self.observed_max_err - self.fp_slack).max(0.0);
+        let headroom = if observed <= 0.0 {
+            MAX_EB_RELAXATION * 2.0
+        } else {
+            bound / observed
+        };
+        if headroom <= 2.0 {
+            return None;
+        }
+        Some(current_eb * (headroom / 2.0).min(MAX_EB_RELAXATION))
     }
 }
 
@@ -315,5 +353,30 @@ mod tests {
         assert_eq!(mk(ErrorPrediction::Bounded(1e-3), 2e-3).within_bound(), Some(false));
         assert_eq!(mk(ErrorPrediction::Exact, 0.0).within_bound(), Some(true));
         assert_eq!(mk(ErrorPrediction::Unbounded, 42.0).within_bound(), None);
+    }
+
+    #[test]
+    fn suggested_eb_proposes_from_headroom() {
+        let mk = |prediction, observed| AccuracyReport {
+            prediction,
+            observed_max_err: observed,
+            samples: 10,
+            fp_slack: 1e-9,
+        };
+        // 100× headroom → relax by min(100/2, 8) = the 8× cap.
+        let r = mk(ErrorPrediction::Bounded(1e-2), 1e-4);
+        assert!((r.suggested_eb(1e-4).unwrap() - 8e-4).abs() < 1e-15);
+        // 5× headroom → relax by 2.5× (half the headroom in reserve).
+        let r = mk(ErrorPrediction::Bounded(5e-3), 1e-3);
+        assert!((r.suggested_eb(1e-4).unwrap() - 2.5e-4).abs() < 1e-15);
+        // Near-tight observations (≤ 2× headroom) propose nothing.
+        assert_eq!(mk(ErrorPrediction::Bounded(1e-3), 6e-4).suggested_eb(1e-4), None);
+        // Zero observed deviation: cap applies (no infinite proposal).
+        let r = mk(ErrorPrediction::Bounded(1e-3), 0.0);
+        assert!((r.suggested_eb(1e-4).unwrap() - 8e-4).abs() < 1e-15);
+        // Unbounded / exact predictions and degenerate ebs: nothing.
+        assert_eq!(mk(ErrorPrediction::Unbounded, 1e-4).suggested_eb(1e-4), None);
+        assert_eq!(mk(ErrorPrediction::Exact, 0.0).suggested_eb(1e-4), None);
+        assert_eq!(mk(ErrorPrediction::Bounded(1e-2), 1e-4).suggested_eb(0.0), None);
     }
 }

@@ -1,122 +1,81 @@
-//! Topology-aware two-level (hierarchical) Allreduce.
+//! Hierarchical collectives: the executor for compiled
+//! [`crate::topo::Schedule`]s.
 //!
-//! The paper's testbed — and every GPU cluster it models — is two
-//! networks glued together: NVLink-class links inside a node and a
-//! shared Slingshot NIC between nodes. A flat schedule pays NIC latency
-//! on hops that could ride NVLink; the hierarchical schedule never
-//! does. Three phases:
+//! PR 2's two-level Allreduce hard-coded one leader tier; this module
+//! generalizes it: the algorithm is now *data* — a sequence of
+//! per-tier legs compiled by [`crate::topo::schedule`] from a
+//! [`TierTree`] — and [`run_schedule`] interprets the legs against a
+//! [`RankCtx`]. On a 2-tier tree with the min-error compile this is
+//! exactly the PR 2 schedule (raw NVLink reduce to the node leader, a
+//! compressed recursive-doubling exchange over one leader per node
+//! with the MPICH remainder fold, raw broadcast back); deeper trees
+//! add rack/pod tiers whose legs the tuner picks per tier, and the
+//! same engine realizes hierarchical **Reduce_scatter** and
+//! **Allgather**.
 //!
-//! 1. **Intranode reduce** — every non-leader ships its vector to the
-//!    node leader (lowest rank on the node) over NVLink, *raw*: at
-//!    NVLink bandwidth, compression kernels cost more than they save,
-//!    and keeping this leg lossless means the end-to-end error
-//!    accounting is exactly that of the internode leg.
-//! 2. **Internode Allreduce over leaders** — recursive doubling
-//!    (gZ-ReDoub style) across one leader per node: `⌈log₂ nodes⌉`
-//!    whole-vector exchanges, compressed once per step when the policy
-//!    compresses. Non-power-of-two node counts use the MPICH remainder
-//!    fold. This is the **only** leg that compresses, so the
-//!    one-compression-per-hop error model holds with `nodes` in place
-//!    of `ranks` — strictly fewer stages than flat gZ-ReDoub.
-//! 3. **Intranode broadcast** — the leader forwards the finished vector
-//!    to its node's members, raw over NVLink.
+//! Leg semantics (all groups advance the same leg sequence; a rank
+//! engages a leg iff it leads its tier-`t−1` group):
 //!
-//! Compared with the flat algorithms on an `N = M·g` cluster
-//! (`M` nodes × `g` GPUs):
+//! * **ReduceToLeader** — members ship whole vectors to the group
+//!   leader, which folds them in rank order. Raw on tier 0 (NVLink),
+//!   compressed above.
+//! * **AllreduceRedoub / AllreduceRing** — in-group Allreduce over the
+//!   participants: whole-vector recursive doubling (remainder fold for
+//!   non-power-of-two counts) or the chunked ring, compressed once per
+//!   exchange.
+//! * **BcastFromLeader** — descent: raw legs fan out directly over
+//!   NVLink; compressed legs forward one compress-once stream down a
+//!   binomial tree (every consumer decompresses exactly once).
+//! * **GatherToLeader / AllgatherRing** — the Allgather mirror:
+//!   concatenate in rank order going up, ring the super-blocks across
+//!   the top, broadcast the gathered vector down.
+//! * **ScatterFromLeader** — the Reduce_scatter descent: the leader
+//!   slices its vector by each participant's subtree chunk range and
+//!   sends the share; after the tier-0 leg every rank holds chunk `r`
+//!   of the `Chunks::new(total, nranks)` layout.
 //!
-//! * vs flat ring: `2⌈log₂M⌉` compression kernels instead of `2(N−1)`,
-//!   `⌈log₂M⌉` internode rounds instead of `2(N−1)`.
-//! * vs flat gZ-ReDoub: `log₂ g` fewer compression stages and internode
-//!   exchanges, paid for with µs-scale NVLink traffic.
-//!
-//! Uncompressed, the schedule is exact: every rank of a node returns
-//! the leader's bits, and leaders exchange symmetric pairwise sums, so
-//! all N outputs are bitwise identical (like flat recursive doubling).
+//! Compression is confined to tiers ≥ 1, so the error accounting is
+//! exactly what [`crate::topo::Schedule::amplification`] walks — the
+//! schedule and its error model can never drift apart.
 
-use crate::coordinator::{DeviceBuf, Payload, RankCtx};
-use crate::error::Result;
+use crate::coordinator::{CompBuf, DeviceBuf, Payload, RankCtx};
+use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
+use crate::topo::{compile_min_error, LegKind, Schedule, TierTree};
 
-/// Tag bases; offsets keep the three phases (and redoub rounds) from
-/// colliding for any plausible rank count.
-const TAG_HIER_UP: u64 = 0x4852_0000_0000; // + member rank
-const TAG_HIER_X: u64 = 0x4852_1000_0000; // + redoub round
-const TAG_HIER_FOLD: u64 = 0x4852_2000_0000;
-const TAG_HIER_UNFOLD: u64 = 0x4852_3000_0000;
-const TAG_HIER_DOWN: u64 = 0x4852_4000_0000; // + member rank
+use super::chunking::Chunks;
+use super::Op;
 
-/// Two-level Allreduce. See the module docs for the schedule.
-///
-/// Works for any topology: a single-node communicator degenerates to
-/// reduce-to-leader + broadcast, `gpus_per_node == 1` degenerates to
-/// recursive doubling over all ranks, and partially-filled last nodes
-/// are handled by the block-wise rank layout.
-pub fn allreduce_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    let n = ctx.nranks();
-    let me = ctx.rank();
-    if n == 1 {
-        return Ok(input);
-    }
-    let topo = ctx.topology().clone();
-    let node = topo.node_of(me);
-    let leader = topo.leader_of(me);
-    let members = topo.node_ranks(node);
+/// Tag base; the leg index is encoded above bit 24, per-message
+/// offsets (member index / round) below.
+const TAG_SCHED: u64 = 0x544F_0000_0000;
 
-    let stream = if ctx.policy().overlap {
-        StreamId::NonDefault(0)
-    } else {
-        StreamId::Default
-    };
-
-    if me != leader {
-        // Phase 1: ship the local vector to the node leader — raw, the
-        // hop is NVLink. Then park until the leader's broadcast.
-        let now = ctx.now();
-        ctx.send(leader, TAG_HIER_UP + me as u64, Payload::Raw(input), now);
-        let (out, _t) = ctx.recv_raw(leader, TAG_HIER_DOWN + me as u64);
-        ctx.sync_device();
-        return Ok(out);
-    }
-
-    // Phase 1 (leader): fold in every member's vector.
-    let mut data = input;
-    let mut data_t = ctx.now();
-    for m in members.clone().skip(1) {
-        let (theirs, t_in) = ctx.recv_raw(m, TAG_HIER_UP + m as u64);
-        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
-        data = sum;
-        data_t = t_sum;
-    }
-
-    // Phase 2: Allreduce across node leaders (the only compressed leg).
-    if topo.nodes() > 1 {
-        let (d, t) = leaders_recursive_doubling(ctx, stream, data, data_t, &topo)?;
-        data = d;
-        data_t = t;
-    }
-
-    // Phase 3: broadcast the finished vector to the node's members.
-    for m in members.skip(1) {
-        ctx.send(m, TAG_HIER_DOWN + m as u64, Payload::Raw(data.clone()), data_t);
-    }
-    ctx.sync_device();
-    Ok(data)
+fn tag(leg: usize, off: u64) -> u64 {
+    TAG_SCHED + ((leg as u64) << 24) + off
 }
 
-/// Send the whole vector to `to`, compressed when the policy
-/// compresses (one compression per internode exchange — Fig. 4).
-fn send_whole(
+/// Offsets keeping a leg's sub-exchanges apart (member indices occupy
+/// the low range).
+const OFF_REDOUB: u64 = 0x10_0000;
+const OFF_FOLD: u64 = 0x20_0000;
+const OFF_UNFOLD: u64 = 0x30_0000;
+const OFF_RING_RS: u64 = 0x40_0000;
+const OFF_RING_AG: u64 = 0x50_0000;
+
+/// Send the whole vector to `to`, compressed when the leg compresses
+/// (async memset of the reused temp buffers, then compress on the side
+/// stream — §3.3.4, exactly as flat gZ-ReDoub does).
+fn send_vec(
     ctx: &mut RankCtx,
     stream: StreamId,
     to: usize,
     tag: u64,
     data: &DeviceBuf,
     data_t: VirtTime,
+    compressed: bool,
 ) {
-    if ctx.compression_enabled() {
-        // Async memset of the reused temp buffers, then compress on the
-        // side stream (§3.3.4), exactly as flat gZ-ReDoub does.
+    if compressed {
         ctx.memset(stream, data.bytes(), data_t);
         let (c, t_c) = ctx.compress(stream, data, data_t);
         ctx.send(to, tag, Payload::Comp(c), t_c);
@@ -126,13 +85,14 @@ fn send_whole(
 }
 
 /// Receive a whole vector from `from`, decompressing when compressed.
-fn recv_whole(
+fn recv_vec(
     ctx: &mut RankCtx,
     stream: StreamId,
     from: usize,
     tag: u64,
+    compressed: bool,
 ) -> (DeviceBuf, VirtTime) {
-    if ctx.compression_enabled() {
+    if compressed {
         let (c, t_in) = ctx.recv_comp(from, tag);
         ctx.decompress(stream, &c, t_in)
     } else {
@@ -140,81 +100,395 @@ fn recv_whole(
     }
 }
 
-/// Recursive-doubling Allreduce over the leader group (one rank per
-/// node), MPICH remainder scheme for non-power-of-two node counts.
-/// Only node leaders may call this.
-fn leaders_recursive_doubling(
-    ctx: &mut RankCtx,
-    stream: StreamId,
-    input: DeviceBuf,
-    input_t: VirtTime,
-    topo: &crate::net::Topology,
-) -> Result<(DeviceBuf, VirtTime)> {
-    let nodes = topo.nodes();
-    let my_idx = topo.node_of(ctx.rank());
-    debug_assert!(topo.is_leader(ctx.rank()));
-
-    let pof2 = 1usize << (usize::BITS - 1 - nodes.leading_zeros()) as usize;
-    let rem = nodes - pof2;
-
-    let mut data = input;
-    let mut data_t = input_t;
-
-    // ---- Fold the remainder leaders in (even → odd pairs park). -----
-    let newidx: isize;
-    if my_idx < 2 * rem {
-        if my_idx % 2 == 0 {
-            let peer = topo.leader_of_node(my_idx + 1);
-            send_whole(ctx, stream, peer, TAG_HIER_FOLD, &data, data_t);
-            newidx = -1;
-        } else {
-            let peer = topo.leader_of_node(my_idx - 1);
-            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_FOLD);
-            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
-            data = sum;
-            data_t = t_sum;
-            newidx = (my_idx / 2) as isize;
-        }
+/// Execute a compiled hierarchical schedule. Every rank of the
+/// communicator must run the same schedule over a same-length input
+/// (the root-free ops: Allreduce, Reduce_scatter, Allgather).
+pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    let me = ctx.rank();
+    if n <= 1 {
+        return Ok(input);
+    }
+    let tree = &sched.tree;
+    if tree.ranks() != n {
+        return Err(Error::collective(format!(
+            "schedule compiled for {} ranks dispatched on a {n}-rank communicator",
+            tree.ranks()
+        )));
+    }
+    let stream = if ctx.policy().overlap {
+        StreamId::NonDefault(0)
     } else {
-        newidx = (my_idx - rem) as isize;
-    }
+        StreamId::Default
+    };
 
-    // ---- Recursive doubling over pof2 leaders. ----------------------
-    if newidx >= 0 {
-        let nr = newidx as usize;
-        let mut mask = 1usize;
-        let mut round: u64 = 0;
-        while mask < pof2 {
-            let peer_nr = nr ^ mask;
-            let peer_idx = if peer_nr < rem {
-                peer_nr * 2 + 1
-            } else {
-                peer_nr + rem
-            };
-            let peer = topo.leader_of_node(peer_idx);
-            send_whole(ctx, stream, peer, TAG_HIER_X + round, &data, data_t);
-            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_X + round);
-            let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
-            data = sum;
-            data_t = t_sum;
-            mask <<= 1;
-            round += 1;
+    // Element count of the *input* vector — the Reduce_scatter chunk
+    // layout is over this (every rank contributes a same-length
+    // vector).
+    let total_elems = input.elems();
+    let mut data = input;
+    let mut data_t = ctx.now();
+    // Global element offset of `data` during a scatter descent.
+    let mut off = 0usize;
+
+    for (li, leg) in sched.legs.iter().enumerate() {
+        let t = leg.tier;
+        if !tree.participates(t, me) {
+            continue;
+        }
+        let group = tree.group_of(t, me);
+        let ps = tree.group_participants(t, group);
+        let k = ps.len();
+        if k <= 1 {
+            if leg.kind == LegKind::ScatterFromLeader {
+                // Sole participant: nothing to exchange, but the
+                // scatter descent still narrows the vector to this
+                // subtree's chunk range.
+                let pspan = tree.pspan(t);
+                let chunks = Chunks::new(total_elems, n);
+                let lo = chunks.start(me);
+                let hi = chunks.start((me + pspan).min(n));
+                data = data.slice(lo - off..hi - off);
+                off = lo;
+            }
+            continue;
+        }
+        let my_idx = tree.relative_rank(t, me);
+        match leg.kind {
+            LegKind::ReduceToLeader => {
+                if my_idx != 0 {
+                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, leg.compressed);
+                    // `data` is stale until the mirrored descent leg.
+                } else {
+                    for (j, m) in ps.iter().enumerate().skip(1) {
+                        let (theirs, t_in) =
+                            recv_vec(ctx, stream, *m, tag(li, j as u64), leg.compressed);
+                        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
+                        data = sum;
+                        data_t = t_sum;
+                    }
+                }
+            }
+
+            LegKind::GatherToLeader => {
+                if my_idx != 0 {
+                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, leg.compressed);
+                } else {
+                    let mut parts = Vec::with_capacity(k);
+                    let mut t_all = data_t;
+                    parts.push(data.clone());
+                    for (j, m) in ps.iter().enumerate().skip(1) {
+                        let (theirs, t_in) =
+                            recv_vec(ctx, stream, *m, tag(li, j as u64), leg.compressed);
+                        t_all = t_all.join(t_in);
+                        parts.push(theirs);
+                    }
+                    data = DeviceBuf::concat(&parts)?;
+                    data_t = t_all;
+                }
+            }
+
+            LegKind::AllreduceRedoub => {
+                // MPICH remainder scheme over the participant list —
+                // the PR 2 leader exchange, generalized from "one
+                // leader per node" to any tier's participants.
+                let pof2 = 1usize << (usize::BITS - 1 - k.leading_zeros()) as usize;
+                let rem = k - pof2;
+                let newidx: isize;
+                if my_idx < 2 * rem {
+                    if my_idx % 2 == 0 {
+                        send_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_FOLD), &data, data_t, leg.compressed);
+                        newidx = -1;
+                    } else {
+                        let (theirs, t_in) =
+                            recv_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_FOLD), leg.compressed);
+                        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
+                        data = sum;
+                        data_t = t_sum;
+                        newidx = (my_idx / 2) as isize;
+                    }
+                } else {
+                    newidx = (my_idx - rem) as isize;
+                }
+                if newidx >= 0 {
+                    let nr = newidx as usize;
+                    let mut mask = 1usize;
+                    let mut round: u64 = 0;
+                    while mask < pof2 {
+                        let peer_nr = nr ^ mask;
+                        let peer_idx = if peer_nr < rem {
+                            peer_nr * 2 + 1
+                        } else {
+                            peer_nr + rem
+                        };
+                        let peer = ps[peer_idx];
+                        send_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), &data, data_t, leg.compressed);
+                        let (theirs, t_in) =
+                            recv_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), leg.compressed);
+                        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
+                        data = sum;
+                        data_t = t_sum;
+                        mask <<= 1;
+                        round += 1;
+                    }
+                }
+                if my_idx < 2 * rem {
+                    if my_idx % 2 == 1 {
+                        send_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_UNFOLD), &data, data_t, leg.compressed);
+                    } else {
+                        let (result, t_in) =
+                            recv_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_UNFOLD), leg.compressed);
+                        data = result;
+                        data_t = t_in;
+                    }
+                }
+            }
+
+            LegKind::AllreduceRing => {
+                let next = ps[(my_idx + 1) % k];
+                let prev = ps[(my_idx + k - 1) % k];
+                let chunks = Chunks::new(data.elems(), k);
+                let mut acc: Vec<DeviceBuf> =
+                    (0..k).map(|c| data.slice(chunks.range(c))).collect();
+                let mut acc_t: Vec<VirtTime> = vec![data_t; k];
+                // Reduce-scatter phase.
+                for s in 1..k {
+                    let send_idx = (my_idx + k - s) % k;
+                    let recv_idx = (my_idx + k - s - 1) % k;
+                    if leg.compressed {
+                        let (c, t_c) = ctx.compress(stream, &acc[send_idx], acc_t[send_idx]);
+                        ctx.send(next, tag(li, OFF_RING_RS + s as u64), Payload::Comp(c), t_c);
+                        let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_RS + s as u64));
+                        let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                        let (sum, t_sum) =
+                            ctx.reduce(stream, &acc[recv_idx], &dec, t_dec.join(acc_t[recv_idx]))?;
+                        acc[recv_idx] = sum;
+                        acc_t[recv_idx] = t_sum;
+                    } else {
+                        ctx.send(
+                            next,
+                            tag(li, OFF_RING_RS + s as u64),
+                            Payload::Raw(acc[send_idx].clone()),
+                            acc_t[send_idx],
+                        );
+                        let (bin, t_in) = ctx.recv_raw(prev, tag(li, OFF_RING_RS + s as u64));
+                        let (sum, t_sum) =
+                            ctx.reduce(stream, &acc[recv_idx], &bin, t_in.join(acc_t[recv_idx]))?;
+                        acc[recv_idx] = sum;
+                        acc_t[recv_idx] = t_sum;
+                    }
+                }
+                // Allgather phase: forward finished chunks verbatim.
+                if leg.compressed {
+                    let (cmine, t0) = ctx.compress(stream, &acc[my_idx], acc_t[my_idx]);
+                    let mut outgoing: CompBuf = cmine;
+                    let mut out_t = t0;
+                    for s in 1..k {
+                        let recv_idx = (my_idx + k - s) % k;
+                        ctx.send(
+                            next,
+                            tag(li, OFF_RING_AG + s as u64),
+                            Payload::Comp(outgoing.clone()),
+                            out_t,
+                        );
+                        let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64));
+                        let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                        acc[recv_idx] = dec;
+                        acc_t[recv_idx] = t_dec;
+                        outgoing = cin;
+                        out_t = t_in;
+                    }
+                } else {
+                    let mut outgoing = acc[my_idx].clone();
+                    let mut out_t = acc_t[my_idx];
+                    for s in 1..k {
+                        let recv_idx = (my_idx + k - s) % k;
+                        ctx.send(
+                            next,
+                            tag(li, OFF_RING_AG + s as u64),
+                            Payload::Raw(outgoing.clone()),
+                            out_t,
+                        );
+                        let (bin, t_in) = ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64));
+                        acc[recv_idx] = bin.clone();
+                        acc_t[recv_idx] = t_in;
+                        outgoing = bin;
+                        out_t = t_in;
+                    }
+                }
+                data = DeviceBuf::concat(&acc)?;
+                data_t = acc_t.iter().fold(VirtTime::ZERO, |a, b| a.join(*b));
+            }
+
+            LegKind::AllgatherRing => {
+                let next = ps[(my_idx + 1) % k];
+                let prev = ps[(my_idx + k - 1) % k];
+                let mut blocks: Vec<Option<DeviceBuf>> = (0..k).map(|_| None).collect();
+                let mut t_all = data_t;
+                blocks[my_idx] = Some(data.clone());
+                if leg.compressed {
+                    let (cmine, t0) = ctx.compress(stream, &data, data_t);
+                    let mut outgoing: CompBuf = cmine;
+                    let mut out_t = t0;
+                    for s in 1..k {
+                        let recv_idx = (my_idx + k - s) % k;
+                        ctx.send(
+                            next,
+                            tag(li, OFF_RING_AG + s as u64),
+                            Payload::Comp(outgoing.clone()),
+                            out_t,
+                        );
+                        let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64));
+                        let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                        t_all = t_all.join(t_dec);
+                        blocks[recv_idx] = Some(dec);
+                        outgoing = cin;
+                        out_t = t_in;
+                    }
+                } else {
+                    let mut outgoing = data.clone();
+                    let mut out_t = data_t;
+                    for s in 1..k {
+                        let recv_idx = (my_idx + k - s) % k;
+                        ctx.send(
+                            next,
+                            tag(li, OFF_RING_AG + s as u64),
+                            Payload::Raw(outgoing.clone()),
+                            out_t,
+                        );
+                        let (bin, t_in) = ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64));
+                        t_all = t_all.join(t_in);
+                        blocks[recv_idx] = Some(bin.clone());
+                        outgoing = bin;
+                        out_t = t_in;
+                    }
+                }
+                let parts: Vec<DeviceBuf> = blocks.into_iter().map(|b| b.unwrap()).collect();
+                data = DeviceBuf::concat(&parts)?;
+                data_t = t_all;
+            }
+
+            LegKind::BcastFromLeader => {
+                if leg.compressed {
+                    // Compress-once stream forwarded down a binomial
+                    // tree: every consumer decodes exactly once.
+                    let mut held: Option<(CompBuf, VirtTime)> = None;
+                    if my_idx == 0 {
+                        ctx.memset(stream, data.bytes(), data_t);
+                        let (c, t_c) = ctx.compress(stream, &data, data_t);
+                        held = Some((c, t_c));
+                    }
+                    let mut mask = 1usize;
+                    while mask < k {
+                        if my_idx < mask {
+                            if my_idx + mask < k {
+                                let (c, t_c) = held.as_ref().expect("bcast sender holds the stream");
+                                ctx.send(
+                                    ps[my_idx + mask],
+                                    tag(li, (my_idx + mask) as u64),
+                                    Payload::Comp(c.clone()),
+                                    *t_c,
+                                );
+                            }
+                        } else if my_idx < 2 * mask {
+                            let (c, t_in) =
+                                ctx.recv_comp(ps[my_idx - mask], tag(li, my_idx as u64));
+                            held = Some((c, t_in));
+                        }
+                        mask <<= 1;
+                    }
+                    if my_idx != 0 {
+                        let (c, t_in) = held.expect("bcast member received the stream");
+                        let (d, t_d) = ctx.decompress(stream, &c, t_in);
+                        data = d;
+                        data_t = t_d;
+                    }
+                } else if my_idx == 0 {
+                    // Raw NVLink fan-out, members in rank order.
+                    for (j, m) in ps.iter().enumerate().skip(1) {
+                        ctx.send(*m, tag(li, j as u64), Payload::Raw(data.clone()), data_t);
+                    }
+                } else {
+                    let (d, t_in) = ctx.recv_raw(ps[0], tag(li, my_idx as u64));
+                    data = d;
+                    data_t = t_in;
+                }
+            }
+
+            LegKind::ScatterFromLeader => {
+                let pspan = tree.pspan(t);
+                let chunks = Chunks::new(total_elems, n);
+                if my_idx == 0 {
+                    for (j, m) in ps.iter().enumerate().skip(1) {
+                        let lo = chunks.start(*m);
+                        let hi = chunks.start((*m + pspan).min(n));
+                        let slice = data.slice(lo - off..hi - off);
+                        if leg.compressed && slice.elems() > 0 {
+                            let (c, t_c) = ctx.compress(stream, &slice, data_t);
+                            ctx.send(*m, tag(li, j as u64), Payload::Comp(c), t_c);
+                        } else {
+                            ctx.send(*m, tag(li, j as u64), Payload::Raw(slice), data_t);
+                        }
+                    }
+                    let lo = chunks.start(me);
+                    let hi = chunks.start((me + pspan).min(n));
+                    data = data.slice(lo - off..hi - off);
+                    off = lo;
+                } else {
+                    let lo = chunks.start(me);
+                    let hi = chunks.start((me + pspan).min(n));
+                    let (d, t_in) = if leg.compressed && hi > lo {
+                        let (c, t_in) = ctx.recv_comp(ps[0], tag(li, my_idx as u64));
+                        ctx.decompress(stream, &c, t_in)
+                    } else {
+                        ctx.recv_raw(ps[0], tag(li, my_idx as u64))
+                    };
+                    data = d;
+                    data_t = t_in;
+                    off = lo;
+                }
+            }
         }
     }
+    ctx.sync_device();
+    Ok(data)
+}
 
-    // ---- Restore the parked remainder leaders. ----------------------
-    if my_idx < 2 * rem {
-        if my_idx % 2 == 1 {
-            let peer = topo.leader_of_node(my_idx - 1);
-            send_whole(ctx, stream, peer, TAG_HIER_UNFOLD, &data, data_t);
-        } else {
-            let peer = topo.leader_of_node(my_idx + 1);
-            let (result, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_UNFOLD);
-            data = result;
-            data_t = t_in;
-        }
+/// Compile-and-run with the fewest-error schedule over the cluster's
+/// own [`TierTree`] — the default entry point for direct invocation
+/// (the [`crate::comm::Communicator`] passes cost-tuned schedules
+/// through the registry instead).
+fn hierarchical_default(ctx: &mut RankCtx, op: Op, input: DeviceBuf) -> Result<DeviceBuf> {
+    if ctx.nranks() <= 1 {
+        return Ok(input);
     }
-    Ok((data, data_t))
+    let tree: TierTree = ctx.tiers().clone();
+    let sched = compile_min_error(op, &tree, ctx.compression_enabled())?;
+    run_schedule(ctx, &sched, input)
+}
+
+/// Hierarchical Allreduce over the cluster's tier tree (the PR 2
+/// two-level schedule on 2-tier layouts). See the module docs.
+pub fn allreduce_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    hierarchical_default(ctx, Op::Allreduce, input)
+}
+
+/// Hierarchical Reduce_scatter: the Allreduce ascent and top exchange,
+/// then a scatter descent; rank `r` returns the fully-reduced chunk
+/// `r`. Compression stays on the tier-≥1 legs, so the worst-case error
+/// follows the tree (`≈ 2^⌈log₂ groups⌉` at the top), not the `N−1`
+/// linear stages of the ring — the compliant fallback tight accuracy
+/// budgets need.
+pub fn reduce_scatter_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    hierarchical_default(ctx, Op::ReduceScatter, input)
+}
+
+/// Hierarchical Allgather: concatenate blocks up the tree, ring the
+/// super-blocks across the top tier, broadcast the gathered vector
+/// down. Every origin block is compressed once per crossed tier
+/// (compress-once forwarding), never recompressed into aggregates.
+pub fn allgather_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+    hierarchical_default(ctx, Op::Allgather, input)
 }
 
 #[cfg(test)]
@@ -224,9 +498,14 @@ mod tests {
     use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
     use crate::net::Topology;
     use crate::testkit::Pcg32;
+    use crate::topo::compile_tuned;
 
     fn spec(n: usize, g: usize, policy: ExecPolicy) -> ClusterSpec {
         ClusterSpec::with_topology(Topology::new(n, g).unwrap(), policy)
+    }
+
+    fn spec_tiers(n: usize, widths: &[usize], policy: ExecPolicy) -> ClusterSpec {
+        ClusterSpec::with_tiers(TierTree::new(n, widths).unwrap(), policy)
     }
 
     /// Integer-valued inputs: f32 sums of small integers are exact, so
@@ -280,6 +559,39 @@ mod tests {
                     hier.outputs[r].as_real(),
                     ring.outputs[r].as_real(),
                     "n={n} g={g} rank {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn three_tier_matches_flat_ring_bitwise() {
+        // Deep trees, partial groups, width-1 tiers: still exact.
+        for (n, widths) in [
+            (16usize, &[2usize, 2, 4][..]),
+            (24, &[2, 3, 4][..]),
+            (13, &[2, 2, 4][..]),
+            (27, &[3, 3, 3][..]),
+            (32, &[2, 2, 2, 4][..]),
+        ] {
+            let inputs = int_inputs(n, 29, 7);
+            let ring = run_collective(
+                &spec(n, widths[0], ExecPolicy::nccl()),
+                inputs.clone(),
+                &allreduce_ring,
+            )
+            .unwrap();
+            let hier = run_collective(
+                &spec_tiers(n, widths, ExecPolicy::nccl()),
+                inputs,
+                &allreduce_hierarchical,
+            )
+            .unwrap();
+            for r in 0..n {
+                assert_eq!(
+                    hier.outputs[r].as_real(),
+                    ring.outputs[r].as_real(),
+                    "n={n} widths={widths:?} rank {r}"
                 );
             }
         }
@@ -352,6 +664,26 @@ mod tests {
     }
 
     #[test]
+    fn three_tier_cpr_counts_match_schedule_prediction() {
+        let n = 32;
+        let widths = [2usize, 4, 4];
+        let tree = TierTree::new(n, &widths).unwrap();
+        let sched = compile_min_error(Op::Allreduce, &tree, true).unwrap();
+        let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(1 << 14)).collect();
+        let report = run_collective(
+            &spec_tiers(n, &widths, ExecPolicy::gzccl()),
+            inputs,
+            &allreduce_hierarchical,
+        )
+        .unwrap();
+        for r in 0..n {
+            let (cpr, dec) = sched.cpr_stages_at(r);
+            assert_eq!(report.counters[r].compress_calls, cpr, "rank {r} compress");
+            assert_eq!(report.counters[r].decompress_calls, dec, "rank {r} decompress");
+        }
+    }
+
+    #[test]
     fn single_node_and_single_gpu_degenerate() {
         // One node: reduce-to-leader + broadcast, no internode leg.
         let inputs = int_inputs(4, 16, 3);
@@ -405,5 +737,150 @@ mod tests {
             hier.makespan,
             redoub.makespan
         );
+    }
+
+    #[test]
+    fn hierarchical_reduce_scatter_computes_chunked_sums() {
+        for (n, widths) in [
+            (8usize, &[4usize, 2][..]),
+            (12, &[2, 3, 2][..]),
+            (10, &[4, 3][..]),
+        ] {
+            let d = 97;
+            let inputs = real_inputs(n, d, 11);
+            let expect = exact_sum(&inputs);
+            // Uncompressed: exact up to f32 reassociation (integer test
+            // below is bitwise; here allow rounding noise).
+            let report = run_collective(
+                &spec_tiers(n, widths, ExecPolicy::nccl()),
+                inputs.clone(),
+                &reduce_scatter_hierarchical,
+            )
+            .unwrap();
+            let chunks = Chunks::new(d, n);
+            for r in 0..n {
+                let got = report.outputs[r].as_real();
+                let want = &expect[chunks.range(r)];
+                assert_eq!(got.len(), want.len(), "rank {r} length");
+                for (a, b) in got.iter().zip(want) {
+                    assert!((a - b).abs() < 1e-4, "n={n} rank {r}: {a} vs {b}");
+                }
+            }
+            // Compressed: error bounded by the schedule's amplification.
+            let eb = 1e-3;
+            let tree = TierTree::new(n, widths).unwrap();
+            let amp = compile_min_error(Op::ReduceScatter, &tree, true)
+                .unwrap()
+                .amplification();
+            let report = run_collective(
+                &spec_tiers(n, widths, ExecPolicy::gzccl()).with_error_bound(eb),
+                inputs,
+                &reduce_scatter_hierarchical,
+            )
+            .unwrap();
+            let tol = (amp as f32 + 1.0) * 1.5 * eb as f32;
+            for r in 0..n {
+                let got = report.outputs[r].as_real();
+                let want = &expect[chunks.range(r)];
+                for (a, b) in got.iter().zip(want) {
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "n={n} widths={widths:?} rank {r}: {a} vs {b} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_allgather_concatenates_in_rank_order() {
+        for (n, widths) in [(8usize, &[4usize, 2][..]), (12, &[2, 3, 2][..])] {
+            let d = 23;
+            let inputs = real_inputs(n, d, 21);
+            let expect: Vec<f32> = inputs.iter().flat_map(|b| b.as_real().to_vec()).collect();
+            // Uncompressed: bitwise concatenation.
+            let report = run_collective(
+                &spec_tiers(n, widths, ExecPolicy::nccl()),
+                inputs.clone(),
+                &allgather_hierarchical,
+            )
+            .unwrap();
+            for r in 0..n {
+                assert_eq!(report.outputs[r].as_real(), &expect[..], "rank {r}");
+            }
+            // Compressed: forwarded streams pay one eb per crossed
+            // tier.
+            let eb = 1e-4;
+            let tree = TierTree::new(n, widths).unwrap();
+            let amp = compile_min_error(Op::Allgather, &tree, true)
+                .unwrap()
+                .amplification();
+            let report = run_collective(
+                &spec_tiers(n, widths, ExecPolicy::gzccl()).with_error_bound(eb),
+                inputs,
+                &allgather_hierarchical,
+            )
+            .unwrap();
+            let tol = (amp as f32 + 1.0) * 1.5 * eb as f32;
+            for r in 0..n {
+                for (i, (a, b)) in report.outputs[r].as_real().iter().zip(&expect).enumerate() {
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "n={n} rank {r} elem {i}: {a} vs {b} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_three_tier_schedule_runs_and_matches_min_error_results() {
+        // The cost-tuned legs (in-group doubling, ring tops) change the
+        // timing, not the math: integer data stays bitwise equal to the
+        // flat ring.
+        let n = 24;
+        let widths = [2usize, 3, 4];
+        let tree = TierTree::new(n, &widths).unwrap();
+        let sched = compile_tuned(
+            Op::Allreduce,
+            &tree,
+            true,
+            64 << 20,
+            &crate::topo::CostModel::default_a100(),
+        )
+        .unwrap();
+        let inputs = int_inputs(n, 41, 77);
+        let ring = run_collective(
+            &spec(n, 2, ExecPolicy::nccl()),
+            inputs.clone(),
+            &allreduce_ring,
+        )
+        .unwrap();
+        let sched_for_run = sched.clone();
+        let hier = run_collective(
+            &spec_tiers(n, &widths, ExecPolicy::gzccl()),
+            inputs,
+            &move |ctx, input| run_schedule(ctx, &sched_for_run, input),
+        );
+        // gzccl policy compresses → only check shape/consistency here;
+        // run again uncompressed for the bitwise claim.
+        assert!(hier.is_ok());
+        let raw_sched = compile_tuned(
+            Op::Allreduce,
+            &tree,
+            false,
+            64 << 20,
+            &crate::topo::CostModel::default_a100(),
+        )
+        .unwrap();
+        let hier = run_collective(
+            &spec_tiers(n, &widths, ExecPolicy::nccl()),
+            int_inputs(n, 41, 77),
+            &move |ctx, input| run_schedule(ctx, &raw_sched, input),
+        )
+        .unwrap();
+        for r in 0..n {
+            assert_eq!(hier.outputs[r].as_real(), ring.outputs[r].as_real(), "rank {r}");
+        }
     }
 }

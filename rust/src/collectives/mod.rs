@@ -9,12 +9,16 @@
 //!
 //! | Op             | Algorithms                                            |
 //! |----------------|-------------------------------------------------------|
-//! | Reduce_scatter | ring                                                  |
-//! | Allgather      | ring, Bruck, recursive doubling                       |
+//! | Reduce_scatter | ring, hierarchical (multi-tier schedule)              |
+//! | Allgather      | ring, Bruck, recursive doubling, hierarchical         |
 //! | Allreduce      | ring (RS+AG), recursive doubling (gZ-ReDoub),         |
-//! |                | hierarchical (two-level, topology-aware)              |
+//! |                | hierarchical (multi-tier, topology-aware)             |
 //! | Scatter        | binomial tree (gZ-Scatter multi-stream), any root     |
 //! | Bcast          | binomial tree, any root                               |
+//!
+//! The hierarchical variants execute schedules compiled by
+//! [`crate::topo::schedule`] from the cluster's
+//! [`crate::topo::TierTree`] — see [`hierarchical`].
 
 pub mod allgather;
 pub mod allreduce;
@@ -28,7 +32,9 @@ pub use allgather::{allgather_bruck, allgather_recursive_doubling, allgather_rin
 pub use allreduce::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
 pub use bcast::bcast_binomial;
 pub use chunking::Chunks;
-pub use hierarchical::allreduce_hierarchical;
+pub use hierarchical::{
+    allgather_hierarchical, allreduce_hierarchical, reduce_scatter_hierarchical, run_schedule,
+};
 pub use reduce_scatter::reduce_scatter_ring;
 pub use scatter::scatter_binomial;
 

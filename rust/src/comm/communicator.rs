@@ -1,7 +1,8 @@
 //! The [`Communicator`]: NCCL/MPI-style entry point for collectives.
 
 use crate::accuracy::{
-    complies, plan_auto, predict_worst, AccuracyReport, AccuracyTarget, BudgetPlan, ErrorProbe,
+    complies_tiers, plan_auto_tiers, predict_worst_tiers, split_across_tiers, AccuracyReport,
+    AccuracyTarget, BudgetPlan, ErrorPrediction, ErrorProbe, TieredPlan,
 };
 use crate::collectives::{Algo, Op};
 use crate::compress::CompressionProfile;
@@ -10,6 +11,7 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::Topology;
+use crate::topo::{compile_min_error, CostModel, Schedule, TierTree};
 
 use super::registry::AlgoRegistry;
 use super::tuner::{AlgoHint, CollectiveSpec, Tuner};
@@ -24,9 +26,11 @@ use super::tuner::{AlgoHint, CollectiveSpec, Tuner};
 pub struct CommBuilder {
     ranks: usize,
     gpus_per_node: usize,
+    tiers: Option<Vec<usize>>,
     policy: ExecPolicy,
     error_bound: Option<f64>,
     accuracy_target: Option<AccuracyTarget>,
+    value_range: Option<f64>,
     iterations: usize,
     profile: Option<CompressionProfile>,
     tuner: Option<Tuner>,
@@ -39,9 +43,11 @@ impl CommBuilder {
         CommBuilder {
             ranks,
             gpus_per_node: 4,
+            tiers: None,
             policy: ExecPolicy::gzccl(),
             error_bound: None,
             accuracy_target: None,
+            value_range: None,
             iterations: 1,
             profile: None,
             tuner: None,
@@ -94,6 +100,24 @@ impl CommBuilder {
         self
     }
 
+    /// Explicit multi-tier layout, innermost width first
+    /// (`[gpus_per_node, nodes_per_rack, racks, …]` — the `--tiers
+    /// 4x16x8` CLI form). Overrides [`CommBuilder::gpus_per_node`]:
+    /// the first width *is* the GPUs per node. The widths must cover
+    /// the rank count (one top group).
+    pub fn tiers(mut self, widths: &[usize]) -> Self {
+        self.tiers = Some(widths.to_vec());
+        self
+    }
+
+    /// Payload value range, used to resolve a relative accuracy target
+    /// ([`AccuracyTarget::RelError`]) into an absolute bound at plan
+    /// time. Ignored by the self-contained target forms.
+    pub fn value_range(mut self, range: f64) -> Self {
+        self.value_range = Some(range);
+        self
+    }
+
     /// Override the tuner (custom crossover knees).
     pub fn tuner(mut self, tuner: Tuner) -> Self {
         self.tuner = Some(tuner);
@@ -107,7 +131,10 @@ impl CommBuilder {
     /// any target, and the error-bounded policy gets its per-call `eb`
     /// derived from the target.
     pub fn build(self) -> Result<Communicator> {
-        let topo = Topology::new(self.ranks, self.gpus_per_node)?;
+        let tree = match &self.tiers {
+            Some(widths) => TierTree::new(self.ranks, widths)?,
+            None => TierTree::from(&Topology::new(self.ranks, self.gpus_per_node)?),
+        };
         let mut plan: Option<BudgetPlan> = None;
         if let Some(target) = self.accuracy_target {
             match self.policy.compression {
@@ -118,16 +145,22 @@ impl CommBuilder {
                             "set either .error_bound() or .accuracy_target(), not both",
                         ));
                     }
-                    plan = Some(plan_auto(
+                    plan = Some(plan_auto_tiers(
                         target,
+                        self.value_range,
                         self.iterations,
-                        &topo,
+                        &tree,
                         self.policy.compression,
                     )?);
                 }
             }
         }
-        let mut spec = ClusterSpec::with_topology(topo, self.policy);
+        // Per-tier view of the budget (multi-tier trees; informational
+        // until per-leg compressor bounds land in the executor).
+        let tiered = plan
+            .as_ref()
+            .and_then(|p| split_across_tiers(p, Op::Allreduce, &tree, None).ok());
+        let mut spec = ClusterSpec::with_tiers(tree, self.policy);
         if let Some(eb) = self.error_bound {
             spec.error_bound = eb;
         }
@@ -141,6 +174,7 @@ impl CommBuilder {
             spec,
             tuner: self.tuner.unwrap_or_default(),
             plan,
+            tiered,
         })
     }
 }
@@ -156,6 +190,10 @@ pub struct CollectiveReport {
     /// Whether the [`Tuner`] chose the algorithm (`AlgoHint::Auto`) as
     /// opposed to a forced hint.
     pub auto_tuned: bool,
+    /// The compiled hierarchical schedule the dispatch executed
+    /// (`Some` only for [`Algo::Hierarchical`]): its tree depth and
+    /// per-tier legs are the tuner's per-tier decision record.
+    pub schedule: Option<Schedule>,
     /// Accuracy telemetry: predicted worst-case bound vs observed max
     /// deviation on a deterministic element sample. `Some` only for
     /// compressed collectives over real payloads (see
@@ -180,6 +218,7 @@ pub struct Communicator {
     spec: ClusterSpec,
     tuner: Tuner,
     plan: Option<BudgetPlan>,
+    tiered: Option<TieredPlan>,
 }
 
 impl Communicator {
@@ -194,6 +233,7 @@ impl Communicator {
             spec,
             tuner: Tuner::default(),
             plan: None,
+            tiered: None,
         }
     }
 
@@ -201,6 +241,28 @@ impl Communicator {
     /// [`CommBuilder::accuracy_target`] under a compressed policy.
     pub fn budget_plan(&self) -> Option<&BudgetPlan> {
         self.plan.as_ref()
+    }
+
+    /// The per-tier split of the budget plan (multi-tier layouts under
+    /// a budget; `None` when nothing compresses or no budget is set).
+    pub fn tiered_plan(&self) -> Option<&TieredPlan> {
+        self.tiered.as_ref()
+    }
+
+    /// The full multi-tier layout this communicator spans.
+    pub fn tiers(&self) -> &TierTree {
+        &self.spec.tiers
+    }
+
+    /// The analytic cost model the tuner prices schedules with at a
+    /// given message size (device kernels, per-tier links, effective
+    /// compression ratio).
+    fn cost_model(&self, msg_bytes: usize) -> CostModel {
+        CostModel::new(
+            self.spec.gpu,
+            self.spec.tier_links(),
+            self.spec.profile.effective_ratio(msg_bytes.max(1)),
+        )
     }
 
     /// Communicator size.
@@ -293,7 +355,11 @@ impl Communicator {
                 self.nranks()
             )));
         }
-        let (algo, auto_tuned) = match spec.hint {
+        // One cost model per dispatch, shared by selection and schedule
+        // compilation; the auto path reuses the schedule its selection
+        // sweep already compiled.
+        let cost = self.cost_model(msg_bytes);
+        let (algo, auto_tuned, preselected) = match spec.hint {
             AlgoHint::Force(algo) => {
                 if !AlgoRegistry::is_supported(op, algo) {
                     return Err(Error::collective(format!(
@@ -305,7 +371,7 @@ impl Communicator {
                 // algorithm whose stage count blows the planned bound
                 // is rejected instead of silently missing the target.
                 if let Some(plan) = &self.plan {
-                    if !complies(plan, op, algo, &self.spec.topo, spec.root) {
+                    if !complies_tiers(plan, op, algo, &self.spec.tiers, spec.root) {
                         return Err(Error::budget(format!(
                             "forced {algo:?} rejected by the accuracy budget: its worst-case \
                              error exceeds the per-call bound {:.3e} (planned eb {:.3e})",
@@ -313,49 +379,91 @@ impl Communicator {
                         )));
                     }
                 }
-                (algo, false)
+                (algo, false, None)
             }
-            AlgoHint::Auto => {
-                let algo = match &self.plan {
-                    Some(plan) => self.tuner.select_within_budget(
+            AlgoHint::Auto => match &self.plan {
+                Some(plan) => {
+                    let algo = self.tuner.select_within_budget_tiers(
                         op,
                         self.spec.policy,
-                        &self.spec.topo,
+                        &self.spec.tiers,
+                        &cost,
                         msg_bytes,
                         spec.root,
                         plan,
-                    )?,
-                    None => self.tuner.select_with_topology(
+                    )?;
+                    (algo, true, None)
+                }
+                None => {
+                    let (algo, sched) = self.tuner.select_with_tiers_scheduled(
                         op,
                         self.spec.policy,
-                        &self.spec.topo,
+                        &self.spec.tiers,
+                        &cost,
                         msg_bytes,
-                    ),
-                };
-                (algo, true)
-            }
+                    );
+                    (algo, true, sched)
+                }
+            },
+        };
+        // Hierarchical dispatch runs a compiled schedule: cost-tuned
+        // per-tier legs normally; under a budget, the min-error legs
+        // the plan's amplification certified.
+        let compressed = self.spec.policy.compression != CompressionMode::None;
+        let schedule: Option<Schedule> = if algo == Algo::Hierarchical
+            && matches!(op, Op::Allreduce | Op::ReduceScatter | Op::Allgather)
+        {
+            Some(match (&self.plan, preselected) {
+                (Some(_), _) => compile_min_error(op, &self.spec.tiers, compressed)?,
+                (None, Some(s)) => s,
+                (None, None) => self.tuner.plan_schedule(
+                    op,
+                    self.spec.policy,
+                    &self.spec.tiers,
+                    &cost,
+                    msg_bytes,
+                )?,
+            })
+        } else {
+            None
         };
         // Telemetry probe: sample the exact reference before the inputs
         // are consumed (compressed collectives on real payloads only).
-        let probe = if self.spec.policy.compression != CompressionMode::None {
+        let probe = if compressed {
             ErrorProbe::prepare(op, &inputs, spec.root)
         } else {
             None
         };
-        let program = AlgoRegistry::resolve(op, algo, total_elems, spec.root)?;
+        let program =
+            AlgoRegistry::resolve_scheduled(op, algo, total_elems, spec.root, schedule.clone())?;
         let mut report = run_collective(&self.spec, inputs, &*program)?;
+        // The error prediction follows the schedule that actually ran:
+        // compiled legs are walked directly, flat algorithms use the
+        // closed-form model.
+        let prediction = match (self.spec.policy.compression, &schedule) {
+            (CompressionMode::None, _) => Some(ErrorPrediction::Exact),
+            (CompressionMode::FixedRate, _) => Some(ErrorPrediction::Unbounded),
+            (CompressionMode::ErrorBounded, Some(s)) => {
+                let m = s.amplification();
+                Some(if m == 0.0 {
+                    ErrorPrediction::Exact
+                } else {
+                    ErrorPrediction::Bounded(m * self.spec.error_bound)
+                })
+            }
+            (CompressionMode::ErrorBounded, None) => predict_worst_tiers(
+                op,
+                algo,
+                &self.spec.tiers,
+                spec.root,
+                CompressionMode::ErrorBounded,
+                self.spec.error_bound,
+            ),
+        };
         let accuracy = probe
             .and_then(|p| p.observe(&report.outputs))
             .and_then(|obs| {
-                predict_worst(
-                    op,
-                    algo,
-                    &self.spec.topo,
-                    spec.root,
-                    self.spec.policy.compression,
-                    self.spec.error_bound,
-                )
-                .map(|prediction| AccuracyReport {
+                prediction.map(|prediction| AccuracyReport {
                     prediction,
                     observed_max_err: obs.observed_max_err,
                     samples: obs.samples,
@@ -378,6 +486,7 @@ impl Communicator {
             op,
             algo,
             auto_tuned,
+            schedule,
             accuracy,
             report,
         })
@@ -587,6 +696,94 @@ mod tests {
             .unwrap()
             .accuracy
             .is_none());
+    }
+
+    #[test]
+    fn tiers_builder_and_schedule_record() {
+        let comm = Communicator::builder(24)
+            .tiers(&[2, 3, 4])
+            .error_bound(1e-3)
+            .build()
+            .unwrap();
+        assert_eq!(comm.tiers().widths(), &[2, 3, 4]);
+        assert_eq!(comm.cluster().topo.gpus_per_node(), 2);
+        assert_eq!(comm.cluster().uplinks.len(), 1, "one uplink tier above node level");
+        let out = comm
+            .allreduce(
+                real_inputs(24, 64, 3),
+                &CollectiveSpec::forced(Algo::Hierarchical),
+            )
+            .unwrap();
+        let sched = out
+            .schedule
+            .as_ref()
+            .expect("hierarchical dispatch records its schedule");
+        assert!(sched.tree.depth() >= 2);
+        // The prediction attached to telemetry is the executed
+        // schedule's own amplification.
+        let acc = out.accuracy.expect("real compressed payloads probe");
+        assert_eq!(
+            acc.prediction.bound(),
+            Some(sched.amplification() * comm.cluster().error_bound)
+        );
+        assert_eq!(acc.within_bound(), Some(true), "{acc:?}");
+        // Non-hierarchical dispatch carries no schedule.
+        let flat = comm
+            .allreduce(real_inputs(24, 64, 4), &CollectiveSpec::forced(Algo::Ring))
+            .unwrap();
+        assert!(flat.schedule.is_none());
+        // A tier spec that does not cover the ranks is a build error.
+        assert!(Communicator::builder(24).tiers(&[2, 2]).build().is_err());
+    }
+
+    #[test]
+    fn relative_target_and_tiered_plan() {
+        use crate::accuracy::AccuracyTarget;
+        // RelError resolves against the declared value range at build.
+        let comm = Communicator::builder(32)
+            .tiers(&[2, 4, 4])
+            .accuracy_target(AccuracyTarget::RelError(1e-3))
+            .value_range(2.0)
+            .build()
+            .unwrap();
+        let plan = *comm.budget_plan().unwrap();
+        assert!((plan.per_call_abs - 2e-3).abs() < 1e-15);
+        // Multi-tier budget: the per-tier split is attached and sound.
+        let tiered = comm.tiered_plan().expect("3-tier budget splits across tiers");
+        assert!(tiered.predicted_total() <= plan.per_call_abs * (1.0 + 1e-9));
+        assert!(tiered.tier(0).is_none(), "tier 0 stays raw");
+        assert!(tiered.tier(1).is_some() && tiered.tier(2).is_some());
+        // Without a range the relative target is rejected at build.
+        assert!(Communicator::builder(32)
+            .accuracy_target(AccuracyTarget::RelError(1e-3))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn budgeted_reduce_scatter_dispatches_hierarchical() {
+        use crate::accuracy::AccuracyTarget;
+        // PR 3 vetoed Reduce_scatter outright under tight budgets (its
+        // only algorithm paid N−1 linear stages); the schedule engine
+        // gives the veto a compliant fallback.
+        let n = 32;
+        let comm = Communicator::builder(n)
+            .gpus_per_node(4)
+            .accuracy_target(AccuracyTarget::AbsError(1e-3))
+            .build()
+            .unwrap();
+        let out = comm
+            .reduce_scatter(real_inputs(n, 256, 8), &CollectiveSpec::auto())
+            .unwrap();
+        assert_eq!(out.algo, Algo::Hierarchical);
+        assert!(out.auto_tuned);
+        let acc = out.accuracy.expect("telemetry on real compressed payloads");
+        assert_eq!(acc.within_bound(), Some(true), "{acc:?}");
+        // The flat ring is still refused when forced.
+        assert!(matches!(
+            comm.reduce_scatter(real_inputs(n, 256, 9), &CollectiveSpec::forced(Algo::Ring)),
+            Err(Error::Budget(_))
+        ));
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //! dispatches through [`AlgoRegistry::resolve`].
 
 use crate::collectives::{
-    allgather_bruck, allgather_recursive_doubling, allgather_ring, allreduce_hierarchical,
-    allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring, bcast_binomial,
-    reduce_scatter_ring, scatter_binomial, Algo, Op,
+    allgather_bruck, allgather_hierarchical, allgather_recursive_doubling, allgather_ring,
+    allreduce_hierarchical, allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
+    bcast_binomial, reduce_scatter_hierarchical, reduce_scatter_ring, run_schedule,
+    scatter_binomial, Algo, Op,
 };
 use crate::coordinator::{DeviceBuf, RankCtx, RankProgram};
 use crate::error::{Error, Result};
+use crate::topo::Schedule;
 
 /// Static registry of implemented `(Op, Algo)` pairs.
 pub struct AlgoRegistry;
@@ -34,8 +36,13 @@ impl AlgoRegistry {
                 Algo::Hierarchical,
                 Algo::Binomial,
             ],
-            Op::Allgather => &[Algo::Ring, Algo::RecursiveDoubling, Algo::Bruck],
-            Op::ReduceScatter => &[Algo::Ring],
+            Op::Allgather => &[
+                Algo::Ring,
+                Algo::RecursiveDoubling,
+                Algo::Bruck,
+                Algo::Hierarchical,
+            ],
+            Op::ReduceScatter => &[Algo::Ring, Algo::Hierarchical],
             Op::Scatter => &[Algo::Binomial],
             Op::Bcast => &[Algo::Binomial],
         }
@@ -50,6 +57,40 @@ impl AlgoRegistry {
     /// full-vector element count for Scatter (ignored elsewhere);
     /// `root` is the root rank for the one-to-all collectives.
     pub fn resolve(op: Op, algo: Algo, total_elems: usize, root: usize) -> Result<Box<RankProgram>> {
+        Self::resolve_scheduled(op, algo, total_elems, root, None)
+    }
+
+    /// [`AlgoRegistry::resolve`] with an optional pre-compiled
+    /// hierarchical [`Schedule`]: when the dispatcher already chose the
+    /// per-tier legs (cost-tuned or budget-constrained), the program
+    /// executes exactly that schedule; without one the hierarchical
+    /// free functions compile the min-error default from the cluster's
+    /// own tier tree. Non-hierarchical pairs ignore the schedule.
+    pub fn resolve_scheduled(
+        op: Op,
+        algo: Algo,
+        total_elems: usize,
+        root: usize,
+        schedule: Option<Schedule>,
+    ) -> Result<Box<RankProgram>> {
+        match (op, algo, schedule) {
+            (
+                Op::Allreduce | Op::ReduceScatter | Op::Allgather,
+                Algo::Hierarchical,
+                Some(s),
+            ) => {
+                return Ok(Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
+                    run_schedule(ctx, &s, input)
+                }));
+            }
+            (_, Algo::Hierarchical, Some(_)) => {
+                return Err(Error::collective(format!(
+                    "no {algo:?} implementation for {op:?} (supported: {:?})",
+                    Self::supported(op)
+                )));
+            }
+            _ => {}
+        }
         let program: Box<RankProgram> = match (op, algo) {
             // Single-rank communicators: every collective is a no-op.
             (_, Algo::Identity) => {
@@ -62,7 +103,9 @@ impl AlgoRegistry {
             (Op::Allgather, Algo::Ring) => Box::new(allgather_ring),
             (Op::Allgather, Algo::RecursiveDoubling) => Box::new(allgather_recursive_doubling),
             (Op::Allgather, Algo::Bruck) => Box::new(allgather_bruck),
+            (Op::Allgather, Algo::Hierarchical) => Box::new(allgather_hierarchical),
             (Op::ReduceScatter, Algo::Ring) => Box::new(reduce_scatter_ring),
+            (Op::ReduceScatter, Algo::Hierarchical) => Box::new(reduce_scatter_hierarchical),
             (Op::Scatter, Algo::Binomial) => Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
                 scatter_binomial(ctx, input, total_elems, root)
             }),
@@ -121,7 +164,36 @@ mod tests {
         assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Ring));
         assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Ring, 128, 0).is_err());
         assert!(AlgoRegistry::resolve(Op::ReduceScatter, Algo::Bruck, 0, 0).is_err());
-        assert!(!AlgoRegistry::is_supported(Op::Allgather, Algo::Hierarchical));
-        assert!(AlgoRegistry::resolve(Op::Allgather, Algo::Hierarchical, 0, 0).is_err());
+        // The schedule engine extended Hierarchical to the root-free
+        // ops; the rooted binomial trees stay out of its reach.
+        assert!(AlgoRegistry::is_supported(Op::Allgather, Algo::Hierarchical));
+        assert!(AlgoRegistry::is_supported(Op::ReduceScatter, Algo::Hierarchical));
+        assert!(AlgoRegistry::resolve(Op::Allgather, Algo::Hierarchical, 0, 0).is_ok());
+        assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Hierarchical));
+        assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Hierarchical, 0, 0).is_err());
+    }
+
+    #[test]
+    fn scheduled_resolve_runs_the_compiled_legs() {
+        use crate::topo::{compile_min_error, TierTree};
+        let tree = TierTree::new(8, &[2, 2, 2]).unwrap();
+        let sched = compile_min_error(Op::Allreduce, &tree, false).unwrap();
+        assert!(AlgoRegistry::resolve_scheduled(
+            Op::Allreduce,
+            Algo::Hierarchical,
+            0,
+            0,
+            Some(sched.clone())
+        )
+        .is_ok());
+        // A schedule cannot graft Hierarchical onto a rooted op.
+        assert!(AlgoRegistry::resolve_scheduled(
+            Op::Bcast,
+            Algo::Hierarchical,
+            0,
+            0,
+            Some(sched)
+        )
+        .is_err());
     }
 }

@@ -33,6 +33,15 @@
 //! hierarchical leader funnel saves too little to beat the flat
 //! schedules in the bandwidth-bound regime.
 //!
+//! **Per-tier crossover** ([`Tuner::select_with_tiers`],
+//! [`Tuner::plan_schedule`]): on an N-level [`crate::topo::TierTree`]
+//! the decision is priced by the [`crate::topo::CostModel`] — every
+//! collapsed depth of the tree is compiled
+//! ([`crate::topo::compile_tuned`] picks ring vs. doubling **per
+//! tier**) and estimated against the physical tree's oversubscribed
+//! uplinks, alongside the flat ring and flat gZ-ReDoub. Two-tier trees
+//! reduce exactly to the rule-based model above.
+//!
 //! Degenerate single-rank communicators short-circuit to
 //! [`Algo::Identity`] — an explicit no-op decision — so `OpCounters`
 //! records are not polluted with a phantom ring dispatch.
@@ -42,12 +51,16 @@
 //! invariant), and falls back to Bruck for latency-bound uncompressed
 //! messages.
 
-use crate::accuracy::budget::{complies, BudgetPlan};
+use crate::accuracy::budget::{complies_tiers, BudgetPlan};
 use crate::collectives::{Algo, Op};
 use crate::coordinator::{CompressionMode, ExecPolicy};
 use crate::error::{Error, Result};
 use crate::gpu::GpuModel;
 use crate::net::Topology;
+use crate::topo::{
+    compile_tuned, estimate_flat_allgather, estimate_flat_redoub, estimate_flat_reduce_scatter,
+    estimate_flat_ring, CostModel, Schedule, TierTree,
+};
 
 use super::registry::AlgoRegistry;
 
@@ -245,6 +258,127 @@ impl Tuner {
         self.select(op, policy, n, msg_bytes)
     }
 
+    /// Compile the hierarchical schedule the cost model prefers for
+    /// `op` on `tree`: per-tier legs from
+    /// [`crate::topo::compile_tuned`] (ring vs. doubling per tier —
+    /// the per-tier crossover), and the schedule **depth** chosen by
+    /// estimated makespan over every [`TierTree::collapsed`] view — a
+    /// deep tree may still be best served by its two-level collapse
+    /// (e.g. when the payload is tiny and extra tiers only add
+    /// latency).
+    pub fn plan_schedule(
+        &self,
+        op: Op,
+        policy: ExecPolicy,
+        tree: &TierTree,
+        cost: &CostModel,
+        msg_bytes: usize,
+    ) -> Result<Schedule> {
+        let compressed = policy.compression != CompressionMode::None;
+        let depths: Vec<usize> = if tree.depth() <= 2 {
+            vec![tree.depth()]
+        } else {
+            (2..=tree.depth()).collect()
+        };
+        let mut best: Option<(f64, Schedule)> = None;
+        for d in depths {
+            let sched = compile_tuned(op, &tree.collapsed(d), compressed, msg_bytes, cost)?;
+            let c = sched.estimate_makespan(tree, cost, msg_bytes);
+            let better = match &best {
+                None => true,
+                Some((bc, _)) => c < *bc,
+            };
+            if better {
+                best = Some((c, sched));
+            }
+        }
+        Ok(best.expect("at least one depth candidate").1)
+    }
+
+    /// Tier-aware selection over an N-level [`TierTree`]: on 2-tier
+    /// layouts this is exactly [`Tuner::select_with_topology`]; on
+    /// deeper trees (compressed policies) the decision is the cost
+    /// model's — flat ring vs. flat gZ-ReDoub vs. the best compiled
+    /// hierarchical schedule, each priced against the physical tree's
+    /// oversubscribed uplinks.
+    pub fn select_with_tiers(
+        &self,
+        op: Op,
+        policy: ExecPolicy,
+        tree: &TierTree,
+        cost: &CostModel,
+        msg_bytes: usize,
+    ) -> Algo {
+        self.select_with_tiers_scheduled(op, policy, tree, cost, msg_bytes).0
+    }
+
+    /// [`Tuner::select_with_tiers`] that also hands back the compiled
+    /// hierarchical schedule when that is the winning choice — the
+    /// dispatcher executes exactly it, without re-running the depth
+    /// sweep the selection already priced.
+    pub fn select_with_tiers_scheduled(
+        &self,
+        op: Op,
+        policy: ExecPolicy,
+        tree: &TierTree,
+        cost: &CostModel,
+        msg_bytes: usize,
+    ) -> (Algo, Option<Schedule>) {
+        let n = tree.ranks();
+        if n <= 1 {
+            return (Algo::Identity, None);
+        }
+        if tree.depth() <= 2 {
+            return (
+                self.select_with_topology(op, policy, &tree.to_topology(), msg_bytes),
+                None,
+            );
+        }
+        if policy.compression == CompressionMode::None {
+            // Without kernel floors to amortize the flat rules hold.
+            return (self.select(op, policy, n, msg_bytes), None);
+        }
+        let hier = self.plan_schedule(op, policy, tree, cost, msg_bytes).ok();
+        let hier_cost = hier
+            .as_ref()
+            .map_or(f64::INFINITY, |s| s.estimate_makespan(tree, cost, msg_bytes));
+        match op {
+            Op::Allreduce | Op::ReduceScatter => {
+                let ring = if op == Op::Allreduce {
+                    estimate_flat_ring(tree, cost, msg_bytes, true)
+                } else {
+                    // The flat ring Reduce_scatter pays only N−1
+                    // rounds, not the Allreduce's 2(N−1).
+                    estimate_flat_reduce_scatter(tree, cost, msg_bytes, true)
+                };
+                let redoub = if op == Op::Allreduce {
+                    estimate_flat_redoub(tree, cost, msg_bytes, true)
+                } else {
+                    // No flat log-step Reduce_scatter is implemented.
+                    f64::INFINITY
+                };
+                if hier_cost <= ring && hier_cost <= redoub {
+                    (Algo::Hierarchical, hier)
+                } else if ring <= redoub {
+                    (Algo::Ring, None)
+                } else {
+                    (Algo::RecursiveDoubling, None)
+                }
+            }
+            Op::Allgather => {
+                // The flat ring already compresses each block once;
+                // hierarchy only wins when uplink relief pays for the
+                // extra crossings.
+                if hier_cost < estimate_flat_allgather(tree, cost, msg_bytes, true) {
+                    (Algo::Hierarchical, hier)
+                } else {
+                    (Algo::Ring, None)
+                }
+            }
+            Op::Scatter | Op::Bcast => (self.select(op, policy, n, msg_bytes), None),
+        }
+    }
+
     /// Topology-aware selection under an accuracy budget (the
     /// **accuracy veto**): the performance-preferred algorithm is taken
     /// only if its worst-case predicted error fits the plan's per-call
@@ -264,21 +398,46 @@ impl Tuner {
         root: usize,
         plan: &BudgetPlan,
     ) -> Result<Algo> {
-        let preferred = self.select_with_topology(op, policy, topo, msg_bytes);
-        if complies(plan, op, preferred, topo, root) {
+        self.select_within_budget_tiers(
+            op,
+            policy,
+            &TierTree::from(topo),
+            &CostModel::default_a100(),
+            msg_bytes,
+            root,
+            plan,
+        )
+    }
+
+    /// [`Tuner::select_within_budget`] over an N-level [`TierTree`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_within_budget_tiers(
+        &self,
+        op: Op,
+        policy: ExecPolicy,
+        tree: &TierTree,
+        cost: &CostModel,
+        msg_bytes: usize,
+        root: usize,
+        plan: &BudgetPlan,
+    ) -> Result<Algo> {
+        let preferred = self.select_with_tiers(op, policy, tree, cost, msg_bytes);
+        if complies_tiers(plan, op, preferred, tree, root) {
             return Ok(preferred);
         }
         // Fallback order: fewest compression stages first (the veto
-        // exists precisely because fewer stages mean less error).
-        let candidates: &[Algo] = if op == Op::Allreduce {
-            &[Algo::Hierarchical, Algo::RecursiveDoubling, Algo::Ring]
-        } else {
-            AlgoRegistry::supported(op)
+        // exists precisely because fewer stages mean less error). The
+        // hierarchical Reduce_scatter is what gives tight budgets a
+        // compliant fallback instead of a hard rejection.
+        let candidates: &[Algo] = match op {
+            Op::Allreduce => &[Algo::Hierarchical, Algo::RecursiveDoubling, Algo::Ring],
+            Op::ReduceScatter => &[Algo::Hierarchical, Algo::Ring],
+            _ => AlgoRegistry::supported(op),
         };
         for &algo in candidates {
             if algo != preferred
                 && AlgoRegistry::is_supported(op, algo)
-                && complies(plan, op, algo, topo, root)
+                && complies_tiers(plan, op, algo, tree, root)
             {
                 return Ok(algo);
             }
@@ -474,15 +633,75 @@ mod tests {
                 .unwrap(),
             Algo::Hierarchical
         );
-        // An op whose only algorithm cannot certify the budget errors.
-        assert!(t
-            .select_within_budget(Op::ReduceScatter, p, &layout, MIB, 0, &plan)
-            .is_err());
+        // Reduce_scatter's ring pays 31 linear stages and used to be a
+        // hard rejection; the hierarchical schedule is the compliant
+        // fallback the ROADMAP asked for.
+        assert_eq!(
+            t.select_within_budget(Op::ReduceScatter, p, &layout, MIB, 0, &plan)
+                .unwrap(),
+            Algo::Hierarchical
+        );
+        // With no compliant algorithm at all the veto still errors: a
+        // tighter-than-anchor per-call budget (anchor m=7, iterations
+        // split below any schedule's reach is impossible here, so probe
+        // an op whose only algorithms exceed the anchor).
+        assert!(!crate::accuracy::complies(
+            &plan,
+            Op::ReduceScatter,
+            Algo::Ring,
+            &layout,
+            0
+        ));
         // Compress-once ops sail through.
         assert_eq!(
             t.select_within_budget(Op::Bcast, p, &layout, MIB, 0, &plan).unwrap(),
             Algo::Binomial
         );
+    }
+
+    #[test]
+    fn tier_aware_selection_adds_the_depth_axis() {
+        use crate::topo::{CostModel, LegKind, TierTree};
+        let t = Tuner::default();
+        let p = ExecPolicy::gzccl();
+        let cost = CostModel::default_a100();
+        // 2-tier trees delegate to the existing crossover exactly.
+        let two = TierTree::new(128, &[4, 32]).unwrap();
+        assert_eq!(
+            t.select_with_tiers(Op::Allreduce, p, &two, &cost, 64 * MIB),
+            t.select_with_topology(Op::Allreduce, p, &topo(128, 4), 64 * MIB)
+        );
+        // The acceptance tree: 512 ranks, 4 GPUs/node, 16 nodes/rack,
+        // 8 racks at 64 MiB → the 3-tier hierarchical schedule.
+        let three = TierTree::new(512, &[4, 16, 8]).unwrap();
+        assert_eq!(
+            t.select_with_tiers(Op::Allreduce, p, &three, &cost, 64 * MIB),
+            Algo::Hierarchical
+        );
+        let sched = t
+            .plan_schedule(Op::Allreduce, p, &three, &cost, 64 * MIB)
+            .unwrap();
+        assert_eq!(sched.tree.depth(), 3, "tuner must keep the rack tier");
+        assert!(sched.legs.iter().any(|l| l.tier == 2));
+        // Per-tier leg choice: the 16-wide rack ascent runs in-group
+        // doubling, not a sequential leader fold.
+        assert_eq!(sched.legs[1].kind, LegKind::AllreduceRedoub);
+        // Hierarchical Reduce_scatter is selected on deep trees too
+        // (the flat ring's 1022 chunk kernels are floor-bound).
+        assert_eq!(
+            t.select_with_tiers(Op::ReduceScatter, p, &three, &cost, 64 * MIB),
+            Algo::Hierarchical
+        );
+        // Uncompressed deep trees keep the flat latency/bandwidth rule.
+        assert_eq!(
+            t.select_with_tiers(Op::Allreduce, ExecPolicy::nccl(), &three, &cost, 64 * MIB),
+            Algo::Ring
+        );
+        // Allgather's flat ring is already compress-once; hierarchy
+        // must not be forced on it blindly (either answer is a ring
+        // variant of some tree — assert it stays implemented).
+        let ag = t.select_with_tiers(Op::Allgather, p, &three, &cost, 64 * MIB);
+        assert!(AlgoRegistry::is_supported(Op::Allgather, ag), "{ag:?}");
     }
 
     #[test]

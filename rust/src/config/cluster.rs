@@ -111,8 +111,10 @@ impl ClusterConfig {
             self.kernel_floor_mb * 0.8 * 1e6,
             self.decompress_gbs * 1e9,
         );
-        let mut spec = ClusterSpec::new(self.ranks, policy).with_error_bound(self.error_bound);
-        spec.topo = Topology::new(self.ranks, self.gpus_per_node)?;
+        // Build from the real layout so the tier view stays in sync
+        // with the topology (ClusterSpec keeps both).
+        let topo = Topology::new(self.ranks, self.gpus_per_node)?;
+        let mut spec = ClusterSpec::with_topology(topo, policy).with_error_bound(self.error_bound);
         spec.gpu = gpu;
         spec.internode = LinkModel::new(
             self.internode_lat_us * 1e-6,

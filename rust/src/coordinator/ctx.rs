@@ -236,6 +236,14 @@ impl RankCtx {
         self.fabric.topology()
     }
 
+    /// The full multi-tier layout (node → rack → pod) this rank runs
+    /// on — 2-tier unless the cluster was built with an explicit
+    /// [`crate::topo::TierTree`]. The hierarchical schedule engine
+    /// compiles its default schedules from this.
+    pub fn tiers(&self) -> &crate::topo::TierTree {
+        self.fabric.tiers()
+    }
+
     /// Current host virtual time.
     pub fn now(&self) -> VirtTime {
         self.clock.now()

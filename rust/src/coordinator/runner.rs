@@ -6,8 +6,9 @@ use std::sync::Arc;
 use crate::compress::{CompressionProfile, Compressor, CuszpLike, FixedRate};
 use crate::error::{Error, Result};
 use crate::gpu::{GpuDevice, GpuModel};
-use crate::net::{Fabric, LinkModel, Topology};
+use crate::net::{default_uplinks, Fabric, LinkModel, Topology};
 use crate::sim::{Breakdown, VirtTime};
+use crate::topo::TierTree;
 
 use super::buffer::DeviceBuf;
 use super::ctx::{CompressionMode, ExecPolicy, OpCounters, RankCtx};
@@ -16,14 +17,19 @@ use super::mailbox::build_mesh;
 /// Everything needed to instantiate a simulated cluster.
 #[derive(Clone)]
 pub struct ClusterSpec {
-    /// Rank layout.
+    /// Rank layout (2-tier node-level view; kept in sync with `tiers`).
     pub topo: Topology,
+    /// Full multi-tier layout (equals `TierTree::from(&topo)` unless
+    /// set via [`ClusterSpec::with_tiers`] / [`ClusterSpec::set_tiers`]).
+    pub tiers: TierTree,
     /// Device model (A100-calibrated by default).
     pub gpu: GpuModel,
     /// Intranode link.
     pub intranode: LinkModel,
     /// Internode link.
     pub internode: LinkModel,
+    /// Shared uplink models for tiers ≥ 2 (empty on 2-tier layouts).
+    pub uplinks: Vec<LinkModel>,
     /// Variant policy.
     pub policy: ExecPolicy,
     /// Absolute error bound for the error-bounded compressor.
@@ -47,17 +53,50 @@ impl ClusterSpec {
     /// defaults everywhere else (the panic-free constructor the
     /// [`crate::comm::CommBuilder`] uses).
     pub fn with_topology(topo: Topology, policy: ExecPolicy) -> Self {
+        let tiers = TierTree::from(&topo);
         ClusterSpec {
             topo,
+            tiers,
             gpu: GpuModel::a100(),
             intranode: LinkModel::nvlink_default(),
             internode: LinkModel::slingshot10_default(),
+            uplinks: vec![],
             policy,
             error_bound: 1e-4,
             fixed_rate_bits: 8,
             profile: CompressionProfile::fixed(25.0),
             streams_per_rank: 4,
         }
+    }
+
+    /// A spec over a multi-tier layout: the 2-tier `topo` view is
+    /// derived from the tree and default uplink models are attached
+    /// for every tier above node level.
+    pub fn with_tiers(tiers: TierTree, policy: ExecPolicy) -> Self {
+        let mut spec = Self::with_topology(tiers.to_topology(), policy);
+        spec.set_tiers(tiers);
+        spec
+    }
+
+    /// Replace the tier layout, keeping `topo` and the uplink models in
+    /// sync (existing uplink overrides are preserved where the depth
+    /// allows, default models fill the rest).
+    pub fn set_tiers(&mut self, tiers: TierTree) {
+        self.topo = tiers.to_topology();
+        let mut uplinks = default_uplinks(tiers.depth());
+        for (slot, keep) in uplinks.iter_mut().zip(self.uplinks.iter()) {
+            *slot = *keep;
+        }
+        self.uplinks = uplinks;
+        self.tiers = tiers;
+    }
+
+    /// The per-tier link models, innermost first:
+    /// `[intranode, internode, uplinks…]`.
+    pub fn tier_links(&self) -> Vec<LinkModel> {
+        let mut links = vec![self.intranode, self.internode];
+        links.extend(self.uplinks.iter().copied());
+        links
     }
 
     /// Override the error bound.
@@ -136,7 +175,12 @@ pub fn run_collective(
             n
         )));
     }
-    let fabric = Fabric::new(spec.topo.clone(), spec.intranode, spec.internode);
+    let fabric = Fabric::tiered(
+        spec.tiers.clone(),
+        spec.intranode,
+        spec.internode,
+        spec.uplinks.clone(),
+    );
     let (senders, boxes) = build_mesh(n);
     let compressor = spec.make_compressor();
 

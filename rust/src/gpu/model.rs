@@ -33,8 +33,12 @@ impl KernelModel {
         self.launch + (bytes as f64 + self.n0) / self.beta
     }
 
-    /// Execution time of `k` same-stream sequential kernels over chunks
-    /// summing to `total` bytes: each pays the full floor.
+    /// Execution time of `k` same-stream sequential kernels, **each**
+    /// over one `chunk_bytes`-sized chunk (total volume
+    /// `k · chunk_bytes`): every kernel pays the full launch/fixed-work
+    /// floor — no cross-kernel amortization. Contrast with
+    /// [`KernelModel::time_multistream`], which takes the *summed*
+    /// bytes and amortizes the floor across overlapped streams.
     pub fn time_sequential(&self, chunk_bytes: usize, k: usize) -> f64 {
         self.time(chunk_bytes) * k as f64
     }

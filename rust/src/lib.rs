@@ -38,5 +38,6 @@ pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;
+pub mod topo;
 
 pub use error::{Error, Result};

@@ -18,6 +18,7 @@ use gzccl::coordinator::DeviceBuf;
 use gzccl::error::{Error, Result};
 use gzccl::experiments as exp;
 use gzccl::runtime::Engine;
+use gzccl::topo::TierTree;
 
 /// Tiny argument cursor: flags with values, collected overrides.
 struct Args {
@@ -74,10 +75,17 @@ gZCCL — compression-accelerated collective communication (paper reproduction)
 
 USAGE:
   gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
-                    [--gpus-per-node G]
+                    [--gpus-per-node G] [--tiers WxWx...]
                     OP: allreduce (tuner-selected) | allreduce-ring |
                         allreduce-redoub | allreduce-hier | allreduce-tree |
-                        reduce_scatter | allgather | scatter | bcast
+                        reduce_scatter | reduce_scatter-hier |
+                        allgather | allgather-hier | scatter | bcast
+                    --tiers 4x16x8: multi-tier layout (GPUs/node x
+                        nodes/rack x racks ...); the widths must cover
+                        the rank count, and the first width overrides
+                        --gpus-per-node. Deep layouts model shared,
+                        oversubscribed rack/pod uplinks, and the tuner
+                        picks the schedule depth and per-tier legs.
   gzccl experiment  <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|
                      table1|table2|fig13|all> [--fast] [--gpus-per-node G]
   gzccl stack       [--ranks N] [--eb X] [--gpus-per-node G]
@@ -148,11 +156,17 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .take("--gpus-per-node")
         .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
         .transpose()?;
+    let tiers = args.take("--tiers");
     let mut cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
     if let Some(g) = gpus_per_node {
         cfg.gpus_per_node = g;
     }
-    let comm = Communicator::from_spec(cfg.to_spec()?);
+    let mut spec = cfg.to_spec()?;
+    if let Some(t) = tiers {
+        let widths = TierTree::parse_widths(&t)?;
+        spec.set_tiers(TierTree::new(spec.topo.ranks(), &widths)?);
+    }
+    let comm = Communicator::from_spec(spec);
     let n = comm.nranks();
     let elems = (size_mb << 20) / 4;
     let all_ranks = |e: usize| -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(e)).collect() };
@@ -174,7 +188,13 @@ fn cmd_run(mut args: Args) -> Result<()> {
             comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial))?
         }
         "reduce_scatter" => comm.reduce_scatter(all_ranks(elems), &spec)?,
+        "reduce_scatter-hier" => {
+            comm.reduce_scatter(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))?
+        }
         "allgather" => comm.allgather(all_ranks(elems / n), &spec)?,
+        "allgather-hier" => {
+            comm.allgather(all_ranks(elems / n), &CollectiveSpec::forced(Algo::Hierarchical))?
+        }
         "scatter" => comm.scatter(exp::virtual_root_inputs(n, size_mb << 20), &spec)?,
         "bcast" => comm.bcast(exp::virtual_root_inputs(n, size_mb << 20), &spec)?,
         other => return Err(Error::config(format!("unknown --op `{other}`"))),
@@ -189,6 +209,14 @@ fn cmd_run(mut args: Args) -> Result<()> {
         report.algo,
         if report.auto_tuned { " (tuner)" } else { " (forced)" }
     );
+    if let Some(s) = &report.schedule {
+        println!(
+            "  schedule         : {} tiers {:?}, {} legs",
+            s.tree.depth(),
+            s.tree.widths(),
+            s.legs.len()
+        );
+    }
     println!("  virtual makespan : {}", report.makespan);
     println!("  wire bytes       : {}", report.total_wire_bytes());
     println!("  cpr kernel calls : {}", report.total_cpr_calls());

@@ -1,9 +1,10 @@
-//! The fabric: routes virtual-time messages through link models and
-//! per-node NIC contention.
+//! The fabric: routes virtual-time messages through link models,
+//! per-node NIC contention, and per-tier uplink contention.
 
 use std::sync::Arc;
 
 use crate::sim::{SharedTimeline, VirtTime};
+use crate::topo::TierTree;
 
 use super::link::{LinkClass, LinkModel};
 use super::topology::Topology;
@@ -17,45 +18,97 @@ use super::topology::Topology;
 /// NICs per node → one NIC per GPU, the default); setting
 /// `nics_per_node = 1` reproduces a shared-NIC cluster.
 ///
-/// Delivery is cut-through: the ingress NIC starts receiving `alpha`
-/// after the egress starts transmitting, so an uncontended transfer
-/// costs `alpha + bytes/beta`, not twice the serialization.
+/// On a multi-tier [`TierTree`] (built via [`Fabric::tiered`]) a
+/// message additionally serializes on the **uplinks** of every tier
+/// boundary it crosses: a cross-rack message reserves the sender
+/// rack's egress uplink and the receiver rack's ingress uplink, so
+/// concurrent cross-rack senders within one rack contend for the
+/// oversubscribed leaf→spine capacity — the effect that makes deep
+/// hierarchical schedules (one leader per rack crossing, instead of
+/// every node leader) pay off. Two-tier fabrics have no uplinks and
+/// behave exactly as before.
+///
+/// Delivery is cut-through: each stage starts receiving its link's
+/// `alpha` after the upstream stage starts transmitting, so an
+/// uncontended transfer costs one serialization plus the summed
+/// latencies, not a serialization per hop.
 #[derive(Debug, Clone)]
 pub struct Fabric {
+    tree: TierTree,
     topo: Topology,
     intranode: LinkModel,
     internode: LinkModel,
+    /// Uplink models for tiers ≥ 2 (index `t − 2`; clamped to the last
+    /// entry for deeper tiers).
+    uplinks: Vec<LinkModel>,
     nics_per_node: usize,
     /// Egress NIC timelines, `nodes × nics_per_node`.
     nic_tx: Arc<Vec<SharedTimeline>>,
     /// Ingress NIC timelines, `nodes × nics_per_node`.
     nic_rx: Arc<Vec<SharedTimeline>>,
+    /// Egress uplink timelines per tier ≥ 2: `[t − 2][tier-(t−1) group]`.
+    up_tx: Arc<Vec<Vec<SharedTimeline>>>,
+    /// Ingress uplink timelines per tier ≥ 2.
+    up_rx: Arc<Vec<Vec<SharedTimeline>>>,
 }
 
 impl Fabric {
-    /// Build a fabric over `topo` with the given link models and one
-    /// NIC per GPU (Perlmutter-like).
+    /// Build a 2-tier fabric over `topo` with the given link models and
+    /// one NIC per GPU (Perlmutter-like).
     pub fn new(topo: Topology, intranode: LinkModel, internode: LinkModel) -> Self {
         let nics = topo.gpus_per_node();
-        Self::with_nics(topo, intranode, internode, nics)
+        Self::build(TierTree::from(&topo), intranode, internode, vec![], nics)
     }
 
-    /// Build a fabric with an explicit NIC count per node.
+    /// Build a 2-tier fabric with an explicit NIC count per node.
     pub fn with_nics(
         topo: Topology,
         intranode: LinkModel,
         internode: LinkModel,
         nics_per_node: usize,
     ) -> Self {
+        Self::build(TierTree::from(&topo), intranode, internode, vec![], nics_per_node)
+    }
+
+    /// Build a multi-tier fabric over `tree`: `uplinks[t − 2]` is the
+    /// shared leaf→spine capacity of each tier-`t − 1` group (empty for
+    /// 2-tier trees). One NIC per GPU.
+    pub fn tiered(
+        tree: TierTree,
+        intranode: LinkModel,
+        internode: LinkModel,
+        uplinks: Vec<LinkModel>,
+    ) -> Self {
+        let nics = tree.width(0);
+        Self::build(tree, intranode, internode, uplinks, nics)
+    }
+
+    fn build(
+        tree: TierTree,
+        intranode: LinkModel,
+        internode: LinkModel,
+        uplinks: Vec<LinkModel>,
+        nics_per_node: usize,
+    ) -> Self {
         assert!(nics_per_node > 0);
+        let topo = tree.to_topology();
         let n = topo.nodes() * nics_per_node;
+        let mk = |count: usize| (0..count).map(|_| SharedTimeline::new()).collect::<Vec<_>>();
+        let up: Vec<Vec<SharedTimeline>> =
+            (2..tree.depth()).map(|t| mk(tree.groups(t - 1))).collect();
+        let up2: Vec<Vec<SharedTimeline>> =
+            (2..tree.depth()).map(|t| mk(tree.groups(t - 1))).collect();
         Fabric {
+            tree,
             topo,
             intranode,
             internode,
+            uplinks,
             nics_per_node,
-            nic_tx: Arc::new((0..n).map(|_| SharedTimeline::new()).collect()),
-            nic_rx: Arc::new((0..n).map(|_| SharedTimeline::new()).collect()),
+            nic_tx: Arc::new(mk(n)),
+            nic_rx: Arc::new(mk(n)),
+            up_tx: Arc::new(up),
+            up_rx: Arc::new(up2),
         }
     }
 
@@ -63,6 +116,16 @@ impl Fabric {
     fn nic_of(&self, rank: usize) -> usize {
         self.topo.node_of(rank) * self.nics_per_node
             + self.topo.local_of(rank) % self.nics_per_node
+    }
+
+    /// Uplink model of tier `t` (≥ 2). Falls back to the internode
+    /// model when no uplink was configured for that tier.
+    fn uplink_model(&self, t: usize) -> LinkModel {
+        if self.uplinks.is_empty() {
+            self.internode
+        } else {
+            self.uplinks[(t - 2).min(self.uplinks.len() - 1)]
+        }
     }
 
     /// Fabric with paper-testbed defaults (NVLink intranode,
@@ -75,9 +138,15 @@ impl Fabric {
         )
     }
 
-    /// The topology this fabric spans.
+    /// The 2-tier node-level view this fabric spans.
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// The full tier tree this fabric spans (2-tier unless built with
+    /// [`Fabric::tiered`]).
+    pub fn tiers(&self) -> &TierTree {
+        &self.tree
     }
 
     /// Link class used between two ranks.
@@ -99,23 +168,45 @@ impl Fabric {
     }
 
     /// Compute the arrival time of `bytes` sent from `from` to `to`,
-    /// departing (earliest) at `depart`. Reserves NIC slots as a side
-    /// effect, so concurrent senders on a node contend.
+    /// departing (earliest) at `depart`. Reserves NIC — and, for hops
+    /// crossing rack/pod boundaries, uplink — slots as a side effect,
+    /// so concurrent senders contend at every shared stage.
     pub fn deliver(&self, from: usize, to: usize, bytes: usize, depart: VirtTime) -> VirtTime {
-        match self.link_class(from, to) {
-            LinkClass::IntraNode => depart + self.intranode.transfer_time(bytes),
-            LinkClass::InterNode => {
-                let ser = self.internode.serialization_time(bytes);
-                let tx = &self.nic_tx[self.nic_of(from)];
-                let (tx_start, _) = tx.reserve(depart, ser);
-                // Cut-through: ingress follows egress by the wire
-                // latency, overlapping the serialization.
-                let rx = &self.nic_rx[self.nic_of(to)];
-                let (_, rx_end) = rx.reserve(tx_start + self.internode.alpha, ser);
-                rx_end
-            }
-            LinkClass::Pcie => unreachable!("PCIe handled by the GPU model"),
+        let lca = self.tree.lca_tier(from, to);
+        if lca == 0 {
+            return depart + self.intranode.transfer_time(bytes);
         }
+        let ser = self.internode.serialization_time(bytes);
+        let tx = &self.nic_tx[self.nic_of(from)];
+        let (tx_start, _) = tx.reserve(depart, ser);
+        // Cut-through: each downstream stage follows the upstream start
+        // by that stage's wire latency, overlapping serialization. The
+        // physical order is NIC egress, then the sender side's uplinks
+        // *ascending* (rack → pod) to the crossing tier, the receiver
+        // side's uplinks *descending* back (pod → rack), then NIC
+        // ingress. Each tier's latency is charged once, at its egress
+        // handoff.
+        let mut start = tx_start + self.internode.alpha;
+        let mut chain_end = start;
+        for t in 2..=lca {
+            let lm = self.uplink_model(t);
+            let ser_u = lm.serialization_time(bytes);
+            let g_from = self.tree.group_of(t - 1, from);
+            let (u_start, u_end) = self.up_tx[t - 2][g_from].reserve(start, ser_u);
+            start = u_start + lm.alpha;
+            chain_end = chain_end.join(u_end);
+        }
+        for t in (2..=lca).rev() {
+            let lm = self.uplink_model(t);
+            let ser_u = lm.serialization_time(bytes);
+            let g_to = self.tree.group_of(t - 1, to);
+            let (u_start, u_end) = self.up_rx[t - 2][g_to].reserve(start, ser_u);
+            start = u_start;
+            chain_end = chain_end.join(u_end);
+        }
+        let rx = &self.nic_rx[self.nic_of(to)];
+        let (_, rx_end) = rx.reserve(start, ser);
+        rx_end.join(chain_end)
     }
 
     /// Total busy seconds across all egress NICs (diagnostic).
@@ -123,10 +214,15 @@ impl Fabric {
         self.nic_tx.iter().map(|t| t.busy_total()).sum()
     }
 
-    /// Reset all NIC timelines (between runs).
+    /// Reset all NIC and uplink timelines (between runs).
     pub fn reset(&self) {
         for t in self.nic_tx.iter().chain(self.nic_rx.iter()) {
             t.reset();
+        }
+        for tier in self.up_tx.iter().chain(self.up_rx.iter()) {
+            for t in tier {
+                t.reset();
+            }
         }
     }
 }
@@ -140,6 +236,17 @@ mod tests {
             Topology::new(8, 4).unwrap(),
             LinkModel::new(1e-6, 100e9),
             LinkModel::new(10e-6, 10e9),
+        )
+    }
+
+    /// 32 ranks: 2 GPUs/node, 4 nodes/rack, 4 racks; fast NICs, slow
+    /// shared rack uplinks.
+    fn fabric_tiered() -> Fabric {
+        Fabric::tiered(
+            TierTree::new(32, &[2, 4, 4]).unwrap(),
+            LinkModel::new(1e-6, 100e9),
+            LinkModel::new(10e-6, 10e9),
+            vec![LinkModel::new(20e-6, 5e9)],
         )
     }
 
@@ -200,12 +307,60 @@ mod tests {
     }
 
     #[test]
-    fn reset_clears_contention() {
-        let f = fabric_8x4();
+    fn intra_rack_messages_skip_the_uplink() {
+        let f = fabric_tiered();
         let n = 10_000_000;
-        let t1 = f.deliver(0, 4, n, VirtTime::ZERO);
+        // Ranks 0 and 2: different nodes, same rack (ranks 0..8).
+        let t = f.deliver(0, 2, n, VirtTime::ZERO);
+        // NIC-bound arrival, no 5 GB/s uplink serialization.
+        let nic_only = n as f64 / 10e9 + 10e-6;
+        assert!((t.as_secs() - nic_only).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn cross_rack_senders_contend_for_the_rack_uplink() {
+        let f = fabric_tiered();
+        let n = 10_000_000; // 2 ms serialization at 5 GB/s
+        // Ranks 0 and 2 are on different nodes (own NICs) in rack 0;
+        // both send cross-rack: the rack-0 egress uplink serializes.
+        let a1 = f.deliver(0, 8, n, VirtTime::ZERO);
+        let a2 = f.deliver(2, 16, n, VirtTime::ZERO);
+        let (first, second) = if a1 < a2 { (a1, a2) } else { (a2, a1) };
+        assert!(
+            second.as_secs() > first.as_secs() + 1.9e-3,
+            "uplink must serialize: {first} then {second}"
+        );
+        // The same pair of sends stays parallel on a 2-tier fabric of
+        // identical NICs.
+        let flat = Fabric::new(
+            Topology::new(32, 2).unwrap(),
+            LinkModel::new(1e-6, 100e9),
+            LinkModel::new(10e-6, 10e9),
+        );
+        assert_eq!(
+            flat.deliver(0, 8, n, VirtTime::ZERO),
+            flat.deliver(2, 16, n, VirtTime::ZERO)
+        );
+    }
+
+    #[test]
+    fn cross_rack_arrival_includes_uplink_serialization() {
+        let f = fabric_tiered();
+        let n = 10_000_000;
+        let t = f.deliver(0, 8, n, VirtTime::ZERO);
+        // The slowest stage (5 GB/s uplink) dominates: ≥ 2 ms.
+        assert!(t.as_secs() >= n as f64 / 5e9, "{t}");
+        // And the latencies of both crossed links are paid.
+        assert!(t.as_secs() >= n as f64 / 5e9 + 10e-6 + 20e-6, "{t}");
+    }
+
+    #[test]
+    fn reset_clears_contention() {
+        let f = fabric_tiered();
+        let n = 10_000_000;
+        let t1 = f.deliver(0, 8, n, VirtTime::ZERO);
         f.reset();
-        let t2 = f.deliver(0, 4, n, VirtTime::ZERO);
+        let t2 = f.deliver(0, 8, n, VirtTime::ZERO);
         assert_eq!(t1, t2);
     }
 

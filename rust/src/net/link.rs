@@ -54,6 +54,43 @@ impl LinkModel {
     pub fn pcie_default() -> Self {
         LinkModel::new(10e-6, 25e9)
     }
+
+    /// Rack-uplink defaults: the aggregate leaf→spine capacity one
+    /// rack's nodes share — a *throughput* bottleneck, not just a
+    /// latency hop. A 16-node rack of 12.5 GB/s NICs demands 200 GB/s
+    /// of full bisection; 12.5 GB/s (one NIC's worth for the whole
+    /// rack, 16:1 oversubscription) models the thin uplinks of
+    /// cost-optimized fat-tree pods. With a merely-mild ratio the
+    /// cross-rack rounds pipeline behind compute and flat schedules
+    /// hide the contention; at 16:1 the uplink's total busy time is a
+    /// hard lower bound that only sending *less* across the boundary —
+    /// the deep hierarchical schedule — escapes.
+    pub fn rack_uplink_default() -> Self {
+        LinkModel::new(25e-6, 12.5e9)
+    }
+
+    /// Spine/pod-uplink defaults for tiers above the rack: more
+    /// aggregate capacity, more hops.
+    pub fn spine_uplink_default() -> Self {
+        LinkModel::new(50e-6, 25e9)
+    }
+}
+
+/// Default uplink models for the tiers **above** node level of a
+/// `depth`-tier [`crate::topo::TierTree`]: one entry per tier in
+/// `2..depth` (empty for 2-tier trees — a node/fabric cluster has no
+/// modeled uplinks). Tier 2 gets the rack uplink; deeper tiers the
+/// spine uplink.
+pub fn default_uplinks(depth: usize) -> Vec<LinkModel> {
+    (2..depth)
+        .map(|t| {
+            if t == 2 {
+                LinkModel::rack_uplink_default()
+            } else {
+                LinkModel::spine_uplink_default()
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -19,5 +19,5 @@ pub mod link;
 pub mod topology;
 
 pub use fabric::Fabric;
-pub use link::{LinkClass, LinkModel};
+pub use link::{default_uplinks, LinkClass, LinkModel};
 pub use topology::Topology;

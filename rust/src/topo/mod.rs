@@ -1,0 +1,32 @@
+//! Multi-tier topology subsystem.
+//!
+//! Real GPU clusters are rack/pod **trees**, not the two flat networks
+//! the PR 2 hierarchical Allreduce hard-coded. This subsystem supplies
+//! the one structure everything topology-aware consumes:
+//!
+//! * [`TierTree`] — an N-level hierarchy (GPU → node → rack → pod) over
+//!   the block-wise rank layout, with per-tier group/leader/participant
+//!   helpers. [`crate::net::Topology`] is the lossless 2-tier special
+//!   case (`TierTree::from(&topo)` / [`TierTree::to_topology`]).
+//! * [`schedule`] — the schedule engine: compile a `TierTree` + op into
+//!   per-tier [`Leg`]s ([`compile_min_error`], [`compile_tuned`]),
+//!   price them against the physical tree and its oversubscribed
+//!   uplinks ([`Schedule::estimate_makespan`], [`CostModel`]), and walk
+//!   the same legs for worst-case error ([`Schedule::amplification`],
+//!   [`Schedule::tier_sensitivities`]) and per-rank compression-stage
+//!   counts ([`Schedule::cpr_stages_at`]).
+//!
+//! The executor for compiled schedules lives in
+//! [`crate::collectives::hierarchical`]; the per-tier algorithm
+//! crossover in [`crate::comm::Tuner`]; the per-tier error-budget
+//! split in [`crate::accuracy::budget`]. All three consume this module
+//! so the schedule and the error model can never drift apart.
+
+pub mod schedule;
+pub mod tier_tree;
+
+pub use schedule::{
+    compile_min_error, compile_tuned, estimate_flat_allgather, estimate_flat_redoub,
+    estimate_flat_reduce_scatter, estimate_flat_ring, CostModel, Leg, LegKind, Schedule,
+};
+pub use tier_tree::TierTree;

@@ -1,0 +1,846 @@
+//! The hierarchical schedule engine: compile a [`TierTree`] + op into
+//! per-tier legs, cost them, and walk their error propagation.
+//!
+//! A [`Schedule`] is plain data — an ascent of per-tier legs toward the
+//! tree's top, one collective leg across the top tier's participants,
+//! and a mirrored descent — that the executor in
+//! [`crate::collectives::hierarchical`] interprets against a
+//! [`crate::coordinator::RankCtx`]. Because the schedule is data, the
+//! same structure serves four consumers:
+//!
+//! * the **executor** runs it (send/recv/compress per leg),
+//! * the **cost model** ([`Schedule::estimate_makespan`]) prices it
+//!   against a physical tree with per-tier links and uplink
+//!   oversubscription — what [`crate::comm::Tuner`] uses for its
+//!   per-tier crossover,
+//! * the **error model** ([`Schedule::amplification`],
+//!   [`Schedule::tier_sensitivities`]) walks the same legs so the
+//!   accuracy planner can split a per-call budget across tiers, and
+//! * the **stage counter** ([`Schedule::cpr_stages_at`]) predicts
+//!   per-rank compression-kernel counts for tests and telemetry.
+//!
+//! Two compilers: [`compile_min_error`] picks the fewest-error leg per
+//! tier (linear reduce-to-leader ascent, doubling top — what budgeted
+//! dispatch runs, and what the planner's amplification anchors on);
+//! [`compile_tuned`] picks each tier's leg from the cost model (ring
+//! vs. recursive doubling at the top, gather-fold vs. in-group
+//! doubling on middle tiers — ZCCL's per-level ring/doubling choice).
+//! Compression never touches tier 0 (NVLink — the gZCCL raw-intranode
+//! invariant); every higher leg compresses when the policy does.
+
+use crate::collectives::Op;
+use crate::error::{Error, Result};
+use crate::gpu::GpuModel;
+use crate::net::LinkModel;
+
+use super::tier_tree::TierTree;
+
+/// What a leg does within each tier-`tier` group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LegKind {
+    /// Ascent: every participant ships its vector to the group leader,
+    /// which folds them in rank order (linear error accumulation).
+    ReduceToLeader,
+    /// In-group recursive-doubling Allreduce over the participants
+    /// (MPICH remainder fold for non-power-of-two counts).
+    AllreduceRedoub,
+    /// In-group chunked ring Allreduce (reduce-scatter + allgather)
+    /// over the participants.
+    AllreduceRing,
+    /// Descent: the leader's vector reaches every participant —
+    /// compressed legs forward one compress-once stream along a
+    /// binomial tree; raw legs fan out directly (NVLink).
+    BcastFromLeader,
+    /// Allgather ascent: participants ship their gathered blocks to the
+    /// leader, which concatenates them in rank order.
+    GatherToLeader,
+    /// In-group ring Allgather over the participants (each origin
+    /// super-block compressed once, forwarded verbatim).
+    AllgatherRing,
+    /// Reduce_scatter descent: the leader slices its vector by the
+    /// participants' subtree chunk ranges and sends each its share.
+    ScatterFromLeader,
+}
+
+/// One per-tier leg of a compiled schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Leg {
+    /// Tier whose groups this leg runs within (participants are the
+    /// leaders of the tier-`tier − 1` subgroups; everyone at tier 0).
+    pub tier: usize,
+    /// What the leg does.
+    pub kind: LegKind,
+    /// Whether payloads on this leg are compressed.
+    pub compressed: bool,
+}
+
+/// A compiled hierarchical schedule: the grouping tree the legs refer
+/// to (possibly a [`TierTree::collapsed`] view of the physical tree)
+/// plus the leg sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// The operation the schedule realizes.
+    pub op: Op,
+    /// The grouping the legs index into.
+    pub tree: TierTree,
+    /// Ascent legs, the top leg, then descent legs.
+    pub legs: Vec<Leg>,
+}
+
+fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (n - 1).ilog2() as usize + 1
+    }
+}
+
+/// Effective `e' = 2e + eb` stages of a recursive-doubling exchange
+/// over `groups` participants, including the two extra MPICH
+/// fold/unfold stages for non-power-of-two counts. The **single**
+/// definition of the recurrence depth — `crate::accuracy::propagation`
+/// imports it, so the schedule walk and the flat-algorithm error model
+/// cannot drift apart.
+pub(crate) fn doubling_error_stages(groups: usize) -> usize {
+    if groups <= 1 {
+        return 0;
+    }
+    let logp = groups.ilog2() as usize;
+    logp + if groups.is_power_of_two() { 0 } else { 2 }
+}
+
+/// `2^s − 1` in f64 without overflowing for degenerate huge `s`.
+pub(crate) fn pow2_minus_1(s: usize) -> f64 {
+    if s < 53 {
+        ((1u64 << s) - 1) as f64
+    } else {
+        2f64.powi(s.min(1000) as i32)
+    }
+}
+
+fn supported_op(op: Op) -> Result<()> {
+    match op {
+        Op::Allreduce | Op::ReduceScatter | Op::Allgather => Ok(()),
+        other => Err(Error::collective(format!(
+            "no hierarchical schedule for {other:?} (rooted ops use the binomial trees)"
+        ))),
+    }
+}
+
+/// Whether a tier's payloads compress: never on tier 0 (NVLink — raw
+/// intranode is the gZCCL invariant), on every higher tier when the
+/// policy compresses at all.
+fn tier_compressed(policy_compresses: bool, tier: usize) -> bool {
+    policy_compresses && tier >= 1
+}
+
+/// Compile the fewest-error schedule for `op` on `tree`: linear
+/// reduce-to-leader (or gather) ascent, recursive doubling (or ring
+/// allgather) across the top tier, mirrored broadcast/scatter descent.
+/// This is what budgeted dispatch runs and what
+/// [`Schedule::amplification`]-based planning anchors on — for every
+/// tier the chosen leg has the smallest worst-case amplification among
+/// the implemented alternatives.
+pub fn compile_min_error(op: Op, tree: &TierTree, compressed: bool) -> Result<Schedule> {
+    supported_op(op)?;
+    let d = tree.depth();
+    let mut legs = Vec::with_capacity(2 * d - 1);
+    for t in 0..d - 1 {
+        legs.push(Leg {
+            tier: t,
+            kind: match op {
+                Op::Allgather => LegKind::GatherToLeader,
+                _ => LegKind::ReduceToLeader,
+            },
+            compressed: tier_compressed(compressed, t),
+        });
+    }
+    legs.push(Leg {
+        tier: d - 1,
+        kind: match op {
+            Op::Allgather => LegKind::AllgatherRing,
+            _ => LegKind::AllreduceRedoub,
+        },
+        compressed: tier_compressed(compressed, d - 1),
+    });
+    for t in (0..d - 1).rev() {
+        legs.push(Leg {
+            tier: t,
+            kind: match op {
+                Op::ReduceScatter => LegKind::ScatterFromLeader,
+                _ => LegKind::BcastFromLeader,
+            },
+            compressed: tier_compressed(compressed, t),
+        });
+    }
+    Ok(Schedule {
+        op,
+        tree: tree.clone(),
+        legs,
+    })
+}
+
+/// Compile a cost-tuned schedule for `op` on `tree`: each middle
+/// ascent tier picks reduce-to-leader vs. in-group doubling, and the
+/// top tier picks doubling vs. ring, whichever the cost model prices
+/// cheaper at `msg_bytes` (the per-tier crossover). Ties go to the
+/// fewer-error alternative.
+pub fn compile_tuned(
+    op: Op,
+    tree: &TierTree,
+    compressed: bool,
+    msg_bytes: usize,
+    cost: &CostModel,
+) -> Result<Schedule> {
+    let mut sched = compile_min_error(op, tree, compressed)?;
+    if op == Op::Allgather {
+        return Ok(sched); // gather/ring legs have no implemented alternative
+    }
+    let d = tree.depth();
+    for (i, leg) in sched.legs.iter_mut().enumerate() {
+        let candidates: &[LegKind] = if leg.tier == d - 1 && i == d - 1 {
+            // The top collective leg.
+            &[LegKind::AllreduceRedoub, LegKind::AllreduceRing]
+        } else if i < d - 1 && leg.tier >= 1 {
+            // Middle ascent legs (tier-0 stays the raw NVLink fold).
+            &[LegKind::ReduceToLeader, LegKind::AllreduceRedoub]
+        } else {
+            continue;
+        };
+        let mut best = leg.kind;
+        let mut best_cost = leg_cost(leg, op, tree, tree, cost, msg_bytes);
+        for &k in candidates {
+            if k == leg.kind {
+                continue;
+            }
+            let c = leg_cost(&Leg { kind: k, ..*leg }, op, tree, tree, cost, msg_bytes);
+            if c < best_cost {
+                best = k;
+                best_cost = c;
+            }
+        }
+        leg.kind = best;
+    }
+    Ok(sched)
+}
+
+impl Schedule {
+    /// Worst-case pointwise error amplification `m` of the whole
+    /// schedule: under an error-bounded compressor with bound `eb`,
+    /// every rank's output deviates from the exact result by at most
+    /// `m · eb`. Walks the legs with the recurrences of
+    /// [`crate::accuracy::propagation`]: linear accumulation for folds
+    /// and rings, `e' = 2e + eb` for doubling exchanges, `+eb` for
+    /// forwarded streams; raw legs only sum existing errors.
+    pub fn amplification(&self) -> f64 {
+        let mut e = 0.0f64;
+        for leg in &self.legs {
+            // Worst *actual* group, not the declared width: a spec that
+            // overcovers the rank count must not inflate the bound (and
+            // over-tighten the planned eb).
+            let g = self.tree.effective_width(leg.tier) as f64;
+            let c = if leg.compressed { 1.0 } else { 0.0 };
+            match leg.kind {
+                LegKind::ReduceToLeader => e = g * e + (g - 1.0) * c,
+                LegKind::AllreduceRedoub => {
+                    if leg.compressed {
+                        let s = doubling_error_stages(self.tree.effective_width(leg.tier));
+                        e = pow2_minus_1(s) + (pow2_minus_1(s) + 1.0) * e;
+                    } else {
+                        e *= g;
+                    }
+                }
+                LegKind::AllreduceRing => e = g * e + g * c,
+                LegKind::BcastFromLeader
+                | LegKind::GatherToLeader
+                | LegKind::AllgatherRing
+                | LegKind::ScatterFromLeader => e += c,
+            }
+        }
+        e
+    }
+
+    /// Per-tier sensitivity of the end-to-end error to each tier's
+    /// compressor bound: `A[t]` such that running tier `t`'s
+    /// compressed legs at bound `eb_t` yields worst-case error
+    /// `Σ_t A[t] · eb_t`. With a uniform bound this sums to
+    /// [`Schedule::amplification`]. The budget planner uses it to
+    /// split a per-call budget across tiers.
+    pub fn tier_sensitivities(&self) -> Vec<f64> {
+        let mut a = vec![0.0f64; self.tree.depth()];
+        for leg in &self.legs {
+            let g = self.tree.effective_width(leg.tier) as f64;
+            let c = if leg.compressed { 1.0 } else { 0.0 };
+            // e' = gain·e + add·eb_tier: scale all accumulated
+            // sensitivities by the gain, then credit the leg's own
+            // contribution to its tier.
+            let (gain, add) = match leg.kind {
+                LegKind::ReduceToLeader => (g, (g - 1.0) * c),
+                LegKind::AllreduceRedoub => {
+                    if leg.compressed {
+                        let p = pow2_minus_1(doubling_error_stages(
+                            self.tree.effective_width(leg.tier),
+                        ));
+                        (p + 1.0, p)
+                    } else {
+                        (g, 0.0)
+                    }
+                }
+                LegKind::AllreduceRing => (g, g * c),
+                LegKind::BcastFromLeader
+                | LegKind::GatherToLeader
+                | LegKind::AllgatherRing
+                | LegKind::ScatterFromLeader => (1.0, c),
+            };
+            for s in a.iter_mut() {
+                *s *= gain;
+            }
+            a[leg.tier] += add;
+        }
+        a
+    }
+
+    /// Predicted `(compress, decompress)` kernel invocations at `rank`
+    /// over the whole schedule — the multi-tier generalization of
+    /// [`crate::collectives::expected_cpr_stages_hier`] (with which it
+    /// agrees on 2-tier trees).
+    ///
+    /// Assumes every Reduce_scatter chunk range is non-empty (total
+    /// elements ≥ ranks): for degenerate shorter vectors the executor
+    /// sends empty scatter slices raw, so the actual counts can fall
+    /// below this prediction on such inputs.
+    pub fn cpr_stages_at(&self, rank: usize) -> (usize, usize) {
+        let tree = &self.tree;
+        let mut cpr = 0usize;
+        let mut dec = 0usize;
+        for leg in &self.legs {
+            if !leg.compressed || !tree.participates(leg.tier, rank) {
+                continue;
+            }
+            let ps = tree.group_participants(leg.tier, tree.group_of(leg.tier, rank));
+            let k = ps.len();
+            if k <= 1 {
+                continue;
+            }
+            let idx = tree.relative_rank(leg.tier, rank);
+            match leg.kind {
+                LegKind::ReduceToLeader => {
+                    if idx == 0 {
+                        dec += k - 1;
+                    } else {
+                        cpr += 1;
+                    }
+                }
+                LegKind::AllreduceRedoub => {
+                    let pof2 = 1usize << (usize::BITS - 1 - k.leading_zeros()) as usize;
+                    let rem = k - pof2;
+                    let logp = pof2.trailing_zeros() as usize;
+                    let (c, d) = if idx < 2 * rem {
+                        if idx % 2 == 0 {
+                            (1, 1)
+                        } else {
+                            (logp + 1, logp + 1)
+                        }
+                    } else {
+                        (logp, logp)
+                    };
+                    cpr += c;
+                    dec += d;
+                }
+                LegKind::AllreduceRing => {
+                    // RS phase: k−1 chunk compressions/decompressions;
+                    // AG phase: one more compression, k−1 decodes.
+                    cpr += k;
+                    dec += 2 * (k - 1);
+                }
+                LegKind::BcastFromLeader => {
+                    if idx == 0 {
+                        cpr += 1;
+                    } else {
+                        dec += 1;
+                    }
+                }
+                LegKind::GatherToLeader => {
+                    if idx == 0 {
+                        dec += k - 1;
+                    } else {
+                        cpr += 1;
+                    }
+                }
+                LegKind::AllgatherRing => {
+                    cpr += 1;
+                    dec += k - 1;
+                }
+                LegKind::ScatterFromLeader => {
+                    if idx == 0 {
+                        cpr += k - 1;
+                    } else {
+                        dec += 1;
+                    }
+                }
+            }
+        }
+        (cpr, dec)
+    }
+
+    /// Analytic makespan estimate of the schedule over a `msg_bytes`
+    /// payload, priced against the **physical** tree `phys` (which may
+    /// be deeper than the schedule's own grouping: a collapsed 2-tier
+    /// schedule on a 3-tier machine still pays rack-uplink contention).
+    pub fn estimate_makespan(&self, phys: &TierTree, cost: &CostModel, msg_bytes: usize) -> f64 {
+        self.legs
+            .iter()
+            .map(|leg| leg_cost(leg, self.op, &self.tree, phys, cost, msg_bytes))
+            .sum()
+    }
+}
+
+/// Analytic per-tier cost model: device kernel parameters, per-tier
+/// link models (`[0]` intranode, `[1]` the node NIC, `[2..]` uplinks),
+/// and the effective compression ratio for wire volume.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Device kernel cost parameters.
+    pub gpu: GpuModel,
+    /// Per-tier links; indices past the end clamp to the last entry.
+    pub links: Vec<LinkModel>,
+    /// Effective compression ratio (raw/wire bytes); 1.0 = no gain.
+    pub cpr_ratio: f64,
+}
+
+impl CostModel {
+    /// Build a cost model; the ratio is clamped to ≥ 1.
+    pub fn new(gpu: GpuModel, links: Vec<LinkModel>, cpr_ratio: f64) -> Self {
+        assert!(!links.is_empty(), "cost model needs at least one link tier");
+        CostModel {
+            gpu,
+            links,
+            cpr_ratio: cpr_ratio.max(1.0),
+        }
+    }
+
+    /// A100 + paper-testbed default links (NVLink, Slingshot, default
+    /// uplinks) at the default virtual-profile ratio.
+    pub fn default_a100() -> Self {
+        let mut links = vec![
+            LinkModel::nvlink_default(),
+            LinkModel::slingshot10_default(),
+        ];
+        links.extend(crate::net::default_uplinks(4));
+        CostModel::new(GpuModel::a100(), links, 25.0)
+    }
+
+    /// Link crossed by messages whose lowest common tier is `t`.
+    pub fn link(&self, t: usize) -> LinkModel {
+        self.links[t.min(self.links.len() - 1)]
+    }
+
+    fn wire(&self, bytes: usize, compressed: bool) -> f64 {
+        if compressed {
+            bytes as f64 / self.cpr_ratio
+        } else {
+            bytes as f64
+        }
+    }
+
+    fn comp(&self, bytes: usize, compressed: bool) -> f64 {
+        if compressed {
+            self.gpu.compress.time(bytes)
+        } else {
+            0.0
+        }
+    }
+
+    fn dec(&self, bytes: usize, compressed: bool) -> f64 {
+        if compressed {
+            self.gpu.decompress.time(bytes)
+        } else {
+            0.0
+        }
+    }
+
+    fn red(&self, bytes: usize) -> f64 {
+        self.gpu.reduce.time(bytes)
+    }
+}
+
+/// Physical tier a hop of `dist` ranks crosses (0 = intranode).
+fn crossing_tier(phys: &TierTree, dist: usize) -> usize {
+    for t in 0..phys.depth() {
+        if dist < phys.span(t) {
+            return t;
+        }
+    }
+    phys.depth() - 1
+}
+
+/// Wire time of one exchange round between participants `dist` ranks
+/// apart, `pspan` being the participant stride: the NIC serialization,
+/// or — when the hop crosses an oversubscribed uplink — the uplink
+/// serialization times the number of participants sharing it.
+fn round_wire(phys: &TierTree, cost: &CostModel, pspan: usize, dist: usize, wire: f64) -> f64 {
+    let cx = crossing_tier(phys, dist.max(1));
+    if cx == 0 {
+        return cost.link(0).alpha + wire / cost.link(0).beta;
+    }
+    let mut ser = wire / cost.link(1).beta;
+    for l in 2..=cx {
+        let contention = (phys.span(l - 1) / pspan.max(1)).max(1) as f64;
+        ser = ser.max(contention * wire / cost.link(l).beta);
+    }
+    cost.link(cx).alpha + ser
+}
+
+/// Cost of the recursive-doubling rounds over `g` participants spaced
+/// `pspan` apart: per-round kernels plus distance-resolved wire time
+/// (low-distance rounds stay inside close tiers; high-distance rounds
+/// pay uplink contention), with two extra neighbor-distance rounds for
+/// the non-power-of-two remainder fold.
+fn redoub_cost(
+    phys: &TierTree,
+    cost: &CostModel,
+    g: usize,
+    pspan: usize,
+    bytes: usize,
+    compressed: bool,
+) -> f64 {
+    if g <= 1 {
+        return 0.0;
+    }
+    let wire = cost.wire(bytes, compressed);
+    let kernels = cost.comp(bytes, compressed) + cost.dec(bytes, compressed) + cost.red(bytes);
+    let pof2 = 1usize << (usize::BITS - 1 - g.leading_zeros()) as usize;
+    let logp = pof2.trailing_zeros() as usize;
+    let mut total = 0.0;
+    for j in 0..logp {
+        total += kernels + round_wire(phys, cost, pspan, pspan << j, wire);
+    }
+    if g != pof2 {
+        total += 2.0 * (kernels + round_wire(phys, cost, pspan, pspan, wire));
+    }
+    total
+}
+
+/// Analytic cost of one leg (see [`Schedule::estimate_makespan`]).
+fn leg_cost(
+    leg: &Leg,
+    op: Op,
+    sched_tree: &TierTree,
+    phys: &TierTree,
+    cost: &CostModel,
+    msg_bytes: usize,
+) -> f64 {
+    let t = leg.tier;
+    let g = sched_tree.effective_width(t);
+    if g <= 1 {
+        return 0.0;
+    }
+    let pspan = sched_tree.pspan(t);
+    let n = sched_tree.ranks();
+    // Dominant per-participant payload of this leg.
+    let bytes = match op {
+        // Allgather legs carry the participants' gathered sub-blocks;
+        // the descent broadcasts the full gathered vector.
+        Op::Allgather => match leg.kind {
+            LegKind::BcastFromLeader => msg_bytes,
+            _ => (msg_bytes / n.max(1)) * pspan,
+        },
+        _ => msg_bytes,
+    };
+    let wire = cost.wire(bytes, leg.compressed);
+    // Worst in-group hop distance (member farthest from its leader).
+    let far = sched_tree.span(t).saturating_sub(pspan).max(pspan);
+    match leg.kind {
+        LegKind::ReduceToLeader | LegKind::GatherToLeader => {
+            let reduce = if leg.kind == LegKind::ReduceToLeader {
+                cost.red(bytes)
+            } else {
+                0.0
+            };
+            if t == 0 {
+                // NVLink fan-in: parallel transfers, sequential folds.
+                cost.link(0).alpha
+                    + bytes as f64 / cost.link(0).beta
+                    + (g - 1) as f64 * reduce
+            } else {
+                // One compression per member (parallel), then g−1
+                // arrivals serialize on the leader's ingress.
+                cost.comp(bytes, leg.compressed)
+                    + (g - 1) as f64
+                        * (round_wire(phys, cost, pspan, far, wire)
+                            + cost.dec(bytes, leg.compressed)
+                            + reduce)
+            }
+        }
+        LegKind::AllreduceRedoub => redoub_cost(phys, cost, g, pspan, bytes, leg.compressed),
+        LegKind::AllreduceRing => {
+            let chunk = (bytes / g).max(1);
+            let cw = cost.wire(chunk, leg.compressed);
+            let per_round = cost.comp(chunk, leg.compressed)
+                + cost.dec(chunk, leg.compressed)
+                + cost.red(chunk)
+                + round_wire(phys, cost, pspan, pspan, cw);
+            2.0 * (g - 1) as f64 * per_round
+        }
+        LegKind::AllgatherRing => {
+            let per_round = cost.dec(bytes, leg.compressed)
+                + round_wire(phys, cost, pspan, pspan, wire);
+            cost.comp(bytes, leg.compressed) + (g - 1) as f64 * per_round
+        }
+        LegKind::BcastFromLeader => {
+            if leg.compressed {
+                // Compress-once stream down a binomial tree.
+                cost.comp(bytes, leg.compressed)
+                    + cost.dec(bytes, leg.compressed)
+                    + ceil_log2(g) as f64 * round_wire(phys, cost, pspan, far, wire)
+            } else {
+                // Direct NVLink fan-out from the leader.
+                cost.link(0).alpha + (g - 1) as f64 * bytes as f64 / cost.link(0).beta
+            }
+        }
+        LegKind::ScatterFromLeader => {
+            // The leader ships (g−1)/g of its slice of the vector; the
+            // group covers min(span, ranks)/ranks of the chunk space
+            // (actual coverage, not the declared spec — see
+            // `TierTree::effective_width`).
+            let leg_bytes =
+                (msg_bytes as f64) * sched_tree.span(t).min(n) as f64 / n.max(1) as f64;
+            let out_wire = cost.wire(leg_bytes as usize, leg.compressed) * (g - 1) as f64
+                / g as f64;
+            cost.comp((leg_bytes as usize) / g.max(1), leg.compressed)
+                + round_wire(phys, cost, pspan, far, out_wire)
+                + cost.dec((leg_bytes as usize) / g.max(1), leg.compressed)
+        }
+    }
+}
+
+/// Per-round cost of a flat-ring chunk hop on the physical tree:
+/// kernels at the utilization floor plus a neighbor hop that crosses
+/// the node boundary for `1/width(0)` of the ranks.
+fn flat_ring_round(phys: &TierTree, cost: &CostModel, msg_bytes: usize, compressed: bool) -> f64 {
+    let n = phys.ranks();
+    let chunk = (msg_bytes / n).max(1);
+    let cw = cost.wire(chunk, compressed);
+    let f_inter = 1.0 / phys.width(0) as f64;
+    let wire_time = (1.0 - f_inter) * (cost.link(0).alpha + cw / cost.link(0).beta)
+        + f_inter * round_wire(phys, cost, 1, phys.span(0), cw);
+    cost.comp(chunk, compressed) + cost.dec(chunk, compressed) + cost.red(chunk) + wire_time
+}
+
+/// Analytic makespan of the **flat ring Allreduce** on the physical
+/// tree: `2(N−1)` chunk rounds (reduce-scatter + allgather).
+pub fn estimate_flat_ring(phys: &TierTree, cost: &CostModel, msg_bytes: usize, compressed: bool) -> f64 {
+    let n = phys.ranks();
+    if n <= 1 {
+        return 0.0;
+    }
+    2.0 * (n - 1) as f64 * flat_ring_round(phys, cost, msg_bytes, compressed)
+}
+
+/// Analytic makespan of the **flat ring Reduce_scatter**: only the
+/// `N−1` reduce-scatter rounds (no allgather phase) — half the
+/// Allreduce, which matters when pricing it against the hierarchical
+/// alternative.
+pub fn estimate_flat_reduce_scatter(
+    phys: &TierTree,
+    cost: &CostModel,
+    msg_bytes: usize,
+    compressed: bool,
+) -> f64 {
+    let n = phys.ranks();
+    if n <= 1 {
+        return 0.0;
+    }
+    (n - 1) as f64 * flat_ring_round(phys, cost, msg_bytes, compressed)
+}
+
+/// Analytic makespan of the **flat recursive-doubling** Allreduce on
+/// the physical tree: whole-vector rounds whose high-distance
+/// exchanges pay full uplink contention (every rank crosses at once).
+pub fn estimate_flat_redoub(
+    phys: &TierTree,
+    cost: &CostModel,
+    msg_bytes: usize,
+    compressed: bool,
+) -> f64 {
+    redoub_cost(phys, cost, phys.ranks(), 1, msg_bytes, compressed)
+}
+
+/// Analytic makespan of the **flat ring Allgather** (compress-once
+/// forwarding) over the gathered volume `total_bytes`.
+pub fn estimate_flat_allgather(
+    phys: &TierTree,
+    cost: &CostModel,
+    total_bytes: usize,
+    compressed: bool,
+) -> f64 {
+    let n = phys.ranks();
+    if n <= 1 {
+        return 0.0;
+    }
+    let block = (total_bytes / n).max(1);
+    let bw = cost.wire(block, compressed);
+    let f_inter = 1.0 / phys.width(0) as f64;
+    let wire_time = (1.0 - f_inter) * (cost.link(0).alpha + bw / cost.link(0).beta)
+        + f_inter * round_wire(phys, cost, 1, phys.span(0), bw);
+    cost.comp(block, compressed)
+        + (n - 1) as f64 * (wire_time + cost.dec(block, compressed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(ranks: usize, widths: &[usize]) -> TierTree {
+        TierTree::new(ranks, widths).unwrap()
+    }
+
+    const MIB: usize = 1 << 20;
+
+    #[test]
+    fn min_error_two_tier_matches_pr2_shape() {
+        let t = tree(16, &[4, 4]);
+        let s = compile_min_error(Op::Allreduce, &t, true).unwrap();
+        assert_eq!(
+            s.legs,
+            vec![
+                Leg { tier: 0, kind: LegKind::ReduceToLeader, compressed: false },
+                Leg { tier: 1, kind: LegKind::AllreduceRedoub, compressed: true },
+                Leg { tier: 0, kind: LegKind::BcastFromLeader, compressed: false },
+            ]
+        );
+        // Uncompressed policies compile all-raw legs.
+        let raw = compile_min_error(Op::Allreduce, &t, false).unwrap();
+        assert!(raw.legs.iter().all(|l| !l.compressed));
+    }
+
+    #[test]
+    fn three_tier_legs_are_mirrored() {
+        let t = tree(512, &[4, 16, 8]);
+        let s = compile_min_error(Op::ReduceScatter, &t, true).unwrap();
+        let tiers: Vec<usize> = s.legs.iter().map(|l| l.tier).collect();
+        assert_eq!(tiers, vec![0, 1, 2, 1, 0]);
+        assert_eq!(s.legs[3].kind, LegKind::ScatterFromLeader);
+        assert!(s.legs[1].compressed && !s.legs[0].compressed);
+        // Rooted ops have no hierarchical schedule.
+        assert!(compile_min_error(Op::Scatter, &t, true).is_err());
+    }
+
+    #[test]
+    fn amplification_matches_two_tier_model() {
+        // [4, 4]: 4 nodes → 2^2 − 1 = 3 (the PR 2 internode model).
+        let s = compile_min_error(Op::Allreduce, &tree(16, &[4, 4]), true).unwrap();
+        assert_eq!(s.amplification(), 3.0);
+        // Non-pow2 node count (6 nodes): fold/unfold adds 2 stages.
+        let s = compile_min_error(Op::Allreduce, &tree(12, &[2, 6]), true).unwrap();
+        assert_eq!(s.amplification(), 15.0);
+        // Single node: nothing compresses.
+        let s = compile_min_error(Op::Allreduce, &tree(4, &[4, 1]), true).unwrap();
+        assert_eq!(s.amplification(), 0.0);
+        // 3-tier 4x16x8: rack fold 15, top doubling ×8+7, descent +1.
+        let s = compile_min_error(Op::Allreduce, &tree(512, &[4, 16, 8]), true).unwrap();
+        assert_eq!(s.amplification(), 128.0);
+        // Reduce_scatter shares the ascent; its tier-0 scatter is raw.
+        let s = compile_min_error(Op::ReduceScatter, &tree(512, &[4, 16, 8]), true).unwrap();
+        assert_eq!(s.amplification(), 128.0);
+        // Allgather forwards compress-once streams: one eb per
+        // compressed crossing (t1 up, top ring, t1 down).
+        let s = compile_min_error(Op::Allgather, &tree(512, &[4, 16, 8]), true).unwrap();
+        assert_eq!(s.amplification(), 3.0);
+        // A spec that overcovers the rank count walks the *actual*
+        // groups: 100 ranks on [4,16,8] have at most 2 top-tier
+        // participants (1 doubling stage), not 8 — the bound must not
+        // inflate to the declared widths' 128.
+        let s = compile_min_error(Op::Allreduce, &tree(100, &[4, 16, 8]), true).unwrap();
+        assert_eq!(s.amplification(), 2.0 * 15.0 + 1.0 + 1.0);
+    }
+
+    #[test]
+    fn tier_sensitivities_sum_to_amplification() {
+        for widths in [&[4usize, 16, 8][..], &[2, 6][..], &[4, 4, 4][..], &[3, 5, 7][..]] {
+            let span: usize = widths.iter().product();
+            for op in [Op::Allreduce, Op::ReduceScatter, Op::Allgather] {
+                let s = compile_min_error(op, &tree(span, widths), true).unwrap();
+                let sens = s.tier_sensitivities();
+                let total: f64 = sens.iter().sum();
+                assert!(
+                    (total - s.amplification()).abs() < 1e-9 * (1.0 + total),
+                    "{op:?} {widths:?}: Σ{sens:?} = {total} vs {}",
+                    s.amplification()
+                );
+                // Tier 0 never compresses → zero sensitivity.
+                assert_eq!(sens[0], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cpr_stages_match_two_tier_table() {
+        use crate::collectives::expected_cpr_stages_hier;
+        for (n, g) in [(16usize, 4usize), (12, 2), (13, 4), (4, 4), (8, 1)] {
+            let nodes = n.div_ceil(g);
+            let s = compile_min_error(Op::Allreduce, &tree(n, &[g, nodes]), true).unwrap();
+            for rank in 0..n {
+                assert_eq!(
+                    s.cpr_stages_at(rank),
+                    expected_cpr_stages_hier(n, g, rank),
+                    "n={n} g={g} rank={rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_compile_prefers_doubling_over_fold_on_wide_middle_tiers() {
+        // A 16-wide rack tier: the leader-side sequential decompress of
+        // a linear fold costs ~4× the 4 doubling rounds.
+        let cost = CostModel::default_a100();
+        let t = tree(512, &[4, 16, 8]);
+        let s = compile_tuned(Op::Allreduce, &t, true, 64 * MIB, &cost).unwrap();
+        assert_eq!(s.legs[1].tier, 1);
+        assert_eq!(s.legs[1].kind, LegKind::AllreduceRedoub);
+        // The top leg stays doubling at 64 MiB (whole-vector kernels)…
+        assert_eq!(s.legs[2].kind, LegKind::AllreduceRedoub);
+        // …and flips to the chunked ring once chunks leave the
+        // utilization floor and ring's lower wire volume wins.
+        let huge = compile_tuned(Op::Allreduce, &t, true, 4096 * MIB, &cost).unwrap();
+        assert_eq!(huge.legs[2].kind, LegKind::AllreduceRing);
+    }
+
+    #[test]
+    fn estimates_rank_three_tier_below_two_tier_below_flats() {
+        // The acceptance shape: 512 ranks as 4 GPUs/node, 16
+        // nodes/rack, 8 racks, 64 MiB payload, oversubscribed rack
+        // uplinks. Cross-rack rounds cost the 2-tier schedule 16
+        // leaders per uplink; the 3-tier schedule sends one.
+        let cost = CostModel::default_a100();
+        let phys = tree(512, &[4, 16, 8]);
+        let three = compile_tuned(Op::Allreduce, &phys, true, 64 * MIB, &cost)
+            .unwrap()
+            .estimate_makespan(&phys, &cost, 64 * MIB);
+        let two = compile_tuned(Op::Allreduce, &phys.collapsed(2), true, 64 * MIB, &cost)
+            .unwrap()
+            .estimate_makespan(&phys, &cost, 64 * MIB);
+        let ring = estimate_flat_ring(&phys, &cost, 64 * MIB, true);
+        let redoub = estimate_flat_redoub(&phys, &cost, 64 * MIB, true);
+        assert!(three < two, "3-tier {three} vs 2-tier {two}");
+        assert!(three < ring, "3-tier {three} vs flat ring {ring}");
+        assert!(three < redoub, "3-tier {three} vs flat redoub {redoub}");
+        // Reduce_scatter's flat ring runs only the N−1 RS rounds.
+        let rs_ring = estimate_flat_reduce_scatter(&phys, &cost, 64 * MIB, true);
+        assert!((rs_ring - ring / 2.0).abs() <= 1e-9 * ring, "{rs_ring} vs {ring}");
+    }
+
+    #[test]
+    fn collapsed_two_tier_estimate_still_pays_the_physical_uplinks() {
+        // Pricing a 2-tier schedule against the 3-tier machine must
+        // cost more than against a genuinely 2-tier machine.
+        let cost = CostModel::default_a100();
+        let phys = tree(512, &[4, 16, 8]);
+        let flat2 = tree(512, &[4, 128]);
+        let sched = compile_min_error(Op::Allreduce, &phys.collapsed(2), true).unwrap();
+        let on_three = sched.estimate_makespan(&phys, &cost, 64 * MIB);
+        let on_two = sched.estimate_makespan(&flat2, &cost, 64 * MIB);
+        assert!(on_three > on_two, "{on_three} vs {on_two}");
+    }
+}

@@ -1,0 +1,332 @@
+//! `TierTree`: an N-level physical hierarchy of the rank space.
+//!
+//! Real GPU clusters are trees, not two flat networks: GPUs share a
+//! node (NVLink), nodes share a rack (full-bandwidth leaf switch),
+//! racks share a pod (oversubscribed uplinks), and so on. The
+//! [`TierTree`] describes that nesting as a list of *widths* — children
+//! per group at each tier, innermost first — over a block-wise rank
+//! layout, exactly the convention [`crate::net::Topology`] already
+//! uses for its two levels.
+//!
+//! `widths = [4, 16, 8]` reads "4 GPUs per node, 16 nodes per rack,
+//! 8 racks per pod": tier-0 groups are nodes of 4 ranks, tier-1 groups
+//! are racks of 64 ranks, tier-2 groups are pods of 512 ranks. The
+//! topmost tier must cover the whole communicator (exactly one top
+//! group), and the last group at any tier may be partially filled —
+//! the same rule as `Topology`'s partial last node.
+//!
+//! [`Topology`] is the lossless 2-tier special case:
+//! `TierTree::from(&topo)` yields `[gpus_per_node, nodes]`, and
+//! [`TierTree::to_topology`] recovers the node-level view (ranks +
+//! GPUs per node) that topology-oblivious code consumes.
+
+use crate::error::{Error, Result};
+use crate::net::Topology;
+
+/// An N-level hierarchy over a block-wise rank layout. See the module
+/// docs for the width convention.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierTree {
+    ranks: usize,
+    /// Children per group at each tier, innermost (GPU→node) first.
+    widths: Vec<usize>,
+}
+
+impl TierTree {
+    /// Build a tree of `ranks` ranks with the given per-tier widths.
+    ///
+    /// Errors when `ranks == 0`, `widths` is empty or contains a zero,
+    /// or the tree does not cover the communicator
+    /// (`widths.iter().product() < ranks` — the top tier must be a
+    /// single group).
+    pub fn new(ranks: usize, widths: &[usize]) -> Result<Self> {
+        if ranks == 0 {
+            return Err(Error::config("tier tree: ranks must be > 0"));
+        }
+        if widths.is_empty() {
+            return Err(Error::config("tier tree: at least one tier width required"));
+        }
+        if widths.iter().any(|&w| w == 0) {
+            return Err(Error::config("tier tree: every tier width must be > 0"));
+        }
+        let span: usize = widths.iter().product();
+        if span < ranks {
+            return Err(Error::config(format!(
+                "tier tree: widths {widths:?} span only {span} ranks but the \
+                 communicator has {ranks} (the top tier must be one group)"
+            )));
+        }
+        Ok(TierTree {
+            ranks,
+            widths: widths.to_vec(),
+        })
+    }
+
+    /// Parse a `--tiers`-style spec: `"4x16x8"` → `[4, 16, 8]`.
+    pub fn parse_widths(s: &str) -> Result<Vec<usize>> {
+        let widths: Result<Vec<usize>> = s
+            .split('x')
+            .map(|p| {
+                p.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::config(format!("bad tier spec `{s}` (want e.g. 4x16x8)")))
+            })
+            .collect();
+        let widths = widths?;
+        if widths.is_empty() || widths.iter().any(|&w| w == 0) {
+            return Err(Error::config(format!(
+                "bad tier spec `{s}`: every width must be a positive integer"
+            )));
+        }
+        Ok(widths)
+    }
+
+    /// Total number of ranks.
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Number of tiers.
+    pub fn depth(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Children per group at tier `t`.
+    pub fn width(&self, t: usize) -> usize {
+        self.widths[t]
+    }
+
+    /// All per-tier widths, innermost first.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Ranks covered by one (full) tier-`t` group:
+    /// `widths[0] · … · widths[t]`.
+    pub fn span(&self, t: usize) -> usize {
+        self.widths[..=t].iter().product()
+    }
+
+    /// Rank stride between the *participants* of a tier-`t` leg — the
+    /// leaders of the tier-`t−1` groups (stride 1 at tier 0: every
+    /// rank participates in its node's leg).
+    pub fn pspan(&self, t: usize) -> usize {
+        if t == 0 {
+            1
+        } else {
+            self.span(t - 1)
+        }
+    }
+
+    /// Number of tier-`t` groups (ceiling division; the last may be
+    /// partially filled).
+    pub fn groups(&self, t: usize) -> usize {
+        self.ranks.div_ceil(self.span(t))
+    }
+
+    /// The tier-`t` group hosting `rank`.
+    pub fn group_of(&self, t: usize, rank: usize) -> usize {
+        debug_assert!(rank < self.ranks);
+        rank / self.span(t)
+    }
+
+    /// The leader (lowest rank) of `rank`'s tier-`t` group.
+    pub fn leader_of(&self, t: usize, rank: usize) -> usize {
+        self.group_of(t, rank) * self.span(t)
+    }
+
+    /// Whether `rank` leads its tier-`t` group.
+    pub fn is_leader(&self, t: usize, rank: usize) -> bool {
+        rank % self.span(t) == 0
+    }
+
+    /// Whether `rank` participates in a tier-`t` leg — i.e. it leads
+    /// its tier-`t−1` group (every rank participates at tier 0).
+    pub fn participates(&self, t: usize, rank: usize) -> bool {
+        rank % self.pspan(t) == 0
+    }
+
+    /// The participants of tier-`t` group `group`, ascending — the
+    /// leaders of its tier-`t−1` subgroups (all member ranks at tier 0).
+    pub fn group_participants(&self, t: usize, group: usize) -> Vec<usize> {
+        let start = group * self.span(t);
+        let end = ((group + 1) * self.span(t)).min(self.ranks);
+        (start..end).step_by(self.pspan(t)).collect()
+    }
+
+    /// Index of `rank` among its tier-`t` group's participants.
+    pub fn relative_rank(&self, t: usize, rank: usize) -> usize {
+        debug_assert!(self.participates(t, rank));
+        (rank - self.leader_of(t, rank)) / self.pspan(t)
+    }
+
+    /// The **largest actual participant count** of any tier-`t` group —
+    /// equal to `width(t)` on fully-covered trees, smaller when the
+    /// widths overcover the rank count (ranks fill groups left to
+    /// right, so group 0 is always the fullest). Worst-case error and
+    /// cost models walk this, not the declared width: a `[4, 16, 8]`
+    /// spec over 100 ranks has at most 2 top-tier participants, not 8.
+    pub fn effective_width(&self, t: usize) -> usize {
+        self.span(t).min(self.ranks).div_ceil(self.pspan(t))
+    }
+
+    /// Lowest tier at which `a` and `b` share a group (0 = same node;
+    /// the top tier is a single group, so this always resolves).
+    pub fn lca_tier(&self, a: usize, b: usize) -> usize {
+        for t in 0..self.depth() {
+            if self.group_of(t, a) == self.group_of(t, b) {
+                return t;
+            }
+        }
+        self.depth() - 1
+    }
+
+    /// The same rank space with the top tiers merged down to `depth`
+    /// levels (the widths above `depth − 1` multiply into one top
+    /// width). `collapsed(2)` of `[4, 16, 8]` is `[4, 128]` — the
+    /// two-level node/fabric view the PR 2 schedule assumed.
+    pub fn collapsed(&self, depth: usize) -> TierTree {
+        assert!(
+            (1..=self.depth()).contains(&depth),
+            "collapse depth {depth} out of 1..={}",
+            self.depth()
+        );
+        if depth == self.depth() {
+            return self.clone();
+        }
+        let mut widths: Vec<usize> = self.widths[..depth - 1].to_vec();
+        widths.push(self.widths[depth - 1..].iter().product());
+        TierTree {
+            ranks: self.ranks,
+            widths,
+        }
+    }
+
+    /// The 2-tier node-level view (`ranks`, `gpus_per_node`) that
+    /// topology-oblivious code consumes. Lossless for 2-tier trees.
+    pub fn to_topology(&self) -> Topology {
+        Topology::new(self.ranks, self.widths[0]).expect("a valid tree yields a valid topology")
+    }
+}
+
+impl From<&Topology> for TierTree {
+    fn from(topo: &Topology) -> Self {
+        TierTree::new(topo.ranks(), &[topo.gpus_per_node(), topo.nodes()])
+            .expect("a valid topology yields a valid 2-tier tree")
+    }
+}
+
+impl From<Topology> for TierTree {
+    fn from(topo: Topology) -> Self {
+        TierTree::from(&topo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_tier_layout() {
+        // 4 GPUs/node × 16 nodes/rack × 8 racks = 512 ranks.
+        let t = TierTree::new(512, &[4, 16, 8]).unwrap();
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.span(0), 4);
+        assert_eq!(t.span(1), 64);
+        assert_eq!(t.span(2), 512);
+        assert_eq!(t.groups(0), 128);
+        assert_eq!(t.groups(1), 8);
+        assert_eq!(t.groups(2), 1);
+        // Rank 70: node 17, rack 1, pod 0.
+        assert_eq!(t.group_of(0, 70), 17);
+        assert_eq!(t.group_of(1, 70), 1);
+        assert_eq!(t.group_of(2, 70), 0);
+        assert_eq!(t.leader_of(1, 70), 64);
+        assert!(t.is_leader(1, 64) && !t.is_leader(1, 70));
+        // Participants: everyone at tier 0, node leaders at tier 1,
+        // rack leaders at tier 2.
+        assert!(t.participates(0, 70));
+        assert!(!t.participates(1, 70) && t.participates(1, 68));
+        assert!(t.participates(2, 64) && !t.participates(2, 68));
+        assert_eq!(t.group_participants(1, 1), (64..128).step_by(4).collect::<Vec<_>>());
+        assert_eq!(t.relative_rank(1, 72), 2);
+        // LCA: same node → 0; same rack → 1; cross rack → 2.
+        assert_eq!(t.lca_tier(70, 71), 0);
+        assert_eq!(t.lca_tier(70, 64), 1);
+        assert_eq!(t.lca_tier(70, 200), 2);
+    }
+
+    #[test]
+    fn topology_round_trip_is_lossless() {
+        let topo = Topology::new(10, 4).unwrap();
+        let tree = TierTree::from(&topo);
+        assert_eq!(tree.widths(), &[4, 3]);
+        assert_eq!(tree.depth(), 2);
+        let back = tree.to_topology();
+        assert_eq!(back, topo);
+        // Per-tier helpers agree with the Topology ones.
+        for r in 0..10 {
+            assert_eq!(tree.group_of(0, r), topo.node_of(r));
+            assert_eq!(tree.leader_of(0, r), topo.leader_of(r));
+            assert_eq!(tree.is_leader(0, r), topo.is_leader(r));
+        }
+        assert_eq!(tree.group_participants(0, 2), vec![8, 9]);
+    }
+
+    #[test]
+    fn collapsed_merges_top_tiers() {
+        let t = TierTree::new(512, &[4, 16, 8]).unwrap();
+        let two = t.collapsed(2);
+        assert_eq!(two.widths(), &[4, 128]);
+        assert_eq!(two.span(1), 512);
+        assert_eq!(t.collapsed(3), t);
+        // Rank assignments below the merge point are unchanged.
+        for r in [0usize, 5, 70, 511] {
+            assert_eq!(two.group_of(0, r), t.group_of(0, r));
+        }
+    }
+
+    #[test]
+    fn partial_groups_and_validation() {
+        // 100 ranks on a 4x16x8 tree: last rack partially filled.
+        let t = TierTree::new(100, &[4, 16, 8]).unwrap();
+        assert_eq!(t.groups(1), 2);
+        assert_eq!(t.group_participants(1, 1), (64..100).step_by(4).collect::<Vec<_>>());
+        // Effective widths follow the actual coverage, not the spec:
+        // the fullest rack has 16 node leaders, the top tier only 2
+        // rack leaders (the declared 8 never materialize).
+        assert_eq!(t.effective_width(0), 4);
+        assert_eq!(t.effective_width(1), 16);
+        assert_eq!(t.effective_width(2), 2);
+        let full = TierTree::new(512, &[4, 16, 8]).unwrap();
+        for tier in 0..3 {
+            assert_eq!(full.effective_width(tier), full.width(tier));
+        }
+        // Coverage and zero validation.
+        assert!(TierTree::new(0, &[4]).is_err());
+        assert!(TierTree::new(4, &[]).is_err());
+        assert!(TierTree::new(4, &[0, 2]).is_err());
+        assert!(TierTree::new(513, &[4, 16, 8]).is_err(), "tree must cover all ranks");
+    }
+
+    #[test]
+    fn parse_widths_forms() {
+        assert_eq!(TierTree::parse_widths("4x16x8").unwrap(), vec![4, 16, 8]);
+        assert_eq!(TierTree::parse_widths("8").unwrap(), vec![8]);
+        assert!(TierTree::parse_widths("").is_err());
+        assert!(TierTree::parse_widths("4x0x8").is_err());
+        assert!(TierTree::parse_widths("4xbanana").is_err());
+    }
+
+    #[test]
+    fn lca_of_2tier_matches_same_node() {
+        let topo = Topology::new(8, 4).unwrap();
+        let tree = TierTree::from(&topo);
+        for a in 0..8 {
+            for b in 0..8 {
+                let lca = tree.lca_tier(a, b);
+                assert_eq!(lca == 0, topo.same_node(a, b), "{a},{b}");
+            }
+        }
+    }
+}
