@@ -60,6 +60,16 @@ def main():
             continue
         delta = (new - old) / old
         label = "algo={} ranks={} gpn={} tiers={} size={}MiB".format(*key)
+        # Optional per-leg-eb column (absent in pre-ExecPlan artifacts):
+        # shown for context, and a change is flagged because different
+        # per-leg bounds change compressed wire volume, which can
+        # explain an apparent makespan shift.
+        leg_ebs = row.get("leg_ebs", "")
+        if leg_ebs:
+            label += f" legs={leg_ebs}"
+        prev_legs = base.get("leg_ebs", "")
+        if prev_legs and leg_ebs and prev_legs != leg_ebs:
+            print(f"note: per-leg ebs changed for {label}: {prev_legs} -> {leg_ebs}")
         if delta > args.threshold:
             regressions.append((label, old, new, delta))
             print(

@@ -28,6 +28,7 @@ fn main() -> gzccl::Result<()> {
         steps: 200,
         error_bound: 1e-4,
         accuracy_target: None,
+        adaptive: false,
         redoub: true,
         compress: true,
         seed: 42,

@@ -8,7 +8,9 @@
 //! wall-clock regeneration stats as `BENCH_allreduce.json` in the
 //! working directory — the perf trajectory artifact CI archives per
 //! commit, with a `tiers` column so tier-depth regressions show up in
-//! the trend job.
+//! the trend job and a `leg_ebs` column recording the executed plan's
+//! per-leg compressor bounds (the trend script tolerates artifacts
+//! from before the column existed).
 
 use gzccl::bench_support::bench;
 use gzccl::collectives::Algo;
@@ -23,7 +25,10 @@ fn tiers_label(widths: &[usize]) -> String {
         .join("x")
 }
 
-fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> f64 {
+/// Virtual makespan plus the executed plan's per-leg eb column
+/// (`"t1:1.0e-4+t2:1.0e-4"` — compressed legs only, empty when nothing
+/// compresses).
+fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> (f64, String) {
     let comm = Communicator::builder(ranks)
         .tiers(widths)
         .policy(ExecPolicy::gzccl())
@@ -31,10 +36,17 @@ fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> f64 {
         .build()
         .expect("communicator");
     let inputs: Vec<DeviceBuf> = (0..ranks).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
-    comm.allreduce(inputs, &CollectiveSpec::forced(algo))
-        .expect("allreduce")
-        .makespan
-        .as_secs()
+    let report = comm
+        .allreduce(inputs, &CollectiveSpec::forced(algo))
+        .expect("allreduce");
+    let leg_ebs = report
+        .legs
+        .iter()
+        .filter(|l| l.exec.compresses())
+        .map(|l| format!("t{}:{:.1e}", l.tier, l.exec.eb))
+        .collect::<Vec<_>>()
+        .join("+");
+    (report.makespan.as_secs(), leg_ebs)
 }
 
 fn main() {
@@ -57,19 +69,22 @@ fn main() {
         let label = tiers_label(widths);
         for &mb in &sizes_mb {
             for &(name, algo) in &algos {
-                let (virt_s, stats) = bench(2, || makespan(ranks, widths, mb << 20, algo));
+                let ((virt_s, leg_ebs), stats) =
+                    bench(2, || makespan(ranks, widths, mb << 20, algo));
                 println!(
                     "{name:>7} | {ranks:>4} ranks | tiers {label:>8} | {mb:>4} MiB | \
-                     virtual {:.3} ms | wall {stats}",
+                     virtual {:.3} ms | legs {leg_ebs:>18} | wall {stats}",
                     virt_s * 1e3
                 );
                 rows.push(format!(
                     concat!(
                         "    {{\"algo\": \"{}\", \"ranks\": {}, \"gpus_per_node\": {}, ",
                         "\"tiers\": \"{}\", \"size_mib\": {}, \"virtual_makespan_s\": {:.9}, ",
+                        "\"leg_ebs\": \"{}\", ",
                         "\"wall_mean_s\": {:.6}, \"wall_min_s\": {:.6}, \"wall_runs\": {}}}"
                     ),
-                    name, ranks, widths[0], label, mb, virt_s, stats.mean, stats.min, stats.runs
+                    name, ranks, widths[0], label, mb, virt_s, leg_ebs, stats.mean, stats.min,
+                    stats.runs
                 ));
             }
         }

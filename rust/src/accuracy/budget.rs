@@ -303,6 +303,20 @@ impl TieredPlan {
     pub fn tier(&self, tier: usize) -> Option<&TierBudget> {
         self.tiers.iter().find(|t| t.tier == tier)
     }
+
+    /// The split as a dense per-tier eb table of `depth` entries
+    /// (`None` for tiers with no share) — the form
+    /// [`crate::topo::ExecPlan::tiered`] consumes when the dispatcher
+    /// compiles the runtime execution plan from this split.
+    pub fn tier_ebs(&self, depth: usize) -> Vec<Option<f64>> {
+        let mut ebs = vec![None; depth];
+        for t in &self.tiers {
+            if t.tier < depth {
+                ebs[t.tier] = Some(t.eb);
+            }
+        }
+        ebs
+    }
 }
 
 /// Split `plan`'s per-call budget across the tiers of `op`'s min-error
@@ -564,6 +578,11 @@ mod tests {
             split.predicted_total(),
             plan.per_call_abs
         );
+        // Dense per-tier table form (what the ExecPlan compiler eats).
+        let ebs = split.tier_ebs(3);
+        assert_eq!(ebs[0], None);
+        assert_eq!(ebs[1], Some(split.tier(1).unwrap().eb));
+        assert_eq!(ebs[2], Some(split.tier(2).unwrap().eb));
         // Skewed compressibility weights trade eb between tiers but
         // never blow the budget.
         let skew = split_across_tiers(&plan, Op::Allreduce, &tree, Some(&[1.0, 5.0, 0.5]))

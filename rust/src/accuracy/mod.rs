@@ -26,8 +26,11 @@
 //!   against an exact reference on a deterministic element sample,
 //!   surfaced through [`crate::comm::CollectiveReport::accuracy`] and
 //!   the per-rank [`crate::coordinator::OpCounters`].
-//!   [`AccuracyReport::suggested_eb`] turns the observed headroom into
-//!   a conservative bound-relaxation proposal.
+//!   [`AccuracyReport::relaxation_factor_vs`] turns observed headroom
+//!   into a conservative bound-relaxation proposal, which the
+//!   [`crate::comm::Communicator`]'s adaptive controller
+//!   ([`crate::comm::CommBuilder::adaptive`]) folds back into the next
+//!   dispatch's execution plan — the closed telemetry loop.
 //!
 //! All three walk the same [`crate::topo::TierTree`] the scheduler
 //! compiles against (`*_tiers` entry points): hierarchical algorithms'

@@ -69,37 +69,65 @@ impl AccuracyReport {
         }
     }
 
-    /// Telemetry-driven bound relaxation: when the observed deviation
-    /// sits far inside the worst-case prediction, propose a larger
-    /// compressor `eb` that would still have met the bound — the first
-    /// step of feeding `observed_max_err` back into the planner.
+    /// The multiplicative eb-relaxation this report's headroom
+    /// justifies: half the measured headroom (the other half held in
+    /// reserve), capped at [`MAX_EB_RELAXATION`] per step. `None` when
+    /// there is nothing sound to propose — an unbounded or exact
+    /// prediction, or headroom under 2× (the model is already close to
+    /// tight). This is what the [`crate::comm::Communicator`]'s
+    /// adaptive controller folds back into the next dispatch's
+    /// execution plan.
+    pub fn relaxation_factor(&self) -> Option<f64> {
+        match self.prediction {
+            ErrorPrediction::Bounded(b) if b > 0.0 => self.relaxation_factor_vs(b),
+            _ => None,
+        }
+    }
+
+    /// [`AccuracyReport::relaxation_factor`] measured against an
+    /// explicit absolute `budget` instead of this report's own
+    /// prediction. This is the form the adaptive controller uses:
+    /// observed quantization error scales with the compressor bound, so
+    /// prediction-relative headroom is scale-invariant and would chase
+    /// the cap forever — held against the fixed certified per-call
+    /// budget, the loop converges (steady state ≈ half the budget) and
+    /// the budget is the quantity the reserve protects.
     ///
-    /// Pure and conservative: the proposal keeps half the measured
-    /// headroom in reserve and never grows `eb` by more than
-    /// [`MAX_EB_RELAXATION`]× per step. `None` when there is nothing
-    /// sound to propose — an unbounded or exact prediction, a
-    /// non-positive current bound, or headroom under 2× (the model is
-    /// already close to tight). Not yet wired into dispatch.
-    pub fn suggested_eb(&self, current_eb: f64) -> Option<f64> {
-        let bound = match self.prediction {
-            ErrorPrediction::Bounded(b) if b > 0.0 => b,
-            _ => return None,
-        };
-        if !(current_eb.is_finite() && current_eb > 0.0) {
+    /// The raw observation is used undiscounted: `fp_slack` is a
+    /// deliberately paranoid worst-case allowance that grows linearly
+    /// with the rank count and can dwarf a tight budget — subtracting
+    /// it would overstate headroom exactly when caution matters most,
+    /// while leaving the noise in only makes the proposal more
+    /// conservative.
+    pub fn relaxation_factor_vs(&self, budget: f64) -> Option<f64> {
+        if !(budget.is_finite() && budget > 0.0) {
             return None;
         }
-        // Quantization headroom: how far the observation sits inside
-        // the bound once f32 reassociation noise is discounted.
-        let observed = (self.observed_max_err - self.fp_slack).max(0.0);
-        let headroom = if observed <= 0.0 {
+        if self.prediction == ErrorPrediction::Unbounded {
+            return None; // no bound governs the stream: nothing to relax
+        }
+        let headroom = if self.observed_max_err <= 0.0 {
             MAX_EB_RELAXATION * 2.0
         } else {
-            bound / observed
+            budget / self.observed_max_err
         };
         if headroom <= 2.0 {
             return None;
         }
-        Some(current_eb * (headroom / 2.0).min(MAX_EB_RELAXATION))
+        Some((headroom / 2.0).min(MAX_EB_RELAXATION))
+    }
+
+    /// Telemetry-driven bound relaxation: when the observed deviation
+    /// sits far inside the worst-case prediction, propose a larger
+    /// compressor `eb` that would still have met the bound —
+    /// `current_eb ×` [`AccuracyReport::relaxation_factor`]. `None`
+    /// when the factor is (or the current bound makes relaxation)
+    /// unsound.
+    pub fn suggested_eb(&self, current_eb: f64) -> Option<f64> {
+        if !(current_eb.is_finite() && current_eb > 0.0) {
+            return None;
+        }
+        Some(current_eb * self.relaxation_factor()?)
     }
 }
 
@@ -356,6 +384,31 @@ mod tests {
     }
 
     #[test]
+    fn relaxation_vs_budget_is_budget_anchored() {
+        let mk = |prediction, observed| AccuracyReport {
+            prediction,
+            observed_max_err: observed,
+            samples: 10,
+            fp_slack: 0.0,
+        };
+        // Observed sitting AT the prediction still relaxes against a
+        // wider per-call budget (headroom 7 → 3.5×)…
+        let r = mk(ErrorPrediction::Bounded(1e-3), 1e-3);
+        assert_eq!(r.relaxation_factor(), None, "prediction-relative: tight");
+        assert!((r.relaxation_factor_vs(7e-3).unwrap() - 3.5).abs() < 1e-12);
+        // …and the half-held-back reserve stops the loop at half the
+        // budget (headroom exactly 2).
+        assert_eq!(mk(ErrorPrediction::Bounded(1e-2), 3.5e-3).relaxation_factor_vs(7e-3), None);
+        // Unbounded streams and degenerate budgets never relax.
+        assert_eq!(
+            mk(ErrorPrediction::Unbounded, 1e-9).relaxation_factor_vs(7e-3),
+            None
+        );
+        assert_eq!(r.relaxation_factor_vs(0.0), None);
+        assert_eq!(r.relaxation_factor_vs(f64::NAN), None);
+    }
+
+    #[test]
     fn suggested_eb_proposes_from_headroom() {
         let mk = |prediction, observed| AccuracyReport {
             prediction,
@@ -366,9 +419,11 @@ mod tests {
         // 100× headroom → relax by min(100/2, 8) = the 8× cap.
         let r = mk(ErrorPrediction::Bounded(1e-2), 1e-4);
         assert!((r.suggested_eb(1e-4).unwrap() - 8e-4).abs() < 1e-15);
-        // 5× headroom → relax by 2.5× (half the headroom in reserve).
+        // 5× headroom → relax by exactly 2.5× (half the headroom in
+        // reserve; the raw observation is used — no fp_slack discount).
         let r = mk(ErrorPrediction::Bounded(5e-3), 1e-3);
         assert!((r.suggested_eb(1e-4).unwrap() - 2.5e-4).abs() < 1e-15);
+        assert_eq!(r.relaxation_factor(), Some(2.5));
         // Near-tight observations (≤ 2× headroom) propose nothing.
         assert_eq!(mk(ErrorPrediction::Bounded(1e-3), 6e-4).suggested_eb(1e-4), None);
         // Zero observed deviation: cap applies (no infinite proposal).

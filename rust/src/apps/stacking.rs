@@ -111,6 +111,12 @@ pub struct StackingConfig {
     /// the per-call error bound for the chosen variant (and *rejects*
     /// variants it cannot certify, e.g. the fixed-rate CPRP2P).
     pub accuracy_target: Option<StackingTarget>,
+    /// Close the telemetry adaptation loop
+    /// ([`crate::comm::CommBuilder::adaptive`]): observed headroom
+    /// relaxes the planned bound for subsequent calls through the same
+    /// communicator. Needs `accuracy_target`; ignored for variants the
+    /// planner does not certify a budget for.
+    pub adaptive: bool,
     /// Scenario seed.
     pub seed: u64,
 }
@@ -125,6 +131,7 @@ impl Default for StackingConfig {
             noise: 0.002,
             error_bound: 1e-4,
             accuracy_target: None,
+            adaptive: false,
             seed: 0xEEC,
         }
     }
@@ -148,6 +155,10 @@ pub struct StackingOutcome {
     /// The per-call error bound the budget planner derived (`None`
     /// without an accuracy target or for uncompressed variants).
     pub planned_eb: Option<f64>,
+    /// The bound the *next* call through the same communicator would
+    /// run at, after this call's telemetry fed the adaptive controller
+    /// (`None` unless `adaptive` was set with a planned budget).
+    pub adapted_eb: Option<f64>,
     /// The plan itself, when one was made.
     pub plan: Option<BudgetPlan>,
     /// Runtime accuracy telemetry from the collective dispatch.
@@ -194,7 +205,6 @@ pub fn run_stacking(
     // variant's algorithm to get the per-call compressor bound; the
     // planner rejects variants it cannot certify (fixed-rate CPRP2P).
     let policy = variant.policy();
-    let mut eb = cfg.error_bound;
     let mut plan: Option<BudgetPlan> = None;
     if let Some(app_target) = cfg.accuracy_target {
         if policy.compression != CompressionMode::None {
@@ -214,17 +224,21 @@ pub fn run_stacking(
                 &topo,
                 policy.compression,
             )?;
-            eb = p.eb;
             plan = Some(p);
         }
     }
 
     let inputs: Vec<DeviceBuf> = partials.into_iter().map(DeviceBuf::Real).collect();
-    let comm = Communicator::builder(cfg.ranks)
+    // With a plan, the communicator adopts it whole: dispatch-time
+    // budget validation, the per-tier split, and (when asked) the
+    // adaptive controller all see the same certified plan.
+    let builder = Communicator::builder(cfg.ranks)
         .gpus_per_node(cfg.gpus_per_node)
-        .policy(policy)
-        .error_bound(eb)
-        .build()?;
+        .policy(policy);
+    let comm = match plan {
+        Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,
+        None => builder.error_bound(cfg.error_bound).build()?,
+    };
     let report = comm.allreduce(inputs, &CollectiveSpec::forced(variant.algo()))?;
 
     let image = report.outputs[0].clone().into_real();
@@ -236,6 +250,7 @@ pub fn run_stacking(
         nrmse: nrmse(&reference, &image),
         max_abs_err: linf(&reference, &image),
         planned_eb: plan.map(|p| p.eb),
+        adapted_eb: comm.adaptive_eb(),
         plan,
         accuracy: report.accuracy,
         image,
@@ -337,6 +352,35 @@ mod tests {
         let nccl = run_stacking(&cfg, StackingVariant::Nccl, None).unwrap();
         assert!(nccl.plan.is_none());
         assert!(nccl.psnr >= db);
+    }
+
+    #[test]
+    fn adaptive_flag_wires_the_controller() {
+        let cfg = StackingConfig {
+            accuracy_target: Some(StackingTarget::PsnrDb(55.0)),
+            adaptive: true,
+            ..small_cfg()
+        };
+        let out = run_stacking(&cfg, StackingVariant::GzcclReDoub, None).unwrap();
+        let planned = out.planned_eb.unwrap();
+        let next = out
+            .adapted_eb
+            .expect("adaptive communicator reports its next-call eb");
+        let plan = out.plan.unwrap();
+        // Monotone (never tighter than the plan) and capped by the
+        // certified per-call budget.
+        assert!(
+            next >= planned && next <= plan.per_call_abs * (1.0 + 1e-9),
+            "planned {planned} next {next} cap {}",
+            plan.per_call_abs
+        );
+        // Without the flag there is no controller to report.
+        let plain = StackingConfig {
+            accuracy_target: Some(StackingTarget::PsnrDb(55.0)),
+            ..small_cfg()
+        };
+        let out = run_stacking(&plain, StackingVariant::GzcclReDoub, None).unwrap();
+        assert!(out.adapted_eb.is_none());
     }
 
     #[test]

@@ -37,12 +37,23 @@
 //! Compression is confined to tiers ≥ 1, so the error accounting is
 //! exactly what [`crate::topo::Schedule::amplification`] walks — the
 //! schedule and its error model can never drift apart.
+//!
+//! **Per-leg bounds.** Execution is driven by an
+//! [`crate::topo::ExecPlan`]: each leg carries its own
+//! [`crate::topo::LegExec`] (compression mode + absolute error bound),
+//! and [`run_plan`] interprets exactly that — entering a leg rebinds
+//! the rank's compressor to the leg's bound
+//! ([`RankCtx::begin_leg`]), so a budgeted dispatch whose per-tier
+//! split assigns tier 1 and tier 2 different `eb`s genuinely runs
+//! different compressors on them. [`run_schedule`] remains the
+//! bare-schedule entry point: it derives the equivalent uniform plan
+//! from the cluster's ambient policy and bound.
 
-use crate::coordinator::{CompBuf, DeviceBuf, Payload, RankCtx};
+use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
 use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
-use crate::topo::{compile_min_error, LegKind, Schedule, TierTree};
+use crate::topo::{compile_min_error, ExecPlan, LegExec, LegKind, Schedule, TierTree};
 
 use super::chunking::Chunks;
 use super::Op;
@@ -100,10 +111,52 @@ fn recv_vec(
     }
 }
 
-/// Execute a compiled hierarchical schedule. Every rank of the
-/// communicator must run the same schedule over a same-length input
+/// Execute a compiled [`ExecPlan`] (a hierarchical schedule whose legs
+/// carry their own compression mode and error bound). Every rank of
+/// the communicator must run the same plan over a same-length input
 /// (the root-free ops: Allreduce, Reduce_scatter, Allgather).
+pub fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> Result<DeviceBuf> {
+    let sched = plan.schedule.as_ref().ok_or_else(|| {
+        Error::collective("run_plan needs a scheduled (hierarchical) execution plan")
+    })?;
+    if plan.legs.len() != sched.legs.len() {
+        return Err(Error::collective(format!(
+            "execution plan carries {} leg directives for a {}-leg schedule",
+            plan.legs.len(),
+            sched.legs.len()
+        )));
+    }
+    run_legs(ctx, sched, &plan.legs, input)
+}
+
+/// Execute a compiled hierarchical schedule at the cluster's ambient
+/// policy and compressor bound — the bare-schedule entry point for
+/// direct invocation; equivalent to [`run_plan`] over the uniform
+/// [`ExecPlan`] of that schedule.
 pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Result<DeviceBuf> {
+    let mode = ctx.policy().compression;
+    let eb = ctx.compressor_error_bound().unwrap_or(0.0);
+    let legs: Vec<LegExec> = sched
+        .legs
+        .iter()
+        .map(|l| {
+            if l.compressed && mode != CompressionMode::None {
+                LegExec { compression: mode, eb }
+            } else {
+                LegExec::raw()
+            }
+        })
+        .collect();
+    run_legs(ctx, sched, &legs, input)
+}
+
+/// The leg interpreter (see the module docs for per-leg semantics).
+fn run_legs(
+    ctx: &mut RankCtx,
+    sched: &Schedule,
+    legs: &[LegExec],
+    input: DeviceBuf,
+) -> Result<DeviceBuf> {
     let n = ctx.nranks();
     let me = ctx.rank();
     if n <= 1 {
@@ -136,6 +189,11 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
         if !tree.participates(t, me) {
             continue;
         }
+        // Enter the leg: compress kernels below run at ITS bound and
+        // record their observed error under its index.
+        let lex = legs[li];
+        let compressed = lex.compresses();
+        ctx.begin_leg(li, lex);
         let group = tree.group_of(t, me);
         let ps = tree.group_participants(t, group);
         let k = ps.len();
@@ -157,12 +215,12 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
         match leg.kind {
             LegKind::ReduceToLeader => {
                 if my_idx != 0 {
-                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, leg.compressed);
+                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, compressed);
                     // `data` is stale until the mirrored descent leg.
                 } else {
                     for (j, m) in ps.iter().enumerate().skip(1) {
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, *m, tag(li, j as u64), leg.compressed);
+                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed);
                         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
                         data = sum;
                         data_t = t_sum;
@@ -172,14 +230,14 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
 
             LegKind::GatherToLeader => {
                 if my_idx != 0 {
-                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, leg.compressed);
+                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, compressed);
                 } else {
                     let mut parts = Vec::with_capacity(k);
                     let mut t_all = data_t;
                     parts.push(data.clone());
                     for (j, m) in ps.iter().enumerate().skip(1) {
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, *m, tag(li, j as u64), leg.compressed);
+                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed);
                         t_all = t_all.join(t_in);
                         parts.push(theirs);
                     }
@@ -197,11 +255,11 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                 let newidx: isize;
                 if my_idx < 2 * rem {
                     if my_idx % 2 == 0 {
-                        send_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_FOLD), &data, data_t, leg.compressed);
+                        send_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_FOLD), &data, data_t, compressed);
                         newidx = -1;
                     } else {
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_FOLD), leg.compressed);
+                            recv_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_FOLD), compressed);
                         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
                         data = sum;
                         data_t = t_sum;
@@ -222,9 +280,9 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                             peer_nr + rem
                         };
                         let peer = ps[peer_idx];
-                        send_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), &data, data_t, leg.compressed);
+                        send_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), &data, data_t, compressed);
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), leg.compressed);
+                            recv_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), compressed);
                         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
                         data = sum;
                         data_t = t_sum;
@@ -234,10 +292,10 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                 }
                 if my_idx < 2 * rem {
                     if my_idx % 2 == 1 {
-                        send_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_UNFOLD), &data, data_t, leg.compressed);
+                        send_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_UNFOLD), &data, data_t, compressed);
                     } else {
                         let (result, t_in) =
-                            recv_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_UNFOLD), leg.compressed);
+                            recv_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_UNFOLD), compressed);
                         data = result;
                         data_t = t_in;
                     }
@@ -255,7 +313,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                 for s in 1..k {
                     let send_idx = (my_idx + k - s) % k;
                     let recv_idx = (my_idx + k - s - 1) % k;
-                    if leg.compressed {
+                    if compressed {
                         let (c, t_c) = ctx.compress(stream, &acc[send_idx], acc_t[send_idx]);
                         ctx.send(next, tag(li, OFF_RING_RS + s as u64), Payload::Comp(c), t_c);
                         let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_RS + s as u64));
@@ -279,7 +337,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                     }
                 }
                 // Allgather phase: forward finished chunks verbatim.
-                if leg.compressed {
+                if compressed {
                     let (cmine, t0) = ctx.compress(stream, &acc[my_idx], acc_t[my_idx]);
                     let mut outgoing: CompBuf = cmine;
                     let mut out_t = t0;
@@ -326,7 +384,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                 let mut blocks: Vec<Option<DeviceBuf>> = (0..k).map(|_| None).collect();
                 let mut t_all = data_t;
                 blocks[my_idx] = Some(data.clone());
-                if leg.compressed {
+                if compressed {
                     let (cmine, t0) = ctx.compress(stream, &data, data_t);
                     let mut outgoing: CompBuf = cmine;
                     let mut out_t = t0;
@@ -369,7 +427,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
             }
 
             LegKind::BcastFromLeader => {
-                if leg.compressed {
+                if compressed {
                     // Compress-once stream forwarded down a binomial
                     // tree: every consumer decodes exactly once.
                     let mut held: Option<(CompBuf, VirtTime)> = None;
@@ -423,7 +481,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                         let lo = chunks.start(*m);
                         let hi = chunks.start((*m + pspan).min(n));
                         let slice = data.slice(lo - off..hi - off);
-                        if leg.compressed && slice.elems() > 0 {
+                        if compressed && slice.elems() > 0 {
                             let (c, t_c) = ctx.compress(stream, &slice, data_t);
                             ctx.send(*m, tag(li, j as u64), Payload::Comp(c), t_c);
                         } else {
@@ -437,7 +495,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
                 } else {
                     let lo = chunks.start(me);
                     let hi = chunks.start((me + pspan).min(n));
-                    let (d, t_in) = if leg.compressed && hi > lo {
+                    let (d, t_in) = if compressed && hi > lo {
                         let (c, t_in) = ctx.recv_comp(ps[0], tag(li, my_idx as u64));
                         ctx.decompress(stream, &c, t_in)
                     } else {
@@ -450,6 +508,7 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
             }
         }
     }
+    ctx.end_leg();
     ctx.sync_device();
     Ok(data)
 }

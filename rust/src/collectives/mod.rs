@@ -33,7 +33,8 @@ pub use allreduce::{allreduce_recursive_doubling, allreduce_reduce_bcast, allred
 pub use bcast::bcast_binomial;
 pub use chunking::Chunks;
 pub use hierarchical::{
-    allgather_hierarchical, allreduce_hierarchical, reduce_scatter_hierarchical, run_schedule,
+    allgather_hierarchical, allreduce_hierarchical, reduce_scatter_hierarchical, run_plan,
+    run_schedule,
 };
 pub use reduce_scatter::reduce_scatter_ring;
 pub use scatter::scatter_binomial;

@@ -1,5 +1,7 @@
 //! The [`Communicator`]: NCCL/MPI-style entry point for collectives.
 
+use std::sync::{Arc, Mutex};
+
 use crate::accuracy::{
     complies_tiers, plan_auto_tiers, predict_worst_tiers, split_across_tiers, AccuracyReport,
     AccuracyTarget, BudgetPlan, ErrorPrediction, ErrorProbe, TieredPlan,
@@ -11,7 +13,7 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::Topology;
-use crate::topo::{compile_min_error, CostModel, Schedule, TierTree};
+use crate::topo::{compile_min_error, CostModel, ExecPlan, LegExec, LegKind, Schedule, TierTree};
 
 use super::registry::AlgoRegistry;
 use super::tuner::{AlgoHint, CollectiveSpec, Tuner};
@@ -30,6 +32,8 @@ pub struct CommBuilder {
     policy: ExecPolicy,
     error_bound: Option<f64>,
     accuracy_target: Option<AccuracyTarget>,
+    external_plan: Option<BudgetPlan>,
+    adaptive: bool,
     value_range: Option<f64>,
     iterations: usize,
     profile: Option<CompressionProfile>,
@@ -47,6 +51,8 @@ impl CommBuilder {
             policy: ExecPolicy::gzccl(),
             error_bound: None,
             accuracy_target: None,
+            external_plan: None,
+            adaptive: false,
             value_range: None,
             iterations: 1,
             profile: None,
@@ -78,6 +84,34 @@ impl CommBuilder {
     /// algorithms and forced hints are validated against the plan.
     pub fn accuracy_target(mut self, target: AccuracyTarget) -> Self {
         self.accuracy_target = Some(target);
+        self
+    }
+
+    /// Adopt an externally-computed [`BudgetPlan`] instead of letting
+    /// [`CommBuilder::accuracy_target`] derive one: applications that
+    /// pin a specific algorithm invert the propagation model for *that*
+    /// algorithm ([`crate::accuracy::plan_for_algo`]) and hand the
+    /// result over, so dispatch-time budget validation, per-tier
+    /// splits, and the adaptive controller all see the same certified
+    /// plan. Mutually exclusive with both `.accuracy_target()` and
+    /// `.error_bound()`; requires the error-bounded policy.
+    pub fn budget_plan(mut self, plan: BudgetPlan) -> Self {
+        self.external_plan = Some(plan);
+        self
+    }
+
+    /// Close the telemetry adaptation loop: after every dispatch whose
+    /// accuracy telemetry shows >2× headroom between the observed error
+    /// and the **certified per-call budget**, relax the next dispatch's
+    /// per-leg compressor bounds by half the headroom (≤
+    /// [`crate::accuracy::MAX_EB_RELAXATION`]× per step), never letting
+    /// any leg's bound exceed the certified per-call budget — and fall
+    /// straight back to the certified plan if an observation ever
+    /// exceeds it. Requires a budget (an accuracy target or an adopted
+    /// plan) under the error-bounded policy; virtual payloads produce
+    /// no telemetry and therefore never adapt.
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.adaptive = on;
         self
     }
 
@@ -137,6 +171,11 @@ impl CommBuilder {
         };
         let mut plan: Option<BudgetPlan> = None;
         if let Some(target) = self.accuracy_target {
+            if self.external_plan.is_some() {
+                return Err(Error::config(
+                    "set either .budget_plan() or .accuracy_target(), not both",
+                ));
+            }
             match self.policy.compression {
                 CompressionMode::None => {} // lossless: target trivially met
                 CompressionMode::FixedRate | CompressionMode::ErrorBounded => {
@@ -155,11 +194,40 @@ impl CommBuilder {
                 }
             }
         }
-        // Per-tier view of the budget (multi-tier trees; informational
-        // until per-leg compressor bounds land in the executor).
-        let tiered = plan
-            .as_ref()
-            .and_then(|p| split_across_tiers(p, Op::Allreduce, &tree, None).ok());
+        if let Some(p) = self.external_plan {
+            if self.error_bound.is_some() {
+                return Err(Error::config(
+                    "set either .error_bound() or .budget_plan(), not both",
+                ));
+            }
+            if self.policy.compression != CompressionMode::ErrorBounded {
+                return Err(Error::config(
+                    ".budget_plan() needs the error-bounded compression policy \
+                     (no other compressor can certify a plan)",
+                ));
+            }
+            plan = Some(p);
+        }
+        // Build-time per-tier view of the budget (multi-tier trees).
+        // Dispatch recompiles the split for each dispatched op and
+        // *enforces* it leg by leg through the ExecPlan; this is the
+        // Allreduce-anchored view applications introspect. A split
+        // failure is a build error, not a silently-absent plan.
+        let tiered = match &plan {
+            Some(p) => Some(split_across_tiers(p, Op::Allreduce, &tree, None)?),
+            None => None,
+        };
+        let adaptive = if self.adaptive {
+            if plan.is_none() {
+                return Err(Error::config(
+                    ".adaptive(true) needs a certified budget to stay inside: set \
+                     .accuracy_target() or adopt a .budget_plan() under a compressed policy",
+                ));
+            }
+            Some(Arc::new(AdaptiveController::new()))
+        } else {
+            None
+        };
         let mut spec = ClusterSpec::with_tiers(tree, self.policy);
         if let Some(eb) = self.error_bound {
             spec.error_bound = eb;
@@ -175,8 +243,33 @@ impl CommBuilder {
             tuner: self.tuner.unwrap_or_default(),
             plan,
             tiered,
+            adaptive,
         })
     }
+}
+
+/// One leg of an executed plan, as reported back: where it ran, what
+/// it did, the bound its compressor was held to, and the observed
+/// compression error (real payloads only).
+#[derive(Debug, Clone, Copy)]
+pub struct LegReport {
+    /// Leg index in execution order.
+    pub leg: usize,
+    /// Tier the leg ran within (0 for flat one-leg plans).
+    pub tier: usize,
+    /// The schedule leg's kind (`None` for flat plans — the leg is the
+    /// whole collective).
+    pub kind: Option<LegKind>,
+    /// The directive the executor enforced (compression mode + eb).
+    pub exec: LegExec,
+    /// Max observed `|reconstructed − input|` over every rank's
+    /// compress kernels on this leg (`None` for raw legs, virtual
+    /// payloads, and buffers past
+    /// [`crate::coordinator::LEG_PROBE_MAX_ELEMS`], whose O(n)
+    /// roundtrip probe is skipped). For an error-bounded leg this must
+    /// sit at or below `exec.eb` — the runtime proof the per-leg bound
+    /// was enforced.
+    pub observed_max_err: Option<f64>,
 }
 
 /// Result of one communicator-dispatched collective: the underlying
@@ -194,6 +287,15 @@ pub struct CollectiveReport {
     /// (`Some` only for [`Algo::Hierarchical`]): its tree depth and
     /// per-tier legs are the tuner's per-tier decision record.
     pub schedule: Option<Schedule>,
+    /// The execution plan the dispatch compiled and the executor
+    /// enforced: one [`LegExec`] per leg (flat algorithms carry a
+    /// degenerate one-leg plan). Under a budget its bounds are the
+    /// per-tier split; under adaptation they carry the controller's
+    /// current relaxation.
+    pub exec_plan: ExecPlan,
+    /// Per-leg breakdown: the plan's directives zipped with the
+    /// observed per-leg compression errors.
+    pub legs: Vec<LegReport>,
     /// Accuracy telemetry: predicted worst-case bound vs observed max
     /// deviation on a deterministic element sample. `Some` only for
     /// compressed collectives over real payloads (see
@@ -210,6 +312,56 @@ impl std::ops::Deref for CollectiveReport {
     }
 }
 
+/// The telemetry→plan feedback state of an adaptive communicator
+/// ([`CommBuilder::adaptive`]): a single relaxation factor (≥ 1)
+/// applied to every planned per-leg bound at dispatch, grown from
+/// observed headroom and reset to 1 the moment an observation exceeds
+/// the certified per-call budget. Shared (via `Arc`) between clones of
+/// the communicator, so repeated calls through any handle feed one
+/// loop.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    scale: Mutex<f64>,
+}
+
+impl AdaptiveController {
+    fn new() -> Self {
+        AdaptiveController {
+            scale: Mutex::new(1.0),
+        }
+    }
+
+    /// Current relaxation factor over the planned bounds (1 = the
+    /// certified plan, untouched).
+    pub fn scale(&self) -> f64 {
+        *self.scale.lock().expect("adaptive state poisoned")
+    }
+
+    /// Fold one dispatch's telemetry into the loop: back off to the
+    /// certified plan on a budget violation, otherwise relax by the
+    /// headroom between the observed error and the **certified
+    /// per-call budget** ([`AccuracyReport::relaxation_factor_vs`] —
+    /// half held in reserve, ≤ 8×/step), cumulatively capped so the
+    /// planned eb never exceeds the per-call budget. Measuring against
+    /// the fixed budget (not the eb-proportional prediction) is what
+    /// makes the loop converge instead of chasing its own relaxation.
+    fn update(&self, report: &AccuracyReport, plan: &BudgetPlan) {
+        let mut s = self.scale.lock().expect("adaptive state poisoned");
+        if report.observed_max_err > plan.per_call_abs * (1.0 + 1e-9) + report.fp_slack {
+            *s = 1.0;
+            return;
+        }
+        if let Some(f) = report.relaxation_factor_vs(plan.per_call_abs) {
+            let cap = if plan.eb > 0.0 {
+                (plan.per_call_abs / plan.eb).max(1.0)
+            } else {
+                1.0
+            };
+            *s = (*s * f).min(cap);
+        }
+    }
+}
+
 /// A communicator over a simulated cluster: owns the
 /// [`ClusterSpec`] + [`Tuner`] and dispatches collectives through the
 /// [`AlgoRegistry`].
@@ -219,6 +371,7 @@ pub struct Communicator {
     tuner: Tuner,
     plan: Option<BudgetPlan>,
     tiered: Option<TieredPlan>,
+    adaptive: Option<Arc<AdaptiveController>>,
 }
 
 impl Communicator {
@@ -234,6 +387,7 @@ impl Communicator {
             tuner: Tuner::default(),
             plan: None,
             tiered: None,
+            adaptive: None,
         }
     }
 
@@ -241,6 +395,22 @@ impl Communicator {
     /// [`CommBuilder::accuracy_target`] under a compressed policy.
     pub fn budget_plan(&self) -> Option<&BudgetPlan> {
         self.plan.as_ref()
+    }
+
+    /// The adaptive controller, when built with
+    /// [`CommBuilder::adaptive`]`(true)`.
+    pub fn adaptive(&self) -> Option<&AdaptiveController> {
+        self.adaptive.as_deref()
+    }
+
+    /// The compressor bound the next flat dispatch will run at: the
+    /// planned per-call eb times the adaptive controller's current
+    /// relaxation, clamped at the certified per-call budget. `None`
+    /// without a budget plan or adaptive mode.
+    pub fn adaptive_eb(&self) -> Option<f64> {
+        let plan = self.plan.as_ref()?;
+        let ctl = self.adaptive.as_ref()?;
+        Some((plan.eb * ctl.scale()).min(plan.per_call_abs))
     }
 
     /// The per-tier split of the budget plan (multi-tier layouts under
@@ -383,7 +553,9 @@ impl Communicator {
             }
             AlgoHint::Auto => match &self.plan {
                 Some(plan) => {
-                    let algo = self.tuner.select_within_budget_tiers(
+                    // The veto hands back the certified min-error
+                    // schedule alongside its decision.
+                    let (algo, sched) = self.tuner.select_within_budget_tiers(
                         op,
                         self.spec.policy,
                         &self.spec.tiers,
@@ -392,7 +564,7 @@ impl Communicator {
                         spec.root,
                         plan,
                     )?;
-                    (algo, true, None)
+                    (algo, true, sched)
                 }
                 None => {
                     let (algo, sched) = self.tuner.select_with_tiers_scheduled(
@@ -414,7 +586,8 @@ impl Communicator {
             && matches!(op, Op::Allreduce | Op::ReduceScatter | Op::Allgather)
         {
             Some(match (&self.plan, preselected) {
-                (Some(_), _) => compile_min_error(op, &self.spec.tiers, compressed)?,
+                (Some(_), Some(s)) => s,
+                (Some(_), None) => compile_min_error(op, &self.spec.tiers, compressed)?,
                 (None, Some(s)) => s,
                 (None, None) => self.tuner.plan_schedule(
                     op,
@@ -427,6 +600,39 @@ impl Communicator {
         } else {
             None
         };
+        // Compile the ExecPlan — the single contract handed to the
+        // executor. Budgeted hierarchical dispatch enforces the
+        // per-tier split (tier 1 and tier 2 legs run different
+        // compressors); everything else runs uniform bounds, and flat
+        // algorithms become degenerate one-leg plans.
+        let mut exec_plan = match &schedule {
+            Some(s) => match &self.plan {
+                Some(plan) => {
+                    let split = split_across_tiers(plan, op, &self.spec.tiers, None)?;
+                    ExecPlan::tiered(
+                        s.clone(),
+                        self.spec.policy.compression,
+                        &split.tier_ebs(s.tree.depth()),
+                        plan.eb,
+                    )
+                }
+                None => ExecPlan::uniform(
+                    s.clone(),
+                    self.spec.policy.compression,
+                    self.spec.error_bound,
+                ),
+            },
+            None => ExecPlan::flat(op, self.spec.policy.compression, self.spec.error_bound),
+        };
+        // Adaptation: fold the controller's current telemetry-earned
+        // relaxation into the plan, every leg clamped at the certified
+        // per-call budget.
+        if let (Some(ctl), Some(plan)) = (&self.adaptive, &self.plan) {
+            let scale = ctl.scale();
+            if scale > 1.0 {
+                exec_plan = exec_plan.relaxed(scale, plan.per_call_abs);
+            }
+        }
         // Telemetry probe: sample the exact reference before the inputs
         // are consumed (compressed collectives on real payloads only).
         let probe = if compressed {
@@ -434,31 +640,36 @@ impl Communicator {
         } else {
             None
         };
-        let program =
-            AlgoRegistry::resolve_scheduled(op, algo, total_elems, spec.root, schedule.clone())?;
+        let program = AlgoRegistry::resolve_planned(
+            op,
+            algo,
+            total_elems,
+            spec.root,
+            Some(exec_plan.clone()),
+        )?;
         let mut report = run_collective(&self.spec, inputs, &*program)?;
-        // The error prediction follows the schedule that actually ran:
-        // compiled legs are walked directly, flat algorithms use the
-        // closed-form model.
-        let prediction = match (self.spec.policy.compression, &schedule) {
-            (CompressionMode::None, _) => Some(ErrorPrediction::Exact),
-            (CompressionMode::FixedRate, _) => Some(ErrorPrediction::Unbounded),
-            (CompressionMode::ErrorBounded, Some(s)) => {
-                let m = s.amplification();
-                Some(if m == 0.0 {
+        // The error prediction follows the plan that actually ran:
+        // scheduled plans walk their own legs at their own bounds
+        // (`Σ_t A[t] · eb_t`), flat plans use the closed-form model at
+        // their single leg's bound.
+        let prediction = match self.spec.policy.compression {
+            CompressionMode::None => Some(ErrorPrediction::Exact),
+            CompressionMode::FixedRate => Some(ErrorPrediction::Unbounded),
+            CompressionMode::ErrorBounded => match exec_plan.predicted_bound() {
+                Some(b) => Some(if b == 0.0 {
                     ErrorPrediction::Exact
                 } else {
-                    ErrorPrediction::Bounded(m * self.spec.error_bound)
-                })
-            }
-            (CompressionMode::ErrorBounded, None) => predict_worst_tiers(
-                op,
-                algo,
-                &self.spec.tiers,
-                spec.root,
-                CompressionMode::ErrorBounded,
-                self.spec.error_bound,
-            ),
+                    ErrorPrediction::Bounded(b)
+                }),
+                None => predict_worst_tiers(
+                    op,
+                    algo,
+                    &self.spec.tiers,
+                    spec.root,
+                    CompressionMode::ErrorBounded,
+                    exec_plan.leg(0).eb,
+                ),
+            },
         };
         let accuracy = probe
             .and_then(|p| p.observe(&report.outputs))
@@ -482,11 +693,38 @@ impl Communicator {
                 c.observed_max_err = Some(a.observed_max_err);
             }
         }
+        // Per-leg breakdown: the plan's directives zipped with the
+        // observed per-leg compression errors the executor recorded.
+        let legs: Vec<LegReport> = exec_plan
+            .legs
+            .iter()
+            .enumerate()
+            .map(|(i, ex)| LegReport {
+                leg: i,
+                tier: exec_plan.schedule.as_ref().map_or(0, |s| s.legs[i].tier),
+                kind: exec_plan.schedule.as_ref().map(|s| s.legs[i].kind),
+                exec: *ex,
+                observed_max_err: report
+                    .leg_errors
+                    .iter()
+                    .find(|l| l.leg == i)
+                    .map(|l| l.observed_max_err),
+            })
+            .collect();
+        // Close the adaptation loop: fold this dispatch's telemetry
+        // into the controller for the next call.
+        if let (Some(ctl), Some(plan)) = (&self.adaptive, &self.plan) {
+            if let Some(a) = &accuracy {
+                ctl.update(a, plan);
+            }
+        }
         Ok(CollectiveReport {
             op,
             algo,
             auto_tuned,
             schedule,
+            exec_plan,
+            legs,
             accuracy,
             report,
         })

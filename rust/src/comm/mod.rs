@@ -42,6 +42,19 @@
 //! dispatch over real payloads additionally records predicted-vs-
 //! observed error telemetry ([`CollectiveReport`]`::accuracy`).
 //!
+//! **The ExecPlan contract.** Every dispatch compiles a
+//! [`crate::topo::ExecPlan`] — one compression-mode + error-bound
+//! directive per schedule leg (flat algorithms are degenerate one-leg
+//! plans) — and the executor enforces exactly it: under a budget the
+//! per-tier split of [`crate::accuracy::split_across_tiers`] is
+//! load-bearing, with tier 1 and tier 2 legs running different
+//! compressor bounds, and the per-leg observed errors come back in
+//! [`CollectiveReport::legs`]. With [`CommBuilder::adaptive`]`(true)`
+//! an [`AdaptiveController`] closes the loop: telemetry headroom
+//! relaxes the next dispatch's bounds (≤ 8×/step, every leg clamped at
+//! the certified per-call budget), and a violation snaps back to the
+//! certified plan.
+//!
 //! Every dispatch is recorded in the per-rank
 //! [`crate::coordinator::OpCounters`] (`algo_selected`,
 //! `tuner_decisions`, `predicted_err_bound`, `observed_max_err`) so
@@ -51,6 +64,8 @@ pub mod communicator;
 pub mod registry;
 pub mod tuner;
 
-pub use communicator::{CollectiveReport, CommBuilder, Communicator};
+pub use communicator::{
+    AdaptiveController, CollectiveReport, CommBuilder, Communicator, LegReport,
+};
 pub use registry::AlgoRegistry;
 pub use tuner::{AlgoHint, CollectiveSpec, Tuner};

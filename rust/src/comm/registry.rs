@@ -9,12 +9,12 @@
 use crate::collectives::{
     allgather_bruck, allgather_hierarchical, allgather_recursive_doubling, allgather_ring,
     allreduce_hierarchical, allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
-    bcast_binomial, reduce_scatter_hierarchical, reduce_scatter_ring, run_schedule,
+    bcast_binomial, reduce_scatter_hierarchical, reduce_scatter_ring, run_plan, run_schedule,
     scatter_binomial, Algo, Op,
 };
 use crate::coordinator::{DeviceBuf, RankCtx, RankProgram};
 use crate::error::{Error, Result};
-use crate::topo::Schedule;
+use crate::topo::{ExecPlan, LegExec, Schedule};
 
 /// Static registry of implemented `(Op, Algo)` pairs.
 pub struct AlgoRegistry;
@@ -60,12 +60,55 @@ impl AlgoRegistry {
         Self::resolve_scheduled(op, algo, total_elems, root, None)
     }
 
+    /// [`AlgoRegistry::resolve`] with a compiled [`ExecPlan`] — the
+    /// dispatch-side entry point. Scheduled (hierarchical) plans run
+    /// through [`run_plan`], each leg at its own bound; flat algorithms
+    /// run their free function inside the plan's single degenerate leg
+    /// ([`RankCtx::begin_leg`]), so per-call bound overrides and
+    /// per-leg telemetry apply uniformly to every algorithm.
+    pub fn resolve_planned(
+        op: Op,
+        algo: Algo,
+        total_elems: usize,
+        root: usize,
+        plan: Option<ExecPlan>,
+    ) -> Result<Box<RankProgram>> {
+        let Some(plan) = plan else {
+            return Self::resolve(op, algo, total_elems, root);
+        };
+        if plan.schedule.is_some() {
+            return match (op, algo) {
+                (Op::Allreduce | Op::ReduceScatter | Op::Allgather, Algo::Hierarchical) => {
+                    Ok(Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
+                        run_plan(ctx, &plan, input)
+                    }))
+                }
+                _ => Err(Error::collective(format!(
+                    "no {algo:?} implementation for {op:?} (supported: {:?})",
+                    Self::supported(op)
+                ))),
+            };
+        }
+        // Degenerate one-leg plan: the flat program runs wholly inside
+        // leg 0, at the plan's bound.
+        let exec = plan.legs.first().copied().unwrap_or_else(LegExec::raw);
+        let inner = Self::resolve(op, algo, total_elems, root)?;
+        Ok(Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
+            ctx.begin_leg(0, exec);
+            let out = inner(ctx, input);
+            ctx.end_leg();
+            out
+        }))
+    }
+
     /// [`AlgoRegistry::resolve`] with an optional pre-compiled
     /// hierarchical [`Schedule`]: when the dispatcher already chose the
     /// per-tier legs (cost-tuned or budget-constrained), the program
-    /// executes exactly that schedule; without one the hierarchical
-    /// free functions compile the min-error default from the cluster's
-    /// own tier tree. Non-hierarchical pairs ignore the schedule.
+    /// executes exactly that schedule at the cluster's ambient bound;
+    /// without one the hierarchical free functions compile the
+    /// min-error default from the cluster's own tier tree.
+    /// Non-hierarchical pairs ignore the schedule. (Per-leg bounds go
+    /// through [`AlgoRegistry::resolve_planned`] instead.)
     pub fn resolve_scheduled(
         op: Op,
         algo: Algo,
@@ -171,6 +214,34 @@ mod tests {
         assert!(AlgoRegistry::resolve(Op::Allgather, Algo::Hierarchical, 0, 0).is_ok());
         assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Hierarchical));
         assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Hierarchical, 0, 0).is_err());
+    }
+
+    #[test]
+    fn planned_resolve_covers_flat_and_scheduled_programs() {
+        use crate::coordinator::CompressionMode;
+        use crate::topo::{compile_min_error, TierTree};
+        let tree = TierTree::new(8, &[2, 2, 2]).unwrap();
+        let sched = compile_min_error(Op::Allreduce, &tree, true).unwrap();
+        let plan = ExecPlan::uniform(sched, CompressionMode::ErrorBounded, 1e-3);
+        assert!(AlgoRegistry::resolve_planned(
+            Op::Allreduce,
+            Algo::Hierarchical,
+            0,
+            0,
+            Some(plan.clone())
+        )
+        .is_ok());
+        // A scheduled plan cannot graft Hierarchical onto a rooted op.
+        assert!(
+            AlgoRegistry::resolve_planned(Op::Bcast, Algo::Hierarchical, 0, 0, Some(plan))
+                .is_err()
+        );
+        // Flat algorithms ride a degenerate one-leg plan…
+        let flat = ExecPlan::flat(Op::Allreduce, CompressionMode::ErrorBounded, 1e-3);
+        assert!(AlgoRegistry::resolve_planned(Op::Allreduce, Algo::Ring, 0, 0, Some(flat))
+            .is_ok());
+        // …and no plan falls back to the bare resolve.
+        assert!(AlgoRegistry::resolve_planned(Op::Allreduce, Algo::Ring, 0, 0, None).is_ok());
     }
 
     #[test]

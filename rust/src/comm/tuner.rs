@@ -58,8 +58,8 @@ use crate::error::{Error, Result};
 use crate::gpu::GpuModel;
 use crate::net::Topology;
 use crate::topo::{
-    compile_tuned, estimate_flat_allgather, estimate_flat_redoub, estimate_flat_reduce_scatter,
-    estimate_flat_ring, CostModel, Schedule, TierTree,
+    compile_min_error, compile_tuned, estimate_flat_allgather, estimate_flat_redoub,
+    estimate_flat_reduce_scatter, estimate_flat_ring, CostModel, Schedule, TierTree,
 };
 
 use super::registry::AlgoRegistry;
@@ -407,9 +407,15 @@ impl Tuner {
             root,
             plan,
         )
+        .map(|(algo, _)| algo)
     }
 
     /// [`Tuner::select_within_budget`] over an N-level [`TierTree`].
+    /// Also hands back the **certified schedule** when the compliant
+    /// choice is hierarchical: the min-error compile whose
+    /// amplification the `complies` check walked — the dispatcher must
+    /// execute exactly it (a cost-tuned recompile could carry more
+    /// error than the budget certified).
     #[allow(clippy::too_many_arguments)]
     pub fn select_within_budget_tiers(
         &self,
@@ -420,10 +426,21 @@ impl Tuner {
         msg_bytes: usize,
         root: usize,
         plan: &BudgetPlan,
-    ) -> Result<Algo> {
+    ) -> Result<(Algo, Option<Schedule>)> {
+        let compressed = policy.compression != CompressionMode::None;
+        let certified = |algo: Algo| -> Result<Option<Schedule>> {
+            if algo == Algo::Hierarchical
+                && matches!(op, Op::Allreduce | Op::ReduceScatter | Op::Allgather)
+            {
+                Ok(Some(compile_min_error(op, tree, compressed)?))
+            } else {
+                Ok(None)
+            }
+        };
         let preferred = self.select_with_tiers(op, policy, tree, cost, msg_bytes);
         if complies_tiers(plan, op, preferred, tree, root) {
-            return Ok(preferred);
+            let sched = certified(preferred)?;
+            return Ok((preferred, sched));
         }
         // Fallback order: fewest compression stages first (the veto
         // exists precisely because fewer stages mean less error). The
@@ -439,7 +456,8 @@ impl Tuner {
                 && AlgoRegistry::is_supported(op, algo)
                 && complies_tiers(plan, op, algo, tree, root)
             {
-                return Ok(algo);
+                let sched = certified(algo)?;
+                return Ok((algo, sched));
             }
         }
         Err(Error::budget(format!(

@@ -263,6 +263,17 @@ impl Compressor for CuszpLike {
     fn fixed_output_size(&self, _n: usize) -> Option<usize> {
         None
     }
+
+    fn rebound(&self, eb: f64) -> Option<std::sync::Arc<dyn Compressor>> {
+        // The bound is a per-call constructor argument, so any positive
+        // finite eb rebinds; streams are self-describing (the header
+        // carries eb), so decoders never need the rebound instance.
+        if eb > 0.0 && eb.is_finite() {
+            Some(std::sync::Arc::new(CuszpLike::new(eb)))
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +336,25 @@ mod tests {
             assert_eq!(back.len(), n);
             assert!(max_abs_diff(&back, &data) <= 1e-4 + 1e-7);
         }
+    }
+
+    #[test]
+    fn rebound_runs_at_the_new_bound() {
+        let base = CuszpLike::new(1e-4);
+        let loose = base.rebound(1e-2).expect("error-bounded rebinds");
+        let data: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.01).sin()).collect();
+        let stream = loose.compress(&data);
+        // The rebound instance quantizes at ITS bound, not the base's:
+        // the loose stream is measurably smaller and its error sits
+        // between the two bounds.
+        assert!(stream.len() < base.compress(&data).len());
+        let back = base.decompress(&stream).unwrap(); // self-describing
+        let err = max_abs_diff(&back, &data);
+        assert!(err <= 1e-2 + 1e-5, "err {err}");
+        assert!(err > 1e-4, "loose stream should exceed the tight bound");
+        // Degenerate bounds do not rebind.
+        assert!(base.rebound(0.0).is_none());
+        assert!(base.rebound(f64::NAN).is_none());
     }
 
     #[test]

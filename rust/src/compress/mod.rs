@@ -48,6 +48,16 @@ pub trait Compressor: Send + Sync {
     /// compressors only — this property is what lets CPRP2P pre-post
     /// receives, and what costs it bounded accuracy).
     fn fixed_output_size(&self, n: usize) -> Option<usize>;
+
+    /// A variant of this compressor rebound to a different absolute
+    /// error bound — what lets one [`crate::coordinator::RankCtx`] run
+    /// different legs of an execution plan at different bounds.
+    /// `None` when the family has no per-call bound to rebind
+    /// (fixed-rate) or `eb` is not a usable bound.
+    fn rebound(&self, eb: f64) -> Option<std::sync::Arc<dyn Compressor>> {
+        let _ = eb;
+        None
+    }
 }
 
 /// Compression ratio of a (raw, compressed) pair in bytes.

@@ -16,6 +16,7 @@ use crate::error::Result;
 use crate::gpu::{GpuDevice, StreamId};
 use crate::net::{Fabric, Topology};
 use crate::sim::{Breakdown, Phase, RankClock, VirtTime};
+use crate::topo::LegExec;
 
 use super::buffer::{CompBuf, DeviceBuf};
 use super::mailbox::{Mailbox, Msg, Payload};
@@ -171,6 +172,31 @@ pub struct OpCounters {
     pub observed_max_err: Option<f64>,
 }
 
+/// Elements above which a compress call skips the per-leg roundtrip
+/// observation: the decode behind it is O(n), and the evidence a
+/// 64Ki-element sample provides is the same. Virtual payloads and
+/// larger real payloads simply report no per-leg observation.
+pub const LEG_PROBE_MAX_ELEMS: usize = 1 << 16;
+
+/// Observed compression error of one execution-plan leg on one rank:
+/// the maximum `|reconstructed − input|` over the leg's compression
+/// kernels (real payloads of at most [`LEG_PROBE_MAX_ELEMS`] elements —
+/// virtual size-only buffers have nothing to measure, and huge buffers
+/// skip the O(n) roundtrip decode). This is the runtime evidence that
+/// the leg's compressor actually honored its [`LegExec::eb`]; the
+/// [`crate::comm::Communicator`] aggregates it across ranks into the
+/// per-leg breakdown of its `CollectiveReport`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LegError {
+    /// Leg index in the dispatched [`crate::topo::ExecPlan`].
+    pub leg: usize,
+    /// Max pointwise deviation of the leg's compressed streams from
+    /// their inputs.
+    pub observed_max_err: f64,
+    /// Compression kernels that contributed observations.
+    pub samples: usize,
+}
+
 /// Per-rank execution context handed to a collective algorithm.
 pub struct RankCtx {
     rank: usize,
@@ -184,6 +210,15 @@ pub struct RankCtx {
     compressor: Option<Arc<dyn Compressor>>,
     profile: CompressionProfile,
     counters: OpCounters,
+    /// The execution-plan leg currently being interpreted: compress
+    /// calls run at its bound and record observations under its index.
+    active_leg: Option<(usize, LegExec)>,
+    /// Compressor rebound to the active leg's bound, cached once per
+    /// leg (`None` when the ambient compressor already runs the leg's
+    /// bound, or nothing rebinds).
+    leg_compressor: Option<Arc<dyn Compressor>>,
+    /// Per-leg observed compression errors accumulated this run.
+    leg_errors: Vec<LegError>,
 }
 
 impl RankCtx {
@@ -211,6 +246,9 @@ impl RankCtx {
             compressor,
             profile,
             counters: OpCounters::default(),
+            active_leg: None,
+            leg_compressor: None,
+            leg_errors: Vec::new(),
         }
     }
 
@@ -252,6 +290,86 @@ impl RankCtx {
     /// Whether this variant compresses at all.
     pub fn compression_enabled(&self) -> bool {
         self.policy.compression != CompressionMode::None
+    }
+
+    /// The configured compressor's absolute error bound, when it has
+    /// one (error-bounded policies only). Legacy direct invocations use
+    /// it to turn a bare [`crate::topo::Schedule`] into the equivalent
+    /// uniform [`crate::topo::ExecPlan`].
+    pub fn compressor_error_bound(&self) -> Option<f64> {
+        self.compressor.as_ref().and_then(|c| c.error_bound())
+    }
+
+    /// Enter leg `leg` of the active execution plan: subsequent
+    /// compress calls run at the leg's own bound
+    /// ([`LegExec::bounded_eb`]) instead of the cluster's ambient one,
+    /// and their observed quantization error is recorded under the
+    /// leg's index (see [`RankCtx::leg_errors`]). The rebound
+    /// compressor is resolved once here, not per kernel — and not at
+    /// all when the leg's bound already equals the ambient one.
+    pub fn begin_leg(&mut self, leg: usize, exec: LegExec) {
+        self.active_leg = Some((leg, exec));
+        self.leg_compressor = None;
+        if let (Some(base), Some(eb)) = (&self.compressor, exec.bounded_eb()) {
+            if base.error_bound() != Some(eb) {
+                self.leg_compressor = base.rebound(eb);
+            }
+        }
+    }
+
+    /// Leave per-leg mode: compress calls fall back to the ambient
+    /// compressor and stop recording.
+    pub fn end_leg(&mut self) {
+        self.active_leg = None;
+        self.leg_compressor = None;
+    }
+
+    /// Per-leg observed compression errors recorded so far (empty when
+    /// no execution plan was interpreted or every payload was virtual).
+    pub fn leg_errors(&self) -> &[LegError] {
+        &self.leg_errors
+    }
+
+    /// The compressor the next kernel runs: the per-leg rebound one
+    /// when the active leg's bound differs from the ambient, else the
+    /// ambient compressor.
+    fn effective_compressor(&self) -> Option<Arc<dyn Compressor>> {
+        self.leg_compressor.clone().or_else(|| self.compressor.clone())
+    }
+
+    /// Fold one compressed stream's observed reconstruction error into
+    /// the active leg's record (no-op outside per-leg mode, and capped
+    /// at [`LEG_PROBE_MAX_ELEMS`] — the roundtrip decode that backs the
+    /// observation is O(n), so huge payloads skip it rather than double
+    /// the compression path's CPU cost).
+    fn record_leg_error(&mut self, comp: &dyn Compressor, input: &[f32], stream: &[u8]) {
+        let Some((leg, _)) = self.active_leg else {
+            return;
+        };
+        if input.len() > LEG_PROBE_MAX_ELEMS {
+            return;
+        }
+        let Ok(recon) = comp.decompress(stream) else {
+            return;
+        };
+        let mut max_err = 0f64;
+        for (a, b) in recon.iter().zip(input) {
+            let d = (*a as f64 - *b as f64).abs();
+            if d > max_err {
+                max_err = d;
+            }
+        }
+        match self.leg_errors.iter_mut().find(|l| l.leg == leg) {
+            Some(l) => {
+                l.observed_max_err = l.observed_max_err.max(max_err);
+                l.samples += 1;
+            }
+            None => self.leg_errors.push(LegError {
+                leg,
+                observed_max_err: max_err,
+                samples: 1,
+            }),
+        }
     }
 
     /// Operation counters so far.
@@ -340,8 +458,10 @@ impl RankCtx {
         self.counters.compress_calls += 1;
         let out = match buf {
             DeviceBuf::Real(v) => {
-                let c = self.compressor.as_ref().expect("no compressor configured");
-                CompBuf::Real(c.compress(v))
+                let c = self.effective_compressor().expect("no compressor configured");
+                let stream = c.compress(v);
+                self.record_leg_error(&*c, v, &stream);
+                CompBuf::Real(stream)
             }
             DeviceBuf::Virtual(n) => CompBuf::Virtual {
                 bytes: self.predicted_compressed_size(buf),
@@ -384,19 +504,22 @@ impl RankCtx {
         let end = self.gpu.enqueue(StreamId::Default, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
         self.counters.compress_calls += k;
-        let outs = chunks
-            .iter()
-            .map(|buf| match buf {
+        let comp = self.effective_compressor();
+        let mut outs = Vec::with_capacity(k);
+        for buf in chunks {
+            match buf {
                 DeviceBuf::Real(v) => {
-                    let c = self.compressor.as_ref().expect("no compressor");
-                    CompBuf::Real(c.compress(v))
+                    let c = comp.as_ref().expect("no compressor");
+                    let stream = c.compress(v);
+                    self.record_leg_error(&**c, v, &stream);
+                    outs.push(CompBuf::Real(stream));
                 }
-                DeviceBuf::Virtual(n) => CompBuf::Virtual {
+                DeviceBuf::Virtual(n) => outs.push(CompBuf::Virtual {
                     bytes: self.predicted_compressed_size(buf),
                     elems: *n,
-                },
-            })
-            .collect();
+                }),
+            }
+        }
         self.maybe_sync(end);
         (outs, end)
     }

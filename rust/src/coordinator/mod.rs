@@ -14,6 +14,8 @@ pub mod mailbox;
 pub mod runner;
 
 pub use buffer::{CompBuf, DeviceBuf};
-pub use ctx::{CompressionMode, ExecPolicy, OpCounters, RankCtx};
+pub use ctx::{
+    CompressionMode, ExecPolicy, LegError, OpCounters, RankCtx, LEG_PROBE_MAX_ELEMS,
+};
 pub use mailbox::{Msg, Payload};
 pub use runner::{run_collective, ClusterSpec, RankProgram, RunReport};

@@ -11,7 +11,7 @@ use crate::sim::{Breakdown, VirtTime};
 use crate::topo::TierTree;
 
 use super::buffer::DeviceBuf;
-use super::ctx::{CompressionMode, ExecPolicy, OpCounters, RankCtx};
+use super::ctx::{CompressionMode, ExecPolicy, LegError, OpCounters, RankCtx};
 use super::mailbox::build_mesh;
 
 /// Everything needed to instantiate a simulated cluster.
@@ -131,6 +131,10 @@ pub struct RunReport {
     pub breakdowns: Vec<Breakdown>,
     /// Per-rank op counters.
     pub counters: Vec<OpCounters>,
+    /// Per-leg observed compression errors, merged across ranks (max
+    /// deviation per leg, summed sample counts). Empty unless the
+    /// program interpreted an execution plan over real payloads.
+    pub leg_errors: Vec<LegError>,
 }
 
 impl RunReport {
@@ -184,8 +188,8 @@ pub fn run_collective(
     let (senders, boxes) = build_mesh(n);
     let compressor = spec.make_compressor();
 
-    let mut results: Vec<Option<Result<(DeviceBuf, VirtTime, Breakdown, OpCounters)>>> =
-        (0..n).map(|_| None).collect();
+    type RankOutcome = (DeviceBuf, VirtTime, Breakdown, OpCounters, Vec<LegError>);
+    let mut results: Vec<Option<Result<RankOutcome>>> = (0..n).map(|_| None).collect();
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
@@ -216,7 +220,8 @@ pub fn run_collective(
                     );
                     let out = program(&mut ctx, input)?;
                     let finish = ctx.finish();
-                    Ok((out, finish, ctx.breakdown(), ctx.counters()))
+                    let legs = ctx.leg_errors().to_vec();
+                    Ok((out, finish, ctx.breakdown(), ctx.counters(), legs))
                 }),
             ));
         }
@@ -231,19 +236,31 @@ pub fn run_collective(
     let mut outputs = Vec::with_capacity(n);
     let mut breakdowns = Vec::with_capacity(n);
     let mut counters = Vec::with_capacity(n);
+    let mut leg_errors: Vec<LegError> = Vec::new();
     let mut makespan = VirtTime::ZERO;
     for r in results.into_iter() {
-        let (out, finish, bd, ct) = r.expect("missing rank result")?;
+        let (out, finish, bd, ct, legs) = r.expect("missing rank result")?;
         outputs.push(out);
         makespan = makespan.join(finish);
         breakdowns.push(bd);
         counters.push(ct);
+        for le in legs {
+            match leg_errors.iter_mut().find(|m| m.leg == le.leg) {
+                Some(m) => {
+                    m.observed_max_err = m.observed_max_err.max(le.observed_max_err);
+                    m.samples += le.samples;
+                }
+                None => leg_errors.push(le),
+            }
+        }
     }
+    leg_errors.sort_by_key(|l| l.leg);
     Ok(RunReport {
         outputs,
         makespan,
         breakdowns,
         counters,
+        leg_errors,
     })
 }
 

@@ -94,10 +94,18 @@ USAGE:
                                             the planner derives each
                                             variant's eb and rejects
                                             variants it cannot certify
+                    [--adaptive]            close the telemetry loop:
+                                            observed headroom relaxes the
+                                            next call's planned eb (needs
+                                            --accuracy-target)
   gzccl train       [--ranks N] [--steps N] [--no-compress]
                     [--accuracy-target X]   X: absolute L-inf budget on
                                             the summed gradients across
                                             all steps
+                    [--adaptive]            relax the per-step eb from
+                                            telemetry headroom across
+                                            training steps (needs
+                                            --accuracy-target)
   gzccl characterize
   gzccl help
 ";
@@ -217,6 +225,31 @@ fn cmd_run(mut args: Args) -> Result<()> {
             s.legs.len()
         );
     }
+    // The executed plan, leg by leg: what each leg did, how it
+    // compressed, the bound its compressor was held to, and (real
+    // payloads) the observed per-leg error proving the bound held.
+    println!(
+        "  exec plan        : leg  tier  kind               mode          eb         obs |err|"
+    );
+    for l in &report.legs {
+        let kind = match l.kind {
+            Some(k) => format!("{k:?}"),
+            None => "WholeCollective".into(),
+        };
+        let eb = match l.exec.compression {
+            gzccl::coordinator::CompressionMode::None => "-".into(),
+            _ => format!("{:.3e}", l.exec.eb),
+        };
+        let obs = match l.observed_max_err {
+            Some(o) => format!("{o:.3e}"),
+            None => "-".into(),
+        };
+        let mode = format!("{:?}", l.exec.compression);
+        println!(
+            "                     {:<4} {:<5} {kind:<18} {mode:<13} {eb:<10} {obs}",
+            l.leg, l.tier
+        );
+    }
     println!("  virtual makespan : {}", report.makespan);
     println!("  wire bytes       : {}", report.total_wire_bytes());
     println!("  cpr kernel calls : {}", report.total_cpr_calls());
@@ -295,12 +328,19 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         .take("--accuracy-target")
         .map(|s| parse_accuracy_target(&s))
         .transpose()?;
+    let adaptive = args.take_bool("--adaptive");
+    if adaptive && accuracy_target.is_none() {
+        return Err(Error::config(
+            "--adaptive needs --accuracy-target (adaptation is bounded by the certified budget)",
+        ));
+    }
     let engine = Engine::discover().ok();
     let cfg = StackingConfig {
         ranks,
         gpus_per_node,
         error_bound: eb,
         accuracy_target,
+        adaptive,
         ..Default::default()
     };
     for v in [
@@ -317,6 +357,12 @@ fn cmd_stack(mut args: Args) -> Result<()> {
                     Some(eb) => format!(" planned-eb {eb:.2e}"),
                     None => String::new(),
                 };
+                // With --adaptive, the telemetry headroom of this call
+                // already relaxed the bound the NEXT call would run at.
+                let adapted = match out.adapted_eb {
+                    Some(eb) => format!(" next-eb {eb:.2e}"),
+                    None => String::new(),
+                };
                 let telemetry = match out.accuracy {
                     Some(a) => format!(
                         " | err obs {:.2e} pred {}",
@@ -329,7 +375,7 @@ fn cmd_stack(mut args: Args) -> Result<()> {
                     None => String::new(),
                 };
                 println!(
-                    "{:16} time {:>10} psnr {:6.2} dB nrmse {:.2e}{planned} | {}{telemetry}",
+                    "{:16} time {:>10} psnr {:6.2} dB nrmse {:.2e}{planned}{adapted} | {}{telemetry}",
                     v.name(),
                     gzccl::metrics::table::fmt_time(out.makespan),
                     out.psnr,
@@ -364,12 +410,19 @@ fn cmd_train(mut args: Args) -> Result<()> {
         .take("--accuracy-target")
         .map(|s| s.parse().map_err(|_| Error::config("bad --accuracy-target")))
         .transpose()?;
+    let adaptive = args.take_bool("--adaptive");
+    if adaptive && accuracy_target.is_none() {
+        return Err(Error::config(
+            "--adaptive needs --accuracy-target (adaptation is bounded by the certified budget)",
+        ));
+    }
     let engine = Engine::discover()?;
     let cfg = DdpConfig {
         ranks,
         steps,
         compress,
         accuracy_target,
+        adaptive,
         ..Default::default()
     };
     let out = train_ddp(&cfg, &engine)?;
@@ -380,6 +433,13 @@ fn cmd_train(mut args: Args) -> Result<()> {
             out.observed_step_err.unwrap_or(f64::NAN),
             out.budget_violations
         );
+        if let Some(final_eb) = out.final_eb {
+            if (final_eb - eb).abs() > f64::EPSILON * eb {
+                println!(
+                    "adaptive: telemetry headroom relaxed the per-step eb {eb:.3e} -> {final_eb:.3e}"
+                );
+            }
+        }
     }
     for (i, loss) in out.loss_curve.iter().enumerate() {
         if i % 10 == 0 || i + 1 == out.loss_curve.len() {

@@ -1,0 +1,308 @@
+//! `ExecPlan`: the per-leg execution contract between planning and
+//! execution.
+//!
+//! The planner side of the stack (budget inversion, per-tier splits,
+//! tuner schedule selection) and the executor side (the leg interpreter
+//! in [`crate::collectives::hierarchical`], the flat collectives) used
+//! to meet at a single ambient `spec.error_bound`: the per-tier budget
+//! split was derived, reported — and ignored at runtime. The
+//! [`ExecPlan`] closes that gap. Every dispatched collective compiles
+//! one: a [`LegExec`] per schedule leg carrying the compression mode
+//! and the **absolute error bound that leg's compressor must run at**.
+//! Flat (non-hierarchical) algorithms become degenerate one-leg plans,
+//! so every algorithm flows through the same contract and the executor
+//! never falls back to an ambient bound.
+//!
+//! Construction forms:
+//!
+//! * [`ExecPlan::flat`] — one leg, the whole collective (ring, ReDoub,
+//!   binomial trees).
+//! * [`ExecPlan::uniform`] — a compiled [`Schedule`] with every
+//!   compressed leg at one bound (un-budgeted hierarchical dispatch).
+//! * [`ExecPlan::tiered`] — a compiled schedule with **per-tier**
+//!   bounds from [`crate::accuracy::split_across_tiers`]: the budgeted
+//!   path, where tier 1 and tier 2 legs genuinely run different
+//!   compressors.
+//!
+//! [`ExecPlan::predicted_bound`] walks the same legs the error model
+//! does (`Σ_t A[t] · eb_t` via [`Schedule::tier_sensitivities`]), so
+//! the prediction attached to telemetry is exactly the plan that ran.
+//! [`ExecPlan::relaxed`] is the adaptation hook: the
+//! [`crate::comm::Communicator`]'s adaptive controller scales the
+//! planned bounds by the telemetry-derived relaxation factor, with
+//! every leg clamped at the certified per-call budget.
+
+use crate::collectives::Op;
+use crate::coordinator::CompressionMode;
+
+use super::schedule::Schedule;
+
+/// How one leg of an [`ExecPlan`] compresses: the mode and the
+/// absolute error bound its compressor runs at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LegExec {
+    /// Compressor family on this leg (`None` = the leg ships raw
+    /// payloads — e.g. the NVLink tier-0 legs).
+    pub compression: CompressionMode,
+    /// Absolute error bound for the leg's compressor. Ignored for raw
+    /// legs; carried for reporting only under the fixed-rate mode
+    /// (whose error no bound can describe).
+    pub eb: f64,
+}
+
+impl LegExec {
+    /// A raw (lossless) leg.
+    pub fn raw() -> Self {
+        LegExec {
+            compression: CompressionMode::None,
+            eb: 0.0,
+        }
+    }
+
+    /// Whether the leg compresses at all.
+    pub fn compresses(&self) -> bool {
+        self.compression != CompressionMode::None
+    }
+
+    /// The error bound the leg's compressor must honor — `Some` only
+    /// for the error-bounded mode (raw legs have no compressor;
+    /// fixed-rate streams have no bound to rebind).
+    pub fn bounded_eb(&self) -> Option<f64> {
+        match self.compression {
+            CompressionMode::ErrorBounded => Some(self.eb),
+            _ => None,
+        }
+    }
+}
+
+/// A compiled execution plan: the leg structure (a hierarchical
+/// [`Schedule`], or none for flat algorithms) plus one [`LegExec`] per
+/// leg. See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecPlan {
+    /// The operation the plan realizes.
+    pub op: Op,
+    /// Hierarchical leg structure; `None` for flat algorithms, whose
+    /// single leg is the whole collective.
+    pub schedule: Option<Schedule>,
+    /// One directive per schedule leg (exactly one for flat plans).
+    pub legs: Vec<LegExec>,
+}
+
+impl ExecPlan {
+    /// Degenerate one-leg plan for a flat algorithm: the whole
+    /// collective compresses (or not) at one bound.
+    pub fn flat(op: Op, compression: CompressionMode, eb: f64) -> Self {
+        ExecPlan {
+            op,
+            schedule: None,
+            legs: vec![LegExec { compression, eb }],
+        }
+    }
+
+    /// Plan a compiled schedule with every compressed leg at the same
+    /// bound (raw legs stay raw). This is the un-budgeted hierarchical
+    /// dispatch — bitwise-identical execution to the pre-`ExecPlan`
+    /// ambient-bound path.
+    pub fn uniform(sched: Schedule, compression: CompressionMode, eb: f64) -> Self {
+        let legs = sched
+            .legs
+            .iter()
+            .map(|l| {
+                if l.compressed && compression != CompressionMode::None {
+                    LegExec { compression, eb }
+                } else {
+                    LegExec::raw()
+                }
+            })
+            .collect();
+        ExecPlan {
+            op: sched.op,
+            schedule: Some(sched),
+            legs,
+        }
+    }
+
+    /// Plan a compiled schedule with **per-tier** bounds: the leg at
+    /// tier `t` runs at `tier_ebs[t]`, falling back to `fallback_eb`
+    /// for compressed legs whose tier has no entry (a split that
+    /// declined to budget the tier).
+    pub fn tiered(
+        sched: Schedule,
+        compression: CompressionMode,
+        tier_ebs: &[Option<f64>],
+        fallback_eb: f64,
+    ) -> Self {
+        let legs = sched
+            .legs
+            .iter()
+            .map(|l| {
+                if l.compressed && compression != CompressionMode::None {
+                    let eb = tier_ebs.get(l.tier).copied().flatten().unwrap_or(fallback_eb);
+                    LegExec { compression, eb }
+                } else {
+                    LegExec::raw()
+                }
+            })
+            .collect();
+        ExecPlan {
+            op: sched.op,
+            schedule: Some(sched),
+            legs,
+        }
+    }
+
+    /// The directive for leg `li` (flat plans answer their single leg
+    /// for every index).
+    pub fn leg(&self, li: usize) -> LegExec {
+        self.legs
+            .get(li)
+            .or_else(|| self.legs.first())
+            .copied()
+            .unwrap_or_else(LegExec::raw)
+    }
+
+    /// Worst-case end-to-end pointwise error if every leg runs at its
+    /// own bound: `Σ_t A[t] · eb_t` with the sensitivities of
+    /// [`Schedule::tier_sensitivities`]. `None` for flat plans (their
+    /// amplification is the flat propagation model's business) and for
+    /// plans with a fixed-rate leg (unbounded). Uniform plans return
+    /// exactly `amplification · eb`.
+    pub fn predicted_bound(&self) -> Option<f64> {
+        let sched = self.schedule.as_ref()?;
+        let mut per_tier: Vec<f64> = vec![0.0; sched.tree.depth()];
+        let mut uniform: Option<f64> = None;
+        let mut any = false;
+        for (leg, ex) in sched.legs.iter().zip(&self.legs) {
+            if !ex.compresses() {
+                continue;
+            }
+            let eb = ex.bounded_eb()?; // fixed-rate leg: no bound exists
+            per_tier[leg.tier] = per_tier[leg.tier].max(eb);
+            uniform = match uniform {
+                None => Some(eb),
+                Some(u) if u == eb => Some(u),
+                Some(_) => Some(f64::NAN),
+            };
+            any = true;
+        }
+        if !any {
+            return Some(0.0); // nothing compresses: exact
+        }
+        match uniform {
+            // One shared bound: reproduce the closed form exactly (no
+            // Σ-of-products rounding drift vs `amplification() · eb`).
+            Some(u) if !u.is_nan() => Some(sched.amplification() * u),
+            _ => Some(
+                sched
+                    .tier_sensitivities()
+                    .iter()
+                    .zip(&per_tier)
+                    .map(|(a, e)| a * e)
+                    .sum(),
+            ),
+        }
+    }
+
+    /// The adaptation hook: every error-bounded leg's bound scaled by
+    /// `factor`, each clamped at `cap` (the certified per-call budget —
+    /// no single quantization may exceed it). Raw and fixed-rate legs
+    /// are untouched.
+    pub fn relaxed(&self, factor: f64, cap: f64) -> ExecPlan {
+        let legs = self
+            .legs
+            .iter()
+            .map(|l| match l.compression {
+                CompressionMode::ErrorBounded => LegExec {
+                    compression: l.compression,
+                    eb: (l.eb * factor).min(cap),
+                },
+                _ => *l,
+            })
+            .collect();
+        ExecPlan {
+            op: self.op,
+            schedule: self.schedule.clone(),
+            legs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::{compile_min_error, TierTree};
+
+    fn sched(ranks: usize, widths: &[usize]) -> Schedule {
+        compile_min_error(Op::Allreduce, &TierTree::new(ranks, widths).unwrap(), true).unwrap()
+    }
+
+    #[test]
+    fn uniform_plan_matches_schedule_amplification_exactly() {
+        let s = sched(512, &[4, 16, 8]);
+        let amp = s.amplification();
+        let plan = ExecPlan::uniform(s, CompressionMode::ErrorBounded, 1e-3);
+        assert_eq!(plan.predicted_bound(), Some(amp * 1e-3));
+        // Raw legs got no bound, compressed legs the shared one.
+        let raw = plan.legs.iter().filter(|l| !l.compresses()).count();
+        assert!(raw >= 2, "tier-0 ascent/descent stay raw");
+        for l in plan.legs.iter().filter(|l| l.compresses()) {
+            assert_eq!(l.bounded_eb(), Some(1e-3));
+        }
+    }
+
+    #[test]
+    fn tiered_plan_sums_per_tier_sensitivities() {
+        let s = sched(512, &[4, 16, 8]);
+        let sens = s.tier_sensitivities();
+        let tier_ebs = [None, Some(2e-4), Some(5e-5)];
+        let plan = ExecPlan::tiered(s, CompressionMode::ErrorBounded, &tier_ebs, 1e-3);
+        let want: f64 = sens[1] * 2e-4 + sens[2] * 5e-5;
+        let got = plan.predicted_bound().unwrap();
+        assert!((got - want).abs() <= 1e-12 * (1.0 + want), "{got} vs {want}");
+        // Legs of different tiers genuinely run different bounds.
+        let ebs: Vec<Option<f64>> = plan.legs.iter().map(|l| l.bounded_eb()).collect();
+        assert!(ebs.contains(&Some(2e-4)) && ebs.contains(&Some(5e-5)));
+    }
+
+    #[test]
+    fn flat_and_degenerate_plans() {
+        let flat = ExecPlan::flat(Op::Allreduce, CompressionMode::ErrorBounded, 1e-4);
+        assert_eq!(flat.legs.len(), 1);
+        assert_eq!(flat.leg(0).bounded_eb(), Some(1e-4));
+        // Flat plans answer their single leg for any index and predict
+        // nothing themselves (the flat propagation model owns that).
+        assert_eq!(flat.leg(7), flat.leg(0));
+        assert_eq!(flat.predicted_bound(), None);
+        // A fully-raw plan predicts exact.
+        let raw = ExecPlan::uniform(sched(16, &[4, 4]), CompressionMode::None, 0.0);
+        assert_eq!(raw.predicted_bound(), Some(0.0));
+        // A fixed-rate leg has no bound at all.
+        let fr = ExecPlan::uniform(sched(16, &[4, 4]), CompressionMode::FixedRate, 0.0);
+        assert_eq!(fr.predicted_bound(), None);
+    }
+
+    #[test]
+    fn relaxed_scales_and_clamps_at_the_cap() {
+        let s = sched(512, &[4, 16, 8]);
+        let plan = ExecPlan::tiered(
+            s,
+            CompressionMode::ErrorBounded,
+            &[None, Some(2e-4), Some(8e-4)],
+            1e-3,
+        );
+        let relaxed = plan.relaxed(4.0, 1e-3);
+        for (a, b) in plan.legs.iter().zip(&relaxed.legs) {
+            match a.bounded_eb() {
+                Some(eb) => {
+                    let want = (eb * 4.0).min(1e-3);
+                    assert_eq!(b.bounded_eb(), Some(want));
+                }
+                None => assert_eq!(a, b),
+            }
+        }
+        // The 8e-4 tier hit the cap, the 2e-4 tier scaled freely.
+        assert!(relaxed.legs.iter().any(|l| l.bounded_eb() == Some(1e-3)));
+        assert!(relaxed.legs.iter().any(|l| l.bounded_eb() == Some(8e-4)));
+    }
+}

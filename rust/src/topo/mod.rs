@@ -15,6 +15,12 @@
 //!   the same legs for worst-case error ([`Schedule::amplification`],
 //!   [`Schedule::tier_sensitivities`]) and per-rank compression-stage
 //!   counts ([`Schedule::cpr_stages_at`]).
+//! * [`exec_plan`] — the [`ExecPlan`] / [`LegExec`] contract between
+//!   planning and execution: one compression-mode + error-bound
+//!   directive per leg (flat algorithms are degenerate one-leg plans),
+//!   compiled by the [`crate::comm::Communicator`] at dispatch and
+//!   enforced by the executor — the per-tier budget split is
+//!   load-bearing, not advisory.
 //!
 //! The executor for compiled schedules lives in
 //! [`crate::collectives::hierarchical`]; the per-tier algorithm
@@ -22,9 +28,11 @@
 //! split in [`crate::accuracy::budget`]. All three consume this module
 //! so the schedule and the error model can never drift apart.
 
+pub mod exec_plan;
 pub mod schedule;
 pub mod tier_tree;
 
+pub use exec_plan::{ExecPlan, LegExec};
 pub use schedule::{
     compile_min_error, compile_tuned, estimate_flat_allgather, estimate_flat_redoub,
     estimate_flat_reduce_scatter, estimate_flat_ring, CostModel, Leg, LegKind, Schedule,
