@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """Non-blocking benchmark trend check.
 
-Compares the current BENCH_allreduce.json sweep against the previous
+Compares the current sweep artifact (BENCH_allreduce.json or the
+engine's BENCH_engine.json rank-scale sweep) against the previous
 run's artifact and emits a GitHub Actions ::warning:: annotation for
 every sweep point whose virtual makespan regressed by more than the
 threshold. Always exits 0 — this is a trend report, not a gate (the
@@ -23,8 +24,12 @@ def load_rows(path):
         # `tiers` distinguishes the 3-tier node/rack sweep columns;
         # pre-tiers artifacts default to the flat 2-tier label so a
         # schema bump only orphans keys once.
+        # `backend` separates the event engine's rows from the thread
+        # oracle's in BENCH_engine.json; allreduce artifacts (old and
+        # new) have no such column and default to the same "".
         key = (
             row["algo"],
+            row.get("backend", ""),
             row["ranks"],
             row["gpus_per_node"],
             row.get("tiers", ""),
@@ -59,7 +64,10 @@ def main():
         if old <= 0.0:
             continue
         delta = (new - old) / old
-        label = "algo={} ranks={} gpn={} tiers={} size={}MiB".format(*key)
+        algo, backend, ranks, gpn, tiers, size = key
+        label = f"algo={algo} ranks={ranks} gpn={gpn} tiers={tiers} size={size}MiB"
+        if backend:
+            label += f" backend={backend}"
         # Optional per-leg-eb column (absent in pre-ExecPlan artifacts):
         # shown for context, and a change is flagged because different
         # per-leg bounds change compressed wire volume, which can
@@ -73,7 +81,7 @@ def main():
         if delta > args.threshold:
             regressions.append((label, old, new, delta))
             print(
-                f"::warning title=Allreduce makespan regression::{label}: "
+                f"::warning title=Benchmark makespan regression::{label}: "
                 f"{old:.6f}s -> {new:.6f}s (+{delta * 100:.1f}%)"
             )
         elif delta < -args.threshold:

@@ -1,24 +1,96 @@
-//! §Perf hot-path bench: wall-clock cost of the coordinator itself
-//! (thread spawn, channels, virtual-time accounting) relative to the
-//! virtual time it simulates.
+//! §Perf engine-scale bench: ranks-vs-wall-time for the event-driven
+//! execution engine.
+//!
+//! Sweeps the 64 MiB compressed hierarchical Allreduce from 512 to
+//! 16384 ranks under the event backend — wall time must grow with the
+//! *event* count, not the rank count — and keeps the thread-per-rank
+//! oracle in the 512-rank row as the overhead yardstick. Emits
+//! `BENCH_engine.json` at the workspace root; CI archives it per
+//! commit and diffs consecutive artifacts with `bench_trend.py`
+//! (rows carry a `backend` column so the two runners trend
+//! independently).
+
 use gzccl::bench_support::bench;
-use gzccl::collectives::allreduce_recursive_doubling;
-use gzccl::coordinator::{run_collective, ClusterSpec, DeviceBuf, ExecPolicy};
+use gzccl::collectives::Algo;
+use gzccl::comm::{CollectiveSpec, Communicator};
+use gzccl::coordinator::{DeviceBuf, ExecBackend, ExecPolicy};
+
+fn tiers_label(widths: &[usize]) -> String {
+    widths
+        .iter()
+        .map(|w| w.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
+
+/// Virtual makespan plus total messages of one compressed
+/// hierarchical Allreduce on `ranks` laid out as `widths`.
+fn makespan(ranks: usize, widths: &[usize], bytes: usize, backend: ExecBackend) -> (f64, usize) {
+    let comm = Communicator::builder(ranks)
+        .tiers(widths)
+        .policy(ExecPolicy::gzccl())
+        .error_bound(1e-4)
+        .backend(backend)
+        .build()
+        .expect("communicator");
+    let inputs: Vec<DeviceBuf> = (0..ranks).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
+    let report = comm
+        .allreduce(inputs, &CollectiveSpec::forced(Algo::Hierarchical))
+        .expect("allreduce");
+    let msgs = report.counters.iter().map(|c| c.msgs_sent).sum();
+    (report.makespan.as_secs(), msgs)
+}
 
 fn main() {
-    for ranks in [8usize, 64, 256] {
-        let inputs = || -> Vec<DeviceBuf> {
-            (0..ranks).map(|_| DeviceBuf::Virtual((64 << 20) / 4)).collect()
-        };
-        let spec = ClusterSpec::new(ranks, ExecPolicy::gzccl());
-        let (report, stats) = bench(5, || {
-            run_collective(&spec, inputs(), &allreduce_recursive_doubling).unwrap()
-        });
-        println!(
-            "{ranks:4} ranks, 64 MB virtual allreduce: wall {:8.2}ms for {:8.2}ms virtual ({} msgs)",
-            stats.min * 1e3,
-            report.makespan.as_secs() * 1e3,
-            report.counters.iter().map(|c| c.msgs_sent).sum::<usize>(),
-        );
+    // 512 → 16384 ranks on node/rack layouts; the thread oracle runs
+    // only the 512-rank row (it spawns one OS thread per rank — its
+    // design cap is exactly what this engine removes).
+    let layouts: [(usize, &[usize], &[ExecBackend]); 6] = [
+        (512, &[4, 16, 8], &[ExecBackend::Events, ExecBackend::Threads]),
+        (1024, &[4, 16, 16], &[ExecBackend::Events]),
+        (2048, &[8, 16, 16], &[ExecBackend::Events]),
+        (4096, &[8, 16, 32], &[ExecBackend::Events]),
+        (8192, &[8, 32, 32], &[ExecBackend::Events]),
+        (16384, &[8, 32, 64], &[ExecBackend::Events]),
+    ];
+    let mb = 64usize;
+
+    let mut rows = Vec::new();
+    for &(ranks, widths, backends) in &layouts {
+        let label = tiers_label(widths);
+        for &backend in backends {
+            let runs = if ranks >= 8192 { 1 } else { 2 };
+            let ((virt_s, msgs), stats) =
+                bench(runs, || makespan(ranks, widths, mb << 20, backend));
+            println!(
+                "{backend:>7} | {ranks:>5} ranks | tiers {label:>8} | {mb:>3} MiB | \
+                 virtual {:.3} ms | {msgs:>7} msgs | wall {stats}",
+                virt_s * 1e3
+            );
+            rows.push(format!(
+                concat!(
+                    "    {{\"algo\": \"hier\", \"backend\": \"{}\", \"ranks\": {}, ",
+                    "\"gpus_per_node\": {}, \"tiers\": \"{}\", \"size_mib\": {}, ",
+                    "\"virtual_makespan_s\": {:.9}, \"msgs\": {}, ",
+                    "\"wall_mean_s\": {:.6}, \"wall_min_s\": {:.6}, \"wall_runs\": {}}}"
+                ),
+                backend, ranks, widths[0], label, mb, virt_s, msgs, stats.mean, stats.min,
+                stats.runs
+            ));
+        }
     }
+
+    let json = format!(
+        "{{\n  \"bench\": \"engine_rank_scale\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    // `cargo bench` runs the harness with CWD set to the *package*
+    // root (rust/); anchor the artifact at the workspace root where CI
+    // expects it.
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::PathBuf::from(dir).join("..").join("BENCH_engine.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_engine.json"),
+    };
+    std::fs::write(&path, &json).expect("write BENCH_engine.json");
+    println!("wrote {} ({} rows)", path.display(), rows.len());
 }

@@ -8,7 +8,7 @@
 //! more transferred volume (blocks double every round, all compressed
 //! payloads still decompressed once per origin block).
 
-use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
+use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, ProgFut, RankCtx};
 use crate::error::Result;
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
@@ -20,7 +20,7 @@ const TAG_AG: u64 = 0x4147_0000;
 /// Ring Allgather. Rank r contributes `input` as block r; returns the
 /// concatenation of all blocks (order 0..N). `ready` is when `input`
 /// is device-ready (lets Allreduce chain RS→AG without a barrier).
-pub fn allgather_ring_at(
+pub async fn allgather_ring_at(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     ready: VirtTime,
@@ -55,7 +55,7 @@ pub fn allgather_ring_at(
             let recv_idx = (r + n - s) % n;
             let (c, t_c) = ctx.compress(stream, &outgoing, outgoing_t);
             ctx.send(next, TAG_AG + s as u64, Payload::Comp(c), t_c);
-            let (cin, t_in) = ctx.recv_comp(prev, TAG_AG + s as u64);
+            let (cin, t_in) = ctx.recv_comp(prev, TAG_AG + s as u64).await;
             let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
             blocks[recv_idx] = Some(dec.clone());
             blocks_ready[recv_idx] = t_dec;
@@ -75,7 +75,7 @@ pub fn allgather_ring_at(
             let _ = send_idx; // the outgoing buffer IS block send_idx
             let recv_idx = (r + n - s) % n;
             ctx.send(next, TAG_AG + s as u64, Payload::Comp(outgoing.clone()), outgoing_t);
-            let (cin, t_in) = ctx.recv_comp(prev, TAG_AG + s as u64);
+            let (cin, t_in) = ctx.recv_comp(prev, TAG_AG + s as u64).await;
             // Decompress on the side stream; forwarding does not wait
             // for decompression (overlap of §3.3.4).
             let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
@@ -91,7 +91,7 @@ pub fn allgather_ring_at(
         for s in 1..n {
             let recv_idx = (r + n - s) % n;
             ctx.send(next, TAG_AG + s as u64, Payload::Raw(outgoing.clone()), outgoing_t);
-            let (bin, t_in) = ctx.recv_raw(prev, TAG_AG + s as u64);
+            let (bin, t_in) = ctx.recv_raw(prev, TAG_AG + s as u64).await;
             blocks[recv_idx] = Some(bin.clone());
             blocks_ready[recv_idx] = t_in;
             outgoing = bin;
@@ -108,19 +108,22 @@ pub fn allgather_ring_at(
 }
 
 /// Standalone ring Allgather from time zero.
-pub fn allgather_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    let now = ctx.now();
-    let (out, _t) = allgather_ring_at(ctx, input, now)?;
-    if ctx.policy().overlap {
-        ctx.sync_device();
-    }
-    Ok(out)
+pub fn allgather_ring(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
+        let now = ctx.now();
+        let (out, _t) = allgather_ring_at(ctx, input, now).await?;
+        if ctx.policy().overlap {
+            ctx.sync_device();
+        }
+        Ok(out)
+    })
 }
 
 /// Recursive-doubling Allgather: log N rounds, exchanged volume doubles
 /// each round. Requires a power-of-two communicator (callers fall back
 /// to ring otherwise, as MPICH does).
-pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
     let n = ctx.nranks();
     let r = ctx.rank();
     if n == 1 {
@@ -147,12 +150,12 @@ pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
         let (theirs, t_in) = if ctx.compression_enabled() {
             let (c, t_c) = ctx.compress(stream, &mine, have_t);
             ctx.send(peer, TAG_AG + 0x100 + round, Payload::Comp(c), t_c);
-            let (cin, t_in) = ctx.recv_comp(peer, TAG_AG + 0x100 + round);
+            let (cin, t_in) = ctx.recv_comp(peer, TAG_AG + 0x100 + round).await;
             let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
             (dec, t_dec)
         } else {
             ctx.send(peer, TAG_AG + 0x100 + round, Payload::Raw(mine.clone()), have_t);
-            ctx.recv_raw(peer, TAG_AG + 0x100 + round)
+            ctx.recv_raw(peer, TAG_AG + 0x100 + round).await
         };
         // The peer's region covers its own group of blocks.
         let peer_base = peer & !(mask - 1);
@@ -171,11 +174,13 @@ pub fn allgather_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
     }
     let parts: Vec<DeviceBuf> = have.into_iter().map(|(_, b)| b).collect();
     DeviceBuf::concat(&parts)
+    })
 }
 
 /// Bruck Allgather: log N rounds of shifted block exchanges; works for
 /// any N. Output is rotated back into rank order at the end.
-pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
     let n = ctx.nranks();
     let r = ctx.rank();
     if n == 1 {
@@ -200,12 +205,12 @@ pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf>
         let (theirs, t_in) = if ctx.compression_enabled() {
             let (c, t_c) = ctx.compress(stream, &mine, have_t);
             ctx.send(send_to, TAG_AG + 0x200 + round, Payload::Comp(c), t_c);
-            let (cin, t_in) = ctx.recv_comp(recv_from, TAG_AG + 0x200 + round);
+            let (cin, t_in) = ctx.recv_comp(recv_from, TAG_AG + 0x200 + round).await;
             let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
             (dec, t_dec)
         } else {
             ctx.send(send_to, TAG_AG + 0x200 + round, Payload::Raw(mine.clone()), have_t);
-            ctx.recv_raw(recv_from, TAG_AG + 0x200 + round)
+            ctx.recv_raw(recv_from, TAG_AG + 0x200 + round).await
         };
         let counts = Chunks::new(theirs.elems(), count);
         for i in 0..count {
@@ -224,12 +229,13 @@ pub fn allgather_bruck(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf>
         parts[(r + p) % n] = Some(b);
     }
     DeviceBuf::concat(&parts.into_iter().map(|b| b.unwrap()).collect::<Vec<_>>())
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy, Program};
     use crate::testkit::Pcg32;
 
     fn block(r: usize, d: usize) -> Vec<f32> {
@@ -251,7 +257,7 @@ mod tests {
         n: usize,
         d: usize,
         policy: ExecPolicy,
-        f: impl Fn(&mut RankCtx, DeviceBuf) -> Result<DeviceBuf> + Sync + 'static,
+        f: impl Program,
     ) -> Vec<DeviceBuf> {
         let inputs: Vec<DeviceBuf> = (0..n).map(|r| DeviceBuf::Real(block(r, d))).collect();
         run_collective(&ClusterSpec::new(n, policy), inputs, &f)

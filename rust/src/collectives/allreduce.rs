@@ -11,8 +11,7 @@
 //!   device. High utilization (whole-vector kernels), log N
 //!   compression stages, remainder ranks folded in/out at the edges.
 
-use crate::coordinator::{DeviceBuf, Payload, RankCtx};
-use crate::error::Result;
+use crate::coordinator::{DeviceBuf, Payload, ProgFut, RankCtx};
 use crate::gpu::StreamId;
 
 use super::allgather::allgather_ring_at;
@@ -24,12 +23,14 @@ const TAG_AR: u64 = 0x4152_0000;
 /// stages are chained on device-ready timestamps, so with the overlap
 /// policy the Allgather's first compression overlaps the tail of the
 /// Reduce_scatter.
-pub fn allreduce_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    let now = ctx.now();
-    let (chunk, t_rs) = reduce_scatter_ring_at(ctx, input, now)?;
-    let (out, _t_ag) = allgather_ring_at(ctx, chunk, t_rs)?;
-    ctx.sync_device();
-    Ok(out)
+pub fn allreduce_ring(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
+        let now = ctx.now();
+        let (chunk, t_rs) = reduce_scatter_ring_at(ctx, input, now).await?;
+        let (out, _t_ag) = allgather_ring_at(ctx, chunk, t_rs).await?;
+        ctx.sync_device();
+        Ok(out)
+    })
 }
 
 /// Recursive-doubling Allreduce (gZ-Allreduce ReDoub, Fig. 4).
@@ -39,7 +40,8 @@ pub fn allreduce_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> 
 /// pair's sum through the power-of-two phase, and the result is pushed
 /// back to the parked even ranks at the end. Every payload is the
 /// *whole* vector — compressed once per step when compression is on.
-pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
     let n = ctx.nranks();
     let me = ctx.rank();
     if n == 1 {
@@ -74,11 +76,11 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
             newrank = -1;
         } else {
             let (theirs, t_in) = if ctx.compression_enabled() {
-                let (c, t_in) = ctx.recv_comp(me - 1, TAG_AR);
+                let (c, t_in) = ctx.recv_comp(me - 1, TAG_AR).await;
                 ctx.memset(stream, c.bytes(), ctx.now());
                 ctx.decompress(stream, &c, t_in)
             } else {
-                ctx.recv_raw(me - 1, TAG_AR)
+                ctx.recv_raw(me - 1, TAG_AR).await
             };
             let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
             data = sum;
@@ -108,14 +110,14 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
                 ctx.memset(stream, data.bytes(), data_t);
                 let (c, t_c) = ctx.compress(stream, &data, data_t);
                 ctx.send(peer, TAG_AR + round, Payload::Comp(c), t_c);
-                let (cin, t_in) = ctx.recv_comp(peer, TAG_AR + round);
+                let (cin, t_in) = ctx.recv_comp(peer, TAG_AR + round).await;
                 let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
                 let (sum, t_sum) = ctx.reduce(stream, &data, &dec, t_dec.join(data_t))?;
                 data = sum;
                 data_t = t_sum;
             } else {
                 ctx.send(peer, TAG_AR + round, Payload::Raw(data.clone()), data_t);
-                let (bin, t_in) = ctx.recv_raw(peer, TAG_AR + round);
+                let (bin, t_in) = ctx.recv_raw(peer, TAG_AR + round).await;
                 let (sum, t_sum) = ctx.reduce(stream, &data, &bin, t_in.join(data_t))?;
                 data = sum;
                 data_t = t_sum;
@@ -136,10 +138,10 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
             }
         } else {
             let (result, _t) = if ctx.compression_enabled() {
-                let (c, t_in) = ctx.recv_comp(me + 1, TAG_AR + 0x1000);
+                let (c, t_in) = ctx.recv_comp(me + 1, TAG_AR + 0x1000).await;
                 ctx.decompress(stream, &c, t_in)
             } else {
-                ctx.recv_raw(me + 1, TAG_AR + 0x1000)
+                ctx.recv_raw(me + 1, TAG_AR + 0x1000).await
             };
             data = result;
         }
@@ -147,6 +149,7 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
     debug_assert_eq!(data.elems(), elems);
     ctx.sync_device();
     Ok(data)
+    })
 }
 
 /// Reduce-to-root + broadcast Allreduce — the Cray-MPI-class baseline
@@ -154,7 +157,8 @@ pub fn allreduce_recursive_doubling(ctx: &mut RankCtx, input: DeviceBuf) -> Resu
 /// on the testbed behaved far off the ring bandwidth bound; a
 /// staged binomial reduce+bcast with host buffers reproduces that
 /// behaviour). Used only by the uncompressed CPU-centric baseline.
-pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
     let n = ctx.nranks();
     let me = ctx.rank();
     if n == 1 {
@@ -173,7 +177,7 @@ pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> Result<Dev
             break;
         } else if me + mask < n {
             let src = me + mask;
-            let (theirs, t_in) = ctx.recv_raw(src, TAG_AR + 0x2000 + round);
+            let (theirs, t_in) = ctx.recv_raw(src, TAG_AR + 0x2000 + round).await;
             let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
             data = sum;
             data_t = t_sum;
@@ -183,13 +187,14 @@ pub fn allreduce_reduce_bcast(ctx: &mut RankCtx, input: DeviceBuf) -> Result<Dev
     }
     // --- Binomial broadcast of the result from rank 0. --------------
     // Non-roots receive the broadcast payload; rank 0 returns its sum.
-    super::bcast::bcast_binomial(ctx, if me == 0 { data } else { DeviceBuf::Virtual(0) }, 0)
+    super::bcast::bcast_binomial(ctx, if me == 0 { data } else { DeviceBuf::Virtual(0) }, 0).await
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy};
+    use crate::coordinator::{run_collective, ClusterSpec, ExecPolicy, Program};
     use crate::testkit::Pcg32;
 
     fn inputs_real(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
@@ -217,7 +222,7 @@ mod tests {
         d: usize,
         policy: ExecPolicy,
         tol: f32,
-        algo: impl Fn(&mut RankCtx, DeviceBuf) -> Result<DeviceBuf> + Sync + 'static,
+        algo: impl Program,
     ) {
         let inputs = inputs_real(n, d, 1234);
         let expect = expected_sums(&inputs);

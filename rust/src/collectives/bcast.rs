@@ -11,7 +11,7 @@
 //! always virtual rank 0 and edges map back through
 //! `rank = (v + root) mod N`.
 
-use crate::coordinator::{CompBuf, DeviceBuf, Payload, RankCtx};
+use crate::coordinator::{CompBuf, DeviceBuf, Payload, ProgFut, Program, RankCtx};
 use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 
@@ -19,9 +19,20 @@ use super::scatter::tree_position;
 
 const TAG_BC: u64 = 0x4243_0000;
 
+/// [`Program`] adapter for [`bcast_binomial`] rooted at `root`.
+pub struct BcastProg {
+    pub root: usize,
+}
+
+impl Program for BcastProg {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move { bcast_binomial(ctx, input, self.root).await })
+    }
+}
+
 /// Binomial broadcast from `root`. The root passes the vector as
 /// `input`; other ranks receive it as the return value.
-pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf, root: usize) -> Result<DeviceBuf> {
+pub async fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf, root: usize) -> Result<DeviceBuf> {
     let n = ctx.nranks();
     let me = ctx.rank();
     if n == 1 {
@@ -49,7 +60,7 @@ pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf, root: usize) -> Resul
             let (c, t) = ctx.compress(stream, &input, now);
             (c, t, Some(input))
         } else {
-            let (c, t) = ctx.recv_comp(actual(vparent.unwrap()), TAG_BC);
+            let (c, t) = ctx.recv_comp(actual(vparent.unwrap()), TAG_BC).await;
             (c, t, None)
         };
         // Forward the compressed stream down the tree.
@@ -74,7 +85,7 @@ pub fn bcast_binomial(ctx: &mut RankCtx, input: DeviceBuf, root: usize) -> Resul
             let t = ctx.now();
             (input, t)
         } else {
-            ctx.recv_raw(actual(vparent.unwrap()), TAG_BC)
+            ctx.recv_raw(actual(vparent.unwrap()), TAG_BC).await
         };
         let mut m = mask >> 1;
         while m > 0 {
@@ -116,7 +127,7 @@ mod tests {
             let report = run_collective(
                 &ClusterSpec::new(n, ExecPolicy::nccl()),
                 inputs,
-                &|ctx, input| bcast_binomial(ctx, input, 0),
+                &BcastProg { root: 0 },
             )
             .unwrap();
             for out in &report.outputs {
@@ -133,7 +144,7 @@ mod tests {
                 let report = run_collective(
                     &ClusterSpec::new(n, ExecPolicy::nccl()),
                     inputs,
-                    &move |ctx, input| bcast_binomial(ctx, input, root),
+                    &BcastProg { root },
                 )
                 .unwrap();
                 for (r, out) in report.outputs.iter().enumerate() {
@@ -151,7 +162,7 @@ mod tests {
             let report = run_collective(
                 &ClusterSpec::new(n, ExecPolicy::gzccl()),
                 inputs,
-                &move |ctx, input| bcast_binomial(ctx, input, root),
+                &BcastProg { root },
             )
             .unwrap();
             for (r, out) in report.outputs.iter().enumerate() {
@@ -177,7 +188,7 @@ mod tests {
         let res = run_collective(
             &ClusterSpec::new(4, ExecPolicy::nccl()),
             inputs,
-            &|ctx, input| bcast_binomial(ctx, input, 9),
+            &BcastProg { root: 9 },
         );
         assert!(res.is_err());
     }
@@ -197,13 +208,13 @@ mod tests {
         let raw = run_collective(
             &ClusterSpec::new(n, ExecPolicy::nccl()),
             mk(&smooth),
-            &|ctx, input| bcast_binomial(ctx, input, 0),
+            &BcastProg { root: 0 },
         )
         .unwrap();
         let gz = run_collective(
             &ClusterSpec::new(n, ExecPolicy::gzccl()),
             mk(&smooth),
-            &|ctx, input| bcast_binomial(ctx, input, 0),
+            &BcastProg { root: 0 },
         )
         .unwrap();
         assert!(gz.total_wire_bytes() * 4 < raw.total_wire_bytes());

@@ -49,7 +49,7 @@
 //! bare-schedule entry point: it derives the equivalent uniform plan
 //! from the cluster's ambient policy and bound.
 
-use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
+use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, ProgFut, Program, RankCtx};
 use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
@@ -96,7 +96,7 @@ fn send_vec(
 }
 
 /// Receive a whole vector from `from`, decompressing when compressed.
-fn recv_vec(
+async fn recv_vec(
     ctx: &mut RankCtx,
     stream: StreamId,
     from: usize,
@@ -104,10 +104,29 @@ fn recv_vec(
     compressed: bool,
 ) -> (DeviceBuf, VirtTime) {
     if compressed {
-        let (c, t_in) = ctx.recv_comp(from, tag);
+        let (c, t_in) = ctx.recv_comp(from, tag).await;
         ctx.decompress(stream, &c, t_in)
     } else {
-        ctx.recv_raw(from, tag)
+        ctx.recv_raw(from, tag).await
+    }
+}
+
+/// [`Program`] adapter running an owned [`Schedule`] via
+/// [`run_schedule`].
+pub struct SchedProg(pub Schedule);
+
+impl Program for SchedProg {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move { run_schedule(ctx, &self.0, input).await })
+    }
+}
+
+/// [`Program`] adapter running an owned [`ExecPlan`] via [`run_plan`].
+pub struct PlanProg(pub ExecPlan);
+
+impl Program for PlanProg {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move { run_plan(ctx, &self.0, input).await })
     }
 }
 
@@ -115,7 +134,7 @@ fn recv_vec(
 /// carry their own compression mode and error bound). Every rank of
 /// the communicator must run the same plan over a same-length input
 /// (the root-free ops: Allreduce, Reduce_scatter, Allgather).
-pub fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> Result<DeviceBuf> {
+pub async fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> Result<DeviceBuf> {
     let sched = plan.schedule.as_ref().ok_or_else(|| {
         Error::collective("run_plan needs a scheduled (hierarchical) execution plan")
     })?;
@@ -126,14 +145,14 @@ pub fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> Result<
             sched.legs.len()
         )));
     }
-    run_legs(ctx, sched, &plan.legs, input)
+    run_legs(ctx, sched, &plan.legs, input).await
 }
 
 /// Execute a compiled hierarchical schedule at the cluster's ambient
 /// policy and compressor bound — the bare-schedule entry point for
 /// direct invocation; equivalent to [`run_plan`] over the uniform
 /// [`ExecPlan`] of that schedule.
-pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Result<DeviceBuf> {
+pub async fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Result<DeviceBuf> {
     let mode = ctx.policy().compression;
     let eb = ctx.compressor_error_bound().unwrap_or(0.0);
     let legs: Vec<LegExec> = sched
@@ -147,11 +166,11 @@ pub fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Re
             }
         })
         .collect();
-    run_legs(ctx, sched, &legs, input)
+    run_legs(ctx, sched, &legs, input).await
 }
 
 /// The leg interpreter (see the module docs for per-leg semantics).
-fn run_legs(
+async fn run_legs(
     ctx: &mut RankCtx,
     sched: &Schedule,
     legs: &[LegExec],
@@ -220,7 +239,7 @@ fn run_legs(
                 } else {
                     for (j, m) in ps.iter().enumerate().skip(1) {
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed);
+                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed).await;
                         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
                         data = sum;
                         data_t = t_sum;
@@ -237,7 +256,7 @@ fn run_legs(
                     parts.push(data.clone());
                     for (j, m) in ps.iter().enumerate().skip(1) {
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed);
+                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed).await;
                         t_all = t_all.join(t_in);
                         parts.push(theirs);
                     }
@@ -259,7 +278,8 @@ fn run_legs(
                         newidx = -1;
                     } else {
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_FOLD), compressed);
+                            recv_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_FOLD), compressed)
+                                .await;
                         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
                         data = sum;
                         data_t = t_sum;
@@ -282,7 +302,8 @@ fn run_legs(
                         let peer = ps[peer_idx];
                         send_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), &data, data_t, compressed);
                         let (theirs, t_in) =
-                            recv_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), compressed);
+                            recv_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), compressed)
+                                .await;
                         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
                         data = sum;
                         data_t = t_sum;
@@ -295,7 +316,8 @@ fn run_legs(
                         send_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_UNFOLD), &data, data_t, compressed);
                     } else {
                         let (result, t_in) =
-                            recv_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_UNFOLD), compressed);
+                            recv_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_UNFOLD), compressed)
+                                .await;
                         data = result;
                         data_t = t_in;
                     }
@@ -316,7 +338,8 @@ fn run_legs(
                     if compressed {
                         let (c, t_c) = ctx.compress(stream, &acc[send_idx], acc_t[send_idx]);
                         ctx.send(next, tag(li, OFF_RING_RS + s as u64), Payload::Comp(c), t_c);
-                        let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_RS + s as u64));
+                        let (cin, t_in) =
+                            ctx.recv_comp(prev, tag(li, OFF_RING_RS + s as u64)).await;
                         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
                         let (sum, t_sum) =
                             ctx.reduce(stream, &acc[recv_idx], &dec, t_dec.join(acc_t[recv_idx]))?;
@@ -329,7 +352,8 @@ fn run_legs(
                             Payload::Raw(acc[send_idx].clone()),
                             acc_t[send_idx],
                         );
-                        let (bin, t_in) = ctx.recv_raw(prev, tag(li, OFF_RING_RS + s as u64));
+                        let (bin, t_in) =
+                            ctx.recv_raw(prev, tag(li, OFF_RING_RS + s as u64)).await;
                         let (sum, t_sum) =
                             ctx.reduce(stream, &acc[recv_idx], &bin, t_in.join(acc_t[recv_idx]))?;
                         acc[recv_idx] = sum;
@@ -349,7 +373,8 @@ fn run_legs(
                             Payload::Comp(outgoing.clone()),
                             out_t,
                         );
-                        let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64));
+                        let (cin, t_in) =
+                            ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64)).await;
                         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
                         acc[recv_idx] = dec;
                         acc_t[recv_idx] = t_dec;
@@ -367,7 +392,8 @@ fn run_legs(
                             Payload::Raw(outgoing.clone()),
                             out_t,
                         );
-                        let (bin, t_in) = ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64));
+                        let (bin, t_in) =
+                            ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64)).await;
                         acc[recv_idx] = bin.clone();
                         acc_t[recv_idx] = t_in;
                         outgoing = bin;
@@ -396,7 +422,8 @@ fn run_legs(
                             Payload::Comp(outgoing.clone()),
                             out_t,
                         );
-                        let (cin, t_in) = ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64));
+                        let (cin, t_in) =
+                            ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64)).await;
                         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
                         t_all = t_all.join(t_dec);
                         blocks[recv_idx] = Some(dec);
@@ -414,7 +441,8 @@ fn run_legs(
                             Payload::Raw(outgoing.clone()),
                             out_t,
                         );
-                        let (bin, t_in) = ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64));
+                        let (bin, t_in) =
+                            ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64)).await;
                         t_all = t_all.join(t_in);
                         blocks[recv_idx] = Some(bin.clone());
                         outgoing = bin;
@@ -450,7 +478,7 @@ fn run_legs(
                             }
                         } else if my_idx < 2 * mask {
                             let (c, t_in) =
-                                ctx.recv_comp(ps[my_idx - mask], tag(li, my_idx as u64));
+                                ctx.recv_comp(ps[my_idx - mask], tag(li, my_idx as u64)).await;
                             held = Some((c, t_in));
                         }
                         mask <<= 1;
@@ -467,7 +495,7 @@ fn run_legs(
                         ctx.send(*m, tag(li, j as u64), Payload::Raw(data.clone()), data_t);
                     }
                 } else {
-                    let (d, t_in) = ctx.recv_raw(ps[0], tag(li, my_idx as u64));
+                    let (d, t_in) = ctx.recv_raw(ps[0], tag(li, my_idx as u64)).await;
                     data = d;
                     data_t = t_in;
                 }
@@ -496,10 +524,10 @@ fn run_legs(
                     let lo = chunks.start(me);
                     let hi = chunks.start((me + pspan).min(n));
                     let (d, t_in) = if compressed && hi > lo {
-                        let (c, t_in) = ctx.recv_comp(ps[0], tag(li, my_idx as u64));
+                        let (c, t_in) = ctx.recv_comp(ps[0], tag(li, my_idx as u64)).await;
                         ctx.decompress(stream, &c, t_in)
                     } else {
-                        ctx.recv_raw(ps[0], tag(li, my_idx as u64))
+                        ctx.recv_raw(ps[0], tag(li, my_idx as u64)).await
                     };
                     data = d;
                     data_t = t_in;
@@ -517,19 +545,19 @@ fn run_legs(
 /// own [`TierTree`] — the default entry point for direct invocation
 /// (the [`crate::comm::Communicator`] passes cost-tuned schedules
 /// through the registry instead).
-fn hierarchical_default(ctx: &mut RankCtx, op: Op, input: DeviceBuf) -> Result<DeviceBuf> {
+async fn hierarchical_default(ctx: &mut RankCtx, op: Op, input: DeviceBuf) -> Result<DeviceBuf> {
     if ctx.nranks() <= 1 {
         return Ok(input);
     }
     let tree: TierTree = ctx.tiers().clone();
     let sched = compile_min_error(op, &tree, ctx.compression_enabled())?;
-    run_schedule(ctx, &sched, input)
+    run_schedule(ctx, &sched, input).await
 }
 
 /// Hierarchical Allreduce over the cluster's tier tree (the PR 2
 /// two-level schedule on 2-tier layouts). See the module docs.
-pub fn allreduce_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    hierarchical_default(ctx, Op::Allreduce, input)
+pub fn allreduce_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(hierarchical_default(ctx, Op::Allreduce, input))
 }
 
 /// Hierarchical Reduce_scatter: the Allreduce ascent and top exchange,
@@ -538,16 +566,16 @@ pub fn allreduce_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<Dev
 /// follows the tree (`≈ 2^⌈log₂ groups⌉` at the top), not the `N−1`
 /// linear stages of the ring — the compliant fallback tight accuracy
 /// budgets need.
-pub fn reduce_scatter_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    hierarchical_default(ctx, Op::ReduceScatter, input)
+pub fn reduce_scatter_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(hierarchical_default(ctx, Op::ReduceScatter, input))
 }
 
 /// Hierarchical Allgather: concatenate blocks up the tree, ring the
 /// super-blocks across the top tier, broadcast the gathered vector
 /// down. Every origin block is compressed once per crossed tier
 /// (compress-once forwarding), never recompressed into aggregates.
-pub fn allgather_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    hierarchical_default(ctx, Op::Allgather, input)
+pub fn allgather_hierarchical(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(hierarchical_default(ctx, Op::Allgather, input))
 }
 
 #[cfg(test)]
@@ -915,11 +943,10 @@ mod tests {
             &allreduce_ring,
         )
         .unwrap();
-        let sched_for_run = sched.clone();
         let hier = run_collective(
             &spec_tiers(n, &widths, ExecPolicy::gzccl()),
             inputs,
-            &move |ctx, input| run_schedule(ctx, &sched_for_run, input),
+            &SchedProg(sched.clone()),
         );
         // gzccl policy compresses → only check shape/consistency here;
         // run again uncompressed for the bitwise claim.
@@ -935,7 +962,7 @@ mod tests {
         let hier = run_collective(
             &spec_tiers(n, &widths, ExecPolicy::nccl()),
             int_inputs(n, 41, 77),
-            &move |ctx, input| run_schedule(ctx, &raw_sched, input),
+            &SchedProg(raw_sched),
         )
         .unwrap();
         for r in 0..n {

@@ -30,14 +30,14 @@ pub mod scatter;
 
 pub use allgather::{allgather_bruck, allgather_recursive_doubling, allgather_ring};
 pub use allreduce::{allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring};
-pub use bcast::bcast_binomial;
+pub use bcast::{bcast_binomial, BcastProg};
 pub use chunking::Chunks;
 pub use hierarchical::{
     allgather_hierarchical, allreduce_hierarchical, reduce_scatter_hierarchical, run_plan,
-    run_schedule,
+    run_schedule, PlanProg, SchedProg,
 };
 pub use reduce_scatter::reduce_scatter_ring;
-pub use scatter::scatter_binomial;
+pub use scatter::{scatter_binomial, ScatterProg};
 
 /// Which collective operation (for dispatch and reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

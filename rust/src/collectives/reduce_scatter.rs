@@ -9,7 +9,7 @@
 //! each over a D/N-sized chunk — small chunks at scale ⇒ the GPU
 //! utilization floor dominates (Fig. 3 / §3.2.3).
 
-use crate::coordinator::{DeviceBuf, Payload, RankCtx};
+use crate::coordinator::{DeviceBuf, Payload, ProgFut, RankCtx};
 use crate::error::Result;
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
@@ -22,7 +22,7 @@ const TAG_RS: u64 = 0x5253_0000;
 /// Ring Reduce_scatter of `input`; rank `r` returns the fully-reduced
 /// chunk `r`. The returned [`VirtTime`] is when the chunk is ready on
 /// device (callers composing Allreduce chain it into the Allgather).
-pub fn reduce_scatter_ring_at(
+pub async fn reduce_scatter_ring_at(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     ready: VirtTime,
@@ -53,7 +53,7 @@ pub fn reduce_scatter_ring_at(
         if ctx.compression_enabled() {
             let (c, t) = ctx.compress(stream, &acc[send_idx], acc_ready[send_idx]);
             ctx.send(next, TAG_RS + s as u64, Payload::Comp(c), t);
-            let (cin, t_in) = ctx.recv_comp(prev, TAG_RS + s as u64);
+            let (cin, t_in) = ctx.recv_comp(prev, TAG_RS + s as u64).await;
             let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
             let dep = t_dec.join(acc_ready[recv_idx]);
             let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &dec, dep)?;
@@ -66,7 +66,7 @@ pub fn reduce_scatter_ring_at(
                 Payload::Raw(acc[send_idx].clone()),
                 acc_ready[send_idx],
             );
-            let (bin, t_in) = ctx.recv_raw(prev, TAG_RS + s as u64);
+            let (bin, t_in) = ctx.recv_raw(prev, TAG_RS + s as u64).await;
             let dep = t_in.join(acc_ready[recv_idx]);
             let (sum, t_sum) = ctx.reduce(stream, &acc[recv_idx], &bin, dep)?;
             acc[recv_idx] = sum;
@@ -78,15 +78,17 @@ pub fn reduce_scatter_ring_at(
 }
 
 /// [`reduce_scatter_ring_at`] from time zero (standalone collective).
-pub fn reduce_scatter_ring(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
-    let now = ctx.now();
-    let (out, t) = reduce_scatter_ring_at(ctx, input, now)?;
-    // Materialize: the op completes when the chunk is device-ready.
-    if ctx.policy().overlap {
-        let _ = t;
-        ctx.sync_device();
-    }
-    Ok(out)
+pub fn reduce_scatter_ring(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
+        let now = ctx.now();
+        let (out, t) = reduce_scatter_ring_at(ctx, input, now).await?;
+        // Materialize: the op completes when the chunk is device-ready.
+        if ctx.policy().overlap {
+            let _ = t;
+            ctx.sync_device();
+        }
+        Ok(out)
+    })
 }
 
 #[cfg(test)]
@@ -122,10 +124,7 @@ mod tests {
         let inputs = inputs_real(n, d, 42);
         let expect = expected_sums(&inputs);
         let spec = ClusterSpec::new(n, ExecPolicy::nccl());
-        let report = run_collective(&spec, inputs, &|ctx, input| {
-            reduce_scatter_ring(ctx, input)
-        })
-        .unwrap();
+        let report = run_collective(&spec, inputs, &reduce_scatter_ring).unwrap();
         let chunks = Chunks::new(d, n);
         for r in 0..n {
             let got = report.outputs[r].as_real();
@@ -144,10 +143,7 @@ mod tests {
         let inputs = inputs_real(n, d, 7);
         let expect = expected_sums(&inputs);
         let spec = ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(eb);
-        let report = run_collective(&spec, inputs, &|ctx, input| {
-            reduce_scatter_ring(ctx, input)
-        })
-        .unwrap();
+        let report = run_collective(&spec, inputs, &reduce_scatter_ring).unwrap();
         // Error stacking: each of the N−1 hops adds ≤ 2eb (compress +
         // reduce of decompressed values) — linear bound, loose.
         let bound = (2 * n) as f32 * eb as f32;
@@ -166,10 +162,7 @@ mod tests {
         let n = 8;
         let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(1 << 16)).collect();
         let spec = ClusterSpec::new(n, ExecPolicy::gzccl());
-        let report = run_collective(&spec, inputs, &|ctx, input| {
-            reduce_scatter_ring(ctx, input)
-        })
-        .unwrap();
+        let report = run_collective(&spec, inputs, &reduce_scatter_ring).unwrap();
         for c in &report.counters {
             assert_eq!(c.compress_calls, n - 1);
             assert_eq!(c.decompress_calls, n - 1);
@@ -183,7 +176,7 @@ mod tests {
         let report = run_collective(
             &spec,
             vec![DeviceBuf::Real(vec![1.0, 2.0])],
-            &|ctx, input| reduce_scatter_ring(ctx, input),
+            &reduce_scatter_ring,
         )
         .unwrap();
         assert_eq!(report.outputs[0].as_real(), &[1.0, 2.0]);
@@ -205,13 +198,13 @@ mod tests {
         let base = run_collective(
             &ClusterSpec::new(n, ExecPolicy::nccl()),
             smooth.clone(),
-            &|ctx, input| reduce_scatter_ring(ctx, input),
+            &reduce_scatter_ring,
         )
         .unwrap();
         let gz = run_collective(
             &ClusterSpec::new(n, ExecPolicy::gzccl()).with_error_bound(1e-4),
             smooth,
-            &|ctx, input| reduce_scatter_ring(ctx, input),
+            &reduce_scatter_ring,
         )
         .unwrap();
         assert!(

@@ -25,7 +25,7 @@
 //! The CPRP2P comparison path instead re-compresses on every tree hop
 //! (fixed-rate), which is what makes it slow and error-stacking.
 
-use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, RankCtx};
+use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, ProgFut, Program, RankCtx};
 use crate::error::{Error, Result};
 use crate::gpu::StreamId;
 use crate::sim::VirtTime;
@@ -41,10 +41,23 @@ fn per_hop_recompress(ctx: &RankCtx) -> bool {
     ctx.policy().compression == CompressionMode::FixedRate
 }
 
+/// [`Program`] adapter for [`scatter_binomial`]: scatter `total` total
+/// elements from `root`.
+pub struct ScatterProg {
+    pub total: usize,
+    pub root: usize,
+}
+
+impl Program for ScatterProg {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move { scatter_binomial(ctx, input, self.total, self.root).await })
+    }
+}
+
 /// Binomial-tree Scatter from `root`. `input` is the full vector on the
 /// root (ignored elsewhere); every rank returns its own block of the
 /// `Chunks::new(total_elems, n)` layout.
-pub fn scatter_binomial(
+pub async fn scatter_binomial(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     total_elems: usize,
@@ -65,11 +78,11 @@ pub fn scatter_binomial(
     }
 
     if ctx.compression_enabled() && !per_hop_recompress(ctx) {
-        scatter_gz(ctx, input, chunks, root)
+        scatter_gz(ctx, input, chunks, root).await
     } else if ctx.compression_enabled() {
-        scatter_cprp2p(ctx, input, chunks, root)
+        scatter_cprp2p(ctx, input, chunks, root).await
     } else {
-        scatter_raw(ctx, input, chunks, root)
+        scatter_raw(ctx, input, chunks, root).await
     }
 }
 
@@ -97,7 +110,7 @@ fn subtree(me: usize, mask: usize, n: usize) -> std::ops::Range<usize> {
 // ---------------------------------------------------------------------
 // Uncompressed baseline (NCCL-class raw tree / Cray MPI CPU-centric).
 // ---------------------------------------------------------------------
-fn scatter_raw(
+async fn scatter_raw(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     chunks: Chunks,
@@ -120,7 +133,7 @@ fn scatter_raw(
         )
     } else {
         let parent = actual(vparent.unwrap());
-        let (batch, t) = ctx.recv_raw(parent, TAG_SC + vr as u64);
+        let (batch, t) = ctx.recv_raw(parent, TAG_SC + vr as u64).await;
         let mut held: Vec<Option<DeviceBuf>> = (0..n).map(|_| None).collect();
         let range = subtree(vr, mask, n);
         // The batch packs the subtree's blocks in virtual order with
@@ -156,7 +169,7 @@ fn scatter_raw(
 // gZ-Scatter (Fig. 5): multi-stream compress at root, pack, forward
 // compressed, decompress own block only.
 // ---------------------------------------------------------------------
-fn scatter_gz(
+async fn scatter_gz(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     chunks: Chunks,
@@ -208,8 +221,8 @@ fn scatter_gz(
     } else {
         // Sizes first (needed to address the packed batch), then data.
         let parent = actual(vparent.unwrap());
-        let (sizes, _tm) = ctx.recv_meta(parent, TAG_SC_META + vr as u64);
-        let (batch, t) = ctx.recv_batch(parent, TAG_SC + vr as u64);
+        let (sizes, _tm) = ctx.recv_meta(parent, TAG_SC_META + vr as u64).await;
+        let (batch, t) = ctx.recv_batch(parent, TAG_SC + vr as u64).await;
         let range = subtree(vr, mask, n);
         for (slot, v) in range.enumerate() {
             held[v] = Some(batch[slot].clone());
@@ -256,7 +269,7 @@ fn scatter_gz(
 // CPRP2P: fixed-rate compression bolted onto every hop — decompress the
 // whole received range, re-compress every forwarded range.
 // ---------------------------------------------------------------------
-fn scatter_cprp2p(
+async fn scatter_cprp2p(
     ctx: &mut RankCtx,
     input: DeviceBuf,
     chunks: Chunks,
@@ -278,7 +291,7 @@ fn scatter_cprp2p(
         }
     } else {
         let parent = actual(vparent.unwrap());
-        let (cin, t_in) = ctx.recv_comp(parent, TAG_SC + vr as u64);
+        let (cin, t_in) = ctx.recv_comp(parent, TAG_SC + vr as u64).await;
         // Decompress the whole range before anything can be forwarded.
         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
         let range = subtree(vr, mask, n);
@@ -333,9 +346,11 @@ mod tests {
 
     fn check_scatter_rooted(n: usize, d: usize, policy: ExecPolicy, tol: f32, root: usize) {
         let (inputs, full) = scatter_inputs(n, d, root);
-        let report = run_collective(&ClusterSpec::new(n, policy), inputs, &move |ctx, input| {
-            scatter_binomial(ctx, input, d, root)
-        })
+        let report = run_collective(
+            &ClusterSpec::new(n, policy),
+            inputs,
+            &ScatterProg { total: d, root },
+        )
         .unwrap();
         let chunks = Chunks::new(d, n);
         for r in 0..n {
@@ -419,7 +434,7 @@ mod tests {
             let report = run_collective(
                 &ClusterSpec::new(n, ExecPolicy::gzccl()),
                 inputs,
-                &move |ctx, input| scatter_binomial(ctx, input, d, root),
+                &ScatterProg { total: d, root },
             )
             .unwrap();
             // The root compresses each block exactly once (as one
@@ -441,7 +456,7 @@ mod tests {
         let res = run_collective(
             &ClusterSpec::new(4, ExecPolicy::nccl()),
             inputs,
-            &|ctx, input| scatter_binomial(ctx, input, 64, 7),
+            &ScatterProg { total: 64, root: 7 },
         );
         assert!(res.is_err());
     }
@@ -457,7 +472,7 @@ mod tests {
         let report = run_collective(
             &ClusterSpec::new(n, ExecPolicy::cprp2p()),
             inputs,
-            &move |ctx, input| scatter_binomial(ctx, input, d, 0),
+            &ScatterProg { total: d, root: 0 },
         )
         .unwrap();
         let total_cpr: usize = report.counters.iter().map(|c| c.compress_calls).sum();
@@ -482,13 +497,13 @@ mod tests {
         let gz = run_collective(
             &ClusterSpec::new(n, ExecPolicy::gzccl()),
             mk(n),
-            &move |ctx, input| scatter_binomial(ctx, input, d, 0),
+            &ScatterProg { total: d, root: 0 },
         )
         .unwrap();
         let cpr = run_collective(
             &ClusterSpec::new(n, ExecPolicy::cprp2p()),
             mk(n),
-            &move |ctx, input| scatter_binomial(ctx, input, d, 0),
+            &ScatterProg { total: d, root: 0 },
         )
         .unwrap();
         assert!(

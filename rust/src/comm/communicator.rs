@@ -9,7 +9,7 @@ use crate::accuracy::{
 use crate::collectives::{Algo, Op};
 use crate::compress::CompressionProfile;
 use crate::coordinator::{
-    run_collective, ClusterSpec, CompressionMode, DeviceBuf, ExecPolicy, RunReport,
+    run_collective, ClusterSpec, CompressionMode, DeviceBuf, ExecBackend, ExecPolicy, RunReport,
 };
 use crate::error::{Error, Result};
 use crate::net::Topology;
@@ -38,6 +38,7 @@ pub struct CommBuilder {
     iterations: usize,
     profile: Option<CompressionProfile>,
     tuner: Option<Tuner>,
+    backend: Option<ExecBackend>,
 }
 
 impl CommBuilder {
@@ -57,6 +58,7 @@ impl CommBuilder {
             iterations: 1,
             profile: None,
             tuner: None,
+            backend: None,
         }
     }
 
@@ -158,6 +160,14 @@ impl CommBuilder {
         self
     }
 
+    /// Select the execution backend ([`ExecBackend::Events`] by
+    /// default): the event-driven engine scales to 10⁴–10⁵ ranks; the
+    /// thread-per-rank runner is the reference oracle.
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
     /// Build the communicator. With an accuracy target set, this is
     /// where the budget planner runs: a fixed-rate policy is rejected
     /// outright (its error is unbounded — the hazard the planner
@@ -229,6 +239,9 @@ impl CommBuilder {
             None
         };
         let mut spec = ClusterSpec::with_tiers(tree, self.policy);
+        if let Some(b) = self.backend {
+            spec.backend = b;
+        }
         if let Some(eb) = self.error_bound {
             spec.error_bound = eb;
         }

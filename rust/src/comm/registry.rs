@@ -9,12 +9,39 @@
 use crate::collectives::{
     allgather_bruck, allgather_hierarchical, allgather_recursive_doubling, allgather_ring,
     allreduce_hierarchical, allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
-    bcast_binomial, reduce_scatter_hierarchical, reduce_scatter_ring, run_plan, run_schedule,
-    scatter_binomial, Algo, Op,
+    reduce_scatter_hierarchical, reduce_scatter_ring, Algo, BcastProg, Op, PlanProg, ScatterProg,
+    SchedProg,
 };
-use crate::coordinator::{DeviceBuf, RankCtx, RankProgram};
+use crate::coordinator::{DeviceBuf, ProgFut, Program, RankCtx, RankProgram};
 use crate::error::{Error, Result};
 use crate::topo::{ExecPlan, LegExec, Schedule};
+
+/// The single-rank no-op program: every collective is the identity.
+struct Identity;
+
+impl Program for Identity {
+    fn run<'a>(&'a self, _ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move { Ok(input) })
+    }
+}
+
+/// Wraps a flat program in the degenerate one-leg plan: the whole
+/// collective runs inside leg 0 at the plan's bound.
+struct Leg0 {
+    exec: LegExec,
+    inner: Box<RankProgram>,
+}
+
+impl Program for Leg0 {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move {
+            ctx.begin_leg(0, self.exec);
+            let out = self.inner.run(ctx, input).await;
+            ctx.end_leg();
+            out
+        })
+    }
+}
 
 /// Static registry of implemented `(Op, Algo)` pairs.
 pub struct AlgoRegistry;
@@ -79,9 +106,7 @@ impl AlgoRegistry {
         if plan.schedule.is_some() {
             return match (op, algo) {
                 (Op::Allreduce | Op::ReduceScatter | Op::Allgather, Algo::Hierarchical) => {
-                    Ok(Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-                        run_plan(ctx, &plan, input)
-                    }))
+                    Ok(Box::new(PlanProg(plan)))
                 }
                 _ => Err(Error::collective(format!(
                     "no {algo:?} implementation for {op:?} (supported: {:?})",
@@ -93,12 +118,7 @@ impl AlgoRegistry {
         // leg 0, at the plan's bound.
         let exec = plan.legs.first().copied().unwrap_or_else(LegExec::raw);
         let inner = Self::resolve(op, algo, total_elems, root)?;
-        Ok(Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-            ctx.begin_leg(0, exec);
-            let out = inner(ctx, input);
-            ctx.end_leg();
-            out
-        }))
+        Ok(Box::new(Leg0 { exec, inner }))
     }
 
     /// [`AlgoRegistry::resolve`] with an optional pre-compiled
@@ -122,9 +142,7 @@ impl AlgoRegistry {
                 Algo::Hierarchical,
                 Some(s),
             ) => {
-                return Ok(Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-                    run_schedule(ctx, &s, input)
-                }));
+                return Ok(Box::new(SchedProg(s)));
             }
             (_, Algo::Hierarchical, Some(_)) => {
                 return Err(Error::collective(format!(
@@ -136,9 +154,7 @@ impl AlgoRegistry {
         }
         let program: Box<RankProgram> = match (op, algo) {
             // Single-rank communicators: every collective is a no-op.
-            (_, Algo::Identity) => {
-                Box::new(|_ctx: &mut RankCtx, input: DeviceBuf| Ok(input))
-            }
+            (_, Algo::Identity) => Box::new(Identity),
             (Op::Allreduce, Algo::Ring) => Box::new(allreduce_ring),
             (Op::Allreduce, Algo::RecursiveDoubling) => Box::new(allreduce_recursive_doubling),
             (Op::Allreduce, Algo::Hierarchical) => Box::new(allreduce_hierarchical),
@@ -149,12 +165,11 @@ impl AlgoRegistry {
             (Op::Allgather, Algo::Hierarchical) => Box::new(allgather_hierarchical),
             (Op::ReduceScatter, Algo::Ring) => Box::new(reduce_scatter_ring),
             (Op::ReduceScatter, Algo::Hierarchical) => Box::new(reduce_scatter_hierarchical),
-            (Op::Scatter, Algo::Binomial) => Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-                scatter_binomial(ctx, input, total_elems, root)
+            (Op::Scatter, Algo::Binomial) => Box::new(ScatterProg {
+                total: total_elems,
+                root,
             }),
-            (Op::Bcast, Algo::Binomial) => Box::new(move |ctx: &mut RankCtx, input: DeviceBuf| {
-                bcast_binomial(ctx, input, root)
-            }),
+            (Op::Bcast, Algo::Binomial) => Box::new(BcastProg { root }),
             (op, algo) => {
                 return Err(Error::collective(format!(
                     "no {algo:?} implementation for {op:?} (supported: {:?})",

@@ -14,12 +14,28 @@ use std::sync::Arc;
 use crate::compress::{CompressionProfile, Compressor};
 use crate::error::Result;
 use crate::gpu::{GpuDevice, StreamId};
-use crate::net::{Fabric, Topology};
+use crate::net::{FabricSlice, Topology};
 use crate::sim::{Breakdown, Phase, RankClock, VirtTime};
 use crate::topo::LegExec;
 
 use super::buffer::{CompBuf, DeviceBuf};
 use super::mailbox::{Mailbox, Msg, Payload};
+
+/// How a rank's messages move: over mpsc channels between OS threads
+/// (the thread backend), or through the event engine's shared message
+/// store (ranks as actors on one scheduler). The context's `send`/
+/// `recv` are port-agnostic; only `recv` behaves differently — the
+/// channel port blocks the rank's thread, the event port suspends the
+/// rank's future until the scheduler replays the matching arrival.
+pub(crate) enum Port {
+    /// Thread backend: cloneable senders into every peer, one mailbox.
+    Channel {
+        senders: Vec<Sender<Msg>>,
+        mailbox: Mailbox,
+    },
+    /// Event backend: a handle into the engine's shared [`crate::engine::MsgStore`].
+    Event(crate::engine::EventPort),
+}
 
 /// Which compressor (if any) a variant runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -204,9 +220,8 @@ pub struct RankCtx {
     policy: ExecPolicy,
     clock: RankClock,
     gpu: GpuDevice,
-    fabric: Fabric,
-    senders: Vec<Sender<Msg>>,
-    mailbox: Mailbox,
+    fabric: FabricSlice,
+    port: Port,
     compressor: Option<Arc<dyn Compressor>>,
     profile: CompressionProfile,
     counters: OpCounters,
@@ -228,9 +243,8 @@ impl RankCtx {
         nranks: usize,
         policy: ExecPolicy,
         gpu: GpuDevice,
-        fabric: Fabric,
-        senders: Vec<Sender<Msg>>,
-        mailbox: Mailbox,
+        fabric: FabricSlice,
+        port: Port,
         compressor: Option<Arc<dyn Compressor>>,
         profile: CompressionProfile,
     ) -> Self {
@@ -241,8 +255,7 @@ impl RankCtx {
             clock: RankClock::new(),
             gpu,
             fabric,
-            senders,
-            mailbox,
+            port,
             compressor,
             profile,
             counters: OpCounters::default(),
@@ -644,17 +657,25 @@ impl RankCtx {
             payload,
             arrival,
         };
-        self.senders[to]
-            .send(msg)
-            .expect("send failed: receiver thread gone");
+        match &self.port {
+            Port::Channel { senders, .. } => senders[to]
+                .send(msg)
+                .expect("send failed: receiver thread gone"),
+            Port::Event(ep) => ep.send(to, msg),
+        }
     }
 
-    /// Blocking receive from `from` with `tag`. Returns the payload and
-    /// the time at which the data is usable **on the device** (after
-    /// H2D staging for CPU-centric variants). The host blocks until
-    /// arrival; the wait is charged to COMM.
-    pub fn recv(&mut self, from: usize, tag: u64) -> (Payload, VirtTime) {
-        let msg = self.mailbox.recv(from, tag);
+    /// Receive from `from` with `tag`. Returns the payload and the time
+    /// at which the data is usable **on the device** (after H2D staging
+    /// for CPU-centric variants). The host blocks (thread backend) or
+    /// the rank's future suspends (event backend) until arrival; the
+    /// wait is charged to COMM. This is the crate's only suspension
+    /// point — everything a collective awaits bottoms out here.
+    pub async fn recv(&mut self, from: usize, tag: u64) -> (Payload, VirtTime) {
+        let msg = match &mut self.port {
+            Port::Channel { mailbox, .. } => mailbox.recv(from, tag),
+            Port::Event(ep) => ep.recv(from, tag).await,
+        };
         self.clock.wait_charged(Phase::Comm, msg.arrival);
         let mut usable = msg.arrival;
         if !self.policy.gpu_centric {
@@ -668,32 +689,32 @@ impl RankCtx {
     }
 
     /// Receive, asserting a raw (uncompressed) payload.
-    pub fn recv_raw(&mut self, from: usize, tag: u64) -> (DeviceBuf, VirtTime) {
-        match self.recv(from, tag) {
+    pub async fn recv_raw(&mut self, from: usize, tag: u64) -> (DeviceBuf, VirtTime) {
+        match self.recv(from, tag).await {
             (Payload::Raw(b), t) => (b, t),
             (p, _) => panic!("expected Raw payload, got {p:?}"),
         }
     }
 
     /// Receive, asserting a compressed payload.
-    pub fn recv_comp(&mut self, from: usize, tag: u64) -> (CompBuf, VirtTime) {
-        match self.recv(from, tag) {
+    pub async fn recv_comp(&mut self, from: usize, tag: u64) -> (CompBuf, VirtTime) {
+        match self.recv(from, tag).await {
             (Payload::Comp(c), t) => (c, t),
             (p, _) => panic!("expected Comp payload, got {p:?}"),
         }
     }
 
     /// Receive, asserting a metadata payload.
-    pub fn recv_meta(&mut self, from: usize, tag: u64) -> (Vec<u64>, VirtTime) {
-        match self.recv(from, tag) {
+    pub async fn recv_meta(&mut self, from: usize, tag: u64) -> (Vec<u64>, VirtTime) {
+        match self.recv(from, tag).await {
             (Payload::Meta(v), t) => (v, t),
             (p, _) => panic!("expected Meta payload, got {p:?}"),
         }
     }
 
     /// Receive, asserting a compressed-batch payload.
-    pub fn recv_batch(&mut self, from: usize, tag: u64) -> (Vec<CompBuf>, VirtTime) {
-        match self.recv(from, tag) {
+    pub async fn recv_batch(&mut self, from: usize, tag: u64) -> (Vec<CompBuf>, VirtTime) {
+        match self.recv(from, tag).await {
             (Payload::Batch(v), t) => (v, t),
             (p, _) => panic!("expected Batch payload, got {p:?}"),
         }
@@ -723,7 +744,7 @@ mod tests {
     use super::*;
     use crate::compress::CuszpLike;
     use crate::gpu::GpuModel;
-    use crate::net::Topology;
+    use crate::net::{Fabric, Topology};
 
     fn mk_ctx(policy: ExecPolicy) -> RankCtx {
         let topo = Topology::new(2, 2).unwrap();
@@ -735,9 +756,11 @@ mod tests {
             2,
             policy,
             GpuDevice::new(GpuModel::a100(), 2),
-            fabric,
-            senders[0].clone(),
-            mb,
+            FabricSlice::whole(fabric),
+            Port::Channel {
+                senders: senders[0].clone(),
+                mailbox: mb,
+            },
             Some(Arc::new(CuszpLike::new(1e-4))),
             CompressionProfile::fixed(20.0),
         )
@@ -850,9 +873,11 @@ mod tests {
             2,
             ExecPolicy::cprp2p(),
             GpuDevice::new(GpuModel::a100(), 2),
-            fabric,
-            senders[0].clone(),
-            boxes.remove(0),
+            FabricSlice::whole(fabric),
+            Port::Channel {
+                senders: senders[0].clone(),
+                mailbox: boxes.remove(0),
+            },
             Some(Arc::new(crate::compress::FixedRate::new(8))),
             CompressionProfile::fixed(4.0),
         );

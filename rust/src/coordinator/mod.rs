@@ -1,16 +1,21 @@
 //! The coordinator: rank runtime, execution policies, and the runner.
 //!
-//! This is the L3 home of the paper's system contribution. A collective
-//! run spawns one thread per simulated GPU rank; ranks exchange *real*
-//! payloads through [`mailbox`] channels while all *timing* is virtual,
-//! charged against calibrated GPU/network cost models. Variant policies
-//! ([`ctx::ExecPolicy`]) toggle exactly the design decisions the paper
-//! studies: GPU-centric buffering (§3.3.1), the adapted compressor
-//! (§3.3.2), overlap and multi-stream compression (§3.3.4).
+//! This is the L3 home of the paper's system contribution. Ranks
+//! execute *real* payload dataflow while all *timing* is virtual,
+//! charged against calibrated GPU/network cost models. Collectives are
+//! async [`program::Program`]s; the runner executes them on one of two
+//! backends ([`runner::ExecBackend`]): scoped OS threads over
+//! [`mailbox`] channels (the reference oracle) or the event-driven
+//! [`crate::engine`] (the default, linear in events rather than
+//! ranks × stacks). Variant policies ([`ctx::ExecPolicy`]) toggle
+//! exactly the design decisions the paper studies: GPU-centric
+//! buffering (§3.3.1), the adapted compressor (§3.3.2), overlap and
+//! multi-stream compression (§3.3.4).
 
 pub mod buffer;
 pub mod ctx;
 pub mod mailbox;
+pub mod program;
 pub mod runner;
 
 pub use buffer::{CompBuf, DeviceBuf};
@@ -18,4 +23,5 @@ pub use ctx::{
     CompressionMode, ExecPolicy, LegError, OpCounters, RankCtx, LEG_PROBE_MAX_ELEMS,
 };
 pub use mailbox::{Msg, Payload};
-pub use runner::{run_collective, ClusterSpec, RankProgram, RunReport};
+pub use program::{ProgFut, Program, RankProgram};
+pub use runner::{run_collective, ClusterSpec, ExecBackend, RunReport};

@@ -1,0 +1,112 @@
+//! The collective-program abstraction shared by both execution
+//! backends.
+//!
+//! A [`Program`] is what each rank executes: an async function from
+//! (rank context, input buffer) to an output buffer. The async-ness is
+//! the whole trick — `recv` is the *only* suspension point in the
+//! crate, so a rank program compiles (via the ordinary Rust state
+//! machine transform) into exactly the resumable per-rank state
+//! machine the event engine needs, while the thread backend simply
+//! drives the same future to completion with a blocking executor
+//! ([`block_on`]) whose `recv` never actually suspends.
+//!
+//! Plain `fn` items of the shape
+//! `fn(&mut RankCtx, DeviceBuf) -> ProgFut<'_>` implement [`Program`]
+//! through the blanket impl below, so call sites like
+//! `run_collective(&spec, inputs, &allreduce_ring)` keep working
+//! unchanged. Programs that need captured state (a compiled
+//! [`crate::topo::Schedule`], a scatter root, …) implement the trait
+//! on a small named struct instead of a closure.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
+
+use crate::error::Result;
+
+use super::buffer::DeviceBuf;
+use super::ctx::RankCtx;
+
+/// The future a rank program returns: boxed so programs are
+/// object-safe, lifetime-tied to the borrow of the rank context.
+pub type ProgFut<'a> = Pin<Box<dyn Future<Output = Result<DeviceBuf>> + 'a>>;
+
+/// A collective program: what each rank executes. `Sync` so one
+/// program value can be shared by every rank (threads or actors).
+pub trait Program: Sync {
+    /// Start the program on one rank. The returned future borrows
+    /// `ctx` until it completes.
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a>;
+}
+
+/// Every `Fn`-shaped program (in particular plain `fn` items like
+/// `allreduce_ring`) is a [`Program`].
+impl<F> Program for F
+where
+    F: for<'a> Fn(&'a mut RankCtx, DeviceBuf) -> ProgFut<'a> + Sync,
+{
+    fn run<'b>(&'b self, ctx: &'b mut RankCtx, input: DeviceBuf) -> ProgFut<'b> {
+        (self)(ctx, input)
+    }
+}
+
+/// Object-safe alias used wherever a program is type-erased (the algo
+/// registry hands out `Box<RankProgram>`).
+pub type RankProgram = dyn Program;
+
+fn noop_raw_waker() -> RawWaker {
+    fn clone(_: *const ()) -> RawWaker {
+        noop_raw_waker()
+    }
+    fn wake(_: *const ()) {}
+    fn wake_by_ref(_: *const ()) {}
+    fn drop(_: *const ()) {}
+    static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, wake, wake_by_ref, drop);
+    RawWaker::new(std::ptr::null(), &VTABLE)
+}
+
+/// A waker that does nothing: both backends schedule by their own
+/// bookkeeping (blocking recv / message-arrival heap), never through
+/// the waker protocol.
+pub(crate) fn noop_waker() -> Waker {
+    unsafe { Waker::from_raw(noop_raw_waker()) }
+}
+
+/// Drive a program future to completion on the current thread.
+///
+/// Under the thread backend the channel-mode `recv` blocks *inside*
+/// `poll`, so the future is ready on the first poll by construction;
+/// `Pending` here means a program suspended on an event-mode await
+/// while running on the thread backend — a wiring bug, not a runtime
+/// condition, hence the panic.
+pub(crate) fn block_on<T>(fut: impl Future<Output = T>) -> T {
+    let mut fut = Box::pin(fut);
+    let waker = noop_waker();
+    let mut cx = Context::from_waker(&waker);
+    match fut.as_mut().poll(&mut cx) {
+        Poll::Ready(v) => v,
+        Poll::Pending => panic!("thread-backend program suspended: event-mode port on a thread rank"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_on_drives_plain_futures() {
+        let v = block_on(async { 40 + 2 });
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn fn_items_are_programs() {
+        // Compile-time check: a fn item of the program shape satisfies
+        // the trait bound without any adapter.
+        fn ident(_ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+            Box::pin(async move { Ok(input) })
+        }
+        fn takes_program<P: Program + ?Sized>(_p: &P) {}
+        takes_program(&ident);
+    }
+}

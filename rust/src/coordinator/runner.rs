@@ -1,18 +1,55 @@
-//! The cluster runner: spawns one thread per rank, wires the mesh,
-//! executes a collective program, and aggregates the run report.
+//! The cluster runner: instantiates a simulated cluster, executes a
+//! collective program on every rank, and aggregates the run report.
+//!
+//! Two interchangeable backends execute the same [`Program`]:
+//!
+//! * [`ExecBackend::Threads`] — one OS thread per rank over mpsc
+//!   channels, the original reference oracle. Each thread drives its
+//!   rank's future with a blocking executor; `recv` blocks inside the
+//!   mailbox.
+//! * [`ExecBackend::Events`] (default) — the [`crate::engine`]: ranks
+//!   are resumable state machines on one event scheduler, no OS
+//!   threads, memory and wall time linear in events. This is what
+//!   makes 10⁴–10⁵-rank topologies simulable.
+//!
+//! Both produce bit-identical payloads and identical makespans: the
+//! payload dataflow never branches on timing, and the fabric's
+//! interval timelines allocate the earliest free gap independent of
+//! wall-clock arrival order.
 
 use std::sync::Arc;
 
 use crate::compress::{CompressionProfile, Compressor, CuszpLike, FixedRate};
 use crate::error::{Error, Result};
 use crate::gpu::{GpuDevice, GpuModel};
-use crate::net::{default_uplinks, Fabric, LinkModel, Topology};
+use crate::net::{default_uplinks, Fabric, FabricSlice, LinkModel, Topology};
 use crate::sim::{Breakdown, VirtTime};
 use crate::topo::TierTree;
 
 use super::buffer::DeviceBuf;
-use super::ctx::{CompressionMode, ExecPolicy, LegError, OpCounters, RankCtx};
-use super::mailbox::build_mesh;
+use super::ctx::{CompressionMode, ExecPolicy, LegError, OpCounters, Port, RankCtx};
+use super::mailbox::{build_mesh, Mailbox};
+use super::program::{block_on, Program};
+
+/// Which execution backend runs a collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// One OS thread per rank (reference oracle; caps out near 512
+    /// ranks on thread-stack memory).
+    Threads,
+    /// Event-driven engine: ranks as futures on one scheduler.
+    #[default]
+    Events,
+}
+
+impl std::fmt::Display for ExecBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecBackend::Threads => write!(f, "threads"),
+            ExecBackend::Events => write!(f, "events"),
+        }
+    }
+}
 
 /// Everything needed to instantiate a simulated cluster.
 #[derive(Clone)]
@@ -40,6 +77,8 @@ pub struct ClusterSpec {
     pub profile: CompressionProfile,
     /// Non-default streams created per rank.
     pub streams_per_rank: usize,
+    /// Which execution backend runs collectives on this cluster.
+    pub backend: ExecBackend,
 }
 
 impl ClusterSpec {
@@ -66,6 +105,7 @@ impl ClusterSpec {
             fixed_rate_bits: 8,
             profile: CompressionProfile::fixed(25.0),
             streams_per_rank: 4,
+            backend: ExecBackend::default(),
         }
     }
 
@@ -111,7 +151,13 @@ impl ClusterSpec {
         self
     }
 
-    fn make_compressor(&self) -> Option<Arc<dyn Compressor>> {
+    /// Override the execution backend.
+    pub fn with_backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub(crate) fn make_compressor(&self) -> Option<Arc<dyn Compressor>> {
         match self.policy.compression {
             CompressionMode::None => None,
             CompressionMode::ErrorBounded => Some(Arc::new(CuszpLike::new(self.error_bound))),
@@ -159,87 +205,21 @@ impl RunReport {
     }
 }
 
-/// A collective program: what each rank executes. Receives the rank's
-/// context and its input buffer; returns the rank's output buffer.
-pub type RankProgram = dyn Fn(&mut RankCtx, DeviceBuf) -> Result<DeviceBuf> + Sync;
+/// What one rank's execution produces, on either backend.
+pub(crate) type RankOutcome = (DeviceBuf, VirtTime, Breakdown, OpCounters, Vec<LegError>);
 
-/// Run `program` on every rank of the cluster described by `spec`, with
-/// `inputs[r]` as rank r's input. Threads execute the *real* data flow;
-/// time is virtual.
-pub fn run_collective(
-    spec: &ClusterSpec,
-    inputs: Vec<DeviceBuf>,
-    program: &RankProgram,
-) -> Result<RunReport> {
-    let n = spec.topo.ranks();
-    if inputs.len() != n {
-        return Err(Error::coordinator(format!(
-            "inputs.len()={} != ranks={}",
-            inputs.len(),
-            n
-        )));
-    }
-    let fabric = Fabric::tiered(
-        spec.tiers.clone(),
-        spec.intranode,
-        spec.internode,
-        spec.uplinks.clone(),
-    );
-    let (senders, boxes) = build_mesh(n);
-    let compressor = spec.make_compressor();
-
-    type RankOutcome = (DeviceBuf, VirtTime, Breakdown, OpCounters, Vec<LegError>);
-    let mut results: Vec<Option<Result<RankOutcome>>> = (0..n).map(|_| None).collect();
-
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(n);
-        let mut boxes = boxes;
-        let mut inputs = inputs;
-        // Drain in reverse to pop from the back cheaply.
-        for rank in (0..n).rev() {
-            let mailbox = boxes.pop().unwrap();
-            let input = inputs.pop().unwrap();
-            let senders = senders[rank].clone();
-            let fabric = fabric.clone();
-            let compressor = compressor.clone();
-            let spec = &*spec;
-            handles.push((
-                rank,
-                scope.spawn(move || {
-                    let gpu = GpuDevice::new(spec.gpu, spec.streams_per_rank);
-                    let mut ctx = RankCtx::new(
-                        rank,
-                        n,
-                        spec.policy,
-                        gpu,
-                        fabric,
-                        senders,
-                        mailbox,
-                        compressor,
-                        spec.profile.clone(),
-                    );
-                    let out = program(&mut ctx, input)?;
-                    let finish = ctx.finish();
-                    let legs = ctx.leg_errors().to_vec();
-                    Ok((out, finish, ctx.breakdown(), ctx.counters(), legs))
-                }),
-            ));
-        }
-        for (rank, h) in handles {
-            let res = h
-                .join()
-                .unwrap_or_else(|_| Err(Error::coordinator(format!("rank {rank} panicked"))));
-            results[rank] = Some(res);
-        }
-    });
-
+/// Fold per-rank outcomes (in rank order) into a [`RunReport`]: the
+/// first rank error wins, makespan is the join of completions, leg
+/// errors merge by max deviation / summed samples.
+pub(crate) fn merge_outcomes(results: Vec<Result<RankOutcome>>) -> Result<RunReport> {
+    let n = results.len();
     let mut outputs = Vec::with_capacity(n);
     let mut breakdowns = Vec::with_capacity(n);
     let mut counters = Vec::with_capacity(n);
     let mut leg_errors: Vec<LegError> = Vec::new();
     let mut makespan = VirtTime::ZERO;
-    for r in results.into_iter() {
-        let (out, finish, bd, ct, legs) = r.expect("missing rank result")?;
+    for r in results {
+        let (out, finish, bd, ct, legs) = r?;
         outputs.push(out);
         makespan = makespan.join(finish);
         breakdowns.push(bd);
@@ -264,62 +244,223 @@ pub fn run_collective(
     })
 }
 
+/// Run `program` on every rank of the cluster described by `spec`, with
+/// `inputs[r]` as rank r's input, on the spec's [`ExecBackend`]. Ranks
+/// execute the *real* data flow; time is virtual.
+pub fn run_collective<P: Program + ?Sized>(
+    spec: &ClusterSpec,
+    inputs: Vec<DeviceBuf>,
+    program: &P,
+) -> Result<RunReport> {
+    let n = spec.topo.ranks();
+    if inputs.len() != n {
+        return Err(Error::coordinator(format!(
+            "inputs.len()={} != ranks={}",
+            inputs.len(),
+            n
+        )));
+    }
+    match spec.backend {
+        ExecBackend::Threads => run_threads(spec, inputs, program),
+        ExecBackend::Events => crate::engine::run_events(spec, inputs, program),
+    }
+}
+
+/// The thread backend: one scoped OS thread per rank, channel mesh,
+/// blocking recv. Kept as the reference oracle the event engine is
+/// property-tested against.
+fn run_threads<P: Program + ?Sized>(
+    spec: &ClusterSpec,
+    inputs: Vec<DeviceBuf>,
+    program: &P,
+) -> Result<RunReport> {
+    let n = spec.topo.ranks();
+    let fabric = Fabric::tiered(
+        spec.tiers.clone(),
+        spec.intranode,
+        spec.internode,
+        spec.uplinks.clone(),
+    );
+    let (senders, mut boxes) = build_mesh(n);
+    let compressor = spec.make_compressor();
+
+    // Drain the mesh into per-rank slots *before* spawning: a malformed
+    // mesh surfaces as a typed coordinator error, not a panic inside
+    // the scoped-thread join.
+    if senders.len() != n {
+        return Err(Error::coordinator(format!(
+            "mesh underflow: {} sender rows for {} ranks",
+            senders.len(),
+            n
+        )));
+    }
+    let mut inputs = inputs;
+    let mut per_rank: Vec<(usize, Mailbox, DeviceBuf)> = Vec::with_capacity(n);
+    for rank in (0..n).rev() {
+        let mailbox = boxes.pop().ok_or_else(|| {
+            Error::coordinator(format!("mesh underflow: no mailbox for rank {rank}"))
+        })?;
+        let input = inputs
+            .pop()
+            .ok_or_else(|| Error::coordinator(format!("no input buffer for rank {rank}")))?;
+        per_rank.push((rank, mailbox, input));
+    }
+
+    let mut results: Vec<Option<Result<RankOutcome>>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (rank, mailbox, input) in per_rank {
+            let senders = senders[rank].clone();
+            let fabric = fabric.clone();
+            let compressor = compressor.clone();
+            let spec = &*spec;
+            handles.push((
+                rank,
+                scope.spawn(move || {
+                    let gpu = GpuDevice::new(spec.gpu, spec.streams_per_rank);
+                    let mut ctx = RankCtx::new(
+                        rank,
+                        n,
+                        spec.policy,
+                        gpu,
+                        FabricSlice::whole(fabric),
+                        Port::Channel { senders, mailbox },
+                        compressor,
+                        spec.profile.clone(),
+                    );
+                    let out = block_on(program.run(&mut ctx, input))?;
+                    let finish = ctx.finish();
+                    let legs = ctx.leg_errors().to_vec();
+                    Ok((out, finish, ctx.breakdown(), ctx.counters(), legs))
+                }),
+            ));
+        }
+        for (rank, h) in handles {
+            let res = h
+                .join()
+                .unwrap_or_else(|_| Err(Error::coordinator(format!("rank {rank} panicked"))));
+            results[rank] = Some(res);
+        }
+    });
+
+    let results: Vec<Result<RankOutcome>> = results
+        .into_iter()
+        .enumerate()
+        .map(|(rank, r)| {
+            r.unwrap_or_else(|| Err(Error::coordinator(format!("rank {rank} produced no result"))))
+        })
+        .collect();
+    merge_outcomes(results)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::mailbox::Payload;
+    use crate::coordinator::program::ProgFut;
     use crate::sim::VirtTime;
+
+    fn ident(_ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+        Box::pin(async move { Ok(input) })
+    }
+
+    fn neighbor(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+        Box::pin(async move {
+            let r = ctx.rank();
+            if r % 2 == 0 {
+                ctx.send(r + 1, 0, Payload::Raw(input.clone()), ctx.now());
+            } else {
+                let (_buf, _t) = ctx.recv_raw(r - 1, 0).await;
+            }
+            Ok(input)
+        })
+    }
+
+    /// Rank `a` sends its buffer to rank `b`.
+    struct Exchange {
+        a: usize,
+        b: usize,
+    }
+
+    impl Program for Exchange {
+        fn run<'x>(&'x self, ctx: &'x mut RankCtx, input: DeviceBuf) -> ProgFut<'x> {
+            Box::pin(async move {
+                if ctx.rank() == self.a {
+                    ctx.send(self.b, 0, Payload::Raw(input.clone()), ctx.now());
+                } else if ctx.rank() == self.b {
+                    ctx.recv_raw(self.a, 0).await;
+                }
+                Ok(input)
+            })
+        }
+    }
+
+    fn both_backends() -> [ExecBackend; 2] {
+        [ExecBackend::Threads, ExecBackend::Events]
+    }
 
     #[test]
     fn identity_program_runs_all_ranks() {
-        let spec = ClusterSpec::new(8, ExecPolicy::nccl());
-        let inputs: Vec<DeviceBuf> = (0..8).map(|_| DeviceBuf::Virtual(1024)).collect();
-        let report = run_collective(&spec, inputs, &|_ctx, input| Ok(input)).unwrap();
-        assert_eq!(report.outputs.len(), 8);
-        assert_eq!(report.makespan, VirtTime::ZERO);
+        for backend in both_backends() {
+            let spec = ClusterSpec::new(8, ExecPolicy::nccl()).with_backend(backend);
+            let inputs: Vec<DeviceBuf> = (0..8).map(|_| DeviceBuf::Virtual(1024)).collect();
+            let report = run_collective(&spec, inputs, &ident).unwrap();
+            assert_eq!(report.outputs.len(), 8, "{backend}");
+            assert_eq!(report.makespan, VirtTime::ZERO, "{backend}");
+        }
     }
 
     #[test]
     fn neighbor_exchange_makespan_and_bytes() {
         // Every even rank sends 1 MB to rank+1 (intranode pairs).
-        let spec = ClusterSpec::new(4, ExecPolicy::nccl());
-        let inputs: Vec<DeviceBuf> = (0..4).map(|_| DeviceBuf::Virtual(1 << 18)).collect();
-        let report = run_collective(&spec, inputs, &|ctx, input| {
-            let r = ctx.rank();
-            if r % 2 == 0 {
-                ctx.send(r + 1, 0, Payload::Raw(input.clone()), ctx.now());
-            } else {
-                let (_buf, _t) = ctx.recv_raw(r - 1, 0);
-            }
-            Ok(input)
-        })
-        .unwrap();
-        assert!(report.makespan > VirtTime::ZERO);
-        assert_eq!(report.total_wire_bytes(), 2 << 20);
-        // Receivers charged comm.
-        assert!(report.breakdowns[1].comm > 0.0);
-        assert_eq!(report.breakdowns[0].comm, 0.0);
+        for backend in both_backends() {
+            let spec = ClusterSpec::new(4, ExecPolicy::nccl()).with_backend(backend);
+            let inputs: Vec<DeviceBuf> = (0..4).map(|_| DeviceBuf::Virtual(1 << 18)).collect();
+            let report = run_collective(&spec, inputs, &neighbor).unwrap();
+            assert!(report.makespan > VirtTime::ZERO, "{backend}");
+            assert_eq!(report.total_wire_bytes(), 2 << 20, "{backend}");
+            // Receivers charged comm.
+            assert!(report.breakdowns[1].comm > 0.0, "{backend}");
+            assert_eq!(report.breakdowns[0].comm, 0.0, "{backend}");
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_makespan() {
+        let run = |backend: ExecBackend| {
+            let spec = ClusterSpec::new(4, ExecPolicy::nccl()).with_backend(backend);
+            let inputs: Vec<DeviceBuf> = (0..4).map(|_| DeviceBuf::Virtual(1 << 18)).collect();
+            run_collective(&spec, inputs, &neighbor).unwrap().makespan
+        };
+        assert_eq!(run(ExecBackend::Threads), run(ExecBackend::Events));
     }
 
     #[test]
     fn rank_error_propagates() {
-        let spec = ClusterSpec::new(2, ExecPolicy::nccl());
-        let inputs: Vec<DeviceBuf> = (0..2).map(|_| DeviceBuf::Virtual(8)).collect();
-        let res = run_collective(&spec, inputs, &|ctx, input| {
-            if ctx.rank() == 1 {
-                Err(Error::collective("boom"))
-            } else {
-                Ok(input)
-            }
-        });
-        assert!(res.is_err());
+        fn failing(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+            Box::pin(async move {
+                if ctx.rank() == 1 {
+                    Err(Error::collective("boom"))
+                } else {
+                    Ok(input)
+                }
+            })
+        }
+        for backend in both_backends() {
+            let spec = ClusterSpec::new(2, ExecPolicy::nccl()).with_backend(backend);
+            let inputs: Vec<DeviceBuf> = (0..2).map(|_| DeviceBuf::Virtual(8)).collect();
+            let res = run_collective(&spec, inputs, &failing);
+            assert!(res.is_err(), "{backend}");
+        }
     }
 
     #[test]
     fn mismatched_inputs_rejected() {
-        let spec = ClusterSpec::new(4, ExecPolicy::nccl());
-        let res = run_collective(&spec, vec![DeviceBuf::Virtual(8)], &|_c, i| Ok(i));
-        assert!(res.is_err());
+        for backend in both_backends() {
+            let spec = ClusterSpec::new(4, ExecPolicy::nccl()).with_backend(backend);
+            let res = run_collective(&spec, vec![DeviceBuf::Virtual(8)], &ident);
+            assert!(res.is_err(), "{backend}");
+        }
     }
 
     #[test]
@@ -328,16 +469,9 @@ mod tests {
         let time_between = |a: usize, b: usize| {
             let spec = ClusterSpec::new(8, ExecPolicy::nccl());
             let inputs: Vec<DeviceBuf> = (0..8).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
-            run_collective(&spec, inputs, &move |ctx, input| {
-                if ctx.rank() == a {
-                    ctx.send(b, 0, Payload::Raw(input.clone()), ctx.now());
-                } else if ctx.rank() == b {
-                    ctx.recv_raw(a, 0);
-                }
-                Ok(input)
-            })
-            .unwrap()
-            .makespan
+            run_collective(&spec, inputs, &Exchange { a, b })
+                .unwrap()
+                .makespan
         };
         let intra = time_between(0, 1);
         let inter = time_between(0, 4);

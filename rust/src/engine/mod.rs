@@ -1,0 +1,416 @@
+//! Event-driven execution engine: ranks as resumable state machines.
+//!
+//! The thread backend burns one OS thread (and its stack) per rank,
+//! which caps simulations near 512 ranks. This engine replaces
+//! threads with the futures the [`crate::coordinator::Program`] trait
+//! already produces: each rank's collective program is a state
+//! machine whose only suspension point is `recv`, driven by a single
+//! scheduler that pops the earliest pending event (a message arrival
+//! in virtual time) and advances the one rank it unblocks. Memory and
+//! wall time scale with the number of *events* (messages), not with
+//! ranks × thread-stack — a 16384-rank hierarchical Allreduce is a
+//! few tens of thousands of message events.
+//!
+//! Determinism and equivalence with the thread oracle rest on two
+//! invariants, property-tested in `tests/engine.rs`:
+//!
+//! 1. The payload dataflow of every collective is timing-independent —
+//!    what a rank sends never depends on *when* its inputs arrived, so
+//!    any scheduling order produces bit-identical buffers.
+//! 2. The fabric's interval timelines allocate the earliest free gap
+//!    and are insensitive to reservation order (up to ties), so the
+//!    engine's virtual arrival times — and hence makespans — equal the
+//!    thread backend's even though reservations happen in a different
+//!    wall-clock order.
+//!
+//! The [`tenant`] submodule layers multi-tenancy on top: N
+//! communicators window onto one physical fabric ([`crate::net::FabricSlice`])
+//! and contend on its NIC/uplink timelines inside one scheduler.
+
+mod tenant;
+
+pub use tenant::{run_multi_tenant, MultiTenantReport, Tenant, TenantReport};
+
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll};
+
+use crate::coordinator::buffer::DeviceBuf;
+use crate::coordinator::ctx::{Port, RankCtx};
+use crate::coordinator::mailbox::Msg;
+use crate::coordinator::program::{noop_waker, Program};
+use crate::coordinator::runner::{merge_outcomes, ClusterSpec, RankOutcome, RunReport};
+use crate::error::{Error, Result};
+use crate::gpu::GpuDevice;
+use crate::net::{Fabric, FabricSlice};
+use crate::sim::VirtTime;
+
+/// The engine's shared message store — the event-mode replacement for
+/// the thread backend's N×N channel mesh. Messages are keyed by
+/// `(destination actor, logical source rank, tag)` with FIFO order per
+/// key, mirroring the mailbox's MPI-style non-overtaking matching
+/// exactly. Actor ids are globally unique across tenants (each tenant
+/// addresses its peers relative to its own actor base), so tenants
+/// sharing one store can never cross-deliver.
+#[derive(Default)]
+pub struct MsgStore {
+    /// Delivered-but-unconsumed messages, FIFO per (dst, src, tag).
+    held: HashMap<(usize, usize, u64), VecDeque<Msg>>,
+    /// Actors suspended in `recv`, with the (src, tag) they await. A
+    /// sequential rank program awaits at most one receive at a time.
+    waiting: HashMap<usize, (usize, u64)>,
+    /// Actors unblocked since the scheduler last drained: (actor,
+    /// virtual arrival time of the message that woke it).
+    woken: Vec<(usize, VirtTime)>,
+}
+
+/// One rank's handle into the [`MsgStore`]: its own global actor id
+/// plus the actor-id base of its communicator (logical peer rank `r`
+/// lives at actor `peer_base + r`).
+pub struct EventPort {
+    actor: usize,
+    peer_base: usize,
+    store: Arc<Mutex<MsgStore>>,
+}
+
+impl EventPort {
+    /// Deposit `msg` for logical peer `to`; wake it if it is suspended
+    /// on exactly this (src, tag).
+    pub(crate) fn send(&self, to: usize, msg: Msg) {
+        let dst = self.peer_base + to;
+        let src = msg.src;
+        let tag = msg.tag;
+        let arrival = msg.arrival;
+        let mut st = self.store.lock().expect("message store poisoned");
+        st.held.entry((dst, src, tag)).or_default().push_back(msg);
+        if st.waiting.get(&dst) == Some(&(src, tag)) {
+            st.waiting.remove(&dst);
+            st.woken.push((dst, arrival));
+        }
+    }
+
+    /// A future resolving to the next message from logical rank `from`
+    /// with `tag` — the engine's (sole) suspension point.
+    pub(crate) fn recv(&self, from: usize, tag: u64) -> EventRecv {
+        EventRecv {
+            store: Arc::clone(&self.store),
+            actor: self.actor,
+            from,
+            tag,
+        }
+    }
+}
+
+/// See [`EventPort::recv`].
+pub(crate) struct EventRecv {
+    store: Arc<Mutex<MsgStore>>,
+    actor: usize,
+    from: usize,
+    tag: u64,
+}
+
+impl Future for EventRecv {
+    type Output = Msg;
+
+    fn poll(self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<Msg> {
+        let key = (self.actor, self.from, self.tag);
+        let mut st = self.store.lock().expect("message store poisoned");
+        if let Some(q) = st.held.get_mut(&key) {
+            if let Some(msg) = q.pop_front() {
+                return Poll::Ready(msg);
+            }
+        }
+        st.waiting.insert(self.actor, (self.from, self.tag));
+        Poll::Pending
+    }
+}
+
+/// One rank's whole execution as a future: owns its context, borrows
+/// only the program.
+pub(crate) type ActorFut<'p> = Pin<Box<dyn Future<Output = Result<RankOutcome>> + 'p>>;
+
+/// Build the actor future for one rank: context construction plus the
+/// program run and outcome capture.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn_actor<'p, P: Program + ?Sized>(
+    spec: &ClusterSpec,
+    slice: &FabricSlice,
+    store: &Arc<Mutex<MsgStore>>,
+    peer_base: usize,
+    rank: usize,
+    nranks: usize,
+    input: DeviceBuf,
+    program: &'p P,
+) -> ActorFut<'p> {
+    let gpu = GpuDevice::new(spec.gpu, spec.streams_per_rank);
+    let port = Port::Event(EventPort {
+        actor: peer_base + rank,
+        peer_base,
+        store: Arc::clone(store),
+    });
+    let mut ctx = RankCtx::new(
+        rank,
+        nranks,
+        spec.policy,
+        gpu,
+        slice.clone(),
+        port,
+        spec.make_compressor(),
+        spec.profile.clone(),
+    );
+    Box::pin(async move {
+        let out = program.run(&mut ctx, input).await?;
+        let finish = ctx.finish();
+        let legs = ctx.leg_errors().to_vec();
+        Ok((out, finish, ctx.breakdown(), ctx.counters(), legs))
+    })
+}
+
+/// A scheduler event: actor `actor` is runnable at virtual time `t`.
+/// Ordered so the [`BinaryHeap`] (a max-heap) pops the *earliest* time,
+/// ties broken by the lowest actor id — a total, deterministic order.
+struct Ready {
+    t: VirtTime,
+    actor: usize,
+}
+
+impl PartialEq for Ready {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Ready {}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .t
+            .as_secs()
+            .total_cmp(&self.t.as_secs())
+            .then_with(|| other.actor.cmp(&self.actor))
+    }
+}
+
+/// The event loop: seed every actor at time zero, then repeatedly pop
+/// the earliest runnable actor, advance it until it completes or
+/// suspends in `recv`, and requeue whichever actors its sends woke.
+/// Returns per-actor outcomes; `None` marks an actor that never
+/// completed (a deadlock, or starvation behind a failed peer).
+pub(crate) fn drive<'p>(
+    actors: Vec<ActorFut<'p>>,
+    store: &Arc<Mutex<MsgStore>>,
+) -> Vec<Option<Result<RankOutcome>>> {
+    let n = actors.len();
+    let mut slots: Vec<Option<ActorFut<'p>>> = actors.into_iter().map(Some).collect();
+    let mut outcomes: Vec<Option<Result<RankOutcome>>> = (0..n).map(|_| None).collect();
+    let mut heap: BinaryHeap<Ready> = BinaryHeap::with_capacity(n);
+    for actor in 0..n {
+        heap.push(Ready {
+            t: VirtTime::ZERO,
+            actor,
+        });
+    }
+    let waker = noop_waker();
+    let mut cx = Context::from_waker(&waker);
+    while let Some(Ready { actor, .. }) = heap.pop() {
+        if let Some(fut) = slots[actor].as_mut() {
+            if let Poll::Ready(res) = fut.as_mut().poll(&mut cx) {
+                outcomes[actor] = Some(res);
+                slots[actor] = None;
+            }
+            let woken = {
+                let mut st = store.lock().expect("message store poisoned");
+                std::mem::take(&mut st.woken)
+            };
+            for (a, t) in woken {
+                heap.push(Ready { t, actor: a });
+            }
+        }
+    }
+    outcomes
+}
+
+/// Turn raw drive outcomes into a merged report, surfacing deadlocks
+/// (and the rank errors that caused them) as typed coordinator errors.
+pub(crate) fn collect(outcomes: Vec<Option<Result<RankOutcome>>>) -> Result<RunReport> {
+    let n = outcomes.len();
+    let stuck = outcomes.iter().filter(|o| o.is_none()).count();
+    if stuck > 0 {
+        // A rank that failed early starves its peers; its error is the
+        // root cause, so report it rather than the generic deadlock.
+        for o in outcomes.into_iter().flatten() {
+            if let Err(e) = o {
+                return Err(e);
+            }
+        }
+        return Err(Error::coordinator(format!(
+            "event engine deadlock: {stuck} of {n} ranks suspended in recv with no matching send in flight"
+        )));
+    }
+    merge_outcomes(
+        outcomes
+            .into_iter()
+            .map(|o| o.expect("no outcome is stuck"))
+            .collect(),
+    )
+}
+
+/// Run `program` on every rank of `spec`'s cluster under the event
+/// engine. Same contract (and, property-tested, same payloads and
+/// makespan) as the thread backend.
+pub fn run_events<P: Program + ?Sized>(
+    spec: &ClusterSpec,
+    inputs: Vec<DeviceBuf>,
+    program: &P,
+) -> Result<RunReport> {
+    let n = spec.topo.ranks();
+    if inputs.len() != n {
+        return Err(Error::coordinator(format!(
+            "inputs.len()={} != ranks={}",
+            inputs.len(),
+            n
+        )));
+    }
+    let fabric = Fabric::tiered(
+        spec.tiers.clone(),
+        spec.intranode,
+        spec.internode,
+        spec.uplinks.clone(),
+    );
+    let slice = FabricSlice::whole(fabric);
+    let store = Arc::new(Mutex::new(MsgStore::default()));
+    let actors: Vec<ActorFut<'_>> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(rank, input)| spawn_actor(spec, &slice, &store, 0, rank, n, input, program))
+        .collect();
+    let outcomes = drive(actors, &store);
+    collect(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mailbox::Payload;
+    use crate::coordinator::program::ProgFut;
+    use crate::coordinator::{ExecPolicy, RankCtx};
+
+    fn msg(src: usize, tag: u64, at: f64) -> Msg {
+        Msg {
+            src,
+            tag,
+            payload: Payload::Meta(vec![tag]),
+            arrival: VirtTime::secs(at),
+        }
+    }
+
+    fn store_port(actor: usize, peer_base: usize, store: &Arc<Mutex<MsgStore>>) -> EventPort {
+        EventPort {
+            actor,
+            peer_base,
+            store: Arc::clone(store),
+        }
+    }
+
+    #[test]
+    fn store_is_fifo_per_src_tag() {
+        let store = Arc::new(Mutex::new(MsgStore::default()));
+        let port = store_port(0, 0, &store);
+        port.send(1, msg(0, 7, 0.1));
+        port.send(1, msg(0, 7, 0.2));
+        let rx = store_port(1, 0, &store);
+        let m1 = crate::coordinator::program::block_on(rx.recv(0, 7));
+        let m2 = crate::coordinator::program::block_on(rx.recv(0, 7));
+        assert_eq!(m1.arrival, VirtTime::secs(0.1));
+        assert_eq!(m2.arrival, VirtTime::secs(0.2));
+    }
+
+    #[test]
+    fn send_wakes_exactly_the_matching_waiter() {
+        let store = Arc::new(Mutex::new(MsgStore::default()));
+        // Actor 1 waits on (src 0, tag 5).
+        store
+            .lock()
+            .unwrap()
+            .waiting
+            .insert(1, (0, 5));
+        let port = store_port(0, 0, &store);
+        // Non-matching tag: held, no wake.
+        port.send(1, msg(0, 6, 0.3));
+        assert!(store.lock().unwrap().woken.is_empty());
+        // Matching: exactly one wake at the arrival time.
+        port.send(1, msg(0, 5, 0.4));
+        {
+            let st = store.lock().unwrap();
+            assert_eq!(st.woken, vec![(1, VirtTime::secs(0.4))]);
+            assert!(st.waiting.is_empty());
+        }
+        // A second matching send does not wake again (no waiter left).
+        port.send(1, msg(0, 5, 0.5));
+        assert_eq!(store.lock().unwrap().woken.len(), 1);
+    }
+
+    #[test]
+    fn peer_base_isolates_tenants() {
+        let store = Arc::new(Mutex::new(MsgStore::default()));
+        // Two 2-rank tenants: actors 0-1 and 2-3. Both tenant-logical
+        // rank 0s send to their logical rank 1 with the same tag.
+        let a = store_port(0, 0, &store);
+        let b = store_port(2, 2, &store);
+        a.send(1, msg(0, 9, 0.1));
+        b.send(1, msg(0, 9, 0.2));
+        let rx_a = store_port(1, 0, &store);
+        let rx_b = store_port(3, 2, &store);
+        let got_b = crate::coordinator::program::block_on(rx_b.recv(0, 9));
+        let got_a = crate::coordinator::program::block_on(rx_a.recv(0, 9));
+        assert_eq!(got_a.arrival, VirtTime::secs(0.1));
+        assert_eq!(got_b.arrival, VirtTime::secs(0.2));
+    }
+
+    #[test]
+    fn deadlock_is_a_typed_error() {
+        fn never(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+            Box::pin(async move {
+                if ctx.rank() == 0 {
+                    // Waits for a message nobody sends.
+                    ctx.recv_raw(1, 99).await;
+                }
+                Ok(input)
+            })
+        }
+        let spec = ClusterSpec::new(2, ExecPolicy::nccl());
+        let inputs: Vec<DeviceBuf> = (0..2).map(|_| DeviceBuf::Virtual(8)).collect();
+        let err = run_events(&spec, inputs, &never).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn ready_orders_by_time_then_actor() {
+        let mut heap = BinaryHeap::new();
+        heap.push(Ready {
+            t: VirtTime::secs(2.0),
+            actor: 0,
+        });
+        heap.push(Ready {
+            t: VirtTime::secs(1.0),
+            actor: 5,
+        });
+        heap.push(Ready {
+            t: VirtTime::secs(1.0),
+            actor: 3,
+        });
+        let order: Vec<(f64, usize)> = std::iter::from_fn(|| heap.pop())
+            .map(|r| (r.t.as_secs(), r.actor))
+            .collect();
+        assert_eq!(order, vec![(1.0, 3), (1.0, 5), (2.0, 0)]);
+    }
+}

@@ -1,0 +1,283 @@
+//! Multi-tenant execution: N communicators sharing one physical
+//! fabric.
+//!
+//! Each [`Tenant`] is a communicator (its own logical tier tree,
+//! policy, compressor, program, inputs) windowed onto a contiguous
+//! range of the physical cluster's leaves. All tenants' ranks run as
+//! actors in *one* event scheduler over *one* [`Fabric`], so their
+//! messages reserve the same NIC and uplink timelines — cross-tenant
+//! contention emerges exactly where their traffic shares physical
+//! links, with no extra modeling. Per-tenant isolated re-runs on a
+//! fresh fabric quantify the interference: the report carries each
+//! tenant's contended and isolated makespans, the slowdown ratio, and
+//! the Jain fairness index across tenants.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::buffer::DeviceBuf;
+use crate::coordinator::program::RankProgram;
+use crate::coordinator::runner::{ClusterSpec, RankOutcome, RunReport};
+use crate::error::{Error, Result};
+use crate::net::{Fabric, FabricSlice};
+use crate::sim::VirtTime;
+
+use super::{collect, drive, spawn_actor, ActorFut, MsgStore};
+
+/// One communicator in a multi-tenant run.
+pub struct Tenant {
+    /// Display name (reports, errors).
+    pub name: String,
+    /// The tenant's *logical* cluster: tier tree, policy, compressor
+    /// settings, profile. Its link models are ignored — delivery goes
+    /// through the shared physical fabric.
+    pub spec: ClusterSpec,
+    /// First physical leaf of the tenant's window: logical rank `r`
+    /// occupies physical leaf `base + r`.
+    pub base: usize,
+    /// Per-rank input buffers (`spec.topo.ranks()` of them).
+    pub inputs: Vec<DeviceBuf>,
+    /// The collective every rank of this tenant executes.
+    pub program: Box<RankProgram>,
+}
+
+/// Per-tenant outcome of a multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant name.
+    pub name: String,
+    /// Makespan under contention (all tenants sharing the fabric).
+    pub makespan: VirtTime,
+    /// Makespan of the same collective alone on a fresh fabric.
+    pub isolated_makespan: VirtTime,
+    /// `makespan / isolated_makespan` (≥ 1 under contention).
+    pub slowdown: f64,
+    /// Full run report of the contended run.
+    pub report: RunReport,
+}
+
+/// Outcome of [`run_multi_tenant`].
+#[derive(Debug, Clone)]
+pub struct MultiTenantReport {
+    /// Per-tenant reports, in input order.
+    pub tenants: Vec<TenantReport>,
+    /// Jain fairness index over normalized service rates
+    /// `x_i = isolated_i / contended_i`: `(Σx)² / (N·Σx²)`, 1.0 when
+    /// contention degrades every tenant equally, → 1/N when one tenant
+    /// monopolizes the fabric.
+    pub fairness: f64,
+}
+
+fn physical_fabric(physical: &ClusterSpec) -> Fabric {
+    Fabric::tiered(
+        physical.tiers.clone(),
+        physical.intranode,
+        physical.internode,
+        physical.uplinks.clone(),
+    )
+}
+
+fn validate(physical: &ClusterSpec, tenants: &[Tenant]) -> Result<()> {
+    if tenants.is_empty() {
+        return Err(Error::coordinator("multi-tenant run with no tenants"));
+    }
+    let phys = physical.topo.ranks();
+    for t in tenants {
+        let n = t.spec.topo.ranks();
+        if t.inputs.len() != n {
+            return Err(Error::coordinator(format!(
+                "tenant {}: {} inputs for {} ranks",
+                t.name,
+                t.inputs.len(),
+                n
+            )));
+        }
+        if t.base + n > phys {
+            return Err(Error::coordinator(format!(
+                "tenant {}: window [{}, {}) exceeds physical fabric of {} ranks",
+                t.name,
+                t.base,
+                t.base + n,
+                phys
+            )));
+        }
+    }
+    let mut windows: Vec<(usize, usize, &str)> = tenants
+        .iter()
+        .map(|t| (t.base, t.base + t.spec.topo.ranks(), t.name.as_str()))
+        .collect();
+    windows.sort();
+    for w in windows.windows(2) {
+        if w[1].0 < w[0].1 {
+            return Err(Error::coordinator(format!(
+                "tenant windows overlap: {} [{}, {}) and {} [{}, {})",
+                w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run every tenant's collective concurrently on one shared physical
+/// fabric (described by `physical` — its tier tree and link models),
+/// then each tenant alone on a fresh fabric, and report contended vs
+/// isolated makespans, per-tenant slowdowns, and the Jain fairness
+/// index.
+pub fn run_multi_tenant(
+    physical: &ClusterSpec,
+    mut tenants: Vec<Tenant>,
+) -> Result<MultiTenantReport> {
+    validate(physical, &tenants)?;
+
+    // Take the inputs out now: one copy feeds the contended run, one
+    // the isolated re-runs.
+    let shared_inputs: Vec<Vec<DeviceBuf>> = tenants
+        .iter_mut()
+        .map(|t| std::mem::take(&mut t.inputs))
+        .collect();
+    let iso_inputs: Vec<Vec<DeviceBuf>> = shared_inputs.clone();
+
+    // Contended run: all tenants' actors in one scheduler, one fabric.
+    let fabric = physical_fabric(physical);
+    let store = Arc::new(Mutex::new(MsgStore::default()));
+    let mut actors: Vec<ActorFut<'_>> = Vec::new();
+    let mut actor_base = 0;
+    for (t, inputs) in tenants.iter().zip(shared_inputs) {
+        let n = t.spec.topo.ranks();
+        let slice = FabricSlice::window(fabric.clone(), t.base, t.spec.tiers.clone());
+        for (rank, input) in inputs.into_iter().enumerate() {
+            actors.push(spawn_actor(
+                &t.spec,
+                &slice,
+                &store,
+                actor_base,
+                rank,
+                n,
+                input,
+                &*t.program,
+            ));
+        }
+        actor_base += n;
+    }
+    let mut outcomes = drive(actors, &store).into_iter();
+    let mut contended: Vec<RunReport> = Vec::with_capacity(tenants.len());
+    for t in &tenants {
+        let n = t.spec.topo.ranks();
+        let chunk: Vec<Option<Result<RankOutcome>>> = outcomes.by_ref().take(n).collect();
+        contended.push(collect(chunk)?);
+    }
+
+    // Isolated baselines: same window, fresh fabric, no neighbors.
+    let mut reports = Vec::with_capacity(tenants.len());
+    for ((t, inputs), shared) in tenants.iter().zip(iso_inputs).zip(contended) {
+        let fabric = physical_fabric(physical);
+        let slice = FabricSlice::window(fabric, t.base, t.spec.tiers.clone());
+        let store = Arc::new(Mutex::new(MsgStore::default()));
+        let n = t.spec.topo.ranks();
+        let actors: Vec<ActorFut<'_>> = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, input)| spawn_actor(&t.spec, &slice, &store, 0, rank, n, input, &*t.program))
+            .collect();
+        let isolated = collect(drive(actors, &store))?;
+        let iso_s = isolated.makespan.as_secs();
+        let shared_s = shared.makespan.as_secs();
+        let slowdown = if iso_s > 0.0 { shared_s / iso_s } else { 1.0 };
+        reports.push(TenantReport {
+            name: t.name.clone(),
+            makespan: shared.makespan,
+            isolated_makespan: isolated.makespan,
+            slowdown,
+            report: shared,
+        });
+    }
+
+    // Jain fairness over normalized service rates.
+    let xs: Vec<f64> = reports
+        .iter()
+        .map(|r| {
+            let shared = r.makespan.as_secs();
+            let iso = r.isolated_makespan.as_secs();
+            if shared > 0.0 {
+                iso / shared
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    let fairness = if sumsq > 0.0 {
+        sum * sum / (xs.len() as f64 * sumsq)
+    } else {
+        1.0
+    };
+
+    Ok(MultiTenantReport {
+        tenants: reports,
+        fairness,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::program::ProgFut;
+    use crate::coordinator::{ExecPolicy, RankCtx};
+    use crate::topo::TierTree;
+
+    fn ident_boxed() -> Box<RankProgram> {
+        fn ident(_ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+            Box::pin(async move { Ok(input) })
+        }
+        Box::new(ident)
+    }
+
+    fn tenant(name: &str, base: usize, ranks: usize) -> Tenant {
+        let tree = TierTree::new(ranks, &[2, ranks / 2]).unwrap();
+        Tenant {
+            name: name.to_string(),
+            spec: ClusterSpec::with_tiers(tree, ExecPolicy::nccl()),
+            base,
+            inputs: (0..ranks).map(|_| DeviceBuf::Virtual(64)).collect(),
+            program: ident_boxed(),
+        }
+    }
+
+    fn physical(ranks: usize) -> ClusterSpec {
+        ClusterSpec::with_tiers(TierTree::new(ranks, &[2, ranks / 2]).unwrap(), ExecPolicy::nccl())
+    }
+
+    #[test]
+    fn overlapping_windows_rejected() {
+        let err = run_multi_tenant(&physical(16), vec![tenant("a", 0, 8), tenant("b", 4, 8)])
+            .unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn window_must_fit_physical() {
+        let err =
+            run_multi_tenant(&physical(8), vec![tenant("a", 4, 8)]).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn input_count_must_match_ranks() {
+        let mut t = tenant("a", 0, 8);
+        t.inputs.pop();
+        let err = run_multi_tenant(&physical(8), vec![t]).unwrap_err();
+        assert!(err.to_string().contains("inputs"), "{err}");
+    }
+
+    #[test]
+    fn identity_tenants_report_unit_fairness() {
+        let rep = run_multi_tenant(&physical(16), vec![tenant("a", 0, 8), tenant("b", 8, 8)])
+            .unwrap();
+        assert_eq!(rep.tenants.len(), 2);
+        for t in &rep.tenants {
+            assert_eq!(t.makespan, VirtTime::ZERO);
+            assert!((t.slowdown - 1.0).abs() < 1e-12);
+        }
+        assert!((rep.fairness - 1.0).abs() < 1e-12);
+    }
+}

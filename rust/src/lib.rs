@@ -30,6 +30,7 @@ pub mod config;
 pub mod compress;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod gpu;

@@ -14,7 +14,7 @@ use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingTarget, Stacki
 use gzccl::collectives::Algo;
 use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator};
 use gzccl::config::ClusterConfig;
-use gzccl::coordinator::DeviceBuf;
+use gzccl::coordinator::{DeviceBuf, ExecBackend};
 use gzccl::error::{Error, Result};
 use gzccl::experiments as exp;
 use gzccl::runtime::Engine;
@@ -76,6 +76,12 @@ gZCCL — compression-accelerated collective communication (paper reproduction)
 USAGE:
   gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
                     [--gpus-per-node G] [--tiers WxWx...]
+                    [--backend threads|events]
+                    --backend events (default): single-threaded
+                        event-driven engine, scales to 10^4-10^5 ranks;
+                        threads: the thread-per-rank reference runner
+                        (identical payloads and makespans, bounded by
+                        OS thread limits)
                     OP: allreduce (tuner-selected) | allreduce-ring |
                         allreduce-redoub | allreduce-hier | allreduce-tree |
                         reduce_scatter | reduce_scatter-hier |
@@ -165,6 +171,16 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
         .transpose()?;
     let tiers = args.take("--tiers");
+    let backend = match args.take("--backend").as_deref() {
+        None => None,
+        Some("threads") => Some(ExecBackend::Threads),
+        Some("events") => Some(ExecBackend::Events),
+        Some(other) => {
+            return Err(Error::config(format!(
+                "bad --backend `{other}` (expected threads|events)"
+            )))
+        }
+    };
     let mut cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
     if let Some(g) = gpus_per_node {
         cfg.gpus_per_node = g;
@@ -174,6 +190,10 @@ fn cmd_run(mut args: Args) -> Result<()> {
         let widths = TierTree::parse_widths(&t)?;
         spec.set_tiers(TierTree::new(spec.topo.ranks(), &widths)?);
     }
+    if let Some(b) = backend {
+        spec.backend = b;
+    }
+    let exec_backend = spec.backend;
     let comm = Communicator::from_spec(spec);
     let n = comm.nranks();
     let elems = (size_mb << 20) / 4;
@@ -209,8 +229,8 @@ fn cmd_run(mut args: Args) -> Result<()> {
     };
 
     println!(
-        "{op} | variant {} | {} ranks | {} MB",
-        cfg.variant, n, size_mb
+        "{op} | variant {} | {} ranks | {} MB | backend {}",
+        cfg.variant, n, size_mb, exec_backend
     );
     println!(
         "  algorithm        : {:?}{}",

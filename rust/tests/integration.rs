@@ -2,7 +2,7 @@
 
 use gzccl::collectives::{
     allgather_ring, allreduce_hierarchical, allreduce_recursive_doubling, allreduce_ring,
-    bcast_binomial, reduce_scatter_ring, scatter_binomial, Algo, Chunks,
+    reduce_scatter_ring, Algo, BcastProg, Chunks, ScatterProg,
 };
 use gzccl::comm::{CollectiveSpec, Communicator};
 use gzccl::config::{ClusterConfig, TomlDoc};
@@ -99,15 +99,11 @@ fn every_variant_completes_every_collective() {
                     })
                     .collect()
             };
-            let report = run_collective(&spec, rooted(10), &move |ctx, input| {
-                scatter_binomial(ctx, input, d, root)
-            })
-            .unwrap_or_else(|e| panic!("{name} scatter root {root}: {e}"));
+            let report = run_collective(&spec, rooted(10), &ScatterProg { total: d, root })
+                .unwrap_or_else(|e| panic!("{name} scatter root {root}: {e}"));
             assert_eq!(report.outputs[3].elems(), Chunks::new(d, n).len(3));
-            let report = run_collective(&spec, rooted(11), &move |ctx, input| {
-                bcast_binomial(ctx, input, root)
-            })
-            .unwrap_or_else(|e| panic!("{name} bcast root {root}: {e}"));
+            let report = run_collective(&spec, rooted(11), &BcastProg { root })
+                .unwrap_or_else(|e| panic!("{name} bcast root {root}: {e}"));
             assert_eq!(report.outputs[3].elems(), d, "{name} bcast root {root}");
         }
     }

@@ -5,10 +5,10 @@
 use gzccl::accuracy::{
     complies_tiers, plan_auto, plan_auto_tiers, split_across_tiers, AccuracyTarget,
 };
-use gzccl::collectives::{allreduce_hierarchical, run_schedule, Algo, Op};
+use gzccl::collectives::{allreduce_hierarchical, Algo, Op, SchedProg};
 use gzccl::comm::{CollectiveSpec, Communicator, Tuner};
 use gzccl::coordinator::{
-    run_collective, ClusterSpec, DeviceBuf, ExecPolicy, Payload, RankCtx,
+    run_collective, ClusterSpec, DeviceBuf, ExecPolicy, Payload, ProgFut, RankCtx,
 };
 use gzccl::error::Result;
 use gzccl::gpu::StreamId;
@@ -51,21 +51,21 @@ fn send_whole(
     }
 }
 
-fn recv_whole(
+async fn recv_whole(
     ctx: &mut RankCtx,
     stream: StreamId,
     from: usize,
     tag: u64,
 ) -> (DeviceBuf, VirtTime) {
     if ctx.compression_enabled() {
-        let (c, t_in) = ctx.recv_comp(from, tag);
+        let (c, t_in) = ctx.recv_comp(from, tag).await;
         ctx.decompress(stream, &c, t_in)
     } else {
-        ctx.recv_raw(from, tag)
+        ctx.recv_raw(from, tag).await
     }
 }
 
-fn leaders_recursive_doubling(
+async fn leaders_recursive_doubling(
     ctx: &mut RankCtx,
     stream: StreamId,
     input: DeviceBuf,
@@ -86,7 +86,7 @@ fn leaders_recursive_doubling(
             newidx = -1;
         } else {
             let peer = topo.leader_of_node(my_idx - 1);
-            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_FOLD);
+            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_FOLD).await;
             let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
             data = sum;
             data_t = t_sum;
@@ -108,7 +108,7 @@ fn leaders_recursive_doubling(
             };
             let peer = topo.leader_of_node(peer_idx);
             send_whole(ctx, stream, peer, TAG_HIER_X + round, &data, data_t);
-            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_X + round);
+            let (theirs, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_X + round).await;
             let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
             data = sum;
             data_t = t_sum;
@@ -122,7 +122,7 @@ fn leaders_recursive_doubling(
             send_whole(ctx, stream, peer, TAG_HIER_UNFOLD, &data, data_t);
         } else {
             let peer = topo.leader_of_node(my_idx + 1);
-            let (result, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_UNFOLD);
+            let (result, t_in) = recv_whole(ctx, stream, peer, TAG_HIER_UNFOLD).await;
             data = result;
             data_t = t_in;
         }
@@ -130,8 +130,10 @@ fn leaders_recursive_doubling(
     Ok((data, data_t))
 }
 
-/// The PR 2 two-level Allreduce, verbatim.
-fn reference_two_level(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf> {
+/// The PR 2 two-level Allreduce, verbatim (recv suspension points
+/// aside — the dataflow and timestamps are untouched).
+fn reference_two_level(ctx: &mut RankCtx, input: DeviceBuf) -> ProgFut<'_> {
+    Box::pin(async move {
     let n = ctx.nranks();
     let me = ctx.rank();
     if n == 1 {
@@ -149,20 +151,20 @@ fn reference_two_level(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf>
     if me != leader {
         let now = ctx.now();
         ctx.send(leader, TAG_HIER_UP + me as u64, Payload::Raw(input), now);
-        let (out, _t) = ctx.recv_raw(leader, TAG_HIER_DOWN + me as u64);
+        let (out, _t) = ctx.recv_raw(leader, TAG_HIER_DOWN + me as u64).await;
         ctx.sync_device();
         return Ok(out);
     }
     let mut data = input;
     let mut data_t = ctx.now();
     for m in members.clone().skip(1) {
-        let (theirs, t_in) = ctx.recv_raw(m, TAG_HIER_UP + m as u64);
+        let (theirs, t_in) = ctx.recv_raw(m, TAG_HIER_UP + m as u64).await;
         let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
         data = sum;
         data_t = t_sum;
     }
     if topo.nodes() > 1 {
-        let (d, t) = leaders_recursive_doubling(ctx, stream, data, data_t, &topo)?;
+        let (d, t) = leaders_recursive_doubling(ctx, stream, data, data_t, &topo).await?;
         data = d;
         data_t = t;
     }
@@ -171,6 +173,7 @@ fn reference_two_level(ctx: &mut RankCtx, input: DeviceBuf) -> Result<DeviceBuf>
     }
     ctx.sync_device();
     Ok(data)
+    })
 }
 
 fn spec(n: usize, g: usize, policy: ExecPolicy) -> ClusterSpec {
@@ -331,10 +334,7 @@ fn acceptance_512_rank_three_tier_beats_ring_and_two_level() {
     // not from the network).
     let tree = TierTree::new(n, &widths).unwrap();
     let two_level = compile_min_error(Op::Allreduce, &tree.collapsed(2), true).unwrap();
-    let two = run_collective(&comm.cluster().clone(), virt(), &move |ctx, input| {
-        run_schedule(ctx, &two_level, input)
-    })
-    .unwrap();
+    let two = run_collective(&comm.cluster().clone(), virt(), &SchedProg(two_level)).unwrap();
     assert!(
         auto.makespan.as_secs() < two.makespan.as_secs(),
         "3-tier {} must beat the two-level schedule {}",
