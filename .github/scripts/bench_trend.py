@@ -1,12 +1,15 @@
 #!/usr/bin/env python3
 """Non-blocking benchmark trend check.
 
-Compares the current sweep artifact (BENCH_allreduce.json or the
-engine's BENCH_engine.json rank-scale sweep) against the previous
-run's artifact and emits a GitHub Actions ::warning:: annotation for
-every sweep point whose virtual makespan regressed by more than the
-threshold. Always exits 0 — this is a trend report, not a gate (the
-surrounding job is continue-on-error as well).
+Compares the current sweep artifact (BENCH_allreduce.json, the
+engine's BENCH_engine.json rank-scale sweep, or the codec-throughput
+BENCH_codec.json) against the previous run's artifact and emits a
+GitHub Actions ::warning:: annotation for every sweep point whose
+metric regressed by more than the threshold. The metric is the virtual
+makespan for collective sweeps and the combined encode+decode wall
+seconds for codec rows — bigger is worse in both. Always exits 0 —
+this is a trend report, not a gate (the surrounding job is
+continue-on-error as well).
 
 Usage: bench_trend.py PREV.json CURR.json [--threshold 0.15]
 """
@@ -27,16 +30,27 @@ def load_rows(path):
         # `backend` separates the event engine's rows from the thread
         # oracle's in BENCH_engine.json; allreduce artifacts (old and
         # new) have no such column and default to the same "".
+        # Codec rows (BENCH_codec.json) have no algo/ranks columns at
+        # all: the staged-pipeline label is the identity instead.
         key = (
-            row["algo"],
+            row.get("algo", ""),
+            row.get("codec", ""),
             row.get("backend", ""),
-            row["ranks"],
-            row["gpus_per_node"],
+            row.get("ranks", 0),
+            row.get("gpus_per_node", 0),
             row.get("tiers", ""),
-            row["size_mib"],
+            row.get("size_mib", 0),
         )
         rows[key] = row
     return rows
+
+
+def metric(row):
+    """Seconds where bigger is worse: the virtual makespan for
+    collective sweep rows, encode+decode wall time for codec rows."""
+    if "virtual_makespan_s" in row:
+        return row["virtual_makespan_s"]
+    return row.get("encode_s", 0.0) + row.get("decode_s", 0.0)
 
 
 def main():
@@ -59,13 +73,16 @@ def main():
         base = prev.get(key)
         if base is None:
             continue
-        old = base.get("virtual_makespan_s", 0.0)
-        new = row.get("virtual_makespan_s", 0.0)
+        old = metric(base)
+        new = metric(row)
         if old <= 0.0:
             continue
         delta = (new - old) / old
-        algo, backend, ranks, gpn, tiers, size = key
-        label = f"algo={algo} ranks={ranks} gpn={gpn} tiers={tiers} size={size}MiB"
+        algo, codec, backend, ranks, gpn, tiers, size = key
+        if codec:
+            label = f"codec={codec} size={size}MiB"
+        else:
+            label = f"algo={algo} ranks={ranks} gpn={gpn} tiers={tiers} size={size}MiB"
         if backend:
             label += f" backend={backend}"
         # Optional per-leg-eb column (absent in pre-ExecPlan artifacts):
@@ -81,7 +98,7 @@ def main():
         if delta > args.threshold:
             regressions.append((label, old, new, delta))
             print(
-                f"::warning title=Benchmark makespan regression::{label}: "
+                f"::warning title=Benchmark regression::{label}: "
                 f"{old:.6f}s -> {new:.6f}s (+{delta * 100:.1f}%)"
             )
         elif delta < -args.threshold:

@@ -1,0 +1,134 @@
+//! Codec-pipeline quickstart: staged compressors picked **per leg**
+//! under one accuracy target, plus the lossless tier for bitwise-exact
+//! callers.
+//!
+//! Part 1 derives one compressor bound from a single end-to-end
+//! `AccuracyTarget`, then runs a 512-rank, 3-tier (4×16×8) Allreduce
+//! whose rack uplinks are oversubscribed. The tuner prices every stage
+//! of every codec composition against each leg's link speed and mixes
+//! pipelines: the cheap bitpack coder on fast intranode legs, the
+//! denser RLE+Rice entropy coder on the thin uplinks — different
+//! codecs, one target.
+//!
+//! Part 2 asks for `AccuracyTarget::Bitexact`. Instead of vetoing
+//! compression, the planner binds every compressed leg to the lossless
+//! codec composition (zero distortion at any amplification, `eb = 0`)
+//! and the summed result is bit-identical to the uncompressed
+//! reference — compression wins for callers that tolerate no error at
+//! all.
+//!
+//! ```bash
+//! cargo run --release --example codec_pipeline
+//! ```
+
+use gzccl::accuracy::{plan_for_algo_tiers, AccuracyTarget};
+use gzccl::collectives::{Algo, Op};
+use gzccl::comm::{CollectiveSpec, Communicator};
+use gzccl::compress::CodecSpec;
+use gzccl::coordinator::{ClusterSpec, CompressionMode, DeviceBuf, ExecPolicy};
+use gzccl::net::LinkModel;
+use gzccl::testkit::Pcg32;
+use gzccl::topo::TierTree;
+
+fn main() -> gzccl::Result<()> {
+    // ---- Part 1: per-leg codec selection under one target -----------
+    // 512 ranks as 4 GPUs/node × 16 nodes/rack × 8 racks, with a thin
+    // shared rack uplink (25 µs, 1.25 GB/s effective).
+    let ranks = 512;
+    let tree = TierTree::new(ranks, &[4, 16, 8])?;
+    let target = 1e-3;
+    let plan = plan_for_algo_tiers(
+        AccuracyTarget::AbsError(target),
+        None,
+        1,
+        Op::Allreduce,
+        Algo::Hierarchical,
+        &tree,
+        CompressionMode::ErrorBounded,
+    )?;
+    let mut spec = ClusterSpec::with_tiers(tree, ExecPolicy::gzccl());
+    spec.uplinks = vec![LinkModel::new(25e-6, 1.25e9)];
+    spec.error_bound = plan.eb;
+    let comm = Communicator::from_spec(spec);
+
+    // 64 MiB virtual payloads: big enough that the uplink exchange is
+    // bandwidth-bound, which is where entropy coding pays for itself.
+    let inputs: Vec<DeviceBuf> = (0..ranks).map(|_| DeviceBuf::Virtual(16 << 20)).collect();
+    let report = comm.allreduce(inputs, &CollectiveSpec::forced(Algo::Hierarchical))?;
+
+    println!("per-leg codec selection over {ranks} ranks (4x16x8, thin rack uplinks)");
+    println!("  target {target:.0e} end-to-end -> planned eb {:.3e}", plan.eb);
+    for l in &report.legs {
+        let codec = if l.exec.compresses() {
+            l.exec.codec.label()
+        } else {
+            "-".into()
+        };
+        println!(
+            "  leg {:<2} tier {:<2} {:?}: codec {codec}",
+            l.leg,
+            l.tier,
+            l.kind.expect("hierarchical legs carry kinds"),
+        );
+    }
+    let uplink_rice = report
+        .legs
+        .iter()
+        .any(|l| l.tier >= 2 && l.exec.compresses() && l.exec.codec == CodecSpec::rle_rice());
+    let intranode_cuszp = report
+        .legs
+        .iter()
+        .filter(|l| l.tier <= 1 && l.exec.compresses())
+        .all(|l| l.exec.codec == CodecSpec::cuszp());
+    assert!(uplink_rice, "the thin rack uplink should flip at least one leg to rle-rice");
+    assert!(intranode_cuszp, "fast intranode legs should stay on the cheap cuszp pipeline");
+    println!("  virtual makespan : {}", report.makespan);
+
+    // ---- Part 2: the lossless tier for bitwise-exact callers --------
+    // Integer-valued payloads keep every f32 summation order exact, so
+    // "bit-identical" is well-defined whatever schedule the tuner
+    // compiles.
+    let ranks = 8;
+    let dim = 4096;
+    let comm = Communicator::builder(ranks)
+        .policy(ExecPolicy::gzccl())
+        .accuracy_target(AccuracyTarget::Bitexact)
+        .build()?;
+    let make = |r: usize| -> Vec<f32> {
+        let mut rng = Pcg32::new(5, r as u64);
+        (0..dim).map(|_| (rng.next_u32() % 33) as f32 - 16.0).collect()
+    };
+    let mut expect = vec![0.0f32; dim];
+    for r in 0..ranks {
+        for (s, v) in expect.iter_mut().zip(make(r)) {
+            *s += v;
+        }
+    }
+    let inputs: Vec<DeviceBuf> = (0..ranks).map(|r| DeviceBuf::Real(make(r))).collect();
+    let report = comm.allreduce(inputs, &CollectiveSpec::auto())?;
+
+    println!("\nbitexact target over {ranks} ranks: no veto, lossless codec tier");
+    for l in &report.legs {
+        if l.exec.compresses() {
+            println!(
+                "  leg {:<2} tier {:<2}: codec {} (eb {})",
+                l.leg,
+                l.tier,
+                l.exec.codec.label(),
+                l.exec.eb
+            );
+        }
+    }
+    let out = report.outputs[0].as_real();
+    for (a, b) in out.iter().zip(expect.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "lossless tier must be bit-exact");
+    }
+    let raw_bytes = ranks * dim * 4;
+    println!(
+        "  wire bytes       : {} (uncompressed inputs total {raw_bytes})",
+        report.total_wire_bytes()
+    );
+    println!("  result           : bit-identical to the uncompressed sum");
+    println!("OK");
+    Ok(())
+}

@@ -1,30 +1,145 @@
-//! §Perf hot-path bench: real compressor encode/decode throughput on
+//! §Perf hot-path bench: staged-codec encode/decode throughput on
 //! RTM-like data (the L3 hot loop of every real-payload collective).
+//!
+//! Benches every canonical codec plus the stage-isolating compositions
+//! a differential attribution needs, prints per-stage columns
+//! (predictor | quantizer | coder) for each row, and emits
+//! `BENCH_codec.json` at the workspace root — the codec-throughput
+//! trend artifact CI archives per commit (non-blocking trend job, same
+//! shape as the allreduce and engine sweeps).
+
 use gzccl::bench_support::{bench, throughput_gbps};
-use gzccl::compress::{ratio, Compressor, CuszpLike, FixedRate};
+use gzccl::compress::{ratio, CodecSpec, CoderKind, Compressor, PredictorKind, QuantizerKind};
 use gzccl::data::RtmDataset;
 
+fn predictor_name(s: CodecSpec) -> &'static str {
+    match s.predictor {
+        PredictorKind::None => "none",
+        PredictorKind::Lorenzo1D => "lorenzo",
+    }
+}
+
+fn quantizer_name(s: CodecSpec) -> String {
+    match s.quantizer {
+        QuantizerKind::Prequant => "prequant".into(),
+        QuantizerKind::Lossless => "lossless".into(),
+        QuantizerKind::FixedRate(b) => format!("fixed{b}"),
+    }
+}
+
+fn coder_name(s: CodecSpec) -> &'static str {
+    match s.coder {
+        CoderKind::Bitpack => "bitpack",
+        CoderKind::Byteplane => "byteplane",
+        CoderKind::RleRice => "rice",
+    }
+}
+
+struct Row {
+    spec: CodecSpec,
+    encode_s: f64,
+    decode_s: f64,
+    stream_len: usize,
+}
+
 fn main() {
-    let data = RtmDataset::setting1().sample(8 << 20); // 32 MB
+    let data = RtmDataset::setting1().sample(8 << 20); // 32 MiB
     let bytes = data.len() * 4;
-    for eb in [1e-3, 1e-4, 1e-5] {
-        let c = CuszpLike::new(eb);
+    let size_mib = bytes >> 20;
+    let eb = 1e-4;
+
+    // The canonical pipelines plus the compositions that isolate one
+    // stage swap each (for the differential attribution below).
+    let specs = [
+        CodecSpec::cuszp(), // lorenzo+prequant+bitpack
+        CodecSpec::parse("none+prequant+bitpack").unwrap(),
+        CodecSpec::parse("lorenzo+prequant+byteplane").unwrap(),
+        CodecSpec::rle_rice(), // lorenzo+prequant+rice
+        CodecSpec::lossless(), // lorenzo+lossless+byteplane
+        CodecSpec::parse("lorenzo+lossless+bitpack").unwrap(),
+        CodecSpec::fixed_rate(8),
+    ];
+
+    println!(
+        "{:<28} {:>9} {:>9} {:>9} | encode GB/s | decode GB/s | ratio",
+        "codec", "predictor", "quantizer", "coder"
+    );
+    let mut rows = Vec::new();
+    for spec in specs {
+        let c = spec.build(eb).expect("composition must build");
         let (stream, enc) = bench(3, || c.compress(&data));
         let (_, dec) = bench(3, || c.decompress(&stream).unwrap());
         println!(
-            "cuszp-like eb={eb:.0e}: encode {:6.2} GB/s  decode {:6.2} GB/s  ratio {:6.2}",
+            "{:<28} {:>9} {:>9} {:>9} | {:>11.2} | {:>11.2} | {:6.2}",
+            spec.label(),
+            predictor_name(spec),
+            quantizer_name(spec),
+            coder_name(spec),
             throughput_gbps(bytes, enc.min),
             throughput_gbps(bytes, dec.min),
             ratio(bytes, stream.len()),
         );
+        rows.push(Row {
+            spec,
+            encode_s: enc.min,
+            decode_s: dec.min,
+            stream_len: stream.len(),
+        });
     }
-    let c = FixedRate::new(8);
-    let (stream, enc) = bench(3, || c.compress(&data));
-    let (_, dec) = bench(3, || c.decompress(&stream).unwrap());
+
+    // Differential stage attribution on the encode path: swap exactly
+    // one stage against the canonical lorenzo+prequant+bitpack pipeline
+    // and report the wall-clock delta that stage costs (noisy, for
+    // orientation — the JSON rows are the trend signal).
+    let enc_of = |s: CodecSpec| {
+        rows.iter()
+            .find(|r| r.spec == s)
+            .map(|r| r.encode_s)
+            .unwrap_or(f64::NAN)
+    };
+    let base = enc_of(CodecSpec::cuszp());
     println!(
-        "fixed-rate(8b):   encode {:6.2} GB/s  decode {:6.2} GB/s  ratio {:6.2}",
-        throughput_gbps(bytes, enc.min),
-        throughput_gbps(bytes, dec.min),
-        ratio(bytes, stream.len()),
+        "\nencode stage deltas vs cuszp ({:.1} ms): predictor(lorenzo) {:+.1} ms, \
+         coder(byteplane) {:+.1} ms, coder(rice) {:+.1} ms",
+        base * 1e3,
+        (base - enc_of(CodecSpec::parse("none+prequant+bitpack").unwrap())) * 1e3,
+        (enc_of(CodecSpec::parse("lorenzo+prequant+byteplane").unwrap()) - base) * 1e3,
+        (enc_of(CodecSpec::rle_rice()) - base) * 1e3,
     );
+
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "    {{\"codec\": \"{}\", \"predictor\": \"{}\", ",
+                    "\"quantizer\": \"{}\", \"coder\": \"{}\", \"size_mib\": {}, ",
+                    "\"encode_s\": {:.6}, \"decode_s\": {:.6}, ",
+                    "\"encode_gbps\": {:.3}, \"decode_gbps\": {:.3}, \"ratio\": {:.3}}}"
+                ),
+                r.spec.label(),
+                predictor_name(r.spec),
+                quantizer_name(r.spec),
+                coder_name(r.spec),
+                size_mib,
+                r.encode_s,
+                r.decode_s,
+                throughput_gbps(bytes, r.encode_s),
+                throughput_gbps(bytes, r.decode_s),
+                ratio(bytes, r.stream_len),
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"codec_throughput\",\n  \"eb\": {eb:e},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    // `cargo bench` runs with CWD at the package root (rust/); anchor
+    // the artifact at the workspace root where CI expects it.
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::PathBuf::from(dir).join("..").join("BENCH_codec.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_codec.json"),
+    };
+    std::fs::write(&path, &json).expect("write BENCH_codec.json");
+    println!("wrote {} ({} rows)", path.display(), rows.len());
 }

@@ -63,6 +63,12 @@ pub enum AccuracyTarget {
     /// (the SZ "REL" convention). Planning without a known range is a
     /// typed rejection.
     RelError(f64),
+    /// Bitwise-exact results: zero tolerated deviation. Instead of
+    /// vetoing every compressed algorithm, the planner certifies the
+    /// lossless codec tier ([`crate::compress::CodecSpec::lossless`],
+    /// zero distortion at any amplification) with `eb = 0` — the
+    /// collective still compresses, it just stops quantizing.
+    Bitexact,
 }
 
 impl AccuracyTarget {
@@ -76,6 +82,7 @@ impl AccuracyTarget {
                 Some(value_range * 10f64.powf(-db / 20.0))
             }
             AccuracyTarget::RelError(_) => None,
+            AccuracyTarget::Bitexact => Some(0.0),
         }
     }
 
@@ -182,6 +189,27 @@ pub fn plan_for_algo_tiers(
     mode: CompressionMode,
 ) -> Result<BudgetPlan> {
     reject_uncompressable(mode)?;
+    if target == AccuracyTarget::Bitexact {
+        // Zero budget: only the lossless codec satisfies it, and it
+        // does so at *any* amplification — plan eb = 0 instead of
+        // vetoing (the dispatcher binds the lossless pipeline).
+        if iterations == 0 {
+            return Err(Error::budget("accuracy plan needs iterations >= 1"));
+        }
+        let m = worst_amplification_tiers(op, algo, tree, 0).ok_or_else(|| {
+            Error::budget(format!(
+                "accuracy plan rejected: no propagation model for {algo:?} {op:?}"
+            ))
+        })?;
+        return Ok(BudgetPlan {
+            target,
+            iterations,
+            per_call_abs: 0.0,
+            eb: 0.0,
+            planned_algo: algo,
+            amplification: m,
+        });
+    }
     let abs = validated_abs(target, value_range, iterations)?;
     let per_call_abs = abs / iterations as f64;
     let m = worst_amplification_tiers(op, algo, tree, 0).ok_or_else(|| {
@@ -540,6 +568,33 @@ mod tests {
         )
         .unwrap();
         assert_eq!(flat.planned_algo, Algo::RecursiveDoubling);
+    }
+
+    #[test]
+    fn bitexact_target_plans_lossless_zero_budget() {
+        let t = topo(32, 4);
+        let plan = plan_auto(
+            AccuracyTarget::Bitexact,
+            1,
+            &t,
+            CompressionMode::ErrorBounded,
+        )
+        .unwrap();
+        assert_eq!(plan.eb, 0.0);
+        assert_eq!(plan.per_call_abs, 0.0);
+        // Zero distortion fits any certifiable algorithm, even the
+        // high-amplification flat rings the lossy budgets veto...
+        assert!(complies(&plan, Op::Allreduce, Algo::Ring, &t, 0));
+        assert!(complies(&plan, Op::Allreduce, Algo::Hierarchical, &t, 0));
+        // ...but still never an uncertifiable pair.
+        assert!(!complies(&plan, Op::Scatter, Algo::Ring, &t, 0));
+        // Fixed rate cannot certify bit-exactness.
+        assert!(plan_auto(AccuracyTarget::Bitexact, 1, &t, CompressionMode::FixedRate).is_err());
+        // The per-tier split degenerates to zero bounds everywhere.
+        let split = split_across_tiers(&plan, Op::Allreduce, &TierTree::from(&t), None).unwrap();
+        assert!(!split.tiers.is_empty());
+        assert!(split.tiers.iter().all(|tb| tb.eb == 0.0));
+        assert_eq!(split.predicted_total(), 0.0);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use crate::accuracy::{plan_for_algo, AccuracyTarget, BudgetPlan};
 use crate::collectives::{Algo, Op};
 use crate::comm::{AlgoHint, CollectiveSpec, Communicator};
+use crate::compress::CodecSpec;
 use crate::coordinator::{CompressionMode, DeviceBuf, ExecPolicy};
 use crate::error::Result;
 use crate::net::Topology;
@@ -45,6 +46,10 @@ pub struct DdpConfig {
     pub redoub: bool,
     /// Compress gradients at all (false = NCCL-style baseline).
     pub compress: bool,
+    /// Ambient staged codec for gradient compression. `None` keeps the
+    /// canonical cuSZp-like pipeline (and lets the tuner pick per-leg
+    /// codecs); `Some` pins every compressed leg to this pipeline.
+    pub codec: Option<CodecSpec>,
     /// RNG seed.
     pub seed: u64,
 }
@@ -59,6 +64,7 @@ impl Default for DdpConfig {
             adaptive: false,
             redoub: true,
             compress: true,
+            codec: None,
             seed: 42,
         }
     }
@@ -167,9 +173,12 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
     // With a plan, the communicator adopts it whole (dispatch-time
     // validation, per-tier split, adaptive controller); without one
     // the explicit error bound stands.
-    let builder = Communicator::builder(cfg.ranks)
+    let mut builder = Communicator::builder(cfg.ranks)
         .gpus_per_node(gpus_per_node)
         .policy(policy);
+    if let Some(c) = cfg.codec {
+        builder = builder.codec(c);
+    }
     let comm = match plan {
         Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,
         None => builder.error_bound(cfg.error_bound).build()?,

@@ -12,6 +12,7 @@
 use crate::accuracy::{plan_for_algo, AccuracyReport, AccuracyTarget, BudgetPlan};
 use crate::collectives::{Algo, Op};
 use crate::comm::{CollectiveSpec, Communicator};
+use crate::compress::CodecSpec;
 use crate::coordinator::{CompressionMode, DeviceBuf, ExecPolicy};
 use crate::data::images::StackingScenario;
 use crate::data::metrics::{linf, nrmse, psnr, value_range};
@@ -117,6 +118,10 @@ pub struct StackingConfig {
     /// communicator. Needs `accuracy_target`; ignored for variants the
     /// planner does not certify a budget for.
     pub adaptive: bool,
+    /// Ambient staged codec for the compressed variants. `None` keeps
+    /// the canonical cuSZp-like pipeline (and lets the tuner pick
+    /// per-leg codecs); `Some` pins every compressed leg to this one.
+    pub codec: Option<CodecSpec>,
     /// Scenario seed.
     pub seed: u64,
 }
@@ -132,6 +137,7 @@ impl Default for StackingConfig {
             error_bound: 1e-4,
             accuracy_target: None,
             adaptive: false,
+            codec: None,
             seed: 0xEEC,
         }
     }
@@ -232,9 +238,12 @@ pub fn run_stacking(
     // With a plan, the communicator adopts it whole: dispatch-time
     // budget validation, the per-tier split, and (when asked) the
     // adaptive controller all see the same certified plan.
-    let builder = Communicator::builder(cfg.ranks)
+    let mut builder = Communicator::builder(cfg.ranks)
         .gpus_per_node(cfg.gpus_per_node)
         .policy(policy);
+    if let Some(c) = cfg.codec {
+        builder = builder.codec(c);
+    }
     let comm = match plan {
         Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,
         None => builder.error_bound(cfg.error_bound).build()?,

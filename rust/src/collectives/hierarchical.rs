@@ -49,6 +49,7 @@
 //! bare-schedule entry point: it derives the equivalent uniform plan
 //! from the cluster's ambient policy and bound.
 
+use crate::compress::CodecSpec;
 use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, ProgFut, Program, RankCtx};
 use crate::error::{Error, Result};
 use crate::gpu::StreamId;
@@ -155,12 +156,25 @@ pub async fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> R
 pub async fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Result<DeviceBuf> {
     let mode = ctx.policy().compression;
     let eb = ctx.compressor_error_bound().unwrap_or(0.0);
+    // Tuned per-leg codecs are honored only when the ambient compressor
+    // is the canonical error-bounded pipeline; an explicit ambient
+    // codec choice wins over the tuner's.
+    let ambient = ctx.compressor_spec();
+    let honor_tuned = mode == CompressionMode::ErrorBounded
+        && ambient.unwrap_or_else(CodecSpec::cuszp) == CodecSpec::cuszp();
     let legs: Vec<LegExec> = sched
         .legs
         .iter()
         .map(|l| {
             if l.compressed && mode != CompressionMode::None {
-                LegExec { compression: mode, eb }
+                match l.codec {
+                    Some(c) if honor_tuned => LegExec::with_codec(c, eb),
+                    _ => LegExec {
+                        compression: mode,
+                        codec: LegExec::default_codec(mode),
+                        eb,
+                    },
+                }
             } else {
                 LegExec::raw()
             }

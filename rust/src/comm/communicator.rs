@@ -7,7 +7,7 @@ use crate::accuracy::{
     AccuracyTarget, BudgetPlan, ErrorPrediction, ErrorProbe, TieredPlan,
 };
 use crate::collectives::{Algo, Op};
-use crate::compress::CompressionProfile;
+use crate::compress::{CodecSpec, CompressionProfile};
 use crate::coordinator::{
     run_collective, ClusterSpec, CompressionMode, DeviceBuf, ExecBackend, ExecPolicy, RunReport,
 };
@@ -31,6 +31,7 @@ pub struct CommBuilder {
     tiers: Option<Vec<usize>>,
     policy: ExecPolicy,
     error_bound: Option<f64>,
+    codec: Option<CodecSpec>,
     accuracy_target: Option<AccuracyTarget>,
     external_plan: Option<BudgetPlan>,
     adaptive: bool,
@@ -51,6 +52,7 @@ impl CommBuilder {
             tiers: None,
             policy: ExecPolicy::gzccl(),
             error_bound: None,
+            codec: None,
             accuracy_target: None,
             external_plan: None,
             adaptive: false,
@@ -73,6 +75,16 @@ impl CommBuilder {
     /// the bound instead.
     pub fn error_bound(mut self, eb: f64) -> Self {
         self.error_bound = Some(eb);
+        self
+    }
+
+    /// Ambient staged codec ([`CodecSpec`]) for every compressed leg.
+    /// Overrides the mode's canonical compressor *and* the tuner's
+    /// per-leg codec picks at dispatch; the compression mode follows
+    /// the codec's family (a fixed-rate codec implies the fixed-rate
+    /// policy mode). Parse CLI forms with [`CodecSpec::parse`].
+    pub fn codec(mut self, codec: CodecSpec) -> Self {
+        self.codec = Some(codec);
         self
     }
 
@@ -179,6 +191,21 @@ impl CommBuilder {
             Some(widths) => TierTree::new(self.ranks, widths)?,
             None => TierTree::from(&Topology::new(self.ranks, self.gpus_per_node)?),
         };
+        // An explicit codec decides the compression *family*: the mode
+        // follows it so planning, dispatch, and propagation all see the
+        // codec's actual semantics (fixed-rate codecs are the unbounded
+        // family, everything else is error-bounded).
+        let mut policy = self.policy;
+        let mut codec = self.codec;
+        if codec.is_some() && policy.compression == CompressionMode::None {
+            return Err(Error::config(
+                ".codec() needs a compressed policy (the uncompressed policy never \
+                 builds a compressor)",
+            ));
+        }
+        if let Some(c) = codec {
+            policy.compression = LegExec::mode_for(c);
+        }
         let mut plan: Option<BudgetPlan> = None;
         if let Some(target) = self.accuracy_target {
             if self.external_plan.is_some() {
@@ -186,7 +213,7 @@ impl CommBuilder {
                     "set either .budget_plan() or .accuracy_target(), not both",
                 ));
             }
-            match self.policy.compression {
+            match policy.compression {
                 CompressionMode::None => {} // lossless: target trivially met
                 CompressionMode::FixedRate | CompressionMode::ErrorBounded => {
                     if self.error_bound.is_some() {
@@ -199,8 +226,14 @@ impl CommBuilder {
                         self.value_range,
                         self.iterations,
                         &tree,
-                        self.policy.compression,
+                        policy.compression,
                     )?);
+                    // Bitwise-exact target: instead of vetoing every
+                    // compressed algorithm, bind the zero-distortion
+                    // lossless codec tier — the run still compresses.
+                    if target == AccuracyTarget::Bitexact {
+                        codec = Some(CodecSpec::lossless());
+                    }
                 }
             }
         }
@@ -210,7 +243,7 @@ impl CommBuilder {
                     "set either .error_bound() or .budget_plan(), not both",
                 ));
             }
-            if self.policy.compression != CompressionMode::ErrorBounded {
+            if policy.compression != CompressionMode::ErrorBounded {
                 return Err(Error::config(
                     ".budget_plan() needs the error-bounded compression policy \
                      (no other compressor can certify a plan)",
@@ -238,7 +271,8 @@ impl CommBuilder {
         } else {
             None
         };
-        let mut spec = ClusterSpec::with_tiers(tree, self.policy);
+        let mut spec = ClusterSpec::with_tiers(tree, policy);
+        spec.codec = codec;
         if let Some(b) = self.backend {
             spec.backend = b;
         }
@@ -637,6 +671,17 @@ impl Communicator {
             },
             None => ExecPlan::flat(op, self.spec.policy.compression, self.spec.error_bound),
         };
+        // An explicit ambient codec beats the tuner's per-leg picks:
+        // every compressed leg is re-pointed at it. The canonical cuszp
+        // choice is a no-op (it IS the default), so tuned mixed-codec
+        // plans survive exactly when nothing was overridden.
+        if compressed {
+            if let Some(c) = self.spec.codec {
+                if c != CodecSpec::cuszp() {
+                    exec_plan = exec_plan.with_codec(c);
+                }
+            }
+        }
         // Adaptation: fold the controller's current telemetry-earned
         // relaxation into the plan, every leg clamped at the certified
         // per-call budget.
@@ -918,6 +963,136 @@ mod tests {
             .build()
             .unwrap();
         assert!(nc.budget_plan().is_none());
+    }
+
+    #[test]
+    fn bitexact_target_plans_lossless_and_roundtrips_bit_identical() {
+        use crate::accuracy::AccuracyTarget;
+        let n = 8;
+        let d = 256;
+        // Integer-valued payloads: every summation order yields the
+        // same f32 bits, so the lossless run must match the exact
+        // elementwise sum bit for bit.
+        let int_inputs = || -> Vec<DeviceBuf> {
+            (0..n)
+                .map(|r| {
+                    let mut rng = Pcg32::new(77, r as u64);
+                    DeviceBuf::Real(
+                        (0..d).map(|_| (rng.next_u32() % 17) as f32 - 8.0).collect(),
+                    )
+                })
+                .collect()
+        };
+        let comm = Communicator::builder(n)
+            .accuracy_target(AccuracyTarget::Bitexact)
+            .build()
+            .expect("bitexact target plans lossless instead of vetoing");
+        let plan = comm.budget_plan().expect("a zero-budget plan is attached");
+        assert_eq!(plan.eb, 0.0);
+        assert_eq!(plan.per_call_abs, 0.0);
+        assert_eq!(comm.cluster().codec, Some(CodecSpec::lossless()));
+        let out = comm
+            .allreduce(int_inputs(), &CollectiveSpec::forced(Algo::Hierarchical))
+            .unwrap();
+        // Every compressed leg ran the lossless pipeline at eb 0.
+        assert!(out.legs.iter().any(|l| l.exec.compresses()));
+        for l in out.legs.iter().filter(|l| l.exec.compresses()) {
+            assert_eq!(l.exec.codec, CodecSpec::lossless());
+            assert_eq!(l.exec.eb, 0.0);
+        }
+        // Bit-identical against the exact elementwise sum.
+        let mut exact = vec![0.0f32; d];
+        for buf in &int_inputs() {
+            for (e, x) in exact.iter_mut().zip(buf.as_real()) {
+                *e += x;
+            }
+        }
+        for rank_out in &out.outputs {
+            for (a, b) in rank_out.as_real().iter().zip(&exact) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let acc = out.accuracy.expect("real compressed payloads probe");
+        assert_eq!(acc.observed_max_err, 0.0);
+        assert_eq!(acc.prediction, ErrorPrediction::Exact);
+        assert!(out.report.leg_warnings.is_empty(), "{:?}", out.report.leg_warnings);
+        // The flat ring a lossy budget vetoes complies at zero
+        // distortion — no veto under the bitexact plan.
+        assert!(comm
+            .allreduce(int_inputs(), &CollectiveSpec::forced(Algo::Ring))
+            .is_ok());
+    }
+
+    #[test]
+    fn ambient_codec_overrides_every_compressed_leg() {
+        let comm = Communicator::builder(8)
+            .codec(CodecSpec::rle_rice())
+            .error_bound(1e-3)
+            .build()
+            .unwrap();
+        assert_eq!(comm.cluster().codec, Some(CodecSpec::rle_rice()));
+        let out = comm
+            .allreduce(
+                real_inputs(8, 256, 13),
+                &CollectiveSpec::forced(Algo::Hierarchical),
+            )
+            .unwrap();
+        assert!(out.legs.iter().any(|l| l.exec.compresses()));
+        for l in out.legs.iter().filter(|l| l.exec.compresses()) {
+            assert_eq!(l.exec.codec, CodecSpec::rle_rice());
+        }
+        let acc = out.accuracy.expect("real compressed payloads probe");
+        assert_eq!(acc.within_bound(), Some(true), "{acc:?}");
+        assert!(out.report.leg_warnings.is_empty(), "{:?}", out.report.leg_warnings);
+        // A fixed-rate codec flips the policy family at build.
+        let fr = Communicator::builder(8)
+            .codec(CodecSpec::fixed_rate(12))
+            .build()
+            .unwrap();
+        assert_eq!(fr.policy().compression, CompressionMode::FixedRate);
+        // A codec without a compressed policy is a config error.
+        assert!(Communicator::builder(8)
+            .policy(ExecPolicy::nccl())
+            .codec(CodecSpec::lossless())
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn dispatch_honors_tuned_per_leg_codecs_on_thin_uplinks() {
+        use crate::net::LinkModel;
+        // The schedule-level acceptance scenario end to end: 512 ranks
+        // as 4x16x8, a starved rack uplink — the tuner trades kernel
+        // time for wire bytes on the top tier only, and the dispatched
+        // plan carries the mix (ambient codec unset ⇒ tuned picks
+        // survive).
+        let tree = TierTree::new(512, &[4, 16, 8]).unwrap();
+        let mut spec = ClusterSpec::with_tiers(tree, ExecPolicy::gzccl());
+        spec.uplinks = vec![LinkModel::new(25e-6, 1.25e9)];
+        let comm = Communicator::from_spec(spec);
+        let inputs: Vec<DeviceBuf> = (0..512).map(|_| DeviceBuf::Virtual(64 << 20)).collect();
+        let out = comm.allreduce(inputs, &CollectiveSpec::auto()).unwrap();
+        assert_eq!(out.algo, Algo::Hierarchical);
+        let top: Vec<CodecSpec> = out
+            .legs
+            .iter()
+            .filter(|l| l.tier == 2 && l.exec.compresses())
+            .map(|l| l.exec.codec)
+            .collect();
+        assert!(
+            top.contains(&CodecSpec::rle_rice()),
+            "rack-uplink legs should trade kernel time for ratio: {top:?}"
+        );
+        let lower: Vec<CodecSpec> = out
+            .legs
+            .iter()
+            .filter(|l| l.tier <= 1 && l.exec.compresses())
+            .map(|l| l.exec.codec)
+            .collect();
+        assert!(
+            lower.iter().all(|c| *c == CodecSpec::cuszp()),
+            "NIC-tier legs keep the canonical codec: {lower:?}"
+        );
     }
 
     #[test]

@@ -123,6 +123,37 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// LEB128 varint write (used for per-block absolute bases).
+pub fn write_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// LEB128 varint read; advances `cursor`.
+pub fn read_varint(buf: &[u8], cursor: &mut usize) -> Option<u32> {
+    let mut v: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf.get(*cursor)?;
+        *cursor += 1;
+        v |= ((byte & 0x7F) as u32) << shift;
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+        if shift >= 35 {
+            return None;
+        }
+    }
+}
+
 /// Pack `values` at fixed `width` bits each. `width == 0` packs nothing.
 pub fn pack_fixed(values: &[u32], width: u32) -> Vec<u8> {
     let mut out = Vec::with_capacity((values.len() * width as usize).div_ceil(8));
@@ -314,6 +345,22 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn varint_round_trips_and_detects_truncation() {
+        for v in [0u32, 1, 127, 128, 300, 1 << 20, u32::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut cursor = 0usize;
+            assert_eq!(read_varint(&buf, &mut cursor), Some(v));
+            assert_eq!(cursor, buf.len());
+        }
+        let mut buf = Vec::new();
+        write_varint(&mut buf, u32::MAX);
+        buf.truncate(buf.len() - 1);
+        let mut cursor = 0usize;
+        assert!(read_varint(&buf, &mut cursor).is_none());
     }
 
     #[test]

@@ -1,0 +1,1047 @@
+//! The staged codec pipeline: predictor × quantizer × coder.
+//!
+//! A codec is a composition of three stages:
+//!
+//! 1. **Predictor** — `None` (symbols are the quantized values
+//!    themselves) or `Lorenzo1D` (per-block first-order deltas, the
+//!    cuSZp predictor; the first symbol stays absolute so blocks remain
+//!    independently decodable).
+//! 2. **Quantizer** — `Prequant` (error-bounded `round(x / 2eb)`),
+//!    `FixedRate(bits)` (per-block scaled truncation, unbounded error),
+//!    or `Lossless` (identity on the f32 bit patterns — zero
+//!    distortion).
+//! 3. **Coder** — `Bitpack` (per-block max-width fixed packing),
+//!    `Byteplane` (cheap byte-plane split, all-zero high planes
+//!    dropped), or `RleRice` (zero-run RLE + Rice coding with a
+//!    per-block parameter — a real entropy coder).
+//!
+//! [`CuszpLike`] is the canonical `{Lorenzo1D, Prequant, Bitpack}`
+//! composition and [`FixedRate`] the canonical
+//! `{None, FixedRate(bits), Bitpack}` one; both keep their historical
+//! stream formats (`GZCP` / `GZFR`) byte-for-byte, built from the
+//! shared stage functions in this module. Every other composition is
+//! realized by the private `Staged` compressor over a self-describing
+//! `GZCX` container whose header carries the spec, so any stream built
+//! here decodes via [`decode_any`] without knowing the producer.
+//!
+//! [`CodecSpec`] is the *identity* threaded through the planning stack:
+//! `LegExec` carries one per leg, the cost model prices its stages, and
+//! the tuner picks it per leg from stage throughput vs. link speed.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::bitpack::{
+    bit_width, pack_fixed_into, read_varint, unpack_fixed_into, unzigzag, write_varint, zigzag,
+    BitReader, BitWriter,
+};
+use super::cuszp::BLOCK;
+use super::{Compressor, CuszpLike, FixedRate};
+
+/// Stream magic of the generic staged container: "GZCX".
+const MAGIC: [u8; 4] = *b"GZCX";
+/// Container format version.
+const VERSION: u8 = 1;
+/// Header: magic(4) + version(1) + predictor(1) + quantizer(1) +
+/// quantizer bits(1) + coder(1) + eb(8) + count(8).
+const HEADER: usize = 25;
+/// Tag byte marking a verbatim-f32 fallback block.
+const RAW_BLOCK: u8 = 0xFF;
+/// Unary quotient cap of the Rice coder: at this many leading ones the
+/// value is stored verbatim in 32 bits (bounds pathological symbols).
+const RICE_ESCAPE: u32 = 20;
+/// Largest selectable per-block Rice parameter.
+const RICE_K_MAX: u32 = 24;
+/// Fixed Rice parameter for zero-run lengths (runs are short: ≤ 31).
+const ZRUN_K: u32 = 2;
+
+/// Prediction stage of a codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PredictorKind {
+    /// No prediction: symbols are the quantized values themselves.
+    None,
+    /// Per-block integer 1D Lorenzo (first-order deltas).
+    Lorenzo1D,
+}
+
+/// Quantization stage of a codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantizerKind {
+    /// Error-bounded prequantization `round(x / 2eb)`.
+    Prequant,
+    /// Per-block scaled truncation at a fixed bit budget (unbounded
+    /// absolute error — the CPRP2P hazard).
+    FixedRate(u8),
+    /// Identity on the f32 bit patterns: zero distortion.
+    Lossless,
+}
+
+/// Entropy/packing stage of a codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoderKind {
+    /// Per-block max-significant-width fixed packing (cuSZp's encoder).
+    Bitpack,
+    /// Byte-plane split; all-zero high planes are dropped per block.
+    Byteplane,
+    /// Zero-run RLE + Rice coding with a per-block parameter.
+    RleRice,
+}
+
+/// The identity of a staged codec: one pick per stage.
+///
+/// This is what [`crate::topo::LegExec`] carries per leg and what the
+/// cost model prices stage-by-stage. [`CodecSpec::build`] turns it into
+/// a live [`Compressor`]; the canonical compositions come back as the
+/// historical [`CuszpLike`] / [`FixedRate`] stream formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CodecSpec {
+    /// Prediction stage.
+    pub predictor: PredictorKind,
+    /// Quantization stage.
+    pub quantizer: QuantizerKind,
+    /// Entropy/packing stage.
+    pub coder: CoderKind,
+}
+
+impl CodecSpec {
+    /// The canonical cuSZp-like pipeline: Lorenzo + prequant + bitpack
+    /// (the `GZCP` stream format).
+    pub fn cuszp() -> Self {
+        CodecSpec {
+            predictor: PredictorKind::Lorenzo1D,
+            quantizer: QuantizerKind::Prequant,
+            coder: CoderKind::Bitpack,
+        }
+    }
+
+    /// The canonical fixed-rate pipeline at `bits` per value (the
+    /// `GZFR` stream format).
+    pub fn fixed_rate(bits: u8) -> Self {
+        CodecSpec {
+            predictor: PredictorKind::None,
+            quantizer: QuantizerKind::FixedRate(bits),
+            coder: CoderKind::Bitpack,
+        }
+    }
+
+    /// The canonical lossless tier: Lorenzo over the f32 bit patterns,
+    /// byte-plane packed. Zero distortion at modest ratios — what turns
+    /// "compression vetoed" workloads into compression wins.
+    pub fn lossless() -> Self {
+        CodecSpec {
+            predictor: PredictorKind::Lorenzo1D,
+            quantizer: QuantizerKind::Lossless,
+            coder: CoderKind::Byteplane,
+        }
+    }
+
+    /// The entropy-coded error-bounded pipeline: cuSZp's prequant +
+    /// Lorenzo stages with zero-run RLE + Rice coding — slower kernels,
+    /// higher ratio, the pick for oversubscribed uplinks.
+    pub fn rle_rice() -> Self {
+        CodecSpec {
+            predictor: PredictorKind::Lorenzo1D,
+            quantizer: QuantizerKind::Prequant,
+            coder: CoderKind::RleRice,
+        }
+    }
+
+    /// Whether the quantizer is the zero-distortion lossless tier.
+    pub fn is_lossless(&self) -> bool {
+        self.quantizer == QuantizerKind::Lossless
+    }
+
+    /// Whether the quantizer is the fixed-rate family (unbounded
+    /// absolute error, pre-known output size).
+    pub fn is_fixed_rate(&self) -> bool {
+        matches!(self.quantizer, QuantizerKind::FixedRate(_))
+    }
+
+    /// Whether the pointwise absolute error is bounded (prequant at its
+    /// eb; lossless at zero).
+    pub fn is_error_bounded(&self) -> bool {
+        !self.is_fixed_rate()
+    }
+
+    /// Every composition of the three stages (fixed-rate quantizers at
+    /// `bits`) — the property-test and bench cross-product.
+    pub fn compositions(bits: u8) -> Vec<CodecSpec> {
+        let mut out = Vec::with_capacity(18);
+        for predictor in [PredictorKind::None, PredictorKind::Lorenzo1D] {
+            for quantizer in [
+                QuantizerKind::Prequant,
+                QuantizerKind::FixedRate(bits),
+                QuantizerKind::Lossless,
+            ] {
+                for coder in [CoderKind::Bitpack, CoderKind::Byteplane, CoderKind::RleRice] {
+                    out.push(CodecSpec {
+                        predictor,
+                        quantizer,
+                        coder,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Compact display label: canonical names for the canonical
+    /// compositions, a `predictor+quantizer+coder` triple otherwise.
+    /// [`CodecSpec::parse`] accepts every label this produces.
+    pub fn label(&self) -> String {
+        if *self == Self::cuszp() {
+            return "cuszp".into();
+        }
+        if *self == Self::lossless() {
+            return "lossless".into();
+        }
+        if *self == Self::rle_rice() {
+            return "rle-rice".into();
+        }
+        if let QuantizerKind::FixedRate(b) = self.quantizer {
+            if *self == Self::fixed_rate(b) {
+                return format!("fixed{b}");
+            }
+        }
+        let p = match self.predictor {
+            PredictorKind::None => "none",
+            PredictorKind::Lorenzo1D => "lorenzo",
+        };
+        let q = match self.quantizer {
+            QuantizerKind::Prequant => "prequant".to_string(),
+            QuantizerKind::FixedRate(b) => format!("fixed{b}"),
+            QuantizerKind::Lossless => "lossless".to_string(),
+        };
+        let c = match self.coder {
+            CoderKind::Bitpack => "bitpack",
+            CoderKind::Byteplane => "byteplane",
+            CoderKind::RleRice => "rice",
+        };
+        format!("{p}+{q}+{c}")
+    }
+
+    /// Parse a codec label: a canonical name (`cuszp`, `lossless`,
+    /// `rle-rice`, `fixed<bits>`) or a `predictor+quantizer+coder`
+    /// triple (`lorenzo+prequant+rice`). Inverse of
+    /// [`CodecSpec::label`].
+    pub fn parse(s: &str) -> Option<CodecSpec> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "cuszp" | "cuszp-like" => return Some(Self::cuszp()),
+            "lossless" | "bitexact" => return Some(Self::lossless()),
+            "rle-rice" | "rle_rice" | "rice" => return Some(Self::rle_rice()),
+            _ => {}
+        }
+        if let Some(rest) = t.strip_prefix("fixed") {
+            if !rest.contains('+') {
+                return rest
+                    .parse::<u8>()
+                    .ok()
+                    .filter(|b| (2..=28).contains(b))
+                    .map(Self::fixed_rate);
+            }
+        }
+        let parts: Vec<&str> = t.split('+').collect();
+        let [p, q, c] = parts.as_slice() else {
+            return None;
+        };
+        let predictor = match *p {
+            "none" => PredictorKind::None,
+            "lorenzo" => PredictorKind::Lorenzo1D,
+            _ => return None,
+        };
+        let quantizer = match *q {
+            "prequant" => QuantizerKind::Prequant,
+            "lossless" => QuantizerKind::Lossless,
+            other => {
+                let bits = other.strip_prefix("fixed")?.parse::<u8>().ok()?;
+                if !(2..=28).contains(&bits) {
+                    return None;
+                }
+                QuantizerKind::FixedRate(bits)
+            }
+        };
+        let coder = match *c {
+            "bitpack" => CoderKind::Bitpack,
+            "byteplane" => CoderKind::Byteplane,
+            "rice" | "rle-rice" | "rle_rice" => CoderKind::RleRice,
+            _ => return None,
+        };
+        Some(CodecSpec {
+            predictor,
+            quantizer,
+            coder,
+        })
+    }
+
+    /// Build a live compressor for this composition. `eb` is the
+    /// absolute bound for prequant quantizers (ignored by the lossless
+    /// and fixed-rate tiers). `None` when the composition is not
+    /// buildable: a prequant quantizer with a non-positive or
+    /// non-finite `eb`, or fixed-rate bits outside `2..=28`.
+    pub fn build(&self, eb: f64) -> Option<Arc<dyn Compressor>> {
+        if *self == Self::cuszp() {
+            return (eb > 0.0 && eb.is_finite())
+                .then(|| Arc::new(CuszpLike::new(eb)) as Arc<dyn Compressor>);
+        }
+        if let QuantizerKind::FixedRate(bits) = self.quantizer {
+            if !(2..=28).contains(&bits) {
+                return None;
+            }
+            if *self == Self::fixed_rate(bits) {
+                return Some(Arc::new(FixedRate::new(bits as u32)));
+            }
+        }
+        if self.quantizer == QuantizerKind::Prequant && !(eb > 0.0 && eb.is_finite()) {
+            return None;
+        }
+        let eb = if self.quantizer == QuantizerKind::Prequant {
+            eb
+        } else {
+            0.0
+        };
+        Some(Arc::new(Staged { spec: *self, eb }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared stage functions (the canonical compressors route through
+// these, so their stream formats stay byte-for-byte).
+// ---------------------------------------------------------------------
+
+/// Prequant + optional Lorenzo over one block: zigzagged symbols, the
+/// first absolute. `None` when quantization overflows (raw fallback).
+/// Exactly the arithmetic of the historical `CuszpLike` encoder.
+pub(crate) fn prequant_symbols(block: &[f32], eb: f64, lorenzo: bool) -> Option<Vec<u32>> {
+    // Multiply by the reciprocal instead of dividing: measurably faster
+    // and bit-identical to the Pallas kernel's arithmetic.
+    let inv_two_eb = 1.0 / (2.0 * eb);
+    let inv_f32 = inv_two_eb as f32;
+    let mut symbols = Vec::with_capacity(block.len());
+    let mut prev: i64 = 0;
+    for &x in block {
+        // f32 fast path (exact for |q| < 2^23, the overwhelmingly
+        // common case); recompute in f64 near the edge, and treat
+        // non-finite inputs / i32 overflow as raw-block triggers.
+        let qf = (x * inv_f32).round();
+        let q: i64 = if qf.abs() < 8_388_608.0 {
+            qf as i64
+        } else {
+            let qd = (x as f64 * inv_two_eb).round();
+            if !qd.is_finite() || qd.abs() > i32::MAX as f64 / 2.0 {
+                return None;
+            }
+            qd as i64
+        };
+        let d = if lorenzo { q - prev } else { q };
+        prev = q;
+        symbols.push(zigzag(d as i32));
+    }
+    Some(symbols)
+}
+
+/// Inverse of [`prequant_symbols`] given the decoded symbol stream:
+/// accumulate (or take absolute) quantized values and reconstruct.
+pub(crate) fn prequant_accumulate(
+    base: u32,
+    deltas: &[u32],
+    lorenzo: bool,
+    two_eb_f32: f32,
+    out: &mut Vec<f32>,
+) {
+    let mut q: i64 = unzigzag(base) as i64;
+    // f32 reconstruction is exact in the integer part for |q| < 2^24
+    // (always true on the packed path) and ~1 ulp otherwise.
+    out.push(q as f32 * two_eb_f32);
+    for &z in deltas {
+        let d = unzigzag(z) as i64;
+        q = if lorenzo { q + d } else { d };
+        out.push(q as f32 * two_eb_f32);
+    }
+}
+
+/// Fixed-rate quantization of one block: the block's max-magnitude
+/// scale and the signed codes, clamped to ±`qmax`. Exactly the
+/// arithmetic of the historical `FixedRate` encoder.
+pub(crate) fn fixed_rate_quantize(block: &[f32], qmax: f64) -> (f32, Vec<i32>) {
+    let scale = block
+        .iter()
+        .map(|x| if x.is_finite() { x.abs() } else { 0.0 })
+        .fold(0.0f32, f32::max);
+    let codes = block
+        .iter()
+        .map(|&x| {
+            let v = if scale > 0.0 && x.is_finite() {
+                ((x as f64 / scale as f64) * qmax).round() as i32
+            } else {
+                0
+            };
+            v.clamp(-(qmax as i32), qmax as i32)
+        })
+        .collect();
+    (scale, codes)
+}
+
+/// Inverse of one [`fixed_rate_quantize`] code.
+pub(crate) fn fixed_rate_dequantize(code: i32, qmax: f64, scale: f32) -> f32 {
+    (code as f64 / qmax * scale as f64) as f32
+}
+
+/// Predictor stage over u32 "levels" (bit patterns or two's-complement
+/// codes): zigzagged wrapping deltas, the first absolute.
+fn predict_levels<I: IntoIterator<Item = u32>>(levels: I, lorenzo: bool) -> Vec<u32> {
+    let mut prev = 0u32;
+    levels
+        .into_iter()
+        .map(|l| {
+            let d = if lorenzo { l.wrapping_sub(prev) } else { l };
+            prev = l;
+            zigzag(d as i32)
+        })
+        .collect()
+}
+
+/// Inverse of [`predict_levels`].
+fn unpredict_levels(base: u32, rest: &[u32], lorenzo: bool) -> Vec<u32> {
+    let mut out = Vec::with_capacity(rest.len() + 1);
+    let mut prev = unzigzag(base) as u32;
+    out.push(prev);
+    for &s in rest {
+        let d = unzigzag(s) as u32;
+        let l = if lorenzo { prev.wrapping_add(d) } else { d };
+        out.push(l);
+        prev = l;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Coder stage (over the non-base symbols of one block).
+// ---------------------------------------------------------------------
+
+fn code_bitpack(rest: &[u32], body: &mut Vec<u8>) -> u8 {
+    let width = rest.iter().map(|&s| bit_width(s)).max().unwrap_or(0);
+    pack_fixed_into(rest, width, body);
+    width as u8
+}
+
+fn decode_bitpack(
+    payload: &[u8],
+    cursor: &mut usize,
+    width: u32,
+    rest: usize,
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    if width > 32 {
+        return Err(Error::compress(format!("codec: bad pack width {width}")));
+    }
+    let buf = payload
+        .get(*cursor..)
+        .ok_or_else(|| Error::compress("codec: truncated packed block"))?;
+    let nbytes = unpack_fixed_into(buf, rest, width, out)
+        .ok_or_else(|| Error::compress("codec: truncated packed block"))?;
+    *cursor += nbytes;
+    Ok(())
+}
+
+fn code_byteplane(rest: &[u32], body: &mut Vec<u8>) -> u8 {
+    let planes = rest.iter().map(|&s| bit_width(s).div_ceil(8)).max().unwrap_or(0);
+    for p in 0..planes {
+        for &s in rest {
+            body.push((s >> (8 * p)) as u8);
+        }
+    }
+    planes as u8
+}
+
+fn decode_byteplane(
+    payload: &[u8],
+    cursor: &mut usize,
+    planes: u32,
+    rest: usize,
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    if planes > 4 {
+        return Err(Error::compress(format!("codec: bad plane count {planes}")));
+    }
+    let need = planes as usize * rest;
+    let bytes = payload
+        .get(*cursor..*cursor + need)
+        .ok_or_else(|| Error::compress("codec: truncated byteplane block"))?;
+    let start = out.len();
+    out.extend(std::iter::repeat(0u32).take(rest));
+    for p in 0..planes as usize {
+        for (i, slot) in out[start..].iter_mut().enumerate() {
+            *slot |= (bytes[p * rest + i] as u32) << (8 * p);
+        }
+    }
+    *cursor += need;
+    Ok(())
+}
+
+fn rice_put(w: &mut BitWriter, v: u32, k: u32) {
+    let q = v >> k;
+    if q < RICE_ESCAPE {
+        for _ in 0..q {
+            w.put(1, 1);
+        }
+        w.put(0, 1);
+        if k > 0 {
+            w.put(v & ((1u32 << k) - 1), k);
+        }
+    } else {
+        for _ in 0..RICE_ESCAPE {
+            w.put(1, 1);
+        }
+        w.put(v, 32);
+    }
+}
+
+fn rice_get(r: &mut BitReader, k: u32) -> Option<u32> {
+    let mut q = 0u32;
+    while r.get(1)? == 1 {
+        q += 1;
+        if q == RICE_ESCAPE {
+            return r.get(32);
+        }
+    }
+    let low = if k > 0 { r.get(k)? } else { 0 };
+    Some((q << k) | low)
+}
+
+fn rice_cost(v: u32, k: u32) -> u64 {
+    let q = v >> k;
+    if q < RICE_ESCAPE {
+        (q + 1 + k) as u64
+    } else {
+        (RICE_ESCAPE + 32) as u64
+    }
+}
+
+fn best_rice_k(values: &[u32]) -> u32 {
+    let mut best = 0u32;
+    let mut best_cost = u64::MAX;
+    for k in 0..=RICE_K_MAX {
+        let cost: u64 = values.iter().map(|&v| rice_cost(v, k)).sum();
+        if cost < best_cost {
+            best_cost = cost;
+            best = k;
+        }
+    }
+    best
+}
+
+fn code_rle_rice(rest: &[u32], body: &mut Vec<u8>) -> u8 {
+    let nonzero: Vec<u32> = rest.iter().filter(|&&s| s != 0).map(|&s| s - 1).collect();
+    let k = best_rice_k(&nonzero);
+    let mut w = BitWriter::new();
+    let mut i = 0usize;
+    while i < rest.len() {
+        let mut z = 0usize;
+        while i + z < rest.len() && rest[i + z] == 0 {
+            z += 1;
+        }
+        rice_put(&mut w, z as u32, ZRUN_K);
+        i += z;
+        if i == rest.len() {
+            break;
+        }
+        rice_put(&mut w, rest[i] - 1, k);
+        i += 1;
+    }
+    body.extend_from_slice(&w.finish());
+    k as u8
+}
+
+fn decode_rle_rice(
+    payload: &[u8],
+    cursor: &mut usize,
+    k: u32,
+    rest: usize,
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    if k > RICE_K_MAX {
+        return Err(Error::compress(format!("codec: bad rice parameter {k}")));
+    }
+    let buf = payload
+        .get(*cursor..)
+        .ok_or_else(|| Error::compress("codec: truncated rice block"))?;
+    let mut r = BitReader::new(buf);
+    let mut got = 0usize;
+    while got < rest {
+        let z = rice_get(&mut r, ZRUN_K)
+            .ok_or_else(|| Error::compress("codec: truncated rice block"))? as usize;
+        if got + z > rest {
+            return Err(Error::compress("codec: zero run overflows block"));
+        }
+        out.extend(std::iter::repeat(0u32).take(z));
+        got += z;
+        if got == rest {
+            break;
+        }
+        let v = rice_get(&mut r, k)
+            .ok_or_else(|| Error::compress("codec: truncated rice block"))?;
+        out.push(v.wrapping_add(1));
+        got += 1;
+    }
+    *cursor += r.bit_pos().div_ceil(8);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The generic staged compressor (GZCX container).
+// ---------------------------------------------------------------------
+
+/// A non-canonical stage composition over the self-describing `GZCX`
+/// container. Built via [`CodecSpec::build`]; never constructed with an
+/// invalid spec/eb pair.
+#[derive(Debug, Clone, Copy)]
+struct Staged {
+    spec: CodecSpec,
+    eb: f64,
+}
+
+fn raw_block(block: &[f32], out: &mut Vec<u8>) {
+    out.push(RAW_BLOCK);
+    for &x in block {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+impl Staged {
+    fn encode_block(&self, block: &[f32], out: &mut Vec<u8>) {
+        let lorenzo = self.spec.predictor == PredictorKind::Lorenzo1D;
+        let (scale, symbols) = match self.spec.quantizer {
+            QuantizerKind::Prequant => match prequant_symbols(block, self.eb, lorenzo) {
+                Some(s) => (None, s),
+                None => return raw_block(block, out),
+            },
+            QuantizerKind::FixedRate(bits) => {
+                let qmax = ((1u64 << (bits - 1)) - 1) as f64;
+                let (scale, codes) = fixed_rate_quantize(block, qmax);
+                (
+                    Some(scale),
+                    predict_levels(codes.iter().map(|&v| v as u32), lorenzo),
+                )
+            }
+            QuantizerKind::Lossless => (
+                None,
+                predict_levels(block.iter().map(|x| x.to_bits()), lorenzo),
+            ),
+        };
+        let mut body = Vec::with_capacity(block.len() * 4);
+        write_varint(&mut body, symbols[0]);
+        let tag = match self.spec.coder {
+            CoderKind::Bitpack => code_bitpack(&symbols[1..], &mut body),
+            CoderKind::Byteplane => code_byteplane(&symbols[1..], &mut body),
+            CoderKind::RleRice => code_rle_rice(&symbols[1..], &mut body),
+        };
+        let scale_len = if scale.is_some() { 4 } else { 0 };
+        // Incompressible block: verbatim f32 is both smaller and exact.
+        if scale_len + body.len() > block.len() * 4 {
+            return raw_block(block, out);
+        }
+        out.push(tag);
+        if let Some(s) = scale {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.extend_from_slice(&body);
+    }
+
+    fn decode_block(
+        &self,
+        count: usize,
+        payload: &[u8],
+        cursor: &mut usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let tag = *payload
+            .get(*cursor)
+            .ok_or_else(|| Error::compress("codec: truncated block tag"))?;
+        *cursor += 1;
+        if tag == RAW_BLOCK {
+            let need = count * 4;
+            let slice = payload
+                .get(*cursor..*cursor + need)
+                .ok_or_else(|| Error::compress("codec: truncated raw block"))?;
+            for ch in slice.chunks_exact(4) {
+                out.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            }
+            *cursor += need;
+            return Ok(());
+        }
+        let scale = if self.spec.is_fixed_rate() {
+            let sb = payload
+                .get(*cursor..*cursor + 4)
+                .ok_or_else(|| Error::compress("codec: truncated block scale"))?;
+            *cursor += 4;
+            Some(f32::from_le_bytes(sb.try_into().unwrap()))
+        } else {
+            None
+        };
+        let base = read_varint(payload, cursor)
+            .ok_or_else(|| Error::compress("codec: truncated block base"))?;
+        let rest = count - 1;
+        let mut syms: Vec<u32> = Vec::with_capacity(rest);
+        match self.spec.coder {
+            CoderKind::Bitpack => decode_bitpack(payload, cursor, tag as u32, rest, &mut syms)?,
+            CoderKind::Byteplane => decode_byteplane(payload, cursor, tag as u32, rest, &mut syms)?,
+            CoderKind::RleRice => decode_rle_rice(payload, cursor, tag as u32, rest, &mut syms)?,
+        }
+        let lorenzo = self.spec.predictor == PredictorKind::Lorenzo1D;
+        match self.spec.quantizer {
+            QuantizerKind::Prequant => {
+                prequant_accumulate(base, &syms, lorenzo, (2.0 * self.eb) as f32, out)
+            }
+            QuantizerKind::Lossless => {
+                for l in unpredict_levels(base, &syms, lorenzo) {
+                    out.push(f32::from_bits(l));
+                }
+            }
+            QuantizerKind::FixedRate(bits) => {
+                let qmax = ((1u64 << (bits - 1)) - 1) as f64;
+                let scale = scale.unwrap_or(0.0);
+                for l in unpredict_levels(base, &syms, lorenzo) {
+                    out.push(fixed_rate_dequantize(l as i32, qmax, scale));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn spec_bytes(spec: CodecSpec) -> [u8; 4] {
+    let p = match spec.predictor {
+        PredictorKind::None => 0,
+        PredictorKind::Lorenzo1D => 1,
+    };
+    let (q, qb) = match spec.quantizer {
+        QuantizerKind::Prequant => (0, 0),
+        QuantizerKind::Lossless => (1, 0),
+        QuantizerKind::FixedRate(b) => (2, b),
+    };
+    let c = match spec.coder {
+        CoderKind::Bitpack => 0,
+        CoderKind::Byteplane => 1,
+        CoderKind::RleRice => 2,
+    };
+    [p, q, qb, c]
+}
+
+/// Decode a `GZCX` stream from its self-describing header alone.
+pub(crate) fn decode_staged(stream: &[u8]) -> Result<Vec<f32>> {
+    if stream.len() < HEADER || stream[0..4] != MAGIC {
+        return Err(Error::compress("codec: bad magic / truncated header"));
+    }
+    if stream[4] != VERSION {
+        return Err(Error::compress(format!("codec: unknown version {}", stream[4])));
+    }
+    let predictor = match stream[5] {
+        0 => PredictorKind::None,
+        1 => PredictorKind::Lorenzo1D,
+        other => return Err(Error::compress(format!("codec: bad predictor {other}"))),
+    };
+    let quantizer = match stream[6] {
+        0 => QuantizerKind::Prequant,
+        1 => QuantizerKind::Lossless,
+        2 => {
+            let bits = stream[7];
+            if !(2..=28).contains(&bits) {
+                return Err(Error::compress(format!("codec: bad rate {bits}")));
+            }
+            QuantizerKind::FixedRate(bits)
+        }
+        other => return Err(Error::compress(format!("codec: bad quantizer {other}"))),
+    };
+    let coder = match stream[8] {
+        0 => CoderKind::Bitpack,
+        1 => CoderKind::Byteplane,
+        2 => CoderKind::RleRice,
+        other => return Err(Error::compress(format!("codec: bad coder {other}"))),
+    };
+    let eb = f64::from_le_bytes(stream[9..17].try_into().unwrap());
+    if quantizer == QuantizerKind::Prequant && !(eb > 0.0 && eb.is_finite()) {
+        return Err(Error::compress("codec: bad stream bound"));
+    }
+    let n = u64::from_le_bytes(stream[17..25].try_into().unwrap()) as usize;
+    let st = Staged {
+        spec: CodecSpec {
+            predictor,
+            quantizer,
+            coder,
+        },
+        eb,
+    };
+    let payload = &stream[HEADER..];
+    let mut out = Vec::with_capacity(n);
+    let mut cursor = 0usize;
+    let mut remaining = n;
+    while remaining > 0 {
+        let count = remaining.min(BLOCK);
+        st.decode_block(count, payload, &mut cursor, &mut out)?;
+        remaining -= count;
+    }
+    Ok(out)
+}
+
+impl Compressor for Staged {
+    fn name(&self) -> &'static str {
+        if self.spec == CodecSpec::lossless() {
+            "lossless(lorenzo+byteplane)"
+        } else if self.spec == CodecSpec::rle_rice() {
+            "cuszp-like(rle+rice)"
+        } else {
+            "staged-codec"
+        }
+    }
+
+    fn compress(&self, data: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER + data.len() * 2 + 64);
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.extend_from_slice(&spec_bytes(self.spec));
+        out.extend_from_slice(&self.eb.to_le_bytes());
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for block in data.chunks(BLOCK) {
+            self.encode_block(block, &mut out);
+        }
+        out
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Vec<f32>> {
+        // Streams are fully self-describing (spec + eb in the header).
+        decode_staged(stream)
+    }
+
+    fn is_error_bounded(&self) -> bool {
+        self.spec.is_error_bounded()
+    }
+
+    fn error_bound(&self) -> Option<f64> {
+        match self.spec.quantizer {
+            QuantizerKind::Prequant => Some(self.eb),
+            QuantizerKind::Lossless => Some(0.0),
+            QuantizerKind::FixedRate(_) => None,
+        }
+    }
+
+    fn fixed_output_size(&self, _n: usize) -> Option<usize> {
+        None
+    }
+
+    fn rebound(&self, eb: f64) -> Option<Arc<dyn Compressor>> {
+        match self.spec.quantizer {
+            QuantizerKind::Prequant => {
+                if eb > 0.0 && eb.is_finite() {
+                    Some(Arc::new(Staged {
+                        spec: self.spec,
+                        eb,
+                    }))
+                } else {
+                    None
+                }
+            }
+            // Zero distortion complies with any requested bound.
+            QuantizerKind::Lossless => Some(Arc::new(*self)),
+            // No per-call bound exists to rebind.
+            QuantizerKind::FixedRate(_) => None,
+        }
+    }
+
+    fn spec(&self) -> Option<CodecSpec> {
+        Some(self.spec)
+    }
+}
+
+/// Decode any stream produced by the built-in codecs, dispatching on
+/// the stream magic (`GZCP`, `GZFR`, `GZCX`) — what lets one rank
+/// decode a neighbor's payload even when the two legs (or the two
+/// ranks' ambient configs) bind different codecs.
+pub fn decode_any(stream: &[u8]) -> Result<Vec<f32>> {
+    match stream.get(0..4) {
+        Some(m) if m == b"GZCP" => {
+            if stream.len() < 13 {
+                return Err(Error::compress("truncated cuszp header"));
+            }
+            let eb = f64::from_le_bytes(stream[5..13].try_into().unwrap());
+            if !(eb > 0.0 && eb.is_finite()) {
+                return Err(Error::compress("bad cuszp stream bound"));
+            }
+            CuszpLike::new(eb).decompress(stream)
+        }
+        Some(m) if m == b"GZFR" => FixedRate::new(8).decompress(stream),
+        Some(m) if m == b"GZCX" => decode_staged(stream),
+        _ => Err(Error::compress("unrecognized compressed stream magic")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{max_abs_diff, Pcg32};
+
+    fn smooth(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.003).sin() * 2.0).collect()
+    }
+
+    #[test]
+    fn canonical_builds_map_to_historical_formats() {
+        let c = CodecSpec::cuszp().build(1e-3).unwrap();
+        assert_eq!(c.name(), "cuszp-like(eb)");
+        assert_eq!(c.spec(), Some(CodecSpec::cuszp()));
+        let f = CodecSpec::fixed_rate(8).build(0.0).unwrap();
+        assert_eq!(f.name(), "fixed-rate(zfp1d-like)");
+        assert_eq!(f.spec(), Some(CodecSpec::fixed_rate(8)));
+        let l = CodecSpec::lossless().build(0.0).unwrap();
+        assert_eq!(l.error_bound(), Some(0.0));
+        assert!(l.is_error_bounded());
+        let r = CodecSpec::rle_rice().build(1e-3).unwrap();
+        assert_eq!(r.error_bound(), Some(1e-3));
+        // Unbuildable: prequant without a usable bound, silly rates.
+        assert!(CodecSpec::cuszp().build(0.0).is_none());
+        assert!(CodecSpec::rle_rice().build(f64::NAN).is_none());
+        assert!(CodecSpec::fixed_rate(1).build(0.0).is_none());
+        assert!(CodecSpec::fixed_rate(29).build(0.0).is_none());
+    }
+
+    #[test]
+    fn labels_parse_back_for_every_composition() {
+        for spec in CodecSpec::compositions(8) {
+            let label = spec.label();
+            assert_eq!(CodecSpec::parse(&label), Some(spec), "{label}");
+        }
+        assert_eq!(CodecSpec::parse("cuszp"), Some(CodecSpec::cuszp()));
+        assert_eq!(CodecSpec::parse("lossless"), Some(CodecSpec::lossless()));
+        assert_eq!(CodecSpec::parse("rle-rice"), Some(CodecSpec::rle_rice()));
+        assert_eq!(CodecSpec::parse("fixed12"), Some(CodecSpec::fixed_rate(12)));
+        assert_eq!(
+            CodecSpec::parse("lorenzo+prequant+rice"),
+            Some(CodecSpec::rle_rice())
+        );
+        assert!(CodecSpec::parse("fixed99").is_none());
+        assert!(CodecSpec::parse("huffman").is_none());
+        assert!(CodecSpec::parse("none+prequant").is_none());
+    }
+
+    #[test]
+    fn lossless_round_trip_is_bit_exact() {
+        let mut rng = Pcg32::seeded(11);
+        let mut data = rng.uniform_vec(5000, -100.0, 100.0);
+        data.push(f32::NAN);
+        data.push(-0.0);
+        data.push(f32::INFINITY);
+        let c = CodecSpec::lossless().build(0.0).unwrap();
+        let back = c.decompress(&c.compress(&data)).unwrap();
+        assert_eq!(back.len(), data.len());
+        for (a, b) in back.iter().zip(data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn lossless_compresses_smooth_data() {
+        let data = smooth(100_000);
+        let c = CodecSpec::lossless().build(0.0).unwrap();
+        let stream = c.compress(&data);
+        let r = super::super::ratio(data.len() * 4, stream.len());
+        assert!(r > 1.2, "lossless ratio {r}");
+    }
+
+    #[test]
+    fn rle_rice_bounded_and_denser_than_bitpack() {
+        let data = smooth(100_000);
+        let rice = CodecSpec::rle_rice().build(1e-3).unwrap();
+        let stream = rice.compress(&data);
+        let back = rice.decompress(&stream).unwrap();
+        assert!(max_abs_diff(&back, &data) <= 1e-3 + 1e-6);
+        let bitpack = CodecSpec::cuszp().build(1e-3).unwrap().compress(&data);
+        assert!(
+            stream.len() < bitpack.len(),
+            "rice {} vs bitpack {}",
+            stream.len(),
+            bitpack.len()
+        );
+    }
+
+    #[test]
+    fn staged_raw_fallback_is_lossless() {
+        let spec = CodecSpec::rle_rice();
+        let c = spec.build(1e-9).unwrap();
+        let data = vec![1e30f32, -1e30, 5e29, 0.0];
+        assert_eq!(c.decompress(&c.compress(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn decode_any_dispatches_on_magic() {
+        let data = smooth(1000);
+        for spec in [
+            CodecSpec::cuszp(),
+            CodecSpec::rle_rice(),
+            CodecSpec::lossless(),
+        ] {
+            let c = spec.build(1e-3).unwrap();
+            let back = decode_any(&c.compress(&data)).unwrap();
+            assert!(max_abs_diff(&back, &data) <= 1e-3 + 1e-6, "{}", spec.label());
+        }
+        let f = CodecSpec::fixed_rate(12).build(0.0).unwrap();
+        let back = decode_any(&f.compress(&data)).unwrap();
+        assert_eq!(back.len(), data.len());
+        assert!(decode_any(b"XXXXsomething").is_err());
+        assert!(decode_any(&[]).is_err());
+    }
+
+    #[test]
+    fn staged_rebound_follows_the_quantizer_family() {
+        let rice = CodecSpec::rle_rice().build(1e-4).unwrap();
+        let loose = rice.rebound(1e-2).expect("prequant family rebinds");
+        assert_eq!(loose.error_bound(), Some(1e-2));
+        assert_eq!(loose.spec(), Some(CodecSpec::rle_rice()));
+        assert!(rice.rebound(0.0).is_none());
+        let lossless = CodecSpec::lossless().build(0.0).unwrap();
+        let rebound = lossless.rebound(1e-3).expect("zero distortion complies");
+        assert_eq!(rebound.error_bound(), Some(0.0));
+        let fr = CodecSpec {
+            predictor: PredictorKind::Lorenzo1D,
+            quantizer: QuantizerKind::FixedRate(8),
+            coder: CoderKind::RleRice,
+        }
+        .build(0.0)
+        .unwrap();
+        assert!(fr.rebound(1e-3).is_none());
+    }
+
+    #[test]
+    fn every_composition_round_trips() {
+        let mut rng = Pcg32::seeded(23);
+        let data = rng.uniform_vec(1000, -5.0, 5.0);
+        for spec in CodecSpec::compositions(12) {
+            let c = spec.build(1e-3).unwrap();
+            let stream = c.compress(&data);
+            let back = c.decompress(&stream).unwrap();
+            assert_eq!(back.len(), data.len(), "{}", spec.label());
+            match spec.quantizer {
+                QuantizerKind::Prequant => {
+                    assert!(
+                        max_abs_diff(&back, &data) <= 1e-3 + 1e-6,
+                        "{}",
+                        spec.label()
+                    );
+                }
+                QuantizerKind::Lossless => {
+                    for (a, b) in back.iter().zip(data.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{}", spec.label());
+                    }
+                }
+                QuantizerKind::FixedRate(_) => {
+                    // Per-block relative bound: |x| ≤ 5 here.
+                    assert!(
+                        max_abs_diff(&back, &data) <= 5.0 / 2047.0 + 1e-5,
+                        "{}",
+                        spec.label()
+                    );
+                }
+            }
+        }
+    }
+}

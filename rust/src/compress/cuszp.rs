@@ -23,7 +23,10 @@
 
 use crate::error::{Error, Result};
 
-use super::bitpack::{bit_width, pack_fixed_into, unpack_fixed_into, unzigzag, zigzag};
+use super::bitpack::{
+    bit_width, pack_fixed_into, read_varint, unpack_fixed_into, unzigzag, write_varint,
+};
+use super::codec::{prequant_accumulate, prequant_symbols, CodecSpec};
 use super::Compressor;
 
 /// Values per encode block (cuSZp uses 32 per thread).
@@ -38,38 +41,13 @@ const RAW_BLOCK: u8 = 0xFF;
 /// Header: magic(4) + version(1) + eb(8) + count(8).
 const HEADER: usize = 21;
 
-/// LEB128 varint write (used for per-block absolute bases).
-fn write_varint(out: &mut Vec<u8>, mut v: u32) {
-    loop {
-        let byte = (v & 0x7F) as u8;
-        v >>= 7;
-        if v == 0 {
-            out.push(byte);
-            return;
-        }
-        out.push(byte | 0x80);
-    }
-}
-
-/// LEB128 varint read; advances `cursor`.
-fn read_varint(buf: &[u8], cursor: &mut usize) -> Option<u32> {
-    let mut v: u32 = 0;
-    let mut shift = 0u32;
-    loop {
-        let byte = *buf.get(*cursor)?;
-        *cursor += 1;
-        v |= ((byte & 0x7F) as u32) << shift;
-        if byte & 0x80 == 0 {
-            return Some(v);
-        }
-        shift += 7;
-        if shift >= 35 {
-            return None;
-        }
-    }
-}
-
 /// Error-bounded cuSZp-like compressor with absolute bound `eb`.
+///
+/// The canonical `{Lorenzo1D, Prequant, Bitpack}` composition of the
+/// staged pipeline ([`CodecSpec::cuszp`]): the prequant + Lorenzo
+/// stages are the shared functions in [`super::codec`], so this stream
+/// format stays byte-for-byte what it always was while every other
+/// composition reuses the same arithmetic.
 #[derive(Debug, Clone, Copy)]
 pub struct CuszpLike {
     eb: f64,
@@ -96,43 +74,21 @@ impl CuszpLike {
     /// packed width small on smooth data whose absolute magnitude is
     /// large — the common case for wavefields.
     fn encode_block(&self, block: &[f32], widths: &mut Vec<u8>, payload: &mut Vec<u8>) {
-        // Multiply by the reciprocal instead of dividing: measurably
-        // faster and bit-identical to the Pallas kernel's arithmetic.
-        let inv_two_eb = 1.0 / (2.0 * self.eb);
-        let inv_f32 = inv_two_eb as f32;
-        // Prequantize; detect overflow → raw fallback.
-        let mut deltas = [0u32; BLOCK];
-        let mut base = 0u32;
-        let mut prev: i64 = 0;
-        let mut maxw = 0u32;
-        let mut overflow = false;
-        for (i, &x) in block.iter().enumerate() {
-            // f32 fast path (exact for |q| < 2^23, the overwhelmingly
-            // common case); recompute in f64 near the edge, and treat
-            // non-finite inputs / i32 overflow as raw-block triggers.
-            let qf = (x * inv_f32).round();
-            let q: i64 = if qf.abs() < 8_388_608.0 {
-                qf as i64
-            } else {
-                let qd = (x as f64 * inv_two_eb).round();
-                if !qd.is_finite() || qd.abs() > i32::MAX as f64 / 2.0 {
-                    overflow = true;
-                    break;
+        // Stages 1+2 (prequant + Lorenzo) are the shared pipeline
+        // functions; `None` means quantization overflowed.
+        let symbols = match prequant_symbols(block, self.eb, true) {
+            Some(s) => s,
+            None => {
+                // Verbatim block: lossless f32 storage.
+                widths.push(RAW_BLOCK);
+                for &x in block {
+                    payload.extend_from_slice(&x.to_le_bytes());
                 }
-                qd as i64
-            };
-            let d = q - prev;
-            prev = q;
-            let z = zigzag(d as i32);
-            if i == 0 {
-                base = z;
-            } else {
-                deltas[i] = z;
-                maxw = maxw.max(bit_width(z));
+                return;
             }
-        }
-        if overflow || maxw > 28 {
-            // Verbatim block: lossless f32 storage.
+        };
+        let maxw = symbols[1..].iter().map(|&z| bit_width(z)).max().unwrap_or(0);
+        if maxw > 28 {
             widths.push(RAW_BLOCK);
             for &x in block {
                 payload.extend_from_slice(&x.to_le_bytes());
@@ -140,9 +96,9 @@ impl CuszpLike {
             return;
         }
         widths.push(maxw as u8);
-        write_varint(payload, base);
+        write_varint(payload, symbols[0]);
         if maxw > 0 && block.len() > 1 {
-            pack_fixed_into(&deltas[1..block.len()], maxw, payload);
+            pack_fixed_into(&symbols[1..], maxw, payload);
         }
     }
 
@@ -173,26 +129,23 @@ impl CuszpLike {
         }
         let base = read_varint(payload, cursor)
             .ok_or_else(|| Error::compress("truncated block base"))?;
-        let mut q: i64 = unzigzag(base) as i64;
         let two_eb_f32 = two_eb as f32;
-        // f32 reconstruction is exact in the integer part for
-        // |q| < 2^24 (always true on the packed path: widths ≤ 28 and
-        // prequant guards the range) and ~1 ulp otherwise.
-        out.push(q as f32 * two_eb_f32);
         let rest = count - 1;
         if width == 0 {
             // All remaining deltas are zero: constant block.
-            let v = q as f32 * two_eb_f32;
+            let v = unzigzag(base) as i64 as f32 * two_eb_f32;
+            out.push(v);
             out.extend(std::iter::repeat(v).take(rest));
             return Ok(());
         }
         scratch.clear();
         let nbytes = unpack_fixed_into(&payload[*cursor..], rest, width, scratch)
             .ok_or_else(|| Error::compress("truncated packed block"))?;
-        for &z in scratch.iter() {
-            q += unzigzag(z) as i64;
-            out.push(q as f32 * two_eb_f32);
-        }
+        // Stage inverses are shared with the pipeline: f32
+        // reconstruction is exact in the integer part for |q| < 2^24
+        // (always true on the packed path: widths ≤ 28 and prequant
+        // guards the range) and ~1 ulp otherwise.
+        prequant_accumulate(base, scratch, true, two_eb_f32, out);
         *cursor += nbytes;
         Ok(())
     }
@@ -273,6 +226,10 @@ impl Compressor for CuszpLike {
         } else {
             None
         }
+    }
+
+    fn spec(&self) -> Option<CodecSpec> {
+        Some(CodecSpec::cuszp())
     }
 }
 

@@ -12,6 +12,7 @@
 use crate::error::{Error, Result};
 
 use super::bitpack::{pack_fixed, unpack_fixed, unzigzag, zigzag};
+use super::codec::{fixed_rate_dequantize, fixed_rate_quantize, CodecSpec};
 use super::Compressor;
 
 /// Values per block.
@@ -58,23 +59,13 @@ impl Compressor for FixedRate {
         // Max representable quantized magnitude.
         let qmax = ((1u64 << (self.rate - 1)) - 1) as f64;
         for block in data.chunks(BLOCK) {
-            let scale = block
-                .iter()
-                .map(|x| if x.is_finite() { x.abs() } else { 0.0 })
-                .fold(0.0f32, f32::max);
+            // The quantizer stage is shared with the staged pipeline
+            // (this struct is the canonical `{None, FixedRate, Bitpack}`
+            // composition — see [`CodecSpec::fixed_rate`]).
+            let (scale, codes) = fixed_rate_quantize(block, qmax);
             out.extend_from_slice(&scale.to_le_bytes());
-            let codes: Vec<u32> = block
-                .iter()
-                .map(|&x| {
-                    let v = if scale > 0.0 && x.is_finite() {
-                        ((x as f64 / scale as f64) * qmax).round() as i32
-                    } else {
-                        0
-                    };
-                    zigzag(v.clamp(-(qmax as i32), qmax as i32))
-                })
-                .collect();
-            out.extend_from_slice(&pack_fixed(&codes, self.rate));
+            let zz: Vec<u32> = codes.iter().map(|&v| zigzag(v)).collect();
+            out.extend_from_slice(&pack_fixed(&zz, self.rate));
         }
         out
     }
@@ -107,8 +98,7 @@ impl Compressor for FixedRate {
             let codes = unpack_fixed(packed, count, rate)
                 .ok_or_else(|| Error::compress("fixed-rate: bit underrun"))?;
             for z in codes {
-                let v = unzigzag(z) as f64 / qmax;
-                out.push((v * scale as f64) as f32);
+                out.push(fixed_rate_dequantize(unzigzag(z), qmax, scale));
             }
             remaining -= count;
         }
@@ -131,6 +121,10 @@ impl Compressor for FixedRate {
             size += self.block_bytes(rem);
         }
         Some(size)
+    }
+
+    fn spec(&self) -> Option<CodecSpec> {
+        Some(CodecSpec::fixed_rate(self.rate as u8))
     }
 }
 

@@ -1,6 +1,11 @@
-//! Lossy compressors.
+//! The compression layer: a staged codec pipeline.
 //!
-//! Two real compressors, matching the two families the paper contrasts:
+//! Every compressor here is a composition of three stages — predictor
+//! × quantizer × entropy/packing coder — identified by a
+//! [`codec::CodecSpec`] and built via [`codec::CodecSpec::build`] (see
+//! [`codec`] for the stage catalogue). Two canonical compositions keep
+//! their historical stream formats and named types, matching the two
+//! families the paper contrasts:
 //!
 //! * [`cuszp::CuszpLike`] — **error-bounded** (cuSZp-class): prequant +
 //!   integer 1D Lorenzo + per-block fixed-length bit packing. Output
@@ -12,15 +17,25 @@
 //!   (scales with block magnitude), which is exactly the accuracy
 //!   hazard the paper attributes to prior work.
 //!
-//! Both compress real bytes — compression ratios and accuracy results in
-//! the experiments are genuine, not modeled. Only GPU *timing* comes
-//! from the cost model ([`crate::gpu::KernelModel`]).
+//! Two more canonical compositions extend the family:
+//! [`codec::CodecSpec::lossless`] (zero distortion — the tier that
+//! turns "compression vetoed" workloads into wins) and
+//! [`codec::CodecSpec::rle_rice`] (an entropy-coded error-bounded
+//! pipeline: slower kernels, higher ratio). Streams are
+//! self-describing; [`codec::decode_any`] decodes any of them from the
+//! magic alone.
+//!
+//! All of them compress real bytes — compression ratios and accuracy
+//! results in the experiments are genuine, not modeled. Only GPU
+//! *timing* comes from the cost model ([`crate::gpu::KernelModel`]).
 
 pub mod bitpack;
+pub mod codec;
 pub mod cuszp;
 pub mod fixed_rate;
 pub mod profile;
 
+pub use codec::{decode_any, CodecSpec, CoderKind, PredictorKind, QuantizerKind};
 pub use cuszp::CuszpLike;
 pub use fixed_rate::FixedRate;
 pub use profile::CompressionProfile;
@@ -56,6 +71,14 @@ pub trait Compressor: Send + Sync {
     /// (fixed-rate) or `eb` is not a usable bound.
     fn rebound(&self, eb: f64) -> Option<std::sync::Arc<dyn Compressor>> {
         let _ = eb;
+        None
+    }
+
+    /// The staged-pipeline identity of this compressor, when it is one
+    /// of the built-in codec compositions ([`CodecSpec::build`]).
+    /// `None` for custom implementations — per-leg codec rebinding
+    /// then falls back to [`Compressor::rebound`].
+    fn spec(&self) -> Option<CodecSpec> {
         None
     }
 }

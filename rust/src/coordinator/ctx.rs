@@ -11,7 +11,7 @@
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
-use crate::compress::{CompressionProfile, Compressor};
+use crate::compress::{decode_any, CompressionProfile, Compressor};
 use crate::error::Result;
 use crate::gpu::{GpuDevice, StreamId};
 use crate::net::{FabricSlice, Topology};
@@ -213,6 +213,21 @@ pub struct LegError {
     pub samples: usize,
 }
 
+/// A typed warning raised while binding one execution-plan leg: the
+/// plan asked for something the configured compressor could not honor
+/// (a declined [`Compressor::rebound`], an unbuildable per-leg codec),
+/// and the leg fell back to the ambient compressor instead. Previously
+/// these declines were silent — the leg simply ran at the wrong bound
+/// with no trace in the report. The [`crate::comm::Communicator`]
+/// deduplicates them across ranks into its `CollectiveReport`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LegWarning {
+    /// Leg index in the dispatched [`crate::topo::ExecPlan`].
+    pub leg: usize,
+    /// What could not be honored, and what ran instead.
+    pub message: String,
+}
+
 /// Per-rank execution context handed to a collective algorithm.
 pub struct RankCtx {
     rank: usize,
@@ -234,6 +249,8 @@ pub struct RankCtx {
     leg_compressor: Option<Arc<dyn Compressor>>,
     /// Per-leg observed compression errors accumulated this run.
     leg_errors: Vec<LegError>,
+    /// Typed per-leg binding warnings accumulated this run.
+    leg_warnings: Vec<LegWarning>,
 }
 
 impl RankCtx {
@@ -262,6 +279,7 @@ impl RankCtx {
             active_leg: None,
             leg_compressor: None,
             leg_errors: Vec::new(),
+            leg_warnings: Vec::new(),
         }
     }
 
@@ -314,18 +332,67 @@ impl RankCtx {
     }
 
     /// Enter leg `leg` of the active execution plan: subsequent
-    /// compress calls run at the leg's own bound
-    /// ([`LegExec::bounded_eb`]) instead of the cluster's ambient one,
-    /// and their observed quantization error is recorded under the
-    /// leg's index (see [`RankCtx::leg_errors`]). The rebound
-    /// compressor is resolved once here, not per kernel — and not at
-    /// all when the leg's bound already equals the ambient one.
+    /// compress calls run the leg's own codec and bound instead of the
+    /// cluster's ambient ones, and their observed quantization error is
+    /// recorded under the leg's index (see [`RankCtx::leg_errors`]).
+    /// The leg compressor is resolved once here, not per kernel, in
+    /// three steps: an explicitly tuned codec
+    /// ([`LegExec::codec_overridden`]) rebuilds the staged pipeline at
+    /// the leg's bound; otherwise a differing bound rebinds the ambient
+    /// compressor; otherwise the ambient compressor runs as-is. A
+    /// decline anywhere (unbuildable codec, refused rebind) raises a
+    /// typed [`LegWarning`] instead of silently running the wrong
+    /// configuration.
     pub fn begin_leg(&mut self, leg: usize, exec: LegExec) {
         self.active_leg = Some((leg, exec));
         self.leg_compressor = None;
-        if let (Some(base), Some(eb)) = (&self.compressor, exec.bounded_eb()) {
+        let Some(base) = self.compressor.clone() else {
+            return;
+        };
+        if exec.codec_overridden() {
+            match base.spec() {
+                // Already the requested pipeline: only the bound below.
+                Some(s) if s == exec.codec => {}
+                Some(_) => match exec.codec.build(exec.eb) {
+                    Some(c) => {
+                        self.leg_compressor = Some(c);
+                        return;
+                    }
+                    None => self.warn(
+                        leg,
+                        format!(
+                            "per-leg codec '{}' unbuildable at eb {:e}; \
+                             leg falls back to the ambient compressor",
+                            exec.codec.label(),
+                            exec.eb
+                        ),
+                    ),
+                },
+                None => self.warn(
+                    leg,
+                    format!(
+                        "per-leg codec '{}' ignored: ambient compressor '{}' \
+                         is not a staged codec",
+                        exec.codec.label(),
+                        base.name()
+                    ),
+                ),
+            }
+        }
+        if let Some(eb) = exec.bounded_eb() {
             if base.error_bound() != Some(eb) {
-                self.leg_compressor = base.rebound(eb);
+                match base.rebound(eb) {
+                    Some(c) => self.leg_compressor = Some(c),
+                    None => self.warn(
+                        leg,
+                        format!(
+                            "compressor '{}' declined rebinding to eb {:e}; \
+                             leg runs at its ambient bound",
+                            base.name(),
+                            eb
+                        ),
+                    ),
+                }
             }
         }
     }
@@ -341,6 +408,27 @@ impl RankCtx {
     /// no execution plan was interpreted or every payload was virtual).
     pub fn leg_errors(&self) -> &[LegError] {
         &self.leg_errors
+    }
+
+    /// Typed per-leg binding warnings raised so far (deduplicated).
+    pub fn leg_warnings(&self) -> &[LegWarning] {
+        &self.leg_warnings
+    }
+
+    /// The staged-pipeline identity of the ambient compressor, when it
+    /// is a built-in codec composition.
+    pub fn compressor_spec(&self) -> Option<crate::compress::CodecSpec> {
+        self.compressor.as_ref().and_then(|c| c.spec())
+    }
+
+    fn warn(&mut self, leg: usize, message: String) {
+        let dup = self
+            .leg_warnings
+            .iter()
+            .any(|w| w.leg == leg && w.message == message);
+        if !dup {
+            self.leg_warnings.push(LegWarning { leg, message });
+        }
     }
 
     /// The compressor the next kernel runs: the per-leg rebound one
@@ -545,11 +633,20 @@ impl RankCtx {
         let m = *self.gpu.model();
         let out = match c {
             CompBuf::Real(stream) => {
-                let comp = self.compressor.as_ref().expect("no compressor");
-                DeviceBuf::Real(
-                    comp.decompress(stream)
-                        .expect("decompress failed on a stream we produced"),
-                )
+                // Streams are self-describing: with per-leg codecs a
+                // received stream may be a different composition than
+                // the ambient compressor, so dispatch on its magic
+                // first; unknown formats (custom compressors) fall
+                // back to the configured implementation.
+                let data = match decode_any(stream) {
+                    Ok(v) => v,
+                    Err(_) => {
+                        let comp = self.compressor.as_ref().expect("no compressor");
+                        comp.decompress(stream)
+                            .expect("decompress failed on a stream we produced")
+                    }
+                };
+                DeviceBuf::Real(data)
             }
             CompBuf::Virtual { elems, .. } => DeviceBuf::Virtual(*elems),
         };
@@ -861,6 +958,60 @@ mod tests {
         let ctx = mk_ctx(ExecPolicy::gzccl());
         assert_eq!(ctx.topology().ranks(), 2);
         assert_eq!(ctx.topology().gpus_per_node(), 2);
+    }
+
+    #[test]
+    fn per_leg_codec_override_binds_and_decodes() {
+        use crate::compress::CodecSpec;
+        let mut ctx = mk_ctx(ExecPolicy::gzccl());
+        let data: Vec<f32> = (0..500).map(|i| (i as f32 * 0.02).cos()).collect();
+        ctx.begin_leg(1, LegExec::with_codec(CodecSpec::lossless(), 0.0));
+        let buf = DeviceBuf::Real(data.clone());
+        let (c, t) = ctx.compress(StreamId::Default, &buf, VirtTime::ZERO);
+        // Lossless leg: the stream decodes bit-exactly even though the
+        // ambient compressor is the error-bounded cuszp pipeline.
+        let (back, _) = ctx.decompress(StreamId::Default, &c, t);
+        for (a, b) in back.as_real().iter().zip(data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        ctx.end_leg();
+        assert!(ctx.leg_warnings().is_empty());
+        let le = ctx.leg_errors().iter().find(|l| l.leg == 1).unwrap();
+        assert_eq!(le.observed_max_err, 0.0);
+    }
+
+    #[test]
+    fn declined_rebind_raises_a_typed_warning() {
+        // FixedRate has no per-call bound to rebind; an error-bounded
+        // leg directive against it used to silently run the ambient
+        // rate with no trace in the report.
+        let topo = Topology::new(2, 2).unwrap();
+        let fabric = Fabric::default_cluster(topo);
+        let (senders, mut boxes) = super::super::mailbox::build_mesh(2);
+        let mut ctx = RankCtx::new(
+            0,
+            2,
+            ExecPolicy::cprp2p(),
+            GpuDevice::new(GpuModel::a100(), 2),
+            FabricSlice::whole(fabric),
+            Port::Channel {
+                senders: senders[0].clone(),
+                mailbox: boxes.remove(0),
+            },
+            Some(Arc::new(crate::compress::FixedRate::new(8))),
+            CompressionProfile::fixed(4.0),
+        );
+        let exec = LegExec {
+            compression: CompressionMode::ErrorBounded,
+            codec: LegExec::default_codec(CompressionMode::ErrorBounded),
+            eb: 1e-3,
+        };
+        ctx.begin_leg(0, exec);
+        assert_eq!(ctx.leg_warnings().len(), 1);
+        assert!(ctx.leg_warnings()[0].message.contains("declined"));
+        // Re-entering the same leg does not duplicate the warning.
+        ctx.begin_leg(0, exec);
+        assert_eq!(ctx.leg_warnings().len(), 1);
     }
 
     #[test]

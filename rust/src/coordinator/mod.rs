@@ -20,7 +20,7 @@ pub mod runner;
 
 pub use buffer::{CompBuf, DeviceBuf};
 pub use ctx::{
-    CompressionMode, ExecPolicy, LegError, OpCounters, RankCtx, LEG_PROBE_MAX_ELEMS,
+    CompressionMode, ExecPolicy, LegError, LegWarning, OpCounters, RankCtx, LEG_PROBE_MAX_ELEMS,
 };
 pub use mailbox::{Msg, Payload};
 pub use program::{ProgFut, Program, RankProgram};

@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use crate::compress::{CompressionProfile, Compressor, CuszpLike, FixedRate};
+use crate::compress::{CodecSpec, CompressionProfile, Compressor, CuszpLike, FixedRate};
 use crate::error::{Error, Result};
 use crate::gpu::{GpuDevice, GpuModel};
 use crate::net::{default_uplinks, Fabric, FabricSlice, LinkModel, Topology};
@@ -27,7 +27,7 @@ use crate::sim::{Breakdown, VirtTime};
 use crate::topo::TierTree;
 
 use super::buffer::DeviceBuf;
-use super::ctx::{CompressionMode, ExecPolicy, LegError, OpCounters, Port, RankCtx};
+use super::ctx::{CompressionMode, ExecPolicy, LegError, LegWarning, OpCounters, Port, RankCtx};
 use super::mailbox::{build_mesh, Mailbox};
 use super::program::{block_on, Program};
 
@@ -73,6 +73,10 @@ pub struct ClusterSpec {
     pub error_bound: f64,
     /// Bits/value for the fixed-rate compressor (CPRP2P).
     pub fixed_rate_bits: u32,
+    /// Ambient staged codec. `None` keeps the mode's canonical
+    /// compressor (cuSZp-like for error-bounded, fixed-rate for CPRP2P);
+    /// `Some` builds the staged pipeline at the spec's bound instead.
+    pub codec: Option<CodecSpec>,
     /// Size profile for virtual-payload runs.
     pub profile: CompressionProfile,
     /// Non-default streams created per rank.
@@ -103,6 +107,7 @@ impl ClusterSpec {
             policy,
             error_bound: 1e-4,
             fixed_rate_bits: 8,
+            codec: None,
             profile: CompressionProfile::fixed(25.0),
             streams_per_rank: 4,
             backend: ExecBackend::default(),
@@ -145,6 +150,12 @@ impl ClusterSpec {
         self
     }
 
+    /// Override the ambient staged codec.
+    pub fn with_codec(mut self, codec: CodecSpec) -> Self {
+        self.codec = Some(codec);
+        self
+    }
+
     /// Override the size profile (virtual runs).
     pub fn with_profile(mut self, p: CompressionProfile) -> Self {
         self.profile = p;
@@ -158,6 +169,11 @@ impl ClusterSpec {
     }
 
     pub(crate) fn make_compressor(&self) -> Option<Arc<dyn Compressor>> {
+        if self.policy.compression != CompressionMode::None {
+            if let Some(built) = self.codec.and_then(|spec| spec.build(self.error_bound)) {
+                return Some(built);
+            }
+        }
         match self.policy.compression {
             CompressionMode::None => None,
             CompressionMode::ErrorBounded => Some(Arc::new(CuszpLike::new(self.error_bound))),
@@ -181,6 +197,9 @@ pub struct RunReport {
     /// deviation per leg, summed sample counts). Empty unless the
     /// program interpreted an execution plan over real payloads.
     pub leg_errors: Vec<LegError>,
+    /// Per-leg execution warnings (declined rebinds, unbuildable codec
+    /// overrides), deduplicated across ranks by leg and message.
+    pub leg_warnings: Vec<LegWarning>,
 }
 
 impl RunReport {
@@ -206,20 +225,29 @@ impl RunReport {
 }
 
 /// What one rank's execution produces, on either backend.
-pub(crate) type RankOutcome = (DeviceBuf, VirtTime, Breakdown, OpCounters, Vec<LegError>);
+pub(crate) type RankOutcome = (
+    DeviceBuf,
+    VirtTime,
+    Breakdown,
+    OpCounters,
+    Vec<LegError>,
+    Vec<LegWarning>,
+);
 
 /// Fold per-rank outcomes (in rank order) into a [`RunReport`]: the
 /// first rank error wins, makespan is the join of completions, leg
-/// errors merge by max deviation / summed samples.
+/// errors merge by max deviation / summed samples, warnings dedupe by
+/// leg and message.
 pub(crate) fn merge_outcomes(results: Vec<Result<RankOutcome>>) -> Result<RunReport> {
     let n = results.len();
     let mut outputs = Vec::with_capacity(n);
     let mut breakdowns = Vec::with_capacity(n);
     let mut counters = Vec::with_capacity(n);
     let mut leg_errors: Vec<LegError> = Vec::new();
+    let mut leg_warnings: Vec<LegWarning> = Vec::new();
     let mut makespan = VirtTime::ZERO;
     for r in results {
-        let (out, finish, bd, ct, legs) = r?;
+        let (out, finish, bd, ct, legs, warns) = r?;
         outputs.push(out);
         makespan = makespan.join(finish);
         breakdowns.push(bd);
@@ -233,14 +261,21 @@ pub(crate) fn merge_outcomes(results: Vec<Result<RankOutcome>>) -> Result<RunRep
                 None => leg_errors.push(le),
             }
         }
+        for w in warns {
+            if !leg_warnings.contains(&w) {
+                leg_warnings.push(w);
+            }
+        }
     }
     leg_errors.sort_by_key(|l| l.leg);
+    leg_warnings.sort_by(|a, b| (a.leg, &a.message).cmp(&(b.leg, &b.message)));
     Ok(RunReport {
         outputs,
         makespan,
         breakdowns,
         counters,
         leg_errors,
+        leg_warnings,
     })
 }
 
@@ -331,7 +366,8 @@ fn run_threads<P: Program + ?Sized>(
                     let out = block_on(program.run(&mut ctx, input))?;
                     let finish = ctx.finish();
                     let legs = ctx.leg_errors().to_vec();
-                    Ok((out, finish, ctx.breakdown(), ctx.counters(), legs))
+                    let warns = ctx.leg_warnings().to_vec();
+                    Ok((out, finish, ctx.breakdown(), ctx.counters(), legs, warns))
                 }),
             ));
         }

@@ -164,7 +164,8 @@ pub(crate) fn spawn_actor<'p, P: Program + ?Sized>(
         let out = program.run(&mut ctx, input).await?;
         let finish = ctx.finish();
         let legs = ctx.leg_errors().to_vec();
-        Ok((out, finish, ctx.breakdown(), ctx.counters(), legs))
+        let warns = ctx.leg_warnings().to_vec();
+        Ok((out, finish, ctx.breakdown(), ctx.counters(), legs, warns))
     })
 }
 

@@ -67,6 +67,20 @@ impl KernelModel {
         u / (1.0 - u) * (self.launch * self.beta + self.n0)
     }
 
+    /// This kernel's cost scaled by `f` (launch down, throughput up by
+    /// the same factor, fixed-work equivalent unchanged): a pipeline
+    /// stage responsible for a share `f` of the whole kernel's time at
+    /// every size. `time(n)` of the scaled model is exactly
+    /// `f · time(n)` of the original.
+    pub fn scaled(&self, f: f64) -> KernelModel {
+        assert!(f > 0.0, "stage share must be positive");
+        KernelModel {
+            launch: self.launch * f,
+            n0: self.n0,
+            beta: self.beta / f,
+        }
+    }
+
     /// Effective utilization of a kernel at size `bytes`: ratio of
     /// streaming-rate time to actual time. 1.0 = fully saturated.
     pub fn utilization(&self, bytes: usize) -> f64 {
@@ -142,6 +156,29 @@ impl GpuModel {
     pub fn saturation_knee_bytes(&self) -> f64 {
         // Utilization 0.5 ⇒ n = launch·β + n0.
         self.compress.bytes_at_utilization(0.5)
+    }
+
+    /// Shares of the canonical compression pipeline's kernel time
+    /// attributed to its `[predictor, quantizer, coder]` stages. The
+    /// coder (bit packing with its shared-memory shuffle) dominates;
+    /// prediction is a cheap neighboring-element subtract. The codec
+    /// cost model scales each share by the composed stage's relative
+    /// cost (see `CostModel::codec_kernel_factor`), and the per-stage
+    /// throughput bench reports columns on the same split.
+    pub fn stage_split() -> [f64; 3] {
+        [0.2, 0.3, 0.5]
+    }
+
+    /// Per-stage kernel models of the compression pipeline: `compress`
+    /// sliced by [`GpuModel::stage_split`], each stage keeping the full
+    /// fixed-work floor profile at its share of launch and throughput.
+    pub fn compress_stages(&self) -> [KernelModel; 3] {
+        Self::stage_split().map(|f| self.compress.scaled(f))
+    }
+
+    /// Per-stage kernel models of the decompression pipeline.
+    pub fn decompress_stages(&self) -> [KernelModel; 3] {
+        Self::stage_split().map(|f| self.decompress.scaled(f))
     }
 }
 
@@ -231,6 +268,19 @@ mod tests {
         // The 50% point is exactly the saturation knee.
         let g = GpuModel::a100();
         assert!((g.compress.bytes_at_utilization(0.5) - g.saturation_knee_bytes()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stage_split_partitions_the_kernel_time() {
+        let g = GpuModel::a100();
+        let split: f64 = GpuModel::stage_split().iter().sum();
+        assert_eq!(split, 1.0);
+        for n in [1usize << 10, 5 << 20, 646 << 20] {
+            let total: f64 = g.compress_stages().iter().map(|m| m.time(n)).sum();
+            assert!((total - g.compress.time(n)).abs() < 1e-9 * total, "n={n}");
+            let total: f64 = g.decompress_stages().iter().map(|m| m.time(n)).sum();
+            assert!((total - g.decompress.time(n)).abs() < 1e-9 * total, "n={n}");
+        }
     }
 
     #[test]

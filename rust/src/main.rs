@@ -3,9 +3,10 @@
 //!
 //! ```text
 //! gzccl run        [--config F] [--set k=v ...] [--op allreduce|scatter|...] [--size-mb N]
+//!                  [--codec cuszp|lossless|rle-rice|fixedN|p+q+c]
 //! gzccl experiment <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2|fig13|all>
-//! gzccl stack      [--ranks N] [--eb X]
-//! gzccl train      [--ranks N] [--steps N] [--no-compress]
+//! gzccl stack      [--ranks N] [--eb X] [--codec C]
+//! gzccl train      [--ranks N] [--steps N] [--no-compress] [--codec C]
 //! gzccl characterize
 //! ```
 
@@ -13,12 +14,13 @@ use gzccl::apps::ddp::{train_ddp, DdpConfig};
 use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingTarget, StackingVariant};
 use gzccl::collectives::Algo;
 use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator};
+use gzccl::compress::CodecSpec;
 use gzccl::config::ClusterConfig;
-use gzccl::coordinator::{DeviceBuf, ExecBackend};
+use gzccl::coordinator::{CompressionMode, DeviceBuf, ExecBackend};
 use gzccl::error::{Error, Result};
 use gzccl::experiments as exp;
 use gzccl::runtime::Engine;
-use gzccl::topo::TierTree;
+use gzccl::topo::{LegExec, TierTree};
 
 /// Tiny argument cursor: flags with values, collected overrides.
 struct Args {
@@ -76,6 +78,12 @@ gZCCL — compression-accelerated collective communication (paper reproduction)
 USAGE:
   gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
                     [--gpus-per-node G] [--tiers WxWx...]
+                    [--codec C]             pin every compressed leg to one
+                        staged codec pipeline instead of the canonical
+                        compressor (and the tuner's per-leg picks).
+                        C: cuszp | lossless | rle-rice | fixedN (N bits)
+                        | predictor+quantizer+coder, e.g.
+                        lorenzo+prequant+rice (see CodecSpec::parse)
                     [--backend threads|events]
                     --backend events (default): single-threaded
                         event-driven engine, scales to 10^4-10^5 ranks;
@@ -104,6 +112,8 @@ USAGE:
                                             observed headroom relaxes the
                                             next call's planned eb (needs
                                             --accuracy-target)
+                    [--codec C]             staged codec for the compressed
+                                            variants (see `gzccl run`)
   gzccl train       [--ranks N] [--steps N] [--no-compress]
                     [--accuracy-target X]   X: absolute L-inf budget on
                                             the summed gradients across
@@ -112,6 +122,8 @@ USAGE:
                                             telemetry headroom across
                                             training steps (needs
                                             --accuracy-target)
+                    [--codec C]             staged codec for gradient
+                                            compression (see `gzccl run`)
   gzccl characterize
   gzccl help
 ";
@@ -171,6 +183,13 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
         .transpose()?;
     let tiers = args.take("--tiers");
+    let codec = args
+        .take("--codec")
+        .map(|s| {
+            CodecSpec::parse(&s)
+                .ok_or_else(|| Error::config(format!("bad --codec `{s}` (see `gzccl help`)")))
+        })
+        .transpose()?;
     let backend = match args.take("--backend").as_deref() {
         None => None,
         Some("threads") => Some(ExecBackend::Threads),
@@ -192,6 +211,18 @@ fn cmd_run(mut args: Args) -> Result<()> {
     }
     if let Some(b) = backend {
         spec.backend = b;
+    }
+    if let Some(c) = codec {
+        if spec.policy.compression == CompressionMode::None {
+            return Err(Error::config(
+                "--codec needs a compressed variant (the uncompressed policy never compresses)",
+            ));
+        }
+        // The compression family follows the codec: a fixed-rate
+        // quantizer runs under the CPRP2P mode, everything else under
+        // the error-bounded mode.
+        spec.policy.compression = LegExec::mode_for(c);
+        spec.codec = Some(c);
     }
     let exec_backend = spec.backend;
     let comm = Communicator::from_spec(spec);
@@ -249,16 +280,16 @@ fn cmd_run(mut args: Args) -> Result<()> {
     // compressed, the bound its compressor was held to, and (real
     // payloads) the observed per-leg error proving the bound held.
     println!(
-        "  exec plan        : leg  tier  kind               mode          eb         obs |err|"
+        "  exec plan        : leg  tier  kind               mode          codec      eb         obs |err|"
     );
     for l in &report.legs {
         let kind = match l.kind {
             Some(k) => format!("{k:?}"),
             None => "WholeCollective".into(),
         };
-        let eb = match l.exec.compression {
-            gzccl::coordinator::CompressionMode::None => "-".into(),
-            _ => format!("{:.3e}", l.exec.eb),
+        let (codec, eb) = match l.exec.compression {
+            CompressionMode::None => ("-".into(), "-".into()),
+            _ => (l.exec.codec.label(), format!("{:.3e}", l.exec.eb)),
         };
         let obs = match l.observed_max_err {
             Some(o) => format!("{o:.3e}"),
@@ -266,9 +297,14 @@ fn cmd_run(mut args: Args) -> Result<()> {
         };
         let mode = format!("{:?}", l.exec.compression);
         println!(
-            "                     {:<4} {:<5} {kind:<18} {mode:<13} {eb:<10} {obs}",
+            "                     {:<4} {:<5} {kind:<18} {mode:<13} {codec:<10} {eb:<10} {obs}",
             l.leg, l.tier
         );
+    }
+    // Directives the ranks could not honor verbatim (e.g. a rebind the
+    // ambient compressor declined) — deduplicated across ranks.
+    for w in &report.leg_warnings {
+        println!("  leg warning      : leg {}: {}", w.leg, w.message);
     }
     println!("  virtual makespan : {}", report.makespan);
     println!("  wire bytes       : {}", report.total_wire_bytes());
@@ -354,6 +390,13 @@ fn cmd_stack(mut args: Args) -> Result<()> {
             "--adaptive needs --accuracy-target (adaptation is bounded by the certified budget)",
         ));
     }
+    let codec = args
+        .take("--codec")
+        .map(|s| {
+            CodecSpec::parse(&s)
+                .ok_or_else(|| Error::config(format!("bad --codec `{s}` (see `gzccl help`)")))
+        })
+        .transpose()?;
     let engine = Engine::discover().ok();
     let cfg = StackingConfig {
         ranks,
@@ -361,6 +404,7 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         error_bound: eb,
         accuracy_target,
         adaptive,
+        codec,
         ..Default::default()
     };
     for v in [
@@ -436,6 +480,16 @@ fn cmd_train(mut args: Args) -> Result<()> {
             "--adaptive needs --accuracy-target (adaptation is bounded by the certified budget)",
         ));
     }
+    let codec = args
+        .take("--codec")
+        .map(|s| {
+            CodecSpec::parse(&s)
+                .ok_or_else(|| Error::config(format!("bad --codec `{s}` (see `gzccl help`)")))
+        })
+        .transpose()?;
+    if codec.is_some() && !compress {
+        return Err(Error::config("--codec conflicts with --no-compress"));
+    }
     let engine = Engine::discover()?;
     let cfg = DdpConfig {
         ranks,
@@ -443,6 +497,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
         compress,
         accuracy_target,
         adaptive,
+        codec,
         ..Default::default()
     };
     let out = train_ddp(&cfg, &engine)?;

@@ -33,30 +33,80 @@
 //! every leg clamped at the certified per-call budget.
 
 use crate::collectives::Op;
+use crate::compress::CodecSpec;
 use crate::coordinator::CompressionMode;
 
 use super::schedule::Schedule;
 
-/// How one leg of an [`ExecPlan`] compresses: the mode and the
-/// absolute error bound its compressor runs at.
+/// How one leg of an [`ExecPlan`] compresses: the mode, the staged
+/// codec pipeline, and the absolute error bound its compressor runs at.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LegExec {
     /// Compressor family on this leg (`None` = the leg ships raw
     /// payloads — e.g. the NVLink tier-0 legs).
     pub compression: CompressionMode,
+    /// The staged codec pipeline the leg runs
+    /// ([`crate::compress::CodecSpec`]). A placeholder on raw legs
+    /// (never built); on compressed legs it defaults to the canonical
+    /// codec of the mode and is overridden by per-leg tuning
+    /// ([`crate::topo::Leg::codec`]) or [`ExecPlan::with_codec`].
+    pub codec: CodecSpec,
     /// Absolute error bound for the leg's compressor. Ignored for raw
     /// legs; carried for reporting only under the fixed-rate mode
-    /// (whose error no bound can describe).
+    /// (whose error no bound can describe). Exactly `0.0` on lossless
+    /// legs — zero distortion is their guarantee.
     pub eb: f64,
 }
 
 impl LegExec {
-    /// A raw (lossless) leg.
+    /// A raw (uncompressed) leg.
     pub fn raw() -> Self {
         LegExec {
             compression: CompressionMode::None,
+            codec: CodecSpec::cuszp(),
             eb: 0.0,
         }
+    }
+
+    /// The canonical codec for a compression mode — what legs run when
+    /// nothing overrides them. The 8-bit fixed-rate default mirrors
+    /// `ClusterSpec::fixed_rate_bits`; executors treat a leg whose
+    /// codec equals this default as "use the ambient compressor", so
+    /// non-default ambient rates keep working unchanged.
+    pub fn default_codec(mode: CompressionMode) -> CodecSpec {
+        match mode {
+            CompressionMode::FixedRate => CodecSpec::fixed_rate(8),
+            _ => CodecSpec::cuszp(),
+        }
+    }
+
+    /// The compression mode a codec implies: fixed-rate quantizers map
+    /// to [`CompressionMode::FixedRate`]; everything else — including
+    /// the zero-distortion lossless tier — is
+    /// [`CompressionMode::ErrorBounded`].
+    pub fn mode_for(codec: CodecSpec) -> CompressionMode {
+        if codec.is_fixed_rate() {
+            CompressionMode::FixedRate
+        } else {
+            CompressionMode::ErrorBounded
+        }
+    }
+
+    /// A compressed leg running an explicit codec. Lossless codecs
+    /// carry a zero bound (their distortion is exactly zero).
+    pub fn with_codec(codec: CodecSpec, eb: f64) -> Self {
+        LegExec {
+            compression: Self::mode_for(codec),
+            codec,
+            eb: if codec.is_lossless() { 0.0 } else { eb },
+        }
+    }
+
+    /// Whether the codec was explicitly chosen (differs from the
+    /// mode's canonical default). Executors rebuild such a leg's
+    /// compressor from the codec instead of rebinding the ambient one.
+    pub fn codec_overridden(&self) -> bool {
+        self.compresses() && self.codec != Self::default_codec(self.compression)
     }
 
     /// Whether the leg compresses at all.
@@ -96,7 +146,11 @@ impl ExecPlan {
         ExecPlan {
             op,
             schedule: None,
-            legs: vec![LegExec { compression, eb }],
+            legs: vec![LegExec {
+                compression,
+                codec: LegExec::default_codec(compression),
+                eb,
+            }],
         }
     }
 
@@ -110,7 +164,19 @@ impl ExecPlan {
             .iter()
             .map(|l| {
                 if l.compressed && compression != CompressionMode::None {
-                    LegExec { compression, eb }
+                    match l.codec {
+                        // Per-leg codecs picked by the tuner apply only
+                        // to the error-bounded family they were tuned
+                        // for; a fixed-rate run keeps its own codec.
+                        Some(c) if compression == CompressionMode::ErrorBounded => {
+                            LegExec::with_codec(c, eb)
+                        }
+                        _ => LegExec {
+                            compression,
+                            codec: LegExec::default_codec(compression),
+                            eb,
+                        },
+                    }
                 } else {
                     LegExec::raw()
                 }
@@ -139,7 +205,16 @@ impl ExecPlan {
             .map(|l| {
                 if l.compressed && compression != CompressionMode::None {
                     let eb = tier_ebs.get(l.tier).copied().flatten().unwrap_or(fallback_eb);
-                    LegExec { compression, eb }
+                    match l.codec {
+                        Some(c) if compression == CompressionMode::ErrorBounded => {
+                            LegExec::with_codec(c, eb)
+                        }
+                        _ => LegExec {
+                            compression,
+                            codec: LegExec::default_codec(compression),
+                            eb,
+                        },
+                    }
                 } else {
                     LegExec::raw()
                 }
@@ -215,9 +290,34 @@ impl ExecPlan {
             .map(|l| match l.compression {
                 CompressionMode::ErrorBounded => LegExec {
                     compression: l.compression,
+                    codec: l.codec,
                     eb: (l.eb * factor).min(cap),
                 },
                 _ => *l,
+            })
+            .collect();
+        ExecPlan {
+            op: self.op,
+            schedule: self.schedule.clone(),
+            legs,
+        }
+    }
+
+    /// Every compressed leg re-pointed at `codec` — mode and bound
+    /// updated to match (lossless legs run at a zero bound, their
+    /// actual distortion). Raw legs stay raw. This is how an ambient
+    /// `--codec` choice or a bitwise-exact accuracy target overrides
+    /// whatever the tuner picked per leg.
+    pub fn with_codec(&self, codec: CodecSpec) -> ExecPlan {
+        let legs = self
+            .legs
+            .iter()
+            .map(|l| {
+                if l.compresses() {
+                    LegExec::with_codec(codec, l.eb)
+                } else {
+                    *l
+                }
             })
             .collect();
         ExecPlan {
@@ -279,6 +379,42 @@ mod tests {
         assert_eq!(raw.predicted_bound(), Some(0.0));
         // A fixed-rate leg has no bound at all.
         let fr = ExecPlan::uniform(sched(16, &[4, 4]), CompressionMode::FixedRate, 0.0);
+        assert_eq!(fr.predicted_bound(), None);
+    }
+
+    #[test]
+    fn default_codecs_follow_the_mode() {
+        let plan = ExecPlan::uniform(sched(512, &[4, 16, 8]), CompressionMode::ErrorBounded, 1e-3);
+        for l in plan.legs.iter().filter(|l| l.compresses()) {
+            assert_eq!(l.codec, CodecSpec::cuszp());
+            assert!(!l.codec_overridden());
+        }
+        let fr = ExecPlan::flat(Op::Allreduce, CompressionMode::FixedRate, 0.0);
+        assert_eq!(fr.legs[0].codec, CodecSpec::fixed_rate(8));
+        assert!(!fr.legs[0].codec_overridden());
+    }
+
+    #[test]
+    fn with_codec_overrides_compressed_legs_only() {
+        let plan = ExecPlan::uniform(sched(512, &[4, 16, 8]), CompressionMode::ErrorBounded, 1e-3);
+        let lossless = plan.with_codec(CodecSpec::lossless());
+        for (a, b) in plan.legs.iter().zip(&lossless.legs) {
+            if a.compresses() {
+                assert_eq!(b.codec, CodecSpec::lossless());
+                assert!(b.codec_overridden());
+                // Lossless legs carry the zero bound they honor.
+                assert_eq!(b.bounded_eb(), Some(0.0));
+            } else {
+                assert_eq!(a, b);
+            }
+        }
+        // Zero distortion on every leg ⇒ the plan predicts exact.
+        assert_eq!(lossless.predicted_bound(), Some(0.0));
+        // A fixed-rate override flips the mode and drops the bound.
+        let fr = plan.with_codec(CodecSpec::fixed_rate(12));
+        let ex = fr.legs.iter().find(|l| l.compresses()).unwrap();
+        assert_eq!(ex.compression, CompressionMode::FixedRate);
+        assert_eq!(ex.bounded_eb(), None);
         assert_eq!(fr.predicted_bound(), None);
     }
 

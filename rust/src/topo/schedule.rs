@@ -29,6 +29,7 @@
 //! invariant); every higher leg compresses when the policy does.
 
 use crate::collectives::Op;
+use crate::compress::{CodecSpec, CoderKind, PredictorKind, QuantizerKind};
 use crate::error::{Error, Result};
 use crate::gpu::GpuModel;
 use crate::net::LinkModel;
@@ -72,6 +73,11 @@ pub struct Leg {
     pub kind: LegKind,
     /// Whether payloads on this leg are compressed.
     pub compressed: bool,
+    /// The staged codec the cost model priced this leg at, when the
+    /// compiler chose one ([`compile_tuned`]'s per-leg codec pass).
+    /// `None` means "whatever the dispatching policy runs" — the
+    /// canonical error-bounded codec when pricing.
+    pub codec: Option<CodecSpec>,
 }
 
 /// A compiled hierarchical schedule: the grouping tree the legs refer
@@ -153,6 +159,7 @@ pub fn compile_min_error(op: Op, tree: &TierTree, compressed: bool) -> Result<Sc
                 _ => LegKind::ReduceToLeader,
             },
             compressed: tier_compressed(compressed, t),
+            codec: None,
         });
     }
     legs.push(Leg {
@@ -162,6 +169,7 @@ pub fn compile_min_error(op: Op, tree: &TierTree, compressed: bool) -> Result<Sc
             _ => LegKind::AllreduceRedoub,
         },
         compressed: tier_compressed(compressed, d - 1),
+        codec: None,
     });
     for t in (0..d - 1).rev() {
         legs.push(Leg {
@@ -171,6 +179,7 @@ pub fn compile_min_error(op: Op, tree: &TierTree, compressed: bool) -> Result<Sc
                 _ => LegKind::BcastFromLeader,
             },
             compressed: tier_compressed(compressed, t),
+            codec: None,
         });
     }
     Ok(Schedule {
@@ -184,7 +193,12 @@ pub fn compile_min_error(op: Op, tree: &TierTree, compressed: bool) -> Result<Sc
 /// ascent tier picks reduce-to-leader vs. in-group doubling, and the
 /// top tier picks doubling vs. ring, whichever the cost model prices
 /// cheaper at `msg_bytes` (the per-tier crossover). Ties go to the
-/// fewer-error alternative.
+/// fewer-error alternative. A second pass then picks each compressed
+/// leg's **codec**: the canonical bitpack pipeline vs. the
+/// entropy-coded [`CodecSpec::rle_rice`], which trades slower kernels
+/// for a denser wire format — it wins exactly where uplink contention
+/// makes serialization dominate, so one schedule can mix codecs
+/// across tiers.
 pub fn compile_tuned(
     op: Op,
     tree: &TierTree,
@@ -193,33 +207,55 @@ pub fn compile_tuned(
     cost: &CostModel,
 ) -> Result<Schedule> {
     let mut sched = compile_min_error(op, tree, compressed)?;
-    if op == Op::Allgather {
-        return Ok(sched); // gather/ring legs have no implemented alternative
-    }
     let d = tree.depth();
-    for (i, leg) in sched.legs.iter_mut().enumerate() {
-        let candidates: &[LegKind] = if leg.tier == d - 1 && i == d - 1 {
-            // The top collective leg.
-            &[LegKind::AllreduceRedoub, LegKind::AllreduceRing]
-        } else if i < d - 1 && leg.tier >= 1 {
-            // Middle ascent legs (tier-0 stays the raw NVLink fold).
-            &[LegKind::ReduceToLeader, LegKind::AllreduceRedoub]
-        } else {
-            continue;
-        };
-        let mut best = leg.kind;
-        let mut best_cost = leg_cost(leg, op, tree, tree, cost, msg_bytes);
-        for &k in candidates {
-            if k == leg.kind {
+    if op != Op::Allgather {
+        // Gather/ring legs have no implemented kind alternative.
+        for (i, leg) in sched.legs.iter_mut().enumerate() {
+            let candidates: &[LegKind] = if leg.tier == d - 1 && i == d - 1 {
+                // The top collective leg.
+                &[LegKind::AllreduceRedoub, LegKind::AllreduceRing]
+            } else if i < d - 1 && leg.tier >= 1 {
+                // Middle ascent legs (tier-0 stays the raw NVLink fold).
+                &[LegKind::ReduceToLeader, LegKind::AllreduceRedoub]
+            } else {
                 continue;
+            };
+            let mut best = leg.kind;
+            let mut best_cost = leg_cost(leg, op, tree, tree, cost, msg_bytes);
+            for &k in candidates {
+                if k == leg.kind {
+                    continue;
+                }
+                let c = leg_cost(&Leg { kind: k, ..*leg }, op, tree, tree, cost, msg_bytes);
+                if c < best_cost {
+                    best = k;
+                    best_cost = c;
+                }
             }
-            let c = leg_cost(&Leg { kind: k, ..*leg }, op, tree, tree, cost, msg_bytes);
-            if c < best_cost {
-                best = k;
-                best_cost = c;
+            leg.kind = best;
+        }
+    }
+    // Per-leg codec selection over the error-bounded family. Ties go
+    // to the canonical codec (iterated first, strict improvement
+    // required), so kernel-bound legs are untouched.
+    for leg in sched.legs.iter_mut() {
+        if !leg.compressed {
+            continue;
+        }
+        let mut best = CodecSpec::cuszp();
+        let mut best_cost = f64::INFINITY;
+        for c in [CodecSpec::cuszp(), CodecSpec::rle_rice()] {
+            let priced = Leg {
+                codec: Some(c),
+                ..*leg
+            };
+            let pc = leg_cost(&priced, op, tree, tree, cost, msg_bytes);
+            if pc < best_cost {
+                best = c;
+                best_cost = pc;
             }
         }
-        leg.kind = best;
+        leg.codec = Some(best);
     }
     Ok(sched)
 }
@@ -435,27 +471,87 @@ impl CostModel {
         self.links[t.min(self.links.len() - 1)]
     }
 
-    fn wire(&self, bytes: usize, compressed: bool) -> f64 {
-        if compressed {
-            bytes as f64 / self.cpr_ratio
-        } else {
-            bytes as f64
+    /// Effective wire ratio (raw/wire bytes) of a staged codec. The
+    /// canonical error-bounded codec answers `cpr_ratio` exactly;
+    /// other compositions scale it by their stage characteristics
+    /// (entropy coding denser, byteplane looser, lossless an absolute
+    /// ~1.9× independent of the lossy profile, fixed-rate its exact
+    /// arithmetic rate). Never below 1.
+    pub fn codec_ratio(&self, codec: CodecSpec) -> f64 {
+        if codec == CodecSpec::cuszp() {
+            return self.cpr_ratio;
+        }
+        let r = match codec.quantizer {
+            QuantizerKind::Lossless => {
+                let coder = match codec.coder {
+                    CoderKind::Bitpack => 0.8,
+                    CoderKind::Byteplane => 1.0,
+                    CoderKind::RleRice => 1.1,
+                };
+                1.9 * coder
+            }
+            // 32-bit values → 4 + 32·bits/8 bytes per 32-value block.
+            QuantizerKind::FixedRate(bits) => 32.0 / (bits as f64 + 1.0),
+            QuantizerKind::Prequant => {
+                let coder = match codec.coder {
+                    CoderKind::Bitpack => 1.0,
+                    CoderKind::Byteplane => 0.8,
+                    CoderKind::RleRice => 1.35,
+                };
+                let pred = match codec.predictor {
+                    PredictorKind::Lorenzo1D => 1.0,
+                    PredictorKind::None => 0.6,
+                };
+                self.cpr_ratio * coder * pred
+            }
+        };
+        r.max(1.0)
+    }
+
+    /// Relative kernel-time factor of a codec against the canonical
+    /// pipeline, summed from the per-stage shares of
+    /// [`GpuModel::stage_split`] (predictor/quantizer/coder). Exactly
+    /// `1.0` for the canonical codec, so pinned estimates are
+    /// untouched; the Rice coder stage runs ~1.6× the bitpack stage.
+    pub fn codec_kernel_factor(codec: CodecSpec) -> f64 {
+        if codec == CodecSpec::cuszp() {
+            return 1.0;
+        }
+        let [fp, fq, fc] = GpuModel::stage_split();
+        let pred = match codec.predictor {
+            PredictorKind::Lorenzo1D => fp,
+            PredictorKind::None => 0.25 * fp,
+        };
+        let quant = match codec.quantizer {
+            QuantizerKind::Prequant | QuantizerKind::FixedRate(_) => fq,
+            QuantizerKind::Lossless => 0.5 * fq,
+        };
+        let coder_scale = match codec.coder {
+            CoderKind::Bitpack => 1.0,
+            CoderKind::Byteplane => 0.8,
+            CoderKind::RleRice => 1.6,
+        };
+        pred + quant + fc * coder_scale
+    }
+
+    fn wire(&self, bytes: usize, codec: Option<CodecSpec>) -> f64 {
+        match codec {
+            Some(c) => bytes as f64 / self.codec_ratio(c),
+            None => bytes as f64,
         }
     }
 
-    fn comp(&self, bytes: usize, compressed: bool) -> f64 {
-        if compressed {
-            self.gpu.compress.time(bytes)
-        } else {
-            0.0
+    fn comp(&self, bytes: usize, codec: Option<CodecSpec>) -> f64 {
+        match codec {
+            Some(c) => self.gpu.compress.time(bytes) * Self::codec_kernel_factor(c),
+            None => 0.0,
         }
     }
 
-    fn dec(&self, bytes: usize, compressed: bool) -> f64 {
-        if compressed {
-            self.gpu.decompress.time(bytes)
-        } else {
-            0.0
+    fn dec(&self, bytes: usize, codec: Option<CodecSpec>) -> f64 {
+        match codec {
+            Some(c) => self.gpu.decompress.time(bytes) * Self::codec_kernel_factor(c),
+            None => 0.0,
         }
     }
 
@@ -502,13 +598,13 @@ fn redoub_cost(
     g: usize,
     pspan: usize,
     bytes: usize,
-    compressed: bool,
+    codec: Option<CodecSpec>,
 ) -> f64 {
     if g <= 1 {
         return 0.0;
     }
-    let wire = cost.wire(bytes, compressed);
-    let kernels = cost.comp(bytes, compressed) + cost.dec(bytes, compressed) + cost.red(bytes);
+    let wire = cost.wire(bytes, codec);
+    let kernels = cost.comp(bytes, codec) + cost.dec(bytes, codec) + cost.red(bytes);
     let pof2 = 1usize << (usize::BITS - 1 - g.leading_zeros()) as usize;
     let logp = pof2.trailing_zeros() as usize;
     let mut total = 0.0;
@@ -535,6 +631,13 @@ fn leg_cost(
     if g <= 1 {
         return 0.0;
     }
+    // The codec the leg is priced at: its tuned codec, the canonical
+    // error-bounded pipeline otherwise; raw legs have none.
+    let codec = if leg.compressed {
+        Some(leg.codec.unwrap_or_else(CodecSpec::cuszp))
+    } else {
+        None
+    };
     let pspan = sched_tree.pspan(t);
     let n = sched_tree.ranks();
     // Dominant per-participant payload of this leg.
@@ -547,7 +650,7 @@ fn leg_cost(
         },
         _ => msg_bytes,
     };
-    let wire = cost.wire(bytes, leg.compressed);
+    let wire = cost.wire(bytes, codec);
     // Worst in-group hop distance (member farthest from its leader).
     let far = sched_tree.span(t).saturating_sub(pspan).max(pspan);
     match leg.kind {
@@ -565,33 +668,33 @@ fn leg_cost(
             } else {
                 // One compression per member (parallel), then g−1
                 // arrivals serialize on the leader's ingress.
-                cost.comp(bytes, leg.compressed)
+                cost.comp(bytes, codec)
                     + (g - 1) as f64
                         * (round_wire(phys, cost, pspan, far, wire)
-                            + cost.dec(bytes, leg.compressed)
+                            + cost.dec(bytes, codec)
                             + reduce)
             }
         }
-        LegKind::AllreduceRedoub => redoub_cost(phys, cost, g, pspan, bytes, leg.compressed),
+        LegKind::AllreduceRedoub => redoub_cost(phys, cost, g, pspan, bytes, codec),
         LegKind::AllreduceRing => {
             let chunk = (bytes / g).max(1);
-            let cw = cost.wire(chunk, leg.compressed);
-            let per_round = cost.comp(chunk, leg.compressed)
-                + cost.dec(chunk, leg.compressed)
+            let cw = cost.wire(chunk, codec);
+            let per_round = cost.comp(chunk, codec)
+                + cost.dec(chunk, codec)
                 + cost.red(chunk)
                 + round_wire(phys, cost, pspan, pspan, cw);
             2.0 * (g - 1) as f64 * per_round
         }
         LegKind::AllgatherRing => {
-            let per_round = cost.dec(bytes, leg.compressed)
+            let per_round = cost.dec(bytes, codec)
                 + round_wire(phys, cost, pspan, pspan, wire);
-            cost.comp(bytes, leg.compressed) + (g - 1) as f64 * per_round
+            cost.comp(bytes, codec) + (g - 1) as f64 * per_round
         }
         LegKind::BcastFromLeader => {
             if leg.compressed {
                 // Compress-once stream down a binomial tree.
-                cost.comp(bytes, leg.compressed)
-                    + cost.dec(bytes, leg.compressed)
+                cost.comp(bytes, codec)
+                    + cost.dec(bytes, codec)
                     + ceil_log2(g) as f64 * round_wire(phys, cost, pspan, far, wire)
             } else {
                 // Direct NVLink fan-out from the leader.
@@ -605,11 +708,11 @@ fn leg_cost(
             // `TierTree::effective_width`).
             let leg_bytes =
                 (msg_bytes as f64) * sched_tree.span(t).min(n) as f64 / n.max(1) as f64;
-            let out_wire = cost.wire(leg_bytes as usize, leg.compressed) * (g - 1) as f64
+            let out_wire = cost.wire(leg_bytes as usize, codec) * (g - 1) as f64
                 / g as f64;
-            cost.comp((leg_bytes as usize) / g.max(1), leg.compressed)
+            cost.comp((leg_bytes as usize) / g.max(1), codec)
                 + round_wire(phys, cost, pspan, far, out_wire)
-                + cost.dec((leg_bytes as usize) / g.max(1), leg.compressed)
+                + cost.dec((leg_bytes as usize) / g.max(1), codec)
         }
     }
 }
@@ -618,13 +721,14 @@ fn leg_cost(
 /// kernels at the utilization floor plus a neighbor hop that crosses
 /// the node boundary for `1/width(0)` of the ranks.
 fn flat_ring_round(phys: &TierTree, cost: &CostModel, msg_bytes: usize, compressed: bool) -> f64 {
+    let codec = compressed.then(CodecSpec::cuszp);
     let n = phys.ranks();
     let chunk = (msg_bytes / n).max(1);
-    let cw = cost.wire(chunk, compressed);
+    let cw = cost.wire(chunk, codec);
     let f_inter = 1.0 / phys.width(0) as f64;
     let wire_time = (1.0 - f_inter) * (cost.link(0).alpha + cw / cost.link(0).beta)
         + f_inter * round_wire(phys, cost, 1, phys.span(0), cw);
-    cost.comp(chunk, compressed) + cost.dec(chunk, compressed) + cost.red(chunk) + wire_time
+    cost.comp(chunk, codec) + cost.dec(chunk, codec) + cost.red(chunk) + wire_time
 }
 
 /// Analytic makespan of the **flat ring Allreduce** on the physical
@@ -663,7 +767,7 @@ pub fn estimate_flat_redoub(
     msg_bytes: usize,
     compressed: bool,
 ) -> f64 {
-    redoub_cost(phys, cost, phys.ranks(), 1, msg_bytes, compressed)
+    redoub_cost(phys, cost, phys.ranks(), 1, msg_bytes, compressed.then(CodecSpec::cuszp))
 }
 
 /// Analytic makespan of the **flat ring Allgather** (compress-once
@@ -674,17 +778,18 @@ pub fn estimate_flat_allgather(
     total_bytes: usize,
     compressed: bool,
 ) -> f64 {
+    let codec = compressed.then(CodecSpec::cuszp);
     let n = phys.ranks();
     if n <= 1 {
         return 0.0;
     }
     let block = (total_bytes / n).max(1);
-    let bw = cost.wire(block, compressed);
+    let bw = cost.wire(block, codec);
     let f_inter = 1.0 / phys.width(0) as f64;
     let wire_time = (1.0 - f_inter) * (cost.link(0).alpha + bw / cost.link(0).beta)
         + f_inter * round_wire(phys, cost, 1, phys.span(0), bw);
-    cost.comp(block, compressed)
-        + (n - 1) as f64 * (wire_time + cost.dec(block, compressed))
+    cost.comp(block, codec)
+        + (n - 1) as f64 * (wire_time + cost.dec(block, codec))
 }
 
 #[cfg(test)]
@@ -704,9 +809,9 @@ mod tests {
         assert_eq!(
             s.legs,
             vec![
-                Leg { tier: 0, kind: LegKind::ReduceToLeader, compressed: false },
-                Leg { tier: 1, kind: LegKind::AllreduceRedoub, compressed: true },
-                Leg { tier: 0, kind: LegKind::BcastFromLeader, compressed: false },
+                Leg { tier: 0, kind: LegKind::ReduceToLeader, compressed: false, codec: None },
+                Leg { tier: 1, kind: LegKind::AllreduceRedoub, compressed: true, codec: None },
+                Leg { tier: 0, kind: LegKind::BcastFromLeader, compressed: false, codec: None },
             ]
         );
         // Uncompressed policies compile all-raw legs.
@@ -805,6 +910,64 @@ mod tests {
         // utilization floor and ring's lower wire volume wins.
         let huge = compile_tuned(Op::Allreduce, &t, true, 4096 * MIB, &cost).unwrap();
         assert_eq!(huge.legs[2].kind, LegKind::AllreduceRing);
+    }
+
+    #[test]
+    fn codec_ratio_and_kernel_factor_anchor_on_the_canonical_codec() {
+        let cost = CostModel::default_a100();
+        assert_eq!(cost.codec_ratio(CodecSpec::cuszp()), 25.0);
+        assert_eq!(CostModel::codec_kernel_factor(CodecSpec::cuszp()), 1.0);
+        // Entropy coding: denser wire, slower kernels.
+        assert!(cost.codec_ratio(CodecSpec::rle_rice()) > 25.0);
+        assert!(CostModel::codec_kernel_factor(CodecSpec::rle_rice()) > 1.0);
+        // Lossless is a modest absolute ratio independent of the lossy
+        // profile, and cheaper kernels than the canonical pipeline.
+        let ll = cost.codec_ratio(CodecSpec::lossless());
+        assert!((1.0..3.0).contains(&ll), "lossless ratio {ll}");
+        assert!(CostModel::codec_kernel_factor(CodecSpec::lossless()) < 1.0);
+        // Fixed-rate at 8 bits: 32 codes + a scale per 128 raw bytes.
+        let fr = cost.codec_ratio(CodecSpec::fixed_rate(8));
+        assert!((3.0..4.0).contains(&fr), "fixed-rate ratio {fr}");
+    }
+
+    #[test]
+    fn tuned_compile_mixes_codecs_across_tiers_on_thin_uplinks() {
+        // 512 ranks as 4×16×8 with a rack uplink 10× thinner than the
+        // node NIC: cross-rack serialization dominates the top leg, so
+        // the denser Rice-coded pipeline wins there despite slower
+        // kernels, while the NIC-bound tier-1 legs keep the canonical
+        // codec — one schedule, two codecs.
+        let links = vec![
+            LinkModel::nvlink_default(),
+            LinkModel::slingshot10_default(),
+            LinkModel::new(25e-6, 1.25e9),
+        ];
+        let cost = CostModel::new(GpuModel::a100(), links, 25.0);
+        let phys = tree(512, &[4, 16, 8]);
+        let s = compile_tuned(Op::Allreduce, &phys, true, 64 * MIB, &cost).unwrap();
+        let top = s.legs.iter().find(|l| l.tier == 2).unwrap();
+        assert_eq!(top.codec, Some(CodecSpec::rle_rice()));
+        for l in s.legs.iter().filter(|l| l.compressed && l.tier == 1) {
+            assert_eq!(l.codec, Some(CodecSpec::cuszp()), "tier-1 {:?}", l.kind);
+        }
+        // The mixed-codec plan beats the same schedule forced uniform.
+        let mixed = s.estimate_makespan(&phys, &cost, 64 * MIB);
+        let mut uniform = s.clone();
+        for l in uniform.legs.iter_mut().filter(|l| l.compressed) {
+            l.codec = Some(CodecSpec::cuszp());
+        }
+        let uni = uniform.estimate_makespan(&phys, &cost, 64 * MIB);
+        assert!(mixed < uni, "mixed {mixed} vs uniform {uni}");
+        // The default testbed stays kernel-bound: canonical everywhere,
+        // so existing makespan estimates are untouched.
+        let dflt =
+            compile_tuned(Op::Allreduce, &phys, true, 64 * MIB, &CostModel::default_a100())
+                .unwrap();
+        assert!(dflt
+            .legs
+            .iter()
+            .filter(|l| l.compressed)
+            .all(|l| l.codec == Some(CodecSpec::cuszp())));
     }
 
     #[test]
