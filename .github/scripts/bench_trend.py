@@ -22,6 +22,14 @@ import sys
 def load_rows(path):
     with open(path, encoding="utf-8") as f:
         data = json.load(f)
+    # Provenance stamp (schema_version + git describe) added to the
+    # artifact top level by bench_support::schema_stamp(). Artifacts
+    # from before the stamp existed have neither key; both generations
+    # must keep loading, so the stamp is surfaced for the log and
+    # otherwise ignored — row keys and metrics never depend on it.
+    version = data.get("schema_version")
+    if version is not None:
+        print(f"{path}: schema v{version}, git {data.get('git', 'unknown')}")
     rows = {}
     for row in data.get("rows", []):
         # `tiers` distinguishes the 3-tier node/rack sweep columns;

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Validate a flight-recorder trace against the Chrome trace-event schema.
+
+Checks the JSON that `gzccl ... --trace out.json` emits (the object
+form, `{"traceEvents": [...]}`, as loaded by ui.perfetto.dev and
+chrome://tracing):
+
+  * the file parses and has a `traceEvents` list plus `displayTimeUnit`;
+  * every event's `ph` is one of "X" (complete span), "i" (instant) or
+    "M" (metadata) — the exporter never emits B/E pairs, so any other
+    phase is a bug, and balance is structural;
+  * every "X" event has finite `ts >= 0` and `dur >= 0` and names a
+    `pid`/`tid` track;
+  * on the host lane (tid 0) of every pid, span start times are
+    monotone in file order (the recorder appends host activity in
+    virtual-time order; a backwards jump means a clock or run-offset
+    bug — other lanes record queue-entry times that legitimately
+    interleave);
+  * the host lane of every pid nests like a call stack: spans sorted
+    by (start, -dur) are each fully contained in — never partially
+    overlapping — the enclosing open span.
+
+Exits non-zero with a per-violation report; prints a summary on
+success. Usage: trace_validate.py TRACE.json
+"""
+
+import json
+import math
+import sys
+
+ALLOWED_PH = {"X", "i", "M"}
+HOST_TID = 0
+
+
+def err(errors, i, ev, msg):
+    name = ev.get("name", "?") if isinstance(ev, dict) else "?"
+    errors.append(f"event {i} ({name!r}): {msg}")
+
+
+def finite_nonneg(v):
+    return isinstance(v, (int, float)) and math.isfinite(v) and v >= 0
+
+
+def validate(path):
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        return ["top level is not a JSON object"], {}
+    events = data.get("traceEvents")
+    if not isinstance(events, list):
+        return ["missing traceEvents list"], {}
+    if "displayTimeUnit" not in data:
+        errors.append("missing displayTimeUnit")
+
+    counts = {"X": 0, "i": 0, "M": 0}
+    spans_by_lane = {}  # (pid, tid) -> [(ts, dur, name)] in file order
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            err(errors, i, ev, "event is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ALLOWED_PH:
+            err(errors, i, ev, f"phase {ph!r} not in {sorted(ALLOWED_PH)} "
+                "(B/E pairs are never emitted)")
+            continue
+        counts[ph] += 1
+        if ph == "M":
+            continue
+        if not finite_nonneg(ev.get("ts")):
+            err(errors, i, ev, f"ts {ev.get('ts')!r} is not finite and >= 0")
+        if ph == "X":
+            if not finite_nonneg(ev.get("dur")):
+                err(errors, i, ev,
+                    f"dur {ev.get('dur')!r} is not finite and >= 0")
+            if not isinstance(ev.get("pid"), int) or not isinstance(
+                    ev.get("tid"), int):
+                err(errors, i, ev, "complete event without integer pid/tid")
+            elif finite_nonneg(ev.get("ts")) and finite_nonneg(ev.get("dur")):
+                spans_by_lane.setdefault((ev["pid"], ev["tid"]), []).append(
+                    (ev["ts"], ev["dur"], ev.get("name", "?")))
+
+    for (pid, tid), spans in sorted(spans_by_lane.items()):
+        if tid != HOST_TID:
+            continue
+        # Monotone start times in file order on the host lane.
+        for a, b in zip(spans, spans[1:]):
+            if b[0] < a[0]:
+                errors.append(
+                    f"pid {pid} host lane: span {b[2]!r} starts at {b[0]} "
+                    f"before predecessor {a[2]!r} at {a[0]}")
+                break
+        # Host lane nests like a call stack: no partial overlaps.
+        stack = []  # end timestamps of open spans
+        for ts, dur, name in sorted(spans, key=lambda s: (s[0], -s[1])):
+            while stack and ts >= stack[-1]:
+                stack.pop()
+            end = ts + dur
+            if stack and end > stack[-1] + 1e-9:
+                errors.append(
+                    f"pid {pid} host lane: span {name!r} [{ts}, {end}] "
+                    f"partially overlaps enclosing span ending at {stack[-1]}")
+                break
+            stack.append(end)
+
+    return errors, counts
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    try:
+        errors, counts = validate(path)
+    except (OSError, ValueError) as e:
+        print(f"::error title=Trace invalid::{path}: {e}")
+        return 1
+    if errors:
+        for e in errors[:50]:
+            print(f"::error title=Trace invalid::{path}: {e}")
+        if len(errors) > 50:
+            print(f"... and {len(errors) - 50} more")
+        return 1
+    print(
+        f"{path}: valid — {counts.get('X', 0)} spans, "
+        f"{counts.get('i', 0)} instants, {counts.get('M', 0)} metadata events"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,7 @@
 //! per-leg compressor bounds (the trend script tolerates artifacts
 //! from before the column existed).
 
-use gzccl::bench_support::bench;
+use gzccl::bench_support::{bench, schema_stamp};
 use gzccl::collectives::Algo;
 use gzccl::comm::{CollectiveSpec, Communicator};
 use gzccl::coordinator::{DeviceBuf, ExecPolicy};
@@ -91,7 +91,8 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"allreduce_flat_vs_hier\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        "{{\n  {},\n  \"bench\": \"allreduce_flat_vs_hier\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        schema_stamp(),
         rows.join(",\n")
     );
     // `cargo bench` runs the harness with CWD set to the *package*

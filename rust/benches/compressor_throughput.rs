@@ -131,7 +131,8 @@ fn main() {
         })
         .collect();
     let json = format!(
-        "{{\n  \"bench\": \"codec_throughput\",\n  \"eb\": {eb:e},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        "{{\n  {},\n  \"bench\": \"codec_throughput\",\n  \"eb\": {eb:e},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        gzccl::bench_support::schema_stamp(),
         json_rows.join(",\n")
     );
     // `cargo bench` runs with CWD at the package root (rust/); anchor

@@ -81,7 +81,8 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"engine_rank_scale\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        "{{\n  {},\n  \"bench\": \"engine_rank_scale\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        gzccl::bench_support::schema_stamp(),
         rows.join(",\n")
     );
     // `cargo bench` runs the harness with CWD set to the *package*

@@ -50,6 +50,10 @@ pub struct DdpConfig {
     /// canonical cuSZp-like pipeline (and lets the tuner pick per-leg
     /// codecs); `Some` pins every compressed leg to this pipeline.
     pub codec: Option<CodecSpec>,
+    /// Flight recorder sink ([`crate::obs::Tracer`]): every step's
+    /// gradient Allreduce records its span tree and metrics here.
+    /// `None` (the default) runs untraced.
+    pub trace: Option<crate::obs::Tracer>,
     /// RNG seed.
     pub seed: u64,
 }
@@ -65,6 +69,7 @@ impl Default for DdpConfig {
             redoub: true,
             compress: true,
             codec: None,
+            trace: None,
             seed: 42,
         }
     }
@@ -178,6 +183,9 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
         .policy(policy);
     if let Some(c) = cfg.codec {
         builder = builder.codec(c);
+    }
+    if let Some(t) = &cfg.trace {
+        builder = builder.trace(t.clone());
     }
     let comm = match plan {
         Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,

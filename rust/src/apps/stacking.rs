@@ -122,6 +122,10 @@ pub struct StackingConfig {
     /// the canonical cuSZp-like pipeline (and lets the tuner pick
     /// per-leg codecs); `Some` pins every compressed leg to this one.
     pub codec: Option<CodecSpec>,
+    /// Flight recorder sink ([`crate::obs::Tracer`]): every variant's
+    /// collective records its span tree and metrics here. `None` (the
+    /// default) runs untraced.
+    pub trace: Option<crate::obs::Tracer>,
     /// Scenario seed.
     pub seed: u64,
 }
@@ -138,6 +142,7 @@ impl Default for StackingConfig {
             accuracy_target: None,
             adaptive: false,
             codec: None,
+            trace: None,
             seed: 0xEEC,
         }
     }
@@ -243,6 +248,9 @@ pub fn run_stacking(
         .policy(policy);
     if let Some(c) = cfg.codec {
         builder = builder.codec(c);
+    }
+    if let Some(t) = &cfg.trace {
+        builder = builder.trace(t.clone());
     }
     let comm = match plan {
         Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,

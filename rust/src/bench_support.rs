@@ -59,6 +59,37 @@ pub fn throughput_gbps(bytes: usize, secs: f64) -> f64 {
     bytes as f64 / secs / 1e9
 }
 
+/// Version of the `BENCH_*.json` artifact layout. Bump when the
+/// top-level shape changes; the trend script
+/// (`.github/scripts/bench_trend.py`) tolerates artifacts both with
+/// and without the stamp, so old archived artifacts keep loading.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// `git describe --always --dirty` for the tree the bench ran from, or
+/// `"unknown"` when git (or the repository) is unavailable — bench
+/// artifacts must still be writable from an exported tarball.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The provenance stamp every `BENCH_*.json` artifact carries at its
+/// top level: `"schema_version": N, "git": "<describe>"` (no braces,
+/// no trailing comma — splice it into the artifact's header).
+pub fn schema_stamp() -> String {
+    format!(
+        "\"schema_version\": {BENCH_SCHEMA_VERSION}, \"git\": \"{}\"",
+        git_describe().replace('\\', "_").replace('"', "_")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +105,20 @@ mod tests {
     #[test]
     fn throughput_math() {
         assert!((throughput_gbps(2_000_000_000, 2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schema_stamp_is_splicable_json() {
+        let stamp = schema_stamp();
+        assert!(stamp.starts_with("\"schema_version\": "));
+        assert!(stamp.contains("\"git\": \""));
+        // Splicing into an object header must yield valid JSON: the
+        // stamp itself carries no braces and no trailing comma.
+        assert!(!stamp.contains('{') && !stamp.contains('}'));
+        assert!(!stamp.ends_with(','));
+        // The git field never breaks out of its string literal.
+        let git = stamp.split("\"git\": \"").nth(1).unwrap();
+        assert!(git.ends_with('"'));
+        assert!(!git[..git.len() - 1].contains('"'));
     }
 }

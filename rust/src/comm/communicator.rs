@@ -13,7 +13,12 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::Topology;
-use crate::topo::{compile_min_error, CostModel, ExecPlan, LegExec, LegKind, Schedule, TierTree};
+use crate::obs::{TraceRun, TraceSummary, Tracer};
+use crate::topo::{
+    compile_min_error, estimate_flat_allgather, estimate_flat_redoub,
+    estimate_flat_reduce_scatter, estimate_flat_ring, CostModel, ExecPlan, LegExec, LegKind,
+    Schedule, TierTree,
+};
 
 use super::registry::AlgoRegistry;
 use super::tuner::{AlgoHint, CollectiveSpec, Tuner};
@@ -40,6 +45,7 @@ pub struct CommBuilder {
     profile: Option<CompressionProfile>,
     tuner: Option<Tuner>,
     backend: Option<ExecBackend>,
+    trace: Option<Tracer>,
 }
 
 impl CommBuilder {
@@ -61,6 +67,7 @@ impl CommBuilder {
             profile: None,
             tuner: None,
             backend: None,
+            trace: None,
         }
     }
 
@@ -169,6 +176,18 @@ impl CommBuilder {
     /// Override the tuner (custom crossover knees).
     pub fn tuner(mut self, tuner: Tuner) -> Self {
         self.tuner = Some(tuner);
+        self
+    }
+
+    /// Attach a flight recorder ([`crate::obs::Tracer`]): every
+    /// dispatched collective records its span tree (collective → leg →
+    /// phase → codec stage), dispatch instants (tuner decisions, budget
+    /// vetoes, eb relaxations), and wire/codec metrics into the shared
+    /// sink. Disabled by default — without a tracer the execution path
+    /// pays only an `Option` discriminant test per instrumentation
+    /// site. Clones of the communicator share the tracer.
+    pub fn trace(mut self, tracer: Tracer) -> Self {
+        self.trace = Some(tracer);
         self
     }
 
@@ -285,6 +304,7 @@ impl CommBuilder {
         if let Some(p) = self.profile {
             spec.profile = p;
         }
+        spec.trace = self.trace;
         Ok(Communicator {
             spec,
             tuner: self.tuner.unwrap_or_default(),
@@ -348,8 +368,22 @@ pub struct CollectiveReport {
     /// compressed collectives over real payloads (see
     /// [`crate::accuracy::telemetry`]).
     pub accuracy: Option<AccuracyReport>,
+    /// The flight-recorder run captured for this dispatch: the full
+    /// span trees and metrics of every rank, drained from the tracer
+    /// the moment the collective finished. `Some` only when the
+    /// communicator was built with [`CommBuilder::trace`].
+    pub trace: Option<Arc<TraceRun>>,
     /// The underlying run report.
     pub report: RunReport,
+}
+
+impl CollectiveReport {
+    /// One-glance digest of the captured trace (track/span/instant
+    /// counts and the span-derived phase sums). `None` when the
+    /// dispatch ran untraced.
+    pub fn trace_summary(&self) -> Option<TraceSummary> {
+        self.trace.as_ref().map(|t| t.summary())
+    }
 }
 
 impl std::ops::Deref for CollectiveReport {
@@ -480,6 +514,35 @@ impl Communicator {
             self.spec.tier_links(),
             self.spec.profile.effective_ratio(msg_bytes.max(1)),
         )
+    }
+
+    /// Analytic makespan of a flat algorithm on this cluster, where a
+    /// closed-form estimator exists — used to price the tuner's
+    /// rejected alternatives in the flight-recorder decision record.
+    fn flat_estimate(
+        &self,
+        op: Op,
+        algo: Algo,
+        cost: &CostModel,
+        msg_bytes: usize,
+        compressed: bool,
+    ) -> Option<f64> {
+        let t = &self.spec.tiers;
+        match (op, algo) {
+            (Op::Allreduce, Algo::Ring) => {
+                Some(estimate_flat_ring(t, cost, msg_bytes, compressed))
+            }
+            (Op::Allreduce, Algo::RecursiveDoubling) => {
+                Some(estimate_flat_redoub(t, cost, msg_bytes, compressed))
+            }
+            (Op::ReduceScatter, Algo::Ring) => {
+                Some(estimate_flat_reduce_scatter(t, cost, msg_bytes, compressed))
+            }
+            (Op::Allgather, Algo::Ring) => {
+                Some(estimate_flat_allgather(t, cost, msg_bytes, compressed))
+            }
+            _ => None,
+        }
     }
 
     /// Communicator size.
@@ -691,6 +754,50 @@ impl Communicator {
                 exec_plan = exec_plan.relaxed(scale, plan.per_call_abs);
             }
         }
+        // Flight recorder: the dispatch decision (with rejected
+        // alternatives priced by the same cost model the tuner used)
+        // and any budget vetoes, as instants at virtual t = 0.
+        if let Some(tr) = &self.spec.trace {
+            let rejected: Vec<String> = AlgoRegistry::supported(op)
+                .iter()
+                .filter(|a| **a != algo)
+                .map(|a| match self.flat_estimate(op, *a, &cost, msg_bytes, compressed) {
+                    Some(est) => format!("{a:?}={est:.3e}s"),
+                    None => format!("{a:?}"),
+                })
+                .collect();
+            tr.instant(
+                "tuner-decision",
+                0.0,
+                vec![
+                    ("op", format!("{op:?}")),
+                    ("algo", format!("{algo:?}")),
+                    (
+                        "source",
+                        if auto_tuned { "auto" } else { "forced" }.to_string(),
+                    ),
+                    ("rejected", rejected.join(", ")),
+                ],
+            );
+            if let Some(plan) = &self.plan {
+                let vetoed: Vec<String> = AlgoRegistry::supported(op)
+                    .iter()
+                    .filter(|a| !complies_tiers(plan, op, **a, &self.spec.tiers, spec.root))
+                    .map(|a| format!("{a:?}"))
+                    .collect();
+                if !vetoed.is_empty() {
+                    tr.instant(
+                        "budget-veto",
+                        0.0,
+                        vec![
+                            ("op", format!("{op:?}")),
+                            ("per_call_abs", format!("{:.3e}", plan.per_call_abs)),
+                            ("vetoed", vetoed.join(", ")),
+                        ],
+                    );
+                }
+            }
+        }
         // Telemetry probe: sample the exact reference before the inputs
         // are consumed (compressed collectives on real payloads only).
         let probe = if compressed {
@@ -770,12 +877,43 @@ impl Communicator {
             })
             .collect();
         // Close the adaptation loop: fold this dispatch's telemetry
-        // into the controller for the next call.
+        // into the controller for the next call. A traced dispatch
+        // records any scale change as an eb-relaxation instant at the
+        // collective's makespan (the virtual moment the telemetry
+        // that earned it was observed).
         if let (Some(ctl), Some(plan)) = (&self.adaptive, &self.plan) {
             if let Some(a) = &accuracy {
+                let before = ctl.scale();
                 ctl.update(a, plan);
+                let after = ctl.scale();
+                if after != before {
+                    if let Some(tr) = &self.spec.trace {
+                        tr.instant(
+                            "eb-relaxation",
+                            report.makespan.as_secs(),
+                            vec![
+                                ("scale_before", format!("{before:.4}")),
+                                ("scale_after", format!("{after:.4}")),
+                                ("observed_max_err", format!("{:.3e}", a.observed_max_err)),
+                                ("per_call_abs", format!("{:.3e}", plan.per_call_abs)),
+                            ],
+                        );
+                    }
+                }
             }
         }
+        // Drain the flight recorder: everything the ranks flushed plus
+        // the dispatch instants becomes this collective's TraceRun.
+        let trace = self.spec.trace.as_ref().map(|tr| {
+            tr.take_run(vec![
+                ("op".to_string(), format!("{op:?}")),
+                ("algo".to_string(), format!("{algo:?}")),
+                (
+                    "makespan_s".to_string(),
+                    format!("{:.9e}", report.makespan.as_secs()),
+                ),
+            ])
+        });
         Ok(CollectiveReport {
             op,
             algo,
@@ -784,6 +922,7 @@ impl Communicator {
             exec_plan,
             legs,
             accuracy,
+            trace,
             report,
         })
     }

@@ -14,7 +14,8 @@ use std::sync::Arc;
 use crate::compress::{decode_any, CompressionProfile, Compressor};
 use crate::error::Result;
 use crate::gpu::{GpuDevice, StreamId};
-use crate::net::{FabricSlice, Topology};
+use crate::net::{DeliverPath, FabricSlice, Topology};
+use crate::obs::{Lane, SpanCat, TrackBuf, Tracer};
 use crate::sim::{Breakdown, Phase, RankClock, VirtTime};
 use crate::topo::LegExec;
 
@@ -251,6 +252,24 @@ pub struct RankCtx {
     leg_errors: Vec<LegError>,
     /// Typed per-leg binding warnings accumulated this run.
     leg_warnings: Vec<LegWarning>,
+    /// Flight-recorder state: the shared sink plus this rank's private
+    /// span buffer. `None` (the default) keeps every hook a single
+    /// discriminant test.
+    trace: Option<Box<CtxTrace>>,
+}
+
+/// Tracing state attached to a recording context.
+struct CtxTrace {
+    tracer: Tracer,
+    buf: TrackBuf,
+}
+
+/// Track lane for a GPU stream: `gpu.default` or `gpu.s{i}`.
+fn lane_of(s: StreamId) -> Lane {
+    match s {
+        StreamId::Default => Lane::Gpu(0),
+        StreamId::NonDefault(i) => Lane::Gpu(1 + i as u32),
+    }
 }
 
 impl RankCtx {
@@ -280,6 +299,134 @@ impl RankCtx {
             leg_compressor: None,
             leg_errors: Vec::new(),
             leg_warnings: Vec::new(),
+            trace: None,
+        }
+    }
+
+    /// Attach the flight recorder: subsequent operations record spans
+    /// into this rank's private buffer (track `track`), flushed into
+    /// `tracer` once at [`RankCtx::finish`]. Opens the per-rank root
+    /// span at the current (normally zero) virtual time.
+    pub(crate) fn set_tracer(&mut self, tracer: &Tracer, track: usize) {
+        let mut buf = TrackBuf::new(track);
+        buf.open_root("collective", self.clock.now().as_secs());
+        self.trace = Some(Box::new(CtxTrace {
+            tracer: tracer.clone(),
+            buf,
+        }));
+    }
+
+    /// Whether a flight recorder is attached.
+    pub fn tracing(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Record a charged phase span (skipping zero-length ones — a zero
+    /// charge cannot perturb the span-derived phase sums).
+    #[inline]
+    fn tr_span(&mut self, name: &'static str, lane: Lane, start: VirtTime, dur: f64, charge: Phase) {
+        if dur <= 0.0 {
+            return;
+        }
+        if let Some(t) = self.trace.as_mut() {
+            t.buf
+                .span(name, SpanCat::Phase, lane, start.as_secs(), dur, Some(charge));
+        }
+    }
+
+    /// Record a device-side span that *ends* at `end` with length `dur`
+    /// (kernels and copies report their completion time).
+    #[inline]
+    fn tr_kernel(&mut self, name: &'static str, lane: Lane, end: VirtTime, dur: f64, charge: Phase) {
+        if dur <= 0.0 {
+            return;
+        }
+        if let Some(t) = self.trace.as_mut() {
+            t.buf.span(
+                name,
+                SpanCat::Phase,
+                lane,
+                end.as_secs() - dur,
+                dur,
+                Some(charge),
+            );
+        }
+    }
+
+    /// Record a (de)compression kernel span plus codec-stage child
+    /// spans splitting the kernel duration evenly across the staged
+    /// pipeline (uncharged — the parent already carries the CPR
+    /// charge).
+    fn tr_codec_kernel(&mut self, name: &'static str, lane: Lane, end: VirtTime, dur: f64) {
+        if self.trace.is_none() || dur <= 0.0 {
+            return;
+        }
+        let stages: Vec<String> = self
+            .effective_compressor()
+            .and_then(|c| c.spec())
+            .map(|s| s.label().split('+').map(str::to_string).collect())
+            .unwrap_or_default();
+        self.tr_kernel(name, lane, end, dur, Phase::Cpr);
+        if stages.len() > 1 {
+            let start = end.as_secs() - dur;
+            let step = dur / stages.len() as f64;
+            let t = self.trace.as_mut().expect("checked above");
+            for (i, stage) in stages.iter().enumerate() {
+                t.buf.span(
+                    format!("stage:{stage}"),
+                    SpanCat::Codec,
+                    lane,
+                    start + step * i as f64,
+                    step,
+                    None,
+                );
+            }
+        }
+    }
+
+    /// Account compressed bytes in/out against the effective codec's
+    /// key (feeds the derived `cpr_ratio.<codec>` gauge).
+    fn tr_cpr_bytes(&mut self, in_bytes: usize, out_bytes: usize) {
+        if self.trace.is_none() {
+            return;
+        }
+        let key = match self.effective_compressor() {
+            Some(c) => c.spec().map(|s| s.label()).unwrap_or_else(|| c.name().to_string()),
+            None => return,
+        };
+        let t = self.trace.as_mut().expect("checked above");
+        t.buf.counter_add(&format!("cpr_in_bytes.{key}"), in_bytes as f64);
+        t.buf.counter_add(&format!("cpr_out_bytes.{key}"), out_bytes as f64);
+    }
+
+    /// Record one message's fabric path: queue-wait spans on the net
+    /// lane, wire-byte counters per link class, and queue-wait
+    /// histograms for every shared stage the message crossed.
+    fn tr_deliver(&mut self, path: &DeliverPath, bytes: usize) {
+        let Some(t) = self.trace.as_mut() else { return };
+        let buf = &mut t.buf;
+        if path.lca == 0 {
+            buf.counter_add("wire_bytes.intranode", bytes as f64);
+            return;
+        }
+        buf.counter_add("wire_bytes.internode", bytes as f64);
+        for tier in 2..=path.lca {
+            buf.counter_add(&format!("wire_bytes.uplink_t{tier}"), bytes as f64);
+        }
+        for h in &path.hops {
+            if h.tier == 0 {
+                buf.hist_add("queue_wait_s.nic", h.wait);
+            } else {
+                buf.hist_add(&format!("queue_wait_s.uplink_t{}", h.tier), h.wait);
+            }
+            if h.wait > 0.0 {
+                let name = if h.tier == 0 {
+                    format!("wait:{}", h.kind)
+                } else {
+                    format!("wait:{}.t{}", h.kind, h.tier)
+                };
+                buf.span(name, SpanCat::Net, Lane::Net, h.ready, h.wait, None);
+            }
         }
     }
 
@@ -346,6 +493,14 @@ impl RankCtx {
     pub fn begin_leg(&mut self, leg: usize, exec: LegExec) {
         self.active_leg = Some((leg, exec));
         self.leg_compressor = None;
+        if let Some(t) = self.trace.as_mut() {
+            let args = vec![
+                ("mode", format!("{:?}", exec.compression)),
+                ("codec", exec.codec.label()),
+                ("eb", format!("{:e}", exec.eb)),
+            ];
+            t.buf.open_leg(leg as u32, self.clock.now().as_secs(), args);
+        }
         let Some(base) = self.compressor.clone() else {
             return;
         };
@@ -402,6 +557,10 @@ impl RankCtx {
     pub fn end_leg(&mut self) {
         self.active_leg = None;
         self.leg_compressor = None;
+        let now = self.clock.now().as_secs();
+        if let Some(t) = self.trace.as_mut() {
+            t.buf.close_leg(now);
+        }
     }
 
     /// Per-leg observed compression errors recorded so far (empty when
@@ -427,6 +586,14 @@ impl RankCtx {
             .iter()
             .any(|w| w.leg == leg && w.message == message);
         if !dup {
+            let now = self.clock.now().as_secs();
+            if let Some(t) = self.trace.as_mut() {
+                t.buf.instant(
+                    "leg-warning",
+                    now,
+                    vec![("leg", leg.to_string()), ("message", message.clone())],
+                );
+            }
             self.leg_warnings.push(LegWarning { leg, message });
         }
     }
@@ -484,10 +651,25 @@ impl RankCtx {
     }
 
     /// Final per-rank completion time: host joined with device drain.
+    /// With a flight recorder attached this also closes the root span
+    /// at exactly this timestamp and flushes the rank's buffer into the
+    /// shared sink — so the max root-span end across ranks equals the
+    /// run's makespan bit-for-bit, and the span-derived phase sums are
+    /// asserted against the clock's own accounting.
     pub fn finish(&mut self) -> VirtTime {
         let t = self.gpu.device_free();
         self.clock.wait_until(t);
-        self.clock.now()
+        let now = self.clock.now();
+        if let Some(mut tr) = self.trace.take() {
+            tr.buf.close_all(now.as_secs());
+            debug_assert_eq!(
+                tr.buf.breakdown(),
+                self.clock.breakdown(),
+                "span-derived phase sums drifted from the clock's accounting"
+            );
+            tr.tracer.sink(tr.buf);
+        }
+        now
     }
 
     // ---- internal cost helpers -------------------------------------
@@ -500,7 +682,10 @@ impl RankCtx {
         if matches!(s, StreamId::NonDefault(_)) {
             cost += m.stream_issue;
         }
-        self.clock.advance(Phase::Other, cost)
+        let t0 = self.clock.now();
+        let t = self.clock.advance(Phase::Other, cost);
+        self.tr_span("issue", Lane::Host, t0, cost, Phase::Other);
+        t
     }
 
     /// Stock-compressor penalties (§3.3.2): per-call temp allocation
@@ -509,13 +694,17 @@ impl RankCtx {
     fn stock_compressor_penalty(&mut self) {
         let m = *self.gpu.model();
         if !self.policy.prealloc_pool {
+            let t0 = self.clock.now();
             self.clock.advance(Phase::Other, m.alloc);
+            self.tr_span("alloc", Lane::Host, t0, m.alloc, Phase::Other);
         }
         if !self.policy.adapted_compressor {
             // Implicit unified-memory traffic: a small offsets buffer
             // migrates both ways and the host blocks on it.
             let penalty = 2.0 * m.pcie.transfer_time(4096) + m.sync;
+            let t0 = self.clock.now();
             self.clock.advance(Phase::DataMove, penalty);
+            self.tr_span("umem-penalty", Lane::Host, t0, penalty, Phase::DataMove);
             self.counters.pcie_bytes += 2 * 4096;
         }
     }
@@ -526,7 +715,9 @@ impl RankCtx {
         if !self.policy.overlap {
             let m = *self.gpu.model();
             self.clock.wait_until(end);
+            let t0 = self.clock.now();
             self.clock.advance(Phase::Other, m.sync);
+            self.tr_span("sync", Lane::Host, t0, m.sync, Phase::Other);
         }
     }
 
@@ -556,6 +747,7 @@ impl RankCtx {
         let dur = m.compress.time(buf.bytes());
         let end = self.gpu.enqueue(s, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
+        self.tr_codec_kernel("compress", lane_of(s), end, dur);
         self.counters.compress_calls += 1;
         let out = match buf {
             DeviceBuf::Real(v) => {
@@ -569,6 +761,7 @@ impl RankCtx {
                 elems: *n,
             },
         };
+        self.tr_cpr_bytes(buf.bytes(), out.bytes());
         self.maybe_sync(end);
         (out, end)
     }
@@ -591,7 +784,10 @@ impl RankCtx {
         let issue = if self.policy.multi_stream {
             // One issue per stream, paid by the host.
             let cost = m.host_api + m.stream_issue * k as f64;
-            self.clock.advance(Phase::Other, cost)
+            let t0 = self.clock.now();
+            let t = self.clock.advance(Phase::Other, cost);
+            self.tr_span("issue", Lane::Host, t0, cost, Phase::Other);
+            t
         } else {
             self.issue_cost(StreamId::Default)
         };
@@ -604,6 +800,7 @@ impl RankCtx {
         };
         let end = self.gpu.enqueue(StreamId::Default, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
+        self.tr_codec_kernel("compress-batch", Lane::Gpu(0), end, dur);
         self.counters.compress_calls += k;
         let comp = self.effective_compressor();
         let mut outs = Vec::with_capacity(k);
@@ -621,6 +818,7 @@ impl RankCtx {
                 }),
             }
         }
+        self.tr_cpr_bytes(total, outs.iter().map(|c| c.bytes()).sum());
         self.maybe_sync(end);
         (outs, end)
     }
@@ -654,6 +852,7 @@ impl RankCtx {
         let dur = m.decompress.time(out.bytes());
         let end = self.gpu.enqueue(s, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
+        self.tr_codec_kernel("decompress", lane_of(s), end, dur);
         self.counters.decompress_calls += 1;
         self.maybe_sync(end);
         (out, end)
@@ -678,6 +877,7 @@ impl RankCtx {
             let dur = m.reduce.time(out.bytes());
             let end = self.gpu.enqueue(s, ready.join(issue), dur);
             self.clock.charge_only(Phase::Redu, dur);
+            self.tr_kernel("reduce", lane_of(s), end, dur, Phase::Redu);
             self.maybe_sync(end);
             Ok((out, end))
         } else {
@@ -688,12 +888,17 @@ impl RankCtx {
             let bytes = out.bytes();
             let staged = self.gpu.copy_d2h(ready, bytes);
             self.clock.charge_only(Phase::DataMove, staged.since(ready));
+            self.tr_span("d2h", Lane::D2h, ready, staged.since(ready), Phase::DataMove);
             self.counters.pcie_bytes += bytes;
             self.clock.wait_until(staged);
             let dur = bytes as f64 / m.host_reduce_beta;
+            let t0 = self.clock.now();
             self.clock.advance(Phase::Redu, dur);
-            let back = self.gpu.copy_h2d(self.clock.now(), bytes);
-            self.clock.charge_only(Phase::DataMove, back.since(self.clock.now()));
+            self.tr_span("host-reduce", Lane::Host, t0, dur, Phase::Redu);
+            let h2d_from = self.clock.now();
+            let back = self.gpu.copy_h2d(h2d_from, bytes);
+            self.clock.charge_only(Phase::DataMove, back.since(h2d_from));
+            self.tr_span("h2d", Lane::H2d, h2d_from, back.since(h2d_from), Phase::DataMove);
             self.counters.pcie_bytes += bytes;
             self.clock.wait_until(back);
             Ok((out, back))
@@ -707,6 +912,7 @@ impl RankCtx {
         let dur = m.memset.time(bytes);
         let end = self.gpu.enqueue(s, ready.join(issue), dur);
         self.clock.charge_only(Phase::Other, dur);
+        self.tr_kernel("memset", lane_of(s), end, dur, Phase::Other);
         self.maybe_sync(end);
         end
     }
@@ -724,6 +930,7 @@ impl RankCtx {
         };
         let end = self.gpu.enqueue(StreamId::Default, ready.join(issue), dur);
         self.clock.charge_only(Phase::Other, dur);
+        self.tr_kernel("pack", Lane::Gpu(0), end, dur, Phase::Other);
         self.maybe_sync(end);
         (total, end)
     }
@@ -734,18 +941,30 @@ impl RankCtx {
     /// this rank at `ready`. CPU-centric variants stage through PCIe.
     pub fn send(&mut self, to: usize, tag: u64, payload: Payload, ready: VirtTime) {
         let bytes = payload.wire_bytes();
-        self.clock
-            .advance(Phase::Other, self.gpu.model().host_api);
+        let host_api = self.gpu.model().host_api;
+        let t0 = self.clock.now();
+        self.clock.advance(Phase::Other, host_api);
+        self.tr_span("send-api", Lane::Host, t0, host_api, Phase::Other);
         let depart = if self.policy.gpu_centric {
             ready
         } else {
             // Stage device → host before the wire.
             let end = self.gpu.copy_d2h(ready, bytes);
             self.clock.charge_only(Phase::DataMove, end.since(ready));
+            self.tr_span("d2h", Lane::D2h, ready, end.since(ready), Phase::DataMove);
             self.counters.pcie_bytes += bytes;
             end
         };
-        let arrival = self.fabric.deliver(self.rank, to, bytes, depart);
+        let arrival = if self.tracing() {
+            let mut path = DeliverPath::default();
+            let arrival = self
+                .fabric
+                .deliver_traced(self.rank, to, bytes, depart, &mut path);
+            self.tr_deliver(&path, bytes);
+            arrival
+        } else {
+            self.fabric.deliver(self.rank, to, bytes, depart)
+        };
         self.counters.msgs_sent += 1;
         self.counters.wire_bytes += bytes;
         let msg = Msg {
@@ -773,12 +992,15 @@ impl RankCtx {
             Port::Channel { mailbox, .. } => mailbox.recv(from, tag),
             Port::Event(ep) => ep.recv(from, tag).await,
         };
+        let t0 = self.clock.now();
         self.clock.wait_charged(Phase::Comm, msg.arrival);
+        self.tr_span("recv-wait", Lane::Host, t0, msg.arrival.since(t0), Phase::Comm);
         let mut usable = msg.arrival;
         if !self.policy.gpu_centric {
             let bytes = msg.payload.wire_bytes();
             let end = self.gpu.copy_h2d(usable, bytes);
             self.clock.charge_only(Phase::DataMove, end.since(usable));
+            self.tr_span("h2d", Lane::H2d, usable, end.since(usable), Phase::DataMove);
             self.counters.pcie_bytes += bytes;
             usable = end;
         }
@@ -824,7 +1046,9 @@ impl RankCtx {
         let m = *self.gpu.model();
         let t = self.gpu.stream_free(s);
         self.clock.wait_until(t);
+        let t0 = self.clock.now();
         self.clock.advance(Phase::Other, m.sync);
+        self.tr_span("sync", Lane::Host, t0, m.sync, Phase::Other);
     }
 
     /// Host-synchronize with the whole device.
@@ -832,7 +1056,9 @@ impl RankCtx {
         let m = *self.gpu.model();
         let t = self.gpu.device_free();
         self.clock.wait_until(t);
+        let t0 = self.clock.now();
         self.clock.advance(Phase::Other, m.sync);
+        self.tr_span("sync", Lane::Host, t0, m.sync, Phase::Other);
     }
 }
 

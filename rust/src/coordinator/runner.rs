@@ -83,6 +83,9 @@ pub struct ClusterSpec {
     pub streams_per_rank: usize,
     /// Which execution backend runs collectives on this cluster.
     pub backend: ExecBackend,
+    /// Flight-recorder sink. `None` (the default) disables tracing:
+    /// every recording hook is one `Option` discriminant test.
+    pub trace: Option<crate::obs::Tracer>,
 }
 
 impl ClusterSpec {
@@ -111,6 +114,7 @@ impl ClusterSpec {
             profile: CompressionProfile::fixed(25.0),
             streams_per_rank: 4,
             backend: ExecBackend::default(),
+            trace: None,
         }
     }
 
@@ -165,6 +169,13 @@ impl ClusterSpec {
     /// Override the execution backend.
     pub fn with_backend(mut self, backend: ExecBackend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Attach a flight-recorder sink: every rank records spans and
+    /// metrics into `tracer` (see [`crate::obs`]).
+    pub fn with_trace(mut self, tracer: crate::obs::Tracer) -> Self {
+        self.trace = Some(tracer);
         self
     }
 
@@ -363,6 +374,9 @@ fn run_threads<P: Program + ?Sized>(
                         compressor,
                         spec.profile.clone(),
                     );
+                    if let Some(tr) = &spec.trace {
+                        ctx.set_tracer(tr, rank);
+                    }
                     let out = block_on(program.run(&mut ctx, input))?;
                     let finish = ctx.finish();
                     let legs = ctx.leg_errors().to_vec();

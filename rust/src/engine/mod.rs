@@ -160,6 +160,12 @@ pub(crate) fn spawn_actor<'p, P: Program + ?Sized>(
         spec.make_compressor(),
         spec.profile.clone(),
     );
+    if let Some(tr) = &spec.trace {
+        // Track = global actor id, so multi-tenant runs get one track
+        // per actor and single-tenant runs get track == rank — the
+        // same ids (and hence the same span tree) as the thread oracle.
+        ctx.set_tracer(tr, peer_base + rank);
+    }
     Box::pin(async move {
         let out = program.run(&mut ctx, input).await?;
         let finish = ctx.finish();
@@ -240,9 +246,29 @@ pub(crate) fn drive<'p>(
     outcomes
 }
 
+/// Per-actor wait diagnostics for a deadlocked run: which (src, tag)
+/// each suspended actor is blocked on, in actor order.
+fn deadlock_detail(store: &Arc<Mutex<MsgStore>>) -> String {
+    let st = store.lock().expect("message store poisoned");
+    let mut waits: Vec<(usize, (usize, u64))> =
+        st.waiting.iter().map(|(a, w)| (*a, *w)).collect();
+    waits.sort();
+    waits
+        .iter()
+        .map(|(a, (src, tag))| format!("actor {a} awaits (src {src}, tag {tag})"))
+        .collect::<Vec<_>>()
+        .join("; ")
+}
+
 /// Turn raw drive outcomes into a merged report, surfacing deadlocks
-/// (and the rank errors that caused them) as typed coordinator errors.
-pub(crate) fn collect(outcomes: Vec<Option<Result<RankOutcome>>>) -> Result<RunReport> {
+/// (and the rank errors that caused them) as typed coordinator errors
+/// enriched with per-actor wait diagnostics; a traced deadlock also
+/// lands as a `deadlock` instant in the flight recorder.
+pub(crate) fn collect(
+    outcomes: Vec<Option<Result<RankOutcome>>>,
+    store: &Arc<Mutex<MsgStore>>,
+    trace: Option<&crate::obs::Tracer>,
+) -> Result<RunReport> {
     let n = outcomes.len();
     let stuck = outcomes.iter().filter(|o| o.is_none()).count();
     if stuck > 0 {
@@ -253,8 +279,17 @@ pub(crate) fn collect(outcomes: Vec<Option<Result<RankOutcome>>>) -> Result<RunR
                 return Err(e);
             }
         }
+        let detail = deadlock_detail(store);
+        if let Some(tr) = trace {
+            tr.instant(
+                "deadlock",
+                0.0,
+                vec![("stuck", stuck.to_string()), ("waits", detail.clone())],
+            );
+        }
         return Err(Error::coordinator(format!(
-            "event engine deadlock: {stuck} of {n} ranks suspended in recv with no matching send in flight"
+            "event engine deadlock: {stuck} of {n} ranks suspended in recv \
+             with no matching send in flight ({detail})"
         )));
     }
     merge_outcomes(
@@ -295,7 +330,7 @@ pub fn run_events<P: Program + ?Sized>(
         .map(|(rank, input)| spawn_actor(spec, &slice, &store, 0, rank, n, input, program))
         .collect();
     let outcomes = drive(actors, &store);
-    collect(outcomes)
+    collect(outcomes, &store, spec.trace.as_ref())
 }
 
 #[cfg(test)]

@@ -144,6 +144,11 @@ pub fn run_multi_tenant(
     for (t, inputs) in tenants.iter().zip(shared_inputs) {
         let n = t.spec.topo.ranks();
         let slice = FabricSlice::window(fabric.clone(), t.base, t.spec.tiers.clone());
+        if let Some(tr) = &t.spec.trace {
+            // Tracks `actor_base..actor_base + n` display as
+            // `<tenant>/<logical rank>` in the exported trace.
+            tr.label_tracks(actor_base, n, &t.name);
+        }
         for (rank, input) in inputs.into_iter().enumerate() {
             actors.push(spawn_actor(
                 &t.spec,
@@ -163,22 +168,28 @@ pub fn run_multi_tenant(
     for t in &tenants {
         let n = t.spec.topo.ranks();
         let chunk: Vec<Option<Result<RankOutcome>>> = outcomes.by_ref().take(n).collect();
-        contended.push(collect(chunk)?);
+        contended.push(collect(chunk, &store, t.spec.trace.as_ref())?);
     }
 
     // Isolated baselines: same window, fresh fabric, no neighbors.
+    // Tracing is stripped so only the contended timeline records —
+    // the baselines would otherwise overwrite the shared tracks.
     let mut reports = Vec::with_capacity(tenants.len());
     for ((t, inputs), shared) in tenants.iter().zip(iso_inputs).zip(contended) {
         let fabric = physical_fabric(physical);
         let slice = FabricSlice::window(fabric, t.base, t.spec.tiers.clone());
         let store = Arc::new(Mutex::new(MsgStore::default()));
         let n = t.spec.topo.ranks();
+        let mut iso_spec = t.spec.clone();
+        iso_spec.trace = None;
         let actors: Vec<ActorFut<'_>> = inputs
             .into_iter()
             .enumerate()
-            .map(|(rank, input)| spawn_actor(&t.spec, &slice, &store, 0, rank, n, input, &*t.program))
+            .map(|(rank, input)| {
+                spawn_actor(&iso_spec, &slice, &store, 0, rank, n, input, &*t.program)
+            })
             .collect();
-        let isolated = collect(drive(actors, &store))?;
+        let isolated = collect(drive(actors, &store), &store, None)?;
         let iso_s = isolated.makespan.as_secs();
         let shared_s = shared.makespan.as_secs();
         let slowdown = if iso_s > 0.0 { shared_s / iso_s } else { 1.0 };
@@ -211,6 +222,13 @@ pub fn run_multi_tenant(
     } else {
         1.0
     };
+
+    for (t, r) in tenants.iter().zip(&reports) {
+        if let Some(tr) = &t.spec.trace {
+            tr.gauge("fairness.jain", fairness);
+            tr.gauge(&format!("slowdown.{}", r.name), r.slowdown);
+        }
+    }
 
     Ok(MultiTenantReport {
         tenants: reports,

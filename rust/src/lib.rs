@@ -36,6 +36,7 @@ pub mod experiments;
 pub mod gpu;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;

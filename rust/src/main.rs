@@ -19,6 +19,7 @@ use gzccl::config::ClusterConfig;
 use gzccl::coordinator::{CompressionMode, DeviceBuf, ExecBackend};
 use gzccl::error::{Error, Result};
 use gzccl::experiments as exp;
+use gzccl::obs::Tracer;
 use gzccl::runtime::Engine;
 use gzccl::topo::{LegExec, TierTree};
 
@@ -78,6 +79,11 @@ gZCCL — compression-accelerated collective communication (paper reproduction)
 USAGE:
   gzccl run         [--config FILE] [--set k=v ...] [--op OP] [--size-mb N]
                     [--gpus-per-node G] [--tiers WxWx...]
+                    [--trace FILE]          record the flight recorder and
+                        write a Perfetto-loadable Chrome trace (virtual
+                        time) to FILE, plus aggregated metrics to
+                        FILE's stem + `.metrics.json`. Also accepted by
+                        `stack` and `train`.
                     [--codec C]             pin every compressed leg to one
                         staged codec pipeline instead of the canonical
                         compressor (and the tuner's per-leg picks).
@@ -127,6 +133,24 @@ USAGE:
   gzccl characterize
   gzccl help
 ";
+
+/// Export the flight recorder: merged Chrome-trace JSON to `path`,
+/// aggregated metrics next to it (`<stem>.metrics.json`), one summary
+/// line per drained run. Called even when the traced command failed —
+/// a partial trace is exactly what debugs a deadlock.
+fn write_trace(path: &str, tracer: &Tracer) -> Result<()> {
+    std::fs::write(path, tracer.chrome_json()).map_err(Error::Io)?;
+    let metrics_path = match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.metrics.json"),
+        None => format!("{path}.metrics.json"),
+    };
+    std::fs::write(&metrics_path, tracer.metrics_json()).map_err(Error::Io)?;
+    for run in tracer.runs() {
+        println!("{}", run.summary());
+    }
+    println!("trace written: {path} (metrics: {metrics_path})");
+    Ok(())
+}
 
 /// Parse a stacking accuracy target: `"55db"` → PSNR floor, plain
 /// float → absolute L∞ bound.
@@ -183,6 +207,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::config("bad --gpus-per-node")))
         .transpose()?;
     let tiers = args.take("--tiers");
+    let trace_path = args.take("--trace");
     let codec = args
         .take("--codec")
         .map(|s| {
@@ -224,6 +249,10 @@ fn cmd_run(mut args: Args) -> Result<()> {
         spec.policy.compression = LegExec::mode_for(c);
         spec.codec = Some(c);
     }
+    let tracer = trace_path.as_ref().map(|_| Tracer::new());
+    if let Some(t) = &tracer {
+        spec.trace = Some(t.clone());
+    }
     let exec_backend = spec.backend;
     let comm = Communicator::from_spec(spec);
     let n = comm.nranks();
@@ -231,33 +260,37 @@ fn cmd_run(mut args: Args) -> Result<()> {
     let all_ranks = |e: usize| -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(e)).collect() };
 
     let spec = CollectiveSpec::auto();
-    let report = match op.as_str() {
-        "allreduce" => comm.allreduce(all_ranks(elems), &spec)?,
-        "allreduce-ring" => {
-            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Ring))?
-        }
+    let result = match op.as_str() {
+        "allreduce" => comm.allreduce(all_ranks(elems), &spec),
+        "allreduce-ring" => comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Ring)),
         "allreduce-redoub" => comm.allreduce(
             all_ranks(elems),
             &CollectiveSpec::hinted(AlgoHint::Force(Algo::RecursiveDoubling)),
-        )?,
+        ),
         "allreduce-hier" => {
-            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))?
+            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))
         }
         "allreduce-tree" => {
-            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial))?
+            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial))
         }
-        "reduce_scatter" => comm.reduce_scatter(all_ranks(elems), &spec)?,
+        "reduce_scatter" => comm.reduce_scatter(all_ranks(elems), &spec),
         "reduce_scatter-hier" => {
-            comm.reduce_scatter(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))?
+            comm.reduce_scatter(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))
         }
-        "allgather" => comm.allgather(all_ranks(elems / n), &spec)?,
+        "allgather" => comm.allgather(all_ranks(elems / n), &spec),
         "allgather-hier" => {
-            comm.allgather(all_ranks(elems / n), &CollectiveSpec::forced(Algo::Hierarchical))?
+            comm.allgather(all_ranks(elems / n), &CollectiveSpec::forced(Algo::Hierarchical))
         }
-        "scatter" => comm.scatter(exp::virtual_root_inputs(n, size_mb << 20), &spec)?,
-        "bcast" => comm.bcast(exp::virtual_root_inputs(n, size_mb << 20), &spec)?,
-        other => return Err(Error::config(format!("unknown --op `{other}`"))),
+        "scatter" => comm.scatter(exp::virtual_root_inputs(n, size_mb << 20), &spec),
+        "bcast" => comm.bcast(exp::virtual_root_inputs(n, size_mb << 20), &spec),
+        other => Err(Error::config(format!("unknown --op `{other}`"))),
     };
+    // Export the trace before propagating any error: a partial trace
+    // of a failed run is the flight recorder's whole point.
+    if let (Some(path), Some(t)) = (&trace_path, &tracer) {
+        write_trace(path, t)?;
+    }
+    let report = result?;
 
     println!(
         "{op} | variant {} | {} ranks | {} MB | backend {}",
@@ -397,6 +430,8 @@ fn cmd_stack(mut args: Args) -> Result<()> {
                 .ok_or_else(|| Error::config(format!("bad --codec `{s}` (see `gzccl help`)")))
         })
         .transpose()?;
+    let trace_path = args.take("--trace");
+    let tracer = trace_path.as_ref().map(|_| Tracer::new());
     let engine = Engine::discover().ok();
     let cfg = StackingConfig {
         ranks,
@@ -405,8 +440,17 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         accuracy_target,
         adaptive,
         codec,
+        trace: tracer.clone(),
         ..Default::default()
     };
+    let result = cmd_stack_variants(&cfg, engine.as_ref());
+    if let (Some(path), Some(t)) = (&trace_path, &tracer) {
+        write_trace(path, t)?;
+    }
+    result
+}
+
+fn cmd_stack_variants(cfg: &StackingConfig, engine: Option<&Engine>) -> Result<()> {
     for v in [
         StackingVariant::CrayMpi,
         StackingVariant::Nccl,
@@ -415,7 +459,7 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         StackingVariant::GzcclHier,
         StackingVariant::Cprp2p,
     ] {
-        match run_stacking(&cfg, v, engine.as_ref()) {
+        match run_stacking(cfg, v, engine) {
             Ok(out) => {
                 let planned = match out.planned_eb {
                     Some(eb) => format!(" planned-eb {eb:.2e}"),
@@ -490,6 +534,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if codec.is_some() && !compress {
         return Err(Error::config("--codec conflicts with --no-compress"));
     }
+    let trace_path = args.take("--trace");
+    let tracer = trace_path.as_ref().map(|_| Tracer::new());
     let engine = Engine::discover()?;
     let cfg = DdpConfig {
         ranks,
@@ -498,9 +544,14 @@ fn cmd_train(mut args: Args) -> Result<()> {
         accuracy_target,
         adaptive,
         codec,
+        trace: tracer.clone(),
         ..Default::default()
     };
-    let out = train_ddp(&cfg, &engine)?;
+    let out = train_ddp(&cfg, &engine);
+    if let (Some(path), Some(t)) = (&trace_path, &tracer) {
+        write_trace(path, t)?;
+    }
+    let out = out?;
     if let Some(eb) = out.planned_eb {
         println!(
             "accuracy budget: planned eb {eb:.3e} | per-step bound {:.3e} | observed max {:.3e} | violations {}",

@@ -9,6 +9,44 @@ use crate::topo::TierTree;
 use super::link::{LinkClass, LinkModel};
 use super::topology::Topology;
 
+/// One shared-stage reservation a message made on its way through the
+/// fabric (flight-recorder detail; see [`Fabric::deliver_traced`]).
+#[derive(Debug, Clone)]
+pub struct Hop {
+    /// Stage kind: `nic-tx`, `up-tx`, `up-rx` or `nic-rx`.
+    pub kind: &'static str,
+    /// Crossing tier for uplink stages (≥ 2); 0 for NIC stages.
+    pub tier: usize,
+    /// When the message was ready for this stage, virtual seconds.
+    pub ready: f64,
+    /// Queueing delay before the stage started serving it, seconds.
+    pub wait: f64,
+}
+
+/// The route one delivery took: its crossing tier and every shared
+/// stage it reserved, with per-stage queue waits. Filled by
+/// [`Fabric::deliver_traced`] so the flight recorder can attribute
+/// NIC serialization and rack/pod uplink contention on the timeline.
+#[derive(Debug, Clone, Default)]
+pub struct DeliverPath {
+    /// Lowest-common-ancestor tier of the endpoints (0 = same node:
+    /// the message rode NVLink and reserved nothing).
+    pub lca: usize,
+    /// Reserved stages in physical order.
+    pub hops: Vec<Hop>,
+}
+
+impl DeliverPath {
+    fn hop(&mut self, kind: &'static str, tier: usize, ready: VirtTime, start: VirtTime) {
+        self.hops.push(Hop {
+            kind,
+            tier,
+            ready: ready.as_secs(),
+            wait: start.since(ready),
+        });
+    }
+}
+
 /// Network fabric for one simulated cluster.
 ///
 /// Internode messages serialize on the sender's egress NIC and the
@@ -172,13 +210,46 @@ impl Fabric {
     /// crossing rack/pod boundaries, uplink — slots as a side effect,
     /// so concurrent senders contend at every shared stage.
     pub fn deliver(&self, from: usize, to: usize, bytes: usize, depart: VirtTime) -> VirtTime {
+        self.deliver_path(from, to, bytes, depart, None)
+    }
+
+    /// [`Fabric::deliver`] that additionally records the route into
+    /// `path`: the crossing tier and every shared-stage reservation
+    /// with its queue wait. Timeline side effects are identical to an
+    /// untraced delivery.
+    pub fn deliver_traced(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        depart: VirtTime,
+        path: &mut DeliverPath,
+    ) -> VirtTime {
+        self.deliver_path(from, to, bytes, depart, Some(path))
+    }
+
+    fn deliver_path(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        depart: VirtTime,
+        mut path: Option<&mut DeliverPath>,
+    ) -> VirtTime {
         let lca = self.tree.lca_tier(from, to);
+        if let Some(p) = path.as_deref_mut() {
+            p.lca = lca;
+            p.hops.clear();
+        }
         if lca == 0 {
             return depart + self.intranode.transfer_time(bytes);
         }
         let ser = self.internode.serialization_time(bytes);
         let tx = &self.nic_tx[self.nic_of(from)];
         let (tx_start, _) = tx.reserve(depart, ser);
+        if let Some(p) = path.as_deref_mut() {
+            p.hop("nic-tx", 0, depart, tx_start);
+        }
         // Cut-through: each downstream stage follows the upstream start
         // by that stage's wire latency, overlapping serialization. The
         // physical order is NIC egress, then the sender side's uplinks
@@ -193,6 +264,9 @@ impl Fabric {
             let ser_u = lm.serialization_time(bytes);
             let g_from = self.tree.group_of(t - 1, from);
             let (u_start, u_end) = self.up_tx[t - 2][g_from].reserve(start, ser_u);
+            if let Some(p) = path.as_deref_mut() {
+                p.hop("up-tx", t, start, u_start);
+            }
             start = u_start + lm.alpha;
             chain_end = chain_end.join(u_end);
         }
@@ -201,11 +275,17 @@ impl Fabric {
             let ser_u = lm.serialization_time(bytes);
             let g_to = self.tree.group_of(t - 1, to);
             let (u_start, u_end) = self.up_rx[t - 2][g_to].reserve(start, ser_u);
+            if let Some(p) = path.as_deref_mut() {
+                p.hop("up-rx", t, start, u_start);
+            }
             start = u_start;
             chain_end = chain_end.join(u_end);
         }
         let rx = &self.nic_rx[self.nic_of(to)];
-        let (_, rx_end) = rx.reserve(start, ser);
+        let (rx_start, rx_end) = rx.reserve(start, ser);
+        if let Some(p) = path {
+            p.hop("nic-rx", 0, start, rx_start);
+        }
         rx_end.join(chain_end)
     }
 
@@ -303,6 +383,20 @@ impl FabricSlice {
     pub fn deliver(&self, from: usize, to: usize, bytes: usize, depart: VirtTime) -> VirtTime {
         self.fabric
             .deliver(self.base + from, self.base + to, bytes, depart)
+    }
+
+    /// [`FabricSlice::deliver`] recording the route into `path` (see
+    /// [`Fabric::deliver_traced`]).
+    pub fn deliver_traced(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        depart: VirtTime,
+        path: &mut DeliverPath,
+    ) -> VirtTime {
+        self.fabric
+            .deliver_traced(self.base + from, self.base + to, bytes, depart, path)
     }
 }
 

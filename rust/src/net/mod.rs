@@ -18,6 +18,6 @@ pub mod fabric;
 pub mod link;
 pub mod topology;
 
-pub use fabric::{Fabric, FabricSlice};
+pub use fabric::{DeliverPath, Fabric, FabricSlice, Hop};
 pub use link::{default_uplinks, LinkClass, LinkModel};
 pub use topology::Topology;

@@ -1,0 +1,265 @@
+//! JSON exporters: Chrome-trace/Perfetto events and flat metrics.
+//!
+//! The trace format is the Chrome trace-event JSON object form
+//! (`{"traceEvents": [...]}`), loadable in <https://ui.perfetto.dev>
+//! and `chrome://tracing`. Virtual time is the track clock (`ts`/`dur`
+//! in virtual microseconds); each track (rank, or tenant actor) is a
+//! process, with lanes (host / net / copy engines / GPU streams) as
+//! threads. Spans are complete events (`"ph": "X"`), instant events are
+//! `"ph": "i"`, and track naming uses the standard `"M"` metadata
+//! events — no `B`/`E` pairs are ever emitted, so balance is
+//! structural. Multiple runs are laid out sequentially on one timeline,
+//! separated by run-boundary instants.
+//!
+//! Everything is hand-formatted (the crate is std-only, like the bench
+//! artifact writers); string values pass through [`esc`].
+
+use std::collections::BTreeSet;
+use std::fmt::Write;
+
+use super::{InstantRec, MetricVal, MetricsRegistry, TraceRun};
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format virtual seconds as trace microseconds (ns resolution).
+fn us(t: f64) -> String {
+    format!("{:.3}", t * 1e6)
+}
+
+fn args_json(args: &[(&'static str, String)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{}\": \"{}\"", esc(k), esc(v));
+    }
+    out.push('}');
+    out
+}
+
+fn instant_event(ev: &InstantRec, offset: f64, scope: &str, pid: usize) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"{}\", \"pid\": {}, \"tid\": 0, \
+         \"ts\": {}, \"args\": {}}}",
+        esc(&ev.name),
+        scope,
+        pid,
+        us(ev.t + offset),
+        args_json(&ev.args),
+    )
+}
+
+/// Chrome-trace JSON over owned runs (see module docs).
+pub fn chrome_json(runs: &[TraceRun]) -> String {
+    let refs: Vec<&TraceRun> = runs.iter().collect();
+    chrome_json_refs(&refs)
+}
+
+/// Chrome-trace JSON over borrowed runs, laid out sequentially.
+pub fn chrome_json_refs(runs: &[&TraceRun]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    // Track naming metadata: union over runs, first label wins.
+    let mut named: BTreeSet<usize> = BTreeSet::new();
+    for run in runs {
+        for (&id, track) in &run.tracks {
+            if !named.insert(id) {
+                continue;
+            }
+            let label = run
+                .labels
+                .get(&id)
+                .cloned()
+                .unwrap_or_else(|| format!("rank {id}"));
+            events.push(format!(
+                "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {id}, \
+                 \"args\": {{\"name\": \"{}\"}}}}",
+                esc(&label)
+            ));
+            events.push(format!(
+                "{{\"name\": \"process_sort_index\", \"ph\": \"M\", \"pid\": {id}, \
+                 \"args\": {{\"sort_index\": {id}}}}}"
+            ));
+            let mut seen = BTreeSet::new();
+            for s in &track.spans {
+                if seen.insert(s.lane.tid()) {
+                    events.push(format!(
+                        "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {id}, \
+                         \"tid\": {}, \"args\": {{\"name\": \"{}\"}}}}",
+                        s.lane.tid(),
+                        esc(&s.lane.label())
+                    ));
+                }
+            }
+        }
+    }
+    // Span + instant payload, one run after another on the timeline.
+    let mut offset = 0.0f64;
+    for (ri, run) in runs.iter().enumerate() {
+        if runs.len() > 1 {
+            events.push(format!(
+                "{{\"name\": \"run {ri} start\", \"ph\": \"i\", \"s\": \"g\", \"pid\": 0, \
+                 \"tid\": 0, \"ts\": {}, \"args\": {}}}",
+                us(offset),
+                meta_json(&run.meta),
+            ));
+        }
+        for (&id, track) in &run.tracks {
+            for s in &track.spans {
+                let mut args = vec![];
+                if let Some(p) = s.charge {
+                    args.push(("phase", p.label().to_string()));
+                }
+                if let Some(l) = s.leg {
+                    args.push(("leg", l.to_string()));
+                }
+                args.extend(s.args.iter().cloned());
+                events.push(format!(
+                    "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"pid\": {id}, \
+                     \"tid\": {}, \"ts\": {}, \"dur\": {}, \"args\": {}}}",
+                    esc(&s.name),
+                    s.cat.label(),
+                    s.lane.tid(),
+                    us(s.start + offset),
+                    us(s.dur),
+                    args_json(&args),
+                ));
+            }
+            for ev in &track.instants {
+                events.push(instant_event(ev, offset, "t", id));
+            }
+        }
+        for ev in &run.instants {
+            events.push(instant_event(ev, offset, "g", 0));
+        }
+        offset += run.root_end();
+    }
+    let meta = if runs.len() == 1 { meta_json(&runs[0].meta) } else { "{}".to_string() };
+    format!(
+        "{{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {meta},\n\"traceEvents\": [\n{}\n]\n}}\n",
+        events.join(",\n")
+    )
+}
+
+fn meta_json(meta: &[(String, String)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in meta.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{}\": \"{}\"", esc(k), esc(v));
+    }
+    out.push('}');
+    out
+}
+
+/// Flat metrics JSON: one sorted object of typed entries.
+pub fn metrics_json(reg: &MetricsRegistry) -> String {
+    let mut body: Vec<String> = Vec::new();
+    for (k, v) in &reg.entries {
+        let entry = match v {
+            MetricVal::Counter(c) => {
+                format!("    \"{}\": {{\"type\": \"counter\", \"value\": {c}}}", esc(k))
+            }
+            MetricVal::Gauge(g) => {
+                format!("    \"{}\": {{\"type\": \"gauge\", \"value\": {g}}}", esc(k))
+            }
+            MetricVal::Hist(h) => format!(
+                "    \"{}\": {{\"type\": \"histogram\", \"count\": {}, \"sum\": {}, \
+                 \"min\": {}, \"max\": {}, \"mean\": {}}}",
+                esc(k),
+                h.count,
+                h.sum,
+                h.min,
+                h.max,
+                h.mean()
+            ),
+        };
+        body.push(entry);
+    }
+    format!(
+        "{{\n  \"schema_version\": 1,\n  \"metrics\": {{\n{}\n  }}\n}}\n",
+        body.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Lane, SpanCat, TrackBuf, Tracer};
+    use super::*;
+    use crate::sim::Phase;
+
+    fn run() -> TraceRun {
+        let tr = Tracer::new();
+        let mut b = TrackBuf::new(3);
+        b.open_root("collective", 0.0);
+        b.span("compress", SpanCat::Phase, Lane::Gpu(0), 0.5e-6, 1.0e-6, Some(Phase::Cpr));
+        b.instant("leg-warning", 1e-6, vec![("message", "q\"uote".into())]);
+        b.counter_add("wire_bytes.internode", 64.0);
+        b.close_all(2e-6);
+        tr.sink(b);
+        tr.instant("tuner-decision", 0.0, vec![("algo", "Ring".into())]);
+        std::sync::Arc::try_unwrap(tr.take_run(vec![("op".into(), "Allreduce".into())]))
+            .ok()
+            .unwrap()
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let j = run().to_chrome_json();
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"traceEvents\": ["));
+        assert!(j.contains("\"ph\": \"X\""));
+        assert!(j.contains("\"ph\": \"i\""));
+        assert!(j.contains("\"ph\": \"M\""));
+        assert!(j.contains("\"name\": \"rank 3\""));
+        assert!(j.contains("\"phase\": \"CPR\""));
+        // Escaped quote in the warning message survived.
+        assert!(j.contains("q\\\"uote"));
+        // No unbalanced begin/end events are ever emitted.
+        assert!(!j.contains("\"ph\": \"B\"") && !j.contains("\"ph\": \"E\""));
+    }
+
+    #[test]
+    fn multi_run_layout_offsets_sequentially() {
+        let a = run();
+        let b = run();
+        let j = chrome_json(&[a.clone(), b]);
+        assert!(j.contains("run 0 start"));
+        assert!(j.contains("run 1 start"));
+        // Second run's root starts at the first run's end (2 us).
+        assert!(j.contains("\"ts\": 2.000"));
+        let _ = a;
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let reg = run().metrics_registry();
+        let j = reg.to_json();
+        assert!(j.contains("\"wire_bytes.internode\": {\"type\": \"counter\", \"value\": 64}"));
+        assert!(j.contains("\"schema_version\": 1"));
+    }
+
+    #[test]
+    fn escaping_covers_controls() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,828 @@
+//! Flight recorder: virtual-time span tracing and a metrics registry.
+//!
+//! gZCCL's central argument (Fig. 2) is that collective time hides
+//! underutilized GPUs and serialized compression stages — an argument
+//! that only stays checkable at scale if every leg, kernel stage and
+//! uplink-queue wait is attributable on a timeline. This module is the
+//! one recording contract threaded through the coordinator, engine,
+//! executor, fabric, tuner and CLI layers:
+//!
+//! * A [`Tracer`] is a cheap cloneable handle to a shared sink. Each
+//!   rank records into its own [`TrackBuf`] (nested spans: collective →
+//!   leg → phase → codec stage; instant events; metric samples) and
+//!   flushes it once at [`crate::coordinator::RankCtx::finish`].
+//!   Because ranks only ever write their own track, and all span
+//!   timestamps are *virtual*, the two execution backends
+//!   ([`crate::coordinator::ExecBackend`]) produce bit-identical span
+//!   trees — the recording is deterministic by construction.
+//! * A [`MetricsRegistry`] aggregates counters / gauges / histograms
+//!   across ranks (bytes moved per link class, compression ratio per
+//!   codec, uplink queue-wait, Jain fairness per tenant).
+//! * [`TraceRun::to_chrome_json`] emits Chrome-trace / Perfetto JSON
+//!   with virtual time as the track clock and ranks (or tenant/rank
+//!   actors) as tracks; [`MetricsRegistry::to_json`] emits a flat
+//!   metrics JSON.
+//!
+//! **Overhead guarantees.** Tracing is disabled by default
+//! (`ClusterSpec::trace == None`): every hook in the hot path is a
+//! single `Option` discriminant test. More fundamentally, recording can
+//! never perturb *virtual* time — spans observe timestamps that the
+//! cost models already produced; they never feed back into a timeline
+//! reservation — so makespans are identical traced, untraced, and with
+//! the subsystem compiled out.
+//!
+//! **Accounting invariant.** Every charge against a rank's
+//! [`crate::sim::Breakdown`] emits exactly one charged span with the
+//! same duration, in the same order, so [`TrackBuf::breakdown`] is
+//! bit-for-bit equal to the clock's own phase sums (debug-asserted at
+//! flush). Root spans cover `[0, rank_finish]`, so the max root-span
+//! end across tracks equals `RunReport::makespan` exactly.
+
+pub mod export;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{Breakdown, Phase};
+
+/// Which simulated engine a span occupies within its track. Lanes map
+/// to Chrome trace `tid`s. Only the host lane is strictly nested (the
+/// rank clock is monotone); kernel and copy-engine lanes are busy
+/// windows that may overlap the host timeline, and copy spans include
+/// their engine queue wait (so a queued copy's span can overlap its
+/// predecessor's on the same lane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// The rank's host timeline (the [`crate::sim::RankClock`]).
+    Host,
+    /// Network waits attributed to this rank's in-flight messages.
+    Net,
+    /// Host→device copy engine.
+    H2d,
+    /// Device→host copy engine.
+    D2h,
+    /// GPU stream `0` = default stream, `1 + i` = non-default `i`.
+    Gpu(u32),
+}
+
+impl Lane {
+    /// Chrome trace `tid` for this lane.
+    pub fn tid(self) -> u32 {
+        match self {
+            Lane::Host => 0,
+            Lane::Net => 1,
+            Lane::H2d => 2,
+            Lane::D2h => 3,
+            Lane::Gpu(s) => 4 + s,
+        }
+    }
+
+    /// Human label for thread-name metadata.
+    pub fn label(self) -> String {
+        match self {
+            Lane::Host => "host".into(),
+            Lane::Net => "net".into(),
+            Lane::H2d => "h2d".into(),
+            Lane::D2h => "d2h".into(),
+            Lane::Gpu(0) => "gpu.default".into(),
+            Lane::Gpu(s) => format!("gpu.s{}", s - 1),
+        }
+    }
+}
+
+/// Span taxonomy level (Chrome trace `cat`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanCat {
+    /// The per-rank root: one span covering the whole collective.
+    Collective,
+    /// One schedule leg ([`crate::coordinator::RankCtx::begin_leg`]).
+    Leg,
+    /// One phase charge (CPR / COMM / DATAMOVE / REDU / OTHERS).
+    Phase,
+    /// A codec pipeline stage within a compression kernel.
+    Codec,
+    /// A fabric reservation wait (NIC serialization, uplink queue).
+    Net,
+}
+
+impl SpanCat {
+    /// Chrome trace category string.
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanCat::Collective => "collective",
+            SpanCat::Leg => "leg",
+            SpanCat::Phase => "phase",
+            SpanCat::Codec => "codec",
+            SpanCat::Net => "net",
+        }
+    }
+}
+
+/// One completed span: `[start, start + dur]` in virtual seconds.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    /// Span name (e.g. `compress`, `leg2`, `wait:up-tx.t2`).
+    pub name: String,
+    /// Taxonomy level.
+    pub cat: SpanCat,
+    /// Track lane.
+    pub lane: Lane,
+    /// Start, virtual seconds.
+    pub start: f64,
+    /// Duration, virtual seconds (`NaN` while still open).
+    pub dur: f64,
+    /// The [`Breakdown`] phase this span's duration was charged to, or
+    /// `None` for structural spans (root, legs, codec stages, waits).
+    pub charge: Option<Phase>,
+    /// Schedule leg index active when the span was recorded.
+    pub leg: Option<u32>,
+    /// Extra key/value annotations.
+    pub args: Vec<(&'static str, String)>,
+}
+
+impl SpanRec {
+    /// End timestamp, virtual seconds.
+    pub fn end(&self) -> f64 {
+        self.start + self.dur
+    }
+}
+
+/// One instant event (Chrome trace `ph: "i"`): tuner decisions with
+/// their rejected alternatives, budget vetoes, adaptive eb relaxations,
+/// leg warnings, deadlock diagnostics.
+#[derive(Debug, Clone)]
+pub struct InstantRec {
+    /// Event name (e.g. `tuner-decision`, `budget-veto`, `deadlock`).
+    pub name: String,
+    /// Virtual timestamp.
+    pub t: f64,
+    /// Owning track, or `None` for run-global events.
+    pub track: Option<usize>,
+    /// Key/value detail (e.g. the rejected algorithm candidates).
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// A metric value in the registry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricVal {
+    /// Monotone sum across ranks (e.g. bytes per link class).
+    Counter(f64),
+    /// Last-write scalar (e.g. Jain fairness).
+    Gauge(f64),
+    /// Sample distribution (e.g. uplink queue-wait seconds).
+    Hist(HistStat),
+}
+
+/// Histogram summary statistics (count / sum / min / max).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistStat {
+    /// Number of samples.
+    pub count: u64,
+    /// Sum of samples.
+    pub sum: f64,
+    /// Smallest sample.
+    pub min: f64,
+    /// Largest sample.
+    pub max: f64,
+}
+
+impl HistStat {
+    fn one(v: f64) -> Self {
+        HistStat {
+            count: 1,
+            sum: v,
+            min: v,
+            max: v,
+        }
+    }
+
+    fn absorb(&mut self, o: HistStat) {
+        self.count += o.count;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    /// Mean sample value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+fn merge_metric(into: &mut BTreeMap<String, MetricVal>, key: &str, v: MetricVal) {
+    match (into.get_mut(key), v) {
+        (Some(MetricVal::Counter(a)), MetricVal::Counter(b)) => *a += b,
+        (Some(MetricVal::Hist(a)), MetricVal::Hist(b)) => a.absorb(b),
+        (Some(slot), v) => *slot = v, // gauges and kind changes: last write
+        (None, v) => {
+            into.insert(key.to_string(), v);
+        }
+    }
+}
+
+/// One rank's (or actor's) recording buffer. Owned exclusively by the
+/// recording [`crate::coordinator::RankCtx`] until flushed into the
+/// shared [`Tracer`] — no lock is taken per span.
+#[derive(Debug, Clone)]
+pub struct TrackBuf {
+    /// Track id: the rank, or `actor_base + rank` under multi-tenancy.
+    pub track: usize,
+    /// Completed spans, in emission order (deterministic per rank).
+    pub spans: Vec<SpanRec>,
+    /// Track-local instant events (e.g. leg warnings).
+    pub instants: Vec<InstantRec>,
+    /// Track-local metric samples.
+    pub metrics: BTreeMap<String, MetricVal>,
+    root: Option<usize>,
+    open_leg: Option<usize>,
+    cur_leg: Option<u32>,
+}
+
+impl TrackBuf {
+    /// An empty buffer for `track`.
+    pub fn new(track: usize) -> Self {
+        TrackBuf {
+            track,
+            spans: Vec::new(),
+            instants: Vec::new(),
+            metrics: BTreeMap::new(),
+            root: None,
+            open_leg: None,
+            cur_leg: None,
+        }
+    }
+
+    /// Open the per-rank root span at `start` (normally 0).
+    pub fn open_root(&mut self, name: &str, start: f64) {
+        self.spans.push(SpanRec {
+            name: name.to_string(),
+            cat: SpanCat::Collective,
+            lane: Lane::Host,
+            start,
+            dur: f64::NAN,
+            charge: None,
+            leg: None,
+            args: Vec::new(),
+        });
+        self.root = Some(self.spans.len() - 1);
+    }
+
+    /// Open a leg span, closing any previously open one at the same
+    /// timestamp (the leg interpreter calls `begin_leg` back to back).
+    pub fn open_leg(&mut self, leg: u32, start: f64, args: Vec<(&'static str, String)>) {
+        self.close_leg(start);
+        self.spans.push(SpanRec {
+            name: format!("leg{leg}"),
+            cat: SpanCat::Leg,
+            lane: Lane::Host,
+            start,
+            dur: f64::NAN,
+            charge: None,
+            leg: Some(leg),
+            args,
+        });
+        self.open_leg = Some(self.spans.len() - 1);
+        self.cur_leg = Some(leg);
+    }
+
+    /// Close the open leg span (no-op when none is open).
+    pub fn close_leg(&mut self, end: f64) {
+        if let Some(i) = self.open_leg.take() {
+            self.spans[i].dur = end - self.spans[i].start;
+        }
+        self.cur_leg = None;
+    }
+
+    /// Record a completed span; the active leg index is attached.
+    pub fn span(
+        &mut self,
+        name: impl Into<String>,
+        cat: SpanCat,
+        lane: Lane,
+        start: f64,
+        dur: f64,
+        charge: Option<Phase>,
+    ) {
+        self.spans.push(SpanRec {
+            name: name.into(),
+            cat,
+            lane,
+            start,
+            dur,
+            charge,
+            leg: self.cur_leg,
+            args: Vec::new(),
+        });
+    }
+
+    /// Record a track-local instant event.
+    pub fn instant(&mut self, name: impl Into<String>, t: f64, args: Vec<(&'static str, String)>) {
+        self.instants.push(InstantRec {
+            name: name.into(),
+            t,
+            track: Some(self.track),
+            args,
+        });
+    }
+
+    /// Add to a counter metric.
+    pub fn counter_add(&mut self, key: &str, v: f64) {
+        merge_metric(&mut self.metrics, key, MetricVal::Counter(v));
+    }
+
+    /// Record a histogram sample.
+    pub fn hist_add(&mut self, key: &str, v: f64) {
+        merge_metric(&mut self.metrics, key, MetricVal::Hist(HistStat::one(v)));
+    }
+
+    /// Close any open leg and the root span at `end` (flush time).
+    pub fn close_all(&mut self, end: f64) {
+        self.close_leg(end);
+        if let Some(i) = self.root.take() {
+            self.spans[i].dur = end - self.spans[i].start;
+        }
+    }
+
+    /// Phase sums derived from the charged spans — bit-identical to the
+    /// [`crate::sim::RankClock`]'s own accounting (same durations added
+    /// in the same order).
+    pub fn breakdown(&self) -> Breakdown {
+        let mut b = Breakdown::default();
+        for s in &self.spans {
+            if let Some(p) = s.charge {
+                b.charge(p, s.dur);
+            }
+        }
+        b
+    }
+
+    /// End of the root span (0 when never opened/closed).
+    pub fn root_end(&self) -> f64 {
+        self.spans
+            .iter()
+            .find(|s| s.cat == SpanCat::Collective)
+            .map_or(0.0, |s| if s.dur.is_nan() { s.start } else { s.end() })
+    }
+}
+
+/// One completed recording: everything the tracer captured between two
+/// [`Tracer::take_run`] drains (normally exactly one collective
+/// dispatch).
+#[derive(Debug, Clone, Default)]
+pub struct TraceRun {
+    /// Per-track buffers, keyed by track id (sorted — deterministic).
+    pub tracks: BTreeMap<usize, TrackBuf>,
+    /// Track id → display label (e.g. `tenantA/3`).
+    pub labels: BTreeMap<usize, String>,
+    /// Run-global instant events, in record order.
+    pub instants: Vec<InstantRec>,
+    /// Run-global metrics (e.g. fairness gauges).
+    pub metrics: BTreeMap<String, MetricVal>,
+    /// Run metadata (op, algo, makespan, …) for the export header.
+    pub meta: Vec<(String, String)>,
+}
+
+impl TraceRun {
+    /// Max root-span end across tracks — equals
+    /// `RunReport::makespan` exactly for a traced run.
+    pub fn root_end(&self) -> f64 {
+        self.tracks.values().map(|t| t.root_end()).fold(0.0, f64::max)
+    }
+
+    /// Total spans across all tracks.
+    pub fn span_count(&self) -> usize {
+        self.tracks.values().map(|t| t.spans.len()).sum()
+    }
+
+    /// Total instants (global + per-track).
+    pub fn instant_count(&self) -> usize {
+        self.instants.len() + self.tracks.values().map(|t| t.instants.len()).sum::<usize>()
+    }
+
+    /// Sum of every track's span-derived phase accounting.
+    pub fn total_breakdown(&self) -> Breakdown {
+        let mut b = Breakdown::default();
+        for t in self.tracks.values() {
+            b += t.breakdown();
+        }
+        b
+    }
+
+    /// Aggregate every track's metrics plus the run-global ones into a
+    /// single registry, with derived per-codec compression ratios.
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::default();
+        for t in self.tracks.values() {
+            for (k, v) in &t.metrics {
+                merge_metric(&mut reg.entries, k, *v);
+            }
+        }
+        for (k, v) in &self.metrics {
+            merge_metric(&mut reg.entries, k, *v);
+        }
+        reg.derive_ratios();
+        reg
+    }
+
+    /// A canonical textual digest of the span tree — track id, lane,
+    /// category, leg, name and *bit-exact* timestamps — used by the
+    /// backend-equivalence tests. Two digests are equal iff the span
+    /// trees are identical in names, nesting and virtual durations.
+    pub fn digest(&self) -> String {
+        let mut out = String::new();
+        for (id, t) in &self.tracks {
+            for s in &t.spans {
+                use fmt::Write;
+                let _ = writeln!(
+                    out,
+                    "{}|{}|{}|{}|{}|{:016x}|{:016x}",
+                    id,
+                    s.lane.tid(),
+                    s.cat.label(),
+                    s.leg.map_or(-1i64, |l| l as i64),
+                    s.name,
+                    s.start.to_bits(),
+                    s.dur.to_bits(),
+                );
+            }
+        }
+        out
+    }
+
+    /// One-paragraph human summary.
+    pub fn summary(&self) -> TraceSummary {
+        TraceSummary {
+            tracks: self.tracks.len(),
+            spans: self.span_count(),
+            instants: self.instant_count(),
+            root_end: self.root_end(),
+            breakdown: self.total_breakdown(),
+        }
+    }
+
+    /// Structural well-formedness: every span closed with a finite
+    /// non-negative duration, and host-lane spans properly nested per
+    /// track (the validator CI runs against the exported JSON enforces
+    /// the same invariants schema-side).
+    pub fn check_well_formed(&self) -> Result<(), String> {
+        for (id, t) in &self.tracks {
+            let mut host: Vec<&SpanRec> = Vec::new();
+            for s in &t.spans {
+                if !s.start.is_finite() || !s.dur.is_finite() || s.dur < 0.0 || s.start < 0.0 {
+                    return Err(format!(
+                        "track {id}: span {:?} has bad interval [{}, +{}]",
+                        s.name, s.start, s.dur
+                    ));
+                }
+                if s.lane == Lane::Host {
+                    host.push(s);
+                }
+            }
+            // Host spans must nest like a stack: sort by (start asc,
+            // end desc) and sweep.
+            host.sort_by(|a, b| {
+                a.start
+                    .partial_cmp(&b.start)
+                    .unwrap()
+                    .then(b.end().partial_cmp(&a.end()).unwrap())
+            });
+            let mut stack: Vec<f64> = Vec::new();
+            for s in host {
+                while let Some(&top) = stack.last() {
+                    if top <= s.start {
+                        stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some(&top) = stack.last() {
+                    if s.end() > top {
+                        return Err(format!(
+                            "track {id}: host span {:?} [{}, {}] escapes its parent (ends {})",
+                            s.name,
+                            s.start,
+                            s.end(),
+                            top
+                        ));
+                    }
+                }
+                stack.push(s.end());
+            }
+        }
+        Ok(())
+    }
+
+    /// Chrome-trace / Perfetto JSON for this run (virtual time as the
+    /// track clock, tracks as processes).
+    pub fn to_chrome_json(&self) -> String {
+        export::chrome_json(std::slice::from_ref(self))
+    }
+}
+
+/// Aggregated counters / gauges / histograms, exported as flat JSON.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    /// Metric name → aggregated value, sorted (deterministic export).
+    pub entries: BTreeMap<String, MetricVal>,
+}
+
+impl MetricsRegistry {
+    /// Look up a counter's value (0 when absent).
+    pub fn counter(&self, key: &str) -> f64 {
+        match self.entries.get(key) {
+            Some(MetricVal::Counter(v)) => *v,
+            _ => 0.0,
+        }
+    }
+
+    /// Look up a gauge's value.
+    pub fn gauge(&self, key: &str) -> Option<f64> {
+        match self.entries.get(key) {
+            Some(MetricVal::Gauge(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Look up a histogram.
+    pub fn hist(&self, key: &str) -> Option<HistStat> {
+        match self.entries.get(key) {
+            Some(MetricVal::Hist(h)) => Some(*h),
+            _ => None,
+        }
+    }
+
+    /// Set a gauge.
+    pub fn set_gauge(&mut self, key: &str, v: f64) {
+        merge_metric(&mut self.entries, key, MetricVal::Gauge(v));
+    }
+
+    /// Derive `cpr_ratio.<codec>` gauges from the per-codec
+    /// `cpr_in_bytes.<codec>` / `cpr_out_bytes.<codec>` counter pairs.
+    fn derive_ratios(&mut self) {
+        let mut ratios = Vec::new();
+        for (k, v) in &self.entries {
+            if let (Some(codec), MetricVal::Counter(inb)) =
+                (k.strip_prefix("cpr_in_bytes."), v)
+            {
+                let outb = self.counter(&format!("cpr_out_bytes.{codec}"));
+                if outb > 0.0 {
+                    ratios.push((format!("cpr_ratio.{codec}"), inb / outb));
+                }
+            }
+        }
+        for (k, r) in ratios {
+            self.set_gauge(&k, r);
+        }
+    }
+
+    /// Flat metrics JSON (see DESIGN.md for the schema).
+    pub fn to_json(&self) -> String {
+        export::metrics_json(self)
+    }
+}
+
+/// Human summary of a [`TraceRun`] (also what
+/// `CollectiveReport::trace_summary` prints).
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    /// Number of tracks (ranks/actors) that flushed.
+    pub tracks: usize,
+    /// Total span count.
+    pub spans: usize,
+    /// Total instant-event count.
+    pub instants: usize,
+    /// Max root-span end (== makespan), virtual seconds.
+    pub root_end: f64,
+    /// Span-derived phase sums over all tracks.
+    pub breakdown: Breakdown,
+}
+
+impl fmt::Display for TraceSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "trace: {} tracks, {} spans, {} instants; root end {:.6}s",
+            self.tracks, self.spans, self.instants, self.root_end
+        )?;
+        write!(f, "  span phases: {}", self.breakdown.percent_string())
+    }
+}
+
+#[derive(Debug, Default)]
+struct TracerInner {
+    tracks: BTreeMap<usize, TrackBuf>,
+    labels: BTreeMap<usize, String>,
+    instants: Vec<InstantRec>,
+    metrics: BTreeMap<String, MetricVal>,
+    archive: Vec<Arc<TraceRun>>,
+}
+
+/// Cheap cloneable handle to the shared trace sink. Create one, hand it
+/// to `CommBuilder::trace` (or set `ClusterSpec::trace`), dispatch
+/// collectives, then export with [`Tracer::chrome_json`] /
+/// [`Tracer::metrics_json`] — or consume the per-dispatch
+/// `CollectiveReport::trace` runs individually.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer(Arc<Mutex<TracerInner>>);
+
+impl Tracer {
+    /// A fresh, empty tracer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Label tracks `base .. base + n` as `label/0 .. label/{n-1}`
+    /// (tenant naming under multi-tenant runs).
+    pub fn label_tracks(&self, base: usize, n: usize, label: &str) {
+        let mut inner = self.0.lock().unwrap();
+        for r in 0..n {
+            inner.labels.insert(base + r, format!("{label}/{r}"));
+        }
+    }
+
+    /// Record a run-global instant event.
+    pub fn instant(&self, name: &str, t: f64, args: Vec<(&'static str, String)>) {
+        self.0.lock().unwrap().instants.push(InstantRec {
+            name: name.to_string(),
+            t,
+            track: None,
+            args,
+        });
+    }
+
+    /// Set a run-global gauge (e.g. `fairness.jain`).
+    pub fn gauge(&self, key: &str, v: f64) {
+        merge_metric(&mut self.0.lock().unwrap().metrics, key, MetricVal::Gauge(v));
+    }
+
+    /// Flush one rank's finished buffer into the sink. Called exactly
+    /// once per rank per run, from `RankCtx::finish`.
+    pub fn sink(&self, buf: TrackBuf) {
+        self.0.lock().unwrap().tracks.insert(buf.track, buf);
+    }
+
+    /// Whether anything has been recorded since the last drain.
+    pub fn has_pending(&self) -> bool {
+        let inner = self.0.lock().unwrap();
+        !inner.tracks.is_empty() || !inner.instants.is_empty() || !inner.metrics.is_empty()
+    }
+
+    /// Drain everything recorded since the previous drain into a
+    /// [`TraceRun`] stamped with `meta`, archiving it for the merged
+    /// exporters. One dispatch == one run.
+    pub fn take_run(&self, meta: Vec<(String, String)>) -> Arc<TraceRun> {
+        let mut inner = self.0.lock().unwrap();
+        let run = Arc::new(TraceRun {
+            tracks: std::mem::take(&mut inner.tracks),
+            labels: inner.labels.clone(),
+            instants: std::mem::take(&mut inner.instants),
+            metrics: std::mem::take(&mut inner.metrics),
+            meta,
+        });
+        inner.archive.push(run.clone());
+        run
+    }
+
+    /// Every run drained so far, in dispatch order.
+    pub fn runs(&self) -> Vec<Arc<TraceRun>> {
+        self.0.lock().unwrap().archive.clone()
+    }
+
+    /// Chrome-trace JSON over every archived run (plus any undrained
+    /// leftovers), laid out sequentially on one virtual timeline.
+    pub fn chrome_json(&self) -> String {
+        if self.has_pending() {
+            self.take_run(vec![("run".into(), "partial".into())]);
+        }
+        let runs = self.runs();
+        let views: Vec<&TraceRun> = runs.iter().map(|r| r.as_ref()).collect();
+        export::chrome_json_refs(&views)
+    }
+
+    /// Flat metrics JSON aggregated over every archived run.
+    pub fn metrics_json(&self) -> String {
+        if self.has_pending() {
+            self.take_run(vec![("run".into(), "partial".into())]);
+        }
+        let mut reg = MetricsRegistry::default();
+        for run in self.runs() {
+            for (k, v) in run.metrics_registry().entries {
+                merge_metric(&mut reg.entries, &k, v);
+            }
+        }
+        reg.to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf_with_spans() -> TrackBuf {
+        let mut b = TrackBuf::new(0);
+        b.open_root("collective", 0.0);
+        b.open_leg(0, 0.0, vec![]);
+        b.span("issue", SpanCat::Phase, Lane::Host, 0.0, 1.0, Some(Phase::Other));
+        b.span("compress", SpanCat::Phase, Lane::Gpu(0), 1.0, 2.0, Some(Phase::Cpr));
+        b.open_leg(1, 3.0, vec![]);
+        b.span("recv-wait", SpanCat::Phase, Lane::Host, 3.0, 0.5, Some(Phase::Comm));
+        b.close_all(4.0);
+        b
+    }
+
+    #[test]
+    fn spans_nest_and_breakdown_sums() {
+        let b = buf_with_spans();
+        assert_eq!(b.root_end(), 4.0);
+        let bd = b.breakdown();
+        assert_eq!(bd.get(Phase::Other), 1.0);
+        assert_eq!(bd.get(Phase::Cpr), 2.0);
+        assert_eq!(bd.get(Phase::Comm), 0.5);
+        // Leg 0 closed exactly where leg 1 opened.
+        let leg0 = b.spans.iter().find(|s| s.name == "leg0").unwrap();
+        assert_eq!(leg0.end(), 3.0);
+        let leg1 = b.spans.iter().find(|s| s.name == "leg1").unwrap();
+        assert_eq!((leg1.start, leg1.end()), (3.0, 4.0));
+        // The recv-wait rode leg 1's index.
+        let rw = b.spans.iter().find(|s| s.name == "recv-wait").unwrap();
+        assert_eq!(rw.leg, Some(1));
+    }
+
+    #[test]
+    fn tracer_drains_into_runs() {
+        let tr = Tracer::new();
+        tr.sink(buf_with_spans());
+        tr.instant("tuner-decision", 0.0, vec![("algo", "Ring".into())]);
+        tr.gauge("fairness.jain", 0.97);
+        assert!(tr.has_pending());
+        let run = tr.take_run(vec![("op".into(), "Allreduce".into())]);
+        assert!(!tr.has_pending());
+        assert_eq!(run.tracks.len(), 1);
+        assert_eq!(run.instant_count(), 1);
+        assert_eq!(run.root_end(), 4.0);
+        assert!(run.check_well_formed().is_ok());
+        let reg = run.metrics_registry();
+        assert_eq!(reg.gauge("fairness.jain"), Some(0.97));
+        // Drained again: empty.
+        let run2 = tr.take_run(vec![]);
+        assert_eq!(run2.span_count(), 0);
+        assert_eq!(tr.runs().len(), 2);
+    }
+
+    #[test]
+    fn digests_are_bit_exact() {
+        let tr = Tracer::new();
+        tr.sink(buf_with_spans());
+        let a = tr.take_run(vec![]).digest();
+        let tr2 = Tracer::new();
+        tr2.sink(buf_with_spans());
+        let b = tr2.take_run(vec![]).digest();
+        assert_eq!(a, b);
+        assert!(a.contains("compress"));
+    }
+
+    #[test]
+    fn metrics_merge_across_tracks() {
+        let mut a = TrackBuf::new(0);
+        a.counter_add("wire_bytes.internode", 100.0);
+        a.hist_add("queue_wait_s.nic", 1.0);
+        let mut b = TrackBuf::new(1);
+        b.counter_add("wire_bytes.internode", 50.0);
+        b.hist_add("queue_wait_s.nic", 3.0);
+        b.counter_add("cpr_in_bytes.cuszp", 80.0);
+        b.counter_add("cpr_out_bytes.cuszp", 20.0);
+        let tr = Tracer::new();
+        tr.sink(a);
+        tr.sink(b);
+        let reg = tr.take_run(vec![]).metrics_registry();
+        assert_eq!(reg.counter("wire_bytes.internode"), 150.0);
+        let h = reg.hist("queue_wait_s.nic").unwrap();
+        assert_eq!((h.count, h.sum, h.min, h.max), (2, 4.0, 1.0, 3.0));
+        assert_eq!(h.mean(), 2.0);
+        assert_eq!(reg.gauge("cpr_ratio.cuszp"), Some(4.0));
+    }
+
+    #[test]
+    fn well_formed_catches_escapes() {
+        let mut b = TrackBuf::new(0);
+        b.open_root("collective", 0.0);
+        b.open_leg(0, 0.0, vec![]);
+        b.close_leg(1.0);
+        // A host span escaping its (closed) parent leg is still fine as
+        // long as it fits the root; one escaping the root is not.
+        b.span("ok", SpanCat::Phase, Lane::Host, 0.5, 0.25, None);
+        b.close_all(2.0);
+        let tr = Tracer::new();
+        tr.sink(b.clone());
+        assert!(tr.take_run(vec![]).check_well_formed().is_ok());
+        b.span("bad", SpanCat::Phase, Lane::Host, 1.5, 10.0, None);
+        let tr2 = Tracer::new();
+        tr2.sink(b);
+        assert!(tr2.take_run(vec![]).check_well_formed().is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Flight-recorder suite: backend trace equivalence, exact span
+//! accounting, export sanity, and the disabled-by-default guarantee.
+//!
+//! The tracer's contract is stronger than "produces plausible JSON":
+//! (1) the event engine must emit the SAME span tree as the
+//! thread-per-rank oracle — names, nesting, lanes and bit-exact
+//! virtual timestamps — for every registered (op, algo) pair; (2) the
+//! span-derived phase sums must equal the `RankClock`'s own
+//! accounting exactly (the spans mirror every charge site 1:1); and
+//! (3) with no tracer attached the timeline must be bit-identical to
+//! an untraced run — tracing can never perturb what it observes.
+
+use gzccl::collectives::{Algo, Op};
+use gzccl::comm::{AlgoRegistry, CollectiveReport, CollectiveSpec, Communicator};
+use gzccl::coordinator::{DeviceBuf, ExecBackend};
+use gzccl::error::Result;
+use gzccl::obs::Tracer;
+use gzccl::testkit::Pcg32;
+
+fn real_inputs(n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Pcg32::new(seed, r as u64);
+            DeviceBuf::Real(rng.uniform_vec(d, -1.0, 1.0))
+        })
+        .collect()
+}
+
+/// Inputs shaped for `op`: rooted collectives feed the full vector at
+/// root 0 and empty buffers elsewhere.
+fn op_inputs(op: Op, n: usize, d: usize, seed: u64) -> Vec<DeviceBuf> {
+    match op {
+        Op::Scatter | Op::Bcast => {
+            let mut inputs = vec![DeviceBuf::Real(vec![]); n];
+            inputs[0] = real_inputs(1, d, seed).remove(0);
+            inputs
+        }
+        _ => real_inputs(n, d, seed),
+    }
+}
+
+fn dispatch(
+    comm: &Communicator,
+    op: Op,
+    inputs: Vec<DeviceBuf>,
+    spec: &CollectiveSpec,
+) -> Result<CollectiveReport> {
+    match op {
+        Op::Allreduce => comm.allreduce(inputs, spec),
+        Op::Allgather => comm.allgather(inputs, spec),
+        Op::ReduceScatter => comm.reduce_scatter(inputs, spec),
+        Op::Scatter => comm.scatter(inputs, spec),
+        Op::Bcast => comm.bcast(inputs, spec),
+    }
+}
+
+/// Run `(op, algo)` traced under `backend` and return the report (with
+/// its drained `TraceRun` attached).
+fn traced_run(op: Op, algo: Algo, backend: ExecBackend, seed: u64) -> CollectiveReport {
+    let n = 8;
+    let comm = Communicator::builder(n)
+        .gpus_per_node(2)
+        .error_bound(1e-3)
+        .backend(backend)
+        .trace(Tracer::new())
+        .build()
+        .expect("communicator");
+    dispatch(
+        &comm,
+        op,
+        op_inputs(op, n, 128, seed),
+        &CollectiveSpec::forced(algo),
+    )
+    .unwrap_or_else(|e| panic!("{op:?}/{algo:?} under {backend:?}: {e}"))
+}
+
+/// Satellite: every registered (op, algo) pair produces identical span
+/// trees — names, nesting, lanes, bit-exact virtual durations — under
+/// the thread oracle and the event engine.
+#[test]
+fn every_op_algo_pair_traces_identically_across_backends() {
+    for &op in &[
+        Op::Allreduce,
+        Op::Allgather,
+        Op::ReduceScatter,
+        Op::Scatter,
+        Op::Bcast,
+    ] {
+        for &algo in AlgoRegistry::supported(op) {
+            let t = traced_run(op, algo, ExecBackend::Threads, 11);
+            let e = traced_run(op, algo, ExecBackend::Events, 11);
+            let (tr, er) = (t.trace.as_ref().unwrap(), e.trace.as_ref().unwrap());
+            assert_eq!(
+                tr.digest(),
+                er.digest(),
+                "{op:?}/{algo:?}: span trees diverge between backends"
+            );
+            assert_eq!(
+                tr.instant_count(),
+                er.instant_count(),
+                "{op:?}/{algo:?}: instant counts diverge"
+            );
+            tr.check_well_formed()
+                .unwrap_or_else(|e| panic!("{op:?}/{algo:?} threads: {e}"));
+            er.check_well_formed()
+                .unwrap_or_else(|e| panic!("{op:?}/{algo:?} events: {e}"));
+            // Root spans close exactly at the makespan on both.
+            assert_eq!(tr.root_end(), t.report.makespan.as_secs(), "{op:?}/{algo:?}");
+            assert_eq!(er.root_end(), e.report.makespan.as_secs(), "{op:?}/{algo:?}");
+        }
+    }
+}
+
+/// The ISSUE's acceptance scenario: a traced 512-rank 4x16x8
+/// hierarchical Allreduce whose root spans sum to the makespan
+/// exactly, with identical span trees under both backends and a
+/// Perfetto-loadable export.
+#[test]
+fn traced_512_rank_hierarchical_allreduce_acceptance() {
+    let run = |backend: ExecBackend| -> CollectiveReport {
+        let comm = Communicator::builder(512)
+            .tiers(&[4, 16, 8])
+            .error_bound(1e-3)
+            .backend(backend)
+            .trace(Tracer::new())
+            .build()
+            .expect("communicator");
+        let inputs: Vec<DeviceBuf> = (0..512).map(|_| DeviceBuf::Virtual(1 << 16)).collect();
+        comm.allreduce(inputs, &CollectiveSpec::forced(Algo::Hierarchical))
+            .expect("hierarchical allreduce")
+    };
+    let t = run(ExecBackend::Threads);
+    let e = run(ExecBackend::Events);
+    assert_eq!(t.algo, Algo::Hierarchical);
+    let (tr, er) = (t.trace.as_ref().unwrap(), e.trace.as_ref().unwrap());
+    assert_eq!(tr.tracks.len(), 512);
+    // Root spans end exactly at the makespan — f64 equality, no slack.
+    assert_eq!(tr.root_end(), t.report.makespan.as_secs());
+    assert_eq!(er.root_end(), e.report.makespan.as_secs());
+    // Identical trees across backends, structurally well formed.
+    assert_eq!(tr.digest(), er.digest());
+    tr.check_well_formed().expect("threads trace well formed");
+    // Perfetto-loadable: complete events only, on the virtual clock.
+    let json = tr.to_chrome_json();
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"displayTimeUnit\""));
+    assert!(json.contains("\"ph\": \"X\""));
+    assert!(!json.contains("\"ph\": \"B\"") && !json.contains("\"ph\": \"E\""));
+    // The uplink tiers left wire-byte and queue-wait metrics behind.
+    let reg = tr.metrics_registry();
+    assert!(reg.counter("wire_bytes.internode") > 0.0, "{:?}", reg.entries);
+    assert!(reg.counter("wire_bytes.uplink_t2") > 0.0, "{:?}", reg.entries);
+    assert!(reg.hist("queue_wait_s.nic").is_some());
+    let summary = t.trace_summary().expect("traced dispatch has a summary");
+    assert_eq!(summary.tracks, 512);
+    assert_eq!(summary.root_end, t.report.makespan.as_secs());
+}
+
+/// Satellite: the span-derived phase sums equal the clock's own
+/// `Breakdown` accounting exactly — every charge site emits exactly
+/// one span of the same duration.
+#[test]
+fn span_phase_sums_match_the_clock_accounting_exactly() {
+    for &backend in &[ExecBackend::Threads, ExecBackend::Events] {
+        let comm = Communicator::builder(16)
+            .tiers(&[2, 4, 2])
+            .error_bound(1e-3)
+            .backend(backend)
+            .trace(Tracer::new())
+            .build()
+            .expect("communicator");
+        let out = comm
+            .allreduce(
+                real_inputs(16, 256, 21),
+                &CollectiveSpec::forced(Algo::Hierarchical),
+            )
+            .expect("allreduce");
+        let run = out.trace.as_ref().unwrap();
+        assert_eq!(
+            run.total_breakdown(),
+            out.report.total_breakdown(),
+            "{backend:?}: span-derived phase sums drifted from the clock"
+        );
+    }
+}
+
+/// Tracing is disabled by default and must not perturb the timeline:
+/// the same collective with and without a tracer attached reports the
+/// identical makespan and wire volume.
+#[test]
+fn tracing_disabled_leaves_the_timeline_untouched() {
+    let run = |trace: bool| {
+        let mut b = Communicator::builder(32)
+            .tiers(&[4, 4, 2])
+            .error_bound(1e-3)
+            .backend(ExecBackend::Events);
+        if trace {
+            b = b.trace(Tracer::new());
+        }
+        let comm = b.build().expect("communicator");
+        let inputs: Vec<DeviceBuf> = (0..32).map(|_| DeviceBuf::Virtual(1 << 18)).collect();
+        comm.allreduce(inputs, &CollectiveSpec::forced(Algo::Hierarchical))
+            .expect("allreduce")
+    };
+    let plain = run(false);
+    let traced = run(true);
+    assert_eq!(plain.report.makespan, traced.report.makespan);
+    assert_eq!(plain.report.total_wire_bytes(), traced.report.total_wire_bytes());
+    assert!(plain.trace.is_none());
+    assert!(traced.trace.is_some());
+}
+
+/// Dispatch instants: the tuner's decision record (with priced
+/// rejected alternatives) rides along every traced auto dispatch, and
+/// compression metrics aggregate per codec.
+#[test]
+fn dispatch_instants_and_codec_metrics_are_recorded() {
+    let tracer = Tracer::new();
+    let comm = Communicator::builder(8)
+        .gpus_per_node(4)
+        .error_bound(1e-3)
+        .trace(tracer.clone())
+        .build()
+        .expect("communicator");
+    let out = comm
+        .allreduce(real_inputs(8, 256, 33), &CollectiveSpec::auto())
+        .expect("allreduce");
+    let run = out.trace.as_ref().unwrap();
+    let decision = run
+        .instants
+        .iter()
+        .find(|i| i.name == "tuner-decision")
+        .expect("auto dispatch records its tuner decision");
+    assert!(decision.args.iter().any(|(k, _)| *k == "rejected"));
+    assert!(decision.args.iter().any(|(k, v)| *k == "source" && v == "auto"));
+    let reg = run.metrics_registry();
+    let ratio: Vec<&String> = reg
+        .entries
+        .keys()
+        .filter(|k| k.starts_with("cpr_ratio."))
+        .collect();
+    assert!(!ratio.is_empty(), "compressed run derives a codec ratio gauge");
+    // Two dispatches through one tracer stack up as two archived runs.
+    comm.allreduce(real_inputs(8, 256, 34), &CollectiveSpec::auto())
+        .expect("second allreduce");
+    assert_eq!(tracer.runs().len(), 2);
+    let merged = tracer.chrome_json();
+    assert!(merged.contains("run 0 start") && merged.contains("run 1 start"));
+}
