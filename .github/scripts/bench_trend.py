@@ -103,6 +103,22 @@ def main():
         prev_legs = base.get("leg_ebs", "")
         if prev_legs and leg_ebs and prev_legs != leg_ebs:
             print(f"note: per-leg ebs changed for {label}: {prev_legs} -> {leg_ebs}")
+        # Optional analyzer columns (absent in pre-analytics artifacts):
+        # the dominant bottleneck category explains a makespan shift
+        # (e.g. wire -> queue means contention, not slower kernels), and
+        # the critical path must stay glued to the makespan.
+        bott = row.get("bottleneck", "")
+        if bott:
+            label += f" bottleneck={bott}"
+        prev_bott = base.get("bottleneck", "")
+        if prev_bott and bott and prev_bott != bott:
+            print(f"note: dominant bottleneck changed for {label}: "
+                  f"{prev_bott} -> {bott}")
+        cp = row.get("critical_path_s")
+        mk = row.get("virtual_makespan_s")
+        if cp is not None and mk and abs(cp - mk) > 1e-9 * mk:
+            print(f"::warning title=Critical path drift::{label}: "
+                  f"critical_path_s {cp} != virtual_makespan_s {mk}")
         if delta > args.threshold:
             regressions.append((label, old, new, delta))
             print(

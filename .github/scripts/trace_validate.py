@@ -20,16 +20,31 @@ chrome://tracing):
     by (start, -dur) are each fully contained in — never partially
     overlapping — the enclosing open span.
 
+With a second argument, also validates the aggregated-metrics sidecar
+(`<stem>.metrics.json`):
+
+  * top level is `{"schema_version": 1, "metrics": {...}}`;
+  * every key matches the registry grammar: a `[a-z0-9_]+` family name
+    followed by dot-separated `[A-Za-z0-9_+-]+` qualifiers (codec
+    labels like `lorenzo+prequant+rice` ride the qualifier segments);
+  * every entry is a typed object — `counter`/`gauge` carry a finite
+    `value`, `histogram` carries finite `count`/`sum`/`min`/`max`/
+    `mean`/`p50`/`p95`/`p99` with `min <= p50 <= p95 <= p99 <= max`
+    and `min <= mean <= max`.
+
 Exits non-zero with a per-violation report; prints a summary on
-success. Usage: trace_validate.py TRACE.json
+success. Usage: trace_validate.py TRACE.json [METRICS.json]
 """
 
 import json
 import math
+import re
 import sys
 
 ALLOWED_PH = {"X", "i", "M"}
 HOST_TID = 0
+METRIC_KEY = re.compile(r"^[a-z0-9_]+(\.[A-Za-z0-9_+-]+)*$")
+HIST_FIELDS = ("count", "sum", "min", "max", "mean", "p50", "p95", "p99")
 
 
 def err(errors, i, ev, msg):
@@ -106,8 +121,67 @@ def validate(path):
     return errors, counts
 
 
+def finite(v):
+    return isinstance(v, (int, float)) and math.isfinite(v)
+
+
+def validate_metrics(path):
+    """Validate the aggregated-metrics sidecar; returns (errors, counts)."""
+    errors = []
+    counts = {"counter": 0, "gauge": 0, "histogram": 0}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        return ["top level is not a JSON object"], counts
+    if data.get("schema_version") != 1:
+        errors.append(
+            f"schema_version {data.get('schema_version')!r} != 1")
+    metrics = data.get("metrics")
+    if not isinstance(metrics, dict):
+        return errors + ["missing metrics object"], counts
+    for key, entry in metrics.items():
+        if not METRIC_KEY.match(key):
+            errors.append(f"metric {key!r}: bad key (want "
+                          "family[.qualifier]*, lowercase family)")
+        if not isinstance(entry, dict):
+            errors.append(f"metric {key!r}: entry is not an object")
+            continue
+        kind = entry.get("type")
+        if kind in ("counter", "gauge"):
+            counts[kind] += 1
+            if not finite(entry.get("value")):
+                errors.append(
+                    f"metric {key!r}: {kind} value "
+                    f"{entry.get('value')!r} is not finite")
+        elif kind == "histogram":
+            counts[kind] += 1
+            bad = [fld for fld in HIST_FIELDS if not finite(entry.get(fld))]
+            if bad:
+                errors.append(f"metric {key!r}: non-finite or missing "
+                              f"histogram fields {bad}")
+                continue
+            lo, p50, p95, p99, hi = (entry[f]
+                                     for f in ("min", "p50", "p95", "p99",
+                                               "max"))
+            if not lo <= p50 <= p95 <= p99 <= hi:
+                errors.append(
+                    f"metric {key!r}: quantiles not ordered "
+                    f"(min {lo} <= p50 {p50} <= p95 {p95} <= p99 {p99} "
+                    f"<= max {hi} fails)")
+            if not lo <= entry["mean"] <= hi:
+                errors.append(f"metric {key!r}: mean {entry['mean']} "
+                              f"outside [{lo}, {hi}]")
+            if entry["count"] < 0 or entry["count"] != int(entry["count"]):
+                errors.append(
+                    f"metric {key!r}: count {entry['count']!r} is not a "
+                    "non-negative integer")
+        else:
+            errors.append(f"metric {key!r}: unknown type {kind!r}")
+    return errors, counts
+
+
 def main():
-    if len(sys.argv) != 2:
+    if len(sys.argv) not in (2, 3):
         print(__doc__)
         return 2
     path = sys.argv[1]
@@ -126,6 +200,23 @@ def main():
         f"{path}: valid — {counts.get('X', 0)} spans, "
         f"{counts.get('i', 0)} instants, {counts.get('M', 0)} metadata events"
     )
+    if len(sys.argv) == 3:
+        mpath = sys.argv[2]
+        try:
+            merrors, mcounts = validate_metrics(mpath)
+        except (OSError, ValueError) as e:
+            print(f"::error title=Metrics invalid::{mpath}: {e}")
+            return 1
+        if merrors:
+            for e in merrors[:50]:
+                print(f"::error title=Metrics invalid::{mpath}: {e}")
+            if len(merrors) > 50:
+                print(f"... and {len(merrors) - 50} more")
+            return 1
+        print(
+            f"{mpath}: valid — {mcounts['counter']} counters, "
+            f"{mcounts['gauge']} gauges, {mcounts['histogram']} histograms"
+        )
     return 0
 
 

@@ -101,11 +101,52 @@ fn main() -> gzccl::Result<()> {
         println!("gauge fairness.jain = {f:.4}");
     }
 
+    // ---- Trace analytics: who sets the makespan, and why ----------
+    // The analyzer chains span pieces and cross-rank message hops
+    // into the critical path — the one chain of work that tiles
+    // [0, makespan] — then rolls its seconds up by bottleneck
+    // category. With two tenants hammering rack 1's uplinks, the
+    // queue category (waits at shared fabric stages) is what
+    // dominates the chain: the fabric is busy with the neighbor's
+    // bytes, not slow.
+    let analysis = run.analyze();
+    println!("\n{analysis}");
+    let total = analysis.critical_path.total_s();
+    if let Some((cat, share)) = analysis.bottlenecks.dominant(total) {
+        println!(
+            "dominant category: {} at {:.1}% of the {:.3} ms critical path",
+            cat.label(),
+            share * 100.0,
+            total * 1e3
+        );
+    }
+    let queue = analysis.bottlenecks.category_s(gzccl::obs::analysis::Category::Queue);
+    println!(
+        "rack-uplink queueing on the path: {:.3} ms ({:.1}%)",
+        queue * 1e3,
+        if total > 0.0 { queue / total * 100.0 } else { 0.0 }
+    );
+
+    // ---- Calibration: fold the measurement back into the model ----
+    // The least-squares fit prices each crossing tier at its
+    // *effective* latency/bandwidth — contention included — so the
+    // fitted tier-2 uplink comes out well below nameplate. Hand the
+    // run to `CommBuilder::calibrate_from` and the tuner schedules
+    // with these numbers instead of the spec sheet.
+    let cal = gzccl::obs::calibrate::calibrate(&run, &physical.gpu, &physical.tier_links());
+    print!("\n{cal}");
+
     // Perfetto-loadable export: open trace_tour.json in
     // https://ui.perfetto.dev — one process per tenant rank
     // (`job-a/0` ... `job-b/3`), lanes as threads, virtual time as
-    // the track clock.
-    std::fs::write("trace_tour.json", run.to_chrome_json()).map_err(Error::Io)?;
+    // the track clock. The critical path rides along as its own
+    // top-sorted track.
+    let extra = gzccl::obs::export::critical_path_events(&analysis, 0.0);
+    std::fs::write(
+        "trace_tour.json",
+        gzccl::obs::export::chrome_json_with_extra(&[run.as_ref()], &extra),
+    )
+    .map_err(Error::Io)?;
     std::fs::write("trace_tour.metrics.json", reg.to_json()).map_err(Error::Io)?;
     println!("\nwrote trace_tour.json + trace_tour.metrics.json");
     Ok(())

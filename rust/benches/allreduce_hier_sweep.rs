@@ -8,14 +8,18 @@
 //! wall-clock regeneration stats as `BENCH_allreduce.json` in the
 //! working directory — the perf trajectory artifact CI archives per
 //! commit, with a `tiers` column so tier-depth regressions show up in
-//! the trend job and a `leg_ebs` column recording the executed plan's
-//! per-leg compressor bounds (the trend script tolerates artifacts
-//! from before the column existed).
+//! the trend job, a `leg_ebs` column recording the executed plan's
+//! per-leg compressor bounds, and `critical_path_s`/`bottleneck`
+//! columns from the trace analyzer — the path length cross-checks the
+//! makespan and the dominant category explains a shift (the trend
+//! script tolerates artifacts from before any of these columns
+//! existed).
 
 use gzccl::bench_support::{bench, schema_stamp};
 use gzccl::collectives::Algo;
 use gzccl::comm::{CollectiveSpec, Communicator};
 use gzccl::coordinator::{DeviceBuf, ExecPolicy};
+use gzccl::obs::Tracer;
 
 fn tiers_label(widths: &[usize]) -> String {
     widths
@@ -27,12 +31,15 @@ fn tiers_label(widths: &[usize]) -> String {
 
 /// Virtual makespan plus the executed plan's per-leg eb column
 /// (`"t1:1.0e-4+t2:1.0e-4"` — compressed legs only, empty when nothing
-/// compresses).
-fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> (f64, String) {
+/// compresses), the analyzer's critical-path length (equal to the
+/// makespan by invariant — the trend job cross-checks the pair) and
+/// its dominant bottleneck category.
+fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> (f64, String, f64, String) {
     let comm = Communicator::builder(ranks)
         .tiers(widths)
         .policy(ExecPolicy::gzccl())
         .error_bound(1e-4)
+        .trace(Tracer::new())
         .build()
         .expect("communicator");
     let inputs: Vec<DeviceBuf> = (0..ranks).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
@@ -46,7 +53,14 @@ fn makespan(ranks: usize, widths: &[usize], bytes: usize, algo: Algo) -> (f64, S
         .map(|l| format!("t{}:{:.1e}", l.tier, l.exec.eb))
         .collect::<Vec<_>>()
         .join("+");
-    (report.makespan.as_secs(), leg_ebs)
+    let analysis = report.trace.as_ref().expect("traced run").analyze();
+    let critical_path_s = analysis.critical_path.total_s();
+    let bottleneck = analysis
+        .bottlenecks
+        .dominant(critical_path_s)
+        .map(|(c, _)| c.label().to_string())
+        .unwrap_or_default();
+    (report.makespan.as_secs(), leg_ebs, critical_path_s, bottleneck)
 }
 
 fn main() {
@@ -69,11 +83,12 @@ fn main() {
         let label = tiers_label(widths);
         for &mb in &sizes_mb {
             for &(name, algo) in &algos {
-                let ((virt_s, leg_ebs), stats) =
+                let ((virt_s, leg_ebs, cp_s, bottleneck), stats) =
                     bench(2, || makespan(ranks, widths, mb << 20, algo));
                 println!(
                     "{name:>7} | {ranks:>4} ranks | tiers {label:>8} | {mb:>4} MiB | \
-                     virtual {:.3} ms | legs {leg_ebs:>18} | wall {stats}",
+                     virtual {:.3} ms | bottleneck {bottleneck:>6} | legs {leg_ebs:>18} | \
+                     wall {stats}",
                     virt_s * 1e3
                 );
                 rows.push(format!(
@@ -81,10 +96,11 @@ fn main() {
                         "    {{\"algo\": \"{}\", \"ranks\": {}, \"gpus_per_node\": {}, ",
                         "\"tiers\": \"{}\", \"size_mib\": {}, \"virtual_makespan_s\": {:.9}, ",
                         "\"leg_ebs\": \"{}\", ",
+                        "\"critical_path_s\": {:.9}, \"bottleneck\": \"{}\", ",
                         "\"wall_mean_s\": {:.6}, \"wall_min_s\": {:.6}, \"wall_runs\": {}}}"
                     ),
-                    name, ranks, widths[0], label, mb, virt_s, leg_ebs, stats.mean, stats.min,
-                    stats.runs
+                    name, ranks, widths[0], label, mb, virt_s, leg_ebs, cp_s, bottleneck,
+                    stats.mean, stats.min, stats.runs
                 ));
             }
         }

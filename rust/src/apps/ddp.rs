@@ -54,6 +54,11 @@ pub struct DdpConfig {
     /// gradient Allreduce records its span tree and metrics here.
     /// `None` (the default) runs untraced.
     pub trace: Option<crate::obs::Tracer>,
+    /// Calibrate the cost model from this previously recorded run
+    /// ([`crate::comm::CommBuilder::calibrate_from`]): fitted per-tier
+    /// bandwidths/latencies and per-codec kernel factors replace the
+    /// nameplate values for every step's Allreduce.
+    pub calibrate: Option<std::sync::Arc<crate::obs::TraceRun>>,
     /// RNG seed.
     pub seed: u64,
 }
@@ -70,6 +75,7 @@ impl Default for DdpConfig {
             compress: true,
             codec: None,
             trace: None,
+            calibrate: None,
             seed: 42,
         }
     }
@@ -186,6 +192,9 @@ pub fn train_ddp(cfg: &DdpConfig, engine: &Engine) -> Result<DdpResult> {
     }
     if let Some(t) = &cfg.trace {
         builder = builder.trace(t.clone());
+    }
+    if let Some(run) = &cfg.calibrate {
+        builder = builder.calibrate_from(run.clone());
     }
     let comm = match plan {
         Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,

@@ -126,6 +126,11 @@ pub struct StackingConfig {
     /// collective records its span tree and metrics here. `None` (the
     /// default) runs untraced.
     pub trace: Option<crate::obs::Tracer>,
+    /// Calibrate the cost model from this previously recorded run
+    /// ([`crate::comm::CommBuilder::calibrate_from`]): fitted per-tier
+    /// bandwidths/latencies and per-codec kernel factors replace the
+    /// nameplate values for tuning and simulation.
+    pub calibrate: Option<std::sync::Arc<crate::obs::TraceRun>>,
     /// Scenario seed.
     pub seed: u64,
 }
@@ -143,6 +148,7 @@ impl Default for StackingConfig {
             adaptive: false,
             codec: None,
             trace: None,
+            calibrate: None,
             seed: 0xEEC,
         }
     }
@@ -251,6 +257,9 @@ pub fn run_stacking(
     }
     if let Some(t) = &cfg.trace {
         builder = builder.trace(t.clone());
+    }
+    if let Some(run) = &cfg.calibrate {
+        builder = builder.calibrate_from(run.clone());
     }
     let comm = match plan {
         Some(p) => builder.budget_plan(p).adaptive(cfg.adaptive).build()?,

@@ -13,6 +13,8 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::Topology;
+use crate::obs::analysis::TraceAnalysis;
+use crate::obs::calibrate::{self, Calibration};
 use crate::obs::{TraceRun, TraceSummary, Tracer};
 use crate::topo::{
     compile_min_error, estimate_flat_allgather, estimate_flat_redoub,
@@ -46,6 +48,7 @@ pub struct CommBuilder {
     tuner: Option<Tuner>,
     backend: Option<ExecBackend>,
     trace: Option<Tracer>,
+    calibrate: Option<Arc<TraceRun>>,
 }
 
 impl CommBuilder {
@@ -68,6 +71,7 @@ impl CommBuilder {
             tuner: None,
             backend: None,
             trace: None,
+            calibrate: None,
         }
     }
 
@@ -199,6 +203,17 @@ impl CommBuilder {
         self
     }
 
+    /// Calibrate the tuner's cost model from a previously recorded
+    /// [`TraceRun`] (see [`crate::obs::calibrate`]): at
+    /// [`CommBuilder::build`] the run's wire and kernel spans are
+    /// least-squares fitted into per-tier effective links and per-codec
+    /// kernel factors, and every subsequent dispatch prices schedules
+    /// with the fitted model instead of the nameplate one.
+    pub fn calibrate_from(mut self, run: Arc<TraceRun>) -> Self {
+        self.calibrate = Some(run);
+        self
+    }
+
     /// Build the communicator. With an accuracy target set, this is
     /// where the budget planner runs: a fixed-rate policy is rejected
     /// outright (its error is unbounded — the hazard the planner
@@ -305,12 +320,18 @@ impl CommBuilder {
             spec.profile = p;
         }
         spec.trace = self.trace;
+        // Trace calibration: fit effective links + kernel factors from
+        // the adopted run against this spec's nameplate parameters.
+        let calibration = self
+            .calibrate
+            .map(|run| calibrate::calibrate(&run, &spec.gpu, &spec.tier_links()));
         Ok(Communicator {
             spec,
             tuner: self.tuner.unwrap_or_default(),
             plan,
             tiered,
             adaptive,
+            calibration,
         })
     }
 }
@@ -384,6 +405,14 @@ impl CollectiveReport {
     pub fn trace_summary(&self) -> Option<TraceSummary> {
         self.trace.as_ref().map(|t| t.summary())
     }
+
+    /// Full trace analytics over this dispatch's captured run:
+    /// critical path, bottleneck attribution, stragglers, and
+    /// prediction residuals (see [`crate::obs::analysis`]). `None`
+    /// when the dispatch ran untraced.
+    pub fn analysis(&self) -> Option<TraceAnalysis> {
+        self.trace.as_ref().map(|t| t.analyze())
+    }
 }
 
 impl std::ops::Deref for CollectiveReport {
@@ -453,6 +482,7 @@ pub struct Communicator {
     plan: Option<BudgetPlan>,
     tiered: Option<TieredPlan>,
     adaptive: Option<Arc<AdaptiveController>>,
+    calibration: Option<Calibration>,
 }
 
 impl Communicator {
@@ -469,7 +499,28 @@ impl Communicator {
             plan: None,
             tiered: None,
             adaptive: None,
+            calibration: None,
         }
+    }
+
+    /// The trace-fitted calibration in effect, when built with
+    /// [`CommBuilder::calibrate_from`].
+    pub fn calibration(&self) -> Option<&Calibration> {
+        self.calibration.as_ref()
+    }
+
+    /// A clone of this communicator with a [`Calibration`] freshly
+    /// fitted from `run` against this spec's nameplate parameters —
+    /// the CLI's `--calibrate` rerun path. Equivalent to rebuilding
+    /// with [`CommBuilder::calibrate_from`].
+    pub fn recalibrated(&self, run: &TraceRun) -> Self {
+        let mut c = self.clone();
+        c.calibration = Some(calibrate::calibrate(
+            run,
+            &self.spec.gpu,
+            &self.spec.tier_links(),
+        ));
+        c
     }
 
     /// The active error-budget plan, if the communicator was built with
@@ -507,13 +558,19 @@ impl Communicator {
 
     /// The analytic cost model the tuner prices schedules with at a
     /// given message size (device kernels, per-tier links, effective
-    /// compression ratio).
+    /// compression ratio). With a calibration adopted
+    /// ([`CommBuilder::calibrate_from`]) the fitted per-tier links and
+    /// per-codec kernel factors replace the nameplate values.
     fn cost_model(&self, msg_bytes: usize) -> CostModel {
-        CostModel::new(
+        let base = CostModel::new(
             self.spec.gpu,
             self.spec.tier_links(),
             self.spec.profile.effective_ratio(msg_bytes.max(1)),
-        )
+        );
+        match &self.calibration {
+            Some(cal) => cal.apply(&base),
+            None => base,
+        }
     }
 
     /// Analytic makespan of a flat algorithm on this cluster, where a
@@ -766,19 +823,36 @@ impl Communicator {
                     None => format!("{a:?}"),
                 })
                 .collect();
-            tr.instant(
-                "tuner-decision",
-                0.0,
-                vec![
-                    ("op", format!("{op:?}")),
-                    ("algo", format!("{algo:?}")),
-                    (
-                        "source",
-                        if auto_tuned { "auto" } else { "forced" }.to_string(),
-                    ),
-                    ("rejected", rejected.join(", ")),
-                ],
-            );
+            // Per-leg predictions from the very cost model selection
+            // used: the analyzer joins these against observed leg spans
+            // for the residual report, and the calibrator's acceptance
+            // test re-predicts against the same addends.
+            let pred_legs: Vec<String> = match &schedule {
+                Some(s) => s
+                    .leg_costs(&self.spec.tiers, &cost, msg_bytes)
+                    .iter()
+                    .map(|c| format!("{c:.9e}"))
+                    .collect(),
+                None => self
+                    .flat_estimate(op, algo, &cost, msg_bytes, compressed)
+                    .map(|e| vec![format!("{e:.9e}")])
+                    .unwrap_or_default(),
+            };
+            let mut args = vec![
+                ("op", format!("{op:?}")),
+                ("algo", format!("{algo:?}")),
+                (
+                    "source",
+                    if auto_tuned { "auto" } else { "forced" }.to_string(),
+                ),
+                ("rejected", rejected.join(", ")),
+            ];
+            if !pred_legs.is_empty() {
+                let total: f64 = pred_legs.iter().filter_map(|p| p.parse::<f64>().ok()).sum();
+                args.push(("pred_legs", pred_legs.join("+")));
+                args.push(("pred_makespan", format!("{total:.9e}")));
+            }
+            tr.instant("tuner-decision", 0.0, args);
             if let Some(plan) = &self.plan {
                 let vetoed: Vec<String> = AlgoRegistry::supported(op)
                     .iter()

@@ -256,6 +256,11 @@ pub struct RankCtx {
     /// span buffer. `None` (the default) keeps every hook a single
     /// discriminant test.
     trace: Option<Box<CtxTrace>>,
+    /// Span-derived phase sums, stashed by [`RankCtx::finish`] when a
+    /// recorder was attached: [`RankCtx::breakdown`] then answers from
+    /// the spans instead of keeping a parallel accounting (the two are
+    /// debug-asserted identical at flush).
+    span_breakdown: Option<Breakdown>,
 }
 
 /// Tracing state attached to a recording context.
@@ -300,6 +305,7 @@ impl RankCtx {
             leg_errors: Vec::new(),
             leg_warnings: Vec::new(),
             trace: None,
+            span_breakdown: None,
         }
     }
 
@@ -357,7 +363,15 @@ impl RankCtx {
     /// spans splitting the kernel duration evenly across the staged
     /// pipeline (uncharged — the parent already carries the CPR
     /// charge).
-    fn tr_codec_kernel(&mut self, name: &'static str, lane: Lane, end: VirtTime, dur: f64) {
+    fn tr_codec_kernel(
+        &mut self,
+        name: &'static str,
+        lane: Lane,
+        end: VirtTime,
+        dur: f64,
+        bytes: usize,
+        streams: usize,
+    ) {
         if self.trace.is_none() || dur <= 0.0 {
             return;
         }
@@ -366,7 +380,23 @@ impl RankCtx {
             .and_then(|c| c.spec())
             .map(|s| s.label().split('+').map(str::to_string).collect())
             .unwrap_or_default();
-        self.tr_kernel(name, lane, end, dur, Phase::Cpr);
+        // Bytes (and stream count for batched launches) annotate the
+        // kernel span so the calibrator can fit effective throughputs;
+        // args are digest-excluded.
+        let mut args = vec![("bytes", format!("{bytes}"))];
+        if streams > 1 {
+            args.push(("streams", format!("{streams}")));
+        }
+        let t = self.trace.as_mut().expect("checked above");
+        t.buf.span_args(
+            name,
+            SpanCat::Phase,
+            lane,
+            end.as_secs() - dur,
+            dur,
+            Some(Phase::Cpr),
+            args,
+        );
         if stages.len() > 1 {
             let start = end.as_secs() - dur;
             let step = dur / stages.len() as f64;
@@ -399,12 +429,48 @@ impl RankCtx {
         t.buf.counter_add(&format!("cpr_out_bytes.{key}"), out_bytes as f64);
     }
 
-    /// Record one message's fabric path: queue-wait spans on the net
-    /// lane, wire-byte counters per link class, and queue-wait
-    /// histograms for every shared stage the message crossed.
-    fn tr_deliver(&mut self, path: &DeliverPath, bytes: usize) {
+    /// Record one message's fabric path: a sender-side `wire` span
+    /// covering [depart, arrival] that carries the message-edge
+    /// metadata the critical-path analyzer follows (destination track,
+    /// bit-exact arrival, queued time, crossing tier, bytes), plus
+    /// queue-wait spans on the net lane, wire-byte counters per link
+    /// class, and queue-wait histograms for every shared stage the
+    /// message crossed.
+    fn tr_deliver(
+        &mut self,
+        to: usize,
+        depart: VirtTime,
+        arrival: VirtTime,
+        path: &DeliverPath,
+        bytes: usize,
+    ) {
+        let rank = self.rank;
         let Some(t) = self.trace.as_mut() else { return };
         let buf = &mut t.buf;
+        let dur = arrival.since(depart);
+        if dur > 0.0 {
+            // Track ids are rank ids offset by the tenant's base (the
+            // multi-tenant runner labels track `base + rank`), so the
+            // destination track is recovered from this buffer's own
+            // offset.
+            let base = buf.track - rank;
+            let queue: f64 = path.hops.iter().map(|h| h.wait).sum();
+            buf.span_args(
+                "wire",
+                SpanCat::Net,
+                Lane::Net,
+                depart.as_secs(),
+                dur,
+                None,
+                vec![
+                    ("dst", format!("{}", base + to)),
+                    ("arrival", format!("{:016x}", arrival.as_secs().to_bits())),
+                    ("queue_s", format!("{queue:e}")),
+                    ("tier", format!("{}", path.lca)),
+                    ("bytes", format!("{bytes}")),
+                ],
+            );
+        }
         if path.lca == 0 {
             buf.counter_add("wire_bytes.intranode", bytes as f64);
             return;
@@ -645,9 +711,11 @@ impl RankCtx {
         self.counters
     }
 
-    /// Phase breakdown so far.
+    /// Phase breakdown so far. After a traced [`RankCtx::finish`] this
+    /// is the span-derived accounting (deduplicating the clock's
+    /// parallel one); otherwise it reads the clock directly.
     pub fn breakdown(&self) -> Breakdown {
-        self.clock.breakdown()
+        self.span_breakdown.unwrap_or_else(|| self.clock.breakdown())
     }
 
     /// Final per-rank completion time: host joined with device drain.
@@ -662,11 +730,13 @@ impl RankCtx {
         let now = self.clock.now();
         if let Some(mut tr) = self.trace.take() {
             tr.buf.close_all(now.as_secs());
+            let spans = tr.buf.breakdown();
             debug_assert_eq!(
-                tr.buf.breakdown(),
+                spans,
                 self.clock.breakdown(),
                 "span-derived phase sums drifted from the clock's accounting"
             );
+            self.span_breakdown = Some(spans);
             tr.tracer.sink(tr.buf);
         }
         now
@@ -747,7 +817,7 @@ impl RankCtx {
         let dur = m.compress.time(buf.bytes());
         let end = self.gpu.enqueue(s, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
-        self.tr_codec_kernel("compress", lane_of(s), end, dur);
+        self.tr_codec_kernel("compress", lane_of(s), end, dur, buf.bytes(), 1);
         self.counters.compress_calls += 1;
         let out = match buf {
             DeviceBuf::Real(v) => {
@@ -800,7 +870,8 @@ impl RankCtx {
         };
         let end = self.gpu.enqueue(StreamId::Default, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
-        self.tr_codec_kernel("compress-batch", Lane::Gpu(0), end, dur);
+        let streams = if self.policy.multi_stream { k } else { 1 };
+        self.tr_codec_kernel("compress-batch", Lane::Gpu(0), end, dur, total, streams);
         self.counters.compress_calls += k;
         let comp = self.effective_compressor();
         let mut outs = Vec::with_capacity(k);
@@ -852,7 +923,7 @@ impl RankCtx {
         let dur = m.decompress.time(out.bytes());
         let end = self.gpu.enqueue(s, ready.join(issue), dur);
         self.clock.charge_only(Phase::Cpr, dur);
-        self.tr_codec_kernel("decompress", lane_of(s), end, dur);
+        self.tr_codec_kernel("decompress", lane_of(s), end, dur, out.bytes(), 1);
         self.counters.decompress_calls += 1;
         self.maybe_sync(end);
         (out, end)
@@ -960,7 +1031,7 @@ impl RankCtx {
             let arrival = self
                 .fabric
                 .deliver_traced(self.rank, to, bytes, depart, &mut path);
-            self.tr_deliver(&path, bytes);
+            self.tr_deliver(to, depart, arrival, &path, bytes);
             arrival
         } else {
             self.fabric.deliver(self.rank, to, bytes, depart)
@@ -994,7 +1065,28 @@ impl RankCtx {
         };
         let t0 = self.clock.now();
         self.clock.wait_charged(Phase::Comm, msg.arrival);
-        self.tr_span("recv-wait", Lane::Host, t0, msg.arrival.since(t0), Phase::Comm);
+        let wait = msg.arrival.since(t0);
+        if wait > 0.0 {
+            // The source track and bit-exact arrival key the wire edge
+            // the critical-path walk hops across (args are excluded
+            // from the digest, so backend equivalence is untouched).
+            let (rank, src) = (self.rank, msg.src);
+            if let Some(t) = self.trace.as_mut() {
+                let base = t.buf.track - rank;
+                t.buf.span_args(
+                    "recv-wait",
+                    SpanCat::Phase,
+                    Lane::Host,
+                    t0.as_secs(),
+                    wait,
+                    Some(Phase::Comm),
+                    vec![
+                        ("src", format!("{}", base + src)),
+                        ("arrival", format!("{:016x}", msg.arrival.as_secs().to_bits())),
+                    ],
+                );
+            }
+        }
         let mut usable = msg.arrival;
         if !self.policy.gpu_centric {
             let bytes = msg.payload.wire_bytes();

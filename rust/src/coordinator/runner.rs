@@ -214,7 +214,10 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Sum of all per-rank breakdowns.
+    /// Sum of all per-rank breakdowns. Under tracing the per-rank
+    /// values are the span-derived sums ([`RankCtx::finish`] stashes
+    /// them at flush), so this and `obs::TraceRun::total_breakdown`
+    /// are one accounting, not two parallel ones.
     pub fn total_breakdown(&self) -> Breakdown {
         self.breakdowns
             .iter()

@@ -3,10 +3,11 @@
 //!
 //! ```text
 //! gzccl run        [--config F] [--set k=v ...] [--op allreduce|scatter|...] [--size-mb N]
-//!                  [--codec cuszp|lossless|rle-rice|fixedN|p+q+c]
+//!                  [--codec cuszp|lossless|rle-rice|fixedN|p+q+c] [--calibrate]
 //! gzccl experiment <fig2|fig3|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2|fig13|all>
-//! gzccl stack      [--ranks N] [--eb X] [--codec C]
-//! gzccl train      [--ranks N] [--steps N] [--no-compress] [--codec C]
+//! gzccl stack      [--ranks N] [--eb X] [--codec C] [--calibrate]
+//! gzccl train      [--ranks N] [--steps N] [--no-compress] [--codec C] [--calibrate]
+//! gzccl analyze    FILE
 //! gzccl characterize
 //! ```
 
@@ -19,7 +20,7 @@ use gzccl::config::ClusterConfig;
 use gzccl::coordinator::{CompressionMode, DeviceBuf, ExecBackend};
 use gzccl::error::{Error, Result};
 use gzccl::experiments as exp;
-use gzccl::obs::Tracer;
+use gzccl::obs::{export as obs_export, TraceRun, Tracer};
 use gzccl::runtime::Engine;
 use gzccl::topo::{LegExec, TierTree};
 
@@ -90,6 +91,14 @@ USAGE:
                         C: cuszp | lossless | rle-rice | fixedN (N bits)
                         | predictor+quantizer+coder, e.g.
                         lorenzo+prequant+rice (see CodecSpec::parse)
+                    [--calibrate]           trace the run, fit effective
+                        per-tier bandwidths/latencies and per-codec
+                        kernel factors from the observed spans, and
+                        replay the collective under the calibrated
+                        cost model (prints the fit, the makespan
+                        delta, and the residual shrink). Also accepted
+                        by `stack` and `train`. Implies an internal
+                        tracer when --trace is absent.
                     [--backend threads|events]
                     --backend events (default): single-threaded
                         event-driven engine, scales to 10^4-10^5 ranks;
@@ -120,6 +129,9 @@ USAGE:
                                             --accuracy-target)
                     [--codec C]             staged codec for the compressed
                                             variants (see `gzccl run`)
+                    [--calibrate]           fit a calibration from the
+                                            richest traced variant and
+                                            replay all variants under it
   gzccl train       [--ranks N] [--steps N] [--no-compress]
                     [--accuracy-target X]   X: absolute L-inf budget on
                                             the summed gradients across
@@ -130,6 +142,14 @@ USAGE:
                                             --accuracy-target)
                     [--codec C]             staged codec for gradient
                                             compression (see `gzccl run`)
+                    [--calibrate]           fit a calibration from the
+                                            traced steps and replay the
+                                            training run under it
+  gzccl analyze     FILE                    re-import a --trace file and
+                                            print per-run summaries,
+                                            the critical path, bottleneck
+                                            attribution, and prediction
+                                            residuals
   gzccl characterize
   gzccl help
 ";
@@ -139,16 +159,52 @@ USAGE:
 /// line per drained run. Called even when the traced command failed —
 /// a partial trace is exactly what debugs a deadlock.
 fn write_trace(path: &str, tracer: &Tracer) -> Result<()> {
-    std::fs::write(path, tracer.chrome_json()).map_err(Error::Io)?;
+    if tracer.has_pending() {
+        tracer.take_run(vec![("run".into(), "partial".into())]);
+    }
+    let runs = tracer.runs();
+    // Analyze every archived run once: the critical path rides the
+    // export as a dedicated Perfetto track, and the same analysis
+    // prints below each run's summary.
+    let analyses: Vec<_> = runs.iter().map(|r| r.analyze()).collect();
+    let mut extra = Vec::new();
+    let mut offset = 0.0;
+    for (run, a) in runs.iter().zip(&analyses) {
+        extra.extend(obs_export::critical_path_events(a, offset));
+        offset += run.root_end();
+    }
+    let views: Vec<&TraceRun> = runs.iter().map(|r| r.as_ref()).collect();
+    std::fs::write(path, obs_export::chrome_json_with_extra(&views, &extra)).map_err(Error::Io)?;
     let metrics_path = match path.strip_suffix(".json") {
         Some(stem) => format!("{stem}.metrics.json"),
         None => format!("{path}.metrics.json"),
     };
     std::fs::write(&metrics_path, tracer.metrics_json()).map_err(Error::Io)?;
-    for run in tracer.runs() {
+    for (run, a) in runs.iter().zip(&analyses) {
         println!("{}", run.summary());
+        println!("{a}");
     }
     println!("trace written: {path} (metrics: {metrics_path})");
+    Ok(())
+}
+
+/// `gzccl analyze FILE`: re-import a previously written Chrome trace
+/// and rerun the analyzer on it — summary, critical path, bottleneck
+/// attribution, residuals — without re-simulating anything.
+fn cmd_analyze(mut args: Args) -> Result<()> {
+    let file = args
+        .subcommand()
+        .ok_or_else(|| Error::config("analyze: which trace file? (gzccl analyze FILE)"))?;
+    let text = std::fs::read_to_string(&file).map_err(Error::Io)?;
+    let runs = obs_export::import_chrome_json(&text).map_err(Error::config)?;
+    let many = runs.len() > 1;
+    for (i, run) in runs.iter().enumerate() {
+        if many {
+            println!("== run {i} ==");
+        }
+        println!("{}", run.summary());
+        println!("{}", run.analyze());
+    }
     Ok(())
 }
 
@@ -181,6 +237,7 @@ fn real_main() -> Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("stack") => cmd_stack(args),
         Some("train") => cmd_train(args),
+        Some("analyze") => cmd_analyze(args),
         Some("characterize") => {
             exp::fig03_characterization()?.print();
             Ok(())
@@ -208,6 +265,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .transpose()?;
     let tiers = args.take("--tiers");
     let trace_path = args.take("--trace");
+    let calibrate = args.take_bool("--calibrate");
     let codec = args
         .take("--codec")
         .map(|s| {
@@ -249,7 +307,9 @@ fn cmd_run(mut args: Args) -> Result<()> {
         spec.policy.compression = LegExec::mode_for(c);
         spec.codec = Some(c);
     }
-    let tracer = trace_path.as_ref().map(|_| Tracer::new());
+    // --calibrate needs a trace to fit against even when the user
+    // didn't ask for a trace file, so it implies an internal tracer.
+    let tracer = (trace_path.is_some() || calibrate).then(Tracer::new);
     if let Some(t) = &tracer {
         spec.trace = Some(t.clone());
     }
@@ -260,30 +320,40 @@ fn cmd_run(mut args: Args) -> Result<()> {
     let all_ranks = |e: usize| -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(e)).collect() };
 
     let spec = CollectiveSpec::auto();
-    let result = match op.as_str() {
-        "allreduce" => comm.allreduce(all_ranks(elems), &spec),
-        "allreduce-ring" => comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Ring)),
-        "allreduce-redoub" => comm.allreduce(
+    let dispatch = |c: &Communicator| match op.as_str() {
+        "allreduce" => c.allreduce(all_ranks(elems), &spec),
+        "allreduce-ring" => c.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Ring)),
+        "allreduce-redoub" => c.allreduce(
             all_ranks(elems),
             &CollectiveSpec::hinted(AlgoHint::Force(Algo::RecursiveDoubling)),
         ),
         "allreduce-hier" => {
-            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))
+            c.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))
         }
-        "allreduce-tree" => {
-            comm.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial))
-        }
-        "reduce_scatter" => comm.reduce_scatter(all_ranks(elems), &spec),
+        "allreduce-tree" => c.allreduce(all_ranks(elems), &CollectiveSpec::forced(Algo::Binomial)),
+        "reduce_scatter" => c.reduce_scatter(all_ranks(elems), &spec),
         "reduce_scatter-hier" => {
-            comm.reduce_scatter(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))
+            c.reduce_scatter(all_ranks(elems), &CollectiveSpec::forced(Algo::Hierarchical))
         }
-        "allgather" => comm.allgather(all_ranks(elems / n), &spec),
+        "allgather" => c.allgather(all_ranks(elems / n), &spec),
         "allgather-hier" => {
-            comm.allgather(all_ranks(elems / n), &CollectiveSpec::forced(Algo::Hierarchical))
+            c.allgather(all_ranks(elems / n), &CollectiveSpec::forced(Algo::Hierarchical))
         }
-        "scatter" => comm.scatter(exp::virtual_root_inputs(n, size_mb << 20), &spec),
-        "bcast" => comm.bcast(exp::virtual_root_inputs(n, size_mb << 20), &spec),
+        "scatter" => c.scatter(exp::virtual_root_inputs(n, size_mb << 20), &spec),
+        "bcast" => c.bcast(exp::virtual_root_inputs(n, size_mb << 20), &spec),
         other => Err(Error::config(format!("unknown --op `{other}`"))),
+    };
+    let result = dispatch(&comm);
+    // With --calibrate, fit a calibration from the traced run and
+    // replay the same collective under the corrected cost model — the
+    // tuner re-decides with measured bandwidths and kernel factors.
+    let recal = match (&result, calibrate) {
+        (Ok(rep), true) => rep.trace.clone().map(|run| {
+            let comm2 = comm.recalibrated(&run);
+            let r2 = dispatch(&comm2);
+            (comm2, r2)
+        }),
+        _ => None,
     };
     // Export the trace before propagating any error: a partial trace
     // of a failed run is the flight recorder's whole point.
@@ -343,6 +413,25 @@ fn cmd_run(mut args: Args) -> Result<()> {
     println!("  wire bytes       : {}", report.total_wire_bytes());
     println!("  cpr kernel calls : {}", report.total_cpr_calls());
     println!("  breakdown        : {}", report.total_breakdown().percent_string());
+    if let Some((comm2, result2)) = recal {
+        let report2 = result2?;
+        if let Some(cal) = comm2.calibration() {
+            print!("{cal}");
+        }
+        println!(
+            "  calibrated rerun : makespan {} (was {})",
+            report2.makespan, report.makespan
+        );
+        if let (Some(a), Some(a2)) = (report.analysis(), report2.analysis()) {
+            if let (Some(r), Some(r2)) = (a.max_relative_residual(), a2.max_relative_residual()) {
+                println!(
+                    "  max |leg residual|: {:.1}% -> {:.1}%",
+                    r * 100.0,
+                    r2 * 100.0
+                );
+            }
+        }
+    }
     Ok(())
 }
 
@@ -431,7 +520,8 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         })
         .transpose()?;
     let trace_path = args.take("--trace");
-    let tracer = trace_path.as_ref().map(|_| Tracer::new());
+    let calibrate = args.take_bool("--calibrate");
+    let tracer = (trace_path.is_some() || calibrate).then(Tracer::new);
     let engine = Engine::discover().ok();
     let cfg = StackingConfig {
         ranks,
@@ -444,10 +534,30 @@ fn cmd_stack(mut args: Args) -> Result<()> {
         ..Default::default()
     };
     let result = cmd_stack_variants(&cfg, engine.as_ref());
+    let mut rerun = Ok(());
+    if result.is_ok() && calibrate {
+        // Fit from the richest traced run (the hierarchical variant
+        // records the most spans) and replay every variant under the
+        // calibrated cost model.
+        if let Some(run) = tracer
+            .as_ref()
+            .and_then(|t| t.runs().into_iter().max_by_key(|r| r.span_count()))
+        {
+            println!();
+            println!("calibration source: richest traced run ({} spans)", run.span_count());
+            println!("{}", run.analyze());
+            println!("== calibrated rerun ==");
+            let cfg2 = StackingConfig {
+                calibrate: Some(run),
+                ..cfg.clone()
+            };
+            rerun = cmd_stack_variants(&cfg2, engine.as_ref());
+        }
+    }
     if let (Some(path), Some(t)) = (&trace_path, &tracer) {
         write_trace(path, t)?;
     }
-    result
+    result.and(rerun)
 }
 
 fn cmd_stack_variants(cfg: &StackingConfig, engine: Option<&Engine>) -> Result<()> {
@@ -535,7 +645,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
         return Err(Error::config("--codec conflicts with --no-compress"));
     }
     let trace_path = args.take("--trace");
-    let tracer = trace_path.as_ref().map(|_| Tracer::new());
+    let calibrate = args.take_bool("--calibrate");
+    let tracer = (trace_path.is_some() || calibrate).then(Tracer::new);
     let engine = Engine::discover()?;
     let cfg = DdpConfig {
         ranks,
@@ -548,6 +659,21 @@ fn cmd_train(mut args: Args) -> Result<()> {
         ..Default::default()
     };
     let out = train_ddp(&cfg, &engine);
+    // With --calibrate, refit the cost model from the richest traced
+    // step and replay the training run under it.
+    let out2 = match (&out, calibrate) {
+        (Ok(_), true) => tracer
+            .as_ref()
+            .and_then(|t| t.runs().into_iter().max_by_key(|r| r.span_count()))
+            .map(|run| {
+                let cfg2 = DdpConfig {
+                    calibrate: Some(run),
+                    ..cfg.clone()
+                };
+                train_ddp(&cfg2, &engine)
+            }),
+        _ => None,
+    };
     if let (Some(path), Some(t)) = (&trace_path, &tracer) {
         write_trace(path, t)?;
     }
@@ -577,5 +703,13 @@ fn cmd_train(mut args: Args) -> Result<()> {
         out.allreduce_time * 1e3,
         out.wire_bytes as f64 / 1e6
     );
+    if let Some(r2) = out2 {
+        let o2 = r2?;
+        println!(
+            "calibrated rerun: allreduce virtual time {:.3} ms (was {:.3} ms)",
+            o2.allreduce_time * 1e3,
+            out.allreduce_time * 1e3
+        );
+    }
     Ok(())
 }

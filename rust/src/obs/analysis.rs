@@ -1,0 +1,851 @@
+//! Trace analytics: critical-path extraction, bottleneck attribution,
+//! per-leg slack and prediction residuals over a [`TraceRun`].
+//!
+//! The paper's Fig. 2 diagnosis — GPUs idling behind serialized
+//! compression and links starved behind stragglers — is only
+//! actionable once a recorded run can say *which* chain of work set
+//! the makespan. This module walks the span forest backwards from the
+//! last-finishing rank, hopping cross-rank message edges (recovered
+//! from the sender-side `wire` net spans and the receiver's annotated
+//! `recv-wait` spans), and produces a chain of segments that tile
+//! `[0, makespan]` exactly: the critical path's total is
+//! `last.end − first.start`, which reproduces the root makespan
+//! **bit-for-bit** by construction, never as a rounded sum of parts.
+//!
+//! Each segment is attributed to one of four categories — kernel
+//! (device kernels and PCIe staging), wire (fabric transfer), queue
+//! (shared-stage fabric waits within a wire hop) and host (API calls,
+//! syncs, idle) — rolled up per crossing tier and per codec stage in a
+//! [`BottleneckReport`], alongside per-`(leg, rank)` slack (how much
+//! later a rank's leg could have finished without moving the global
+//! leg end) and stragglers (ranks whose leg ran long against the
+//! median). When the dispatch recorded per-leg cost-model predictions
+//! (the `pred_legs` annotation on the tuner-decision instant),
+//! observed-vs-predicted residuals ride along — the raw material
+//! [`super::calibrate`] fits its calibrated model from.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::sim::Phase;
+
+use super::{Lane, SpanCat, SpanRec, TraceRun, TrackBuf};
+
+/// Ranks whose leg duration exceeds the median by this factor are
+/// flagged as stragglers.
+pub const STRAGGLER_FACTOR: f64 = 1.05;
+
+/// Bottleneck category of one critical-path segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// Device work: compression / reduction kernels and PCIe staging.
+    Kernel,
+    /// Fabric transfer time of an in-flight message.
+    Wire,
+    /// Queue waits at shared fabric stages (NIC, oversubscribed
+    /// uplinks) inside a wire hop.
+    Queue,
+    /// Host API calls, synchronization, and idle gaps with no device
+    /// or network work behind them.
+    Host,
+}
+
+impl Category {
+    /// Stable lowercase label (export / digest key).
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Kernel => "kernel",
+            Category::Wire => "wire",
+            Category::Queue => "queue",
+            Category::Host => "host",
+        }
+    }
+}
+
+/// One segment of the critical path: `[start, end]` on `track`,
+/// attributed to `label` / `category`. Consecutive segments share
+/// their boundary timestamps exactly (same f64 bits), so the chain
+/// tiles `[0, makespan]` without gaps or overlaps.
+#[derive(Debug, Clone)]
+pub struct PathSeg {
+    /// Track (rank / actor) the segment's work ran on. For wire
+    /// segments: the *sending* track.
+    pub track: usize,
+    /// Segment start, virtual seconds.
+    pub start: f64,
+    /// Segment end, virtual seconds.
+    pub end: f64,
+    /// Schedule leg active over the segment, when known.
+    pub leg: Option<u32>,
+    /// Span name the interval is attributed to (`compress`,
+    /// `recv-wait`, `wire`, `idle`, ...).
+    pub label: String,
+    /// Bottleneck category.
+    pub category: Category,
+    /// Crossing tier of wire segments (`DeliverPath::lca`).
+    pub tier: Option<usize>,
+    /// Queue-wait share of a wire segment (seconds spent at shared
+    /// fabric stages; attributed to [`Category::Queue`] in rollups).
+    pub queue_s: f64,
+}
+
+impl PathSeg {
+    /// Segment length, seconds.
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// The extracted critical path: time-ordered contiguous segments.
+#[derive(Debug, Clone, Default)]
+pub struct CriticalPath {
+    /// Segments ascending in time; `segments[i].end` equals
+    /// `segments[i+1].start` bit-exactly.
+    pub segments: Vec<PathSeg>,
+}
+
+impl CriticalPath {
+    /// Total path length: `last.end − first.start`. Because the chain
+    /// tiles `[0, makespan]` with shared boundaries, this equals the
+    /// run's root makespan bit-for-bit (asserted by the test suite),
+    /// not merely up to accumulated rounding.
+    pub fn total_s(&self) -> f64 {
+        match (self.segments.first(), self.segments.last()) {
+            (Some(a), Some(b)) => b.end - a.start,
+            _ => 0.0,
+        }
+    }
+
+    /// Canonical textual digest (track, leg, category, label and
+    /// bit-exact boundaries per segment) — equal across execution
+    /// backends exactly when the analyses agree.
+    pub fn digest(&self) -> String {
+        let mut out = String::new();
+        for s in &self.segments {
+            use fmt::Write;
+            let _ = writeln!(
+                out,
+                "{}|{}|{}|{}|{:016x}|{:016x}|{}",
+                s.track,
+                s.leg.map_or(-1i64, |l| l as i64),
+                s.category.label(),
+                s.label,
+                s.start.to_bits(),
+                s.end.to_bits(),
+                s.tier.map_or(-1i64, |t| t as i64),
+            );
+        }
+        out
+    }
+}
+
+/// A rank whose leg ran long against the cross-rank median.
+#[derive(Debug, Clone)]
+pub struct Straggler {
+    /// Schedule leg index.
+    pub leg: u32,
+    /// Offending track.
+    pub track: usize,
+    /// This track's leg duration, seconds.
+    pub dur_s: f64,
+    /// Median leg duration across tracks, seconds.
+    pub median_s: f64,
+}
+
+/// Slack of one `(leg, track)`: how much later this rank's leg could
+/// have ended without moving the leg's global completion. Zero on the
+/// chain that sets the leg's end; non-negative everywhere by
+/// construction.
+#[derive(Debug, Clone)]
+pub struct LegSlack {
+    /// Schedule leg index.
+    pub leg: u32,
+    /// Track the slack belongs to.
+    pub track: usize,
+    /// Slack, seconds (`max_end(leg) − end(leg, track)`).
+    pub slack_s: f64,
+}
+
+/// Attribution rollup over the critical path.
+#[derive(Debug, Clone, Default)]
+pub struct BottleneckReport {
+    /// Seconds per category, fixed order kernel / wire / queue / host.
+    /// Sums to the critical-path total (wire segments contribute their
+    /// queue share to `Queue` and the remainder to `Wire`).
+    pub by_category: Vec<(Category, f64)>,
+    /// Network seconds (wire + queue) per crossing tier.
+    pub by_tier: BTreeMap<usize, f64>,
+    /// Kernel seconds per codec stage (staged pipelines split their
+    /// kernels; unstaged kernel time keys on the kernel name).
+    pub by_stage: BTreeMap<String, f64>,
+    /// Ranks whose leg duration exceeded the median by
+    /// [`STRAGGLER_FACTOR`].
+    pub stragglers: Vec<Straggler>,
+}
+
+impl BottleneckReport {
+    /// Seconds attributed to `cat`.
+    pub fn category_s(&self, cat: Category) -> f64 {
+        self.by_category
+            .iter()
+            .find(|(c, _)| *c == cat)
+            .map_or(0.0, |(_, s)| *s)
+    }
+
+    /// The dominant category and its share of `total_s`.
+    pub fn dominant(&self, total_s: f64) -> Option<(Category, f64)> {
+        self.by_category
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, s)| (*c, if total_s > 0.0 { s / total_s } else { 0.0 }))
+    }
+}
+
+/// Observed-vs-predicted timing of one schedule leg.
+#[derive(Debug, Clone)]
+pub struct LegResidual {
+    /// Schedule leg index.
+    pub leg: usize,
+    /// Cost-model prediction captured at plan time, seconds.
+    pub predicted_s: f64,
+    /// Max observed leg-span duration across ranks, seconds.
+    pub observed_s: f64,
+}
+
+impl LegResidual {
+    /// Signed relative residual `(observed − predicted) / predicted`.
+    pub fn relative(&self) -> f64 {
+        if self.predicted_s > 0.0 {
+            (self.observed_s - self.predicted_s) / self.predicted_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Full analysis of one traced run.
+#[derive(Debug, Clone, Default)]
+pub struct TraceAnalysis {
+    /// The run's makespan (max root-span end), seconds.
+    pub makespan_s: f64,
+    /// The extracted critical path.
+    pub critical_path: CriticalPath,
+    /// Attribution rollups and stragglers.
+    pub bottlenecks: BottleneckReport,
+    /// Per-`(leg, track)` slack, all entries non-negative.
+    pub slacks: Vec<LegSlack>,
+    /// Per-leg prediction residuals (empty when the dispatch recorded
+    /// no `pred_legs` annotation — e.g. flat algorithms or imports of
+    /// pre-analytics traces).
+    pub residuals: Vec<LegResidual>,
+}
+
+impl TraceAnalysis {
+    /// Largest `|relative residual|` across legs (`None` without
+    /// predictions).
+    pub fn max_relative_residual(&self) -> Option<f64> {
+        self.residuals
+            .iter()
+            .map(|r| r.relative().abs())
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Stable digest of the critical path (backend-equivalence tests).
+    pub fn digest(&self) -> String {
+        self.critical_path.digest()
+    }
+}
+
+impl fmt::Display for TraceAnalysis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let total = self.critical_path.total_s();
+        writeln!(
+            f,
+            "critical path: {} segments, {:.6e}s (makespan {:.6e}s)",
+            self.critical_path.segments.len(),
+            total,
+            self.makespan_s
+        )?;
+        let pct = |s: f64| if total > 0.0 { 100.0 * s / total } else { 0.0 };
+        let cats: Vec<String> = self
+            .bottlenecks
+            .by_category
+            .iter()
+            .map(|(c, s)| format!("{} {:.1}%", c.label(), pct(*s)))
+            .collect();
+        writeln!(f, "  by category: {}", cats.join(" | "))?;
+        if !self.bottlenecks.by_tier.is_empty() {
+            let tiers: Vec<String> = self
+                .bottlenecks
+                .by_tier
+                .iter()
+                .map(|(t, s)| format!("t{t} {:.1}%", pct(*s)))
+                .collect();
+            writeln!(f, "  network by tier: {}", tiers.join(" | "))?;
+        }
+        if !self.bottlenecks.by_stage.is_empty() {
+            let mut stages: Vec<(&String, &f64)> = self.bottlenecks.by_stage.iter().collect();
+            stages.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+            let top: Vec<String> = stages
+                .iter()
+                .take(4)
+                .map(|(k, s)| format!("{k} {:.1}%", pct(**s)))
+                .collect();
+            writeln!(f, "  kernel by stage: {}", top.join(" | "))?;
+        }
+        let mut longest: Vec<&PathSeg> = self.critical_path.segments.iter().collect();
+        longest.sort_by(|a, b| b.dur().partial_cmp(&a.dur()).unwrap());
+        for s in longest.iter().take(5) {
+            writeln!(
+                f,
+                "  seg {:>9.3e}s  {:6}  track {:>4}  leg {:>2}  [{}]",
+                s.dur(),
+                s.category.label(),
+                s.track,
+                s.leg.map_or(-1i64, |l| l as i64),
+                s.label
+            )?;
+        }
+        if self.bottlenecks.stragglers.is_empty() {
+            writeln!(f, "  stragglers: none")?;
+        } else {
+            for st in self.bottlenecks.stragglers.iter().take(5) {
+                writeln!(
+                    f,
+                    "  straggler: leg {} track {} ran {:.3e}s ({:.2}x median)",
+                    st.leg,
+                    st.track,
+                    st.dur_s,
+                    st.dur_s / st.median_s.max(f64::MIN_POSITIVE)
+                )?;
+            }
+        }
+        if self.residuals.is_empty() {
+            write!(f, "  residuals: no per-leg predictions recorded")?;
+        } else {
+            write!(f, "  residuals (observed vs predicted):")?;
+            for r in &self.residuals {
+                write!(
+                    f,
+                    "\n    leg {}: pred {:.3e}s obs {:.3e}s ({:+.1}%)",
+                    r.leg,
+                    r.predicted_s,
+                    r.observed_s,
+                    100.0 * r.relative()
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One flattened interval of a track's host timeline, owned by the
+/// deepest host-lane span active over it (`None` only before the root
+/// opens — never inside a well-formed track).
+struct Piece<'a> {
+    start: f64,
+    end: f64,
+    owner: Option<&'a SpanRec>,
+}
+
+/// Flatten a track's host-lane spans (a call stack per
+/// `check_well_formed`) into contiguous pieces with exact shared
+/// boundaries, each attributed to the deepest enclosing span.
+fn flatten_host(track: &TrackBuf) -> Vec<Piece<'_>> {
+    let mut host: Vec<&SpanRec> = track
+        .spans
+        .iter()
+        .filter(|s| s.lane == Lane::Host && s.dur > 0.0)
+        .collect();
+    // Parents before children: start ascending, end descending; ties
+    // keep emission order (stable sort), so the deeper span — emitted
+    // later — sits on top of the stack and owns the piece.
+    host.sort_by(|a, b| {
+        a.start
+            .partial_cmp(&b.start)
+            .unwrap()
+            .then(b.end().partial_cmp(&a.end()).unwrap())
+    });
+    let mut pieces = Vec::new();
+    let Some(first) = host.first() else {
+        return pieces;
+    };
+    let mut cursor = first.start;
+    let mut stack: Vec<&SpanRec> = Vec::new();
+    for &s in &host {
+        while let Some(&top) = stack.last() {
+            if top.end() <= s.start {
+                if cursor < top.end() {
+                    pieces.push(Piece {
+                        start: cursor,
+                        end: top.end(),
+                        owner: Some(top),
+                    });
+                    cursor = top.end();
+                }
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if cursor < s.start {
+            pieces.push(Piece {
+                start: cursor,
+                end: s.start,
+                owner: stack.last().copied(),
+            });
+            cursor = s.start;
+        }
+        stack.push(s);
+    }
+    while let Some(top) = stack.pop() {
+        if cursor < top.end() {
+            pieces.push(Piece {
+                start: cursor,
+                end: top.end(),
+                owner: Some(top),
+            });
+            cursor = top.end();
+        }
+    }
+    pieces
+}
+
+/// A sender-side message edge recovered from a `wire` net span.
+struct WireEdge {
+    src_track: usize,
+    depart: f64,
+    queue_s: f64,
+    tier: usize,
+    leg: Option<u32>,
+}
+
+fn arg<'a>(s: &'a SpanRec, key: &str) -> Option<&'a str> {
+    s.arg(key)
+}
+
+/// Index every sender-side `wire` span by
+/// `(dst_track, arrival_bits, src_track)`. When two messages between
+/// the same pair arrive at the identical instant, the earlier
+/// departure (the longer, more constraining flight) wins.
+fn wire_edges(run: &TraceRun) -> BTreeMap<(usize, u64, usize), WireEdge> {
+    let mut edges: BTreeMap<(usize, u64, usize), WireEdge> = BTreeMap::new();
+    for (&id, t) in &run.tracks {
+        for s in &t.spans {
+            if s.lane != Lane::Net || s.name != "wire" {
+                continue;
+            }
+            let (Some(dst), Some(bits)) = (arg(s, "dst"), arg(s, "arrival")) else {
+                continue;
+            };
+            let (Ok(dst), Ok(bits)) = (dst.parse::<usize>(), u64::from_str_radix(bits, 16))
+            else {
+                continue;
+            };
+            let edge = WireEdge {
+                src_track: id,
+                depart: s.start,
+                queue_s: arg(s, "queue_s").and_then(|v| v.parse().ok()).unwrap_or(0.0),
+                tier: arg(s, "tier").and_then(|v| v.parse().ok()).unwrap_or(0),
+                leg: s.leg,
+            };
+            let key = (dst, bits, id);
+            match edges.get(&key) {
+                Some(e) if e.depart <= edge.depart => {}
+                _ => {
+                    edges.insert(key, edge);
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Classify an uncharged host gap `[a, b)` by the device-lane work
+/// overlapping it: GPU kernels and PCIe copies make it kernel time
+/// (the host is blocked draining the device); nothing running makes
+/// it idle host time.
+fn classify_gap(track: &TrackBuf, a: f64, b: f64) -> (Category, String) {
+    let mut best = 0.0;
+    let mut label: Option<&str> = None;
+    for s in &track.spans {
+        if matches!(s.lane, Lane::Host | Lane::Net) || s.cat == SpanCat::Codec {
+            continue;
+        }
+        let ov = s.end().min(b) - s.start.max(a);
+        if ov > best {
+            best = ov;
+            label = Some(&s.name);
+        }
+    }
+    match label {
+        Some(name) => (Category::Kernel, name.to_string()),
+        None => (Category::Host, "idle".to_string()),
+    }
+}
+
+/// Classify a piece by its owning span's charge.
+fn classify_piece(track: &TrackBuf, p: &Piece<'_>, end: f64) -> (Category, String) {
+    match p.owner {
+        Some(s) => match s.charge {
+            Some(Phase::Cpr) | Some(Phase::Redu) | Some(Phase::DataMove) => {
+                (Category::Kernel, s.name.clone())
+            }
+            Some(Phase::Comm) => (Category::Wire, s.name.clone()),
+            Some(Phase::Other) => (Category::Host, s.name.clone()),
+            // Container span (root / leg): an uncharged wait.
+            None => classify_gap(track, p.start, end),
+        },
+        None => (Category::Host, "idle".to_string()),
+    }
+}
+
+/// Walk the critical path backwards from the last-finishing track.
+fn extract_path(run: &TraceRun) -> CriticalPath {
+    let pieces: BTreeMap<usize, Vec<Piece<'_>>> =
+        run.tracks.iter().map(|(&id, t)| (id, flatten_host(t))).collect();
+    let edges = wire_edges(run);
+    // Finishing track: max root end, ties to the lowest id.
+    let Some((&start_track, _)) = run
+        .tracks
+        .iter()
+        .max_by(|a, b| a.1.root_end().partial_cmp(&b.1.root_end()).unwrap().then(b.0.cmp(a.0)))
+    else {
+        return CriticalPath::default();
+    };
+    let mut track = start_track;
+    let mut t = run.tracks[&track].root_end();
+    let mut segs: Vec<PathSeg> = Vec::new();
+    // Every step strictly decreases `t`; the guard only trips on a
+    // malformed (e.g. hand-edited) trace.
+    let guard = run.span_count() * 4 + 64;
+    while t > 0.0 && segs.len() < guard {
+        let Some(ps) = pieces.get(&track) else { break };
+        let idx = ps.partition_point(|p| p.start < t);
+        if idx == 0 {
+            break;
+        }
+        let p = &ps[idx - 1];
+        // A recv-wait piece whose end we reached exactly is a message
+        // arrival: hop to the sender's departure.
+        let jump = if p.owner.is_some_and(|s| s.name == "recv-wait") && p.end == t {
+            let s = p.owner.expect("checked");
+            let src = arg(s, "src").and_then(|v| v.parse::<usize>().ok());
+            let bits = arg(s, "arrival").and_then(|v| u64::from_str_radix(v, 16).ok());
+            match (src, bits) {
+                (Some(src), Some(bits)) => {
+                    edges.get(&(track, bits, src)).filter(|e| e.depart < t)
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(e) = jump {
+            segs.push(PathSeg {
+                track: e.src_track,
+                start: e.depart,
+                end: t,
+                leg: e.leg.or_else(|| p.owner.and_then(|s| s.leg)),
+                label: "wire".to_string(),
+                category: Category::Wire,
+                tier: Some(e.tier),
+                queue_s: e.queue_s.min(t - e.depart),
+            });
+            track = e.src_track;
+            t = e.depart;
+        } else {
+            let tb = &run.tracks[&track];
+            let (category, label) = classify_piece(tb, p, t.min(p.end));
+            segs.push(PathSeg {
+                track,
+                start: p.start,
+                end: t,
+                leg: p.owner.and_then(|s| s.leg),
+                label,
+                category,
+                tier: None,
+                queue_s: 0.0,
+            });
+            t = p.start;
+        }
+    }
+    segs.reverse();
+    CriticalPath { segments: segs }
+}
+
+/// Roll critical-path segments up into the attribution report.
+fn attribute(run: &TraceRun, path: &CriticalPath) -> BottleneckReport {
+    let mut kernel = 0.0;
+    let mut wire = 0.0;
+    let mut queue = 0.0;
+    let mut host = 0.0;
+    let mut by_tier: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut by_stage: BTreeMap<String, f64> = BTreeMap::new();
+    for s in &path.segments {
+        match s.category {
+            Category::Kernel => {
+                kernel += s.dur();
+                // Apportion staged-codec kernels onto their pipeline
+                // stages; anything uncovered keys on the kernel name.
+                let mut covered = 0.0;
+                if let Some(tb) = run.tracks.get(&s.track) {
+                    for c in &tb.spans {
+                        if c.cat != SpanCat::Codec {
+                            continue;
+                        }
+                        let ov = c.end().min(s.end) - c.start.max(s.start);
+                        if ov > 0.0 {
+                            *by_stage.entry(c.name.clone()).or_insert(0.0) += ov;
+                            covered += ov;
+                        }
+                    }
+                }
+                let rest = s.dur() - covered;
+                if rest > 0.0 {
+                    *by_stage.entry(s.label.clone()).or_insert(0.0) += rest;
+                }
+            }
+            Category::Wire => {
+                wire += s.dur() - s.queue_s;
+                queue += s.queue_s;
+                if let Some(t) = s.tier {
+                    *by_tier.entry(t).or_insert(0.0) += s.dur();
+                }
+            }
+            Category::Queue => queue += s.dur(),
+            Category::Host => host += s.dur(),
+        }
+    }
+    BottleneckReport {
+        by_category: vec![
+            (Category::Kernel, kernel),
+            (Category::Wire, wire),
+            (Category::Queue, queue),
+            (Category::Host, host),
+        ],
+        by_tier,
+        by_stage,
+        stragglers: stragglers(run),
+    }
+}
+
+/// Per-leg `(end, dur)` samples across tracks.
+fn leg_spans(run: &TraceRun) -> BTreeMap<u32, Vec<(usize, f64, f64)>> {
+    let mut legs: BTreeMap<u32, Vec<(usize, f64, f64)>> = BTreeMap::new();
+    for (&id, t) in &run.tracks {
+        for s in &t.spans {
+            if s.cat == SpanCat::Leg {
+                if let Some(l) = s.leg {
+                    legs.entry(l).or_default().push((id, s.end(), s.dur));
+                }
+            }
+        }
+    }
+    legs
+}
+
+fn stragglers(run: &TraceRun) -> Vec<Straggler> {
+    let mut out = Vec::new();
+    for (leg, rows) in leg_spans(run) {
+        let mut durs: Vec<f64> = rows.iter().map(|(_, _, d)| *d).collect();
+        durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = durs[durs.len() / 2];
+        if median <= 0.0 {
+            continue;
+        }
+        for (track, _, dur) in rows {
+            if dur > median * STRAGGLER_FACTOR {
+                out.push(Straggler {
+                    leg,
+                    track,
+                    dur_s: dur,
+                    median_s: median,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn slacks(run: &TraceRun) -> Vec<LegSlack> {
+    let mut out = Vec::new();
+    for (leg, rows) in leg_spans(run) {
+        let max_end = rows.iter().map(|(_, e, _)| *e).fold(0.0, f64::max);
+        for (track, end, _) in rows {
+            out.push(LegSlack {
+                leg,
+                track,
+                slack_s: max_end - end,
+            });
+        }
+    }
+    out
+}
+
+/// Join observed per-leg durations against the per-leg predictions the
+/// dispatcher annotated onto its decision instant (`pred_legs`, `+`
+/// separated seconds in leg order).
+fn residuals(run: &TraceRun) -> Vec<LegResidual> {
+    let preds: Option<Vec<f64>> = run
+        .instants
+        .iter()
+        .chain(run.tracks.values().flat_map(|t| t.instants.iter()))
+        .find_map(|i| i.args.iter().find(|(k, _)| *k == "pred_legs").map(|(_, v)| v))
+        .map(|v| v.split('+').filter_map(|p| p.parse().ok()).collect());
+    let Some(preds) = preds else {
+        return Vec::new();
+    };
+    let legs = leg_spans(run);
+    preds
+        .iter()
+        .enumerate()
+        .map(|(i, &pred)| LegResidual {
+            leg: i,
+            predicted_s: pred,
+            observed_s: legs
+                .get(&(i as u32))
+                .map_or(0.0, |rows| rows.iter().map(|(_, _, d)| *d).fold(0.0, f64::max)),
+        })
+        .collect()
+}
+
+/// Analyze one traced run: extract the critical path, attribute its
+/// segments, compute per-leg slack and stragglers, and join prediction
+/// residuals.
+pub fn analyze(run: &TraceRun) -> TraceAnalysis {
+    let critical_path = extract_path(run);
+    let bottlenecks = attribute(run, &critical_path);
+    TraceAnalysis {
+        makespan_s: run.root_end(),
+        critical_path,
+        bottlenecks,
+        slacks: slacks(run),
+        residuals: residuals(run),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    /// Two ranks: rank 0 compresses and sends at t=4 (arriving t=7
+    /// after 1s of uplink queueing), rank 1 waits on the message, then
+    /// reduces until t=10. The chain must hop the message edge.
+    fn synthetic_run() -> std::sync::Arc<TraceRun> {
+        let bits = |v: f64| format!("{:016x}", v.to_bits());
+        let mut s = TrackBuf::new(0);
+        s.open_root("collective", 0.0);
+        s.open_leg(0, 0.0, vec![]);
+        s.span("issue", SpanCat::Phase, Lane::Host, 0.0, 1.0, Some(Phase::Other));
+        s.span("compress", SpanCat::Phase, Lane::Gpu(0), 0.0, 4.0, Some(Phase::Cpr));
+        s.span_args(
+            "wire",
+            SpanCat::Net,
+            Lane::Net,
+            4.0,
+            3.0,
+            None,
+            vec![
+                ("dst", "1".into()),
+                ("arrival", bits(7.0)),
+                ("queue_s", "1.0".into()),
+                ("tier", "2".into()),
+            ],
+        );
+        s.close_all(9.5);
+
+        let mut r = TrackBuf::new(1);
+        r.open_root("collective", 0.0);
+        r.open_leg(0, 0.0, vec![]);
+        r.span_args(
+            "recv-wait",
+            SpanCat::Phase,
+            Lane::Host,
+            0.0,
+            7.0,
+            Some(Phase::Comm),
+            vec![("src", "0".into()), ("arrival", bits(7.0))],
+        );
+        r.span("issue", SpanCat::Phase, Lane::Host, 7.0, 1.0, Some(Phase::Other));
+        r.span("reduce", SpanCat::Phase, Lane::Gpu(0), 7.0, 3.0, Some(Phase::Redu));
+        r.close_all(10.0);
+
+        let tr = Tracer::new();
+        tr.sink(s);
+        tr.sink(r);
+        tr.take_run(vec![])
+    }
+
+    #[test]
+    fn critical_path_hops_the_message_edge_and_tiles_exactly() {
+        let run = synthetic_run();
+        let a = analyze(&run);
+        assert_eq!(a.makespan_s, 10.0);
+        // Bit-exact tiling: total == makespan, segments contiguous.
+        assert_eq!(a.critical_path.total_s(), run.root_end());
+        for w in a.critical_path.segments.windows(2) {
+            assert_eq!(w[0].end.to_bits(), w[1].start.to_bits());
+        }
+        let labels: Vec<&str> =
+            a.critical_path.segments.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, ["issue", "compress", "wire", "issue", "reduce"]);
+        // The wire hop runs on the sender's track and names its tier.
+        let wire = &a.critical_path.segments[2];
+        assert_eq!((wire.track, wire.tier, wire.queue_s), (0, Some(2), 1.0));
+        // Categories sum to the path total.
+        let cat_sum: f64 = a.bottlenecks.by_category.iter().map(|(_, s)| s).sum();
+        assert!((cat_sum - a.critical_path.total_s()).abs() < 1e-9);
+        assert_eq!(a.bottlenecks.category_s(Category::Kernel), 5.0);
+        assert_eq!(a.bottlenecks.category_s(Category::Wire), 2.0);
+        assert_eq!(a.bottlenecks.category_s(Category::Queue), 1.0);
+        assert_eq!(a.bottlenecks.category_s(Category::Host), 2.0);
+        assert_eq!(a.bottlenecks.by_tier.get(&2), Some(&3.0));
+    }
+
+    #[test]
+    fn slack_is_nonnegative_and_zero_on_the_binding_rank() {
+        let run = synthetic_run();
+        let a = analyze(&run);
+        assert!(!a.slacks.is_empty());
+        for s in &a.slacks {
+            assert!(s.slack_s >= 0.0);
+        }
+        // Rank 1 sets leg 0's end (t=10); rank 0 closed early at 9.5.
+        let r1 = a.slacks.iter().find(|s| s.track == 1).unwrap();
+        let r0 = a.slacks.iter().find(|s| s.track == 0).unwrap();
+        assert_eq!(r1.slack_s, 0.0);
+        assert_eq!(r0.slack_s, 0.5);
+    }
+
+    #[test]
+    fn stragglers_flag_the_long_leg() {
+        let run = synthetic_run();
+        // Leg durations 9.5 vs 10.0 — within 5% of the median, so no
+        // straggler on the synthetic run.
+        assert!(analyze(&run).bottlenecks.stragglers.is_empty());
+    }
+
+    #[test]
+    fn residuals_join_predictions_when_recorded() {
+        let run = synthetic_run();
+        assert!(analyze(&run).residuals.is_empty());
+        let tr = Tracer::new();
+        for t in run.tracks.values() {
+            tr.sink(t.clone());
+        }
+        tr.instant(
+            "tuner-decision",
+            0.0,
+            vec![("pred_legs", "8.0e0".into())],
+        );
+        let run2 = tr.take_run(vec![]);
+        let a = analyze(&run2);
+        assert_eq!(a.residuals.len(), 1);
+        let r = &a.residuals[0];
+        assert_eq!((r.predicted_s, r.observed_s), (8.0, 10.0));
+        assert!((r.relative() - 0.25).abs() < 1e-12);
+        assert_eq!(a.max_relative_residual(), Some(0.25));
+    }
+}

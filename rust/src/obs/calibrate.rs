@@ -1,0 +1,381 @@
+//! Trace-calibrated cost model: fit effective link and kernel
+//! parameters from one recorded run and feed them back into planning.
+//!
+//! The analytic [`CostModel`] prices each leg from nameplate numbers:
+//! per-tier `LinkModel`s, `KernelModel` throughputs, a static
+//! stage-split kernel factor per codec. The simulated fabric is richer
+//! — a message crosses nic-tx/uplink-tx/uplink-rx/nic-rx hops, queues
+//! behind neighbors, and codec kernels run batched or multi-stream —
+//! so predictions carry systematic error. This module closes the loop:
+//! every sender-side `wire` span records (bytes, tier, queue-wait) and
+//! every codec kernel span records its bytes, which is enough to fit
+//!
+//! * a per-tier **effective link**: least-squares `secs = α + bytes/β`
+//!   over the queue-corrected wire samples of each crossing tier
+//!   (falling back to a bandwidth-only fit when a tier saw only one
+//!   message size),
+//! * a per-codec **kernel factor**: the least-squares scale mapping
+//!   the nameplate kernel time onto observed durations, and
+//! * a per-codec **measured compression ratio** from the
+//!   `cpr_{in,out}_bytes` counters.
+//!
+//! [`Calibration::apply`] grafts the fitted parameters onto a base
+//! [`CostModel`]; `CommBuilder::calibrate_from` wires that into every
+//! subsequent `compile_tuned` dispatch. The fit is deliberately
+//! parametric (linear in bytes), so it transfers to message sizes the
+//! trace never saw instead of memorizing the observed points.
+
+use std::collections::BTreeMap;
+
+use super::{Lane, SpanCat, SpanRec, TraceRun};
+use crate::gpu::GpuModel;
+use crate::net::LinkModel;
+use crate::topo::CostModel;
+
+/// One queue-corrected observation of a message on the wire.
+#[derive(Debug, Clone, Copy)]
+struct WireSample {
+    bytes: f64,
+    /// Span duration minus recorded queue wait: pure latency +
+    /// serialization across every hop of the path.
+    secs: f64,
+}
+
+/// Fitted corrections from one traced run. All fields are optional in
+/// spirit: tiers or codecs the trace never exercised are simply absent
+/// and [`Calibration::apply`] leaves the base model's values in place.
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    /// Effective link per crossing tier (tier index as used by
+    /// `CostModel::link`).
+    pub links: BTreeMap<usize, LinkModel>,
+    /// Effective kernel-time factor per codec label, pooled over
+    /// compress and decompress samples.
+    pub kernel_factors: Vec<(String, f64)>,
+    /// Measured wire compression ratio per codec label.
+    pub ratios: Vec<(String, f64)>,
+    /// Wire spans consumed by the link fits.
+    pub wire_samples: usize,
+    /// Codec kernel spans consumed by the factor fits.
+    pub kernel_samples: usize,
+}
+
+impl Calibration {
+    /// True when the trace contained nothing to fit.
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty() && self.kernel_factors.is_empty() && self.ratios.is_empty()
+    }
+
+    /// Measured compression ratio for `label`, if the trace recorded
+    /// one.
+    pub fn ratio_for(&self, label: &str) -> Option<f64> {
+        self.ratios.iter().find(|(k, _)| k == label).map(|(_, r)| *r)
+    }
+
+    /// Graft the fitted parameters onto `base`: fitted tiers replace
+    /// the corresponding `links` entries, kernel factors install as
+    /// per-codec overrides, and everything the trace never exercised
+    /// keeps its nameplate value.
+    pub fn apply(&self, base: &CostModel) -> CostModel {
+        let mut links = base.links.clone();
+        for (&tier, link) in &self.links {
+            if tier < links.len() {
+                links[tier] = *link;
+            }
+        }
+        CostModel::new(base.gpu, links, base.cpr_ratio)
+            .with_kernel_factors(self.kernel_factors.clone())
+    }
+}
+
+impl std::fmt::Display for Calibration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "calibration: {} wire samples, {} kernel samples",
+            self.wire_samples, self.kernel_samples
+        )?;
+        for (tier, l) in &self.links {
+            writeln!(
+                f,
+                "  tier {tier}: alpha {:.3e} s | beta {:.3e} B/s",
+                l.alpha, l.beta
+            )?;
+        }
+        for (label, k) in &self.kernel_factors {
+            writeln!(f, "  kernel factor {label}: {k:.3}")?;
+        }
+        for (label, r) in &self.ratios {
+            writeln!(f, "  measured ratio {label}: {r:.2}x")?;
+        }
+        Ok(())
+    }
+}
+
+fn parse_f64(s: Option<&str>) -> Option<f64> {
+    s.and_then(|v| v.parse::<f64>().ok())
+}
+
+/// Least-squares `secs = alpha + bytes / beta` over one tier's
+/// samples. Needs at least two distinct byte sizes for the affine fit;
+/// otherwise falls back to a bandwidth-only fit that keeps the base
+/// link's latency term.
+fn fit_link(samples: &[WireSample], base: &LinkModel) -> Option<LinkModel> {
+    if samples.is_empty() {
+        return None;
+    }
+    let n = samples.len() as f64;
+    let (mut sx, mut sy) = (0.0, 0.0);
+    for s in samples {
+        sx += s.bytes;
+        sy += s.secs;
+    }
+    let (mx, my) = (sx / n, sy / n);
+    let (mut sxx, mut sxy) = (0.0, 0.0);
+    for s in samples {
+        sxx += (s.bytes - mx) * (s.bytes - mx);
+        sxy += (s.bytes - mx) * (s.secs - my);
+    }
+    // Affine fit when the sizes actually vary and the slope is
+    // physical (time grows with bytes).
+    if sxx > 0.0 && sxy > 0.0 {
+        let slope = sxy / sxx;
+        let alpha = (my - slope * mx).max(0.0);
+        return Some(LinkModel::new(alpha, 1.0 / slope));
+    }
+    // Bandwidth-only: keep the base latency (clamped so no sample
+    // implies negative serialization time) and fit beta to the mean.
+    let min_secs = samples.iter().fold(f64::INFINITY, |a, s| a.min(s.secs));
+    let alpha = base.alpha.min(min_secs * 0.5);
+    let ser: f64 = samples.iter().map(|s| s.secs - alpha).sum();
+    if ser <= 0.0 || sx <= 0.0 {
+        return None;
+    }
+    Some(LinkModel::new(alpha, sx / ser))
+}
+
+/// Map `(track, leg)` to the codec label recorded on the leg span, so
+/// kernel samples can be grouped per codec.
+fn leg_codecs(run: &TraceRun) -> BTreeMap<(usize, u32), String> {
+    let mut out = BTreeMap::new();
+    for (&id, t) in &run.tracks {
+        for s in &t.spans {
+            if s.cat == SpanCat::Leg {
+                if let (Some(leg), Some(codec)) = (s.leg, s.arg("codec")) {
+                    out.insert((id, leg), codec.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// True for the device-side codec kernel spans the factor fit consumes.
+fn is_codec_kernel(s: &SpanRec) -> bool {
+    matches!(s.lane, Lane::Gpu(_))
+        && matches!(s.name, "compress" | "compress-batch" | "decompress")
+}
+
+/// Fit a [`Calibration`] from `run` against the nameplate `gpu` kernel
+/// models and `base_links` (`ClusterSpec::tier_links` order).
+pub fn calibrate(run: &TraceRun, gpu: &GpuModel, base_links: &[LinkModel]) -> Calibration {
+    let mut wire: BTreeMap<usize, Vec<WireSample>> = BTreeMap::new();
+    // Per codec label: Σ base·obs and Σ base² for the through-origin
+    // scale fit, pooled over compress + decompress.
+    let mut kfit: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    let codecs = leg_codecs(run);
+    let mut wire_samples = 0usize;
+    let mut kernel_samples = 0usize;
+
+    for (&id, t) in &run.tracks {
+        for s in &t.spans {
+            if s.cat == SpanCat::Net && s.name == "wire" {
+                let (Some(bytes), Some(tier)) = (
+                    parse_f64(s.arg("bytes")),
+                    s.arg("tier").and_then(|v| v.parse::<usize>().ok()),
+                ) else {
+                    continue;
+                };
+                let queue = parse_f64(s.arg("queue_s")).unwrap_or(0.0);
+                let secs = s.dur - queue;
+                if bytes > 0.0 && secs > 0.0 {
+                    wire.entry(tier).or_default().push(WireSample { bytes, secs });
+                    wire_samples += 1;
+                }
+            } else if is_codec_kernel(s) {
+                let Some(bytes) = s.arg("bytes").and_then(|v| v.parse::<usize>().ok()) else {
+                    continue;
+                };
+                let Some(label) = s.leg.and_then(|l| codecs.get(&(id, l))) else {
+                    continue;
+                };
+                let base = if s.name == "decompress" {
+                    gpu.decompress.time(bytes)
+                } else if let Some(k) = s.arg("streams").and_then(|v| v.parse::<usize>().ok()) {
+                    gpu.compress.time_multistream(bytes, k, gpu.stream_issue)
+                } else {
+                    gpu.compress.time(bytes)
+                };
+                if base > 0.0 && s.dur > 0.0 {
+                    let e = kfit.entry(label.clone()).or_insert((0.0, 0.0));
+                    e.0 += base * s.dur;
+                    e.1 += base * base;
+                    kernel_samples += 1;
+                }
+            }
+        }
+    }
+
+    let mut links = BTreeMap::new();
+    for (tier, samples) in &wire {
+        let base = base_links
+            .get((*tier).min(base_links.len().saturating_sub(1)))
+            .copied()
+            .unwrap_or_else(|| LinkModel::new(1e-6, 1e9));
+        if let Some(l) = fit_link(samples, &base) {
+            links.insert(*tier, l);
+        }
+    }
+
+    let kernel_factors: Vec<(String, f64)> = kfit
+        .into_iter()
+        .filter(|(_, (num, den))| *den > 0.0 && *num > 0.0)
+        .map(|(label, (num, den))| (label, num / den))
+        .collect();
+
+    // Measured wire ratio per codec from the byte counters the codec
+    // pipeline leaves behind.
+    let reg = run.metrics_registry();
+    let mut ratios = Vec::new();
+    for key in reg.entries.keys() {
+        if let Some(label) = key.strip_prefix("cpr_in_bytes.") {
+            let inb = reg.counter(key);
+            let outb = reg.counter(&format!("cpr_out_bytes.{label}"));
+            if inb > 0.0 && outb > 0.0 {
+                ratios.push((label.to_string(), (inb / outb).max(1.0)));
+            }
+        }
+    }
+
+    Calibration {
+        links,
+        kernel_factors,
+        ratios,
+        wire_samples,
+        kernel_samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::{TrackBuf, Tracer};
+    use super::*;
+    use crate::sim::Phase;
+
+    /// Build a run whose wire spans follow `secs = alpha + bytes/beta`
+    /// exactly on tier 2, whose compress kernels run at twice the
+    /// nameplate time, and whose codec counters record a 10x ratio.
+    fn synthetic_run(alpha: f64, beta: f64) -> Arc<TraceRun> {
+        let gpu = GpuModel::a100();
+        let tracer = Tracer::new();
+        let mut buf = TrackBuf::new(0);
+        buf.open_root("rank0", 0.0);
+        buf.open_leg(0, 0.0, vec![("codec", "testcodec".into())]);
+        let mut t = 0.0;
+        for &bytes in &[1usize << 16, 1 << 18, 1 << 20] {
+            let secs = alpha + bytes as f64 / beta;
+            buf.span_args(
+                "wire",
+                SpanCat::Net,
+                Lane::Net,
+                t,
+                secs + 3e-5,
+                None,
+                vec![
+                    ("bytes", format!("{bytes}")),
+                    ("tier", "2".into()),
+                    ("queue_s", format!("{:e}", 3e-5)),
+                ],
+            );
+            let kdur = 2.0 * gpu.compress.time(bytes);
+            buf.span_args(
+                "compress",
+                SpanCat::Phase,
+                Lane::Gpu(0),
+                t,
+                kdur,
+                Some(Phase::Cpr),
+                vec![("bytes", format!("{bytes}"))],
+            );
+            t += secs + kdur;
+        }
+        buf.counter_add("cpr_in_bytes.testcodec", 1e6);
+        buf.counter_add("cpr_out_bytes.testcodec", 1e5);
+        buf.close_all(t);
+        tracer.sink(buf);
+        tracer.take_run(vec![])
+    }
+
+    #[test]
+    fn link_fit_recovers_the_generating_line() {
+        let (alpha, beta) = (8e-6, 12.5e9);
+        let run = synthetic_run(alpha, beta);
+        let gpu = GpuModel::a100();
+        let base = vec![LinkModel::new(1e-6, 300e9); 4];
+        let cal = calibrate(&run, &gpu, &base);
+        assert_eq!(cal.wire_samples, 3);
+        let l = cal.links.get(&2).expect("tier 2 fitted");
+        assert!((l.alpha - alpha).abs() < 1e-9, "alpha {} vs {alpha}", l.alpha);
+        assert!((l.beta - beta).abs() / beta < 1e-6, "beta {} vs {beta}", l.beta);
+        // Untouched tiers keep the nameplate link through apply().
+        let cost = cal.apply(&CostModel::new(gpu, base, 10.0));
+        assert!((cost.link(2).beta - beta).abs() / beta < 1e-6);
+        assert_eq!(cost.link(1).beta, 300e9);
+    }
+
+    #[test]
+    fn kernel_factor_and_ratio_come_from_the_samples() {
+        let run = synthetic_run(8e-6, 12.5e9);
+        let gpu = GpuModel::a100();
+        let cal = calibrate(&run, &gpu, &[LinkModel::new(1e-6, 300e9); 4]);
+        assert_eq!(cal.kernel_samples, 3);
+        let (label, factor) = cal
+            .kernel_factors
+            .first()
+            .expect("compress kernels fitted a factor");
+        assert_eq!(label, "testcodec");
+        assert!((factor - 2.0).abs() < 1e-9, "factor {factor}");
+        assert_eq!(cal.ratio_for("testcodec"), Some(10.0));
+        assert!(!cal.is_empty());
+        assert!(format!("{cal}").contains("kernel factor testcodec"));
+    }
+
+    #[test]
+    fn single_size_tier_falls_back_to_bandwidth_only() {
+        let tracer = Tracer::new();
+        let mut buf = TrackBuf::new(0);
+        buf.open_root("rank0", 0.0);
+        for i in 0..3 {
+            buf.span_args(
+                "wire",
+                SpanCat::Net,
+                Lane::Net,
+                i as f64 * 1e-3,
+                1e-6 + 65536.0 / 50e9,
+                None,
+                vec![("bytes", "65536".into()), ("tier", "1".into())],
+            );
+        }
+        buf.close_all(1.0);
+        tracer.sink(buf);
+        let run = tracer.take_run(vec![]);
+        let cal = calibrate(&run, &GpuModel::a100(), &[LinkModel::new(1e-6, 300e9); 2]);
+        let l = cal.links.get(&1).expect("bandwidth-only fit");
+        // Base latency retained; beta explains the rest of the time.
+        assert!((l.alpha - 1e-6).abs() < 1e-12);
+        let predicted = l.alpha + 65536.0 / l.beta;
+        assert!((predicted - (1e-6 + 65536.0 / 50e9)).abs() < 1e-12);
+    }
+}

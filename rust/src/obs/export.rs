@@ -12,12 +12,18 @@
 //! separated by run-boundary instants.
 //!
 //! Everything is hand-formatted (the crate is std-only, like the bench
-//! artifact writers); string values pass through [`esc`].
+//! artifact writers); string values pass through [`esc`]. The inverse
+//! direction — [`import_chrome_json`] — parses a previously exported
+//! file back into its [`TraceRun`]s so `gzccl analyze` can run the
+//! critical-path analyzer offline, long after the simulating process
+//! exited.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt::Write;
 
-use super::{InstantRec, MetricVal, MetricsRegistry, TraceRun};
+use super::analysis::TraceAnalysis;
+use super::{InstantRec, Lane, MetricVal, MetricsRegistry, SpanCat, SpanRec, TraceRun, TrackBuf};
+use crate::sim::Phase;
 
 /// Escape a string for embedding in a JSON string literal.
 pub fn esc(s: &str) -> String {
@@ -75,6 +81,12 @@ pub fn chrome_json(runs: &[TraceRun]) -> String {
 
 /// Chrome-trace JSON over borrowed runs, laid out sequentially.
 pub fn chrome_json_refs(runs: &[&TraceRun]) -> String {
+    chrome_json_with_extra(runs, &[])
+}
+
+/// Chrome-trace JSON with extra pre-rendered events appended — the
+/// CLI's critical-path overlay track (see [`critical_path_events`]).
+pub fn chrome_json_with_extra(runs: &[&TraceRun], extra: &[String]) -> String {
     let mut events: Vec<String> = Vec::new();
     // Track naming metadata: union over runs, first label wins.
     let mut named: BTreeSet<usize> = BTreeSet::new();
@@ -151,6 +163,7 @@ pub fn chrome_json_refs(runs: &[&TraceRun]) -> String {
         }
         offset += run.root_end();
     }
+    events.extend(extra.iter().cloned());
     let meta = if runs.len() == 1 { meta_json(&runs[0].meta) } else { "{}".to_string() };
     format!(
         "{{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {meta},\n\"traceEvents\": [\n{}\n]\n}}\n",
@@ -170,6 +183,60 @@ fn meta_json(meta: &[(String, String)]) -> String {
     out
 }
 
+/// Synthetic process id for the critical-path overlay track — far above
+/// any real rank/actor id, and skipped by [`import_chrome_json`] (the
+/// overlay is derived data, recomputable from the spans).
+pub const CRITICAL_PATH_PID: usize = 1_000_000;
+
+/// Render an extracted critical path as a dedicated Perfetto track
+/// (process [`CRITICAL_PATH_PID`], sorted above the rank tracks): one
+/// complete event per path segment, in time order, annotated with its
+/// category and source track. `offset` shifts the segments onto a
+/// multi-run timeline (the run's start offset, 0 for a single run).
+/// Feed the result to [`chrome_json_with_extra`].
+pub fn critical_path_events(a: &TraceAnalysis, offset: f64) -> Vec<String> {
+    let mut events = Vec::new();
+    if a.critical_path.segments.is_empty() {
+        return events;
+    }
+    events.push(format!(
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {CRITICAL_PATH_PID}, \
+         \"args\": {{\"name\": \"critical path\"}}}}"
+    ));
+    events.push(format!(
+        "{{\"name\": \"process_sort_index\", \"ph\": \"M\", \"pid\": {CRITICAL_PATH_PID}, \
+         \"args\": {{\"sort_index\": -1}}}}"
+    ));
+    events.push(format!(
+        "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {CRITICAL_PATH_PID}, \
+         \"tid\": 0, \"args\": {{\"name\": \"chain\"}}}}"
+    ));
+    for s in &a.critical_path.segments {
+        let mut args = vec![
+            ("category", s.category.label().to_string()),
+            ("track", s.track.to_string()),
+        ];
+        if let Some(l) = s.leg {
+            args.push(("leg", l.to_string()));
+        }
+        if let Some(t) = s.tier {
+            args.push(("tier", t.to_string()));
+        }
+        if s.queue_s > 0.0 {
+            args.push(("queue_s", format!("{:e}", s.queue_s)));
+        }
+        events.push(format!(
+            "{{\"name\": \"{}\", \"cat\": \"critical\", \"ph\": \"X\", \
+             \"pid\": {CRITICAL_PATH_PID}, \"tid\": 0, \"ts\": {}, \"dur\": {}, \"args\": {}}}",
+            esc(&s.label),
+            us(s.start + offset),
+            us(s.dur()),
+            args_json(&args),
+        ));
+    }
+    events
+}
+
 /// Flat metrics JSON: one sorted object of typed entries.
 pub fn metrics_json(reg: &MetricsRegistry) -> String {
     let mut body: Vec<String> = Vec::new();
@@ -183,13 +250,17 @@ pub fn metrics_json(reg: &MetricsRegistry) -> String {
             }
             MetricVal::Hist(h) => format!(
                 "    \"{}\": {{\"type\": \"histogram\", \"count\": {}, \"sum\": {}, \
-                 \"min\": {}, \"max\": {}, \"mean\": {}}}",
+                 \"min\": {}, \"max\": {}, \"mean\": {}, \"p50\": {}, \"p95\": {}, \
+                 \"p99\": {}}}",
                 esc(k),
                 h.count,
                 h.sum,
                 h.min,
                 h.max,
-                h.mean()
+                h.mean(),
+                h.p50(),
+                h.p95(),
+                h.p99()
             ),
         };
         body.push(entry);
@@ -198,6 +269,447 @@ pub fn metrics_json(reg: &MetricsRegistry) -> String {
         "{{\n  \"schema_version\": 1,\n  \"metrics\": {{\n{}\n  }}\n}}\n",
         body.join(",\n")
     )
+}
+
+/// Minimal JSON value for the importer (std-only crate — no serde).
+#[derive(Debug)]
+enum Jv {
+    Null,
+    // The payload is never inspected (the trace format carries no
+    // booleans) but a robust parser still has to represent it.
+    #[allow(dead_code)]
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Jv>),
+    Obj(Vec<(String, Jv)>),
+}
+
+impl Jv {
+    fn get(&self, key: &str) -> Option<&Jv> {
+        match self {
+            Jv::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Jv::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Jv::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent JSON parser over raw bytes. Unescaped string runs
+/// are copied slice-at-a-time (splitting on `"` / `\` is multi-byte
+/// safe: both are ASCII and UTF-8 continuation bytes are `>= 0x80`).
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("json: expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Jv, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Jv::Str(self.string()?)),
+            Some(b't') => self.lit("true", Jv::Bool(true)),
+            Some(b'f') => self.lit("false", Jv::Bool(false)),
+            Some(b'n') => self.lit("null", Jv::Null),
+            Some(_) => self.number(),
+            None => Err("json: unexpected end of input".into()),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Jv) -> Result<Jv, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("json: bad literal at byte {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Jv, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Jv::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            kv.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Jv::Obj(kv));
+                }
+                _ => return Err(format!("json: expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Jv, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Jv::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Jv::Arr(items));
+                }
+                _ => return Err(format!("json: expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("json: unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let e = self.peek().ok_or("json: truncated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("json: truncated \\u escape")?;
+                            let code = std::str::from_utf8(hex)
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| format!("json: bad \\u escape at {}", self.i))?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("json: bad escape '\\{}'", other as char)),
+                    }
+                }
+                Some(_) => {
+                    let start = self.i;
+                    while self.i < self.b.len()
+                        && self.b[self.i] != b'"'
+                        && self.b[self.i] != b'\\'
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|e| format!("json: bad utf-8 in string: {e}"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Jv, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if matches!(c, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Jv::Num)
+            .ok_or_else(|| format!("json: bad number at byte {start}"))
+    }
+}
+
+fn parse_json(s: &str) -> Result<Jv, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("json: trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+/// Annotation keys the importer preserves. Args carry `&'static str`
+/// keys in memory, so re-imported annotations must intern onto the
+/// exporter's vocabulary; anything it never writes is dropped.
+const KNOWN_KEYS: &[&str] = &[
+    "algo",
+    "arrival",
+    "bytes",
+    "category",
+    "codec",
+    "dst",
+    "eb",
+    "leg",
+    "message",
+    "mode",
+    "observed_max_err",
+    "op",
+    "per_call_abs",
+    "phase",
+    "pred_legs",
+    "pred_makespan",
+    "queue_s",
+    "rejected",
+    "scale_after",
+    "scale_before",
+    "source",
+    "src",
+    "streams",
+    "stuck",
+    "tier",
+    "track",
+    "vetoed",
+    "waits",
+];
+
+fn intern_key(k: &str) -> Option<&'static str> {
+    KNOWN_KEYS.iter().copied().find(|x| *x == k)
+}
+
+/// Collect an event's string args, interning keys. `span` drops the
+/// exporter-injected `phase` / `leg` pair (folded back into the
+/// [`SpanRec`] fields instead); instants keep them verbatim.
+fn import_args(v: Option<&Jv>, span: bool) -> Vec<(&'static str, String)> {
+    let Some(Jv::Obj(kv)) = v else {
+        return Vec::new();
+    };
+    kv.iter()
+        .filter(|(k, _)| !(span && (k == "phase" || k == "leg")))
+        .filter_map(|(k, val)| Some((intern_key(k)?, val.as_str()?.to_string())))
+        .collect()
+}
+
+fn str_pairs(v: Option<&Jv>) -> Vec<(String, String)> {
+    let Some(Jv::Obj(kv)) = v else {
+        return Vec::new();
+    };
+    kv.iter()
+        .filter_map(|(k, val)| Some((k.clone(), val.as_str()?.to_string())))
+        .collect()
+}
+
+fn phase_from_label(l: &str) -> Option<Phase> {
+    Phase::ALL.into_iter().find(|p| p.label() == l)
+}
+
+fn cat_from_label(l: &str) -> SpanCat {
+    match l {
+        "collective" => SpanCat::Collective,
+        "leg" => SpanCat::Leg,
+        "codec" => SpanCat::Codec,
+        "net" => SpanCat::Net,
+        _ => SpanCat::Phase,
+    }
+}
+
+fn lane_from_tid(tid: u32) -> Lane {
+    match tid {
+        0 => Lane::Host,
+        1 => Lane::Net,
+        2 => Lane::H2d,
+        3 => Lane::D2h,
+        n => Lane::Gpu(n - 4),
+    }
+}
+
+/// A multi-run layout's `"run N start"` boundary marker.
+fn is_run_marker(name: &str) -> bool {
+    name.strip_prefix("run ")
+        .and_then(|r| r.strip_suffix(" start"))
+        .is_some_and(|n| n.parse::<usize>().is_ok())
+}
+
+/// Get (or lazily start) the run currently receiving payload events.
+fn current_run<'r>(
+    runs: &'r mut Vec<(f64, TraceRun)>,
+    other: &[(String, String)],
+) -> &'r mut (f64, TraceRun) {
+    if runs.is_empty() {
+        runs.push((
+            0.0,
+            TraceRun {
+                meta: other.to_vec(),
+                ..TraceRun::default()
+            },
+        ));
+    }
+    runs.last_mut().expect("just ensured non-empty")
+}
+
+/// Parse a Chrome-trace JSON file written by [`chrome_json`] back into
+/// its [`TraceRun`]s — the `gzccl analyze FILE` entry point.
+///
+/// Inverse of the exporter up to its serialization losses: timestamps
+/// come back at the export's ns resolution (wire-edge identity survives
+/// anyway — the analyzer keys message hops on the verbatim `arrival`
+/// annotation, not on rounded span ends), metrics live in the separate
+/// sidecar file and come back empty, and annotation keys outside the
+/// exporter's vocabulary are dropped. Multi-run files split on the
+/// `"run N start"` boundary markers with their offsets removed; the
+/// critical-path overlay track, being derived data, is skipped.
+pub fn import_chrome_json(s: &str) -> Result<Vec<TraceRun>, String> {
+    let top = parse_json(s)?;
+    let Some(Jv::Arr(events)) = top.get("traceEvents") else {
+        return Err("trace: missing traceEvents array".into());
+    };
+    let other = str_pairs(top.get("otherData"));
+    let mut labels: BTreeMap<usize, String> = BTreeMap::new();
+    // (timeline offset, run) pairs: runs begin at boundary markers, or
+    // at the first payload event for single-run files.
+    let mut runs: Vec<(f64, TraceRun)> = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Jv::as_str).unwrap_or("");
+        let name = ev.get("name").and_then(Jv::as_str).unwrap_or("");
+        let pid = ev.get("pid").and_then(Jv::as_num).unwrap_or(0.0) as usize;
+        match ph {
+            "M" => {
+                if name == "process_name" && pid != CRITICAL_PATH_PID {
+                    if let Some(l) =
+                        ev.get("args").and_then(|a| a.get("name")).and_then(Jv::as_str)
+                    {
+                        labels.insert(pid, l.to_string());
+                    }
+                }
+            }
+            "i" => {
+                let ts = ev.get("ts").and_then(Jv::as_num).unwrap_or(0.0) / 1e6;
+                if pid == 0 && is_run_marker(name) {
+                    runs.push((
+                        ts,
+                        TraceRun {
+                            meta: str_pairs(ev.get("args")),
+                            ..TraceRun::default()
+                        },
+                    ));
+                    continue;
+                }
+                let cur = current_run(&mut runs, &other);
+                let t = ts - cur.0;
+                let args = import_args(ev.get("args"), false);
+                if ev.get("s").and_then(Jv::as_str) == Some("t") {
+                    let buf = cur.1.tracks.entry(pid).or_insert_with(|| TrackBuf::new(pid));
+                    buf.instants.push(InstantRec {
+                        name: name.to_string(),
+                        t,
+                        track: Some(pid),
+                        args,
+                    });
+                } else {
+                    cur.1.instants.push(InstantRec {
+                        name: name.to_string(),
+                        t,
+                        track: None,
+                        args,
+                    });
+                }
+            }
+            "X" => {
+                if pid == CRITICAL_PATH_PID {
+                    continue;
+                }
+                let ts = ev.get("ts").and_then(Jv::as_num).unwrap_or(0.0) / 1e6;
+                let dur = ev.get("dur").and_then(Jv::as_num).unwrap_or(0.0) / 1e6;
+                let tid = ev.get("tid").and_then(Jv::as_num).unwrap_or(0.0) as u32;
+                let args_v = ev.get("args");
+                let charge = args_v
+                    .and_then(|a| a.get("phase"))
+                    .and_then(Jv::as_str)
+                    .and_then(phase_from_label);
+                let leg = args_v
+                    .and_then(|a| a.get("leg"))
+                    .and_then(Jv::as_str)
+                    .and_then(|l| l.parse::<u32>().ok());
+                let cur = current_run(&mut runs, &other);
+                let start = ts - cur.0;
+                let buf = cur.1.tracks.entry(pid).or_insert_with(|| TrackBuf::new(pid));
+                buf.spans.push(SpanRec {
+                    name: name.to_string(),
+                    cat: cat_from_label(ev.get("cat").and_then(Jv::as_str).unwrap_or("phase")),
+                    lane: lane_from_tid(tid),
+                    start,
+                    dur,
+                    charge,
+                    leg,
+                    args: import_args(args_v, true),
+                });
+            }
+            _ => {}
+        }
+    }
+    if runs.is_empty() {
+        return Err("trace: no runs found".into());
+    }
+    let mut out: Vec<TraceRun> = runs.into_iter().map(|(_, r)| r).collect();
+    for run in &mut out {
+        run.labels = labels
+            .iter()
+            .filter(|(id, _)| run.tracks.contains_key(id))
+            .map(|(id, l)| (*id, l.clone()))
+            .collect();
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -255,6 +767,76 @@ mod tests {
         let j = reg.to_json();
         assert!(j.contains("\"wire_bytes.internode\": {\"type\": \"counter\", \"value\": 64}"));
         assert!(j.contains("\"schema_version\": 1"));
+    }
+
+    #[test]
+    fn metrics_hist_line_carries_quantiles() {
+        let tr = Tracer::new();
+        let mut b = TrackBuf::new(0);
+        b.hist_add("queue_wait_s.nic", 2e-6);
+        b.hist_add("queue_wait_s.nic", 8e-6);
+        tr.sink(b);
+        let j = tr.take_run(vec![]).metrics_registry().to_json();
+        assert!(j.contains("\"type\": \"histogram\""));
+        assert!(j.contains("\"p50\":") && j.contains("\"p95\":") && j.contains("\"p99\":"), "{j}");
+    }
+
+    #[test]
+    fn chrome_json_round_trips_through_the_importer() {
+        let a = run();
+        let back = import_chrome_json(&a.to_chrome_json()).unwrap();
+        assert_eq!(back.len(), 1);
+        let r = &back[0];
+        assert_eq!(r.tracks.len(), 1);
+        let t = &r.tracks[&3];
+        assert_eq!(t.spans.len(), a.tracks[&3].spans.len());
+        let cpr = t.spans.iter().find(|s| s.name == "compress").unwrap();
+        assert_eq!(cpr.charge, Some(Phase::Cpr));
+        assert_eq!(cpr.lane, Lane::Gpu(0));
+        assert_eq!(cpr.cat, SpanCat::Phase);
+        assert!((cpr.start - 0.5e-6).abs() < 1e-12 && (cpr.dur - 1.0e-6).abs() < 1e-12);
+        // One track-local warning (escaped quote intact), one global
+        // decision, meta and the synthesized rank label.
+        assert_eq!(t.instants.len(), 1);
+        assert_eq!(t.instants[0].args, vec![("message", "q\"uote".to_string())]);
+        assert_eq!(r.instants.len(), 1);
+        assert_eq!(r.instants[0].name, "tuner-decision");
+        assert_eq!(r.meta, vec![("op".to_string(), "Allreduce".to_string())]);
+        assert_eq!(r.labels.get(&3).map(String::as_str), Some("rank 3"));
+        // The analyzer runs on the re-imported run.
+        assert!(r.analyze().critical_path.total_s() > 0.0);
+    }
+
+    #[test]
+    fn multi_run_import_splits_on_markers() {
+        let j = chrome_json(&[run(), run()]);
+        let back = import_chrome_json(&j).unwrap();
+        assert_eq!(back.len(), 2);
+        for r in &back {
+            assert_eq!(r.meta, vec![("op".to_string(), "Allreduce".to_string())]);
+            // Offsets removed: both runs sit back at [0, 2 us].
+            assert!((r.root_end() - 2e-6).abs() < 1e-12, "{}", r.root_end());
+        }
+    }
+
+    #[test]
+    fn critical_path_overlay_rides_the_export_and_skips_the_import() {
+        let a = run();
+        let extra = critical_path_events(&a.analyze(), 0.0);
+        assert!(!extra.is_empty());
+        let j = chrome_json_with_extra(&[&a], &extra);
+        assert!(j.contains("\"critical path\""));
+        assert!(j.contains("\"cat\": \"critical\""));
+        let back = import_chrome_json(&j).unwrap();
+        assert_eq!(back[0].span_count(), a.span_count());
+        assert!(!back[0].tracks.contains_key(&CRITICAL_PATH_PID));
+    }
+
+    #[test]
+    fn importer_rejects_garbage() {
+        assert!(import_chrome_json("not json").is_err());
+        assert!(import_chrome_json("{}").is_err());
+        assert!(import_chrome_json("{\"traceEvents\": []}").is_err());
     }
 
     #[test]

@@ -38,6 +38,8 @@
 //! flush). Root spans cover `[0, rank_finish]`, so the max root-span
 //! end across tracks equals `RunReport::makespan` exactly.
 
+pub mod analysis;
+pub mod calibrate;
 pub mod export;
 
 use std::collections::BTreeMap;
@@ -146,6 +148,11 @@ impl SpanRec {
     pub fn end(&self) -> f64 {
         self.start + self.dur
     }
+
+    /// Look up an annotation by key.
+    pub fn arg(&self, key: &str) -> Option<&str> {
+        self.args.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+    }
 }
 
 /// One instant event (Chrome trace `ph: "i"`): tuner decisions with
@@ -174,7 +181,20 @@ pub enum MetricVal {
     Hist(HistStat),
 }
 
-/// Histogram summary statistics (count / sum / min / max).
+/// Number of fixed log-spaced histogram buckets.
+const HIST_BUCKETS: usize = 64;
+/// Bucket grid lower edge, `log10` seconds (1 ns).
+const HIST_LOG_MIN: f64 = -9.0;
+/// Bucket grid upper edge, `log10` seconds (1000 s).
+const HIST_LOG_MAX: f64 = 3.0;
+
+/// Histogram summary statistics (count / sum / min / max) plus a fixed
+/// log-spaced bucket array covering 1 ns .. 1000 s of virtual time, so
+/// tail quantiles ([`HistStat::p99`]) survive cross-rank aggregation —
+/// the queue-wait tail is the straggler signal the trace analyzer
+/// keys on. Samples outside the grid clamp to the edge buckets;
+/// quantile estimates are exact to within one bucket's width (~1.54×
+/// in value) and always clamped into `[min, max]`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HistStat {
     /// Number of samples.
@@ -185,15 +205,29 @@ pub struct HistStat {
     pub min: f64,
     /// Largest sample.
     pub max: f64,
+    buckets: [u64; HIST_BUCKETS],
+}
+
+/// Bucket index for sample `v` (non-positive samples take bucket 0).
+fn hist_bucket(v: f64) -> usize {
+    if v <= 0.0 {
+        return 0;
+    }
+    let w = (HIST_LOG_MAX - HIST_LOG_MIN) / HIST_BUCKETS as f64;
+    let i = ((v.log10() - HIST_LOG_MIN) / w).floor();
+    (i.max(0.0) as usize).min(HIST_BUCKETS - 1)
 }
 
 impl HistStat {
     fn one(v: f64) -> Self {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        buckets[hist_bucket(v)] = 1;
         HistStat {
             count: 1,
             sum: v,
             min: v,
             max: v,
+            buckets,
         }
     }
 
@@ -202,6 +236,9 @@ impl HistStat {
         self.sum += o.sum;
         self.min = self.min.min(o.min);
         self.max = self.max.max(o.max);
+        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *a += b;
+        }
     }
 
     /// Mean sample value (0 when empty).
@@ -211,6 +248,42 @@ impl HistStat {
         } else {
             self.sum / self.count as f64
         }
+    }
+
+    /// Estimated `q`-quantile (`0 < q <= 1`) from the log-spaced
+    /// buckets: the geometric midpoint of the bucket where the
+    /// cumulative count crosses `q · count`, clamped into `[min, max]`.
+    /// Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let w = (HIST_LOG_MAX - HIST_LOG_MIN) / HIST_BUCKETS as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let mid = 10f64.powf(HIST_LOG_MIN + (i as f64 + 0.5) * w);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median sample estimate.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile sample estimate.
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile sample estimate (the straggler tail).
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
     }
 }
 
@@ -308,6 +381,24 @@ impl TrackBuf {
         dur: f64,
         charge: Option<Phase>,
     ) {
+        self.span_args(name, cat, lane, start, dur, charge, Vec::new());
+    }
+
+    /// Record a completed span with extra key/value annotations (the
+    /// message-edge metadata the critical-path analyzer follows). Args
+    /// are excluded from [`TraceRun::digest`], so annotating spans
+    /// never perturbs the backend-equivalence contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_args(
+        &mut self,
+        name: impl Into<String>,
+        cat: SpanCat,
+        lane: Lane,
+        start: f64,
+        dur: f64,
+        charge: Option<Phase>,
+        args: Vec<(&'static str, String)>,
+    ) {
         self.spans.push(SpanRec {
             name: name.into(),
             cat,
@@ -316,7 +407,7 @@ impl TrackBuf {
             dur,
             charge,
             leg: self.cur_leg,
-            args: Vec::new(),
+            args,
         });
     }
 
@@ -456,13 +547,30 @@ impl TraceRun {
 
     /// One-paragraph human summary.
     pub fn summary(&self) -> TraceSummary {
+        let reg = self.metrics_registry();
+        let mut queue_wait: Option<HistStat> = None;
+        for (k, v) in &reg.entries {
+            if let (true, MetricVal::Hist(h)) = (k.starts_with("queue_wait_s."), v) {
+                match &mut queue_wait {
+                    Some(q) => q.absorb(*h),
+                    None => queue_wait = Some(*h),
+                }
+            }
+        }
         TraceSummary {
             tracks: self.tracks.len(),
             spans: self.span_count(),
             instants: self.instant_count(),
             root_end: self.root_end(),
             breakdown: self.total_breakdown(),
+            queue_wait,
         }
+    }
+
+    /// Critical-path extraction, bottleneck attribution and straggler
+    /// detection over this run (see [`analysis::analyze`]).
+    pub fn analyze(&self) -> analysis::TraceAnalysis {
+        analysis::analyze(self)
     }
 
     /// Structural well-formedness: every span closed with a finite
@@ -600,6 +708,10 @@ pub struct TraceSummary {
     pub root_end: f64,
     /// Span-derived phase sums over all tracks.
     pub breakdown: Breakdown,
+    /// All `queue_wait_s.*` histograms merged (`None` when the run
+    /// crossed no shared fabric stage) — the p99 tail is the straggler
+    /// signal.
+    pub queue_wait: Option<HistStat>,
 }
 
 impl fmt::Display for TraceSummary {
@@ -609,7 +721,18 @@ impl fmt::Display for TraceSummary {
             "trace: {} tracks, {} spans, {} instants; root end {:.6}s",
             self.tracks, self.spans, self.instants, self.root_end
         )?;
-        write!(f, "  span phases: {}", self.breakdown.percent_string())
+        write!(f, "  span phases: {}", self.breakdown.percent_string())?;
+        if let Some(q) = &self.queue_wait {
+            write!(
+                f,
+                "\n  queue-wait: p50 {:.3e}s | p95 {:.3e}s | p99 {:.3e}s | max {:.3e}s",
+                q.p50(),
+                q.p95(),
+                q.p99(),
+                q.max
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -805,6 +928,29 @@ mod tests {
         assert_eq!((h.count, h.sum, h.min, h.max), (2, 4.0, 1.0, 3.0));
         assert_eq!(h.mean(), 2.0);
         assert_eq!(reg.gauge("cpr_ratio.cuszp"), Some(4.0));
+    }
+
+    #[test]
+    fn hist_quantiles_track_the_tail() {
+        let mut b = TrackBuf::new(0);
+        for i in 1..=100 {
+            b.hist_add("queue_wait_s.nic", i as f64 * 1e-6);
+        }
+        let tr = Tracer::new();
+        tr.sink(b);
+        let run = tr.take_run(vec![]);
+        let h = run.metrics_registry().hist("queue_wait_s.nic").unwrap();
+        assert_eq!(h.count, 100);
+        let (p50, p95, p99) = (h.p50(), h.p95(), h.p99());
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max, "{p50} {p95} {p99}");
+        // Log-bucket estimates land within one bucket (~1.54x) of the
+        // exact order statistics.
+        assert!((25e-6..=80e-6).contains(&p50), "p50 {p50}");
+        assert!((60e-6..=100e-6).contains(&p99), "p99 {p99}");
+        // The summary surfaces the merged queue-wait histogram.
+        let s = run.summary();
+        assert_eq!(s.queue_wait.unwrap().count, 100);
+        assert!(format!("{s}").contains("queue-wait: p50"));
     }
 
     #[test]

@@ -429,6 +429,17 @@ impl Schedule {
             .map(|leg| leg_cost(leg, self.op, &self.tree, phys, cost, msg_bytes))
             .sum()
     }
+
+    /// Per-leg analytic costs in leg order — the same addends
+    /// [`Schedule::estimate_makespan`] sums. Recorded on the
+    /// tuner-decision instant so the trace analyzer can join observed
+    /// leg spans against the exact predictions planning used.
+    pub fn leg_costs(&self, phys: &TierTree, cost: &CostModel, msg_bytes: usize) -> Vec<f64> {
+        self.legs
+            .iter()
+            .map(|leg| leg_cost(leg, self.op, &self.tree, phys, cost, msg_bytes))
+            .collect()
+    }
 }
 
 /// Analytic per-tier cost model: device kernel parameters, per-tier
@@ -442,6 +453,10 @@ pub struct CostModel {
     pub links: Vec<LinkModel>,
     /// Effective compression ratio (raw/wire bytes); 1.0 = no gain.
     pub cpr_ratio: f64,
+    /// Trace-calibrated per-codec kernel-time factors keyed by codec
+    /// label; codecs not listed fall back to the analytic
+    /// [`CostModel::codec_kernel_factor`]. Empty by default.
+    pub kernel_factors: Vec<(String, f64)>,
 }
 
 impl CostModel {
@@ -452,7 +467,15 @@ impl CostModel {
             gpu,
             links,
             cpr_ratio: cpr_ratio.max(1.0),
+            kernel_factors: Vec::new(),
         }
+    }
+
+    /// Install trace-calibrated per-codec kernel factors (see
+    /// [`crate::obs::calibrate`]).
+    pub fn with_kernel_factors(mut self, factors: Vec<(String, f64)>) -> Self {
+        self.kernel_factors = factors;
+        self
     }
 
     /// A100 + paper-testbed default links (NVLink, Slingshot, default
@@ -534,6 +557,17 @@ impl CostModel {
         pred + quant + fc * coder_scale
     }
 
+    /// Kernel factor for `codec`, preferring a trace-calibrated
+    /// override over the analytic stage-split estimate.
+    pub fn kernel_factor(&self, codec: CodecSpec) -> f64 {
+        let label = codec.label();
+        self.kernel_factors
+            .iter()
+            .find(|(k, _)| *k == label)
+            .map(|(_, f)| *f)
+            .unwrap_or_else(|| Self::codec_kernel_factor(codec))
+    }
+
     fn wire(&self, bytes: usize, codec: Option<CodecSpec>) -> f64 {
         match codec {
             Some(c) => bytes as f64 / self.codec_ratio(c),
@@ -543,14 +577,14 @@ impl CostModel {
 
     fn comp(&self, bytes: usize, codec: Option<CodecSpec>) -> f64 {
         match codec {
-            Some(c) => self.gpu.compress.time(bytes) * Self::codec_kernel_factor(c),
+            Some(c) => self.gpu.compress.time(bytes) * self.kernel_factor(c),
             None => 0.0,
         }
     }
 
     fn dec(&self, bytes: usize, codec: Option<CodecSpec>) -> f64 {
         match codec {
-            Some(c) => self.gpu.decompress.time(bytes) * Self::codec_kernel_factor(c),
+            Some(c) => self.gpu.decompress.time(bytes) * self.kernel_factor(c),
             None => 0.0,
         }
     }

@@ -247,3 +247,129 @@ fn dispatch_instants_and_codec_metrics_are_recorded() {
     let merged = tracer.chrome_json();
     assert!(merged.contains("run 0 start") && merged.contains("run 1 start"));
 }
+
+/// Satellite: analyzer invariants on the ISSUE's 512-rank 4x16x8
+/// acceptance scenario, under both backends. The critical path must
+/// reproduce the makespan bit-exactly, slacks are non-negative by
+/// construction, the category rollup sums to the path total, and the
+/// extracted path is digest-stable across execution backends.
+#[test]
+fn analyzer_invariants_on_512_rank_hierarchical_allreduce() {
+    use gzccl::obs::analysis::Category;
+    let run = |backend: ExecBackend| -> CollectiveReport {
+        let comm = Communicator::builder(512)
+            .tiers(&[4, 16, 8])
+            .error_bound(1e-3)
+            .backend(backend)
+            .trace(Tracer::new())
+            .build()
+            .expect("communicator");
+        let inputs: Vec<DeviceBuf> = (0..512).map(|_| DeviceBuf::Virtual(1 << 16)).collect();
+        comm.allreduce(inputs, &CollectiveSpec::forced(Algo::Hierarchical))
+            .expect("hierarchical allreduce")
+    };
+    let t = run(ExecBackend::Threads);
+    let e = run(ExecBackend::Events);
+    let mut digests = Vec::new();
+    for (name, rep) in [("threads", &t), ("events", &e)] {
+        let tr = rep.trace.as_ref().unwrap();
+        let a = tr.analyze();
+        // Critical path == makespan, bit-exact f64 equality.
+        assert_eq!(a.critical_path.total_s(), tr.root_end(), "{name}");
+        assert_eq!(a.makespan_s, rep.report.makespan.as_secs(), "{name}");
+        // Chain segments tile the interval with shared boundaries.
+        for w in a.critical_path.segments.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "{name}: gap in the chain");
+        }
+        // Slack is non-negative everywhere by construction.
+        assert!(a.slacks.iter().all(|s| s.slack_s >= 0.0), "{name}");
+        // Category rollup sums to the path total.
+        let by_cat: f64 = [Category::Kernel, Category::Wire, Category::Queue, Category::Host]
+            .iter()
+            .map(|&c| a.bottlenecks.category_s(c))
+            .sum();
+        let total = a.critical_path.total_s();
+        assert!(
+            (by_cat - total).abs() <= 1e-9 * total.max(1e-30),
+            "{name}: categories sum to {by_cat}, critical path is {total}"
+        );
+        // A deep schedule with shared uplinks must show network time.
+        assert!(a.bottlenecks.category_s(Category::Wire) > 0.0, "{name}");
+        assert!(!a.bottlenecks.by_tier.is_empty(), "{name}");
+        digests.push(a.digest());
+    }
+    assert_eq!(digests[0], digests[1], "critical path diverges across backends");
+}
+
+/// The ISSUE's calibration acceptance: fit a calibration from a traced
+/// run, then on a *held-out* message size the calibrated cost model's
+/// per-leg predictions must carry a strictly smaller max relative
+/// residual than the nameplate model's, and the tuner's pick under the
+/// calibrated model must be no slower than before.
+#[test]
+fn calibration_shrinks_heldout_residuals_and_never_degrades_tuning() {
+    let fit_elems = 1 << 16; // traced fitting size
+    let heldout_elems = 1 << 18; // never seen by the fit
+    let build = |cal: Option<std::sync::Arc<gzccl::obs::TraceRun>>| -> Communicator {
+        let mut b = Communicator::builder(512)
+            .tiers(&[4, 16, 8])
+            .error_bound(1e-3)
+            .trace(Tracer::new());
+        if let Some(run) = cal {
+            b = b.calibrate_from(run);
+        }
+        b.build().expect("communicator")
+    };
+    let inputs = |elems: usize| -> Vec<DeviceBuf> {
+        (0..512).map(|_| DeviceBuf::Virtual(elems)).collect()
+    };
+    let base = build(None);
+    let fit_run = base
+        .allreduce(inputs(fit_elems), &CollectiveSpec::forced(Algo::Hierarchical))
+        .expect("fitting run")
+        .trace
+        .clone()
+        .expect("traced");
+    let calibrated = build(Some(fit_run));
+    assert!(
+        calibrated.calibration().is_some_and(|c| !c.is_empty()),
+        "the traced run must yield a non-empty fit"
+    );
+
+    // Held-out size, forced hierarchical on both communicators. Each
+    // dispatch annotates ITS cost model's per-leg predictions onto the
+    // trace, so each run's residuals score that model against the
+    // fabric it actually simulated.
+    let spec = CollectiveSpec::forced(Algo::Hierarchical);
+    let before = base.allreduce(inputs(heldout_elems), &spec).expect("uncalibrated");
+    let after = calibrated
+        .allreduce(inputs(heldout_elems), &spec)
+        .expect("calibrated");
+    let r_before = before
+        .analysis()
+        .and_then(|a| a.max_relative_residual())
+        .expect("uncalibrated residuals");
+    let r_after = after
+        .analysis()
+        .and_then(|a| a.max_relative_residual())
+        .expect("calibrated residuals");
+    assert!(
+        r_after < r_before,
+        "calibration must shrink the held-out max residual ({r_before:.3} -> {r_after:.3})"
+    );
+
+    // The tuner under the calibrated model picks a schedule that is no
+    // slower than the nameplate model's pick.
+    let auto_before = base
+        .allreduce(inputs(heldout_elems), &CollectiveSpec::auto())
+        .expect("auto uncalibrated");
+    let auto_after = calibrated
+        .allreduce(inputs(heldout_elems), &CollectiveSpec::auto())
+        .expect("auto calibrated");
+    assert!(
+        auto_after.report.makespan.as_secs() <= auto_before.report.makespan.as_secs(),
+        "calibrated tuning must not degrade the pick ({} -> {})",
+        auto_before.report.makespan,
+        auto_after.report.makespan
+    );
+}
