@@ -2,8 +2,9 @@
 """Non-blocking benchmark trend check.
 
 Compares the current sweep artifact (BENCH_allreduce.json, the
-engine's BENCH_engine.json rank-scale sweep, or the codec-throughput
-BENCH_codec.json) against the previous run's artifact and emits a
+engine's BENCH_engine.json rank-scale sweep, the codec-throughput
+BENCH_codec.json, or the pipeline-depth BENCH_pipeline.json sweep)
+against the previous run's artifact and emits a
 GitHub Actions ::warning:: annotation for every sweep point whose
 metric regressed by more than the threshold. The metric is the virtual
 makespan for collective sweeps and the combined encode+decode wall
@@ -40,10 +41,16 @@ def load_rows(path):
         # new) have no such column and default to the same "".
         # Codec rows (BENCH_codec.json) have no algo/ranks columns at
         # all: the staged-pipeline label is the identity instead.
+        # `pipeline` separates BENCH_pipeline.json's depth sweep rows by
+        # the REQUESTED policy ("1"/"2"/"4"/"8"/"auto") rather than the
+        # executed depth, so an auto row keeps matching its baseline
+        # even when the tuner's depth pick changes; artifacts from
+        # before the column existed default to the same "".
         key = (
             row.get("algo", ""),
             row.get("codec", ""),
             row.get("backend", ""),
+            row.get("pipeline", ""),
             row.get("ranks", 0),
             row.get("gpus_per_node", 0),
             row.get("tiers", ""),
@@ -86,13 +93,19 @@ def main():
         if old <= 0.0:
             continue
         delta = (new - old) / old
-        algo, codec, backend, ranks, gpn, tiers, size = key
+        algo, codec, backend, pipeline, ranks, gpn, tiers, size = key
         if codec:
             label = f"codec={codec} size={size}MiB"
         else:
             label = f"algo={algo} ranks={ranks} gpn={gpn} tiers={tiers} size={size}MiB"
         if backend:
             label += f" backend={backend}"
+        if pipeline:
+            label += f" pipeline={pipeline} depth={row.get('depth', 0)}"
+            prev_depth = base.get("depth", 0)
+            if prev_depth and prev_depth != row.get("depth", 0):
+                print(f"note: executed depth changed for {label}: "
+                      f"{prev_depth} -> {row.get('depth', 0)}")
         # Optional per-leg-eb column (absent in pre-ExecPlan artifacts):
         # shown for context, and a change is flagged because different
         # per-leg bounds change compressed wire volume, which can

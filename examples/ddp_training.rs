@@ -27,11 +27,10 @@ fn main() -> gzccl::Result<()> {
         ranks: 8,
         steps: 200,
         error_bound: 1e-4,
-        accuracy_target: None,
-        adaptive: false,
         redoub: true,
         compress: true,
         seed: 42,
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let out = train_ddp(&cfg, &engine)?;

@@ -1,0 +1,114 @@
+//! Tour of the non-blocking pipelined collectives.
+//!
+//! Three stops:
+//!
+//! 1. **Depth as a tuned axis** — on the paper's 512-rank 4x16x8
+//!    testbed at 64 MiB, the dispatcher prices every pipeline depth
+//!    with the cost model and the chunk-level leg overlap strictly
+//!    beats the barrier executor.
+//! 2. **Persistent plans** — `Communicator::persistent` runs
+//!    selection, schedule compilation and depth choice once;
+//!    `run`/`irun` replay the frozen plan every step.
+//! 3. **A DDP step loop** — each step launches its gradient
+//!    allreduce non-blocking (`irun`) and synthesizes the next
+//!    batch while the collective flies, then verifies the overlapped
+//!    loop is bit-identical to the synchronous one.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_tour
+//! ```
+
+use gzccl::collectives::{Algo, Op};
+use gzccl::comm::{CollectiveSpec, Communicator, Pipeline};
+use gzccl::coordinator::{DeviceBuf, ExecPolicy};
+use gzccl::testkit::Pcg32;
+
+const MIB: usize = 1 << 20;
+
+fn main() -> gzccl::Result<()> {
+    // ── Stop 1: the tuner picks the depth ──────────────────────────
+    let n = 512;
+    println!("512 ranks, 4x16x8 tiers, 64 MiB gZ-Allreduce:");
+    let run = |pipeline: Pipeline| -> gzccl::Result<_> {
+        let comm = Communicator::builder(n)
+            .tiers(&[4, 16, 8])
+            .policy(ExecPolicy::gzccl())
+            .pipeline(pipeline)
+            .build()?;
+        let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(64 * MIB / 4)).collect();
+        comm.allreduce(inputs, &CollectiveSpec::auto())
+    };
+    let piped = run(Pipeline::Auto)?;
+    let barrier = run(Pipeline::Off)?;
+    println!(
+        "  barrier (depth 1)        : {} ({:?})",
+        barrier.makespan, barrier.algo
+    );
+    println!(
+        "  pipelined (depth {})      : {}  — chunk k's internode leg\n\
+         \x20                            overlaps chunk k+1's intranode reduce",
+        piped.exec_plan.depth, piped.makespan
+    );
+    assert!(piped.exec_plan.depth > 1);
+    assert!(piped.makespan.as_secs() < barrier.makespan.as_secs());
+    let speedup = barrier.makespan.as_secs() / piped.makespan.as_secs();
+    println!("  overlap speedup          : {speedup:.2}x");
+
+    // ── Stop 2: plan once, run many ────────────────────────────────
+    let ranks = 8;
+    let params = 4096;
+    let comm = Communicator::builder(ranks)
+        .gpus_per_node(2)
+        .error_bound(1e-4)
+        .build()?;
+    let spec = CollectiveSpec::forced(Algo::Hierarchical);
+    let plan = comm.persistent(Op::Allreduce, params, &spec)?;
+    println!(
+        "\npersistent gradient plan: {:?}/{:?}, depth {} — per-step dispatch cost amortized",
+        plan.op(),
+        plan.algo(),
+        plan.depth()
+    );
+
+    // ── Stop 3: overlap backward compute with the allreduce ────────
+    // A mock DDP step: "gradients" are a deterministic function of the
+    // batch, batch synthesis is the parameter-independent work we can
+    // hide inside the collective's flight time.
+    let steps = 5;
+    let grads = |step: usize| -> Vec<DeviceBuf> {
+        (0..ranks)
+            .map(|r| {
+                let mut rng = Pcg32::new(0xD0, (step * ranks + r) as u64);
+                DeviceBuf::Real(rng.uniform_vec(params, -1.0, 1.0))
+            })
+            .collect()
+    };
+
+    // Synchronous reference: dispatch, then synthesize the next batch.
+    let mut sync_out = Vec::new();
+    let mut sync_comm_s = 0.0;
+    for step in 0..steps {
+        let report = plan.run(grads(step))?;
+        sync_comm_s += report.makespan.as_secs();
+        sync_out.push(report.outputs[0].as_real().to_vec());
+        let _next = grads(step + 1); // batch synthesis AFTER the wait
+    }
+
+    // Overlapped: irun the collective, synthesize while it flies.
+    let mut over_out = Vec::new();
+    let mut batch = grads(0);
+    for step in 0..steps {
+        let handle = plan.irun(std::mem::take(&mut batch));
+        batch = grads(step + 1); // batch synthesis DURING the flight
+        let report = handle.wait()?;
+        over_out.push(report.outputs[0].as_real().to_vec());
+    }
+    assert_eq!(sync_out, over_out, "overlap must not change a single bit");
+    println!(
+        "overlapped {steps}-step loop: {:.3} virtual ms of collective time,\n\
+         batch synthesis hidden in flight — outputs bit-identical to the sync loop",
+        sync_comm_s * 1e3
+    );
+    println!("OK");
+    Ok(())
+}

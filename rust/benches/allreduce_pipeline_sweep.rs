@@ -1,0 +1,127 @@
+//! Pipeline-depth sweep for the hierarchical gZ-Allreduce.
+//!
+//! Grids pipeline depth × message size at the paper's 512-rank 4x16x8
+//! acceptance shape (plus a smaller 128-rank layout), forced depths 1,
+//! 2, 4, 8 alongside the dispatcher's `Pipeline::Auto` pick. Each row
+//! records the virtual makespan, the analyzer's critical-path length,
+//! and an `exposed_comm_s` column — the wire + queue seconds left ON
+//! the critical path, i.e. the communication the chunk-level overlap
+//! failed to hide behind kernels. Emits `BENCH_pipeline.json` at the
+//! workspace root, the trend artifact CI archives per commit (the
+//! trend script keys rows by depth, tolerating artifacts from before
+//! the column existed).
+
+use gzccl::bench_support::{bench, schema_stamp};
+use gzccl::collectives::Algo;
+use gzccl::comm::{CollectiveSpec, Communicator, Pipeline};
+use gzccl::coordinator::{DeviceBuf, ExecPolicy};
+use gzccl::obs::analysis::Category;
+use gzccl::obs::Tracer;
+
+fn tiers_label(widths: &[usize]) -> String {
+    widths
+        .iter()
+        .map(|w| w.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
+
+/// One traced hierarchical dispatch under `pipeline`: executed depth,
+/// virtual makespan, exposed communication (critical-path wire+queue
+/// seconds), path length and dominant bottleneck.
+fn makespan(
+    ranks: usize,
+    widths: &[usize],
+    bytes: usize,
+    pipeline: Pipeline,
+) -> (usize, f64, f64, f64, String) {
+    let comm = Communicator::builder(ranks)
+        .tiers(widths)
+        .policy(ExecPolicy::gzccl())
+        .error_bound(1e-4)
+        .pipeline(pipeline)
+        .trace(Tracer::new())
+        .build()
+        .expect("communicator");
+    let inputs: Vec<DeviceBuf> = (0..ranks).map(|_| DeviceBuf::Virtual(bytes / 4)).collect();
+    let report = comm
+        .allreduce(inputs, &CollectiveSpec::forced(Algo::Hierarchical))
+        .expect("allreduce");
+    let analysis = report.trace.as_ref().expect("traced run").analyze();
+    let critical_path_s = analysis.critical_path.total_s();
+    let exposed_comm_s = analysis.bottlenecks.category_s(Category::Wire)
+        + analysis.bottlenecks.category_s(Category::Queue);
+    let bottleneck = analysis
+        .bottlenecks
+        .dominant(critical_path_s)
+        .map(|(c, _)| c.label().to_string())
+        .unwrap_or_default();
+    (
+        report.exec_plan.depth,
+        report.makespan.as_secs(),
+        exposed_comm_s,
+        critical_path_s,
+        bottleneck,
+    )
+}
+
+fn main() {
+    let layouts: [(usize, &[usize]); 2] = [(128, &[4, 8, 4]), (512, &[4, 16, 8])];
+    let sizes_mb = [4usize, 16, 64];
+    let pipelines = [
+        ("1", Pipeline::Off),
+        ("2", Pipeline::Fixed(2)),
+        ("4", Pipeline::Fixed(4)),
+        ("8", Pipeline::Fixed(8)),
+        ("auto", Pipeline::Auto),
+    ];
+
+    let mut rows = Vec::new();
+    for &(ranks, widths) in &layouts {
+        let label = tiers_label(widths);
+        for &mb in &sizes_mb {
+            for &(name, pipeline) in &pipelines {
+                let ((depth, virt_s, exposed_s, cp_s, bottleneck), stats) =
+                    bench(2, || makespan(ranks, widths, mb << 20, pipeline));
+                println!(
+                    "depth {name:>4} (ran {depth}) | {ranks:>4} ranks | tiers {label:>7} | \
+                     {mb:>3} MiB | virtual {:.3} ms | exposed comm {:.3} ms | \
+                     bottleneck {bottleneck:>6} | wall {stats}",
+                    virt_s * 1e3,
+                    exposed_s * 1e3
+                );
+                rows.push(format!(
+                    concat!(
+                        "    {{\"algo\": \"hier\", \"pipeline\": \"{}\", \"depth\": {}, ",
+                        "\"ranks\": {}, \"gpus_per_node\": {}, \"tiers\": \"{}\", ",
+                        "\"size_mib\": {}, \"virtual_makespan_s\": {:.9}, ",
+                        "\"exposed_comm_s\": {:.9}, \"critical_path_s\": {:.9}, ",
+                        "\"bottleneck\": \"{}\", ",
+                        "\"wall_mean_s\": {:.6}, \"wall_min_s\": {:.6}, \"wall_runs\": {}}}"
+                    ),
+                    name, depth, ranks, widths[0], label, mb, virt_s, exposed_s, cp_s,
+                    bottleneck, stats.mean, stats.min, stats.runs
+                ));
+            }
+        }
+    }
+
+    let json = format!(
+        "{{\n  {},\n  \"bench\": \"allreduce_pipeline_sweep\",\n  \"policy\": \"gzccl\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        schema_stamp(),
+        rows.join(",\n")
+    );
+    // `cargo bench` runs the harness with CWD set to the *package*
+    // root (rust/); anchor the artifact at the workspace root where CI
+    // expects it.
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::PathBuf::from(dir).join("..").join("BENCH_pipeline.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_pipeline.json"),
+    };
+    std::fs::write(&path, &json).expect("write BENCH_pipeline.json");
+    println!(
+        "wrote {} ({} rows)",
+        path.display(),
+        layouts.len() * sizes_mb.len() * pipelines.len()
+    );
+}

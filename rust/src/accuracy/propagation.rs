@@ -37,7 +37,7 @@ use crate::net::Topology;
 // The doubling-stage recurrence is defined once, next to the schedule
 // walk that shares it — the two error models cannot drift apart.
 use crate::topo::schedule::{doubling_error_stages, pow2_minus_1};
-use crate::topo::{compile_min_error, TierTree};
+use crate::topo::{compile_min_error, compile_rooted, TierTree};
 
 /// Predicted worst-case pointwise deviation of a collective's output
 /// from the exact (lossless) result.
@@ -144,6 +144,12 @@ pub fn amplification_tiers(
         (Op::Allreduce, Algo::Hierarchical)
         | (Op::ReduceScatter, Algo::Hierarchical)
         | (Op::Allgather, Algo::Hierarchical) => hier_amplification(op, tree),
+        // Rooted hierarchical descents: walk the schedule compiled
+        // around this root (worst case over ranks — conservative for
+        // the root itself, which keeps a shorter lossy path).
+        (Op::Scatter | Op::Bcast, Algo::Hierarchical) => {
+            compile_rooted(op, tree, true, root).ok().map(|s| s.amplification())
+        }
         // Staged reduce+bcast (Cray-MPI baseline shape): the binomial
         // reduce sends raw; only the broadcast compresses, once.
         (Op::Allreduce, Algo::Binomial) => Some(1.0),
@@ -279,6 +285,11 @@ pub fn cpr_stages(
         // their compiled schedule.
         (Op::ReduceScatter, Algo::Hierarchical) | (Op::Allgather, Algo::Hierarchical) => {
             compile_min_error(op, &TierTree::from(topo), true)
+                .ok()
+                .map(|s| s.cpr_stages_at(rank))
+        }
+        (Op::Scatter | Op::Bcast, Algo::Hierarchical) => {
+            compile_rooted(op, &TierTree::from(topo), true, root)
                 .ok()
                 .map(|s| s.cpr_stages_at(rank))
         }

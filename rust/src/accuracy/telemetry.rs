@@ -132,11 +132,16 @@ impl AccuracyReport {
 }
 
 /// Evenly-strided deterministic sample of `len` indices (all of them
-/// when `len ≤ MAX_SAMPLE`). Strictly increasing, so every index is
-/// distinct.
+/// when `len ≤ MAX_SAMPLE`): the `floor(j·len/k)` chunk starts of
+/// [`Chunks`] — the one boundary convention shared with the chunked
+/// collectives. Strictly increasing, so every index is distinct.
 fn sample_indices(len: usize) -> Vec<usize> {
     let k = len.min(MAX_SAMPLE);
-    (0..k).map(|j| j * len / k).collect()
+    if k == 0 {
+        return Vec::new();
+    }
+    let split = Chunks::new(len, k);
+    (0..k).map(|j| split.start(j)).collect()
 }
 
 /// A pre-run probe: sampled indices plus their exact f64 reference.

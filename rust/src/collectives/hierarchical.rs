@@ -48,6 +48,16 @@
 //! different compressors on them. [`run_schedule`] remains the
 //! bare-schedule entry point: it derives the equivalent uniform plan
 //! from the cluster's ambient policy and bound.
+//!
+//! **Pipelining.** When the plan's `depth` exceeds 1,
+//! [`run_legs_pipelined`] splits the vector into `depth` chunk windows
+//! (the same [`Chunks`] floor math) and drives each chunk's legs as
+//! [`LegCursor`] round state machines on a global round calendar, one
+//! round of stagger between chunks, issuing every in-flight chunk's
+//! sends before awaiting any arrival — chunk `k`'s wire rounds overlap
+//! the other chunks' compress/reduce kernels. Per chunk, arithmetic,
+//! tags, and reduction order are the barrier executor's exactly, so a
+//! pipelined result is bitwise-identical to the depth-1 run.
 
 use crate::compress::CodecSpec;
 use crate::coordinator::{CompBuf, CompressionMode, DeviceBuf, Payload, ProgFut, Program, RankCtx};
@@ -59,12 +69,18 @@ use crate::topo::{compile_min_error, ExecPlan, LegExec, LegKind, Schedule, TierT
 use super::chunking::Chunks;
 use super::Op;
 
-/// Tag base; the leg index is encoded above bit 24, per-message
-/// offsets (member index / round) below.
+/// Tag base; the pipeline chunk is encoded above bit 28, the leg index
+/// above bit 24, per-message offsets (member index / round) below.
 const TAG_SCHED: u64 = 0x544F_0000_0000;
 
-fn tag(leg: usize, off: u64) -> u64 {
-    TAG_SCHED + ((leg as u64) << 24) + off
+/// Hard cap on pipeline depth: chunk indices must fit the tag bits
+/// (28..31), and deeper pipelines only pay more per-chunk latency
+/// floors anyway. The tuner's depth sweep stays within this.
+pub const MAX_PIPELINE_DEPTH: usize = 8;
+
+fn tag_c(chunk: usize, leg: usize, off: u64) -> u64 {
+    debug_assert!(chunk < MAX_PIPELINE_DEPTH);
+    TAG_SCHED + ((chunk as u64) << 28) + ((leg as u64) << 24) + off
 }
 
 /// Offsets keeping a leg's sub-exchanges apart (member indices occupy
@@ -131,6 +147,43 @@ impl Program for PlanProg {
     }
 }
 
+/// [`Program`] adapter for the rooted hierarchical descents
+/// ([`Op::Scatter`], [`Op::Bcast`]): carries the total element count of
+/// the scattered/broadcast vector, which non-root ranks cannot derive
+/// from their (possibly empty) local inputs.
+pub struct RootedProg {
+    /// The compiled plan (its schedule records the root).
+    pub plan: ExecPlan,
+    /// Element count of the root's vector.
+    pub total: usize,
+}
+
+impl Program for RootedProg {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move {
+            let sched = self.plan.schedule.as_ref().ok_or_else(|| {
+                Error::collective("rooted hierarchical dispatch needs a scheduled plan")
+            })?;
+            if self.plan.legs.len() != sched.legs.len() {
+                return Err(Error::collective(format!(
+                    "execution plan carries {} leg directives for a {}-leg schedule",
+                    self.plan.legs.len(),
+                    sched.legs.len()
+                )));
+            }
+            run_legs_pipelined(
+                ctx,
+                sched,
+                &self.plan.legs,
+                input,
+                self.plan.depth,
+                Some(self.total),
+            )
+            .await
+        })
+    }
+}
+
 /// Execute a compiled [`ExecPlan`] (a hierarchical schedule whose legs
 /// carry their own compression mode and error bound). Every rank of
 /// the communicator must run the same plan over a same-length input
@@ -146,7 +199,33 @@ pub async fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> R
             sched.legs.len()
         )));
     }
-    run_legs(ctx, sched, &plan.legs, input).await
+    run_legs_pipelined(ctx, sched, &plan.legs, input, plan.depth, None).await
+}
+
+/// [`Program`] adapter for registry-default rooted hierarchical
+/// dispatch ([`Op::Scatter`], [`Op::Bcast`] without a precompiled
+/// plan): compiles the rooted descent from the cluster's tier tree at
+/// run time and executes it at the ambient policy.
+pub struct RootedDefaultProg {
+    /// Which rooted descent to compile.
+    pub op: Op,
+    /// Element count of the root's vector.
+    pub total: usize,
+    /// The dispatch root.
+    pub root: usize,
+}
+
+impl Program for RootedDefaultProg {
+    fn run<'a>(&'a self, ctx: &'a mut RankCtx, input: DeviceBuf) -> ProgFut<'a> {
+        Box::pin(async move {
+            if ctx.nranks() <= 1 {
+                return Ok(input);
+            }
+            let compressed = ctx.policy().compression != CompressionMode::None;
+            let sched = crate::topo::compile_rooted(self.op, ctx.tiers(), compressed, self.root)?;
+            run_schedule_with(ctx, &sched, input, Some(self.total)).await
+        })
+    }
 }
 
 /// Execute a compiled hierarchical schedule at the cluster's ambient
@@ -154,6 +233,17 @@ pub async fn run_plan(ctx: &mut RankCtx, plan: &ExecPlan, input: DeviceBuf) -> R
 /// direct invocation; equivalent to [`run_plan`] over the uniform
 /// [`ExecPlan`] of that schedule.
 pub async fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf) -> Result<DeviceBuf> {
+    run_schedule_with(ctx, sched, input, None).await
+}
+
+/// [`run_schedule`] with an explicit total element count, which the
+/// rooted descents need because non-root ranks hold empty inputs.
+pub async fn run_schedule_with(
+    ctx: &mut RankCtx,
+    sched: &Schedule,
+    input: DeviceBuf,
+    total_override: Option<usize>,
+) -> Result<DeviceBuf> {
     let mode = ctx.policy().compression;
     let eb = ctx.compressor_error_bound().unwrap_or(0.0);
     // Tuned per-leg codecs are honored only when the ambient compressor
@@ -180,379 +270,1345 @@ pub async fn run_schedule(ctx: &mut RankCtx, sched: &Schedule, input: DeviceBuf)
             }
         })
         .collect();
-    run_legs(ctx, sched, &legs, input).await
+    run_legs_pipelined(ctx, sched, &legs, input, 1, total_override).await
 }
 
-/// The leg interpreter (see the module docs for per-leg semantics).
-async fn run_legs(
+/// Mutable per-chunk execution state threaded through the legs: the
+/// rank's current buffer, its virtual-time readiness, and the global
+/// element window it covers. The barrier executor is the degenerate
+/// single chunk over `[0, total)`.
+struct ChunkState {
+    data: DeviceBuf,
+    data_t: VirtTime,
+    /// Global element offset of `data` (advances down scatter descents).
+    off: usize,
+    /// Global chunk bounds `[lo, hi)` — scatter descents intersect the
+    /// per-rank chunk ranges with this window.
+    lo: usize,
+    hi: usize,
+}
+
+/// Run one whole leg of the schedule — the depth-1 **barrier**
+/// executor, whose message tags, stream choice, and leg spans are
+/// bit-identical to the historical sequential interpreter. Pipelined
+/// dispatch (depth ≥ 2) never calls this: it drives the same per-leg
+/// arithmetic through [`LegCursor`] state machines so rounds of
+/// different chunks can interleave (see the module docs for per-leg
+/// semantics).
+async fn run_one_leg(
     ctx: &mut RankCtx,
     sched: &Schedule,
-    legs: &[LegExec],
-    input: DeviceBuf,
-) -> Result<DeviceBuf> {
+    li: usize,
+    lex: LegExec,
+    total_elems: usize,
+    st: &mut ChunkState,
+) -> Result<()> {
     let n = ctx.nranks();
     let me = ctx.rank();
-    if n <= 1 {
-        return Ok(input);
-    }
     let tree = &sched.tree;
-    if tree.ranks() != n {
-        return Err(Error::collective(format!(
-            "schedule compiled for {} ranks dispatched on a {n}-rank communicator",
-            tree.ranks()
-        )));
-    }
+    let leg = &sched.legs[li];
+    let t = leg.tier;
+    let cix = 0;
+    let compressed = lex.compresses();
     let stream = if ctx.policy().overlap {
-        StreamId::NonDefault(0)
+        StreamId::NonDefault(cix)
     } else {
         StreamId::Default
     };
 
-    // Element count of the *input* vector — the Reduce_scatter chunk
-    // layout is over this (every rank contributes a same-length
-    // vector).
-    let total_elems = input.elems();
-    let mut data = input;
-    let mut data_t = ctx.now();
-    // Global element offset of `data` during a scatter descent.
-    let mut off = 0usize;
-
-    for (li, leg) in sched.legs.iter().enumerate() {
-        let t = leg.tier;
-        if !tree.participates(t, me) {
-            continue;
+    if leg.kind == LegKind::RootShift {
+        // Engages exactly the root and rank 0, regardless of tier
+        // membership (the root can be any rank).
+        let root = sched.root;
+        if root == 0 || (me != root && me != 0) {
+            return Ok(());
         }
-        // Enter the leg: compress kernels below run at ITS bound and
-        // record their observed error under its index.
-        let lex = legs[li];
-        let compressed = lex.compresses();
         ctx.begin_leg(li, lex);
-        let group = tree.group_of(t, me);
-        let ps = tree.group_participants(t, group);
-        let k = ps.len();
-        if k <= 1 {
-            if leg.kind == LegKind::ScatterFromLeader {
-                // Sole participant: nothing to exchange, but the
-                // scatter descent still narrows the vector to this
-                // subtree's chunk range.
-                let pspan = tree.pspan(t);
-                let chunks = Chunks::new(total_elems, n);
-                let lo = chunks.start(me);
-                let hi = chunks.start((me + pspan).min(n));
-                data = data.slice(lo - off..hi - off);
-                off = lo;
-            }
-            continue;
+        if me == root {
+            send_vec(ctx, stream, 0, tag_c(cix, li, 0), &st.data, st.data_t, compressed);
+            // The root's copy is stale until the descent hands its own
+            // share back.
+        } else {
+            let (d, t_in) = recv_vec(ctx, stream, root, tag_c(cix, li, 0), compressed).await;
+            st.data = d;
+            st.data_t = t_in;
+            st.off = st.lo;
         }
-        let my_idx = tree.relative_rank(t, me);
-        match leg.kind {
-            LegKind::ReduceToLeader => {
-                if my_idx != 0 {
-                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, compressed);
-                    // `data` is stale until the mirrored descent leg.
-                } else {
-                    for (j, m) in ps.iter().enumerate().skip(1) {
-                        let (theirs, t_in) =
-                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed).await;
-                        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
-                        data = sum;
-                        data_t = t_sum;
-                    }
+        return Ok(());
+    }
+
+    if !tree.participates(t, me) {
+        return Ok(());
+    }
+    // Enter the leg: compress kernels below run at ITS bound and
+    // record their observed error under its index.
+    ctx.begin_leg(li, lex);
+    let group = tree.group_of(t, me);
+    let ps = tree.group_participants(t, group);
+    let k = ps.len();
+    if k <= 1 {
+        if leg.kind == LegKind::ScatterFromLeader {
+            // Sole participant: nothing to exchange, but the scatter
+            // descent still narrows the vector to this subtree's chunk
+            // range (within the pipeline chunk's window).
+            let pspan = tree.pspan(t);
+            let chunks = Chunks::new(total_elems, n);
+            let lo = chunks.start(me).clamp(st.lo, st.hi);
+            let hi = chunks.start((me + pspan).min(n)).clamp(st.lo, st.hi);
+            st.data = st.data.slice(lo - st.off..hi - st.off);
+            st.off = lo;
+        }
+        return Ok(());
+    }
+    let my_idx = tree.relative_rank(t, me);
+    match leg.kind {
+        LegKind::ReduceToLeader => {
+            if my_idx != 0 {
+                send_vec(ctx, stream, ps[0], tag_c(cix, li, my_idx as u64), &st.data, st.data_t, compressed);
+                // `data` is stale until the mirrored descent leg.
+            } else {
+                for (j, m) in ps.iter().enumerate().skip(1) {
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, *m, tag_c(cix, li, j as u64), compressed).await;
+                    let (sum, t_sum) = ctx.reduce(stream, &st.data, &theirs, t_in.join(st.data_t))?;
+                    st.data = sum;
+                    st.data_t = t_sum;
                 }
             }
+        }
 
-            LegKind::GatherToLeader => {
-                if my_idx != 0 {
-                    send_vec(ctx, stream, ps[0], tag(li, my_idx as u64), &data, data_t, compressed);
-                } else {
-                    let mut parts = Vec::with_capacity(k);
-                    let mut t_all = data_t;
-                    parts.push(data.clone());
-                    for (j, m) in ps.iter().enumerate().skip(1) {
-                        let (theirs, t_in) =
-                            recv_vec(ctx, stream, *m, tag(li, j as u64), compressed).await;
-                        t_all = t_all.join(t_in);
-                        parts.push(theirs);
-                    }
-                    data = DeviceBuf::concat(&parts)?;
-                    data_t = t_all;
+        LegKind::GatherToLeader => {
+            if my_idx != 0 {
+                send_vec(ctx, stream, ps[0], tag_c(cix, li, my_idx as u64), &st.data, st.data_t, compressed);
+            } else {
+                let mut parts = Vec::with_capacity(k);
+                let mut t_all = st.data_t;
+                parts.push(st.data.clone());
+                for (j, m) in ps.iter().enumerate().skip(1) {
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, *m, tag_c(cix, li, j as u64), compressed).await;
+                    t_all = t_all.join(t_in);
+                    parts.push(theirs);
                 }
+                st.data = DeviceBuf::concat(&parts)?;
+                st.data_t = t_all;
             }
+        }
 
-            LegKind::AllreduceRedoub => {
-                // MPICH remainder scheme over the participant list —
-                // the PR 2 leader exchange, generalized from "one
-                // leader per node" to any tier's participants.
-                let pof2 = 1usize << (usize::BITS - 1 - k.leading_zeros()) as usize;
-                let rem = k - pof2;
-                let newidx: isize;
-                if my_idx < 2 * rem {
-                    if my_idx % 2 == 0 {
-                        send_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_FOLD), &data, data_t, compressed);
-                        newidx = -1;
+        LegKind::AllreduceRedoub => {
+            // MPICH remainder scheme over the participant list — the
+            // PR 2 leader exchange, generalized from "one leader per
+            // node" to any tier's participants.
+            let pof2 = 1usize << (usize::BITS - 1 - k.leading_zeros()) as usize;
+            let rem = k - pof2;
+            let newidx: isize;
+            if my_idx < 2 * rem {
+                if my_idx % 2 == 0 {
+                    send_vec(ctx, stream, ps[my_idx + 1], tag_c(cix, li, OFF_FOLD), &st.data, st.data_t, compressed);
+                    newidx = -1;
+                } else {
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, ps[my_idx - 1], tag_c(cix, li, OFF_FOLD), compressed)
+                            .await;
+                    let (sum, t_sum) = ctx.reduce(stream, &st.data, &theirs, t_in.join(st.data_t))?;
+                    st.data = sum;
+                    st.data_t = t_sum;
+                    newidx = (my_idx / 2) as isize;
+                }
+            } else {
+                newidx = (my_idx - rem) as isize;
+            }
+            if newidx >= 0 {
+                let nr = newidx as usize;
+                let mut mask = 1usize;
+                let mut round: u64 = 0;
+                while mask < pof2 {
+                    let peer_nr = nr ^ mask;
+                    let peer_idx = if peer_nr < rem {
+                        peer_nr * 2 + 1
                     } else {
-                        let (theirs, t_in) =
-                            recv_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_FOLD), compressed)
-                                .await;
-                        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
-                        data = sum;
-                        data_t = t_sum;
-                        newidx = (my_idx / 2) as isize;
-                    }
-                } else {
-                    newidx = (my_idx - rem) as isize;
-                }
-                if newidx >= 0 {
-                    let nr = newidx as usize;
-                    let mut mask = 1usize;
-                    let mut round: u64 = 0;
-                    while mask < pof2 {
-                        let peer_nr = nr ^ mask;
-                        let peer_idx = if peer_nr < rem {
-                            peer_nr * 2 + 1
-                        } else {
-                            peer_nr + rem
-                        };
-                        let peer = ps[peer_idx];
-                        send_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), &data, data_t, compressed);
-                        let (theirs, t_in) =
-                            recv_vec(ctx, stream, peer, tag(li, OFF_REDOUB + round), compressed)
-                                .await;
-                        let (sum, t_sum) = ctx.reduce(stream, &data, &theirs, t_in.join(data_t))?;
-                        data = sum;
-                        data_t = t_sum;
-                        mask <<= 1;
-                        round += 1;
-                    }
-                }
-                if my_idx < 2 * rem {
-                    if my_idx % 2 == 1 {
-                        send_vec(ctx, stream, ps[my_idx - 1], tag(li, OFF_UNFOLD), &data, data_t, compressed);
-                    } else {
-                        let (result, t_in) =
-                            recv_vec(ctx, stream, ps[my_idx + 1], tag(li, OFF_UNFOLD), compressed)
-                                .await;
-                        data = result;
-                        data_t = t_in;
-                    }
+                        peer_nr + rem
+                    };
+                    let peer = ps[peer_idx];
+                    send_vec(ctx, stream, peer, tag_c(cix, li, OFF_REDOUB + round), &st.data, st.data_t, compressed);
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, peer, tag_c(cix, li, OFF_REDOUB + round), compressed)
+                            .await;
+                    let (sum, t_sum) = ctx.reduce(stream, &st.data, &theirs, t_in.join(st.data_t))?;
+                    st.data = sum;
+                    st.data_t = t_sum;
+                    mask <<= 1;
+                    round += 1;
                 }
             }
+            if my_idx < 2 * rem {
+                if my_idx % 2 == 1 {
+                    send_vec(ctx, stream, ps[my_idx - 1], tag_c(cix, li, OFF_UNFOLD), &st.data, st.data_t, compressed);
+                } else {
+                    let (result, t_in) =
+                        recv_vec(ctx, stream, ps[my_idx + 1], tag_c(cix, li, OFF_UNFOLD), compressed)
+                            .await;
+                    st.data = result;
+                    st.data_t = t_in;
+                }
+            }
+        }
 
-            LegKind::AllreduceRing => {
-                let next = ps[(my_idx + 1) % k];
-                let prev = ps[(my_idx + k - 1) % k];
-                let chunks = Chunks::new(data.elems(), k);
-                let mut acc: Vec<DeviceBuf> =
-                    (0..k).map(|c| data.slice(chunks.range(c))).collect();
-                let mut acc_t: Vec<VirtTime> = vec![data_t; k];
-                // Reduce-scatter phase.
+        LegKind::AllreduceRing => {
+            let next = ps[(my_idx + 1) % k];
+            let prev = ps[(my_idx + k - 1) % k];
+            let chunks = Chunks::new(st.data.elems(), k);
+            let mut acc: Vec<DeviceBuf> =
+                (0..k).map(|c| st.data.slice(chunks.range(c))).collect();
+            let mut acc_t: Vec<VirtTime> = vec![st.data_t; k];
+            // Reduce-scatter phase.
+            for s in 1..k {
+                let send_idx = (my_idx + k - s) % k;
+                let recv_idx = (my_idx + k - s - 1) % k;
+                if compressed {
+                    let (c, t_c) = ctx.compress(stream, &acc[send_idx], acc_t[send_idx]);
+                    ctx.send(next, tag_c(cix, li, OFF_RING_RS + s as u64), Payload::Comp(c), t_c);
+                    let (cin, t_in) =
+                        ctx.recv_comp(prev, tag_c(cix, li, OFF_RING_RS + s as u64)).await;
+                    let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                    let (sum, t_sum) =
+                        ctx.reduce(stream, &acc[recv_idx], &dec, t_dec.join(acc_t[recv_idx]))?;
+                    acc[recv_idx] = sum;
+                    acc_t[recv_idx] = t_sum;
+                } else {
+                    ctx.send(
+                        next,
+                        tag_c(cix, li, OFF_RING_RS + s as u64),
+                        Payload::Raw(acc[send_idx].clone()),
+                        acc_t[send_idx],
+                    );
+                    let (bin, t_in) =
+                        ctx.recv_raw(prev, tag_c(cix, li, OFF_RING_RS + s as u64)).await;
+                    let (sum, t_sum) =
+                        ctx.reduce(stream, &acc[recv_idx], &bin, t_in.join(acc_t[recv_idx]))?;
+                    acc[recv_idx] = sum;
+                    acc_t[recv_idx] = t_sum;
+                }
+            }
+            // Allgather phase: forward finished chunks verbatim.
+            if compressed {
+                let (cmine, t0) = ctx.compress(stream, &acc[my_idx], acc_t[my_idx]);
+                let mut outgoing: CompBuf = cmine;
+                let mut out_t = t0;
                 for s in 1..k {
+                    let recv_idx = (my_idx + k - s) % k;
+                    ctx.send(
+                        next,
+                        tag_c(cix, li, OFF_RING_AG + s as u64),
+                        Payload::Comp(outgoing.clone()),
+                        out_t,
+                    );
+                    let (cin, t_in) =
+                        ctx.recv_comp(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
+                    let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                    acc[recv_idx] = dec;
+                    acc_t[recv_idx] = t_dec;
+                    outgoing = cin;
+                    out_t = t_in;
+                }
+            } else {
+                let mut outgoing = acc[my_idx].clone();
+                let mut out_t = acc_t[my_idx];
+                for s in 1..k {
+                    let recv_idx = (my_idx + k - s) % k;
+                    ctx.send(
+                        next,
+                        tag_c(cix, li, OFF_RING_AG + s as u64),
+                        Payload::Raw(outgoing.clone()),
+                        out_t,
+                    );
+                    let (bin, t_in) =
+                        ctx.recv_raw(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
+                    acc[recv_idx] = bin.clone();
+                    acc_t[recv_idx] = t_in;
+                    outgoing = bin;
+                    out_t = t_in;
+                }
+            }
+            st.data = DeviceBuf::concat(&acc)?;
+            st.data_t = acc_t.iter().fold(VirtTime::ZERO, |a, b| a.join(*b));
+        }
+
+        LegKind::AllgatherRing => {
+            let next = ps[(my_idx + 1) % k];
+            let prev = ps[(my_idx + k - 1) % k];
+            let mut blocks: Vec<Option<DeviceBuf>> = (0..k).map(|_| None).collect();
+            let mut t_all = st.data_t;
+            blocks[my_idx] = Some(st.data.clone());
+            if compressed {
+                let (cmine, t0) = ctx.compress(stream, &st.data, st.data_t);
+                let mut outgoing: CompBuf = cmine;
+                let mut out_t = t0;
+                for s in 1..k {
+                    let recv_idx = (my_idx + k - s) % k;
+                    ctx.send(
+                        next,
+                        tag_c(cix, li, OFF_RING_AG + s as u64),
+                        Payload::Comp(outgoing.clone()),
+                        out_t,
+                    );
+                    let (cin, t_in) =
+                        ctx.recv_comp(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
+                    let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
+                    t_all = t_all.join(t_dec);
+                    blocks[recv_idx] = Some(dec);
+                    outgoing = cin;
+                    out_t = t_in;
+                }
+            } else {
+                let mut outgoing = st.data.clone();
+                let mut out_t = st.data_t;
+                for s in 1..k {
+                    let recv_idx = (my_idx + k - s) % k;
+                    ctx.send(
+                        next,
+                        tag_c(cix, li, OFF_RING_AG + s as u64),
+                        Payload::Raw(outgoing.clone()),
+                        out_t,
+                    );
+                    let (bin, t_in) =
+                        ctx.recv_raw(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
+                    t_all = t_all.join(t_in);
+                    blocks[recv_idx] = Some(bin.clone());
+                    outgoing = bin;
+                    out_t = t_in;
+                }
+            }
+            let parts: Vec<DeviceBuf> = blocks.into_iter().map(|b| b.unwrap()).collect();
+            st.data = DeviceBuf::concat(&parts)?;
+            st.data_t = t_all;
+        }
+
+        LegKind::BcastFromLeader => {
+            if compressed {
+                // Compress-once stream forwarded down a binomial tree:
+                // every consumer decodes exactly once.
+                let mut held: Option<(CompBuf, VirtTime)> = None;
+                if my_idx == 0 {
+                    ctx.memset(stream, st.data.bytes(), st.data_t);
+                    let (c, t_c) = ctx.compress(stream, &st.data, st.data_t);
+                    held = Some((c, t_c));
+                }
+                let mut mask = 1usize;
+                while mask < k {
+                    if my_idx < mask {
+                        if my_idx + mask < k {
+                            let (c, t_c) = held.as_ref().expect("bcast sender holds the stream");
+                            ctx.send(
+                                ps[my_idx + mask],
+                                tag_c(cix, li, (my_idx + mask) as u64),
+                                Payload::Comp(c.clone()),
+                                *t_c,
+                            );
+                        }
+                    } else if my_idx < 2 * mask {
+                        let (c, t_in) =
+                            ctx.recv_comp(ps[my_idx - mask], tag_c(cix, li, my_idx as u64)).await;
+                        held = Some((c, t_in));
+                    }
+                    mask <<= 1;
+                }
+                if my_idx != 0 {
+                    let (c, t_in) = held.expect("bcast member received the stream");
+                    let (d, t_d) = ctx.decompress(stream, &c, t_in);
+                    st.data = d;
+                    st.data_t = t_d;
+                }
+            } else if my_idx == 0 {
+                // Raw NVLink fan-out, members in rank order.
+                for (j, m) in ps.iter().enumerate().skip(1) {
+                    ctx.send(*m, tag_c(cix, li, j as u64), Payload::Raw(st.data.clone()), st.data_t);
+                }
+            } else {
+                let (d, t_in) = ctx.recv_raw(ps[0], tag_c(cix, li, my_idx as u64)).await;
+                st.data = d;
+                st.data_t = t_in;
+            }
+        }
+
+        LegKind::ScatterFromLeader => {
+            let pspan = tree.pspan(t);
+            let chunks = Chunks::new(total_elems, n);
+            if my_idx == 0 {
+                for (j, m) in ps.iter().enumerate().skip(1) {
+                    let lo = chunks.start(*m).clamp(st.lo, st.hi);
+                    let hi = chunks.start((*m + pspan).min(n)).clamp(st.lo, st.hi);
+                    let slice = st.data.slice(lo - st.off..hi - st.off);
+                    if compressed && slice.elems() > 0 {
+                        let (c, t_c) = ctx.compress(stream, &slice, st.data_t);
+                        ctx.send(*m, tag_c(cix, li, j as u64), Payload::Comp(c), t_c);
+                    } else {
+                        ctx.send(*m, tag_c(cix, li, j as u64), Payload::Raw(slice), st.data_t);
+                    }
+                }
+                let lo = chunks.start(me).clamp(st.lo, st.hi);
+                let hi = chunks.start((me + pspan).min(n)).clamp(st.lo, st.hi);
+                st.data = st.data.slice(lo - st.off..hi - st.off);
+                st.off = lo;
+            } else {
+                let lo = chunks.start(me).clamp(st.lo, st.hi);
+                let hi = chunks.start((me + pspan).min(n)).clamp(st.lo, st.hi);
+                let (d, t_in) = if compressed && hi > lo {
+                    let (c, t_in) = ctx.recv_comp(ps[0], tag_c(cix, li, my_idx as u64)).await;
+                    ctx.decompress(stream, &c, t_in)
+                } else {
+                    ctx.recv_raw(ps[0], tag_c(cix, li, my_idx as u64)).await
+                };
+                st.data = d;
+                st.data_t = t_in;
+                st.off = lo;
+            }
+        }
+
+        // Handled before the participation check.
+        LegKind::RootShift => unreachable!("RootShift engages outside tier participation"),
+    }
+    Ok(())
+}
+
+/// A buffer forwarded verbatim between rounds of a ring leg on the
+/// pipelined path (compress-once forwarding: the received stream is
+/// re-sent, never re-encoded).
+enum Fwd {
+    Comp(CompBuf, VirtTime),
+    Raw(DeviceBuf, VirtTime),
+}
+
+/// MPICH recursive-doubling peer of round `j` for post-fold index
+/// `nr`: the partner index folds back through the remainder mapping.
+fn redoub_peer(ps: &[usize], nr: usize, rem: usize, j: usize) -> usize {
+    let peer_nr = nr ^ (1usize << j);
+    let peer_idx = if peer_nr < rem {
+        peer_nr * 2 + 1
+    } else {
+        peer_nr + rem
+    };
+    ps[peer_idx]
+}
+
+/// This rank's role in one (chunk, leg) pair, resolved once at leg
+/// entry, plus the cross-round state the role carries.
+enum CursorKind {
+    /// Not engaged: outside the tier, a degenerate group, or a
+    /// RootShift that doesn't involve this rank.
+    Idle,
+    /// RootShift source: ship the vector to rank 0.
+    ShiftSend { to: usize },
+    /// RootShift sink (rank 0): adopt the root's vector.
+    ShiftRecv { from: usize },
+    /// Sole participant of a scatter descent: narrow the window only.
+    Narrow { pspan: usize },
+    ReduceMember { leader: usize, my_idx: usize },
+    ReduceLeader { ps: Vec<usize> },
+    GatherMember { leader: usize, my_idx: usize },
+    GatherLeader {
+        ps: Vec<usize>,
+        parts: Vec<Option<DeviceBuf>>,
+        t_all: VirtTime,
+    },
+    Redoub {
+        ps: Vec<usize>,
+        my_idx: usize,
+        pof2: usize,
+        rem: usize,
+        /// Post-fold index; −1 = folded out until the unfold.
+        newidx: isize,
+    },
+    Ring {
+        ps: Vec<usize>,
+        my_idx: usize,
+        k: usize,
+        acc: Vec<DeviceBuf>,
+        acc_t: Vec<VirtTime>,
+        fwd: Option<Fwd>,
+    },
+    AgRing {
+        ps: Vec<usize>,
+        my_idx: usize,
+        k: usize,
+        blocks: Vec<Option<DeviceBuf>>,
+        t_all: VirtTime,
+        fwd: Option<Fwd>,
+    },
+    BcastTree {
+        ps: Vec<usize>,
+        my_idx: usize,
+        k: usize,
+        held: Option<(CompBuf, VirtTime)>,
+    },
+    BcastRaw { ps: Vec<usize>, my_idx: usize },
+    ScatterLeader { ps: Vec<usize>, pspan: usize },
+    ScatterMember { leader: usize, my_idx: usize, pspan: usize },
+}
+
+/// Round-granular state machine for one (chunk, leg) pair under the
+/// pipelined wavefront. The leg's exchanges unroll into the global
+/// round calendar ([`Schedule::leg_rounds`]); each calendar round
+/// splits into a non-blocking [`LegCursor::issue`] half (kernel
+/// enqueues + sends — phase A of a superstep) and an awaiting
+/// [`LegCursor::complete`] half (arrivals + follow-up kernels —
+/// phase B), with [`LegCursor::finalize`] reassembling multi-buffer
+/// legs after the last round. Arithmetic, message tags, and kernel
+/// order per chunk are exactly the barrier executor's
+/// ([`run_one_leg`]) over the chunk's window — only the interleaving
+/// across chunks differs, which is what lets one chunk's wire round
+/// overlap the other chunks' compress/reduce kernels on their own
+/// streams.
+struct LegCursor {
+    li: usize,
+    lex: LegExec,
+    cix: usize,
+    stream: StreamId,
+    kind: CursorKind,
+}
+
+impl LegCursor {
+    /// Resolve this rank's role in leg `li` for chunk `cix` (mirrors
+    /// the prologue of [`run_one_leg`]).
+    fn new(
+        ctx: &RankCtx,
+        sched: &Schedule,
+        li: usize,
+        lex: LegExec,
+        cix: usize,
+        st: &ChunkState,
+    ) -> Self {
+        let me = ctx.rank();
+        let tree = &sched.tree;
+        let leg = &sched.legs[li];
+        let t = leg.tier;
+        let stream = if ctx.policy().overlap {
+            StreamId::NonDefault(cix)
+        } else {
+            StreamId::Default
+        };
+        let kind = if leg.kind == LegKind::RootShift {
+            let root = sched.root;
+            if root == 0 || (me != root && me != 0) {
+                CursorKind::Idle
+            } else if me == root {
+                CursorKind::ShiftSend { to: 0 }
+            } else {
+                CursorKind::ShiftRecv { from: root }
+            }
+        } else if !tree.participates(t, me) {
+            CursorKind::Idle
+        } else {
+            let group = tree.group_of(t, me);
+            let ps = tree.group_participants(t, group);
+            let k = ps.len();
+            if k <= 1 {
+                if leg.kind == LegKind::ScatterFromLeader {
+                    CursorKind::Narrow {
+                        pspan: tree.pspan(t),
+                    }
+                } else {
+                    CursorKind::Idle
+                }
+            } else {
+                let my_idx = tree.relative_rank(t, me);
+                match leg.kind {
+                    LegKind::ReduceToLeader => {
+                        if my_idx != 0 {
+                            CursorKind::ReduceMember { leader: ps[0], my_idx }
+                        } else {
+                            CursorKind::ReduceLeader { ps }
+                        }
+                    }
+                    LegKind::GatherToLeader => {
+                        if my_idx != 0 {
+                            CursorKind::GatherMember { leader: ps[0], my_idx }
+                        } else {
+                            let mut parts: Vec<Option<DeviceBuf>> = vec![None; k];
+                            parts[0] = Some(st.data.clone());
+                            CursorKind::GatherLeader {
+                                ps,
+                                parts,
+                                t_all: st.data_t,
+                            }
+                        }
+                    }
+                    LegKind::AllreduceRedoub => {
+                        let pof2 = 1usize << (usize::BITS - 1 - k.leading_zeros()) as usize;
+                        let rem = k - pof2;
+                        let newidx = if my_idx < 2 * rem {
+                            if my_idx % 2 == 0 {
+                                -1
+                            } else {
+                                (my_idx / 2) as isize
+                            }
+                        } else {
+                            (my_idx - rem) as isize
+                        };
+                        CursorKind::Redoub {
+                            ps,
+                            my_idx,
+                            pof2,
+                            rem,
+                            newidx,
+                        }
+                    }
+                    LegKind::AllreduceRing => {
+                        let chunks = Chunks::new(st.data.elems(), k);
+                        let acc: Vec<DeviceBuf> =
+                            (0..k).map(|c| st.data.slice(chunks.range(c))).collect();
+                        let acc_t = vec![st.data_t; k];
+                        CursorKind::Ring {
+                            ps,
+                            my_idx,
+                            k,
+                            acc,
+                            acc_t,
+                            fwd: None,
+                        }
+                    }
+                    LegKind::AllgatherRing => {
+                        let mut blocks: Vec<Option<DeviceBuf>> = vec![None; k];
+                        blocks[my_idx] = Some(st.data.clone());
+                        CursorKind::AgRing {
+                            ps,
+                            my_idx,
+                            k,
+                            blocks,
+                            t_all: st.data_t,
+                            fwd: None,
+                        }
+                    }
+                    LegKind::BcastFromLeader => {
+                        if lex.compresses() {
+                            CursorKind::BcastTree {
+                                ps,
+                                my_idx,
+                                k,
+                                held: None,
+                            }
+                        } else {
+                            CursorKind::BcastRaw { ps, my_idx }
+                        }
+                    }
+                    LegKind::ScatterFromLeader => {
+                        let pspan = tree.pspan(t);
+                        if my_idx == 0 {
+                            CursorKind::ScatterLeader { ps, pspan }
+                        } else {
+                            CursorKind::ScatterMember {
+                                leader: ps[0],
+                                my_idx,
+                                pspan,
+                            }
+                        }
+                    }
+                    // Resolved before the participation check.
+                    LegKind::RootShift => unreachable!("RootShift engages outside tiers"),
+                }
+            }
+        };
+        LegCursor {
+            li,
+            lex,
+            cix,
+            stream,
+            kind,
+        }
+    }
+
+    /// Phase A of calendar round `r`: enqueue this round's kernels on
+    /// the chunk's stream and hand its sends to the fabric. Never
+    /// awaits — the wavefront issues every in-flight chunk's round
+    /// before any rank blocks on an arrival, which is both the overlap
+    /// and the deadlock-freedom argument (every phase-B await matches
+    /// a send issued in phase A of the same or an earlier superstep).
+    /// Rounds past this group's need (smaller group than the global
+    /// calendar) are idle. Each active round re-asserts the leg's
+    /// compressor binding, because cursors of different legs
+    /// interleave within a superstep.
+    fn issue(
+        &mut self,
+        ctx: &mut RankCtx,
+        st: &mut ChunkState,
+        r: usize,
+        total_elems: usize,
+    ) -> Result<()> {
+        let (li, lex, cix, stream) = (self.li, self.lex, self.cix, self.stream);
+        let compressed = lex.compresses();
+        let n = ctx.nranks();
+        let me = ctx.rank();
+        match &mut self.kind {
+            CursorKind::Idle
+            | CursorKind::ShiftRecv { .. }
+            | CursorKind::ReduceLeader { .. }
+            | CursorKind::GatherLeader { .. }
+            | CursorKind::ScatterMember { .. } => {}
+
+            CursorKind::ShiftSend { to } => {
+                if r == 0 {
+                    let to = *to;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    send_vec(ctx, stream, to, tag_c(cix, li, 0), &st.data, st.data_t, compressed);
+                    // The root's copy is stale until the descent hands
+                    // its own share back.
+                }
+            }
+
+            CursorKind::Narrow { pspan } => {
+                if r == 0 {
+                    let pspan = *pspan;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let chunks = Chunks::new(total_elems, n);
+                    let lo = chunks.start(me).clamp(st.lo, st.hi);
+                    let hi = chunks.start((me + pspan).min(n)).clamp(st.lo, st.hi);
+                    st.data = st.data.slice(lo - st.off..hi - st.off);
+                    st.off = lo;
+                }
+            }
+
+            CursorKind::ReduceMember { leader, my_idx }
+            | CursorKind::GatherMember { leader, my_idx } => {
+                if r == 0 {
+                    let (to, j) = (*leader, *my_idx);
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let tag = tag_c(cix, li, j as u64);
+                    send_vec(ctx, stream, to, tag, &st.data, st.data_t, compressed);
+                    // `data` is stale until the mirrored descent leg.
+                }
+            }
+
+            CursorKind::Redoub {
+                ps,
+                my_idx,
+                pof2,
+                rem,
+                newidx,
+            } => {
+                let (my_idx, rem, nix) = (*my_idx, *rem, *newidx);
+                let fold_off = (rem > 0) as usize;
+                let logp = pof2.trailing_zeros() as usize;
+                if rem > 0 && r == 0 && my_idx < 2 * rem && my_idx % 2 == 0 {
+                    // Fold: evens ship their vector to the odd partner.
+                    let to = ps[my_idx + 1];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let tag = tag_c(cix, li, OFF_FOLD);
+                    send_vec(ctx, stream, to, tag, &st.data, st.data_t, compressed);
+                } else if r >= fold_off && r < fold_off + logp {
+                    let j = r - fold_off;
+                    if nix >= 0 {
+                        let peer = redoub_peer(ps, nix as usize, rem, j);
+                        ctx.begin_leg_chunk(li, lex, cix);
+                        send_vec(
+                            ctx,
+                            stream,
+                            peer,
+                            tag_c(cix, li, OFF_REDOUB + j as u64),
+                            &st.data,
+                            st.data_t,
+                            compressed,
+                        );
+                    }
+                } else if rem > 0 && r == fold_off + logp && my_idx < 2 * rem && my_idx % 2 == 1 {
+                    // Unfold: odds hand the result back to the evens.
+                    let to = ps[my_idx - 1];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let tag = tag_c(cix, li, OFF_UNFOLD);
+                    send_vec(ctx, stream, to, tag, &st.data, st.data_t, compressed);
+                }
+            }
+
+            CursorKind::Ring {
+                ps,
+                my_idx,
+                k,
+                acc,
+                acc_t,
+                fwd,
+            } => {
+                let (k, my_idx) = (*k, *my_idx);
+                let next = ps[(my_idx + 1) % k];
+                if r < k - 1 {
+                    // Reduce-scatter step: ship the walking chunk.
+                    let s = r + 1;
                     let send_idx = (my_idx + k - s) % k;
-                    let recv_idx = (my_idx + k - s - 1) % k;
+                    ctx.begin_leg_chunk(li, lex, cix);
                     if compressed {
                         let (c, t_c) = ctx.compress(stream, &acc[send_idx], acc_t[send_idx]);
-                        ctx.send(next, tag(li, OFF_RING_RS + s as u64), Payload::Comp(c), t_c);
+                        let tag = tag_c(cix, li, OFF_RING_RS + s as u64);
+                        ctx.send(next, tag, Payload::Comp(c), t_c);
+                    } else {
+                        ctx.send(
+                            next,
+                            tag_c(cix, li, OFF_RING_RS + s as u64),
+                            Payload::Raw(acc[send_idx].clone()),
+                            acc_t[send_idx],
+                        );
+                    }
+                } else if r < 2 * (k - 1) {
+                    // Allgather step: forward finished chunks verbatim.
+                    let s = r - (k - 1) + 1;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    if s == 1 {
+                        *fwd = Some(if compressed {
+                            let (c, t0) = ctx.compress(stream, &acc[my_idx], acc_t[my_idx]);
+                            Fwd::Comp(c, t0)
+                        } else {
+                            Fwd::Raw(acc[my_idx].clone(), acc_t[my_idx])
+                        });
+                    }
+                    match fwd.as_ref().expect("ring allgather forwards the walking chunk") {
+                        Fwd::Comp(c, t) => ctx.send(
+                            next,
+                            tag_c(cix, li, OFF_RING_AG + s as u64),
+                            Payload::Comp(c.clone()),
+                            *t,
+                        ),
+                        Fwd::Raw(b, t) => ctx.send(
+                            next,
+                            tag_c(cix, li, OFF_RING_AG + s as u64),
+                            Payload::Raw(b.clone()),
+                            *t,
+                        ),
+                    }
+                }
+            }
+
+            CursorKind::AgRing {
+                ps, my_idx, k, fwd, ..
+            } => {
+                let (k, my_idx) = (*k, *my_idx);
+                if r < k - 1 {
+                    let s = r + 1;
+                    let next = ps[(my_idx + 1) % k];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    if s == 1 {
+                        *fwd = Some(if compressed {
+                            let (c, t0) = ctx.compress(stream, &st.data, st.data_t);
+                            Fwd::Comp(c, t0)
+                        } else {
+                            Fwd::Raw(st.data.clone(), st.data_t)
+                        });
+                    }
+                    match fwd.as_ref().expect("allgather ring forwards its block") {
+                        Fwd::Comp(c, t) => ctx.send(
+                            next,
+                            tag_c(cix, li, OFF_RING_AG + s as u64),
+                            Payload::Comp(c.clone()),
+                            *t,
+                        ),
+                        Fwd::Raw(b, t) => ctx.send(
+                            next,
+                            tag_c(cix, li, OFF_RING_AG + s as u64),
+                            Payload::Raw(b.clone()),
+                            *t,
+                        ),
+                    }
+                }
+            }
+
+            CursorKind::BcastTree {
+                ps,
+                my_idx,
+                k,
+                held,
+            } => {
+                let (k, my_idx) = (*k, *my_idx);
+                let mask = 1usize << r;
+                let originates = my_idx == 0 && r == 0;
+                let relays = mask < k && my_idx < mask && my_idx + mask < k;
+                if originates || relays {
+                    ctx.begin_leg_chunk(li, lex, cix);
+                }
+                if originates {
+                    // Compress-once: the stream every consumer decodes.
+                    ctx.memset(stream, st.data.bytes(), st.data_t);
+                    let (c, t_c) = ctx.compress(stream, &st.data, st.data_t);
+                    *held = Some((c, t_c));
+                }
+                if relays {
+                    let (c, t_c) = held.as_ref().expect("bcast sender holds the stream");
+                    ctx.send(
+                        ps[my_idx + mask],
+                        tag_c(cix, li, (my_idx + mask) as u64),
+                        Payload::Comp(c.clone()),
+                        *t_c,
+                    );
+                }
+            }
+
+            CursorKind::BcastRaw { ps, my_idx } => {
+                if r == 0 && *my_idx == 0 {
+                    // Raw NVLink fan-out, members in rank order.
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    for (j, m) in ps.iter().enumerate().skip(1) {
+                        let raw = Payload::Raw(st.data.clone());
+                        ctx.send(*m, tag_c(cix, li, j as u64), raw, st.data_t);
+                    }
+                }
+            }
+
+            CursorKind::ScatterLeader { ps, pspan } => {
+                if r == 0 {
+                    let pspan = *pspan;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let chunks = Chunks::new(total_elems, n);
+                    for (j, m) in ps.iter().enumerate().skip(1) {
+                        let lo = chunks.start(*m).clamp(st.lo, st.hi);
+                        let hi = chunks.start((*m + pspan).min(n)).clamp(st.lo, st.hi);
+                        let slice = st.data.slice(lo - st.off..hi - st.off);
+                        if compressed && slice.elems() > 0 {
+                            let (c, t_c) = ctx.compress(stream, &slice, st.data_t);
+                            ctx.send(*m, tag_c(cix, li, j as u64), Payload::Comp(c), t_c);
+                        } else {
+                            ctx.send(*m, tag_c(cix, li, j as u64), Payload::Raw(slice), st.data_t);
+                        }
+                    }
+                    let lo = chunks.start(me).clamp(st.lo, st.hi);
+                    let hi = chunks.start((me + pspan).min(n)).clamp(st.lo, st.hi);
+                    st.data = st.data.slice(lo - st.off..hi - st.off);
+                    st.off = lo;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase B of calendar round `r`: await the round's arrivals and
+    /// run the follow-up kernels (decompress, reduce). Matches sends
+    /// issued in phase A of the same or an earlier superstep, so the
+    /// superstep order is acyclic across ranks.
+    async fn complete(
+        &mut self,
+        ctx: &mut RankCtx,
+        st: &mut ChunkState,
+        r: usize,
+        total_elems: usize,
+    ) -> Result<()> {
+        let (li, lex, cix, stream) = (self.li, self.lex, self.cix, self.stream);
+        let compressed = lex.compresses();
+        let n = ctx.nranks();
+        let me = ctx.rank();
+        match &mut self.kind {
+            CursorKind::Idle
+            | CursorKind::ShiftSend { .. }
+            | CursorKind::Narrow { .. }
+            | CursorKind::ReduceMember { .. }
+            | CursorKind::GatherMember { .. }
+            | CursorKind::ScatterLeader { .. } => {}
+
+            CursorKind::ShiftRecv { from } => {
+                if r == 0 {
+                    let from = *from;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (d, t_in) =
+                        recv_vec(ctx, stream, from, tag_c(cix, li, 0), compressed).await;
+                    st.data = d;
+                    st.data_t = t_in;
+                    st.off = st.lo;
+                }
+            }
+
+            CursorKind::ReduceLeader { ps } => {
+                // One member arrival folded per round, in rank order —
+                // the barrier executor's reduction order exactly.
+                let j = r + 1;
+                if j < ps.len() {
+                    let from = ps[j];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, from, tag_c(cix, li, j as u64), compressed).await;
+                    let (sum, t_sum) = ctx.reduce(stream, &st.data, &theirs, t_in.join(st.data_t))?;
+                    st.data = sum;
+                    st.data_t = t_sum;
+                }
+            }
+
+            CursorKind::GatherLeader { ps, parts, t_all } => {
+                let j = r + 1;
+                if j < ps.len() {
+                    let from = ps[j];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, from, tag_c(cix, li, j as u64), compressed).await;
+                    *t_all = t_all.join(t_in);
+                    parts[j] = Some(theirs);
+                }
+            }
+
+            CursorKind::Redoub {
+                ps,
+                my_idx,
+                pof2,
+                rem,
+                newidx,
+            } => {
+                let (my_idx, rem, nix) = (*my_idx, *rem, *newidx);
+                let fold_off = (rem > 0) as usize;
+                let logp = pof2.trailing_zeros() as usize;
+                if rem > 0 && r == 0 && my_idx < 2 * rem && my_idx % 2 == 1 {
+                    // Fold arrival: the odd partner absorbs the even's vector.
+                    let from = ps[my_idx - 1];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (theirs, t_in) =
+                        recv_vec(ctx, stream, from, tag_c(cix, li, OFF_FOLD), compressed).await;
+                    let (sum, t_sum) = ctx.reduce(stream, &st.data, &theirs, t_in.join(st.data_t))?;
+                    st.data = sum;
+                    st.data_t = t_sum;
+                } else if r >= fold_off && r < fold_off + logp {
+                    let j = r - fold_off;
+                    if nix >= 0 {
+                        let peer = redoub_peer(ps, nix as usize, rem, j);
+                        ctx.begin_leg_chunk(li, lex, cix);
+                        let (theirs, t_in) = recv_vec(
+                            ctx,
+                            stream,
+                            peer,
+                            tag_c(cix, li, OFF_REDOUB + j as u64),
+                            compressed,
+                        )
+                        .await;
+                        let (sum, t_sum) =
+                            ctx.reduce(stream, &st.data, &theirs, t_in.join(st.data_t))?;
+                        st.data = sum;
+                        st.data_t = t_sum;
+                    }
+                } else if rem > 0 && r == fold_off + logp && my_idx < 2 * rem && my_idx % 2 == 0 {
+                    // Unfold arrival: the even rank adopts the result.
+                    let from = ps[my_idx + 1];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (result, t_in) =
+                        recv_vec(ctx, stream, from, tag_c(cix, li, OFF_UNFOLD), compressed).await;
+                    st.data = result;
+                    st.data_t = t_in;
+                }
+            }
+
+            CursorKind::Ring {
+                ps,
+                my_idx,
+                k,
+                acc,
+                acc_t,
+                fwd,
+            } => {
+                let (k, my_idx) = (*k, *my_idx);
+                let prev = ps[(my_idx + k - 1) % k];
+                if r < k - 1 {
+                    let s = r + 1;
+                    let recv_idx = (my_idx + k - s - 1) % k;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    if compressed {
                         let (cin, t_in) =
-                            ctx.recv_comp(prev, tag(li, OFF_RING_RS + s as u64)).await;
+                            ctx.recv_comp(prev, tag_c(cix, li, OFF_RING_RS + s as u64)).await;
                         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
                         let (sum, t_sum) =
                             ctx.reduce(stream, &acc[recv_idx], &dec, t_dec.join(acc_t[recv_idx]))?;
                         acc[recv_idx] = sum;
                         acc_t[recv_idx] = t_sum;
                     } else {
-                        ctx.send(
-                            next,
-                            tag(li, OFF_RING_RS + s as u64),
-                            Payload::Raw(acc[send_idx].clone()),
-                            acc_t[send_idx],
-                        );
                         let (bin, t_in) =
-                            ctx.recv_raw(prev, tag(li, OFF_RING_RS + s as u64)).await;
+                            ctx.recv_raw(prev, tag_c(cix, li, OFF_RING_RS + s as u64)).await;
                         let (sum, t_sum) =
                             ctx.reduce(stream, &acc[recv_idx], &bin, t_in.join(acc_t[recv_idx]))?;
                         acc[recv_idx] = sum;
                         acc_t[recv_idx] = t_sum;
                     }
-                }
-                // Allgather phase: forward finished chunks verbatim.
-                if compressed {
-                    let (cmine, t0) = ctx.compress(stream, &acc[my_idx], acc_t[my_idx]);
-                    let mut outgoing: CompBuf = cmine;
-                    let mut out_t = t0;
-                    for s in 1..k {
-                        let recv_idx = (my_idx + k - s) % k;
-                        ctx.send(
-                            next,
-                            tag(li, OFF_RING_AG + s as u64),
-                            Payload::Comp(outgoing.clone()),
-                            out_t,
-                        );
+                } else if r < 2 * (k - 1) {
+                    let s = r - (k - 1) + 1;
+                    let recv_idx = (my_idx + k - s) % k;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    if compressed {
                         let (cin, t_in) =
-                            ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64)).await;
+                            ctx.recv_comp(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
                         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
                         acc[recv_idx] = dec;
                         acc_t[recv_idx] = t_dec;
-                        outgoing = cin;
-                        out_t = t_in;
-                    }
-                } else {
-                    let mut outgoing = acc[my_idx].clone();
-                    let mut out_t = acc_t[my_idx];
-                    for s in 1..k {
-                        let recv_idx = (my_idx + k - s) % k;
-                        ctx.send(
-                            next,
-                            tag(li, OFF_RING_AG + s as u64),
-                            Payload::Raw(outgoing.clone()),
-                            out_t,
-                        );
+                        *fwd = Some(Fwd::Comp(cin, t_in));
+                    } else {
                         let (bin, t_in) =
-                            ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64)).await;
+                            ctx.recv_raw(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
                         acc[recv_idx] = bin.clone();
                         acc_t[recv_idx] = t_in;
-                        outgoing = bin;
-                        out_t = t_in;
+                        *fwd = Some(Fwd::Raw(bin, t_in));
                     }
                 }
-                data = DeviceBuf::concat(&acc)?;
-                data_t = acc_t.iter().fold(VirtTime::ZERO, |a, b| a.join(*b));
             }
 
-            LegKind::AllgatherRing => {
-                let next = ps[(my_idx + 1) % k];
-                let prev = ps[(my_idx + k - 1) % k];
-                let mut blocks: Vec<Option<DeviceBuf>> = (0..k).map(|_| None).collect();
-                let mut t_all = data_t;
-                blocks[my_idx] = Some(data.clone());
-                if compressed {
-                    let (cmine, t0) = ctx.compress(stream, &data, data_t);
-                    let mut outgoing: CompBuf = cmine;
-                    let mut out_t = t0;
-                    for s in 1..k {
-                        let recv_idx = (my_idx + k - s) % k;
-                        ctx.send(
-                            next,
-                            tag(li, OFF_RING_AG + s as u64),
-                            Payload::Comp(outgoing.clone()),
-                            out_t,
-                        );
+            CursorKind::AgRing {
+                ps,
+                my_idx,
+                k,
+                blocks,
+                t_all,
+                fwd,
+            } => {
+                let (k, my_idx) = (*k, *my_idx);
+                if r < k - 1 {
+                    let s = r + 1;
+                    let prev = ps[(my_idx + k - 1) % k];
+                    let recv_idx = (my_idx + k - s) % k;
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    if compressed {
                         let (cin, t_in) =
-                            ctx.recv_comp(prev, tag(li, OFF_RING_AG + s as u64)).await;
+                            ctx.recv_comp(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
                         let (dec, t_dec) = ctx.decompress(stream, &cin, t_in);
-                        t_all = t_all.join(t_dec);
+                        *t_all = t_all.join(t_dec);
                         blocks[recv_idx] = Some(dec);
-                        outgoing = cin;
-                        out_t = t_in;
-                    }
-                } else {
-                    let mut outgoing = data.clone();
-                    let mut out_t = data_t;
-                    for s in 1..k {
-                        let recv_idx = (my_idx + k - s) % k;
-                        ctx.send(
-                            next,
-                            tag(li, OFF_RING_AG + s as u64),
-                            Payload::Raw(outgoing.clone()),
-                            out_t,
-                        );
+                        *fwd = Some(Fwd::Comp(cin, t_in));
+                    } else {
                         let (bin, t_in) =
-                            ctx.recv_raw(prev, tag(li, OFF_RING_AG + s as u64)).await;
-                        t_all = t_all.join(t_in);
+                            ctx.recv_raw(prev, tag_c(cix, li, OFF_RING_AG + s as u64)).await;
+                        *t_all = t_all.join(t_in);
                         blocks[recv_idx] = Some(bin.clone());
-                        outgoing = bin;
-                        out_t = t_in;
+                        *fwd = Some(Fwd::Raw(bin, t_in));
                     }
-                }
-                let parts: Vec<DeviceBuf> = blocks.into_iter().map(|b| b.unwrap()).collect();
-                data = DeviceBuf::concat(&parts)?;
-                data_t = t_all;
-            }
-
-            LegKind::BcastFromLeader => {
-                if compressed {
-                    // Compress-once stream forwarded down a binomial
-                    // tree: every consumer decodes exactly once.
-                    let mut held: Option<(CompBuf, VirtTime)> = None;
-                    if my_idx == 0 {
-                        ctx.memset(stream, data.bytes(), data_t);
-                        let (c, t_c) = ctx.compress(stream, &data, data_t);
-                        held = Some((c, t_c));
-                    }
-                    let mut mask = 1usize;
-                    while mask < k {
-                        if my_idx < mask {
-                            if my_idx + mask < k {
-                                let (c, t_c) = held.as_ref().expect("bcast sender holds the stream");
-                                ctx.send(
-                                    ps[my_idx + mask],
-                                    tag(li, (my_idx + mask) as u64),
-                                    Payload::Comp(c.clone()),
-                                    *t_c,
-                                );
-                            }
-                        } else if my_idx < 2 * mask {
-                            let (c, t_in) =
-                                ctx.recv_comp(ps[my_idx - mask], tag(li, my_idx as u64)).await;
-                            held = Some((c, t_in));
-                        }
-                        mask <<= 1;
-                    }
-                    if my_idx != 0 {
-                        let (c, t_in) = held.expect("bcast member received the stream");
-                        let (d, t_d) = ctx.decompress(stream, &c, t_in);
-                        data = d;
-                        data_t = t_d;
-                    }
-                } else if my_idx == 0 {
-                    // Raw NVLink fan-out, members in rank order.
-                    for (j, m) in ps.iter().enumerate().skip(1) {
-                        ctx.send(*m, tag(li, j as u64), Payload::Raw(data.clone()), data_t);
-                    }
-                } else {
-                    let (d, t_in) = ctx.recv_raw(ps[0], tag(li, my_idx as u64)).await;
-                    data = d;
-                    data_t = t_in;
                 }
             }
 
-            LegKind::ScatterFromLeader => {
-                let pspan = tree.pspan(t);
-                let chunks = Chunks::new(total_elems, n);
-                if my_idx == 0 {
-                    for (j, m) in ps.iter().enumerate().skip(1) {
-                        let lo = chunks.start(*m);
-                        let hi = chunks.start((*m + pspan).min(n));
-                        let slice = data.slice(lo - off..hi - off);
-                        if compressed && slice.elems() > 0 {
-                            let (c, t_c) = ctx.compress(stream, &slice, data_t);
-                            ctx.send(*m, tag(li, j as u64), Payload::Comp(c), t_c);
-                        } else {
-                            ctx.send(*m, tag(li, j as u64), Payload::Raw(slice), data_t);
-                        }
-                    }
-                    let lo = chunks.start(me);
-                    let hi = chunks.start((me + pspan).min(n));
-                    data = data.slice(lo - off..hi - off);
-                    off = lo;
-                } else {
-                    let lo = chunks.start(me);
-                    let hi = chunks.start((me + pspan).min(n));
+            CursorKind::BcastTree {
+                ps,
+                my_idx,
+                k,
+                held,
+            } => {
+                let (k, my_idx) = (*k, *my_idx);
+                let mask = 1usize << r;
+                if mask < k && mask <= my_idx && my_idx < 2 * mask {
+                    let from = ps[my_idx - mask];
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (c, t_in) = ctx.recv_comp(from, tag_c(cix, li, my_idx as u64)).await;
+                    *held = Some((c, t_in));
+                }
+            }
+
+            CursorKind::BcastRaw { ps, my_idx } => {
+                if r == 0 && *my_idx != 0 {
+                    let (from, j) = (ps[0], *my_idx);
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (d, t_in) = ctx.recv_raw(from, tag_c(cix, li, j as u64)).await;
+                    st.data = d;
+                    st.data_t = t_in;
+                }
+            }
+
+            CursorKind::ScatterMember {
+                leader,
+                my_idx,
+                pspan,
+            } => {
+                if r == 0 {
+                    let (from, j, pspan) = (*leader, *my_idx, *pspan);
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let chunks = Chunks::new(total_elems, n);
+                    let lo = chunks.start(me).clamp(st.lo, st.hi);
+                    let hi = chunks.start((me + pspan).min(n)).clamp(st.lo, st.hi);
                     let (d, t_in) = if compressed && hi > lo {
-                        let (c, t_in) = ctx.recv_comp(ps[0], tag(li, my_idx as u64)).await;
+                        let (c, t_in) = ctx.recv_comp(from, tag_c(cix, li, j as u64)).await;
                         ctx.decompress(stream, &c, t_in)
                     } else {
-                        ctx.recv_raw(ps[0], tag(li, my_idx as u64)).await
+                        ctx.recv_raw(from, tag_c(cix, li, j as u64)).await
                     };
-                    data = d;
-                    data_t = t_in;
-                    off = lo;
+                    st.data = d;
+                    st.data_t = t_in;
+                    st.off = lo;
                 }
+            }
+        }
+        Ok(())
+    }
+
+    /// After the leg's last calendar round: reassemble multi-buffer
+    /// results and run the deferred consumer kernels, exactly as the
+    /// barrier executor's leg epilogue does.
+    fn finalize(&mut self, ctx: &mut RankCtx, st: &mut ChunkState) -> Result<()> {
+        let (li, lex, cix, stream) = (self.li, self.lex, self.cix, self.stream);
+        match &mut self.kind {
+            CursorKind::GatherLeader { parts, t_all, .. } => {
+                let parts: Vec<DeviceBuf> = parts
+                    .iter_mut()
+                    .map(|p| p.take().expect("gather leader holds every part"))
+                    .collect();
+                st.data = DeviceBuf::concat(&parts)?;
+                st.data_t = *t_all;
+            }
+            CursorKind::Ring { acc, acc_t, .. } => {
+                st.data = DeviceBuf::concat(&acc[..])?;
+                st.data_t = acc_t.iter().fold(VirtTime::ZERO, |a, b| a.join(*b));
+            }
+            CursorKind::AgRing { blocks, t_all, .. } => {
+                let parts: Vec<DeviceBuf> = blocks
+                    .iter_mut()
+                    .map(|b| b.take().expect("allgather ring fills every block"))
+                    .collect();
+                st.data = DeviceBuf::concat(&parts)?;
+                st.data_t = *t_all;
+            }
+            CursorKind::BcastTree { my_idx, held, .. } => {
+                if *my_idx != 0 {
+                    let (c, t_in) = held.take().expect("bcast member received the stream");
+                    ctx.begin_leg_chunk(li, lex, cix);
+                    let (d, t_d) = ctx.decompress(stream, &c, t_in);
+                    st.data = d;
+                    st.data_t = t_d;
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// The leg interpreter: the barrier executor at depth 1, the
+/// round-granular chunk wavefront above. Chunk boundaries come from
+/// the same [`Chunks`] floor arithmetic every chunked algorithm uses;
+/// each chunk's legs run in schedule order, unrolled into exchange
+/// rounds on the global calendar ([`Schedule::leg_rounds`]), with
+/// chunk `c` running one round behind chunk `c−1`. Every superstep
+/// first **issues** every in-flight chunk's round (kernels on the
+/// chunk's own stream, then the sends) and only then **awaits** the
+/// arrivals — so chunk `k`'s wire time hides behind the other chunks'
+/// compress/reduce kernels, and the interleave is deadlock-free: the
+/// calendar is rank-independent and every await matches a send issued
+/// at the same or an earlier superstep, which well-orders the message
+/// dependencies. `total_override` carries the vector length for
+/// rooted ops whose non-root ranks hold empty inputs.
+async fn run_legs_pipelined(
+    ctx: &mut RankCtx,
+    sched: &Schedule,
+    legs: &[LegExec],
+    input: DeviceBuf,
+    depth: usize,
+    total_override: Option<usize>,
+) -> Result<DeviceBuf> {
+    let n = ctx.nranks();
+    if n <= 1 {
+        return Ok(input);
+    }
+    if sched.tree.ranks() != n {
+        return Err(Error::collective(format!(
+            "schedule compiled for {} ranks dispatched on a {n}-rank communicator",
+            sched.tree.ranks()
+        )));
+    }
+    // Element count of the collective's vector — the Reduce_scatter
+    // chunk layout is over this (every rank contributes a same-length
+    // vector), and the pipeline splits it.
+    let total_elems = total_override.unwrap_or_else(|| input.elems());
+    let depth = depth.clamp(1, MAX_PIPELINE_DEPTH).min(total_elems.max(1));
+    let nl = sched.legs.len();
+
+    if depth <= 1 || nl == 0 {
+        let mut st = ChunkState {
+            data: input,
+            data_t: ctx.now(),
+            off: 0,
+            lo: 0,
+            hi: total_elems,
+        };
+        for li in 0..nl {
+            run_one_leg(ctx, sched, li, legs[li], total_elems, &mut st).await?;
+        }
+        ctx.end_leg();
+        ctx.sync_device();
+        return Ok(st.data);
+    }
+
+    // Split the payload into `depth` chunk windows. Ranks that do not
+    // hold the full vector (a rooted op's non-roots) start each chunk
+    // empty — the descent delivers their slices.
+    let split = Chunks::new(total_elems, depth);
+    let t0 = ctx.now();
+    let have = input.elems();
+    let mut states: Vec<ChunkState> = (0..depth)
+        .map(|c| {
+            let r = split.range(c);
+            let (lo, hi) = (r.start, r.end);
+            let data = if have >= hi {
+                input.slice(lo..hi)
+            } else {
+                input.slice(0..0)
+            };
+            ChunkState {
+                data,
+                data_t: t0,
+                off: lo,
+                lo,
+                hi,
+            }
+        })
+        .collect();
+
+    // Global round calendar: leg `li` occupies calendar rounds
+    // `starts[li] .. starts[li] + rounds[li]`, identical on every rank
+    // (leg_rounds takes the max over groups; smaller groups idle the
+    // surplus rounds). Chunk `c` runs one round behind chunk `c−1`.
+    let rounds: Vec<usize> = (0..nl).map(|li| sched.leg_rounds(li)).collect();
+    let starts: Vec<usize> = rounds
+        .iter()
+        .scan(0usize, |acc, &r| {
+            let s = *acc;
+            *acc += r;
+            Some(s)
+        })
+        .collect();
+    let s_total = starts[nl - 1] + rounds[nl - 1];
+    // Chunk c's (leg, round) at superstep `step`, or None if the chunk
+    // is not yet started or already drained.
+    let at = |step: usize, c: usize| -> Option<(usize, usize)> {
+        let s = step.checked_sub(c)?;
+        if s >= s_total {
+            return None;
+        }
+        let li = starts.partition_point(|&b| b <= s) - 1;
+        Some((li, s - starts[li]))
+    };
+
+    let mut cursors: Vec<Option<LegCursor>> = (0..depth).map(|_| None).collect();
+    for step in 0..(s_total + depth - 1) {
+        // Phase A: every in-flight chunk issues its round's kernels
+        // and sends before any chunk blocks — this is the overlap.
+        for (c, st) in states.iter_mut().enumerate() {
+            let Some((li, r)) = at(step, c) else { continue };
+            if r == 0 {
+                cursors[c] = Some(LegCursor::new(ctx, sched, li, legs[li], c, st));
+            }
+            let cur = cursors[c].as_mut().expect("cursor opened at round 0");
+            cur.issue(ctx, st, r, total_elems)?;
+        }
+        // Phase B: await the round's arrivals, oldest chunk first.
+        for (c, st) in states.iter_mut().enumerate() {
+            let Some((li, r)) = at(step, c) else { continue };
+            let cur = cursors[c].as_mut().expect("cursor opened at round 0");
+            cur.complete(ctx, st, r, total_elems).await?;
+            if r + 1 == rounds[li] {
+                cur.finalize(ctx, st)?;
+                cursors[c] = None;
             }
         }
     }
     ctx.end_leg();
     ctx.sync_device();
-    Ok(data)
+
+    let outs: Vec<DeviceBuf> = states.into_iter().map(|s| s.data).collect();
+    let out = if sched.op == Op::Allgather {
+        // Chunk `c` gathered every rank's block-slice `c`: interleave
+        // the gathered chunk vectors back into rank-major order.
+        let mut parts = Vec::with_capacity(n * depth);
+        for r in 0..n {
+            for (c, o) in outs.iter().enumerate() {
+                let l = split.len(c);
+                parts.push(o.slice(r * l..(r + 1) * l));
+            }
+        }
+        DeviceBuf::concat(&parts)?
+    } else {
+        // Chunk windows tile the vector in order: plain concatenation
+        // (per-chunk scatter outputs are each rank's range ∩ window,
+        // increasing and possibly empty).
+        DeviceBuf::concat(&outs)?
+    };
+    Ok(out)
 }
 
 /// Compile-and-run with the fewest-error schedule over the cluster's

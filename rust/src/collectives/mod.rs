@@ -13,8 +13,10 @@
 //! | Allgather      | ring, Bruck, recursive doubling, hierarchical         |
 //! | Allreduce      | ring (RS+AG), recursive doubling (gZ-ReDoub),         |
 //! |                | hierarchical (multi-tier, topology-aware)             |
-//! | Scatter        | binomial tree (gZ-Scatter multi-stream), any root     |
-//! | Bcast          | binomial tree, any root                               |
+//! | Scatter        | binomial tree (gZ-Scatter multi-stream),              |
+//! |                | hierarchical rooted descent — any root                |
+//! | Bcast          | binomial tree, hierarchical compress-once descent —   |
+//! |                | any root                                              |
 //!
 //! The hierarchical variants execute schedules compiled by
 //! [`crate::topo::schedule`] from the cluster's
@@ -34,7 +36,8 @@ pub use bcast::{bcast_binomial, BcastProg};
 pub use chunking::Chunks;
 pub use hierarchical::{
     allgather_hierarchical, allreduce_hierarchical, reduce_scatter_hierarchical, run_plan,
-    run_schedule, PlanProg, SchedProg,
+    run_schedule, run_schedule_with, PlanProg, RootedDefaultProg, RootedProg, SchedProg,
+    MAX_PIPELINE_DEPTH,
 };
 pub use reduce_scatter::reduce_scatter_ring;
 pub use scatter::{scatter_binomial, ScatterProg};

@@ -6,7 +6,7 @@ use crate::accuracy::{
     complies_tiers, plan_auto_tiers, predict_worst_tiers, split_across_tiers, AccuracyReport,
     AccuracyTarget, BudgetPlan, ErrorPrediction, ErrorProbe, TieredPlan,
 };
-use crate::collectives::{Algo, Op};
+use crate::collectives::{Algo, Op, MAX_PIPELINE_DEPTH};
 use crate::compress::{CodecSpec, CompressionProfile};
 use crate::coordinator::{
     run_collective, ClusterSpec, CompressionMode, DeviceBuf, ExecBackend, ExecPolicy, RunReport,
@@ -16,8 +16,9 @@ use crate::net::Topology;
 use crate::obs::analysis::TraceAnalysis;
 use crate::obs::calibrate::{self, Calibration};
 use crate::obs::{TraceRun, TraceSummary, Tracer};
+use crate::pipeline::{choose_depth, CollectiveHandle, PersistentColl, Pipeline};
 use crate::topo::{
-    compile_min_error, estimate_flat_allgather, estimate_flat_redoub,
+    compile_min_error, compile_rooted, estimate_flat_allgather, estimate_flat_redoub,
     estimate_flat_reduce_scatter, estimate_flat_ring, CostModel, ExecPlan, LegExec, LegKind,
     Schedule, TierTree,
 };
@@ -49,6 +50,7 @@ pub struct CommBuilder {
     backend: Option<ExecBackend>,
     trace: Option<Tracer>,
     calibrate: Option<Arc<TraceRun>>,
+    pipeline: Pipeline,
 }
 
 impl CommBuilder {
@@ -72,7 +74,17 @@ impl CommBuilder {
             backend: None,
             trace: None,
             calibrate: None,
+            pipeline: Pipeline::Auto,
         }
+    }
+
+    /// Chunk-level pipelining policy for scheduled (hierarchical)
+    /// dispatches: [`Pipeline::Auto`] (default) sweeps depths with the
+    /// cost model, [`Pipeline::Off`] pins the barrier executor,
+    /// [`Pipeline::Fixed`] pins an explicit depth.
+    pub fn pipeline(mut self, pipeline: Pipeline) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 
     /// Select the execution-policy variant.
@@ -332,6 +344,7 @@ impl CommBuilder {
             tiered,
             adaptive,
             calibration,
+            pipeline: self.pipeline,
         })
     }
 }
@@ -483,6 +496,24 @@ pub struct Communicator {
     tiered: Option<TieredPlan>,
     adaptive: Option<Arc<AdaptiveController>>,
     calibration: Option<Calibration>,
+    pipeline: Pipeline,
+}
+
+/// A fully-planned dispatch, frozen before execution: the algorithm,
+/// the compiled schedule (scheduled algorithms), the enforced
+/// [`ExecPlan`] (including pipeline depth), and the cost model that
+/// priced them. [`Communicator::dispatch`] builds one per call;
+/// [`Communicator::persistent`] builds one and reuses it across runs.
+pub struct PlannedDispatch {
+    pub(crate) op: Op,
+    pub(crate) algo: Algo,
+    pub(crate) auto_tuned: bool,
+    pub(crate) schedule: Option<Schedule>,
+    pub(crate) exec_plan: ExecPlan,
+    pub(crate) root: usize,
+    pub(crate) msg_bytes: usize,
+    pub(crate) total_elems: usize,
+    pub(crate) cost: CostModel,
 }
 
 impl Communicator {
@@ -500,7 +531,22 @@ impl Communicator {
             tiered: None,
             adaptive: None,
             calibration: None,
+            pipeline: Pipeline::Auto,
         }
+    }
+
+    /// This communicator with a different pipelining policy — the
+    /// post-construction knob for [`Communicator::from_spec`] callers
+    /// (the CLI's `--pipeline`); builder users set
+    /// [`CommBuilder::pipeline`] instead.
+    pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
+    /// The active pipelining policy.
+    pub fn pipeline_policy(&self) -> Pipeline {
+        self.pipeline
     }
 
     /// The trace-fitted calibration in effect, when built with
@@ -673,8 +719,70 @@ impl Communicator {
         inputs: Vec<DeviceBuf>,
         spec: &CollectiveSpec,
     ) -> Result<CollectiveReport> {
-        let bytes = inputs.get(spec.root).map(|b| b.bytes()).unwrap_or(0);
-        self.dispatch(Op::Bcast, inputs, bytes, 0, spec)
+        // Like Scatter, carry the root's element count: non-root ranks
+        // hold empty inputs, so the rooted hierarchical descent cannot
+        // derive the vector length locally.
+        let total_elems = inputs.get(spec.root).map(|b| b.elems()).unwrap_or(0);
+        self.dispatch(Op::Bcast, inputs, total_elems * 4, total_elems, spec)
+    }
+
+    /// Op-generic dispatch: run `op` over `inputs` with the same
+    /// size/root derivation the five named wrappers use.
+    pub fn collective(
+        &self,
+        op: Op,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> Result<CollectiveReport> {
+        match op {
+            Op::Allreduce => self.allreduce(inputs, spec),
+            Op::Allgather => self.allgather(inputs, spec),
+            Op::ReduceScatter => self.reduce_scatter(inputs, spec),
+            Op::Scatter => self.scatter(inputs, spec),
+            Op::Bcast => self.bcast(inputs, spec),
+        }
+    }
+
+    /// Non-blocking dispatch: run `op` on a worker thread and return a
+    /// waitable [`CollectiveHandle`] immediately, so the caller can
+    /// overlap independent compute (a DDP backward pass) with the
+    /// collective. Planning errors surface at
+    /// [`CollectiveHandle::wait`].
+    pub fn icollective(
+        &self,
+        op: Op,
+        inputs: Vec<DeviceBuf>,
+        spec: &CollectiveSpec,
+    ) -> CollectiveHandle {
+        let comm = self.clone();
+        let spec = *spec;
+        CollectiveHandle::spawn(move || comm.collective(op, inputs, &spec))
+    }
+
+    /// Plan `op` over `elems`-element payloads once — algorithm
+    /// selection, schedule compilation, budget split, codec override,
+    /// pipeline depth — and freeze the result in a [`PersistentColl`]
+    /// whose `run`/`irun` skip all per-dispatch planning. `elems` is
+    /// the per-rank payload length (for Scatter: the full vector length
+    /// at the root), and must match the inputs later handed to `run`.
+    pub fn persistent(
+        &self,
+        op: Op,
+        elems: usize,
+        spec: &CollectiveSpec,
+    ) -> Result<PersistentColl> {
+        let (msg_bytes, total_elems) = match op {
+            // Tune on the gathered volume, as the wrapper does.
+            Op::Allgather => (elems * 4 * self.nranks().max(1), 0),
+            // Rooted ops carry the root's vector length explicitly.
+            Op::Scatter | Op::Bcast => (elems * 4, elems),
+            Op::Allreduce | Op::ReduceScatter => (elems * 4, 0),
+        };
+        let planned = self.plan_dispatch(op, msg_bytes, total_elems, spec)?;
+        Ok(PersistentColl {
+            comm: self.clone(),
+            planned: Arc::new(planned),
+        })
     }
 
     fn dispatch(
@@ -685,6 +793,22 @@ impl Communicator {
         total_elems: usize,
         spec: &CollectiveSpec,
     ) -> Result<CollectiveReport> {
+        let planned = self.plan_dispatch(op, msg_bytes, total_elems, spec)?;
+        self.run_planned(&planned, inputs)
+    }
+
+    /// Plan one dispatch without running it: algorithm selection (or
+    /// budget veto), schedule compilation, ExecPlan assembly (per-tier
+    /// bounds, codec override) and pipeline-depth selection — the
+    /// front half of [`Communicator::dispatch`], reused by
+    /// [`Communicator::persistent`] to amortize planning across runs.
+    pub(crate) fn plan_dispatch(
+        &self,
+        op: Op,
+        msg_bytes: usize,
+        total_elems: usize,
+        spec: &CollectiveSpec,
+    ) -> Result<PlannedDispatch> {
         if spec.root >= self.nranks() {
             return Err(Error::collective(format!(
                 "{op:?}: root {} out of range for a {}-rank communicator",
@@ -747,22 +871,25 @@ impl Communicator {
         };
         // Hierarchical dispatch runs a compiled schedule: cost-tuned
         // per-tier legs normally; under a budget, the min-error legs
-        // the plan's amplification certified.
+        // the plan's amplification certified. The rooted descents
+        // (Scatter/Bcast) compile around the dispatch root.
         let compressed = self.spec.policy.compression != CompressionMode::None;
-        let schedule: Option<Schedule> = if algo == Algo::Hierarchical
-            && matches!(op, Op::Allreduce | Op::ReduceScatter | Op::Allgather)
-        {
-            Some(match (&self.plan, preselected) {
-                (Some(_), Some(s)) => s,
-                (Some(_), None) => compile_min_error(op, &self.spec.tiers, compressed)?,
-                (None, Some(s)) => s,
-                (None, None) => self.tuner.plan_schedule(
-                    op,
-                    self.spec.policy,
-                    &self.spec.tiers,
-                    &cost,
-                    msg_bytes,
-                )?,
+        let schedule: Option<Schedule> = if algo == Algo::Hierarchical {
+            Some(if matches!(op, Op::Scatter | Op::Bcast) {
+                compile_rooted(op, &self.spec.tiers, compressed, spec.root)?
+            } else {
+                match (&self.plan, preselected) {
+                    (Some(_), Some(s)) => s,
+                    (Some(_), None) => compile_min_error(op, &self.spec.tiers, compressed)?,
+                    (None, Some(s)) => s,
+                    (None, None) => self.tuner.plan_schedule(
+                        op,
+                        self.spec.policy,
+                        &self.spec.tiers,
+                        &cost,
+                        msg_bytes,
+                    )?,
+                }
             })
         } else {
             None
@@ -802,6 +929,45 @@ impl Communicator {
                 }
             }
         }
+        // Pipeline depth is a tuned axis like algo/codec/eb: priced by
+        // the same cost model via the pipelined makespan estimate.
+        // Flat algorithms stay at depth 1 — only the leg interpreter
+        // chunks.
+        if let Some(s) = &schedule {
+            let depth = match self.pipeline {
+                Pipeline::Off => 1,
+                Pipeline::Fixed(d) => d.min(MAX_PIPELINE_DEPTH),
+                Pipeline::Auto => choose_depth(s, &self.spec.tiers, &cost, msg_bytes),
+            };
+            exec_plan = exec_plan.with_depth(depth);
+        }
+        Ok(PlannedDispatch {
+            op,
+            algo,
+            auto_tuned,
+            schedule,
+            exec_plan,
+            root: spec.root,
+            msg_bytes,
+            total_elems,
+            cost,
+        })
+    }
+
+    /// Execute a [`PlannedDispatch`]: the back half of
+    /// [`Communicator::dispatch`] — adaptive relaxation, trace
+    /// instants, telemetry probe, the run itself, and report assembly.
+    pub(crate) fn run_planned(
+        &self,
+        planned: &PlannedDispatch,
+        inputs: Vec<DeviceBuf>,
+    ) -> Result<CollectiveReport> {
+        let (op, algo, auto_tuned) = (planned.op, planned.algo, planned.auto_tuned);
+        let schedule = &planned.schedule;
+        let cost = &planned.cost;
+        let msg_bytes = planned.msg_bytes;
+        let compressed = self.spec.policy.compression != CompressionMode::None;
+        let mut exec_plan = planned.exec_plan.clone();
         // Adaptation: fold the controller's current telemetry-earned
         // relaxation into the plan, every leg clamped at the certified
         // per-call budget.
@@ -818,7 +984,7 @@ impl Communicator {
             let rejected: Vec<String> = AlgoRegistry::supported(op)
                 .iter()
                 .filter(|a| **a != algo)
-                .map(|a| match self.flat_estimate(op, *a, &cost, msg_bytes, compressed) {
+                .map(|a| match self.flat_estimate(op, *a, cost, msg_bytes, compressed) {
                     Some(est) => format!("{a:?}={est:.3e}s"),
                     None => format!("{a:?}"),
                 })
@@ -829,12 +995,12 @@ impl Communicator {
             // test re-predicts against the same addends.
             let pred_legs: Vec<String> = match &schedule {
                 Some(s) => s
-                    .leg_costs(&self.spec.tiers, &cost, msg_bytes)
+                    .leg_costs(&self.spec.tiers, cost, msg_bytes)
                     .iter()
                     .map(|c| format!("{c:.9e}"))
                     .collect(),
                 None => self
-                    .flat_estimate(op, algo, &cost, msg_bytes, compressed)
+                    .flat_estimate(op, algo, cost, msg_bytes, compressed)
                     .map(|e| vec![format!("{e:.9e}")])
                     .unwrap_or_default(),
             };
@@ -846,9 +1012,21 @@ impl Communicator {
                     if auto_tuned { "auto" } else { "forced" }.to_string(),
                 ),
                 ("rejected", rejected.join(", ")),
+                ("depth", format!("{}", exec_plan.depth)),
             ];
             if !pred_legs.is_empty() {
-                let total: f64 = pred_legs.iter().filter_map(|p| p.parse::<f64>().ok()).sum();
+                // Depth-1 prediction is the plain leg sum; pipelined
+                // dispatches record the overlapped estimate the depth
+                // chooser priced.
+                let total: f64 = match (&schedule, exec_plan.depth) {
+                    (Some(s), d) if d > 1 => s.estimate_makespan_pipelined(
+                        &self.spec.tiers,
+                        cost,
+                        msg_bytes,
+                        d,
+                    ),
+                    _ => pred_legs.iter().filter_map(|p| p.parse::<f64>().ok()).sum(),
+                };
                 args.push(("pred_legs", pred_legs.join("+")));
                 args.push(("pred_makespan", format!("{total:.9e}")));
             }
@@ -856,7 +1034,7 @@ impl Communicator {
             if let Some(plan) = &self.plan {
                 let vetoed: Vec<String> = AlgoRegistry::supported(op)
                     .iter()
-                    .filter(|a| !complies_tiers(plan, op, **a, &self.spec.tiers, spec.root))
+                    .filter(|a| !complies_tiers(plan, op, **a, &self.spec.tiers, planned.root))
                     .map(|a| format!("{a:?}"))
                     .collect();
                 if !vetoed.is_empty() {
@@ -875,15 +1053,15 @@ impl Communicator {
         // Telemetry probe: sample the exact reference before the inputs
         // are consumed (compressed collectives on real payloads only).
         let probe = if compressed {
-            ErrorProbe::prepare(op, &inputs, spec.root)
+            ErrorProbe::prepare(op, &inputs, planned.root)
         } else {
             None
         };
         let program = AlgoRegistry::resolve_planned(
             op,
             algo,
-            total_elems,
-            spec.root,
+            planned.total_elems,
+            planned.root,
             Some(exec_plan.clone()),
         )?;
         let mut report = run_collective(&self.spec, inputs, &*program)?;
@@ -904,7 +1082,7 @@ impl Communicator {
                     op,
                     algo,
                     &self.spec.tiers,
-                    spec.root,
+                    planned.root,
                     CompressionMode::ErrorBounded,
                     exec_plan.leg(0).eb,
                 ),
@@ -992,7 +1170,7 @@ impl Communicator {
             op,
             algo,
             auto_tuned,
-            schedule,
+            schedule: planned.schedule.clone(),
             exec_plan,
             legs,
             accuracy,

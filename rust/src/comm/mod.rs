@@ -69,3 +69,7 @@ pub use communicator::{
 };
 pub use registry::AlgoRegistry;
 pub use tuner::{AlgoHint, CollectiveSpec, Tuner};
+
+// The non-blocking/persistent surface lives in [`crate::pipeline`];
+// re-exported here because `Communicator` methods return these types.
+pub use crate::pipeline::{CollectiveHandle, PersistentColl, Pipeline};

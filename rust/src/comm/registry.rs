@@ -9,8 +9,8 @@
 use crate::collectives::{
     allgather_bruck, allgather_hierarchical, allgather_recursive_doubling, allgather_ring,
     allreduce_hierarchical, allreduce_recursive_doubling, allreduce_reduce_bcast, allreduce_ring,
-    reduce_scatter_hierarchical, reduce_scatter_ring, Algo, BcastProg, Op, PlanProg, ScatterProg,
-    SchedProg,
+    reduce_scatter_hierarchical, reduce_scatter_ring, Algo, BcastProg, Op, PlanProg,
+    RootedDefaultProg, RootedProg, ScatterProg, SchedProg,
 };
 use crate::coordinator::{DeviceBuf, ProgFut, Program, RankCtx, RankProgram};
 use crate::error::{Error, Result};
@@ -70,8 +70,10 @@ impl AlgoRegistry {
                 Algo::Hierarchical,
             ],
             Op::ReduceScatter => &[Algo::Ring, Algo::Hierarchical],
-            Op::Scatter => &[Algo::Binomial],
-            Op::Bcast => &[Algo::Binomial],
+            // The rooted descents: binomial trees by default, the
+            // compress-once hierarchical descent on tiered clusters.
+            Op::Scatter => &[Algo::Binomial, Algo::Hierarchical],
+            Op::Bcast => &[Algo::Binomial, Algo::Hierarchical],
         }
     }
 
@@ -107,6 +109,21 @@ impl AlgoRegistry {
             return match (op, algo) {
                 (Op::Allreduce | Op::ReduceScatter | Op::Allgather, Algo::Hierarchical) => {
                     Ok(Box::new(PlanProg(plan)))
+                }
+                // Rooted descents: the schedule must have been compiled
+                // for this very op — a compiled Allreduce schedule has
+                // the wrong leg kinds for a Bcast and must not run it.
+                (Op::Scatter | Op::Bcast, Algo::Hierarchical) => {
+                    if plan.schedule.as_ref().map(|s| s.op) != Some(op) {
+                        return Err(Error::collective(format!(
+                            "scheduled plan was compiled for {:?}, not {op:?}",
+                            plan.schedule.as_ref().map(|s| s.op)
+                        )));
+                    }
+                    Ok(Box::new(RootedProg {
+                        plan,
+                        total: total_elems,
+                    }))
                 }
                 _ => Err(Error::collective(format!(
                     "no {algo:?} implementation for {op:?} (supported: {:?})",
@@ -145,9 +162,11 @@ impl AlgoRegistry {
                 return Ok(Box::new(SchedProg(s)));
             }
             (_, Algo::Hierarchical, Some(_)) => {
+                // The rooted descents need a total element count the
+                // bare-schedule path does not carry; dispatch routes
+                // them through `resolve_planned` instead.
                 return Err(Error::collective(format!(
-                    "no {algo:?} implementation for {op:?} (supported: {:?})",
-                    Self::supported(op)
+                    "scheduled {algo:?} for {op:?} must go through resolve_planned"
                 )));
             }
             _ => {}
@@ -170,6 +189,13 @@ impl AlgoRegistry {
                 root,
             }),
             (Op::Bcast, Algo::Binomial) => Box::new(BcastProg { root }),
+            // Registry-default rooted descents: compile from the
+            // cluster's own tier tree at run time.
+            (Op::Scatter | Op::Bcast, Algo::Hierarchical) => Box::new(RootedDefaultProg {
+                op,
+                total: total_elems,
+                root,
+            }),
             (op, algo) => {
                 return Err(Error::collective(format!(
                     "no {algo:?} implementation for {op:?} (supported: {:?})",
@@ -222,13 +248,14 @@ mod tests {
         assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Ring));
         assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Ring, 128, 0).is_err());
         assert!(AlgoRegistry::resolve(Op::ReduceScatter, Algo::Bruck, 0, 0).is_err());
-        // The schedule engine extended Hierarchical to the root-free
-        // ops; the rooted binomial trees stay out of its reach.
+        // The schedule engine covers Hierarchical for every op: the
+        // root-free trio plus the rooted descents.
         assert!(AlgoRegistry::is_supported(Op::Allgather, Algo::Hierarchical));
         assert!(AlgoRegistry::is_supported(Op::ReduceScatter, Algo::Hierarchical));
         assert!(AlgoRegistry::resolve(Op::Allgather, Algo::Hierarchical, 0, 0).is_ok());
-        assert!(!AlgoRegistry::is_supported(Op::Scatter, Algo::Hierarchical));
-        assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Hierarchical, 0, 0).is_err());
+        assert!(AlgoRegistry::is_supported(Op::Scatter, Algo::Hierarchical));
+        assert!(AlgoRegistry::resolve(Op::Scatter, Algo::Hierarchical, 128, 0).is_ok());
+        assert!(AlgoRegistry::resolve(Op::Bcast, Algo::Hierarchical, 128, 0).is_ok());
     }
 
     #[test]
@@ -246,11 +273,23 @@ mod tests {
             Some(plan.clone())
         )
         .is_ok());
-        // A scheduled plan cannot graft Hierarchical onto a rooted op.
+        // A rooted op rejects a plan compiled for a different op (an
+        // Allreduce schedule has the wrong leg kinds for a Bcast)…
         assert!(
             AlgoRegistry::resolve_planned(Op::Bcast, Algo::Hierarchical, 0, 0, Some(plan))
                 .is_err()
         );
+        // …but accepts its own rooted compile.
+        let rooted = crate::topo::compile_rooted(Op::Bcast, &tree, true, 3).unwrap();
+        let rooted_plan = ExecPlan::uniform(rooted, CompressionMode::ErrorBounded, 1e-3);
+        assert!(AlgoRegistry::resolve_planned(
+            Op::Bcast,
+            Algo::Hierarchical,
+            128,
+            3,
+            Some(rooted_plan)
+        )
+        .is_ok());
         // Flat algorithms ride a degenerate one-leg plan…
         let flat = ExecPlan::flat(Op::Allreduce, CompressionMode::ErrorBounded, 1e-3);
         assert!(AlgoRegistry::resolve_planned(Op::Allreduce, Algo::Ring, 0, 0, Some(flat))

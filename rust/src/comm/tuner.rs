@@ -58,7 +58,7 @@ use crate::error::{Error, Result};
 use crate::gpu::GpuModel;
 use crate::net::Topology;
 use crate::topo::{
-    compile_min_error, compile_tuned, estimate_flat_allgather, estimate_flat_redoub,
+    compile_min_error, compile_rooted, compile_tuned, estimate_flat_allgather, estimate_flat_redoub,
     estimate_flat_reduce_scatter, estimate_flat_ring, CostModel, Schedule, TierTree,
 };
 
@@ -429,12 +429,13 @@ impl Tuner {
     ) -> Result<(Algo, Option<Schedule>)> {
         let compressed = policy.compression != CompressionMode::None;
         let certified = |algo: Algo| -> Result<Option<Schedule>> {
-            if algo == Algo::Hierarchical
-                && matches!(op, Op::Allreduce | Op::ReduceScatter | Op::Allgather)
-            {
-                Ok(Some(compile_min_error(op, tree, compressed)?))
-            } else {
+            if algo != Algo::Hierarchical {
                 Ok(None)
+            } else if matches!(op, Op::Scatter | Op::Bcast) {
+                // Rooted descents compile around the dispatch root.
+                Ok(Some(compile_rooted(op, tree, compressed, root)?))
+            } else {
+                Ok(Some(compile_min_error(op, tree, compressed)?))
             }
         };
         let preferred = self.select_with_tiers(op, policy, tree, cost, msg_bytes);

@@ -557,14 +557,31 @@ impl RankCtx {
     /// typed [`LegWarning`] instead of silently running the wrong
     /// configuration.
     pub fn begin_leg(&mut self, leg: usize, exec: LegExec) {
+        self.begin_leg_inner(leg, exec, None)
+    }
+
+    /// Chunk-aware [`RankCtx::begin_leg`]: identical compressor
+    /// binding, but the leg span additionally records the pipeline
+    /// chunk it executes, so traces of pipelined runs attribute each
+    /// span row of a leg to its chunk. Depth-1 dispatch keeps calling
+    /// [`RankCtx::begin_leg`], whose spans carry no chunk arg — the
+    /// barrier executor's traces are unchanged.
+    pub fn begin_leg_chunk(&mut self, leg: usize, exec: LegExec, chunk: usize) {
+        self.begin_leg_inner(leg, exec, Some(chunk))
+    }
+
+    fn begin_leg_inner(&mut self, leg: usize, exec: LegExec, chunk: Option<usize>) {
         self.active_leg = Some((leg, exec));
         self.leg_compressor = None;
         if let Some(t) = self.trace.as_mut() {
-            let args = vec![
+            let mut args = vec![
                 ("mode", format!("{:?}", exec.compression)),
                 ("codec", exec.codec.label()),
                 ("eb", format!("{:e}", exec.eb)),
             ];
+            if let Some(c) = chunk {
+                args.push(("chunk", format!("{c}")));
+            }
             t.buf.open_leg(leg as u32, self.clock.now().as_secs(), args);
         }
         let Some(base) = self.compressor.clone() else {

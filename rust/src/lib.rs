@@ -37,6 +37,7 @@ pub mod gpu;
 pub mod metrics;
 pub mod net;
 pub mod obs;
+pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;

@@ -14,7 +14,7 @@
 use gzccl::apps::ddp::{train_ddp, DdpConfig};
 use gzccl::apps::stacking::{run_stacking, StackingConfig, StackingTarget, StackingVariant};
 use gzccl::collectives::Algo;
-use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator};
+use gzccl::comm::{AlgoHint, CollectiveSpec, Communicator, Pipeline};
 use gzccl::compress::CodecSpec;
 use gzccl::config::ClusterConfig;
 use gzccl::coordinator::{CompressionMode, DeviceBuf, ExecBackend};
@@ -105,6 +105,12 @@ USAGE:
                         threads: the thread-per-rank reference runner
                         (identical payloads and makespans, bounded by
                         OS thread limits)
+                    [--pipeline auto|off|D]  chunk-level leg overlap for
+                        scheduled collectives: auto (default) prices
+                        every depth up to 8 with the cost model and
+                        runs the argmin, off pins the depth-1 barrier
+                        executor, D pins an explicit depth. Outputs are
+                        bitwise identical at every depth.
                     OP: allreduce (tuner-selected) | allreduce-ring |
                         allreduce-redoub | allreduce-hier | allreduce-tree |
                         reduce_scatter | reduce_scatter-hier |
@@ -145,6 +151,14 @@ USAGE:
                     [--calibrate]           fit a calibration from the
                                             traced steps and replay the
                                             training run under it
+                    [--pipeline auto|off|D] pipeline-depth policy for the
+                                            gradient allreduce (see
+                                            `gzccl run`)
+                    [--overlap]             plan the gradient allreduce
+                                            once (persistent), launch it
+                                            non-blocking each step and
+                                            prepare the next batch while
+                                            it flies
   gzccl analyze     FILE                    re-import a --trace file and
                                             print per-run summaries,
                                             the critical path, bottleneck
@@ -283,6 +297,10 @@ fn cmd_run(mut args: Args) -> Result<()> {
             )))
         }
     };
+    let pipeline = args
+        .take("--pipeline")
+        .map(|s| Pipeline::parse(&s))
+        .transpose()?;
     let mut cfg = ClusterConfig::load(config.as_deref(), &overrides)?;
     if let Some(g) = gpus_per_node {
         cfg.gpus_per_node = g;
@@ -314,7 +332,10 @@ fn cmd_run(mut args: Args) -> Result<()> {
         spec.trace = Some(t.clone());
     }
     let exec_backend = spec.backend;
-    let comm = Communicator::from_spec(spec);
+    let mut comm = Communicator::from_spec(spec);
+    if let Some(p) = pipeline {
+        comm = comm.with_pipeline(p);
+    }
     let n = comm.nranks();
     let elems = (size_mb << 20) / 4;
     let all_ranks = |e: usize| -> Vec<DeviceBuf> { (0..n).map(|_| DeviceBuf::Virtual(e)).collect() };
@@ -370,6 +391,15 @@ fn cmd_run(mut args: Args) -> Result<()> {
         "  algorithm        : {:?}{}",
         report.algo,
         if report.auto_tuned { " (tuner)" } else { " (forced)" }
+    );
+    println!(
+        "  pipeline depth   : {}{}",
+        report.exec_plan.depth,
+        if report.exec_plan.depth > 1 {
+            " (chunked leg overlap)"
+        } else {
+            " (barrier)"
+        }
     );
     if let Some(s) = &report.schedule {
         println!(
@@ -646,6 +676,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
     }
     let trace_path = args.take("--trace");
     let calibrate = args.take_bool("--calibrate");
+    let pipeline = args
+        .take("--pipeline")
+        .map(|s| Pipeline::parse(&s))
+        .transpose()?
+        .unwrap_or_default();
+    let overlap = args.take_bool("--overlap");
     let tracer = (trace_path.is_some() || calibrate).then(Tracer::new);
     let engine = Engine::discover()?;
     let cfg = DdpConfig {
@@ -656,6 +692,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
         adaptive,
         codec,
         trace: tracer.clone(),
+        pipeline,
+        overlap,
         ..Default::default()
     };
     let out = train_ddp(&cfg, &engine);
@@ -703,6 +741,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
         out.allreduce_time * 1e3,
         out.wire_bytes as f64 / 1e6
     );
+    if let Some(depth) = out.pipeline_depth {
+        println!(
+            "overlap: persistent gradient plan at pipeline depth {depth}, \
+             next-step batches prepared in flight"
+        );
+    }
     if let Some(r2) = out2 {
         let o2 = r2?;
         println!(

@@ -137,6 +137,14 @@ pub struct ExecPlan {
     pub schedule: Option<Schedule>,
     /// One directive per schedule leg (exactly one for flat plans).
     pub legs: Vec<LegExec>,
+    /// Pipeline depth: how many chunk programs the executor splits the
+    /// payload into. `1` (the default of every constructor) is the
+    /// barrier executor — each leg runs to completion before the next
+    /// starts. Depths above one interleave the legs of successive
+    /// chunks in a wavefront so chunk `k`'s internode exchange overlaps
+    /// chunk `k+1`'s intranode work. Accuracy is unaffected: every
+    /// element still crosses exactly the same legs.
+    pub depth: usize,
 }
 
 impl ExecPlan {
@@ -151,6 +159,7 @@ impl ExecPlan {
                 codec: LegExec::default_codec(compression),
                 eb,
             }],
+            depth: 1,
         }
     }
 
@@ -186,6 +195,7 @@ impl ExecPlan {
             op: sched.op,
             schedule: Some(sched),
             legs,
+            depth: 1,
         }
     }
 
@@ -224,7 +234,17 @@ impl ExecPlan {
             op: sched.op,
             schedule: Some(sched),
             legs,
+            depth: 1,
         }
+    }
+
+    /// The plan re-pointed at pipeline depth `d` (clamped to at least
+    /// one). Chunked execution is only meaningful for scheduled plans;
+    /// flat plans keep whatever depth they are given but their
+    /// executors ignore it.
+    pub fn with_depth(mut self, d: usize) -> Self {
+        self.depth = d.max(1);
+        self
     }
 
     /// The directive for leg `li` (flat plans answer their single leg
@@ -300,6 +320,7 @@ impl ExecPlan {
             op: self.op,
             schedule: self.schedule.clone(),
             legs,
+            depth: self.depth,
         }
     }
 
@@ -324,6 +345,7 @@ impl ExecPlan {
             op: self.op,
             schedule: self.schedule.clone(),
             legs,
+            depth: self.depth,
         }
     }
 }

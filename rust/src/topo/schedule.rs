@@ -61,6 +61,10 @@ pub enum LegKind {
     /// Reduce_scatter descent: the leader slices its vector by the
     /// participants' subtree chunk ranges and sends each its share.
     ScatterFromLeader,
+    /// Rooted-op prologue for a non-zero root: the root ships its full
+    /// vector to rank 0 (the global leader every descent starts from).
+    /// Only the root and rank 0 take part — everyone else idles.
+    RootShift,
 }
 
 /// One per-tier leg of a compiled schedule.
@@ -91,6 +95,10 @@ pub struct Schedule {
     pub tree: TierTree,
     /// Ascent legs, the top leg, then descent legs.
     pub legs: Vec<Leg>,
+    /// Root rank for rooted ops ([`Op::Bcast`], [`Op::Scatter`]) — the
+    /// rank whose buffer seeds the descent. Always `0` for unrooted
+    /// ops; a non-zero root compiles a [`LegKind::RootShift`] prologue.
+    pub root: usize,
 }
 
 fn ceil_log2(n: usize) -> usize {
@@ -124,15 +132,6 @@ pub(crate) fn pow2_minus_1(s: usize) -> f64 {
     }
 }
 
-fn supported_op(op: Op) -> Result<()> {
-    match op {
-        Op::Allreduce | Op::ReduceScatter | Op::Allgather => Ok(()),
-        other => Err(Error::collective(format!(
-            "no hierarchical schedule for {other:?} (rooted ops use the binomial trees)"
-        ))),
-    }
-}
-
 /// Whether a tier's payloads compress: never on tier 0 (NVLink — raw
 /// intranode is the gZCCL invariant), on every higher tier when the
 /// policy compresses at all.
@@ -148,44 +147,91 @@ fn tier_compressed(policy_compresses: bool, tier: usize) -> bool {
 /// tier the chosen leg has the smallest worst-case amplification among
 /// the implemented alternatives.
 pub fn compile_min_error(op: Op, tree: &TierTree, compressed: bool) -> Result<Schedule> {
-    supported_op(op)?;
-    let d = tree.depth();
-    let mut legs = Vec::with_capacity(2 * d - 1);
-    for t in 0..d - 1 {
-        legs.push(Leg {
-            tier: t,
-            kind: match op {
-                Op::Allgather => LegKind::GatherToLeader,
-                _ => LegKind::ReduceToLeader,
-            },
-            compressed: tier_compressed(compressed, t),
-            codec: None,
-        });
+    compile_rooted(op, tree, compressed, 0)
+}
+
+/// Compile the fewest-error schedule for `op` on `tree` with an
+/// explicit `root`. Unrooted ops (Allreduce, Reduce_scatter, Allgather)
+/// ignore the root; the rooted ops (Bcast, Scatter) compile a pure
+/// top-down descent — every tier runs its compress-once
+/// broadcast/scatter leg — prefixed by a [`LegKind::RootShift`] when
+/// the root is not rank 0 (the leader the descent starts from).
+pub fn compile_rooted(op: Op, tree: &TierTree, compressed: bool, root: usize) -> Result<Schedule> {
+    if root >= tree.ranks() {
+        return Err(Error::collective(format!(
+            "root {root} out of range for {} ranks",
+            tree.ranks()
+        )));
     }
-    legs.push(Leg {
-        tier: d - 1,
-        kind: match op {
-            Op::Allgather => LegKind::AllgatherRing,
-            _ => LegKind::AllreduceRedoub,
-        },
-        compressed: tier_compressed(compressed, d - 1),
-        codec: None,
-    });
-    for t in (0..d - 1).rev() {
-        legs.push(Leg {
-            tier: t,
-            kind: match op {
-                Op::ReduceScatter => LegKind::ScatterFromLeader,
-                _ => LegKind::BcastFromLeader,
-            },
-            compressed: tier_compressed(compressed, t),
-            codec: None,
-        });
+    let d = tree.depth();
+    let mut legs = Vec::with_capacity(2 * d);
+    match op {
+        Op::Allreduce | Op::ReduceScatter | Op::Allgather => {
+            for t in 0..d - 1 {
+                legs.push(Leg {
+                    tier: t,
+                    kind: match op {
+                        Op::Allgather => LegKind::GatherToLeader,
+                        _ => LegKind::ReduceToLeader,
+                    },
+                    compressed: tier_compressed(compressed, t),
+                    codec: None,
+                });
+            }
+            legs.push(Leg {
+                tier: d - 1,
+                kind: match op {
+                    Op::Allgather => LegKind::AllgatherRing,
+                    _ => LegKind::AllreduceRedoub,
+                },
+                compressed: tier_compressed(compressed, d - 1),
+                codec: None,
+            });
+            for t in (0..d - 1).rev() {
+                legs.push(Leg {
+                    tier: t,
+                    kind: match op {
+                        Op::ReduceScatter => LegKind::ScatterFromLeader,
+                        _ => LegKind::BcastFromLeader,
+                    },
+                    compressed: tier_compressed(compressed, t),
+                    codec: None,
+                });
+            }
+            return Ok(Schedule {
+                op,
+                tree: tree.clone(),
+                legs,
+                root: 0,
+            });
+        }
+        Op::Bcast | Op::Scatter => {
+            if root != 0 {
+                legs.push(Leg {
+                    tier: d - 1,
+                    kind: LegKind::RootShift,
+                    compressed: tier_compressed(compressed, d - 1),
+                    codec: None,
+                });
+            }
+            for t in (0..d).rev() {
+                legs.push(Leg {
+                    tier: t,
+                    kind: match op {
+                        Op::Scatter => LegKind::ScatterFromLeader,
+                        _ => LegKind::BcastFromLeader,
+                    },
+                    compressed: tier_compressed(compressed, t),
+                    codec: None,
+                });
+            }
+        }
     }
     Ok(Schedule {
         op,
         tree: tree.clone(),
         legs,
+        root,
     })
 }
 
@@ -208,8 +254,10 @@ pub fn compile_tuned(
 ) -> Result<Schedule> {
     let mut sched = compile_min_error(op, tree, compressed)?;
     let d = tree.depth();
-    if op != Op::Allgather {
-        // Gather/ring legs have no implemented kind alternative.
+    if matches!(op, Op::Allreduce | Op::ReduceScatter) {
+        // Gather/ring legs have no implemented kind alternative, and
+        // the rooted descents are compress-once streams with exactly
+        // one implemented kind per tier.
         for (i, leg) in sched.legs.iter_mut().enumerate() {
             let candidates: &[LegKind] = if leg.tier == d - 1 && i == d - 1 {
                 // The top collective leg.
@@ -290,7 +338,8 @@ impl Schedule {
                 LegKind::BcastFromLeader
                 | LegKind::GatherToLeader
                 | LegKind::AllgatherRing
-                | LegKind::ScatterFromLeader => e += c,
+                | LegKind::ScatterFromLeader
+                | LegKind::RootShift => e += c,
             }
         }
         e
@@ -326,7 +375,8 @@ impl Schedule {
                 LegKind::BcastFromLeader
                 | LegKind::GatherToLeader
                 | LegKind::AllgatherRing
-                | LegKind::ScatterFromLeader => (1.0, c),
+                | LegKind::ScatterFromLeader
+                | LegKind::RootShift => (1.0, c),
             };
             for s in a.iter_mut() {
                 *s *= gain;
@@ -350,6 +400,18 @@ impl Schedule {
         let mut cpr = 0usize;
         let mut dec = 0usize;
         for leg in &self.legs {
+            if leg.kind == LegKind::RootShift {
+                // Only the root and rank 0 take part, regardless of
+                // tier participation (the root can be any rank).
+                if leg.compressed && self.root != 0 {
+                    if rank == self.root {
+                        cpr += 1;
+                    } else if rank == 0 {
+                        dec += 1;
+                    }
+                }
+                continue;
+            }
             if !leg.compressed || !tree.participates(leg.tier, rank) {
                 continue;
             }
@@ -414,6 +476,8 @@ impl Schedule {
                         dec += 1;
                     }
                 }
+                // Handled before the participation check.
+                LegKind::RootShift => {}
             }
         }
         (cpr, dec)
@@ -430,6 +494,73 @@ impl Schedule {
             .sum()
     }
 
+    /// Analytic makespan of the schedule executed as a `depth`-chunk
+    /// pipeline by the round-granular wavefront: every superstep issues
+    /// each in-flight chunk's current exchange round (compress kernels
+    /// on the chunk's own stream, then the sends) before awaiting any
+    /// arrival, so the `depth` chunks advance one round per superstep,
+    /// staggered by one round each, and their kernels overlap across
+    /// streams. The makespan is one full chunk traversal
+    /// (`Σ_legs c(B/d)`) plus the pipeline drain — each extra chunk
+    /// finishes one bottleneck **round** after its predecessor:
+    /// `(d−1) · max_legs c(B/d) / rounds(leg)` (see
+    /// [`Schedule::leg_rounds`]). Depth 1 reproduces
+    /// [`Schedule::estimate_makespan`] exactly (same addends, same
+    /// order), so the depth sweep in the tuner is anchored on the
+    /// barrier estimate. Chunking pays while the cross-chunk round
+    /// overlap hides kernel and wire time, and stops paying once the
+    /// per-chunk latency floors (`alpha`, kernel launch — the fixed
+    /// `n0` overhead replicated per chunk) dominate — which is what
+    /// gives the sweep an interior optimum.
+    pub fn estimate_makespan_pipelined(
+        &self,
+        phys: &TierTree,
+        cost: &CostModel,
+        msg_bytes: usize,
+        depth: usize,
+    ) -> f64 {
+        if depth <= 1 {
+            return self.estimate_makespan(phys, cost, msg_bytes);
+        }
+        let per = self.leg_costs(phys, cost, msg_bytes.div_ceil(depth).max(1));
+        let sum: f64 = per.iter().sum();
+        let drain = per
+            .iter()
+            .enumerate()
+            .map(|(li, c)| c / self.leg_rounds(li) as f64)
+            .fold(0.0f64, f64::max);
+        sum + (depth - 1) as f64 * drain
+    }
+
+    /// Exchange-round count of leg `li` under the pipeline's global
+    /// round calendar: how many issue/await supersteps the
+    /// round-granular wavefront allots the leg on **every** rank. The
+    /// count is the max over the tier's groups (sizes differ when the
+    /// widths overcover the rank count, and a partial trailing group
+    /// can need *more* rounds than a full one once the recursive
+    /// doubling remainder fold kicks in), so ranks whose group
+    /// finishes early idle the leftover rounds and the calendar stays
+    /// rank-independent — the property the wavefront's
+    /// deadlock-freedom argument rests on. The pipelined estimator
+    /// divides a leg's cost by this to price the drain of one extra
+    /// in-flight chunk.
+    pub fn leg_rounds(&self, li: usize) -> usize {
+        let leg = &self.legs[li];
+        let t = leg.tier;
+        // Group 0 is always the fullest; the last group is the only
+        // one that can be smaller. Checking both covers every size.
+        let ngroups = self.tree.groups(t);
+        let sizes = [
+            self.tree.group_participants(t, 0).len(),
+            self.tree.group_participants(t, ngroups - 1).len(),
+        ];
+        sizes
+            .iter()
+            .map(|&k| rounds_for(leg.kind, k))
+            .max()
+            .unwrap_or(1)
+    }
+
     /// Per-leg analytic costs in leg order — the same addends
     /// [`Schedule::estimate_makespan`] sums. Recorded on the
     /// tuner-decision instant so the trace analyzer can join observed
@@ -439,6 +570,33 @@ impl Schedule {
             .iter()
             .map(|leg| leg_cost(leg, self.op, &self.tree, phys, cost, msg_bytes))
             .collect()
+    }
+}
+
+/// Exchange rounds a leg kind needs over a `k`-participant group — the
+/// per-group slice of the pipeline round calendar (one round = one
+/// issue/await superstep of the round-granular wavefront).
+fn rounds_for(kind: LegKind, k: usize) -> usize {
+    if k <= 1 {
+        return 1;
+    }
+    match kind {
+        // The leader folds one member arrival per round.
+        LegKind::ReduceToLeader | LegKind::GatherToLeader => k - 1,
+        // Fold + ⌈log₂⌉ masked exchanges + unfold (MPICH remainder).
+        LegKind::AllreduceRedoub => {
+            let pof2 = 1usize << (usize::BITS - 1 - k.leading_zeros()) as usize;
+            let logp = pof2.trailing_zeros() as usize;
+            logp.max(1) + if k != pof2 { 2 } else { 0 }
+        }
+        // Reduce-scatter steps then allgather steps.
+        LegKind::AllreduceRing => 2 * (k - 1),
+        LegKind::AllgatherRing => k - 1,
+        // Binomial relay depth; the raw fan-out variant uses only the
+        // first round and idles the rest, so one calendar serves both.
+        LegKind::BcastFromLeader => (usize::BITS - (k - 1).leading_zeros()).max(1) as usize,
+        // One burst of leader sends / one receive.
+        LegKind::ScatterFromLeader | LegKind::RootShift => 1,
     }
 }
 
@@ -662,7 +820,7 @@ fn leg_cost(
 ) -> f64 {
     let t = leg.tier;
     let g = sched_tree.effective_width(t);
-    if g <= 1 {
+    if g <= 1 && leg.kind != LegKind::RootShift {
         return 0.0;
     }
     // The codec the leg is priced at: its tuned codec, the canonical
@@ -747,6 +905,14 @@ fn leg_cost(
             cost.comp((leg_bytes as usize) / g.max(1), codec)
                 + round_wire(phys, cost, pspan, far, out_wire)
                 + cost.dec((leg_bytes as usize) / g.max(1), codec)
+        }
+        LegKind::RootShift => {
+            // One point-to-point full-vector hop from the root to rank
+            // 0 — priced at the worst in-group distance of the top
+            // tier (the root can live in any subtree).
+            cost.comp(bytes, codec)
+                + round_wire(phys, cost, pspan, far, wire)
+                + cost.dec(bytes, codec)
         }
     }
 }
@@ -861,8 +1027,64 @@ mod tests {
         assert_eq!(tiers, vec![0, 1, 2, 1, 0]);
         assert_eq!(s.legs[3].kind, LegKind::ScatterFromLeader);
         assert!(s.legs[1].compressed && !s.legs[0].compressed);
-        // Rooted ops have no hierarchical schedule.
-        assert!(compile_min_error(Op::Scatter, &t, true).is_err());
+        // Rooted ops compile too (pure top-down descents from rank 0).
+        assert!(compile_min_error(Op::Scatter, &t, true).is_ok());
+    }
+
+    #[test]
+    fn rooted_ops_compile_top_down_descents() {
+        let t = tree(512, &[4, 16, 8]);
+        // Root 0: no shift leg, one descent leg per tier, top-down.
+        let s = compile_rooted(Op::Bcast, &t, true, 0).unwrap();
+        assert_eq!(s.root, 0);
+        let shape: Vec<(usize, LegKind)> = s.legs.iter().map(|l| (l.tier, l.kind)).collect();
+        assert_eq!(
+            shape,
+            vec![
+                (2, LegKind::BcastFromLeader),
+                (1, LegKind::BcastFromLeader),
+                (0, LegKind::BcastFromLeader),
+            ]
+        );
+        // Tier 0 stays raw, higher tiers compress.
+        assert!(!s.legs[2].compressed && s.legs[0].compressed && s.legs[1].compressed);
+        // Compress-once streams: one eb per compressed crossing.
+        assert_eq!(s.amplification(), 2.0);
+        // A non-zero root prepends the shift leg and records the root.
+        let r = compile_rooted(Op::Scatter, &t, true, 37).unwrap();
+        assert_eq!(r.root, 37);
+        assert_eq!(r.legs[0].kind, LegKind::RootShift);
+        assert_eq!(r.legs[1].kind, LegKind::ScatterFromLeader);
+        assert_eq!(r.legs.len(), 4);
+        assert_eq!(r.amplification(), 3.0);
+        // Kernel counts: the root compresses the shift, rank 0 decodes
+        // it (and then re-compresses the top scatter for its peers).
+        assert_eq!(r.cpr_stages_at(37).0, 1);
+        assert!(r.cpr_stages_at(0).1 >= 1);
+        // Out-of-range roots are rejected.
+        assert!(compile_rooted(Op::Bcast, &t, true, 512).is_err());
+    }
+
+    #[test]
+    fn pipelined_estimate_reduces_to_barrier_at_depth_one_and_wins_after() {
+        let cost = CostModel::default_a100();
+        let phys = tree(512, &[4, 16, 8]);
+        let s = compile_tuned(Op::Allreduce, &phys, true, 64 * MIB, &cost).unwrap();
+        let barrier = s.estimate_makespan(&phys, &cost, 64 * MIB);
+        // Depth 1 is the barrier estimate, addend for addend.
+        assert_eq!(s.estimate_makespan_pipelined(&phys, &cost, 64 * MIB, 1), barrier);
+        // Some depth > 1 strictly beats the barrier at 64 MiB
+        // (bandwidth-dominated legs overlap)…
+        let best = [2usize, 4, 8]
+            .iter()
+            .map(|&d| s.estimate_makespan_pipelined(&phys, &cost, 64 * MIB, d))
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < barrier, "pipelined {best} vs barrier {barrier}");
+        // …while a tiny payload pays the per-chunk latency floors and
+        // stays at depth 1.
+        let tiny = s.estimate_makespan(&phys, &cost, 4096);
+        let tiny8 = s.estimate_makespan_pipelined(&phys, &cost, 4096, 8);
+        assert!(tiny8 > tiny, "tiny pipelined {tiny8} vs barrier {tiny}");
     }
 
     #[test]

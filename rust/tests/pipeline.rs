@@ -1,0 +1,271 @@
+//! Pipelined-collective suite: chunk-level leg overlap must never
+//! change a single output bit, `icollective`/persistent surfaces must
+//! match the blocking dispatch exactly, and at the 512-rank 4x16x8
+//! acceptance shape the tuner must choose a depth > 1 that strictly
+//! beats the barrier executor while keeping every trace invariant.
+//!
+//! Bitwise identity holds even under compression because the cuSZp
+//! quantizer reconstructs each element as `q·2eb` independently of the
+//! codec's block boundaries: slicing a dispatch into chunk windows
+//! moves those boundaries but not the per-element quantum. Integer
+//! inputs keep the reduction arithmetic exact so different leg
+//! interleavings cannot introduce rounding skew either.
+
+use gzccl::collectives::{Algo, Op, MAX_PIPELINE_DEPTH};
+use gzccl::comm::{AlgoRegistry, CollectiveReport, CollectiveSpec, Communicator, Pipeline};
+use gzccl::coordinator::{DeviceBuf, ExecBackend, ExecPolicy};
+use gzccl::obs::Tracer;
+use gzccl::testkit::Pcg32;
+
+const MIB: usize = 1 << 20;
+const ALL_OPS: [Op; 5] = [
+    Op::Allreduce,
+    Op::Allgather,
+    Op::ReduceScatter,
+    Op::Scatter,
+    Op::Bcast,
+];
+
+/// Integer-valued inputs shaped for `op`: rooted collectives feed the
+/// full vector at `root` and empty buffers elsewhere; sums of small
+/// integers are exact in f32, so any leg interleaving must agree
+/// bit-for-bit.
+fn op_inputs(op: Op, n: usize, d: usize, root: usize, seed: u64) -> Vec<DeviceBuf> {
+    let ints = |r: usize| -> DeviceBuf {
+        let mut rng = Pcg32::new(seed, r as u64);
+        DeviceBuf::Real((0..d).map(|_| rng.range_usize(0, 33) as f32 - 16.0).collect())
+    };
+    match op {
+        Op::Scatter | Op::Bcast => {
+            let mut inputs = vec![DeviceBuf::Real(vec![]); n];
+            inputs[root] = ints(root);
+            inputs
+        }
+        _ => (0..n).map(ints).collect(),
+    }
+}
+
+fn assert_outputs_bitwise_eq(a: &CollectiveReport, b: &CollectiveReport, what: &str) {
+    assert_eq!(a.outputs.len(), b.outputs.len(), "{what}: rank counts");
+    for (r, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+        assert_eq!(x.as_real(), y.as_real(), "{what}: rank {r} outputs differ");
+    }
+}
+
+/// Satellite: for EVERY registered (op, algo) pair, on BOTH execution
+/// backends, forcing a pipeline depth produces bit-identical outputs
+/// to the barrier executor. No makespan assertion here on purpose —
+/// forced depth on small messages can lose to per-chunk latency
+/// floors; winning is asserted at the 512-rank acceptance shape where
+/// the tuner picks the depth itself.
+#[test]
+fn every_pair_pipelined_matches_barrier_bitwise_on_both_backends() {
+    let n = 8;
+    let d = 97; // ragged against both the 32-wide codec blocks and every chunk split
+    let root = 3; // non-zero: the rooted hierarchical descent exercises its RootShift leg
+    for &op in &ALL_OPS {
+        for &algo in AlgoRegistry::supported(op) {
+            for &backend in &[ExecBackend::Threads, ExecBackend::Events] {
+                let run = |pipeline: Pipeline| -> CollectiveReport {
+                    let comm = Communicator::builder(n)
+                        .gpus_per_node(2)
+                        .error_bound(1e-3)
+                        .backend(backend)
+                        .pipeline(pipeline)
+                        .build()
+                        .expect("communicator");
+                    comm.collective(
+                        op,
+                        op_inputs(op, n, d, root, 7),
+                        &CollectiveSpec::forced(algo).with_root(root),
+                    )
+                    .unwrap_or_else(|e| panic!("{op:?}/{algo:?} under {backend:?}: {e}"))
+                };
+                let barrier = run(Pipeline::Off);
+                assert_eq!(barrier.exec_plan.depth, 1);
+                for depth in [2usize, 4] {
+                    let piped = run(Pipeline::Fixed(depth));
+                    assert_outputs_bitwise_eq(
+                        &piped,
+                        &barrier,
+                        &format!("{op:?}/{algo:?}/{backend:?} depth {depth}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Satellite: the rooted hierarchical registry entries accept
+/// arbitrary roots and agree bit-for-bit with the binomial baseline
+/// (uncompressed, so both paths are lossless), at every depth.
+#[test]
+fn rooted_hierarchical_matches_binomial_for_arbitrary_roots() {
+    let n = 8;
+    let d = 120;
+    for &op in &[Op::Scatter, Op::Bcast] {
+        for root in [0usize, 1, 5, 7] {
+            let run = |algo: Algo, pipeline: Pipeline| -> CollectiveReport {
+                let comm = Communicator::builder(n)
+                    .gpus_per_node(2)
+                    .policy(ExecPolicy::nccl())
+                    .pipeline(pipeline)
+                    .build()
+                    .expect("communicator");
+                comm.collective(
+                    op,
+                    op_inputs(op, n, d, root, 11),
+                    &CollectiveSpec::forced(algo).with_root(root),
+                )
+                .unwrap_or_else(|e| panic!("{op:?}/{algo:?} root {root}: {e}"))
+            };
+            let binomial = run(Algo::Binomial, Pipeline::Off);
+            let hier = run(Algo::Hierarchical, Pipeline::Off);
+            assert_outputs_bitwise_eq(&hier, &binomial, &format!("{op:?} root {root}"));
+            let piped = run(Algo::Hierarchical, Pipeline::Fixed(3));
+            assert_outputs_bitwise_eq(&piped, &binomial, &format!("{op:?} root {root} piped"));
+        }
+    }
+}
+
+/// The ISSUE acceptance criterion, part 1: at 512 ranks (4x16x8,
+/// 64 MiB) the auto dispatch chooses the hierarchical schedule at a
+/// pipeline depth > 1 whose makespan strictly beats the barrier
+/// executor, and the traced run keeps every flight-recorder and
+/// analyzer invariant — on both execution backends, with identical
+/// span trees across them.
+#[test]
+fn acceptance_512_ranks_tuner_picks_depth_and_beats_barrier() {
+    let n = 512;
+    let run = |backend: ExecBackend, pipeline: Pipeline| -> CollectiveReport {
+        let comm = Communicator::builder(n)
+            .tiers(&[4, 16, 8])
+            .policy(ExecPolicy::gzccl())
+            .backend(backend)
+            .pipeline(pipeline)
+            .trace(Tracer::new())
+            .build()
+            .expect("communicator");
+        let inputs: Vec<DeviceBuf> = (0..n).map(|_| DeviceBuf::Virtual(64 * MIB / 4)).collect();
+        comm.allreduce(inputs, &CollectiveSpec::auto()).expect("allreduce")
+    };
+    let mut digests = Vec::new();
+    for &backend in &[ExecBackend::Threads, ExecBackend::Events] {
+        let piped = run(backend, Pipeline::Auto);
+        assert_eq!(piped.algo, Algo::Hierarchical, "{backend:?}: tuner must pick hierarchical");
+        assert!(piped.auto_tuned);
+        assert!(
+            piped.exec_plan.depth > 1,
+            "{backend:?}: 64 MiB must pipeline (got depth {})",
+            piped.exec_plan.depth
+        );
+        let barrier = run(backend, Pipeline::Off);
+        assert_eq!(barrier.exec_plan.depth, 1);
+        assert!(
+            piped.makespan.as_secs() < barrier.makespan.as_secs(),
+            "{backend:?}: depth {} makespan {} must strictly beat the barrier {}",
+            piped.exec_plan.depth,
+            piped.makespan,
+            barrier.makespan
+        );
+        // Chunk-aware telemetry keeps every invariant the barrier
+        // executor guaranteed: well-formed span trees closing at the
+        // makespan, and a critical path that tiles it bit-exactly.
+        let tr = piped.trace.as_ref().expect("traced dispatch");
+        tr.check_well_formed().unwrap_or_else(|e| panic!("{backend:?}: {e}"));
+        assert_eq!(tr.root_end(), piped.report.makespan.as_secs(), "{backend:?}");
+        let a = tr.analyze();
+        assert_eq!(a.critical_path.total_s(), tr.root_end(), "{backend:?}: path != makespan");
+        for w in a.critical_path.segments.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "{backend:?}: gap in the critical path");
+        }
+        digests.push(tr.digest());
+    }
+    assert_eq!(digests[0], digests[1], "pipelined span trees diverge across backends");
+}
+
+/// The ISSUE acceptance criterion, part 2: at the same 512-rank shape
+/// on real payloads, the pipelined hierarchical Allreduce is bitwise
+/// identical to the barrier run on both backends.
+#[test]
+fn acceptance_512_ranks_pipelined_outputs_bitwise_match_barrier() {
+    let n = 512;
+    let d = 1000;
+    for &backend in &[ExecBackend::Threads, ExecBackend::Events] {
+        let run = |pipeline: Pipeline| -> CollectiveReport {
+            let comm = Communicator::builder(n)
+                .tiers(&[4, 16, 8])
+                .error_bound(1e-3)
+                .backend(backend)
+                .pipeline(pipeline)
+                .build()
+                .expect("communicator");
+            comm.allreduce(
+                op_inputs(Op::Allreduce, n, d, 0, 99),
+                &CollectiveSpec::forced(Algo::Hierarchical),
+            )
+            .expect("allreduce")
+        };
+        let barrier = run(Pipeline::Off);
+        let piped = run(Pipeline::Fixed(4));
+        assert_eq!(piped.exec_plan.depth, 4);
+        assert_outputs_bitwise_eq(&piped, &barrier, &format!("512-rank {backend:?}"));
+    }
+}
+
+/// `persistent()` freezes one plan and replays it: every run matches
+/// the equivalent per-dispatch path bit-for-bit, the frozen depth is
+/// the one the dispatcher would have chosen, and the plan survives
+/// reuse across distinct payloads.
+#[test]
+fn persistent_plan_replays_match_direct_dispatch() {
+    let n = 8;
+    let d = 256;
+    let comm = Communicator::builder(n)
+        .gpus_per_node(2)
+        .error_bound(1e-3)
+        .build()
+        .expect("communicator");
+    let spec = CollectiveSpec::forced(Algo::Hierarchical);
+    let pc = comm.persistent(Op::Allreduce, d, &spec).expect("persistent plan");
+    assert_eq!(pc.op(), Op::Allreduce);
+    assert_eq!(pc.algo(), Algo::Hierarchical);
+    assert_eq!(pc.depth(), pc.exec_plan().depth);
+    assert!(pc.schedule().is_some(), "hierarchical plan carries its schedule");
+    for seed in [21u64, 22] {
+        let inputs = op_inputs(Op::Allreduce, n, d, 0, seed);
+        let direct = comm.allreduce(inputs.clone(), &spec).expect("direct");
+        let frozen = pc.run(inputs).expect("persistent run");
+        assert_eq!(frozen.exec_plan.depth, direct.exec_plan.depth);
+        assert_outputs_bitwise_eq(&frozen, &direct, &format!("persistent seed {seed}"));
+    }
+    // A forced depth ABOVE the cap clamps rather than erroring.
+    let deep = comm
+        .with_pipeline(Pipeline::Fixed(64))
+        .persistent(Op::Allreduce, d, &spec)
+        .expect("clamped plan");
+    assert_eq!(deep.depth(), MAX_PIPELINE_DEPTH);
+}
+
+/// `icollective()` and `PersistentColl::irun()` run the dispatch on a
+/// worker thread and hand back the identical report through the
+/// handle.
+#[test]
+fn icollective_handles_return_the_blocking_result() {
+    let n = 8;
+    let d = 192;
+    let comm = Communicator::builder(n)
+        .gpus_per_node(2)
+        .error_bound(1e-3)
+        .build()
+        .expect("communicator");
+    let spec = CollectiveSpec::forced(Algo::Hierarchical);
+    let inputs = || op_inputs(Op::Allreduce, n, d, 0, 5);
+    let blocking = comm.allreduce(inputs(), &spec).expect("blocking");
+    let handle = comm.icollective(Op::Allreduce, inputs(), &spec);
+    let async_report = handle.wait().expect("icollective");
+    assert_outputs_bitwise_eq(&async_report, &blocking, "icollective");
+    let pc = comm.persistent(Op::Allreduce, d, &spec).expect("persistent plan");
+    let irun_report = pc.irun(inputs()).wait().expect("irun");
+    assert_outputs_bitwise_eq(&irun_report, &blocking, "persistent irun");
+}
